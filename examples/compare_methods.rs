@@ -1,0 +1,74 @@
+//! Side-by-side comparison of every decoding engine on the same prompts:
+//! autoregressive, Jacobi, speculative decoding (draft model), prompt
+//! lookup, and Lookahead Decoding. All greedy engines are exact, so the
+//! completions must be identical — only steps/latency differ.
+//!
+//!   cargo run --release --example compare_methods
+
+use lookahead::bench::Table;
+use lookahead::engine::autoregressive::AutoRegressive;
+use lookahead::engine::jacobi::Jacobi;
+use lookahead::engine::lookahead::Lookahead;
+use lookahead::engine::prompt_lookup::PromptLookup;
+use lookahead::engine::spec_decode::SpecDecode;
+use lookahead::engine::{Decoder, GenParams};
+use lookahead::runtime::{cpu_client, Manifest, ModelRuntime};
+use lookahead::tokenizer::ByteTokenizer;
+use lookahead::workload::Workloads;
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load("artifacts")?;
+    let client = cpu_client()?;
+    let rt = ModelRuntime::load(&client, &manifest, "tiny")?;
+    let workloads = Workloads::load("artifacts")?;
+    let prompts = workloads.take("code", 4)?;
+    let tok = ByteTokenizer::new();
+    let params = GenParams { max_new_tokens: 64, ..Default::default() };
+
+    let mut engines: Vec<Box<dyn Decoder>> = vec![
+        Box::new(AutoRegressive::new()),
+        Box::new(Jacobi::new(8)),
+        Box::new(PromptLookup::new(8, 1)),
+        Box::new(SpecDecode::new(
+            ModelRuntime::load(&client, &manifest, "draft")?, 4)),
+        Box::new(Lookahead::with_wng(5, 3, 5)),
+        Box::new(Lookahead::with_wng(15, 5, 15)),
+    ];
+
+    let mut table = Table::new(&["method", "steps", "S", "tok/s", "ms/req", "exact"]);
+    let mut reference: Vec<String> = Vec::new();
+
+    for engine in engines.iter_mut() {
+        let mut steps = 0usize;
+        let mut tokens = 0usize;
+        let mut wall = 0.0f64;
+        let mut outputs = Vec::new();
+        for p in &prompts {
+            let ids = tok.encode_with_bos(p);
+            let out = engine.generate(&rt, &ids, &params)?;
+            steps += out.stats.decode_steps;
+            tokens += out.stats.generated_tokens;
+            wall += out.stats.wall.as_secs_f64();
+            outputs.push(out.text);
+        }
+        if reference.is_empty() {
+            reference = outputs.clone();
+        }
+        let exact = outputs == reference;
+        table.row(vec![
+            engine.name(),
+            steps.to_string(),
+            format!("{:.2}", tokens as f64 / steps as f64),
+            format!("{:.1}", tokens as f64 / wall),
+            format!("{:.0}", wall * 1e3 / prompts.len() as f64),
+            if exact { "yes".into() } else { "NO".into() },
+        ]);
+    }
+
+    println!("\n{} prompts from the `code` suite, {} max tokens each, greedy:\n",
+             prompts.len(), params.max_new_tokens);
+    table.print();
+    println!("\n'exact' = byte-identical to the autoregressive reference \
+              (the paper's losslessness claim).");
+    Ok(())
+}

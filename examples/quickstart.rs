@@ -1,0 +1,37 @@
+//! Quickstart: load the trained model from `artifacts/`, generate with
+//! Lookahead Decoding, and print the step-compression statistics.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use lookahead::engine::lookahead::Lookahead;
+use lookahead::engine::{Decoder, GenParams};
+use lookahead::runtime::load_model;
+use lookahead::tokenizer::ByteTokenizer;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the artifact manifest + model weights onto the PJRT CPU device.
+    let (_manifest, rt) = load_model("artifacts", "tiny")?;
+
+    // 2. Pick a decoding engine. (W, N, G) = (15, 5, 15) is the paper's
+    //    recommended 7B-class configuration (Tab. 4).
+    let mut engine = Lookahead::with_wng(15, 5, 15);
+
+    // 3. Generate.
+    let tok = ByteTokenizer::new();
+    let prompt = "def cap_xy(x, y):\n    result = x";
+    let ids = tok.encode_with_bos(prompt);
+    let params = GenParams { max_new_tokens: 96, ..Default::default() };
+    let out = engine.generate(&rt, &ids, &params)?;
+
+    println!("prompt:\n{prompt}");
+    println!("\ncompletion:\n{}", out.text);
+    println!("\n--- stats ---");
+    println!("engine            : {}", engine.name());
+    println!("generated tokens  : {}", out.stats.generated_tokens);
+    println!("decode steps      : {}", out.stats.decode_steps);
+    println!("step compression S: {:.2}x  (1.0 = autoregressive)", out.stats.compression());
+    println!("throughput        : {:.1} tok/s", out.stats.tokens_per_sec());
+    println!("n-gram pool hits  : {} / {}", out.stats.pool_hits,
+             out.stats.pool_hits + out.stats.pool_misses);
+    Ok(())
+}

@@ -1,0 +1,259 @@
+"""AOT pipeline: train models, lower every executable to HLO *text*, and emit
+the manifest the Rust runtime binds against.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the `xla` crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts (all under `artifacts/`, gitignored, built by `make artifacts`):
+
+  manifest.json          executable registry + weight binding contract
+  weights_<model>.npz    trained parameters (np.savez, stored entries)
+  <model>_<exe>.hlo.txt  one HLO module per executable
+  layout_golden.json     mask/layout canon cross-check data for Rust tests
+  workloads.json         deterministic eval prompt suites
+  train_log.json         loss curves (EXPERIMENTS.md provenance)
+
+Python runs ONCE, at build time. The Rust binary is self-contained after
+`make artifacts`.
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import corpus, masks, model, train
+from compile.config import (BOS_ID, EOS_ID, GENERIC_T_PAD, HEADLINE_CONFIGS,
+                            LINEAR_LENS, MODELS, PAD_ID, PREFILL_LEN,
+                            VOCAB_PADDED, VOCAB_SIZE, LookaheadConfig)
+from compile.kernels import lookahead_attn
+
+COMMIT_SLOTS = 16  # supports N up to 16 (Tab. 3 sweeps N=10)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True: the default print elides big literals as
+    # '{...}', which the 0.5.1 text parser accepts *silently* and turns into
+    # garbage — the baked lookahead masks were zeroed without it.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_to_file(fn, arg_specs, path: str) -> int:
+    # keep_unused=True: the positional parameter list is a binding contract
+    # with the Rust runtime — jax must not DCE unused args (e.g. prefill's
+    # n_valid) out of the HLO signature.
+    lowered = jax.jit(fn, keep_unused=True).lower(*arg_specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def weight_specs(cfg):
+    return [spec(s, np.float32) for s in model.weight_shapes(cfg)]
+
+
+def cache_spec(cfg):
+    kvd = cfg.n_kv_heads * cfg.head_dim
+    return spec((cfg.n_layers, 2, model.cache_rows(cfg), kvd), np.float32)
+
+
+def new_kv_spec(cfg, t):
+    kvd = cfg.n_kv_heads * cfg.head_dim
+    return spec((cfg.n_layers, 2, t, kvd), np.float32)
+
+
+I32 = np.int32
+SCALAR_I32 = spec((), I32)
+
+
+def build_model_artifacts(name: str, out_dir: str, profile: str,
+                          manifest: dict, log):
+    cfg = MODELS[name]
+    ws = weight_specs(cfg)
+    cs = cache_spec(cfg)
+    exes = {}
+    t_commit = set()
+
+    def emit(exe_name, fn, specs, meta):
+        fname = f"{name}_{exe_name}.hlo.txt"
+        t0 = time.time()
+        nbytes = lower_to_file(fn, specs, os.path.join(out_dir, fname))
+        log(f"  lowered {fname:44s} {nbytes/1024:8.1f} KiB "
+            f"({time.time()-t0:.1f}s)")
+        exes[exe_name] = {"file": fname, **meta}
+
+    # --- prefill ---------------------------------------------------------
+    emit("prefill", model.make_prefill(cfg, PREFILL_LEN),
+         ws + [spec((PREFILL_LEN,), I32), SCALAR_I32],
+         {"kind": "prefill", "prompt_len": PREFILL_LEN})
+
+    # --- linear decode (AR / spec-verify / jacobi / prompt-lookup) -------
+    lin_lens = LINEAR_LENS + ([16] if profile == "full" else [])
+    if name == "draft":
+        lin_lens = [1, 5]
+    for k in lin_lens:
+        emit(f"decode_lin_{k}", model.make_decode_linear(cfg, k),
+             ws + [cs, SCALAR_I32, spec((k,), I32)],
+             {"kind": "decode_lin", "k": k, "t_in": k})
+        t_commit.add(k)
+
+    # --- specialized lookahead decode -------------------------------------
+    if name != "draft":
+        la_configs = HEADLINE_CONFIGS if profile == "full" else \
+            [LookaheadConfig(5, 3, 5)]
+        if name == "small" and profile == "full":
+            la_configs = HEADLINE_CONFIGS[:3]
+        for lc in la_configs:
+            emit(f"decode_la_{lc.tag}",
+                 model.make_decode_specialized(cfg, lc.w, lc.n, lc.g),
+                 ws + [cs, SCALAR_I32, spec((lc.t_in,), I32)],
+                 {"kind": "decode_la", **lc.to_dict(), "attn": "jnp"})
+            t_commit.add(lc.t_in)
+
+        # pallas (L1) variant: always the cheap config; headline in full.
+        pallas_cfgs = [LookaheadConfig(5, 3, 5)]
+        if profile == "full" and name == "tiny":
+            pallas_cfgs.append(LookaheadConfig(15, 5, 15))
+        for lc in pallas_cfgs:
+            emit(f"decode_la_{lc.tag}_pallas",
+                 model.make_decode_specialized(cfg, lc.w, lc.n, lc.g,
+                                               attn_impl="pallas"),
+                 ws + [cs, SCALAR_I32, spec((lc.t_in,), I32)],
+                 {"kind": "decode_la", **lc.to_dict(), "attn": "pallas"})
+            t_commit.add(lc.t_in)
+
+        # --- generic masked decode (sweeps) -------------------------------
+        t_pads = GENERIC_T_PAD if profile == "full" else GENERIC_T_PAD[:1]
+        for tp in t_pads:
+            emit(f"decode_gen_{tp}", model.make_decode_generic(cfg, tp),
+                 ws + [cs, SCALAR_I32, spec((tp,), I32), spec((tp,), I32),
+                       spec((tp, tp), np.uint8)],
+                 {"kind": "decode_gen", "t_pad": tp, "t_in": tp})
+            t_commit.add(tp)
+
+    # --- commit (one per distinct T_in) -----------------------------------
+    for t in sorted(t_commit):
+        emit(f"commit_{t}", model.make_commit(cfg, t, COMMIT_SLOTS),
+             [cs, new_kv_spec(cfg, t), spec((COMMIT_SLOTS,), I32),
+              SCALAR_I32, SCALAR_I32],
+             {"kind": "commit", "t_in": t, "slots": COMMIT_SLOTS})
+
+    kvd = cfg.n_kv_heads * cfg.head_dim
+    manifest["models"][name] = {
+        "config": cfg.to_dict(),
+        "weights_file": f"weights_{name}.npz",
+        "weight_names": model.weight_names(cfg),
+        "weight_shapes": [list(s) for s in model.weight_shapes(cfg)],
+        "cache_shape": [cfg.n_layers, 2, model.cache_rows(cfg), kvd],
+        "junk_row": model.cache_rows(cfg) - 1,
+        "executables": exes,
+    }
+
+
+def build_layout_golden(path: str):
+    configs = [(5, 3, 5), (15, 5, 15), (10, 5, 10), (7, 5, 7), (2, 2, 1),
+               (1, 5, 30), (5, 15, 15), (8, 3, 8), (4, 4, 2)]
+    records = [masks.golden_record(w, n, g) for (w, n, g) in configs]
+    with open(path, "w") as f:
+        json.dump({"records": records}, f)
+
+
+def l1_perf_report(manifest: dict):
+    """Static L1 perf estimates (no TPU on this image — DESIGN.md §3)."""
+    report = {}
+    for lc in HEADLINE_CONFIGS:
+        t = lc.t_in
+        report[lc.tag] = {
+            "vmem": lookahead_attn.vmem_estimate_bytes(t, d=32, s=768),
+            "mxu": lookahead_attn.mxu_utilization_estimate(t, d=32, s=768),
+        }
+    manifest["l1_perf_estimates"] = report
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--profile", default=os.environ.get(
+        "ARTIFACT_PROFILE", "full"), choices=["full", "min"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--models", default=None,
+                    help="comma list; default: tiny,small,draft (full) "
+                         "or tiny,draft (min)")
+    args = ap.parse_args()
+
+    out = args.out_dir
+    os.makedirs(out, exist_ok=True)
+    stamp = os.path.join(out, "manifest.json")
+    if os.path.exists(stamp) and not args.force:
+        with open(stamp) as f:
+            if json.load(f).get("profile") == args.profile:
+                print(f"artifacts up to date ({args.profile}); use --force "
+                      "to rebuild")
+                return
+
+    def log(msg):
+        print(msg, flush=True)
+
+    model_names = (args.models.split(",") if args.models else
+                   (["tiny", "small", "draft"] if args.profile == "full"
+                    else ["tiny", "draft"]))
+
+    t0 = time.time()
+    manifest = {
+        "version": 1,
+        "profile": args.profile,
+        "vocab": {"size": VOCAB_SIZE, "padded": VOCAB_PADDED,
+                  "pad": PAD_ID, "bos": BOS_ID, "eos": EOS_ID},
+        "prefill_len": PREFILL_LEN,
+        "commit_slots": COMMIT_SLOTS,
+        "models": {},
+    }
+
+    # 1. train + save weights
+    train_logs = {}
+    for name in model_names:
+        npz = os.path.join(out, f"weights_{name}.npz")
+        if os.path.exists(npz) and not args.force:
+            log(f"[aot] weights for {name} exist, skipping training")
+            train_logs[name] = "cached"
+            continue
+        log(f"[aot] training {name} "
+            f"({MODELS[name].param_count()/1e6:.2f}M params)...")
+        train_logs[name] = train.train_and_save(name, npz, profile=args.profile)
+    with open(os.path.join(out, "train_log.json"), "w") as f:
+        json.dump(train_logs, f, indent=1)
+
+    # 2. lower executables
+    for name in model_names:
+        log(f"[aot] lowering executables for {name}")
+        build_model_artifacts(name, out, args.profile, manifest, log)
+
+    # 3. canon + workloads + perf estimates
+    build_layout_golden(os.path.join(out, "layout_golden.json"))
+    corpus.write_workloads(os.path.join(out, "workloads.json"))
+    l1_perf_report(manifest)
+
+    manifest["build_seconds"] = round(time.time() - t0, 1)
+    with open(stamp, "w") as f:
+        json.dump(manifest, f, indent=1)
+    log(f"[aot] done in {manifest['build_seconds']}s -> {stamp}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

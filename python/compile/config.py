@@ -1,0 +1,136 @@
+"""Model and lookahead configuration shared across the compile pipeline.
+
+These dataclasses are the single source of truth for every AOT artifact:
+`aot.py` serializes them into `artifacts/manifest.json`, which the Rust
+runtime parses to bind executables, weights, and shapes.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+# Byte-level vocabulary: 256 raw bytes + specials.
+VOCAB_BYTES = 256
+PAD_ID = 256
+BOS_ID = 257
+EOS_ID = 258
+VOCAB_SIZE = 259
+# Round up to a multiple of 8 for MXU-friendly output projections.
+VOCAB_PADDED = 264
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """LLaMA-style byte transformer dimensions."""
+
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    max_seq: int  # KV-cache capacity (committed tokens)
+    vocab: int = VOCAB_PADDED
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, f, l = self.d_model, self.d_ff, self.n_layers
+        per_layer = 2 * d  # two RMSNorm gains
+        per_layer += d * d + 2 * d * (self.n_kv_heads * self.head_dim) + d * d  # qkvo
+        per_layer += 3 * d * f  # SwiGLU (gate, up, down)
+        return self.vocab * d + l * per_layer + d  # embed (tied head) + final norm
+
+    def to_dict(self) -> dict:
+        out = asdict(self)
+        out["head_dim"] = self.head_dim
+        out["params"] = self.param_count()
+        return out
+
+
+@dataclass(frozen=True)
+class LookaheadConfig:
+    """(W, N, G) — window size, n-gram size, max verification candidates."""
+
+    w: int
+    n: int
+    g: int
+
+    def __post_init__(self):
+        assert self.n >= 2, "n-gram size must be >= 2"
+        assert self.w >= 1 and self.g >= 0
+
+    @property
+    def t_in(self) -> int:
+        """Per-step input tokens: lookahead (N-1 rows x W) + verify G x (N-1)."""
+        return (self.w + self.g) * (self.n - 1)
+
+    @property
+    def n_lookahead(self) -> int:
+        return self.w * (self.n - 1)
+
+    @property
+    def tag(self) -> str:
+        return f"w{self.w}n{self.n}g{self.g}"
+
+    def to_dict(self) -> dict:
+        return {
+            "w": self.w,
+            "n": self.n,
+            "g": self.g,
+            "t_in": self.t_in,
+            "n_lookahead": self.n_lookahead,
+            "tag": self.tag,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Model zoo. Sized for a single-core CPU PJRT testbed (see DESIGN.md §2):
+# `tiny` is the default experiment model, `small` the scaling point,
+# `draft` is the speculative-decoding draft model.
+# ---------------------------------------------------------------------------
+
+MODELS = {
+    "tiny": ModelConfig(
+        name="tiny", n_layers=2, d_model=128, n_heads=4, n_kv_heads=4,
+        d_ff=352, max_seq=512,
+    ),
+    "small": ModelConfig(
+        name="small", n_layers=4, d_model=192, n_heads=6, n_kv_heads=6,
+        d_ff=512, max_seq=512,
+    ),
+    "draft": ModelConfig(
+        name="draft", n_layers=1, d_model=64, n_heads=2, n_kv_heads=2,
+        d_ff=176, max_seq=512,
+    ),
+}
+
+# Prompt capacity of the prefill executable (prompts are right-padded to this).
+PREFILL_LEN = 256
+
+# Max tokens a single step may commit = N_max accepted tokens. The commit
+# executable is built per (model, t_in) pair with this many scatter slots.
+def commit_slots(n: int) -> int:
+    return n
+
+
+# Lookahead configs compiled as *specialized* artifacts (hardcoded pattern /
+# pallas path). The generic (mask-as-input) executable covers sweeps.
+HEADLINE_CONFIGS = [
+    LookaheadConfig(15, 5, 15),  # paper Tab. 4, 7B row
+    LookaheadConfig(10, 5, 10),  # paper Tab. 4, 13B row
+    LookaheadConfig(7, 5, 7),    # paper Tab. 4, 34B row
+    LookaheadConfig(5, 3, 5),    # cheap default for tests
+]
+
+# Linear-chain decode lengths (plain causal over K new tokens):
+#   1 -> autoregressive; 5 -> speculative-decoding verification (gamma=4);
+#   8 -> prompt-lookup verification.
+LINEAR_LENS = [1, 5, 8]
+
+# Padded T_in sizes for the generic masked decode executable.
+GENERIC_T_PAD = [16, 32, 64, 128, 256]

@@ -1,0 +1,172 @@
+"""Deterministic synthetic corpora + evaluation workload suites.
+
+Substitutes for the paper's datasets (DESIGN.md §2): each suite mimics the
+statistical property the paper leans on —
+
+  code       ~ HumanEval / MBPP   : template-heavy, repetitive -> high S
+  class-code ~ ClassEval          : long class completions      -> highest S
+  chat       ~ MT-Bench           : diverse wording             -> lower S
+  math       ~ GSM8K              : structured arithmetic       -> medium S
+  summarize  ~ XSum / CNN-DM      : article + TL;DR             -> medium S
+
+The same generator builds (a) the training corpus mixture and (b) the eval
+prompt suites serialized to `artifacts/workloads.json`, so Rust never has to
+reproduce the templates. Everything is seeded -> byte-reproducible.
+"""
+
+import json
+
+import numpy as np
+
+NOUNS = ["queue", "cache", "token", "batch", "model", "server", "stream",
+         "buffer", "window", "branch", "worker", "client", "tensor", "router"]
+VERBS = ["builds", "checks", "drains", "emits", "holds", "loads", "merges",
+         "parses", "routes", "runs", "sends", "sorts", "splits", "tracks"]
+ADJS = ["fast", "lazy", "small", "stale", "warm", "spare", "dense", "flat"]
+FUNCS = ["add", "sub", "mul", "mix", "cap", "pad", "clip", "norm"]
+VARS = ["a", "b", "c", "x", "y", "z", "n", "m"]
+
+
+def _pick(rng, xs):
+    return xs[rng.randint(0, len(xs))]
+
+
+# ---------------------------------------------------------------------------
+# Per-suite text generators
+# ---------------------------------------------------------------------------
+
+def gen_code(rng: np.random.RandomState) -> str:
+    f = _pick(rng, FUNCS)
+    a, b = _pick(rng, VARS), _pick(rng, VARS)
+    op = _pick(rng, ["+", "-", "*"])
+    body = (
+        f"def {f}_{a}{b}({a}, {b}):\n"
+        f"    result = {a} {op} {b}\n"
+        f"    return result\n\n"
+    )
+    loop = (
+        f"for {a} in range(10):\n"
+        f"    total = {f}_{a}{b}({a}, {a})\n"
+        f"    print(total)\n\n"
+    )
+    return body + (loop if rng.rand() < 0.5 else "")
+
+
+def gen_class_code(rng: np.random.RandomState) -> str:
+    n1, n2 = _pick(rng, NOUNS), _pick(rng, NOUNS)
+    f1, f2 = _pick(rng, FUNCS), _pick(rng, FUNCS)
+    return (
+        f"class {n1.capitalize()}{n2.capitalize()}:\n"
+        f"    def __init__(self, size):\n"
+        f"        self.size = size\n"
+        f"        self.items = []\n\n"
+        f"    def {f1}(self, item):\n"
+        f"        self.items.append(item)\n"
+        f"        return len(self.items)\n\n"
+        f"    def {f2}(self):\n"
+        f"        return self.items.pop()\n\n"
+    )
+
+
+CHAT_Q = [
+    "user: how does the {adj} {n1} work with the {n2}?\n",
+    "user: why would a {n1} ever {v0} the {n2} twice?\n",
+    "user: can you explain what happens when the {n2} gets {adj}?\n",
+    "user: what is the difference between a {n1} and a {n2} here?\n",
+    "user: my {n1} keeps dropping the {adj} {n2}, any idea why?\n",
+]
+CHAT_A = [
+    "assistant: the {n1} {v0} each {n2} and keeps the {adj} ones. "
+    "when the {n2} is full, the {n1} {v1} it again.\n\n",
+    "assistant: usually the {n2} stays {adj} until the {n1} {v0} it. "
+    "after that, a second {n1} {v1} whatever is left over.\n\n",
+    "assistant: that depends on the {n1}. a {adj} one {v0} the {n2} "
+    "right away, while a slower one only {v1} it on demand.\n\n",
+    "assistant: think of the {n1} as the thing that {v0} and the {n2} "
+    "as the thing being {adj}. they only meet when one {v1} the other.\n\n",
+]
+
+
+def gen_chat(rng: np.random.RandomState) -> str:
+    subst = {
+        "n1": _pick(rng, NOUNS), "n2": _pick(rng, NOUNS),
+        "v0": _pick(rng, VERBS), "v1": _pick(rng, VERBS),
+        "adj": _pick(rng, ADJS),
+    }
+    q = _pick(rng, CHAT_Q).format(**subst)
+    a = _pick(rng, CHAT_A).format(**subst)
+    return q + a
+
+
+def gen_math(rng: np.random.RandomState) -> str:
+    a, b = rng.randint(2, 50), rng.randint(2, 50)
+    op = _pick(rng, ["+", "-", "*"])
+    val = {"+": a + b, "-": a - b, "*": a * b}[op]
+    return f"Q: what is {a} {op} {b}?\nA: {a} {op} {b} = {val}\n\n"
+
+
+def gen_summarize(rng: np.random.RandomState) -> str:
+    n1, n2 = _pick(rng, NOUNS), _pick(rng, NOUNS)
+    v, adj = _pick(rng, VERBS), _pick(rng, ADJS)
+    body = (f"article: the {adj} {n1} {v} the {n2} all day. "
+            f"the {n2} stays {_pick(rng, ADJS)} while the {n1} {_pick(rng, VERBS)} it. "
+            f"experts say the {n1} will keep the {n2} {adj}.\n")
+    tldr = f"tl;dr: the {adj} {n1} {v} the {n2}.\n\n"
+    return body + tldr
+
+
+SUITES = {
+    "code": gen_code,
+    "class-code": gen_class_code,
+    "chat": gen_chat,
+    "math": gen_math,
+    "summarize": gen_summarize,
+}
+
+
+# ---------------------------------------------------------------------------
+# Training corpus
+# ---------------------------------------------------------------------------
+
+def training_corpus(n_bytes: int, seed: int = 0) -> bytes:
+    """Deterministic suite mixture, at least n_bytes long."""
+    rng = np.random.RandomState(seed)
+    names = sorted(SUITES)
+    chunks, total = [], 0
+    while total < n_bytes:
+        gen = SUITES[names[rng.randint(0, len(names))]]
+        s = gen(rng).encode("utf-8")
+        chunks.append(s)
+        total += len(s)
+    return b"".join(chunks)
+
+
+# ---------------------------------------------------------------------------
+# Evaluation workloads (prompt = first `prompt_frac` of a document; the
+# trained model regenerates the rest — mirrors code-completion / chat tasks).
+# ---------------------------------------------------------------------------
+
+def eval_workloads(n_prompts: int = 24, seed: int = 7,
+                   max_prompt: int = 192) -> dict:
+    out = {}
+    for name, gen in sorted(SUITES.items()):
+        rng = np.random.RandomState(seed + hash(name) % 1000)
+        prompts = []
+        for _ in range(n_prompts):
+            # 2-3 documents of context, then an opening fragment to complete.
+            doc = "".join(gen(rng) for _ in range(rng.randint(2, 4)))
+            frag = gen(rng)
+            cut = max(8, int(len(frag) * 0.3))
+            text = (doc + frag[:cut])[-max_prompt:]
+            prompts.append(text)
+        out[name] = prompts
+    return out
+
+
+def write_workloads(path: str, **kw) -> None:
+    data = {
+        "suites": eval_workloads(**kw),
+        "note": "deterministic synthetic substitutes, see DESIGN.md §2",
+    }
+    with open(path, "w") as f:
+        json.dump(data, f, indent=1)

@@ -1,0 +1,192 @@
+"""Pallas lookahead-attention kernel (L1).
+
+The paper hardcodes the lookahead attention pattern (Fig. 2b) into CUDA
+FlashAttention. This is the TPU/Pallas rethink (DESIGN.md §3):
+
+- flash-style **online softmax**: one pass over the committed KV-cache prefix
+  in `Bk`-sized blocks, then one pass over the intra-step keys — the
+  `T_in x (S + T_in)` score matrix is never materialized in HBM;
+- the lookahead visibility pattern is **computed, not stored**: per-index
+  descriptor vectors (branch, row, col — three `int32[T_in]` constants that
+  live in VMEM) are compared with integer arithmetic inside the kernel, so
+  there is no `T x T` mask in the memory traffic at all;
+- tiles are MXU-shaped: `(Bq, D) x (D, Bk)` dots with fp32 accumulation.
+
+`interpret=True` is mandatory on this CPU-only image — real Mosaic lowering
+emits TPU custom-calls the CPU PJRT plugin cannot execute. Correctness is
+checked against `ref.attention_ref` by `python/tests/test_kernel.py`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from compile import masks
+
+NEG_INF = -1e30
+
+
+def _q_block(t: int) -> int:
+    """Largest MXU-friendly query tile that divides T."""
+    for bq in (16, 8, 4, 2, 1):
+        if t % bq == 0:
+            return bq
+    return 1
+
+
+def _kernel(
+    # refs (per grid step): q [Bq,1,D], new kv [T,1,D], cache kv [S,1,D],
+    # descriptor vectors int32[T] (the hardcoded pattern lives in these)
+    cl_ref, q_ref, kn_ref, vn_ref, kc_ref, vc_ref, db_ref, dr_ref, dc_ref,
+    o_ref,
+    *, bq: int, bk: int, t: int, s: int, scale: float,
+):
+    qb = pl.program_id(1)
+    cache_len = cl_ref[0]
+    desc_b, desc_r, desc_c = db_ref[...], dr_ref[...], dc_ref[...]
+
+    q = q_ref[:, 0, :].astype(jnp.float32) * scale  # [Bq, D]
+    d = q.shape[-1]
+
+    m_i = jnp.full((bq,), NEG_INF, dtype=jnp.float32)
+    l_i = jnp.zeros((bq,), dtype=jnp.float32)
+    acc = jnp.zeros((bq, d), dtype=jnp.float32)
+
+    # ---- phase 1: committed prefix (visibility = column < cache_len) ------
+    def cache_step(i, carry):
+        m_i, l_i, acc = carry
+        k = kc_ref[pl.ds(i * bk, bk), 0, :].astype(jnp.float32)  # [Bk, D]
+        v = vc_ref[pl.ds(i * bk, bk), 0, :].astype(jnp.float32)
+        sc = q @ k.T  # [Bq, Bk] — MXU tile
+        col = i * bk + jax.lax.iota(jnp.int32, bk)
+        sc = jnp.where((col < cache_len)[None, :], sc, NEG_INF)
+        m_new = jnp.maximum(m_i, sc.max(axis=-1))
+        p = jnp.exp(sc - m_new[:, None])
+        corr = jnp.exp(m_i - m_new)
+        l_new = l_i * corr + p.sum(axis=-1)
+        acc_new = acc * corr[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m_i, l_i, acc = jax.lax.fori_loop(0, s // bk, cache_step, (m_i, l_i, acc))
+
+    # ---- phase 2: intra-step keys (hardcoded lookahead pattern) -----------
+    qrows = qb * bq + jax.lax.iota(jnp.int32, bq)
+    bq_d, rq_d, cq_d = desc_b[qrows], desc_r[qrows], desc_c[qrows]
+    bk_d, rk_d, ck_d = desc_b, desc_r, desc_c  # all T intra keys at once
+
+    # The visibility rule from masks.py, evaluated on the descriptor tiles.
+    bqx, bkx = bq_d[:, None], bk_d[None, :]
+    rqx, rkx = rq_d[:, None], rk_d[None, :]
+    cqx, ckx = cq_d[:, None], ck_d[None, :]
+    la = (bqx == 0) & (bkx == 0) & (
+        ((ckx == cqx) & (rkx <= rqx)) | ((rkx == 0) & (ckx < cqx)))
+    vv = (bqx == 1) & (bkx == 1) & (rkx == rqx) & (ckx <= cqx)
+    vc = (bqx == 1) & (bkx == 0) & (rkx == 0) & (ckx == 0)
+    vis = la | vv | vc  # [Bq, T]
+
+    k = kn_ref[:, 0, :].astype(jnp.float32)  # [T, D]
+    v = vn_ref[:, 0, :].astype(jnp.float32)
+    sc = q @ k.T  # [Bq, T]
+    sc = jnp.where(vis, sc, NEG_INF)
+    m_new = jnp.maximum(m_i, sc.max(axis=-1))
+    p = jnp.exp(sc - m_new[:, None])
+    corr = jnp.exp(m_i - m_new)
+    l_i = l_i * corr + p.sum(axis=-1)
+    acc = acc * corr[:, None] + p @ v
+
+    out = acc / jnp.maximum(l_i, 1e-30)[:, None]
+    o_ref[:, 0, :] = out.astype(o_ref.dtype)
+
+
+def lookahead_attention(
+    q: jnp.ndarray,        # [T, H, D]
+    k_new: jnp.ndarray,    # [T, Hk, D]
+    v_new: jnp.ndarray,    # [T, Hk, D]
+    k_cache: jnp.ndarray,  # [S, Hk, D]
+    v_cache: jnp.ndarray,  # [S, Hk, D]
+    cache_len: jnp.ndarray,  # scalar int32
+    w: int, n: int, g: int,
+    *, bk: int = 128,
+) -> jnp.ndarray:
+    """Flash-style attention with the (W,N,G) lookahead pattern hardcoded."""
+    t, h, d = q.shape
+    s, hk, _ = k_cache.shape
+    assert t == masks.t_in(w, n, g), (t, w, n, g)
+    assert s % bk == 0, f"cache rows {s} must be a multiple of Bk={bk}"
+    group = h // hk
+
+    b_np, r_np, c_np, _ = masks.descriptors(w, n, g)
+
+    bq = _q_block(t)
+    grid = (h, t // bq)
+
+    kernel = functools.partial(
+        _kernel, bq=bq, bk=bk, t=t, s=s, scale=1.0 / float(np.sqrt(d)),
+    )
+
+    full_t = pl.BlockSpec((t,), lambda hh, qq: (0,))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda hh, qq: (0,)),                 # cache_len
+            pl.BlockSpec((bq, 1, d), lambda hh, qq: (qq, hh, 0)),    # q
+            pl.BlockSpec((t, 1, d), lambda hh, qq: (0, hh // group, 0)),   # k_new
+            pl.BlockSpec((t, 1, d), lambda hh, qq: (0, hh // group, 0)),   # v_new
+            pl.BlockSpec((s, 1, d), lambda hh, qq: (0, hh // group, 0)),   # k_cache
+            pl.BlockSpec((s, 1, d), lambda hh, qq: (0, hh // group, 0)),   # v_cache
+            full_t, full_t, full_t,                                  # descriptors
+        ],
+        out_specs=pl.BlockSpec((bq, 1, d), lambda hh, qq: (qq, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, h, d), q.dtype),
+        interpret=True,  # CPU-only image: Mosaic custom-calls are unloadable
+    )(cache_len.reshape(1).astype(jnp.int32), q, k_new, v_new, k_cache,
+      v_cache, jnp.asarray(b_np), jnp.asarray(r_np), jnp.asarray(c_np))
+
+
+def vmem_estimate_bytes(t: int, d: int, s: int, bq: int = None, bk: int = 128,
+                        bytes_per_el: int = 4) -> dict:
+    """Static VMEM working-set estimate per grid step (DESIGN.md §3).
+
+    Used by the L1 perf report (no real TPU on this image): q tile + two KV
+    tiles + score tile + softmax state + accumulator + descriptor vectors.
+    """
+    bq = bq or _q_block(t)
+    els = {
+        "q_tile": bq * d,
+        "kv_tile": 2 * max(bk, t) * d,
+        "score_tile": bq * max(bk, t),
+        "softmax_state": 2 * bq,
+        "accumulator": bq * d,
+        "descriptors": 3 * t,  # int32
+    }
+    total = sum(els.values()) * bytes_per_el
+    els_bytes = {k: v * bytes_per_el for k, v in els.items()}
+    els_bytes["total"] = total
+    els_bytes["fits_16MiB_vmem"] = total <= 16 * 1024 * 1024
+    return els_bytes
+
+
+def mxu_utilization_estimate(t: int, d: int, s: int, bq: int = None,
+                             bk: int = 128) -> dict:
+    """Fraction of issued MXU work that is useful, given tile shapes.
+
+    The 128x128 MXU is fed (Bq, D) x (D, Bk) tiles; utilization is the
+    product of the fill ratios of each dimension, per phase.
+    """
+    bq = bq or _q_block(t)
+
+    def fill(x, unit=128):
+        return min(x, unit) / unit
+
+    phase1 = fill(bq) * fill(d) * fill(bk)
+    phase2 = fill(bq) * fill(d) * fill(t)
+    # Weight phases by their MAC counts.
+    macs1 = s * d * t  # full prefix pass
+    macs2 = t * d * t
+    util = (phase1 * macs1 + phase2 * macs2) / (macs1 + macs2)
+    return {"bq": bq, "bk": bk, "phase_prefix": phase1,
+            "phase_intra": phase2, "weighted": util}

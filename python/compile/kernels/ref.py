@@ -1,0 +1,45 @@
+"""Pure-jnp attention oracle for the lookahead decoding step.
+
+This is the correctness reference for the Pallas kernel
+(`lookahead_attn.py`): full materialized-mask attention over
+[KV cache prefix ++ intra-step tokens]. Everything here is deliberately
+simple and dense — it exists to be obviously right.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def attention_ref(
+    q: jnp.ndarray,        # [T, H, D]   queries (RoPE already applied)
+    k_new: jnp.ndarray,    # [T, Hk, D]  this step's keys (RoPE applied)
+    v_new: jnp.ndarray,    # [T, Hk, D]
+    k_cache: jnp.ndarray,  # [S, Hk, D]  committed keys
+    v_cache: jnp.ndarray,  # [S, Hk, D]
+    cache_len: jnp.ndarray,   # scalar int32: valid cache rows
+    intra_mask: jnp.ndarray,  # [T, T] bool: intra-step visibility
+) -> jnp.ndarray:          # [T, H, D]
+    t, h, d = q.shape
+    s, hk, _ = k_cache.shape
+    assert h % hk == 0
+    group = h // hk
+
+    def expand(x):  # GQA: expand KV heads to query heads
+        return jnp.repeat(x, group, axis=1)
+
+    full_k = jnp.concatenate([expand(k_cache), expand(k_new)], axis=0)  # [S+T,H,D]
+    full_v = jnp.concatenate([expand(v_cache), expand(v_new)], axis=0)
+
+    scale = 1.0 / np.sqrt(d)
+    scores = jnp.einsum("thd,shd->hts", q.astype(jnp.float32),
+                        full_k.astype(jnp.float32)) * scale  # [H,T,S+T]
+
+    cache_visible = jnp.arange(s)[None, :] < cache_len  # [1, S]
+    cache_visible = jnp.broadcast_to(cache_visible, (t, s))
+    mask = jnp.concatenate([cache_visible, intra_mask], axis=1)  # [T, S+T]
+
+    scores = jnp.where(mask[None, :, :], scores, -1e30)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / jnp.maximum(probs.sum(axis=-1, keepdims=True), 1e-30)
+    out = jnp.einsum("hts,shd->thd", probs, full_v.astype(jnp.float32))
+    return out.astype(q.dtype)

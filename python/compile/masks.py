@@ -1,0 +1,137 @@
+"""Canonical lookahead token layout and attention-mask construction.
+
+This module is the *layout canon*: `rust/src/layout/` re-implements the same
+functions and both are cross-checked against `artifacts/layout_golden.json`
+(emitted by aot.py) so the Python-lowered executables and the Rust coordinator
+can never drift apart.
+
+Layout of the `T_in = (W+G)*(N-1)` step-input tokens (DESIGN.md §1):
+
+  index 0 .. W*(N-1)-1            lookahead block, row-major:
+                                  idx = r*W + c, r in [0,N-2], c in [0,W-1]
+                                  relative position = r + c
+                                  (r=0,c=0) is the current token (relpos 0)
+  index W*(N-1) .. T_in-1         verify block, candidate-major:
+                                  idx = W*(N-1) + i*(N-1) + j,
+                                  i in [0,G-1], j in [0,N-2]
+                                  relative position = 1 + j
+
+Visibility (intra-step; every token additionally sees cache keys < cache_len):
+
+  lookahead (r,c) -> (r',c'):  (c'==c and r'<=r)  or  (r'==0 and c'<c)
+  verify (i,j)    -> current token (0,0); (i',j') iff i'==i and j'<=j
+  lookahead <-/-> verify otherwise; candidates mutually invisible.
+"""
+
+import numpy as np
+
+
+def t_in(w: int, n: int, g: int) -> int:
+    return (w + g) * (n - 1)
+
+
+def n_lookahead(w: int, n: int) -> int:
+    return w * (n - 1)
+
+
+def descriptors(w: int, n: int, g: int):
+    """Per-index descriptor arrays (branch, row, col, relpos), int32.
+
+    branch: 0 = lookahead, 1 = verify.
+    For lookahead: row=r, col=c.  For verify: row=i (candidate), col=j.
+    """
+    total = t_in(w, n, g)
+    branch = np.zeros(total, dtype=np.int32)
+    row = np.zeros(total, dtype=np.int32)
+    col = np.zeros(total, dtype=np.int32)
+    relpos = np.zeros(total, dtype=np.int32)
+    idx = 0
+    for r in range(n - 1):
+        for c in range(w):
+            branch[idx] = 0
+            row[idx] = r
+            col[idx] = c
+            relpos[idx] = r + c
+            idx += 1
+    for i in range(g):
+        for j in range(n - 1):
+            branch[idx] = 1
+            row[idx] = i
+            col[idx] = j
+            relpos[idx] = 1 + j
+            idx += 1
+    assert idx == total
+    return branch, row, col, relpos
+
+
+def visible(bq, rq, cq, bk, rk, ck) -> bool:
+    """Scalar visibility rule between intra-step tokens (see module doc)."""
+    if bq == 0 and bk == 0:
+        return (ck == cq and rk <= rq) or (rk == 0 and ck < cq)
+    if bq == 1 and bk == 1:
+        return rk == rq and ck <= cq
+    if bq == 1 and bk == 0:
+        return rk == 0 and ck == 0  # the current token only
+    return False  # lookahead never sees verify
+
+
+def intra_mask(w: int, n: int, g: int) -> np.ndarray:
+    """Dense bool [T_in, T_in] intra-step visibility mask (True = visible)."""
+    b, r, c, _ = descriptors(w, n, g)
+    total = len(b)
+    m = np.zeros((total, total), dtype=bool)
+    for qi in range(total):
+        for ki in range(total):
+            m[qi, ki] = visible(b[qi], r[qi], c[qi], b[ki], r[ki], c[ki])
+    return m
+
+
+def intra_mask_vectorized(w: int, n: int, g: int) -> np.ndarray:
+    """Vectorized equivalent of intra_mask (used inside jitted models and the
+    pallas kernel: the same expression evaluates on descriptor *blocks*)."""
+    b, r, c, _ = descriptors(w, n, g)
+    bq, bk = b[:, None], b[None, :]
+    rq, rk = r[:, None], r[None, :]
+    cq, ck = c[:, None], c[None, :]
+    la = (bq == 0) & (bk == 0) & (((ck == cq) & (rk <= rq)) | ((rk == 0) & (ck < cq)))
+    vv = (bq == 1) & (bk == 1) & (rk == rq) & (ck <= cq)
+    vc = (bq == 1) & (bk == 0) & (rk == 0) & (ck == 0)
+    return la | vv | vc
+
+
+def relative_positions(w: int, n: int, g: int) -> np.ndarray:
+    return descriptors(w, n, g)[3]
+
+
+def linear_descriptors(k: int):
+    """Descriptors for a plain causal chain of k tokens (AR / verify-only)."""
+    branch = np.zeros(k, dtype=np.int32)
+    row = np.zeros(k, dtype=np.int32)
+    col = np.arange(k, dtype=np.int32)
+    relpos = np.arange(k, dtype=np.int32)
+    return branch, row, col, relpos
+
+
+def linear_mask(k: int) -> np.ndarray:
+    """Lower-triangular causal mask for a k-token chain."""
+    i = np.arange(k)
+    return i[None, :] <= i[:, None]
+
+
+def golden_record(w: int, n: int, g: int) -> dict:
+    """JSON-serializable golden record for cross-checking with Rust."""
+    b, r, c, p = descriptors(w, n, g)
+    m = intra_mask(w, n, g)
+    # Pack mask rows as little-endian bit strings to keep the file small.
+    packed = ["".join("1" if x else "0" for x in rowv) for rowv in m]
+    return {
+        "w": w,
+        "n": n,
+        "g": g,
+        "t_in": int(t_in(w, n, g)),
+        "branch": b.tolist(),
+        "row": r.tolist(),
+        "col": c.tolist(),
+        "relpos": p.tolist(),
+        "mask_rows": packed,
+    }

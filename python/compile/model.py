@@ -1,0 +1,275 @@
+"""L2: LLaMA-style byte-level transformer with a static KV cache.
+
+Defines the three step functions that are AOT-lowered to HLO text and executed
+from the Rust coordinator (Python is never on the request path):
+
+  - ``prefill``   : prompt -> (kv_cache, logits)
+  - ``decode``    : (kv_cache, cache_len, step tokens) -> (logits, new_kv)
+                    with either a *specialized* hardcoded lookahead mask
+                    (jnp or Pallas attention) or a *generic* mask-as-input
+                    variant used for (W, N, G) sweeps;
+  - ``commit``    : scatter accepted-token K/V rows into the cache.
+
+Weights are a flat **list** (positional, never a dict) so the HLO parameter
+order is stable; `weight_names()` is recorded in the manifest and checked by
+the Rust loader.
+
+Cache layout: ``[L, 2, S, Hk*D]`` (2 = key/value). Row ``S-1`` is the junk row
+— commit scatters unused slots there and visibility masks (`< cache_len`)
+guarantee it is never attended.
+"""
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import masks
+from compile.config import ModelConfig
+from compile.kernels.lookahead_attn import lookahead_attention
+from compile.kernels.ref import attention_ref
+
+
+# ---------------------------------------------------------------------------
+# Weights
+# ---------------------------------------------------------------------------
+
+def weight_names(cfg: ModelConfig) -> List[str]:
+    names = ["embed"]
+    for l in range(cfg.n_layers):
+        names += [
+            f"l{l}.attn_norm", f"l{l}.wq", f"l{l}.wk", f"l{l}.wv", f"l{l}.wo",
+            f"l{l}.mlp_norm", f"l{l}.wg", f"l{l}.wu", f"l{l}.wd",
+        ]
+    names.append("final_norm")
+    return names
+
+
+def weight_shapes(cfg: ModelConfig) -> List[tuple]:
+    d, hd = cfg.d_model, cfg.head_dim
+    kvd = cfg.n_kv_heads * hd
+    shapes = [(cfg.vocab, d)]
+    for _ in range(cfg.n_layers):
+        shapes += [
+            (d,), (d, cfg.n_heads * hd), (d, kvd), (d, kvd),
+            (cfg.n_heads * hd, d),
+            (d,), (d, cfg.d_ff), (d, cfg.d_ff), (cfg.d_ff, d),
+        ]
+    shapes.append((d,))
+    return shapes
+
+
+def init_weights(cfg: ModelConfig, seed: int = 0) -> List[np.ndarray]:
+    """He-style init, deterministic. Returned in canonical order."""
+    rng = np.random.RandomState(seed)
+    out = []
+    for name, shape in zip(weight_names(cfg), weight_shapes(cfg)):
+        if name.endswith("norm"):
+            out.append(np.ones(shape, dtype=np.float32))
+        elif name == "embed":
+            out.append((rng.randn(*shape) * 0.02).astype(np.float32))
+        else:
+            fan_in = shape[0]
+            out.append((rng.randn(*shape) / np.sqrt(fan_in)).astype(np.float32))
+    return out
+
+
+def cache_rows(cfg: ModelConfig) -> int:
+    # total cache rows; last row is the junk row. Multiple of 128 for the
+    # pallas Bk tiling.
+    assert cfg.max_seq % 128 == 0
+    return cfg.max_seq
+
+
+def zero_cache(cfg: ModelConfig) -> np.ndarray:
+    kvd = cfg.n_kv_heads * cfg.head_dim
+    return np.zeros((cfg.n_layers, 2, cache_rows(cfg), kvd), dtype=np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, gain: jnp.ndarray, eps: float) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * gain).astype(x.dtype)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: [T, H, D], positions: [T] int32."""
+    t, h, d = x.shape
+    half = d // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # [T, half]
+    cos = jnp.cos(angles)[:, None, :]  # [T, 1, half]
+    sin = jnp.sin(angles)[:, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1).astype(x.dtype)
+
+
+def _layer(cfg: ModelConfig, lw: Sequence[jnp.ndarray], x, positions,
+           k_cache_l, v_cache_l, cache_len, intra, attn_impl, wng):
+    """One transformer layer. Returns (x, k_new, v_new) with kv in [T,Hk,D]."""
+    attn_norm, wq, wk, wv, wo, mlp_norm, wg, wu, wd = lw
+    t = x.shape[0]
+    hd = cfg.head_dim
+
+    h = rmsnorm(x, attn_norm, cfg.norm_eps)
+    q = (h @ wq).reshape(t, cfg.n_heads, hd)
+    k = (h @ wk).reshape(t, cfg.n_kv_heads, hd)
+    v = (h @ wv).reshape(t, cfg.n_kv_heads, hd)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+
+    if attn_impl == "pallas":
+        w, n, g = wng
+        o = lookahead_attention(q, k, v, k_cache_l, v_cache_l, cache_len,
+                                w, n, g)
+    else:
+        o = attention_ref(q, k, v, k_cache_l, v_cache_l, cache_len, intra)
+    x = x + o.reshape(t, cfg.n_heads * hd) @ wo
+
+    h = rmsnorm(x, mlp_norm, cfg.norm_eps)
+    x = x + (jax.nn.silu(h @ wg) * (h @ wu)) @ wd
+    return x, k, v
+
+
+def _split_weights(cfg: ModelConfig, weights: Sequence[jnp.ndarray]):
+    embed = weights[0]
+    layers = []
+    for l in range(cfg.n_layers):
+        layers.append(weights[1 + 9 * l: 1 + 9 * (l + 1)])
+    final_norm = weights[-1]
+    return embed, layers, final_norm
+
+
+def forward_step(cfg: ModelConfig, weights, cache, cache_len, tokens,
+                 positions, intra, attn_impl="jnp", wng=None):
+    """Shared forward over T step tokens against the committed cache.
+
+    Returns (logits [T, vocab], new_kv [L, 2, T, Hk*D]).
+    """
+    embed, layers, final_norm = _split_weights(cfg, weights)
+    t = tokens.shape[0]
+    kvd = cfg.n_kv_heads * cfg.head_dim
+
+    x = embed[tokens]  # [T, d]
+    new_kv = []
+    for l, lw in enumerate(layers):
+        k_cache_l = cache[l, 0].reshape(-1, cfg.n_kv_heads, cfg.head_dim)
+        v_cache_l = cache[l, 1].reshape(-1, cfg.n_kv_heads, cfg.head_dim)
+        x, k, v = _layer(cfg, lw, x, positions, k_cache_l, v_cache_l,
+                         cache_len, intra, attn_impl, wng)
+        new_kv.append(jnp.stack([k.reshape(t, kvd), v.reshape(t, kvd)]))
+    x = rmsnorm(x, final_norm, cfg.norm_eps)
+    logits = x @ embed.T  # tied embeddings
+    return logits.astype(jnp.float32), jnp.stack(new_kv)
+
+
+# ---------------------------------------------------------------------------
+# AOT entry points (the functions that become HLO artifacts)
+# ---------------------------------------------------------------------------
+
+def make_prefill(cfg: ModelConfig, prompt_len: int):
+    """prefill(weights.., tokens i32[P], n_valid i32) -> (cache, logits[P,V]).
+
+    Fills cache rows 0..P-1 (the Rust side sets cache_len = n_valid - 1; rows
+    beyond are never attended). Padded positions produce garbage KV that is
+    likewise never visible.
+    """
+    s = cache_rows(cfg)
+    intra = jnp.asarray(np.tril(np.ones((prompt_len, prompt_len), dtype=bool)))
+
+    def prefill(*args):
+        weights = args[:-2]
+        tokens, n_valid = args[-2], args[-1]
+        positions = jnp.arange(prompt_len, dtype=jnp.int32)
+        cache = jnp.zeros((cfg.n_layers, 2, s, cfg.n_kv_heads * cfg.head_dim),
+                          dtype=jnp.float32)
+        zero_len = jnp.asarray(0, dtype=jnp.int32)
+        logits, new_kv = forward_step(
+            cfg, weights, cache, zero_len, tokens, positions, intra)
+        # new_kv: [L,2,P,KVD] -> rows 0..P-1 of the cache
+        cache = jax.lax.dynamic_update_slice(cache, new_kv, (0, 0, 0, 0))
+        del n_valid  # kept in the signature for the runtime contract
+        return logits, cache
+
+    return prefill
+
+
+def make_decode_specialized(cfg: ModelConfig, w: int, n: int, g: int,
+                            attn_impl: str = "jnp"):
+    """decode(weights.., cache, cache_len i32, tokens i32[T]) ->
+    (logits [T,V], new_kv [L,2,T,KVD]) with the (W,N,G) pattern baked in."""
+    intra = jnp.asarray(masks.intra_mask_vectorized(w, n, g))
+    relpos = jnp.asarray(masks.relative_positions(w, n, g))
+
+    def decode(*args):
+        weights = args[:-3]
+        cache, cache_len, tokens = args[-3], args[-2], args[-1]
+        positions = (cache_len + relpos).astype(jnp.int32)
+        return forward_step(cfg, weights, cache, cache_len, tokens, positions,
+                            intra, attn_impl=attn_impl, wng=(w, n, g))
+
+    return decode
+
+
+def make_decode_linear(cfg: ModelConfig, k: int):
+    """Plain causal chain over k new tokens (AR step / draft verify)."""
+    intra = jnp.asarray(masks.linear_mask(k))
+
+    def decode(*args):
+        weights = args[:-3]
+        cache, cache_len, tokens = args[-3], args[-2], args[-1]
+        positions = (cache_len + jnp.arange(k, dtype=jnp.int32)).astype(jnp.int32)
+        return forward_step(cfg, weights, cache, cache_len, tokens, positions,
+                            intra)
+
+    return decode
+
+
+def make_decode_generic(cfg: ModelConfig, t_pad: int):
+    """Mask-as-input decode used for (W,N,G) sweeps without re-lowering.
+
+    decode(weights.., cache, cache_len, tokens i32[T], relpos i32[T],
+           mask u8[T,T]) -> (logits, new_kv)
+    """
+
+    def decode(*args):
+        weights = args[:-5]
+        cache, cache_len, tokens, relpos, mask_u8 = args[-5:]
+        intra = mask_u8.astype(jnp.bool_)
+        positions = (cache_len + relpos).astype(jnp.int32)
+        return forward_step(cfg, weights, cache, cache_len, tokens, positions,
+                            intra)
+
+    return decode
+
+
+def make_commit(cfg: ModelConfig, t: int, slots: int = 8):
+    """commit(cache, new_kv[L,2,T,KVD], src_idx i32[slots], dest_start i32,
+    count i32) -> cache.
+
+    Scatters `count` rows of new_kv (selected by src_idx) to cache rows
+    dest_start..dest_start+count-1; unused slots land on the junk row S-1.
+    """
+    s = cache_rows(cfg)
+
+    def commit(cache, new_kv, src_idx, dest_start, count):
+        i = jnp.arange(slots, dtype=jnp.int32)
+        dest = jnp.where(i < count, dest_start + i, s - 1)  # [slots]
+        rows = jnp.take(new_kv, src_idx, axis=2)  # [L,2,slots,KVD]
+        # scatter along axis 2
+        return cache.at[:, :, dest, :].set(rows)
+
+    return commit
+
+
+def make_logits_only(cfg: ModelConfig):
+    """score(weights.., tokens i32[P]) -> logits [P,V] without cache I/O.
+
+    Used by evaluation tooling (perplexity over a window) — full causal.
+    """
+    raise NotImplementedError  # reserved; evaluation uses prefill's logits

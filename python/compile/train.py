@@ -1,0 +1,138 @@
+"""Build-time trainer for the byte-level transformer zoo.
+
+Trains each model on the deterministic synthetic corpus mixture with Adam and
+next-byte cross-entropy, entirely in JAX on the CPU. Weights are saved as
+`.npz` (read natively by the Rust `xla` crate) and the loss curve goes to
+`artifacts/train_log.json` (surfaced in EXPERIMENTS.md).
+
+This is a *substrate*, not the paper's contribution — it exists so the served
+model is a real trained model rather than random weights, giving the n-gram
+pool realistic hit statistics.
+"""
+
+import json
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import corpus, model
+from compile.config import BOS_ID, MODELS, VOCAB_BYTES, ModelConfig
+
+
+def encode_bytes(data: bytes) -> np.ndarray:
+    return np.frombuffer(data, dtype=np.uint8).astype(np.int32)
+
+
+def make_batches(data: np.ndarray, batch: int, seq: int, steps: int,
+                 seed: int = 0):
+    rng = np.random.RandomState(seed)
+    n = len(data) - seq - 1
+    for _ in range(steps):
+        idx = rng.randint(0, n, size=batch)
+        x = np.stack([data[i:i + seq] for i in idx])
+        y = np.stack([data[i + 1:i + seq + 1] for i in idx])
+        yield x, y
+
+
+def _causal_forward(cfg: ModelConfig, weights, tokens):
+    """Batched full-causal forward for training. tokens: [B, T] -> logits."""
+    embed, layers, final_norm = model._split_weights(cfg, weights)
+    b, t = tokens.shape
+    positions = jnp.arange(t, dtype=jnp.int32)
+    intra = jnp.tril(jnp.ones((t, t), dtype=bool))
+    kvd = cfg.n_kv_heads * cfg.head_dim
+    empty_k = jnp.zeros((0, cfg.n_kv_heads, cfg.head_dim), dtype=jnp.float32)
+
+    def one(seq_tokens):
+        x = embed[seq_tokens]
+        zero = jnp.asarray(0, dtype=jnp.int32)
+        for lw in layers:
+            x, _, _ = model._layer(cfg, lw, x, positions, empty_k, empty_k,
+                                   zero, intra, "jnp", None)
+        x = model.rmsnorm(x, final_norm, cfg.norm_eps)
+        return (x @ embed.T).astype(jnp.float32)
+
+    return jax.vmap(one)(tokens)
+
+
+def loss_fn(cfg: ModelConfig, weights, x, y):
+    logits = _causal_forward(cfg, weights, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)
+    return nll.mean()
+
+
+def adam_init(weights):
+    return ([jnp.zeros_like(w) for w in weights],
+            [jnp.zeros_like(w) for w in weights])
+
+
+def adam_step(weights, grads, m, v, step, lr, b1=0.9, b2=0.99, eps=1e-8):
+    new_w, new_m, new_v = [], [], []
+    t = step + 1
+    for w, gr, mi, vi in zip(weights, grads, m, v):
+        mi = b1 * mi + (1 - b1) * gr
+        vi = b2 * vi + (1 - b2) * jnp.square(gr)
+        mhat = mi / (1 - b1 ** t)
+        vhat = vi / (1 - b2 ** t)
+        new_w.append(w - lr * mhat / (jnp.sqrt(vhat) + eps))
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_w, new_m, new_v
+
+
+def train_model(cfg: ModelConfig, steps: int, batch: int, seq: int,
+                lr: float = 3e-3, corpus_bytes: int = 400_000,
+                seed: int = 0, log_every: int = 10):
+    data = encode_bytes(corpus.training_corpus(corpus_bytes, seed=seed))
+    weights = [jnp.asarray(w) for w in model.init_weights(cfg, seed=seed)]
+    m, v = adam_init(weights)
+
+    @jax.jit
+    def step_fn(weights, m, v, step, x, y):
+        loss, grads = jax.value_and_grad(
+            lambda ws: loss_fn(cfg, ws, x, y))(weights)
+        weights, m, v = adam_step(weights, grads, m, v, step, lr)
+        return weights, m, v, loss
+
+    log = []
+    t0 = time.time()
+    for i, (x, y) in enumerate(make_batches(data, batch, seq, steps,
+                                            seed=seed + 1)):
+        weights, m, v, loss = step_fn(weights, m, v, i,
+                                      jnp.asarray(x), jnp.asarray(y))
+        if i % log_every == 0 or i == steps - 1:
+            log.append({"step": i, "loss": float(loss),
+                        "elapsed_s": round(time.time() - t0, 2)})
+            print(f"[train:{cfg.name}] step {i:4d} loss {float(loss):.4f}")
+    return [np.asarray(w) for w in weights], log
+
+
+def save_weights(path: str, cfg: ModelConfig, weights: List[np.ndarray]):
+    arrays = {name: w for name, w in zip(model.weight_names(cfg), weights)}
+    # np.savez keys cannot contain '/', '.' is fine; store uncompressed so the
+    # Rust side's stored-entry zip reader path stays simple.
+    np.savez(path, **arrays)
+
+
+TRAIN_PLANS = {
+    # name: (steps, batch, seq, corpus_bytes)
+    "tiny": (240, 12, 128, 400_000),
+    "small": (160, 8, 128, 400_000),
+    "draft": (160, 12, 128, 400_000),
+}
+
+MIN_PLAN = (30, 4, 96, 120_000)  # ARTIFACT_PROFILE=min (tests / CI)
+
+
+def train_and_save(name: str, out_npz: str, profile: str = "full"):
+    cfg = MODELS[name]
+    steps, batch, seq, nbytes = (
+        MIN_PLAN if profile == "min" else TRAIN_PLANS[name])
+    weights, log = train_model(cfg, steps=steps, batch=batch, seq=seq,
+                               corpus_bytes=nbytes)
+    save_weights(out_npz, cfg, weights)
+    return log

@@ -1,0 +1,56 @@
+"""Corpus determinism + short-training smoke (loss must decrease)."""
+
+import json
+
+import numpy as np
+import pytest
+
+from compile import corpus, train
+from compile.config import MODELS
+
+
+def test_corpus_deterministic():
+    a = corpus.training_corpus(50_000, seed=3)
+    b = corpus.training_corpus(50_000, seed=3)
+    assert a == b
+    c = corpus.training_corpus(50_000, seed=4)
+    assert a != c
+
+
+def test_corpus_is_ascii_bytes():
+    data = corpus.training_corpus(20_000, seed=0)
+    assert max(data) < 128  # generators emit ASCII -> fits byte vocab
+
+
+def test_all_suites_generate():
+    rng = np.random.RandomState(0)
+    for name, gen in corpus.SUITES.items():
+        s = gen(rng)
+        assert len(s) > 10, name
+
+
+def test_eval_workloads_shape_and_determinism():
+    w1 = corpus.eval_workloads(n_prompts=4, seed=9)
+    w2 = corpus.eval_workloads(n_prompts=4, seed=9)
+    assert w1 == w2
+    assert set(w1) == set(corpus.SUITES)
+    for suite, prompts in w1.items():
+        assert len(prompts) == 4
+        assert all(0 < len(p) <= 192 for p in prompts)
+
+
+def test_batches_are_shifted_pairs():
+    data = train.encode_bytes(corpus.training_corpus(30_000, seed=1))
+    for x, y in train.make_batches(data, batch=2, seq=16, steps=3, seed=0):
+        assert x.shape == y.shape == (2, 16)
+        # y is x shifted by one position within the source stream
+        assert (x[:, 1:] == y[:, :-1]).all()
+
+
+@pytest.mark.slow
+def test_training_reduces_loss():
+    cfg = MODELS["draft"]
+    _, log = train.train_model(cfg, steps=25, batch=4, seq=64,
+                               corpus_bytes=60_000, log_every=5)
+    first, last = log[0]["loss"], log[-1]["loss"]
+    assert last < first * 0.8, (first, last)

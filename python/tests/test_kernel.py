@@ -1,0 +1,112 @@
+"""L1 correctness: Pallas lookahead-attention kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, dtypes, (W,N,G) configs, GQA group sizes, and
+cache-fill levels; assert_allclose against `ref.attention_ref`.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import masks
+from compile.kernels.lookahead_attn import (lookahead_attention,
+                                            mxu_utilization_estimate,
+                                            vmem_estimate_bytes)
+from compile.kernels.ref import attention_ref
+
+
+def run_pair(w, n, g, h, hk, d, s, cache_len, dtype, seed=0, bk=128):
+    t = masks.t_in(w, n, g)
+    rng = np.random.RandomState(seed)
+
+    def arr(*shape):
+        return jnp.asarray(rng.randn(*shape).astype(np.float32), dtype=dtype)
+
+    q, kn, vn = arr(t, h, d), arr(t, hk, d), arr(t, hk, d)
+    kc, vc = arr(s, hk, d), arr(s, hk, d)
+    cl = jnp.asarray(cache_len, dtype=jnp.int32)
+    intra = jnp.asarray(masks.intra_mask(w, n, g))
+    ref = attention_ref(q, kn, vn, kc, vc, cl, intra)
+    out = lookahead_attention(q, kn, vn, kc, vc, cl, w, n, g, bk=bk)
+    return np.asarray(ref, np.float32), np.asarray(out, np.float32)
+
+
+def tol(dtype):
+    return dict(atol=5e-5, rtol=5e-5) if dtype == jnp.float32 \
+        else dict(atol=5e-2, rtol=5e-2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    wng=st.tuples(st.integers(1, 8), st.integers(2, 5), st.integers(0, 8)),
+    heads=st.sampled_from([(4, 4), (4, 2), (2, 1)]),
+    d=st.sampled_from([16, 32, 64]),
+    cache_len=st.integers(0, 255),
+    dtype=st.sampled_from([jnp.float32, jnp.bfloat16]),
+)
+def test_kernel_matches_ref(wng, heads, d, cache_len, dtype):
+    w, n, g = wng
+    h, hk = heads
+    ref, out = run_pair(w, n, g, h, hk, d, 256, cache_len, dtype)
+    np.testing.assert_allclose(ref, out, **tol(dtype))
+
+
+@pytest.mark.parametrize("wng", [(15, 5, 15), (10, 5, 10), (7, 5, 7)])
+def test_kernel_headline_configs(wng):
+    ref, out = run_pair(*wng, h=4, hk=4, d=32, s=768, cache_len=300,
+                        dtype=jnp.float32)
+    np.testing.assert_allclose(ref, out, atol=5e-5, rtol=5e-5)
+
+
+def test_kernel_empty_cache():
+    ref, out = run_pair(5, 3, 5, h=4, hk=4, d=32, s=256, cache_len=0,
+                        dtype=jnp.float32)
+    np.testing.assert_allclose(ref, out, atol=5e-5, rtol=5e-5)
+
+
+def test_kernel_single_token_window():
+    """(W=1, N=2, G=0) degenerates to plain single-token decode."""
+    ref, out = run_pair(1, 2, 0, h=2, hk=2, d=16, s=128, cache_len=17,
+                        dtype=jnp.float32)
+    np.testing.assert_allclose(ref, out, atol=5e-5, rtol=5e-5)
+
+
+def test_kernel_different_bk():
+    ref, out = run_pair(5, 3, 5, h=4, hk=4, d=32, s=256, cache_len=100,
+                        dtype=jnp.float32, bk=64)
+    np.testing.assert_allclose(ref, out, atol=5e-5, rtol=5e-5)
+
+
+def test_junk_row_never_attended():
+    """Writing garbage into the last cache row must not change the output
+    as long as cache_len < S-1 (the commit-scatter junk-row contract)."""
+    w, n, g, h, d, s = 5, 3, 5, 4, 32, 256
+    t = masks.t_in(w, n, g)
+    rng = np.random.RandomState(1)
+    q = jnp.asarray(rng.randn(t, h, d).astype(np.float32))
+    kn = jnp.asarray(rng.randn(t, h, d).astype(np.float32))
+    vn = jnp.asarray(rng.randn(t, h, d).astype(np.float32))
+    kc = rng.randn(s, h, d).astype(np.float32)
+    vc = rng.randn(s, h, d).astype(np.float32)
+    cl = jnp.asarray(100, dtype=jnp.int32)
+    out1 = lookahead_attention(q, kn, vn, jnp.asarray(kc), jnp.asarray(vc),
+                               cl, w, n, g)
+    kc[-1] = 1e6
+    vc[-1] = -1e6
+    out2 = lookahead_attention(q, kn, vn, jnp.asarray(kc), jnp.asarray(vc),
+                               cl, w, n, g)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def test_vmem_estimate_within_budget():
+    est = vmem_estimate_bytes(t=120, d=32, s=768)
+    assert est["fits_16MiB_vmem"]
+    assert est["total"] > 0
+
+
+def test_mxu_estimate_monotone_in_tile():
+    lo = mxu_utilization_estimate(t=120, d=32, s=768, bq=4)
+    hi = mxu_utilization_estimate(t=120, d=32, s=768, bq=8)
+    assert hi["weighted"] >= lo["weighted"]

@@ -1,0 +1,96 @@
+"""Layout/mask canon tests — the contract shared with rust/src/layout/."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile import masks
+
+WNG = st.tuples(st.integers(1, 12), st.integers(2, 6), st.integers(0, 12))
+
+
+def test_t_in_formula():
+    assert masks.t_in(15, 5, 15) == 120
+    assert masks.t_in(5, 3, 5) == 20
+    assert masks.t_in(1, 2, 0) == 1
+
+
+def test_paper_figure2b_example():
+    """W=5, N=4, G=2 — the worked example of Fig. 2(b): 'only the green token
+    at position 5 and all orange tokens are visible to the red token 6'."""
+    w, n, g = 5, 4, 2
+    m = masks.intra_mask(w, n, g)
+    b, r, c, p = masks.descriptors(w, n, g)
+
+    def idx(rr, cc):  # lookahead index
+        return rr * w + cc
+
+    red6 = idx(2, 4)  # row 2 (newest), col 4 -> relpos 6
+    assert p[red6] == 6
+    visible = {i for i in range(masks.t_in(w, n, g)) if m[red6, i]}
+    expected = {idx(0, cc) for cc in range(5)}  # all orange
+    expected |= {idx(1, 4)}  # green token at position 5 (row 1, col 4)
+    expected |= {red6}  # self
+    assert visible == expected
+
+
+def test_current_token_is_index0():
+    b, r, c, p = masks.descriptors(7, 5, 7)
+    assert b[0] == 0 and r[0] == 0 and c[0] == 0 and p[0] == 0
+
+
+@settings(max_examples=40, deadline=None)
+@given(WNG)
+def test_vectorized_matches_scalar(wng):
+    w, n, g = wng
+    assert (masks.intra_mask(w, n, g)
+            == masks.intra_mask_vectorized(w, n, g)).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(WNG)
+def test_mask_invariants(wng):
+    w, n, g = wng
+    m = masks.intra_mask(w, n, g)
+    b, r, c, p = masks.descriptors(w, n, g)
+    t = masks.t_in(w, n, g)
+    # every token sees itself
+    assert m.diagonal().all()
+    # visibility implies non-increasing relative position
+    qi, ki = np.nonzero(m)
+    assert (p[ki] <= p[qi]).all()
+    # lookahead never sees verify, candidates are disjoint
+    for q in range(t):
+        for k in range(t):
+            if m[q, k] and b[q] == 0:
+                assert b[k] == 0
+            if m[q, k] and b[q] == 1 and b[k] == 1:
+                assert r[q] == r[k]
+
+
+@settings(max_examples=20, deadline=None)
+@given(WNG)
+def test_diagonal_forms_contiguous_pseudo_sequence(wng):
+    """For every lookahead token, its visible set must form a contiguous
+    position range 0..relpos — the Jacobi trajectory property that makes the
+    n-grams meaningful."""
+    w, n, g = wng
+    m = masks.intra_mask(w, n, g)
+    b, r, c, p = masks.descriptors(w, n, g)
+    nla = masks.n_lookahead(w, n)
+    for q in range(nla):
+        seen = sorted(p[k] for k in range(nla) if m[q, k])
+        assert seen == list(range(p[q] + 1)), (q, seen)
+
+
+def test_linear_mask_is_causal():
+    m = masks.linear_mask(6)
+    assert (m == np.tril(np.ones((6, 6), bool))).all()
+
+
+def test_golden_record_roundtrip():
+    rec = masks.golden_record(5, 3, 5)
+    m = masks.intra_mask(5, 3, 5)
+    for i, rowbits in enumerate(rec["mask_rows"]):
+        assert [ch == "1" for ch in rowbits] == m[i].tolist()

@@ -1,0 +1,175 @@
+"""L2 model tests: step-function consistency — the KV-cache/commit/decode
+chain must be byte-identical (greedy) to full causal recomputation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import masks, model
+from compile.config import MODELS, PAD_ID, VOCAB_SIZE
+
+CFG = MODELS["draft"]  # smallest model: fast under CI
+P = 32
+
+
+@pytest.fixture(scope="module")
+def ws():
+    return [jnp.asarray(w) for w in model.init_weights(CFG, seed=1)]
+
+
+@pytest.fixture(scope="module")
+def fns():
+    return {
+        "prefill": jax.jit(model.make_prefill(CFG, P)),
+        "dec1": jax.jit(model.make_decode_linear(CFG, 1)),
+        "dec5": jax.jit(model.make_decode_linear(CFG, 5)),
+        "la": jax.jit(model.make_decode_specialized(CFG, 5, 3, 5)),
+        "la_pallas": jax.jit(
+            model.make_decode_specialized(CFG, 5, 3, 5, attn_impl="pallas")),
+        "gen64": jax.jit(model.make_decode_generic(CFG, 64)),
+        "commit1": jax.jit(model.make_commit(CFG, 1)),
+        "commit5": jax.jit(model.make_commit(CFG, 5)),
+    }
+
+
+def prompt_state(ws, fns, toks):
+    pad = np.full(P, PAD_ID, np.int32)
+    pad[:len(toks)] = toks
+    logits, cache = fns["prefill"](*ws, jnp.asarray(pad),
+                                   jnp.asarray(len(toks), jnp.int32))
+    return cache, len(toks) - 1, int(toks[-1]), np.asarray(logits)
+
+
+def ar_reference(ws, toks, steps):
+    """Greedy continuation by full causal recomputation (no cache)."""
+    seq = list(toks)
+    out = []
+    kvd = CFG.n_kv_heads * CFG.head_dim
+    zcache = jnp.zeros((CFG.n_layers, 2, model.cache_rows(CFG), kvd),
+                       jnp.float32)
+    for _ in range(steps):
+        t = len(seq)
+        intra = jnp.asarray(np.tril(np.ones((t, t), bool)))
+        logits, _ = model.forward_step(
+            CFG, ws, zcache, jnp.asarray(0, jnp.int32),
+            jnp.asarray(seq, jnp.int32), jnp.arange(t, dtype=jnp.int32), intra)
+        nxt = int(jnp.argmax(logits[-1][:VOCAB_SIZE]))
+        out.append(nxt)
+        seq.append(nxt)
+    return out
+
+
+TOKS = np.random.RandomState(0).randint(0, 256, size=12).astype(np.int32)
+
+
+def test_ar_chain_matches_full_recompute(ws, fns):
+    cache, cache_len, cur, _ = prompt_state(ws, fns, TOKS)
+    got = []
+    idx0 = jnp.asarray([0] * 8, jnp.int32)
+    for _ in range(6):
+        logits, new_kv = fns["dec1"](*ws, cache,
+                                     jnp.asarray(cache_len, jnp.int32),
+                                     jnp.asarray([cur], jnp.int32))
+        cur = int(jnp.argmax(logits[0][:VOCAB_SIZE]))
+        cache = fns["commit1"](cache, new_kv, idx0,
+                               jnp.asarray(cache_len, jnp.int32),
+                               jnp.asarray(1, jnp.int32))
+        cache_len += 1
+        got.append(cur)
+    assert got == ar_reference(ws, TOKS, 6)
+
+
+def test_multi_token_decode_matches_ar(ws, fns):
+    """decode_lin_5 over the AR continuation reproduces AR logits."""
+    cache, cache_len, cur, _ = prompt_state(ws, fns, TOKS)
+    ar = ar_reference(ws, TOKS, 5)
+    chain = [cur] + ar[:4]
+    logits, _ = fns["dec5"](*ws, cache, jnp.asarray(cache_len, jnp.int32),
+                            jnp.asarray(chain, jnp.int32))
+    got = [int(jnp.argmax(logits[i][:VOCAB_SIZE])) for i in range(5)]
+    assert got == ar
+
+
+def test_lookahead_verify_branch_matches_ar(ws, fns):
+    cache, cache_len, cur, _ = prompt_state(ws, fns, TOKS)
+    ar = ar_reference(ws, TOKS, 3)
+    w, n, g = 5, 3, 5
+    t = masks.t_in(w, n, g)
+    rng = np.random.RandomState(3)
+    la = rng.randint(0, 256, size=t).astype(np.int32)
+    la[0] = cur
+    base = masks.n_lookahead(w, n)
+    la[base:base + 2] = ar[:2]  # candidate 0 = true continuation
+    logits, _ = fns["la"](*ws, cache, jnp.asarray(cache_len, jnp.int32),
+                          jnp.asarray(la))
+    assert int(jnp.argmax(logits[0][:VOCAB_SIZE])) == ar[0]
+    assert int(jnp.argmax(logits[base][:VOCAB_SIZE])) == ar[1]
+    assert int(jnp.argmax(logits[base + 1][:VOCAB_SIZE])) == ar[2]
+
+
+def test_pallas_and_jnp_decode_agree(ws, fns):
+    cache, cache_len, cur, _ = prompt_state(ws, fns, TOKS)
+    t = masks.t_in(5, 3, 5)
+    la = np.random.RandomState(5).randint(0, 256, size=t).astype(np.int32)
+    la[0] = cur
+    a, _ = fns["la"](*ws, cache, jnp.asarray(cache_len, jnp.int32),
+                     jnp.asarray(la))
+    b, _ = fns["la_pallas"](*ws, cache, jnp.asarray(cache_len, jnp.int32),
+                            jnp.asarray(la))
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_generic_decode_matches_specialized(ws, fns):
+    """The mask-as-input executable with the (5,3,5) layout padded to 64
+    produces the same logits on the live slots."""
+    cache, cache_len, cur, _ = prompt_state(ws, fns, TOKS)
+    w, n, g = 5, 3, 5
+    t = masks.t_in(w, n, g)
+    la = np.random.RandomState(7).randint(0, 256, size=t).astype(np.int32)
+    la[0] = cur
+    spec_logits, _ = fns["la"](*ws, cache, jnp.asarray(cache_len, jnp.int32),
+                               jnp.asarray(la))
+    tokens = np.full(64, PAD_ID, np.int32)
+    tokens[:t] = la
+    relpos = np.zeros(64, np.int32)
+    relpos[:t] = masks.relative_positions(w, n, g)
+    m = np.zeros((64, 64), np.uint8)
+    m[:t, :t] = masks.intra_mask(w, n, g).astype(np.uint8)
+    np.fill_diagonal(m, np.maximum(m.diagonal(), 1))  # pad rows see self only
+    gen_logits, _ = fns["gen64"](*ws, cache, jnp.asarray(cache_len, jnp.int32),
+                                 jnp.asarray(tokens), jnp.asarray(relpos),
+                                 jnp.asarray(m))
+    np.testing.assert_allclose(np.asarray(spec_logits),
+                               np.asarray(gen_logits)[:t],
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_commit_junk_row_isolated(ws, fns):
+    """Slots beyond `count` land on the junk row and never affect decode."""
+    cache, cache_len, cur, _ = prompt_state(ws, fns, TOKS)
+    logits, new_kv = fns["dec5"](*ws, cache, jnp.asarray(cache_len, jnp.int32),
+                                 jnp.asarray([cur, 1, 2, 3, 4], jnp.int32))
+    idx = jnp.asarray([0, 1, 2, 3, 4, 0, 0, 0], jnp.int32)
+    c1 = fns["commit5"](cache, new_kv, idx, jnp.asarray(cache_len, jnp.int32),
+                        jnp.asarray(2, jnp.int32))
+    c2 = np.asarray(c1)
+    # rows cache_len..cache_len+1 written, junk row (S-1) clobbered, rest equal
+    s = model.cache_rows(CFG)
+    base = np.asarray(cache)
+    changed = np.zeros(s, bool)
+    changed[cache_len:cache_len + 2] = True
+    changed[s - 1] = True
+    np.testing.assert_array_equal(c2[:, :, ~changed, :], base[:, :, ~changed, :])
+    # committed rows hold exactly the selected new_kv rows
+    nk = np.asarray(new_kv)
+    np.testing.assert_array_equal(c2[:, :, cache_len, :], nk[:, :, 0, :])
+    np.testing.assert_array_equal(c2[:, :, cache_len + 1, :], nk[:, :, 1, :])
+
+
+def test_weight_names_shapes_aligned():
+    names, shapes = model.weight_names(CFG), model.weight_shapes(CFG)
+    assert len(names) == len(shapes) == 1 + 9 * CFG.n_layers + 1
+    ws_ = model.init_weights(CFG)
+    assert [w.shape for w in ws_] == [tuple(s) for s in shapes]

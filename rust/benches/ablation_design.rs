@@ -1,0 +1,128 @@
+//! Design-choice ablations beyond the paper's tables (DESIGN.md §4):
+//!
+//!   (a) n-gram pool capacity: per-key LRU depth + global cap vs S — how
+//!       much history the pool actually needs;
+//!   (b) prompt-as-reference seeding vs pool-only (isolated, per suite);
+//!   (c) window-refill policy after multi-token acceptance (random refill
+//!       vs repeat-last) — the paper leaves this unspecified (§3.1);
+//!   (d) scheduler policy under mixed prompt lengths: FIFO vs SJF mean
+//!       queue wait at the serving layer.
+//!
+//!   cargo bench --bench ablation_design [-- --quick]
+
+use lookahead::bench::driver::run_suite;
+use lookahead::bench::{bench_args, save_result, Table};
+use lookahead::engine::lookahead::{Lookahead, LookaheadConfig};
+use lookahead::runtime::load_model;
+use lookahead::server::{Policy, Request, ServerConfig, ServerHandle, WorkerConfig};
+use lookahead::util::json::Json;
+use lookahead::workload::Workloads;
+
+fn main() -> anyhow::Result<()> {
+    let args = bench_args();
+    let quick = args.bool_or("quick", false);
+    let (_, rt) = load_model("artifacts", "tiny")?;
+    let workloads = Workloads::load("artifacts")?;
+    let max_tokens = if quick { 32 } else { 64 };
+    let nprompts = if quick { 2 } else { 4 };
+
+    // ---- (a) pool capacity sweep -----------------------------------------
+    println!("(a) n-gram pool capacity vs S (code suite, (15,5,15)):\n");
+    let prompts = workloads.take("code", nprompts)?;
+    let mut t = Table::new(&["per-key cap", "global cap", "S", "pool-hit%"]);
+    let mut rows = Vec::new();
+    for (pk, total) in [(1usize, 64usize), (4, 256), (8, 1024), (30, 16384)] {
+        let mut cfg = LookaheadConfig::new(15, 5, 15);
+        cfg.pool_per_key = pk;
+        cfg.pool_total = total;
+        let run = run_suite(&rt, &mut Lookahead::new(cfg), &prompts, max_tokens, 0.0)?;
+        t.row(vec![
+            pk.to_string(),
+            total.to_string(),
+            format!("{:.2}", run.s()),
+            format!("{:.0}", 100.0 * run.pool_hits as f64
+                    / (run.pool_hits + run.pool_misses).max(1) as f64),
+        ]);
+        rows.push(Json::obj(vec![
+            ("per_key", Json::num(pk as f64)),
+            ("s", Json::num(run.s())),
+        ]));
+    }
+    t.print();
+
+    // ---- (b) prompt-as-reference per suite ---------------------------------
+    println!("\n(b) prompt-as-reference contribution per suite ((15,5,15)):\n");
+    let mut t = Table::new(&["suite", "S pool-only", "S +prompt-ref", "delta"]);
+    for suite in ["chat", "code", "summarize"] {
+        let prompts = workloads.take(suite, nprompts)?;
+        let mut off = LookaheadConfig::new(15, 5, 15);
+        off.prompt_as_ref = false;
+        let s_off = run_suite(&rt, &mut Lookahead::new(off), &prompts,
+                              max_tokens, 0.0)?.s();
+        let s_on = run_suite(&rt, &mut Lookahead::with_wng(15, 5, 15), &prompts,
+                             max_tokens, 0.0)?.s();
+        t.row(vec![
+            suite.into(),
+            format!("{s_off:.2}"),
+            format!("{s_on:.2}"),
+            format!("{:+.2}", s_on - s_off),
+        ]);
+    }
+    t.print();
+
+    // ---- (d) scheduler policy under mixed lengths ---------------------------
+    println!("\n(d) scheduler policy: mean queue wait, mixed prompt lengths:\n");
+    let mut t = Table::new(&["policy", "mean queue ms", "p99 queue ms"]);
+    for (name, policy) in [("fifo", Policy::Fifo), ("sjf", Policy::ShortestFirst)] {
+        let h = ServerHandle::start(ServerConfig {
+            workers: 1,
+            policy,
+            queue_depth: 256,
+            worker: WorkerConfig {
+                artifacts_dir: "artifacts".into(),
+                model: "tiny".into(),
+                wng: (5, 3, 5),
+                draft_model: "draft".into(),
+            },
+        })?;
+        // warm the worker first (engine + prefill compilation must not
+        // land on a measured request — it would dwarf queue-wait deltas)
+        let warm = h.submit(Request {
+            prompt: "def warm():\n".into(),
+            max_tokens: 2,
+            ..Default::default()
+        })?;
+        warm.recv()?;
+        // alternate long prompts (class-code, long generations) with short
+        // ones (math, short generations) — the head-of-line blocking case.
+        // SJF keys on prompt length, so the prompts themselves must differ.
+        let long_ps = workloads.take("class-code", 4)?;
+        let short_ps: Vec<String> = workloads.take("math", 4)?
+            .into_iter().map(|p| p[p.len().saturating_sub(24)..].to_string())
+            .collect();
+        let mut rxs = Vec::new();
+        for i in 0..(if quick { 4 } else { 8 }) {
+            let long = i % 2 == 0;
+            rxs.push(h.submit(Request {
+                prompt: if long { long_ps[i / 2 % 4].clone() }
+                        else { short_ps[i / 2 % 4].clone() },
+                max_tokens: if long { max_tokens } else { 8 },
+                ..Default::default()
+            })?);
+        }
+        let mut q = lookahead::metrics::Histogram::new();
+        for rx in rxs {
+            let r = rx.recv()?;
+            anyhow::ensure!(r.error.is_none(), "{:?}", r.error);
+            q.record(r.queue_ms);
+        }
+        t.row(vec![name.into(), format!("{:.0}", q.mean()),
+                   format!("{:.0}", q.p99())]);
+        h.shutdown();
+    }
+    t.print();
+    println!("\n(SJF should cut mean wait when short and long requests mix.)");
+
+    save_result("ablation_design", Json::Arr(rows));
+    Ok(())
+}

@@ -1,0 +1,98 @@
+//! Fig. 4 — the scaling law of LOOKAHEAD DECODING.
+//!
+//! (a) measured: S over a (W, N) sweep with G = W on the chat suite
+//!     (paper: LLaMA-2-Chat-7B on MT-Bench), via the generic executable.
+//! (b) analytic: fit (alpha, f) to the measurements and print the Eq. 7
+//!     curve next to them (paper uses alpha = 0.425, f = 3.106).
+//!
+//! Expected shape: S grows ~linearly in log(W*G) for fixed N until
+//! saturation; larger N helps once W is large enough.
+//!
+//!   cargo bench --bench fig4_scaling [-- --quick]
+
+use lookahead::analytic;
+use lookahead::bench::driver::run_suite;
+use lookahead::bench::{bench_args, save_result, Table};
+use lookahead::engine::lookahead::{Lookahead, LookaheadConfig};
+use lookahead::runtime::load_model;
+use lookahead::util::json::Json;
+use lookahead::workload::Workloads;
+
+fn main() -> anyhow::Result<()> {
+    let args = bench_args();
+    let quick = args.bool_or("quick", false);
+    let (_, rt) = load_model("artifacts", "tiny")?;
+    let workloads = Workloads::load("artifacts")?;
+    let prompts = workloads.take("chat", if quick { 2 } else { 4 })?;
+    let max_tokens = if quick { 32 } else { 64 };
+
+    let ws: &[usize] = if quick { &[1, 4, 15] } else { &[1, 2, 4, 8, 15, 30] };
+    let ns: &[usize] = if quick { &[3] } else { &[2, 3, 5] };
+
+    println!("Fig. 4(a): step compression S vs (W, N), G = W — chat suite (MT-Bench analogue)\n");
+    let mut table = Table::new(&["N", "W=G", "T_in", "S", "ms/step", "pool-hit%"]);
+    let mut points: Vec<(usize, usize, f64)> = Vec::new(); // (gamma, b, S)
+    for &n in ns {
+        for &w in ws {
+            let t_in = 2 * w * (n - 1);
+            if t_in > 256 {
+                continue; // generic executable cap
+            }
+            let mut cfg = LookaheadConfig::new(w, n, w);
+            cfg.force_generic = true; // uniform executable across the sweep
+            let mut engine = Lookahead::new(cfg);
+            let run = run_suite(&rt, &mut engine, &prompts, max_tokens, 0.0)?;
+            table.row(vec![
+                n.to_string(),
+                w.to_string(),
+                t_in.to_string(),
+                format!("{:.3}", run.s()),
+                format!("{:.1}", run.ms_per_step()),
+                format!("{:.0}", 100.0 * run.pool_hits as f64
+                        / (run.pool_hits + run.pool_misses).max(1) as f64),
+            ]);
+            points.push((n - 1, w, run.s()));
+        }
+    }
+    table.print();
+
+    // ---- Fig. 4(b): fit Eq. 7 and print the analytic curve ----------------
+    let (alpha, f) = analytic::fit_alpha_f(&points);
+    println!("\nFig. 4(b): Eq. 7 fit to the measurements: alpha = {alpha:.3}, \
+              f = {f:.3}  (paper: alpha = 0.425, f = 3.106)\n");
+    let mut t2 = Table::new(&["gamma=N-1", "b=W=G", "S_measured", "S_analytic"]);
+    for &(g, b, s) in &points {
+        t2.row(vec![
+            g.to_string(),
+            b.to_string(),
+            format!("{s:.3}"),
+            format!("{:.3}", analytic::compression(alpha, g, b, f)),
+        ]);
+    }
+    t2.print();
+
+    // linear-in-log(b) check: print increments per doubling at the largest N
+    let n_big = *ns.last().unwrap();
+    let series: Vec<(usize, f64)> = points
+        .iter()
+        .filter(|&&(g, _, _)| g == n_big - 1)
+        .map(|&(_, b, s)| (b, s))
+        .collect();
+    println!("\nscaling-law check (N={n_big}): S per doubling of W=G:");
+    for win in series.windows(2) {
+        println!("  W {:>2} -> {:>2}: dS = {:+.3}", win[0].0, win[1].0,
+                 win[1].1 - win[0].1);
+    }
+
+    save_result("fig4_scaling", Json::obj(vec![
+        ("alpha", Json::num(alpha)),
+        ("f", Json::num(f)),
+        ("measured", Json::Arr(points.iter().map(|&(g, b, s)| {
+            Json::obj(vec![("gamma", Json::num(g as f64)),
+                           ("b", Json::num(b as f64)),
+                           ("s", Json::num(s))])
+        }).collect())),
+        ("table", table.to_json()),
+    ]));
+    Ok(())
+}

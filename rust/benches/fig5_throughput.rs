@@ -1,0 +1,80 @@
+//! Fig. 5 — end-to-end throughput of LOOKAHEAD DECODING vs autoregressive
+//! greedy across datasets and model sizes (paper: LLaMA-2/CodeLlama
+//! 7B/13B/34B on MT-Bench, HumanEval, GSM8K, MBPP — setting S1).
+//!
+//! Substitutions (DESIGN.md §2): synthetic suites stand in for the datasets;
+//! {tiny, small} stand in for the size axis; the A100 projection column
+//! translates measured S to the paper's memory-bound regime (this CPU is
+//! compute-bound, so raw CPU tok/s understates lookahead).
+//!
+//! Expected shape: S(code/class-code) > S(math/summarize) > S(chat);
+//! the smaller model compresses more than the bigger one.
+//!
+//!   cargo bench --bench fig5_throughput [-- --quick]
+
+use lookahead::analytic::A100;
+use lookahead::bench::driver::run_suite;
+use lookahead::bench::{bench_args, save_result, Table};
+use lookahead::engine::autoregressive::AutoRegressive;
+use lookahead::engine::lookahead::Lookahead;
+use lookahead::runtime::{cpu_client, Manifest, ModelRuntime};
+use lookahead::util::json::Json;
+use lookahead::workload::{paper_dataset, Workloads, SUITE_NAMES};
+
+fn main() -> anyhow::Result<()> {
+    let args = bench_args();
+    let quick = args.bool_or("quick", false);
+    let manifest = Manifest::load("artifacts")?;
+    let client = cpu_client()?;
+    let workloads = Workloads::load("artifacts")?;
+    let n_prompts = if quick { 2 } else { 4 };
+    let max_tokens = if quick { 32 } else { 64 };
+
+    // (model, lookahead config from Tab. 4; the "7B" row for tiny, "13B" for small)
+    let models: Vec<(&str, (usize, usize, usize))> = if quick {
+        vec![("tiny", (15, 5, 15))]
+    } else {
+        vec![("tiny", (15, 5, 15)), ("small", (10, 5, 10))]
+    };
+
+    println!("Fig. 5: lookahead vs autoregressive across suites and model sizes\n");
+    let mut table = Table::new(&["model", "suite(=paper)", "S", "AR tok/s",
+                                 "LA tok/s", "cpu_x", "A100_proj_x"]);
+    let mut rows = Vec::new();
+    for (model, wng) in &models {
+        let rt = ModelRuntime::load(&client, &manifest, model)?;
+        let t_in = (wng.0 + wng.2) * (wng.1 - 1);
+        // paper-scale params for the projection: tiny ~ 7B, small ~ 13B
+        let paper_params = if *model == "tiny" { 7e9 } else { 13e9 };
+        for suite in SUITE_NAMES {
+            let prompts = workloads.take(suite, n_prompts)?;
+            let ar = run_suite(&rt, &mut AutoRegressive::new(), &prompts,
+                               max_tokens, 0.0)?;
+            let mut la_engine = Lookahead::with_wng(wng.0, wng.1, wng.2);
+            let la = run_suite(&rt, &mut la_engine, &prompts, max_tokens, 0.0)?;
+            let proj = la.projected(&A100, paper_params, t_in);
+            table.row(vec![
+                model.to_string(),
+                format!("{suite}({})", paper_dataset(suite)),
+                format!("{:.2}", la.s()),
+                format!("{:.1}", ar.tok_per_sec()),
+                format!("{:.1}", la.tok_per_sec()),
+                format!("{:.2}", la.tok_per_sec() / ar.tok_per_sec()),
+                format!("{:.2}", proj),
+            ]);
+            rows.push(Json::obj(vec![
+                ("model", Json::str(*model)),
+                ("suite", Json::str(suite)),
+                ("s", Json::num(la.s())),
+                ("ar_tps", Json::num(ar.tok_per_sec())),
+                ("la_tps", Json::num(la.tok_per_sec())),
+                ("a100_projected_speedup", Json::num(proj)),
+            ]));
+        }
+    }
+    table.print();
+    println!("\npaper expectation: 1.5x-2.3x on A100; code suites highest; \
+              smaller models compress more.");
+    save_result("fig5_throughput", Json::Arr(rows));
+    Ok(())
+}

@@ -1,0 +1,170 @@
+//! Fig. 6/7 — Lookahead Parallelism strong scaling on 1-8 devices, plus the
+//! FlashAttention-analogue ablation (specialized/hardcoded-mask executable
+//! vs the generic mask-as-input one) and the TP/PP comparison (paper:
+//! DeepSpeed TP and Accelerate PP slow single-batch decoding to 0.75-0.82x).
+//!
+//! Per DESIGN.md §2, LP is a measurement-driven simulation on this 1-core
+//! box: real shard-sized steps are executed to get per-device compute time;
+//! TP/PP use the analytic communication model at paper (7B, A100) scale.
+//!
+//!   cargo bench --bench fig6_7_lp [-- --quick]
+
+use lookahead::analytic::{parallel_step_latency, step_latency, Parallelism, A100};
+use lookahead::bench::driver::run_suite;
+use lookahead::bench::{bench_args, save_result, Table};
+use lookahead::engine::lookahead::{Lookahead, LookaheadConfig};
+use lookahead::layout::Wng;
+use lookahead::runtime::load_model;
+use lookahead::tokenizer::ByteTokenizer;
+use lookahead::util::json::Json;
+use lookahead::workload::Workloads;
+
+fn main() -> anyhow::Result<()> {
+    let args = bench_args();
+    let quick = args.bool_or("quick", false);
+    let (_, rt) = load_model("artifacts", "tiny")?;
+    let workloads = Workloads::load("artifacts")?;
+    let tok = ByteTokenizer::new();
+    let wng = Wng::new(15, 5, 15);
+
+    // -- measured S for the config (LP does not change S, paper App. E) ----
+    let prompts = workloads.take("class-code", if quick { 2 } else { 3 })?;
+    let mut engine = Lookahead::with_wng(wng.w, wng.n, wng.g);
+    let full = run_suite(&rt, &mut engine, &prompts, if quick { 32 } else { 64 }, 0.0)?;
+    let s = full.s();
+    println!("measured S = {s:.2} for {:?} on class-code (ClassEval analogue)\n", wng);
+
+    // -- LP device sweep, mode (i): fixed config sharded across K devices --
+    // Per-device t_in shrinks, so the per-step latency falls toward the
+    // kernel-launch floor (measured with real shard-sized steps).
+    let (_, cache) = rt.prefill(&tok.encode_with_bos("def warm():\n    return 1"))?;
+    println!("Fig. 6/7 LP mode (i): fixed (15,5,15) sharded — measured shard steps");
+    let mut table = Table::new(&["devices", "max shard T_in", "shard ms (measured)",
+                                 "comm ms", "step ms", "tok/s", "scaling vs 1dev"]);
+    let mut base_tps = 0.0;
+    let mut rows = Vec::new();
+    for devices in [1usize, 2, 4, 8] {
+        let rep = lookahead::lp::simulate(&rt, &cache, wng, devices, s,
+                                          if quick { 2 } else { 5 })?;
+        if base_tps == 0.0 {
+            base_tps = rep.tokens_per_sec;
+        }
+        let max_t = rep.shards.iter().map(|sh| sh.t_in).max().unwrap_or(0);
+        let max_ms = rep.shard_ms.iter().cloned().fold(0.0, f64::max);
+        table.row(vec![
+            devices.to_string(),
+            max_t.to_string(),
+            format!("{max_ms:.2}"),
+            format!("{:.4}", rep.comm_ms),
+            format!("{:.2}", rep.step_ms),
+            format!("{:.1}", rep.tokens_per_sec),
+            format!("{:.2}x", rep.tokens_per_sec / base_tps),
+        ]);
+        rows.push(Json::obj(vec![
+            ("devices", Json::num(devices as f64)),
+            ("step_ms", Json::num(rep.step_ms)),
+            ("tokens_per_sec", Json::num(rep.tokens_per_sec)),
+        ]));
+    }
+    table.print();
+
+    // -- LP mode (ii): scale (W, G) with the device count (paper §3.4) -----
+    // Each device keeps the single-GPU per-step budget (t_in = 120); the
+    // effective window grows K-fold, so S grows along the Eq. 7 curve fitted
+    // to *measured* points, at ~constant per-step latency. This is how the
+    // paper reaches 4x on ClassEval with 8 GPUs.
+    println!("\nFig. 6/7 LP mode (ii): scale W=G with devices (per-device budget \
+              constant)");
+    let fit_ws: &[usize] = if quick { &[4, 15] } else { &[2, 4, 8, 15] };
+    let mut pts = Vec::new();
+    for &w in fit_ws {
+        let mut cfg = LookaheadConfig::new(w, wng.n, w);
+        cfg.force_generic = true;
+        let run = run_suite(&rt, &mut Lookahead::new(cfg), &prompts,
+                            if quick { 32 } else { 48 }, 0.0)?;
+        pts.push((wng.n - 1, w, run.s()));
+    }
+    let (alpha, f) = lookahead::analytic::fit_alpha_f(&pts);
+    let rep1 = lookahead::lp::simulate(&rt, &cache, wng, 1, 1.0,
+                                       if quick { 2 } else { 5 })?;
+    let mut t1b = Table::new(&["devices", "effective W=G", "S (Eq.7, fitted)",
+                               "step ms", "tok/s", "scaling vs 1dev"]);
+    let mut base2 = 0.0;
+    for devices in [1usize, 2, 4, 8] {
+        let eff_b = wng.w * devices;
+        let s_eff = if devices == 1 {
+            s // measured
+        } else {
+            // anchor the fitted curve at the measured single-device S
+            s * lookahead::analytic::compression(alpha, wng.n - 1, eff_b, f)
+                / lookahead::analytic::compression(alpha, wng.n - 1, wng.w, f)
+        };
+        let step_ms = rep1.step_ms + 0.008 * (devices > 1) as u8 as f64;
+        let tps = s_eff * 1e3 / step_ms;
+        if base2 == 0.0 {
+            base2 = tps;
+        }
+        t1b.row(vec![
+            devices.to_string(),
+            eff_b.to_string(),
+            format!("{s_eff:.2}"),
+            format!("{step_ms:.2}"),
+            format!("{tps:.1}"),
+            format!("{:.2}x", tps / base2),
+        ]);
+    }
+    t1b.print();
+    println!("(alpha = {alpha:.3}, f = {f:.3} fitted to measured S at W = {fit_ws:?})");
+
+    // -- TP/PP comparison at paper scale (analytic, Fig. 6/7 baselines) ----
+    println!("\nTP/PP baselines at paper scale (7B fp16, A100, t_in = 1 AR decode):");
+    let mut t2 = Table::new(&["scheme", "devices", "step ms", "vs 1-GPU AR"]);
+    let base = step_latency(&A100, 7e9, 1) * 1e3;
+    t2.row(vec!["1 GPU AR".into(), "1".into(), format!("{base:.2}"), "1.00x".into()]);
+    for devices in [2usize, 4, 8] {
+        for (name, p) in [("TP (DeepSpeed)", Parallelism::TP),
+                          ("PP (Accelerate)", Parallelism::PP)] {
+            let ms = parallel_step_latency(p, &A100, devices, 7e9, 32, 4096, 1) * 1e3;
+            t2.row(vec![
+                name.into(),
+                devices.to_string(),
+                format!("{ms:.2}"),
+                format!("{:.2}x", base / ms),
+            ]);
+        }
+        let lp_ms =
+            parallel_step_latency(Parallelism::LP, &A100, devices, 7e9, 32, 4096,
+                                  wng.t_in()) * 1e3;
+        t2.row(vec![
+            "LP (ours)".into(),
+            devices.to_string(),
+            format!("{lp_ms:.2}"),
+            format!("{:.2}x", s * base / lp_ms),
+        ]);
+    }
+    t2.print();
+    println!("\npaper expectation: TP/PP 0.75-0.82x at batch 1; LP scales up \
+              (up to 4x on ClassEval with 8 GPUs).");
+
+    // -- FlashAttention-analogue ablation -----------------------------------
+    println!("\nFlashAttention-analogue ablation (hardcoded-mask specialized vs \
+              generic mask-as-input executable):");
+    let mut t3 = Table::new(&["executable", "S", "ms/step", "note"]);
+    for (label, force_generic, note) in [
+        ("specialized (hardcoded mask)", false, "paper's FA-integrated path"),
+        ("generic (mask as input)", true, "paper's 'naive PyTorch' analogue"),
+    ] {
+        let mut cfg = LookaheadConfig::new(wng.w, wng.n, wng.g);
+        cfg.force_generic = force_generic;
+        let mut e = Lookahead::new(cfg);
+        let run = run_suite(&rt, &mut e, &prompts, if quick { 32 } else { 64 }, 0.0)?;
+        t3.row(vec![label.into(), format!("{:.2}", run.s()),
+                    format!("{:.1}", run.ms_per_step()), note.into()]);
+    }
+    t3.print();
+    println!("(paper: FlashAttention integration gives ~20% end-to-end; here the \
+              specialized path saves the T_pad overhead + mask upload)");
+
+    save_result("fig6_7_lp", Json::Arr(rows));
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! Fig. 8 — compression S and speedup vs the device's surplus-FLOPs budget
+//! (paper: RTX 3090 vs A100, N = 5, FlashAttention on).
+//!
+//! S is device-independent (the blue/orange S curves overlap in the paper);
+//! the *speedup* depends on how much free compute the device has. We measure
+//! S on a W-sweep (N = 5, G = W) and project the speedup on both devices
+//! with the DESIGN.md §6 latency model.
+//!
+//! Expected shape: identical S on both devices; A100 speedup keeps rising
+//! with W while RTX3090 flattens/declines earlier (FLOPs cap bites).
+//!
+//!   cargo bench --bench fig8_flops [-- --quick]
+
+use lookahead::analytic::{A100, RTX3090};
+use lookahead::bench::driver::run_suite;
+use lookahead::bench::{bench_args, save_result, Table};
+use lookahead::engine::lookahead::{Lookahead, LookaheadConfig};
+use lookahead::runtime::load_model;
+use lookahead::util::json::Json;
+use lookahead::workload::Workloads;
+
+fn main() -> anyhow::Result<()> {
+    let args = bench_args();
+    let quick = args.bool_or("quick", false);
+    let (_, rt) = load_model("artifacts", "tiny")?;
+    let workloads = Workloads::load("artifacts")?;
+    let prompts = workloads.take("chat", if quick { 2 } else { 4 })?;
+    let max_tokens = if quick { 32 } else { 64 };
+    let n = 5usize;
+    let ws: &[usize] = if quick { &[4, 15] } else { &[1, 2, 4, 8, 15, 30] };
+
+    println!("Fig. 8: S (device-independent) and projected speedups, N = {n}, G = W, \
+              chat suite, 7B-scale projection\n");
+    let mut table = Table::new(&["W=G", "T_in", "S (measured)", "A100 speedup",
+                                 "RTX3090 speedup", "cpu tok/s"]);
+    let mut rows = Vec::new();
+    for &w in ws {
+        let t_in = 2 * w * (n - 1);
+        if t_in > 256 {
+            continue;
+        }
+        let mut cfg = LookaheadConfig::new(w, n, w);
+        cfg.force_generic = true;
+        let mut engine = Lookahead::new(cfg);
+        let run = run_suite(&rt, &mut engine, &prompts, max_tokens, 0.0)?;
+        let a100 = run.projected(&A100, 7e9, t_in);
+        let r3090 = run.projected(&RTX3090, 7e9, t_in);
+        table.row(vec![
+            w.to_string(),
+            t_in.to_string(),
+            format!("{:.3}", run.s()),
+            format!("{a100:.2}x"),
+            format!("{r3090:.2}x"),
+            format!("{:.1}", run.tok_per_sec()),
+        ]);
+        rows.push(Json::obj(vec![
+            ("w", Json::num(w as f64)),
+            ("s", Json::num(run.s())),
+            ("a100", Json::num(a100)),
+            ("rtx3090", Json::num(r3090)),
+        ]));
+    }
+    table.print();
+    println!("\npaper expectation: >50% speedup easily on A100, ~30% on RTX3090; \
+              the 3090 curve bends down first as the per-step FLOPs exceed its cap.");
+    save_result("fig8_flops", Json::Arr(rows));
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Tab. 3 — ablation of the lookahead and verification branches on the chat
+//! suite (paper: LLaMA-2-7B-Chat on MT-Bench, A100, FlashAttention on).
+//!
+//! Rows ①-⑨ exactly as the paper: autoregressive, prompt-lookup, minimal
+//! lookahead branch (W=1) with various (N,G), lopsided branches, balanced
+//! branches, each with/without prompt-as-reference.
+//!
+//! Expected shape: balanced (⑧⑨) > lopsided (⑦) > W=1 configs (③-⑥) >
+//! prompt-lookup (②) > AR (①); prompt-as-ref helps everywhere.
+//!
+//!   cargo bench --bench tab3_ablation [-- --quick]
+
+use lookahead::analytic::A100;
+use lookahead::bench::driver::run_suite;
+use lookahead::bench::{bench_args, save_result, Table};
+use lookahead::engine::autoregressive::AutoRegressive;
+use lookahead::engine::lookahead::{Lookahead, LookaheadConfig};
+use lookahead::engine::prompt_lookup::PromptLookup;
+use lookahead::runtime::load_model;
+use lookahead::util::json::Json;
+use lookahead::workload::Workloads;
+
+fn main() -> anyhow::Result<()> {
+    let args = bench_args();
+    let quick = args.bool_or("quick", false);
+    let (_, rt) = load_model("artifacts", "tiny")?;
+    let workloads = Workloads::load("artifacts")?;
+    let prompts = workloads.take("chat", if quick { 2 } else { 4 })?;
+    let max_tokens = if quick { 32 } else { 64 };
+
+    // (tag, (N, W, G) in the paper's order, prompt_as_ref) — None = baseline
+    let configs: Vec<(&str, Option<(usize, usize, usize)>, bool, &str)> = vec![
+        ("1", None, false, "autoregressive"),
+        ("2", None, true, "prompt lookup"),
+        ("3", Some((10, 1, 3)), true, "(N,W,G)=(10,1,3)"),
+        ("4", Some((5, 1, 10)), true, "(5,1,10)"),
+        ("5", Some((5, 1, 30)), false, "(5,1,30) no-pref"),
+        ("6", Some((5, 1, 30)), true, "(5,1,30)"),
+        ("7", Some((5, 30, 1)), false, "(5,30,1) no-pref"),
+        ("8", Some((5, 15, 15)), false, "(5,15,15) no-pref"),
+        ("9", Some((5, 15, 15)), true, "(5,15,15)"),
+    ];
+
+    println!("Tab. 3: branch ablation on the chat suite (MT-Bench analogue)\n");
+    let mut table = Table::new(&["tag", "setting", "prompt-as-ref", "S",
+                                 "cpu tok/s", "A100_proj_x"]);
+    let mut rows = Vec::new();
+    let mut ar_ref = 0.0;
+    for (tag, cfg, pref, label) in configs {
+        let (run, t_in) = match cfg {
+            None if tag == "1" => {
+                (run_suite(&rt, &mut AutoRegressive::new(), &prompts, max_tokens,
+                           0.0)?, 1)
+            }
+            None => {
+                (run_suite(&rt, &mut PromptLookup::new(8, 1), &prompts, max_tokens,
+                           0.0)?, 8)
+            }
+            Some((n, w, g)) => {
+                let mut c = LookaheadConfig::new(w, n, g);
+                c.prompt_as_ref = pref;
+                c.force_generic = true; // uniform executable across rows
+                let t = (w + g) * (n - 1);
+                (run_suite(&rt, &mut Lookahead::new(c), &prompts, max_tokens, 0.0)?, t)
+            }
+        };
+        if tag == "1" {
+            ar_ref = run.tok_per_sec();
+        }
+        let proj = if tag == "1" { 1.0 } else { run.projected(&A100, 7e9, t_in) };
+        table.row(vec![
+            tag.into(),
+            label.into(),
+            if pref { "yes".into() } else { "no".into() },
+            format!("{:.2}", run.s()),
+            format!("{:.1}", run.tok_per_sec()),
+            format!("{proj:.2}x"),
+        ]);
+        rows.push(Json::obj(vec![
+            ("tag", Json::str(tag)),
+            ("setting", Json::str(label)),
+            ("s", Json::num(run.s())),
+            ("a100_proj", Json::num(proj)),
+        ]));
+        let _ = ar_ref;
+    }
+    table.print();
+    println!("\npaper expectation: ⑨ (balanced + pref) best; ⑦ (G=1) below \
+              balanced; W=1 rows give decent-but-lower S; ② beats ③ at equal \
+              budget.");
+    save_result("tab3_ablation", Json::Arr(rows));
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Tab. 4 — "good configurations" of (W, N) per model size with G = W
+//! (paper: A100, single-batch serving — (15,5) for 7B, (10,5) for 13B,
+//! (7,5) for 34B).
+//!
+//! For each model we sweep a (W, N) grid, score by A100-projected
+//! throughput (S over the memory-bound per-step cost of T_in), and report
+//! the best configuration.
+//!
+//! Expected shape: optimum W shrinks as the model grows (bigger models hit
+//! the FLOPs cap earlier — paper §5.5).
+//!
+//!   cargo bench --bench tab4_config [-- --quick]
+
+use lookahead::analytic::A100;
+use lookahead::bench::driver::run_suite;
+use lookahead::bench::{bench_args, save_result, Table};
+use lookahead::engine::lookahead::{Lookahead, LookaheadConfig};
+use lookahead::runtime::{cpu_client, Manifest, ModelRuntime};
+use lookahead::util::json::Json;
+use lookahead::workload::Workloads;
+
+fn main() -> anyhow::Result<()> {
+    let args = bench_args();
+    let quick = args.bool_or("quick", false);
+    let manifest = Manifest::load("artifacts")?;
+    let client = cpu_client()?;
+    let workloads = Workloads::load("artifacts")?;
+    let prompts = workloads.take("chat", if quick { 2 } else { 3 })?;
+    let max_tokens = if quick { 32 } else { 48 };
+
+    let ws: &[usize] = if quick { &[7, 15] } else { &[4, 7, 10, 15, 22, 30] };
+    let ns: &[usize] = if quick { &[5] } else { &[3, 5] };
+    // model-size axis: tiny plays the 7B row, small the 13B row.
+    let models: Vec<(&str, f64)> = if quick || !manifest.models.contains_key("small") {
+        vec![("tiny", 7e9)]
+    } else {
+        vec![("tiny", 7e9), ("small", 13e9)]
+    };
+
+    println!("Tab. 4: best (W, N) per model size, G = W, scored by A100-projected \
+              throughput\n");
+    let mut table = Table::new(&["model(paper)", "W", "N", "T_in", "S",
+                                 "A100_proj_x", "best?"]);
+    let mut best_rows = Vec::new();
+    for (model, paper_params) in models {
+        let rt = ModelRuntime::load(&client, &manifest, model)?;
+        let mut best: Option<(usize, usize, f64, f64)> = None; // (w, n, proj, s)
+        let mut rows = Vec::new();
+        for &n in ns {
+            for &w in ws {
+                let t_in = 2 * w * (n - 1);
+                if t_in > 256 {
+                    continue;
+                }
+                let mut cfg = LookaheadConfig::new(w, n, w);
+                cfg.force_generic = true;
+                let run = run_suite(&rt, &mut Lookahead::new(cfg), &prompts,
+                                    max_tokens, 0.0)?;
+                let proj = run.projected(&A100, paper_params, t_in);
+                rows.push((w, n, t_in, run.s(), proj));
+                if best.map_or(true, |(_, _, bp, _)| proj > bp) {
+                    best = Some((w, n, proj, run.s()));
+                }
+            }
+        }
+        let (bw, bn, _, _) = best.unwrap();
+        for (w, n, t_in, s, proj) in rows {
+            let label = if model == "tiny" { "tiny(7B)" } else { "small(13B)" };
+            table.row(vec![
+                label.into(),
+                w.to_string(),
+                n.to_string(),
+                t_in.to_string(),
+                format!("{s:.2}"),
+                format!("{proj:.2}x"),
+                if (w, n) == (bw, bn) { "<-- best".into() } else { "".into() },
+            ]);
+        }
+        best_rows.push(Json::obj(vec![
+            ("model", Json::str(model)),
+            ("best_w", Json::num(bw as f64)),
+            ("best_n", Json::num(bn as f64)),
+        ]));
+    }
+    table.print();
+    println!("\npaper: (W,N) = (15,5) for 7B and (10,5) for 13B; the best W \
+              should not grow with model size.");
+    save_result("tab4_config", Json::Arr(best_rows));
+    Ok(())
+}

@@ -1,0 +1,121 @@
+//! Shared bench driver: run an engine over a prompt suite and aggregate the
+//! paper's measurables (S, tok/s, per-step latency), plus the A100/3090
+//! projections from DESIGN.md §6.
+
+use anyhow::Result;
+
+use crate::analytic::{projected_speedup, Device};
+use crate::engine::{Decoder, GenParams, SamplingParams};
+use crate::metrics::DecodeStats;
+use crate::runtime::ModelRuntime;
+use crate::tokenizer::ByteTokenizer;
+
+#[derive(Debug, Clone, Default)]
+pub struct SuiteRun {
+    pub prompts: usize,
+    pub tokens: usize,
+    pub steps: usize,
+    pub wall_s: f64,
+    pub decode_wall_s: f64,
+    pub pool_hits: usize,
+    pub pool_misses: usize,
+}
+
+impl SuiteRun {
+    /// Step compression ratio S (Eq. 6).
+    pub fn s(&self) -> f64 {
+        if self.steps == 0 {
+            1.0
+        } else {
+            self.tokens as f64 / self.steps as f64
+        }
+    }
+
+    pub fn tok_per_sec(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.tokens as f64 / self.wall_s
+        }
+    }
+
+    pub fn ms_per_step(&self) -> f64 {
+        if self.steps == 0 {
+            0.0
+        } else {
+            self.decode_wall_s * 1e3 / self.steps as f64
+        }
+    }
+
+    /// Paper-device projection: speedup vs AR on `dev` for a `params`-sized
+    /// model with per-step input `t_in` (memory-bound latency model).
+    pub fn projected(&self, dev: &Device, params: f64, t_in: usize) -> f64 {
+        projected_speedup(dev, params, t_in.max(1), self.s())
+    }
+
+    fn absorb(&mut self, st: &DecodeStats) {
+        self.prompts += 1;
+        self.tokens += st.generated_tokens;
+        self.steps += st.decode_steps;
+        self.wall_s += st.wall.as_secs_f64();
+        self.decode_wall_s += (st.wall - st.prefill_wall).as_secs_f64();
+        self.pool_hits += st.pool_hits;
+        self.pool_misses += st.pool_misses;
+    }
+}
+
+/// Run `engine` over `prompts`; greedy unless `temperature > 0`.
+pub fn run_suite(rt: &ModelRuntime, engine: &mut dyn Decoder, prompts: &[String],
+                 max_tokens: usize, temperature: f64) -> Result<SuiteRun> {
+    run_suite_outputs(rt, engine, prompts, max_tokens, temperature).map(|(r, _)| r)
+}
+
+/// Like `run_suite` but also returns the generated texts (Tab. 2 ROUGE).
+pub fn run_suite_outputs(rt: &ModelRuntime, engine: &mut dyn Decoder,
+                         prompts: &[String], max_tokens: usize, temperature: f64)
+                         -> Result<(SuiteRun, Vec<String>)> {
+    let tok = ByteTokenizer::new();
+    // warmup: pay one-time executable compilation outside the timed region
+    if let Some(p0) = prompts.first() {
+        let ids = tok.encode_with_bos(p0);
+        let warm = GenParams { max_new_tokens: 2, ..GenParams::default() };
+        let _ = engine.generate(rt, &ids, &warm);
+    }
+    let mut agg = SuiteRun::default();
+    let mut texts = Vec::with_capacity(prompts.len());
+    for (i, p) in prompts.iter().enumerate() {
+        let ids = tok.encode_with_bos(p);
+        let params = GenParams {
+            max_new_tokens: max_tokens,
+            sampling: SamplingParams {
+                temperature,
+                ..SamplingParams::default()
+            },
+            stop_at_eos: true,
+            seed: i as u64,
+        };
+        let out = engine.generate(rt, &ids, &params)?;
+        agg.absorb(&out.stats);
+        texts.push(out.text);
+    }
+    Ok((agg, texts))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_run_aggregates() {
+        let mut r = SuiteRun::default();
+        let mut st = DecodeStats::default();
+        st.record_accept(2);
+        st.record_accept(2);
+        st.wall = std::time::Duration::from_secs(1);
+        r.absorb(&st);
+        assert_eq!(r.tokens, 4);
+        assert_eq!(r.steps, 2);
+        assert!((r.s() - 2.0).abs() < 1e-12);
+        assert!((r.tok_per_sec() - 4.0).abs() < 1e-9);
+    }
+}

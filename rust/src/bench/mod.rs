@@ -1,0 +1,165 @@
+//! Bench harness substrate (no `criterion` offline): warmup + repeated
+//! timing, aligned-table output shared by every `rust/benches/*` target,
+//! and JSON result dumps for EXPERIMENTS.md provenance.
+
+pub mod driver;
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Time one closure: `warmup` unmeasured runs, then `reps` measured.
+pub fn time_it<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Timing::from_samples(samples)
+}
+
+#[derive(Debug, Clone)]
+pub struct Timing {
+    pub samples: Vec<f64>,
+}
+
+impl Timing {
+    pub fn from_samples(mut samples: Vec<f64>) -> Timing {
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Timing { samples }
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len().max(1) as f64
+    }
+
+    pub fn median(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples[self.samples.len() / 2]
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.first().copied().unwrap_or(0.0)
+    }
+}
+
+/// Fixed-width table printer for bench output (paper-style rows).
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        let total: usize = widths.iter().sum::<usize>() + 2 * widths.len();
+        println!("{}", "-".repeat(total));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+
+    /// Rows as JSON (array of objects keyed by header) for results files.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.rows
+                .iter()
+                .map(|row| {
+                    Json::Obj(
+                        self.headers
+                            .iter()
+                            .cloned()
+                            .zip(row.iter().map(|c| Json::Str(c.clone())))
+                            .collect(),
+                    )
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Append a bench result blob to `bench_results.json` in the repo root
+/// (best-effort provenance for EXPERIMENTS.md).
+pub fn save_result(bench: &str, payload: Json) {
+    let path = "bench_results.json";
+    let mut root = std::fs::read_to_string(path)
+        .ok()
+        .and_then(|t| Json::parse(&t).ok())
+        .unwrap_or_else(|| Json::Obj(Default::default()));
+    if let Json::Obj(m) = &mut root {
+        m.insert(bench.to_string(), payload);
+    }
+    let _ = std::fs::write(path, root.dump());
+}
+
+/// Common CLI for bench binaries: honor `--quick` (fewer prompts) and
+/// cargo-bench's trailing `--bench` flag.
+pub fn bench_args() -> crate::util::cli::Args {
+    let raw: Vec<String> =
+        std::env::args().skip(1).filter(|a| a != "--bench").collect();
+    crate::util::cli::Args::parse("bench".into(), raw)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_stats() {
+        let t = Timing::from_samples(vec![3.0, 1.0, 2.0]);
+        assert_eq!(t.min(), 1.0);
+        assert_eq!(t.median(), 2.0);
+        assert!((t.mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_it_runs() {
+        let mut n = 0;
+        let t = time_it(2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(t.samples.len(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn table_arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+
+    #[test]
+    fn table_json_shape() {
+        let mut t = Table::new(&["k", "v"]);
+        t.row(vec!["x".into(), "1".into()]);
+        let j = t.to_json();
+        assert_eq!(j.as_arr().unwrap()[0].get("k").unwrap().as_str(), Some("x"));
+    }
+}

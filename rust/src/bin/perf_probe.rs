@@ -1,0 +1,38 @@
+//! Perf probe: per-step phase breakdown for the decode hot path
+//! (EXPERIMENTS.md §Perf). Times decode vs commit per executable.
+use lookahead::metrics::Timer;
+use lookahead::runtime::{cpu_client, Manifest, ModelRuntime};
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load("artifacts")?;
+    let client = cpu_client()?;
+    let rt = ModelRuntime::load(&client, &manifest, "tiny")?;
+    let prompt: Vec<u32> =
+        "def warm(a, b):\n    return a".bytes().map(|b| b as u32).collect();
+    let (_, cache) = rt.prefill(&prompt)?;
+    let reps = 50;
+
+    for exe in ["decode_lin_1", "decode_la_w5n3g5", "decode_la_w15n5g15",
+                "decode_la_w15n5g15_pallas"] {
+        let t_in = rt.mm.executables[exe].kind.t_in().unwrap();
+        let tokens: Vec<u32> = (0..t_in as u32).map(|i| 97 + i % 26).collect();
+        let step = rt.decode(exe, &cache, &tokens)?; // warmup (compiles)
+        let t = Timer::start();
+        for _ in 0..reps {
+            rt.decode(exe, &cache, &tokens)?;
+        }
+        let decode_ms = t.ms() / reps as f64;
+
+        // rolling commit on a fresh cache handle, length kept stable
+        let (_, mut roll) = rt.prefill(&prompt)?;
+        let t = Timer::start();
+        for _ in 0..reps {
+            roll = rt.commit(roll, &step.new_kv, t_in, &[0], 1)?;
+            roll.len -= 1;
+        }
+        let commit_ms = t.ms() / reps as f64;
+        println!("{exe:32} t_in={t_in:<4} decode={decode_ms:7.2}ms \
+                  commit={commit_ms:6.2}ms");
+    }
+    Ok(())
+}

@@ -1,0 +1,57 @@
+//! Autoregressive baseline: one token per step via `decode_lin_1`.
+//! This is the reference implementation every speedup is measured against
+//! and the byte-exactness oracle for the greedy engines.
+
+use anyhow::Result;
+
+use crate::engine::{capacity_left, finish, vocab_live, Decoder, GenOutput, GenParams};
+use crate::metrics::{DecodeStats, Timer};
+use crate::runtime::ModelRuntime;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Default, Clone)]
+pub struct AutoRegressive;
+
+impl AutoRegressive {
+    pub fn new() -> Self {
+        AutoRegressive
+    }
+}
+
+impl Decoder for AutoRegressive {
+    fn name(&self) -> String {
+        "autoregressive".into()
+    }
+
+    fn generate(&mut self, rt: &ModelRuntime, prompt: &[u32], params: &GenParams)
+                -> Result<GenOutput> {
+        let timer = Timer::start();
+        let mut stats = DecodeStats { prompt_tokens: prompt.len(), ..Default::default() };
+        let mut rng = Rng::new(params.seed);
+        let vocab = vocab_live(rt);
+
+        let pf = Timer::start();
+        let (_, mut cache) = rt.prefill(prompt)?;
+        stats.prefill_wall = pf.elapsed();
+
+        let mut cur = *prompt.last().unwrap();
+        let mut out = Vec::with_capacity(params.max_new_tokens);
+
+        while out.len() < params.max_new_tokens && capacity_left(rt, cache.len, 1) {
+            let step = rt.decode("decode_lin_1", &cache, &[cur])?;
+            let next = if params.sampling.is_greedy() {
+                step.logits.argmax(0, vocab)
+            } else {
+                params.sampling.sample(&step.logits.row(0)[..vocab], &mut rng)
+            };
+            cache = rt.commit(cache, &step.new_kv, 1, &[0], 1)?;
+            stats.record_accept(1);
+            out.push(next);
+            cur = next;
+            if params.stop_at_eos && next == crate::tokenizer::EOS_ID {
+                break;
+            }
+        }
+        Ok(finish(out, params, stats, timer.elapsed()))
+    }
+}

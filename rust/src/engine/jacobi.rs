@@ -1,0 +1,101 @@
+//! Jacobi decoding (paper §2, Santilli et al. 2023): fixed-point iteration
+//! over a window of future-token guesses, *without* the n-gram pool or the
+//! verification branch. Demonstrates the limitation Lookahead fixes: tokens
+//! land at wrong positions and get clobbered, so S stays near 1.
+
+use anyhow::{anyhow, Result};
+
+use crate::engine::{capacity_left, finish, vocab_live, Decoder, GenOutput, GenParams};
+use crate::metrics::{DecodeStats, Timer};
+use crate::runtime::ModelRuntime;
+use crate::tokenizer::EOS_ID;
+use crate::util::rng::Rng;
+
+pub struct Jacobi {
+    /// Window size = the linear-chain executable length (decode_lin_k).
+    pub window: usize,
+}
+
+impl Jacobi {
+    pub fn new(window: usize) -> Self {
+        Jacobi { window }
+    }
+}
+
+impl Decoder for Jacobi {
+    fn name(&self) -> String {
+        format!("jacobi[k{}]", self.window)
+    }
+
+    fn generate(&mut self, rt: &ModelRuntime, prompt: &[u32], params: &GenParams)
+                -> Result<GenOutput> {
+        let timer = Timer::start();
+        let k = self.window;
+        rt.mm.decode_lin_exe(k).map_err(|e| anyhow!("{e}"))?;
+        let exe = format!("decode_lin_{k}");
+        let vocab = vocab_live(rt);
+        let mut rng = Rng::new(params.seed ^ 0x1AC0B1);
+        let mut stats = DecodeStats { prompt_tokens: prompt.len(), ..Default::default() };
+
+        let pf = Timer::start();
+        let (_, mut cache) = rt.prefill(prompt)?;
+        stats.prefill_wall = pf.elapsed();
+
+        let mut cur = *prompt.last().unwrap();
+        // guesses y_1..y_{k-1} for the next positions (random init)
+        let mut guesses: Vec<u32> =
+            (0..k - 1).map(|_| rng.below(256) as u32).collect();
+        let mut out: Vec<u32> = Vec::new();
+        let mut tokens = vec![0u32; k];
+
+        while out.len() < params.max_new_tokens && capacity_left(rt, cache.len, k) {
+            tokens[0] = cur;
+            tokens[1..].copy_from_slice(&guesses);
+            let step = rt.decode(&exe, &cache, &tokens)?;
+
+            // Jacobi update: output i is the new value for position i+1.
+            let new_vals: Vec<u32> =
+                (0..k).map(|i| step.logits.argmax(i, vocab)).collect();
+
+            // Fixed-point acceptance: y_{i+1} is final iff the input guess at
+            // position i+1 equals the model output given positions <= i
+            // (all of which are final).
+            let mut accepted: Vec<u32> = vec![new_vals[0]];
+            for i in 0..k - 1 {
+                if guesses[i] == new_vals[i] {
+                    // the guess was already the model's output -> position
+                    // i+2's output new_vals[i+1] is also computed from a
+                    // fully-final prefix
+                    accepted.push(new_vals[i + 1]);
+                } else {
+                    break;
+                }
+            }
+            let a = accepted.len().min(rt.commit_slots);
+            accepted.truncate(a);
+
+            // Commit rows: cur (idx 0) + the matched guesses (idx 1..a-1).
+            let src: Vec<i32> = (0..a as i32).collect();
+            cache = rt.commit(cache, &step.new_kv, k, &src, a)?;
+            stats.record_accept(a);
+
+            let hit_eos = params.stop_at_eos && accepted.contains(&EOS_ID);
+            out.extend_from_slice(&accepted);
+            cur = *out.last().unwrap();
+
+            // Next window: shift the trajectory by a, refill tail from the
+            // model's own new values (better than random re-init).
+            let mut next: Vec<u32> = Vec::with_capacity(k - 1);
+            next.extend(new_vals.iter().copied().skip(a).take(k - 1));
+            while next.len() < k - 1 {
+                next.push(rng.below(256) as u32);
+            }
+            guesses = next;
+
+            if hit_eos {
+                break;
+            }
+        }
+        Ok(finish(out, params, stats, timer.elapsed()))
+    }
+}

@@ -1,0 +1,259 @@
+//! LOOKAHEAD DECODING (Algorithm 2) — the paper's contribution.
+//!
+//! Per step, one fused model call evaluates:
+//!   - the **lookahead branch**: a fixed 2D window (W columns x N-1
+//!     trajectory rows) advancing a modified Jacobi iteration; its outputs
+//!     yield W new n-grams per step for the pool;
+//!   - the **verification branch**: up to G pool candidates starting with
+//!     the current token, verified as disjoint n-grams (Algorithm 3 greedy /
+//!     Algorithm 4 sampling) — accepted tokens commit their KVs in place.
+//!
+//! The engine prefers a *specialized* executable (lookahead mask hardcoded at
+//! lowering time — the Pallas/FlashAttention path) and falls back to the
+//! *generic* mask-as-input executable for arbitrary (W,N,G) sweeps.
+
+use anyhow::{anyhow, Result};
+
+use crate::engine::{capacity_left, finish, vocab_live, verify, Decoder, GenOutput,
+                    GenParams};
+use crate::layout::Wng;
+use crate::metrics::{DecodeStats, Timer};
+use crate::ngram::NgramPool;
+use crate::runtime::{ModelRuntime, StepOut};
+use crate::tokenizer::EOS_ID;
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct LookaheadConfig {
+    pub wng: Wng,
+    /// preferred attention implementation of the specialized artifact
+    /// ("jnp" or "pallas"); ignored on the generic path.
+    pub attn: String,
+    /// seed the pool with prompt n-grams (Tab. 3 "prompt as ref").
+    pub prompt_as_ref: bool,
+    /// per-key LRU capacity of the n-gram pool.
+    pub pool_per_key: usize,
+    /// global pool capacity.
+    pub pool_total: usize,
+    /// force the generic executable even if a specialized one exists.
+    pub force_generic: bool,
+}
+
+impl LookaheadConfig {
+    pub fn new(w: usize, n: usize, g: usize) -> Self {
+        LookaheadConfig {
+            wng: Wng::new(w, n, g),
+            attn: "jnp".into(),
+            prompt_as_ref: true,
+            pool_per_key: (2 * g).max(8),
+            pool_total: 16_384,
+            force_generic: false,
+        }
+    }
+}
+
+enum Exe {
+    Specialized(String),
+    Generic { name: String, t_pad: usize, relpos: Vec<i32>, mask: Vec<u8> },
+}
+
+pub struct Lookahead {
+    pub cfg: LookaheadConfig,
+}
+
+impl Lookahead {
+    pub fn new(cfg: LookaheadConfig) -> Self {
+        Lookahead { cfg }
+    }
+
+    pub fn with_wng(w: usize, n: usize, g: usize) -> Self {
+        Self::new(LookaheadConfig::new(w, n, g))
+    }
+
+    fn resolve_exe(&self, rt: &ModelRuntime) -> Result<Exe> {
+        let Wng { w, n, g } = self.cfg.wng;
+        if !self.cfg.force_generic {
+            if let Some((name, _)) = rt.mm.find_decode_la(w, n, g, &self.cfg.attn) {
+                return Ok(Exe::Specialized(name.to_string()));
+            }
+        }
+        let t = self.cfg.wng.t_in();
+        let (name, t_pad) = rt.mm.find_decode_gen(t).ok_or_else(|| {
+            anyhow!("no specialized decode_la for {:?} and no generic executable \
+                     with t_pad >= {t}", self.cfg.wng)
+        })?;
+        let mut relpos: Vec<i32> = self.cfg.wng.relative_positions();
+        relpos.resize(t_pad, 0);
+        let mask = ModelRuntime::pad_mask(&self.cfg.wng.intra_mask(), t, t_pad);
+        Ok(Exe::Generic { name: name.to_string(), t_pad, relpos, mask })
+    }
+
+    fn run_step(&self, rt: &ModelRuntime, exe: &Exe, cache: &crate::runtime::Cache,
+                tokens: &[u32]) -> Result<StepOut> {
+        match exe {
+            Exe::Specialized(name) => rt.decode(name, cache, tokens),
+            Exe::Generic { name, relpos, mask, .. } => {
+                rt.decode_generic(name, cache, tokens, relpos, mask)
+            }
+        }
+    }
+}
+
+impl Decoder for Lookahead {
+    fn name(&self) -> String {
+        format!("lookahead[{}{}]", self.cfg.wng.tag(),
+                if self.cfg.prompt_as_ref { "+pref" } else { "" })
+    }
+
+    fn generate(&mut self, rt: &ModelRuntime, prompt: &[u32], params: &GenParams)
+                -> Result<GenOutput> {
+        let timer = Timer::start();
+        let Wng { w, n, g } = self.cfg.wng;
+        let t_in = self.cfg.wng.t_in();
+        
+        let vocab = vocab_live(rt);
+        let exe = self.resolve_exe(rt)?;
+        // commit executables are keyed by the executable's token count,
+        // which is t_pad on the generic path
+        let commit_t = match &exe {
+            Exe::Specialized(_) => t_in,
+            Exe::Generic { t_pad, .. } => *t_pad,
+        };
+        let mut rng = Rng::new(params.seed ^ 0x1007AE4D);
+
+        let mut stats = DecodeStats { prompt_tokens: prompt.len(), ..Default::default() };
+        let mut pool = NgramPool::new(n, self.cfg.pool_per_key, self.cfg.pool_total);
+        if self.cfg.prompt_as_ref {
+            pool.seed_from(prompt);
+        }
+
+        let pf = Timer::start();
+        let (_, mut cache) = rt.prefill(prompt)?;
+        stats.prefill_wall = pf.elapsed();
+
+        let mut cur = *prompt.last().unwrap();
+        let mut out: Vec<u32> = Vec::with_capacity(params.max_new_tokens);
+
+        // 2D window: rows[r][c] = trajectory guess at relative position r+c.
+        // Random initialization per Algorithm 2 line 4.
+        let mut rows: Vec<Vec<u32>> =
+            (0..n - 1).map(|_| (0..w).map(|_| rng.below(256) as u32).collect()).collect();
+
+        let mut tokens = vec![0u32; t_in];
+
+        while out.len() < params.max_new_tokens && capacity_left(rt, cache.len, n) {
+            rows[0][0] = cur;
+
+            // -- assemble the step input ------------------------------------
+            for r in 0..n - 1 {
+                tokens[r * w..(r + 1) * w].copy_from_slice(&rows[r]);
+            }
+            let cands: Vec<Vec<u32>> = pool.lookup(cur, g);
+            for i in 0..g {
+                for j in 0..n - 1 {
+                    tokens[self.cfg.wng.verify_index(i, j)] = match cands.get(i) {
+                        Some(c) => c[j],
+                        None => cur, // padding candidate, ignored by verify
+                    };
+                }
+            }
+
+            // -- one fused forward ------------------------------------------
+            let step = self.run_step(rt, &exe, &cache, &tokens)?;
+
+            // -- verification branch -----------------------------------------
+            let dist = |c: usize, depth: usize| -> Vec<f32> {
+                let row = if depth == 0 {
+                    step.logits.row(0)
+                } else {
+                    step.logits.row(self.cfg.wng.verify_index(c, depth - 1))
+                };
+                params.sampling.dist(&row[..vocab])
+            };
+            let outcome = if params.sampling.is_greedy() {
+                verify::greedy_verify(&cands, n - 1, dist)
+            } else {
+                verify::sample_verify(&cands, n - 1, dist, &mut rng)
+            };
+
+            let a = outcome.tokens.len();
+            debug_assert!((1..=n).contains(&a));
+
+            // -- commit: KVs of [cur, matched tokens...] ---------------------
+            let mut src: Vec<i32> = Vec::with_capacity(a);
+            src.push(0);
+            if let Some(wi) = outcome.winner {
+                for d in 0..outcome.matched_depths.min(a - 1) {
+                    src.push(self.cfg.wng.verify_index(wi, d) as i32);
+                }
+            }
+            debug_assert_eq!(src.len(), a);
+            cache = rt.commit(cache, &step.new_kv, commit_t, &src, a)?;
+            stats.record_accept(a);
+
+            // -- harvest W n-grams + the new trajectory row ------------------
+            let mut new_row = Vec::with_capacity(w);
+            let mut gram = Vec::with_capacity(n);
+            for c in 0..w {
+                // pool generation is always greedy (Algorithm 4 requires
+                // one-hot proposal distributions)
+                let tok = step.logits.argmax(self.cfg.wng.la_index(n - 2, c), vocab);
+                new_row.push(tok);
+                gram.clear();
+                for r in 0..n - 1 {
+                    gram.push(rows[r][c]);
+                }
+                gram.push(tok);
+                pool.insert(&gram);
+            }
+
+            // -- window update: rows move up one step in time, columns shift
+            //    left by (a-1) positions; vacated tail refilled randomly ------
+            let shift = a - 1;
+            for r in 0..n - 2 {
+                rows[r] = rows[r + 1].clone();
+            }
+            rows[n - 2] = new_row;
+            if shift > 0 {
+                for row in rows.iter_mut() {
+                    row.rotate_left(shift.min(w));
+                    let start = w - shift.min(w);
+                    for slot in row[start..].iter_mut() {
+                        *slot = rng.below(256) as u32;
+                    }
+                }
+            }
+
+            // -- bookkeeping --------------------------------------------------
+            let hit_eos = params.stop_at_eos && outcome.tokens.contains(&EOS_ID);
+            out.extend_from_slice(&outcome.tokens);
+            cur = *out.last().unwrap();
+            if hit_eos {
+                break;
+            }
+        }
+
+        stats.pool_hits = pool.hits;
+        stats.pool_misses = pool.misses;
+        Ok(finish(out, params, stats, timer.elapsed()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults() {
+        let c = LookaheadConfig::new(15, 5, 15);
+        assert_eq!(c.wng.t_in(), 120);
+        assert!(c.prompt_as_ref);
+        assert_eq!(c.pool_per_key, 30);
+    }
+
+    #[test]
+    fn name_reflects_config() {
+        let e = Lookahead::with_wng(5, 3, 5);
+        assert_eq!(e.name(), "lookahead[w5n3g5+pref]");
+    }
+}

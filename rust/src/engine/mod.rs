@@ -1,0 +1,94 @@
+//! Decoding engines (L3): the paper's lookahead decoder plus every baseline
+//! it is evaluated against.
+//!
+//! | engine            | paper role                                   |
+//! |-------------------|----------------------------------------------|
+//! | `autoregressive`  | the greedy-search baseline (HF equivalent)   |
+//! | `lookahead`       | the contribution (Algorithms 2/3/4)          |
+//! | `jacobi`          | Jacobi decoding (§2, "Limitations")          |
+//! | `spec_decode`     | draft-model speculative decoding (§2)        |
+//! | `prompt_lookup`   | prompt-lookup baseline (Tab. 3 row ②)        |
+
+pub mod autoregressive;
+pub mod jacobi;
+pub mod lookahead;
+pub mod prompt_lookup;
+pub mod sampling;
+pub mod spec_decode;
+pub mod verify;
+
+use anyhow::Result;
+
+use crate::metrics::DecodeStats;
+use crate::runtime::ModelRuntime;
+use crate::tokenizer::{ByteTokenizer, EOS_ID, VOCAB_SIZE};
+
+pub use sampling::SamplingParams;
+
+#[derive(Debug, Clone)]
+pub struct GenParams {
+    pub max_new_tokens: usize,
+    pub sampling: SamplingParams,
+    pub stop_at_eos: bool,
+    pub seed: u64,
+}
+
+impl Default for GenParams {
+    fn default() -> Self {
+        GenParams {
+            max_new_tokens: 64,
+            sampling: SamplingParams::greedy(),
+            stop_at_eos: true,
+            seed: 0,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GenOutput {
+    pub tokens: Vec<u32>,
+    pub text: String,
+    pub stats: DecodeStats,
+}
+
+/// A decoding strategy over one model runtime.
+pub trait Decoder {
+    fn name(&self) -> String;
+
+    /// Generate a continuation of `prompt` (token ids, BOS included by the
+    /// caller). Greedy engines must be byte-exact w.r.t. autoregressive
+    /// decoding — checked by `rust/tests/output_equivalence.rs`.
+    fn generate(&mut self, rt: &ModelRuntime, prompt: &[u32], params: &GenParams)
+                -> Result<GenOutput>;
+}
+
+/// Shared post-processing: truncate at EOS, decode text, finalize stats.
+pub(crate) fn finish(tokens: Vec<u32>, params: &GenParams, mut stats: DecodeStats,
+                     wall: std::time::Duration) -> GenOutput {
+    let mut tokens = tokens;
+    // multi-token steps may overshoot the budget; enforce the contract
+    if tokens.len() > params.max_new_tokens {
+        let overshoot = tokens.len() - params.max_new_tokens;
+        stats.generated_tokens = stats.generated_tokens.saturating_sub(overshoot);
+        tokens.truncate(params.max_new_tokens);
+    }
+    if params.stop_at_eos {
+        if let Some(pos) = tokens.iter().position(|&t| t == EOS_ID) {
+            tokens.truncate(pos);
+        }
+    }
+    stats.wall = wall;
+    let text = ByteTokenizer::new().decode(&tokens);
+    GenOutput { tokens, text, stats }
+}
+
+/// Remaining generation budget given cache capacity (each step may commit up
+/// to `margin` tokens past the current one).
+pub(crate) fn capacity_left(rt: &ModelRuntime, cache_len: usize, margin: usize) -> bool {
+    cache_len + margin + 1 < rt.mm.capacity()
+}
+
+/// Live vocab size (ids above VOCAB_SIZE are padding and never sampled).
+pub(crate) fn vocab_live(rt: &ModelRuntime) -> usize {
+    (VOCAB_SIZE as usize).min(rt.vocab_padded)
+}

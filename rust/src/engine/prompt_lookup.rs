@@ -1,0 +1,144 @@
+//! Prompt-lookup decoding baseline (Saxena 2023; paper Tab. 3 row ②):
+//! speculate by copying the continuation of the most recent match of the
+//! current suffix inside [prompt + generated so far], then verify with one
+//! `decode_lin_k` target call. No draft model, no lookahead branch.
+
+use anyhow::{bail, Result};
+
+use crate::engine::{capacity_left, finish, vocab_live, Decoder, GenOutput, GenParams};
+use crate::metrics::{DecodeStats, Timer};
+use crate::runtime::ModelRuntime;
+use crate::tokenizer::EOS_ID;
+
+pub struct PromptLookup {
+    /// total chain length (1 current + k-1 speculated); needs decode_lin_k.
+    pub k: usize,
+    /// match length: how many trailing tokens must match (transformers'
+    /// prompt_lookup uses several; the paper notes Lookahead checks 1).
+    pub match_len: usize,
+}
+
+impl PromptLookup {
+    pub fn new(k: usize, match_len: usize) -> Self {
+        PromptLookup { k, match_len: match_len.max(1) }
+    }
+}
+
+/// Find the continuation after the most recent previous occurrence of the
+/// `match_len`-token suffix of `history` (excluding the final position).
+pub fn lookup_continuation(history: &[u32], match_len: usize, want: usize) -> Vec<u32> {
+    if history.len() < match_len + 1 {
+        return Vec::new();
+    }
+    let suffix = &history[history.len() - match_len..];
+    // scan right-to-left for the most recent match
+    for start in (0..history.len() - match_len).rev() {
+        if &history[start..start + match_len] == suffix {
+            let cont_start = start + match_len;
+            let cont_end = (cont_start + want).min(history.len());
+            if cont_end > cont_start {
+                return history[cont_start..cont_end].to_vec();
+            }
+        }
+    }
+    Vec::new()
+}
+
+impl Decoder for PromptLookup {
+    fn name(&self) -> String {
+        format!("prompt_lookup[k{},m{}]", self.k, self.match_len)
+    }
+
+    fn generate(&mut self, rt: &ModelRuntime, prompt: &[u32], params: &GenParams)
+                -> Result<GenOutput> {
+        if !params.sampling.is_greedy() {
+            bail!("prompt_lookup baseline implements greedy verification only");
+        }
+        let timer = Timer::start();
+        let k = self.k;
+        let exe = format!("decode_lin_{k}");
+        if !rt.mm.executables.contains_key(&exe) {
+            bail!("model lacks {exe}");
+        }
+        let vocab = vocab_live(rt);
+        let mut stats = DecodeStats { prompt_tokens: prompt.len(), ..Default::default() };
+
+        let pf = Timer::start();
+        let (_, mut cache) = rt.prefill(prompt)?;
+        stats.prefill_wall = pf.elapsed();
+
+        let mut history: Vec<u32> = prompt.to_vec();
+        let mut out: Vec<u32> = Vec::new();
+        let mut tokens = vec![0u32; k];
+
+        while out.len() < params.max_new_tokens && capacity_left(rt, cache.len, k) {
+            let cur = *history.last().unwrap();
+            let mut spec = lookup_continuation(&history, self.match_len, k - 1);
+            if spec.is_empty() {
+                stats.pool_misses += 1;
+            } else {
+                stats.pool_hits += 1;
+            }
+            // pad the chain with repeats of the last speculated/current token
+            while spec.len() < k - 1 {
+                spec.push(*spec.last().unwrap_or(&cur));
+            }
+
+            tokens[0] = cur;
+            tokens[1..].copy_from_slice(&spec);
+            let step = rt.decode(&exe, &cache, &tokens)?;
+
+            let mut accepted: Vec<u32> = Vec::new();
+            for i in 0..k {
+                let target = step.logits.argmax(i, vocab);
+                accepted.push(target);
+                if i < k - 1 && spec[i] != target {
+                    break;
+                }
+            }
+            let a = accepted.len().min(rt.commit_slots);
+            accepted.truncate(a);
+            let src: Vec<i32> = (0..a as i32).collect();
+            cache = rt.commit(cache, &step.new_kv, k, &src, a)?;
+            stats.record_accept(a);
+
+            let hit_eos = params.stop_at_eos && accepted.contains(&EOS_ID);
+            out.extend_from_slice(&accepted);
+            history.extend_from_slice(&accepted);
+            if hit_eos {
+                break;
+            }
+        }
+        Ok(finish(out, params, stats, timer.elapsed()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn finds_most_recent_continuation() {
+        // history: a b c X a b -> suffix [a,b] matched at 0, continuation [c,X]
+        let h = vec![1, 2, 3, 9, 1, 2];
+        assert_eq!(lookup_continuation(&h, 2, 2), vec![3, 9]);
+    }
+
+    #[test]
+    fn prefers_recent_match() {
+        let h = vec![1, 2, 7, 5, 1, 2, 8, 6, 1, 2];
+        assert_eq!(lookup_continuation(&h, 2, 1), vec![8]);
+    }
+
+    #[test]
+    fn no_match_returns_empty() {
+        assert_eq!(lookup_continuation(&[1, 2, 3], 2, 2), Vec::<u32>::new());
+        assert_eq!(lookup_continuation(&[1], 2, 2), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn continuation_clipped_at_end() {
+        let h = vec![1, 2, 3, 1, 2];
+        assert_eq!(lookup_continuation(&h, 2, 5), vec![3, 1, 2]);
+    }
+}

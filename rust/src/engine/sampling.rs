@@ -1,0 +1,170 @@
+//! Sampling: greedy / temperature / top-k / top-p over logits rows, plus the
+//! probability-distribution transform shared with the verification branch
+//! (Algorithm 4 must verify against *exactly* the distribution tokens are
+//! sampled from, so both paths go through `SamplingParams::dist`).
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct SamplingParams {
+    /// 0.0 = greedy (argmax).
+    pub temperature: f64,
+    /// 0 = disabled.
+    pub top_k: usize,
+    /// 1.0 = disabled.
+    pub top_p: f64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> Self {
+        SamplingParams { temperature: 0.0, top_k: 0, top_p: 1.0 }
+    }
+}
+
+impl SamplingParams {
+    pub fn greedy() -> Self {
+        Self::default()
+    }
+
+    pub fn temp(t: f64) -> Self {
+        SamplingParams { temperature: t, ..Self::default() }
+    }
+
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+
+    /// The model's sampling distribution for one logits row (live vocab
+    /// only): softmax(logits / T) with top-k / top-p filtering renormalized.
+    pub fn dist(&self, logits: &[f32]) -> Vec<f32> {
+        let n = logits.len();
+        if self.is_greedy() {
+            // degenerate one-hot on the argmax
+            let mut out = vec![0.0f32; n];
+            out[argmax(logits)] = 1.0;
+            return out;
+        }
+        let t = self.temperature as f32;
+        let m = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut probs: Vec<f32> = logits.iter().map(|&l| ((l - m) / t).exp()).collect();
+
+        if self.top_k > 0 && self.top_k < n {
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+            for &i in &idx[self.top_k..] {
+                probs[i] = 0.0;
+            }
+        }
+        if self.top_p < 1.0 {
+            let mut idx: Vec<usize> = (0..n).collect();
+            idx.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+            let total: f32 = probs.iter().sum();
+            let mut acc = 0.0f32;
+            let mut cut = n;
+            for (rank, &i) in idx.iter().enumerate() {
+                acc += probs[i] / total;
+                if acc >= self.top_p as f32 {
+                    cut = rank + 1;
+                    break;
+                }
+            }
+            for &i in &idx[cut..] {
+                probs[i] = 0.0;
+            }
+        }
+        normalize(&mut probs);
+        probs
+    }
+
+    /// Draw a token id from a logits row.
+    pub fn sample(&self, logits: &[f32], rng: &mut Rng) -> u32 {
+        if self.is_greedy() {
+            return argmax(logits) as u32;
+        }
+        let d = self.dist(logits);
+        rng.weighted(&d) as u32
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > bv {
+            bv = v;
+            best = i;
+        }
+    }
+    best
+}
+
+pub fn normalize(probs: &mut [f32]) {
+    let s: f32 = probs.iter().sum();
+    if s > 0.0 {
+        for p in probs.iter_mut() {
+            *p /= s;
+        }
+    }
+}
+
+/// Sample from an explicit probability vector.
+pub fn sample_from(probs: &[f32], rng: &mut Rng) -> u32 {
+    rng.weighted(probs) as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn greedy_picks_argmax() {
+        let p = SamplingParams::greedy();
+        let mut r = Rng::new(1);
+        assert_eq!(p.sample(&[0.1, 3.0, 1.0], &mut r), 1);
+        let d = p.dist(&[0.1, 3.0, 1.0]);
+        assert_eq!(d, vec![0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn temperature_softens() {
+        let hot = SamplingParams::temp(2.0).dist(&[1.0, 2.0]);
+        let cold = SamplingParams::temp(0.25).dist(&[1.0, 2.0]);
+        assert!(cold[1] > hot[1]); // low T concentrates
+        assert!((hot.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn top_k_zeroes_tail() {
+        let mut p = SamplingParams::temp(1.0);
+        p.top_k = 2;
+        let d = p.dist(&[5.0, 4.0, 1.0, 0.0]);
+        assert!(d[2] == 0.0 && d[3] == 0.0);
+        assert!(d[0] > 0.0 && d[1] > 0.0);
+    }
+
+    #[test]
+    fn top_p_keeps_nucleus() {
+        let mut p = SamplingParams::temp(1.0);
+        p.top_p = 0.5;
+        let d = p.dist(&[10.0, 0.0, 0.0, 0.0]); // ~all mass on 0
+        assert!(d[0] > 0.99);
+        assert_eq!(d[1], 0.0);
+    }
+
+    #[test]
+    fn sampling_matches_dist_statistically() {
+        let p = SamplingParams::temp(1.0);
+        let logits = [1.0f32, 2.0, 0.5];
+        let d = p.dist(&logits);
+        let mut r = Rng::new(42);
+        let mut counts = [0usize; 3];
+        let n = 30_000;
+        for _ in 0..n {
+            counts[p.sample(&logits, &mut r) as usize] += 1;
+        }
+        for i in 0..3 {
+            let emp = counts[i] as f64 / n as f64;
+            assert!((emp - d[i] as f64).abs() < 0.02, "{i}: {emp} vs {}", d[i]);
+        }
+    }
+}

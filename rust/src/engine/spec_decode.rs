@@ -1,0 +1,107 @@
+//! Speculative decoding baseline (Leviathan et al. / Chen et al., paper §2):
+//! a separately-trained draft model proposes gamma tokens autoregressively,
+//! the target model verifies them in one `decode_lin_{gamma+1}` call.
+//! Greedy verification here (the guess-and-verify comparison point for
+//! Fig. 5 / the scaling-law analysis of §4.1).
+
+use anyhow::{bail, Result};
+
+use crate::engine::{capacity_left, finish, vocab_live, Decoder, GenOutput, GenParams};
+use crate::metrics::{DecodeStats, Timer};
+use crate::runtime::ModelRuntime;
+use crate::tokenizer::EOS_ID;
+
+pub struct SpecDecode {
+    pub draft: ModelRuntime,
+    pub gamma: usize,
+}
+
+impl SpecDecode {
+    /// `gamma + 1` must have a matching `decode_lin_{gamma+1}` target
+    /// executable (the shipped artifacts provide gamma = 4).
+    pub fn new(draft: ModelRuntime, gamma: usize) -> Self {
+        SpecDecode { draft, gamma }
+    }
+}
+
+impl Decoder for SpecDecode {
+    fn name(&self) -> String {
+        format!("spec_decode[draft={},g{}]", self.draft.mm.name, self.gamma)
+    }
+
+    fn generate(&mut self, rt: &ModelRuntime, prompt: &[u32], params: &GenParams)
+                -> Result<GenOutput> {
+        if !params.sampling.is_greedy() {
+            bail!("spec_decode baseline implements greedy verification only");
+        }
+        let timer = Timer::start();
+        let k = self.gamma + 1;
+        let verify_exe = format!("decode_lin_{k}");
+        if !rt.mm.executables.contains_key(&verify_exe) {
+            bail!("target model lacks {verify_exe}");
+        }
+        let vocab = vocab_live(rt);
+        let dvocab = vocab_live(&self.draft);
+        let mut stats = DecodeStats { prompt_tokens: prompt.len(), ..Default::default() };
+
+        let pf = Timer::start();
+        let (_, mut cache) = rt.prefill(prompt)?;
+        let (_, mut dcache) = self.draft.prefill(prompt)?;
+        stats.prefill_wall = pf.elapsed();
+
+        let mut cur = *prompt.last().unwrap();
+        let mut out: Vec<u32> = Vec::new();
+        let mut tokens = vec![0u32; k];
+
+        while out.len() < params.max_new_tokens && capacity_left(rt, cache.len, k) {
+            // -- draft proposes gamma tokens autoregressively ----------------
+            let mut draft_toks = Vec::with_capacity(self.gamma);
+            let mut dcur = cur;
+            for _ in 0..self.gamma {
+                let ds = self.draft.decode("decode_lin_1", &dcache, &[dcur])?;
+                let t = ds.logits.argmax(0, dvocab);
+                dcache = self.draft.commit(dcache, &ds.new_kv, 1, &[0], 1)?;
+                draft_toks.push(t);
+                dcur = t;
+            }
+
+            // -- target verifies [cur, d1..d_gamma] in parallel ---------------
+            tokens[0] = cur;
+            tokens[1..].copy_from_slice(&draft_toks);
+            let step = rt.decode(&verify_exe, &cache, &tokens)?;
+
+            let mut accepted: Vec<u32> = Vec::new();
+            for i in 0..k {
+                let target = step.logits.argmax(i, vocab);
+                accepted.push(target);
+                if i < self.gamma && draft_toks[i] != target {
+                    break; // draft diverged; `target` is the corrected token
+                }
+                // matched (or bonus position i == gamma): continue
+            }
+            let a = accepted.len();
+            let src: Vec<i32> = (0..a as i32).collect();
+            cache = rt.commit(cache, &step.new_kv, k, &src, a)?;
+            stats.record_accept(a);
+
+            // -- draft cache sync ---------------------------------------------
+            // Draft committed rows for [cur, d1..d_{gamma-1}] during proposal.
+            // Accepted prefix matches those rows; roll draft length back to
+            // the target's and, when everything was accepted, ingest the last
+            // draft token whose KV the draft never computed.
+            if a == k {
+                let ds = self.draft.decode("decode_lin_1", &dcache, &[draft_toks[self.gamma - 1]])?;
+                dcache = self.draft.commit(dcache, &ds.new_kv, 1, &[0], 1)?;
+            }
+            dcache.len = cache.len;
+
+            let hit_eos = params.stop_at_eos && accepted.contains(&EOS_ID);
+            out.extend_from_slice(&accepted);
+            cur = *out.last().unwrap();
+            if hit_eos {
+                break;
+            }
+        }
+        Ok(finish(out, params, stats, timer.elapsed()))
+    }
+}

@@ -1,0 +1,410 @@
+//! Disjoint-n-gram verification — Algorithms 3 (greedy) and 4 (sampling)
+//! of the paper, decoupled from the runtime: callers provide the candidate
+//! token lists and a distribution oracle `dist(candidate, depth)`:
+//!
+//!   depth 0   : the current token's output distribution (identical across
+//!               candidates — they share the prefix),
+//!   depth d>0 : candidate c's distribution after its d-th token.
+//!
+//! Output: the accepted tokens (1..=N per step — >=1 guaranteed, so a
+//! lookahead step can never fall behind autoregressive decoding), plus the
+//! *source rows* needed by the KV commit: which input slots hold the KVs of
+//! the tokens that became committed.
+
+use crate::util::rng::Rng;
+
+/// `winner`: a candidate index whose inputs matched the whole accepted
+/// prefix (None when the step fell back to plain decoding at depth 0).
+#[derive(Debug, Clone, PartialEq)]
+pub struct VerifyOutcome {
+    pub tokens: Vec<u32>,
+    /// For each accepted token except the last: the candidate-slot depth in
+    /// the winner (the commit translates these to input rows). Length =
+    /// tokens.len() - 1.
+    pub matched_depths: usize,
+    pub winner: Option<usize>,
+}
+
+/// Greedy verification (Algorithm 3) over disjoint candidates.
+///
+/// `cands[i]` is candidate i's token list (length N-1). `dist` must return a
+/// probability vector over the live vocab (for greedy it is one-hot — only
+/// argmax matters; we take a full vector for uniformity with Algorithm 4).
+pub fn greedy_verify(
+    cands: &[Vec<u32>],
+    max_depth: usize,
+    mut dist: impl FnMut(usize, usize) -> Vec<f32>,
+) -> VerifyOutcome {
+    let mut out = Vec::new();
+    let mut alive: Vec<usize> = (0..cands.len()).collect();
+    let mut matched = 0usize;
+
+    for depth in 0..max_depth {
+        // All alive candidates share the accepted prefix, so any alive
+        // candidate's distribution at this depth is THE distribution.
+        let rep = alive.first().copied().unwrap_or(0);
+        let p = dist(rep, depth);
+        let target = crate::engine::sampling::argmax(&p) as u32;
+
+        // Does some alive candidate speculate exactly `target` here?
+        let next_alive: Vec<usize> = alive
+            .iter()
+            .copied()
+            .filter(|&c| cands[c].get(depth) == Some(&target))
+            .collect();
+
+        out.push(target);
+        if next_alive.is_empty() || depth + 1 >= max_depth {
+            // Fallback (guaranteed one-step movement) or candidates
+            // exhausted: the token is still *correct* (it came from the
+            // model's own distribution) but has no input slot -> it becomes
+            // the new current token and the step ends. On full acceptance
+            // (depth+1 == max_depth) we additionally take the bonus token
+            // below.
+            if !next_alive.is_empty() {
+                // full acceptance: bonus token from the winner's last dist
+                let w = next_alive[0];
+                matched = depth + 1;
+                let bonus = dist(w, depth + 1);
+                out.push(crate::engine::sampling::argmax(&bonus) as u32);
+                return VerifyOutcome { tokens: out, matched_depths: matched, winner: Some(w) };
+            }
+            let winner = if matched > 0 { alive.first().copied() } else { None };
+            return VerifyOutcome { tokens: out, matched_depths: matched, winner };
+        }
+        alive = next_alive;
+        matched = depth + 1;
+    }
+    unreachable!("loop always returns")
+}
+
+/// Sampling verification (Algorithm 4): speculations were generated greedily
+/// (one-hot proposal distribution), so rejection updates zero out the
+/// rejected token and renormalize — output distribution is preserved
+/// (paper Appendix B).
+pub fn sample_verify(
+    cands: &[Vec<u32>],
+    max_depth: usize,
+    mut dist: impl FnMut(usize, usize) -> Vec<f32>,
+    rng: &mut Rng,
+) -> VerifyOutcome {
+    let mut out = Vec::new();
+    let mut alive: Vec<usize> = (0..cands.len()).collect();
+    let mut matched = 0usize;
+
+    for depth in 0..max_depth {
+        let rep = alive.first().copied().unwrap_or(0);
+        let mut p = dist(rep, depth);
+
+        // Walk candidates in order; rejection zeroes the token's mass.
+        let mut accepted_tok: Option<u32> = None;
+        for pos in 0..alive.len() {
+            let c = alive[pos];
+            let Some(&s) = cands[c].get(depth) else { continue };
+            let ps = p.get(s as usize).copied().unwrap_or(0.0);
+            let r = rng.f32();
+            if ps > 0.0 && r <= ps {
+                accepted_tok = Some(s);
+                break;
+            }
+            // rejected: remove s from the distribution and renormalize
+            if (s as usize) < p.len() {
+                p[s as usize] = 0.0;
+                crate::engine::sampling::normalize(&mut p);
+            }
+        }
+
+        match accepted_tok {
+            Some(s) => {
+                out.push(s);
+                let next_alive: Vec<usize> = alive
+                    .iter()
+                    .copied()
+                    .filter(|&c| cands[c].get(depth) == Some(&s))
+                    .collect();
+                matched = depth + 1;
+                if depth + 1 >= max_depth {
+                    // full acceptance: bonus token sampled from the winner's
+                    // final distribution
+                    let w = next_alive[0];
+                    let bonus = dist(w, depth + 1);
+                    out.push(crate::engine::sampling::sample_from(&bonus, rng));
+                    return VerifyOutcome {
+                        tokens: out,
+                        matched_depths: matched,
+                        winner: Some(w),
+                    };
+                }
+                alive = next_alive;
+            }
+            None => {
+                // all candidates rejected at this depth: sample from the
+                // residual distribution (guaranteed one-step movement)
+                let tok = if p.iter().any(|&x| x > 0.0) {
+                    crate::engine::sampling::sample_from(&p, rng)
+                } else {
+                    // every candidate token absorbed the whole mass and got
+                    // rejected — numerically impossible for r<=p, but guard.
+                    crate::engine::sampling::argmax(&dist(rep, depth)) as u32
+                };
+                out.push(tok);
+                let winner = if matched > 0 { alive.first().copied() } else { None };
+                return VerifyOutcome { tokens: out, matched_depths: matched, winner };
+            }
+        }
+    }
+    unreachable!("loop always returns")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn onehot(v: usize, n: usize) -> Vec<f32> {
+        let mut p = vec![0.0; n];
+        p[v] = 1.0;
+        p
+    }
+
+    // Model that deterministically continues 1,2,3,4,... after any prefix.
+    fn seq_dist(_c: usize, depth: usize) -> Vec<f32> {
+        onehot(depth + 1, 16)
+    }
+
+    #[test]
+    fn greedy_accepts_full_match_with_bonus() {
+        let cands = vec![vec![1, 2, 3]];
+        let o = greedy_verify(&cands, 3, seq_dist);
+        assert_eq!(o.tokens, vec![1, 2, 3, 4]); // 3 matched + bonus
+        assert_eq!(o.matched_depths, 3);
+        assert_eq!(o.winner, Some(0));
+    }
+
+    #[test]
+    fn greedy_partial_match_stops_with_fallback() {
+        let cands = vec![vec![1, 9, 9]];
+        let o = greedy_verify(&cands, 3, seq_dist);
+        // depth0: target 1 matches; depth1: target 2, cand has 9 -> fallback
+        assert_eq!(o.tokens, vec![1, 2]);
+        assert_eq!(o.matched_depths, 1);
+        assert_eq!(o.winner, Some(0));
+    }
+
+    #[test]
+    fn greedy_no_candidates_is_plain_step() {
+        let o = greedy_verify(&[], 3, seq_dist);
+        assert_eq!(o.tokens, vec![1]);
+        assert_eq!(o.matched_depths, 0);
+        assert_eq!(o.winner, None);
+    }
+
+    #[test]
+    fn greedy_picks_matching_candidate_among_many() {
+        let cands = vec![vec![7, 7], vec![1, 2], vec![1, 9]];
+        let o = greedy_verify(&cands, 2, seq_dist);
+        assert_eq!(o.tokens, vec![1, 2, 3]);
+        assert_eq!(o.winner, Some(1)); // the fully-matching one
+    }
+
+    #[test]
+    fn greedy_never_fewer_than_one_token() {
+        let cands = vec![vec![9], vec![8]];
+        let o = greedy_verify(&cands, 1, |_, d| onehot(d + 1, 16));
+        assert!(!o.tokens.is_empty());
+    }
+
+    #[test]
+    fn sample_greedy_model_behaves_like_greedy() {
+        // With one-hot model dists, sampling verification must accept the
+        // same tokens as greedy verification.
+        let cands = vec![vec![1, 2, 9]];
+        let mut rng = Rng::new(3);
+        let o = sample_verify(&cands, 3, seq_dist, &mut rng);
+        assert_eq!(o.tokens, vec![1, 2, 3]);
+        assert_eq!(o.matched_depths, 2);
+    }
+
+    #[test]
+    fn sample_preserves_distribution_no_candidates() {
+        // Statistical check of Theorem A's base case: with a non-trivial P
+        // and speculations that never match, accepted tokens ~ P.
+        let p_true = vec![0.5f32, 0.3, 0.2];
+        let cands = vec![vec![2u32]]; // speculation with prob 0.2
+        let mut rng = Rng::new(77);
+        let mut counts = [0usize; 3];
+        let n = 40_000;
+        for _ in 0..n {
+            let o = sample_verify(&cands, 1, |_, d| {
+                if d == 0 {
+                    p_true.clone()
+                } else {
+                    vec![1.0, 0.0, 0.0]
+                }
+            }, &mut rng);
+            counts[o.tokens[0] as usize] += 1;
+        }
+        for i in 0..3 {
+            let emp = counts[i] as f64 / n as f64;
+            assert!(
+                (emp - p_true[i] as f64).abs() < 0.015,
+                "token {i}: {emp} vs {}",
+                p_true[i]
+            );
+        }
+    }
+
+    #[test]
+    fn sample_multi_candidate_distribution_preserved() {
+        // Two speculations covering tokens {0, 1}; the output must still
+        // follow P exactly (Appendix B, G=2 case).
+        let p_true = vec![0.25f32, 0.35, 0.4];
+        let cands = vec![vec![0u32], vec![1u32]];
+        let mut rng = Rng::new(5);
+        let mut counts = [0usize; 3];
+        let n = 60_000;
+        for _ in 0..n {
+            let o = sample_verify(&cands, 1, |_, d| {
+                if d == 0 {
+                    p_true.clone()
+                } else {
+                    vec![1.0, 0.0, 0.0]
+                }
+            }, &mut rng);
+            counts[o.tokens[0] as usize] += 1;
+        }
+        for i in 0..3 {
+            let emp = counts[i] as f64 / n as f64;
+            assert!(
+                (emp - p_true[i] as f64).abs() < 0.015,
+                "token {i}: {emp} vs {}",
+                p_true[i]
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod prop_tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    /// Random model: deterministic dist from (depth, candidate salt).
+    fn model_dist(vocab: usize, salt: u64) -> impl Fn(usize, usize) -> Vec<f32> {
+        move |c, depth| {
+            let mut r = Rng::new(salt ^ ((depth as u64) << 3) ^ (c as u64));
+            let mut p: Vec<f32> = (0..vocab).map(|_| r.f32().max(1e-3)).collect();
+            crate::engine::sampling::normalize(&mut p);
+            p
+        }
+    }
+
+    #[test]
+    fn prop_greedy_verify_invariants() {
+        forall(
+            300,
+            91,
+            |r: &mut Rng| {
+                let n = r.range(2, 6);
+                let g = r.range(0, 6);
+                let cands: Vec<Vec<u32>> = (0..g)
+                    .map(|_| (0..n - 1).map(|_| r.below(8) as u32).collect())
+                    .collect();
+                (cands, n)
+            },
+            |(cands, n)| {
+                let max_depth = n - 1;
+                let o = greedy_verify(cands, max_depth, model_dist(8, 7));
+                // 1..=N tokens per step, never zero (guaranteed movement)
+                if o.tokens.is_empty() || o.tokens.len() > *n {
+                    return Err(format!("accepted {} of max {n}", o.tokens.len()));
+                }
+                // matched prefix must be a real candidate prefix
+                if let Some(w) = o.winner {
+                    let m = o.matched_depths;
+                    if m > 0 && cands[w][..m.min(cands[w].len())]
+                        != o.tokens[..m.min(o.tokens.len())]
+                    {
+                        return Err(format!("winner {w} does not match prefix"));
+                    }
+                } else if o.matched_depths != 0 {
+                    return Err("matched without winner".into());
+                }
+                // tokens.len() == matched + 1 (fallback or bonus token)
+                if o.tokens.len() != o.matched_depths + 1 {
+                    return Err(format!(
+                        "len {} != matched {} + 1", o.tokens.len(), o.matched_depths));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_sample_verify_invariants() {
+        forall(
+            300,
+            92,
+            |r: &mut Rng| {
+                let n = r.range(2, 6);
+                let g = r.range(0, 6);
+                let cands: Vec<Vec<u32>> = (0..g)
+                    .map(|_| (0..n - 1).map(|_| r.below(8) as u32).collect())
+                    .collect();
+                let seed = r.next_u64() as usize;
+                (cands, n, seed)
+            },
+            |(cands, n, seed)| {
+                let mut rng = Rng::new(*seed as u64);
+                let o = sample_verify(cands, n - 1, model_dist(8, 13), &mut rng);
+                if o.tokens.is_empty() || o.tokens.len() > *n {
+                    return Err(format!("accepted {} of max {n}", o.tokens.len()));
+                }
+                if o.tokens.len() != o.matched_depths + 1 {
+                    return Err("len != matched + 1".into());
+                }
+                if let Some(w) = o.winner {
+                    if o.matched_depths > 0
+                        && cands[w][..o.matched_depths] != o.tokens[..o.matched_depths]
+                    {
+                        return Err("winner prefix mismatch".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_greedy_equals_sampling_with_onehot_model() {
+        // With one-hot model distributions, Algorithm 4 must accept exactly
+        // what Algorithm 3 accepts (the greedy degenerate case).
+        forall(
+            200,
+            93,
+            |r: &mut Rng| {
+                let n = r.range(2, 6);
+                let g = r.range(0, 5);
+                let cands: Vec<Vec<u32>> = (0..g)
+                    .map(|_| (0..n - 1).map(|_| r.below(4) as u32).collect())
+                    .collect();
+                (cands, n)
+            },
+            |(cands, n)| {
+                let onehot = |c: usize, depth: usize| {
+                    let d = model_dist(4, 3)(c, depth);
+                    let mut o = vec![0.0f32; 4];
+                    o[crate::engine::sampling::argmax(&d)] = 1.0;
+                    o
+                };
+                let a = greedy_verify(cands, n - 1, onehot);
+                let mut rng = Rng::new(5);
+                let b = sample_verify(cands, n - 1, onehot, &mut rng);
+                if a.tokens != b.tokens {
+                    return Err(format!("{:?} != {:?}", a.tokens, b.tokens));
+                }
+                Ok(())
+            },
+        );
+    }
+}

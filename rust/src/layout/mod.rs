@@ -1,0 +1,239 @@
+//! Lookahead token layout + attention-mask canon — the Rust mirror of
+//! `python/compile/masks.py`. Cross-checked against
+//! `artifacts/layout_golden.json` by `rust/tests/layout_golden.rs`; the two
+//! implementations must agree bit-for-bit or the coordinator would feed the
+//! AOT executables a layout they were not lowered for.
+//!
+//! See DESIGN.md §1 for the canonical formulation.
+
+/// One step-input token's role.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Descriptor {
+    /// 0 = lookahead branch, 1 = verification branch.
+    pub branch: u8,
+    /// lookahead: row r (0 = oldest); verify: candidate index i.
+    pub row: u32,
+    /// lookahead: column c; verify: in-candidate offset j.
+    pub col: u32,
+    /// relative position w.r.t. the current token (which sits at 0).
+    pub relpos: u32,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Wng {
+    pub w: usize,
+    pub n: usize,
+    pub g: usize,
+}
+
+impl Wng {
+    pub fn new(w: usize, n: usize, g: usize) -> Self {
+        assert!(n >= 2, "n-gram size must be >= 2");
+        assert!(w >= 1);
+        Wng { w, n, g }
+    }
+
+    /// Step input size `(W+G) * (N-1)`.
+    pub fn t_in(&self) -> usize {
+        (self.w + self.g) * (self.n - 1)
+    }
+
+    /// Tokens in the lookahead block (rows x W, includes the current token).
+    pub fn n_lookahead(&self) -> usize {
+        self.w * (self.n - 1)
+    }
+
+    pub fn tag(&self) -> String {
+        format!("w{}n{}g{}", self.w, self.n, self.g)
+    }
+
+    /// Index of lookahead slot (row r, col c).
+    pub fn la_index(&self, r: usize, c: usize) -> usize {
+        debug_assert!(r < self.n - 1 && c < self.w);
+        r * self.w + c
+    }
+
+    /// Index of verify slot (candidate i, offset j).
+    pub fn verify_index(&self, i: usize, j: usize) -> usize {
+        debug_assert!(i < self.g && j < self.n - 1);
+        self.n_lookahead() + i * (self.n - 1) + j
+    }
+
+    pub fn descriptors(&self) -> Vec<Descriptor> {
+        let mut out = Vec::with_capacity(self.t_in());
+        for r in 0..self.n - 1 {
+            for c in 0..self.w {
+                out.push(Descriptor {
+                    branch: 0,
+                    row: r as u32,
+                    col: c as u32,
+                    relpos: (r + c) as u32,
+                });
+            }
+        }
+        for i in 0..self.g {
+            for j in 0..self.n - 1 {
+                out.push(Descriptor {
+                    branch: 1,
+                    row: i as u32,
+                    col: j as u32,
+                    relpos: (1 + j) as u32,
+                });
+            }
+        }
+        out
+    }
+
+    pub fn relative_positions(&self) -> Vec<i32> {
+        self.descriptors().iter().map(|d| d.relpos as i32).collect()
+    }
+
+    /// Dense intra-step visibility mask, row-major `[t_in * t_in]`, 1=visible.
+    pub fn intra_mask(&self) -> Vec<u8> {
+        let ds = self.descriptors();
+        let t = ds.len();
+        let mut m = vec![0u8; t * t];
+        for (qi, q) in ds.iter().enumerate() {
+            for (ki, k) in ds.iter().enumerate() {
+                m[qi * t + ki] = visible(q, k) as u8;
+            }
+        }
+        m
+    }
+}
+
+/// The scalar visibility rule (identical to `masks.visible` in Python).
+pub fn visible(q: &Descriptor, k: &Descriptor) -> bool {
+    match (q.branch, k.branch) {
+        (0, 0) => (k.col == q.col && k.row <= q.row) || (k.row == 0 && k.col < q.col),
+        (1, 1) => k.row == q.row && k.col <= q.col,
+        (1, 0) => k.row == 0 && k.col == 0, // the current token
+        _ => false,
+    }
+}
+
+/// Causal mask for a k-token linear chain (AR / spec-verify), row-major.
+pub fn linear_mask(k: usize) -> Vec<u8> {
+    let mut m = vec![0u8; k * k];
+    for q in 0..k {
+        for c in 0..=q {
+            m[q * k + c] = 1;
+        }
+    }
+    m
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn t_in_formula() {
+        assert_eq!(Wng::new(15, 5, 15).t_in(), 120);
+        assert_eq!(Wng::new(5, 3, 5).t_in(), 20);
+        assert_eq!(Wng::new(1, 2, 0).t_in(), 1);
+    }
+
+    #[test]
+    fn paper_figure2b_example() {
+        // W=5, N=4, G=2: red token 6 = (row 2, col 4) sees green 5 = (1,4),
+        // all orange (row 0), and itself.
+        let wng = Wng::new(5, 4, 2);
+        let m = wng.intra_mask();
+        let t = wng.t_in();
+        let red6 = wng.la_index(2, 4);
+        let vis: Vec<usize> = (0..t).filter(|&k| m[red6 * t + k] == 1).collect();
+        let mut expected: Vec<usize> = (0..5).map(|c| wng.la_index(0, c)).collect();
+        expected.push(wng.la_index(1, 4));
+        expected.push(red6);
+        expected.sort();
+        assert_eq!(vis, expected);
+    }
+
+    #[test]
+    fn current_token_is_index_zero() {
+        let d = Wng::new(7, 5, 7).descriptors();
+        assert_eq!(d[0], Descriptor { branch: 0, row: 0, col: 0, relpos: 0 });
+    }
+
+    #[test]
+    fn prop_mask_invariants() {
+        forall(
+            60,
+            21,
+            |r: &mut Rng| (r.range(1, 10), r.range(2, 6), r.range(0, 10)),
+            |&(w, n, g)| {
+                let wng = Wng::new(w, n, g);
+                let ds = wng.descriptors();
+                let t = wng.t_in();
+                let m = wng.intra_mask();
+                for q in 0..t {
+                    if m[q * t + q] != 1 {
+                        return Err(format!("token {q} does not see itself"));
+                    }
+                    for k in 0..t {
+                        if m[q * t + k] == 1 {
+                            if ds[k].relpos > ds[q].relpos {
+                                return Err(format!("{q} sees future {k}"));
+                            }
+                            if ds[q].branch == 0 && ds[k].branch == 1 {
+                                return Err("lookahead sees verify".into());
+                            }
+                            if ds[q].branch == 1
+                                && ds[k].branch == 1
+                                && ds[q].row != ds[k].row
+                            {
+                                return Err("candidates not disjoint".into());
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_lookahead_pseudo_sequence_contiguous() {
+        // Jacobi trajectory property: a lookahead token's visible set covers
+        // exactly relative positions 0..=relpos.
+        forall(
+            40,
+            22,
+            |r: &mut Rng| (r.range(1, 10), r.range(2, 6), r.range(0, 6)),
+            |&(w, n, g)| {
+                let wng = Wng::new(w, n, g);
+                let ds = wng.descriptors();
+                let t = wng.t_in();
+                let m = wng.intra_mask();
+                for q in 0..wng.n_lookahead() {
+                    let mut seen: Vec<u32> = (0..wng.n_lookahead())
+                        .filter(|&k| m[q * t + k] == 1)
+                        .map(|k| ds[k].relpos)
+                        .collect();
+                    seen.sort();
+                    let want: Vec<u32> = (0..=ds[q].relpos).collect();
+                    if seen != want {
+                        return Err(format!("q={q} saw {seen:?} want {want:?}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn linear_mask_is_causal() {
+        let m = linear_mask(4);
+        #[rustfmt::skip]
+        let want = vec![
+            1,0,0,0,
+            1,1,0,0,
+            1,1,1,0,
+            1,1,1,1,
+        ];
+        assert_eq!(m, want);
+    }
+}

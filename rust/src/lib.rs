@@ -1,0 +1,29 @@
+//! # Lookahead Decoding — Rust + JAX + Pallas reproduction
+//!
+//! Full-system reproduction of *Break the Sequential Dependency of LLM
+//! Inference Using Lookahead Decoding* (Fu, Bailis, Stoica, Zhang — ICML
+//! 2024) as a three-layer serving stack:
+//!
+//! - **L3 (this crate)**: the serving coordinator — lookahead engine
+//!   (2D window + n-gram pool + disjoint-n-gram verification), baselines
+//!   (autoregressive, Jacobi, speculative, prompt-lookup), request
+//!   router/batcher/scheduler, lookahead parallelism, metrics, benches.
+//! - **L2 (python/compile, build-time)**: LLaMA-style byte transformer
+//!   AOT-lowered to HLO text, executed here via PJRT.
+//! - **L1 (python/compile/kernels)**: Pallas flash-style attention kernel
+//!   with the lookahead pattern (Fig. 2b) hardcoded.
+//!
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for results.
+
+pub mod analytic;
+pub mod engine;
+pub mod layout;
+pub mod lp;
+pub mod metrics;
+pub mod ngram;
+pub mod runtime;
+pub mod server;
+pub mod tokenizer;
+pub mod util;
+pub mod workload;
+pub mod bench;

@@ -1,0 +1,177 @@
+//! Lookahead Parallelism (paper §3.4, Fig. 3) — simulated device pool.
+//!
+//! LP distributes the disjoint lookahead-branch columns and the disjoint
+//! verification candidates across devices, each holding a FULL model copy;
+//! only the accepted token ids are synchronized per step (near-zero
+//! communication vs. TP's per-layer all-reduces).
+//!
+//! This testbed has one physical core (DESIGN.md §2), so true parallel
+//! wall-clock is impossible. The simulation is still *measurement-driven*:
+//! for each device count K we build the K-way shard of the (W,N,G) layout,
+//! **execute the real shard-sized step** on the real runtime to measure its
+//! compute time, and combine `max(shard times) + comm_model` into the
+//! simulated per-step latency. Step compression S is unchanged by LP
+//! (paper App. E verifies <0.1% difference), so projected throughput =
+//! S / simulated_step_latency.
+
+use anyhow::Result;
+
+use crate::analytic::{comm_time, Parallelism};
+use crate::layout::Wng;
+use crate::metrics::Timer;
+use crate::runtime::{Cache, ModelRuntime};
+
+/// The shard of a (W,N,G) lookahead step assigned to one device.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Shard {
+    /// lookahead columns [c0, c1) of the window assigned here
+    pub col_range: (usize, usize),
+    /// verification candidates [i0, i1) assigned here
+    pub cand_range: (usize, usize),
+    /// resulting per-device step-input size
+    pub t_in: usize,
+}
+
+/// Split the layout across `devices`, balancing columns and candidates.
+pub fn shard_layout(wng: Wng, devices: usize) -> Vec<Shard> {
+    let d = devices.max(1);
+    let mut shards = Vec::with_capacity(d);
+    let cols = split_range(wng.w, d);
+    let cands = split_range(wng.g, d);
+    for i in 0..d {
+        let (c0, c1) = cols[i];
+        let (g0, g1) = cands[i];
+        let t = (c1 - c0 + (g1 - g0)) * (wng.n - 1);
+        shards.push(Shard { col_range: (c0, c1), cand_range: (g0, g1), t_in: t });
+    }
+    shards
+}
+
+fn split_range(total: usize, parts: usize) -> Vec<(usize, usize)> {
+    let mut out = Vec::with_capacity(parts);
+    let base = total / parts;
+    let rem = total % parts;
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < rem);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+#[derive(Debug, Clone)]
+pub struct LpReport {
+    pub devices: usize,
+    pub shards: Vec<Shard>,
+    /// measured per-shard step wall (ms), via the real generic executable
+    pub shard_ms: Vec<f64>,
+    /// simulated step = max(shard) + comm (ms)
+    pub step_ms: f64,
+    pub comm_ms: f64,
+    /// throughput projection = S * 1000 / step_ms (tokens/s)
+    pub tokens_per_sec: f64,
+}
+
+/// Measure the LP-simulated step latency for `wng` on `devices` devices.
+/// `s` is the measured step compression of the full config.
+pub fn simulate(rt: &ModelRuntime, cache: &Cache, wng: Wng, devices: usize,
+                s: f64, reps: usize) -> Result<LpReport> {
+    let shards = shard_layout(wng, devices);
+    let mut shard_ms = Vec::with_capacity(shards.len());
+    for sh in &shards {
+        if sh.t_in == 0 {
+            shard_ms.push(0.0);
+            continue;
+        }
+        // A shard executes a (w_shard, N, g_shard) lookahead step; its cost
+        // is that of the same-sized generic decode (same T_in, same masks).
+        let w_shard = (sh.col_range.1 - sh.col_range.0).max(1);
+        let g_shard = sh.cand_range.1 - sh.cand_range.0;
+        let swng = Wng::new(w_shard, wng.n, g_shard);
+        let t = swng.t_in();
+        let (exe, t_pad) = rt
+            .mm
+            .find_decode_gen(t)
+            .ok_or_else(|| anyhow::anyhow!("no generic executable for shard t={t}"))?;
+        let exe = exe.to_string();
+        let mut relpos = swng.relative_positions();
+        relpos.resize(t_pad, 0);
+        let mask = ModelRuntime::pad_mask(&swng.intra_mask(), t, t_pad);
+        let tokens: Vec<u32> = (0..t as u32).map(|i| 97 + i % 26).collect();
+        // warmup (compile path) + timed reps
+        rt.decode_generic(&exe, cache, &tokens, &relpos, &mask)?;
+        let timer = Timer::start();
+        for _ in 0..reps.max(1) {
+            rt.decode_generic(&exe, cache, &tokens, &relpos, &mask)?;
+        }
+        shard_ms.push(timer.ms() / reps.max(1) as f64);
+    }
+    let compute_ms = shard_ms.iter().cloned().fold(0.0, f64::max);
+    let comm_ms = comm_time(Parallelism::LP, devices, rt.mm.n_layers, rt.mm.d_model,
+                            wng.t_in()) * 1e3;
+    let step_ms = compute_ms + comm_ms;
+    let tokens_per_sec = if step_ms > 0.0 { s * 1e3 / step_ms } else { 0.0 };
+    Ok(LpReport { devices, shards, shard_ms, step_ms, comm_ms, tokens_per_sec })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::forall;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn shards_partition_columns_and_candidates() {
+        let wng = Wng::new(15, 5, 15);
+        let shards = shard_layout(wng, 4);
+        assert_eq!(shards.len(), 4);
+        let mut col = 0;
+        let mut cand = 0;
+        for s in &shards {
+            assert_eq!(s.col_range.0, col);
+            assert_eq!(s.cand_range.0, cand);
+            col = s.col_range.1;
+            cand = s.cand_range.1;
+        }
+        assert_eq!(col, 15);
+        assert_eq!(cand, 15);
+    }
+
+    #[test]
+    fn shard_t_in_sums_to_total() {
+        forall(
+            60,
+            5,
+            |r: &mut Rng| (r.range(1, 31), r.range(2, 6), r.range(0, 31)),
+            |&(w, n, g)| {
+                for d in 1..9 {
+                    let wng = Wng::new(w, n, g);
+                    let total: usize =
+                        shard_layout(wng, d).iter().map(|s| s.t_in).sum();
+                    if total != wng.t_in() {
+                        return Err(format!("d={d}: {total} != {}", wng.t_in()));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn more_devices_smaller_max_shard() {
+        let wng = Wng::new(15, 5, 15);
+        let max_t =
+            |d: usize| shard_layout(wng, d).iter().map(|s| s.t_in).max().unwrap();
+        assert!(max_t(2) < max_t(1));
+        assert!(max_t(4) < max_t(2));
+        assert!(max_t(8) < max_t(4));
+    }
+
+    #[test]
+    fn single_device_is_identity() {
+        let wng = Wng::new(7, 5, 7);
+        let shards = shard_layout(wng, 1);
+        assert_eq!(shards[0].t_in, wng.t_in());
+    }
+}

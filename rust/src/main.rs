@@ -1,0 +1,187 @@
+//! `lookahead` — CLI for the Lookahead Decoding serving stack.
+//!
+//! Subcommands:
+//!   generate   one-shot generation from a prompt
+//!   serve      TCP JSON-lines serving front
+//!   client     send one request to a running server
+//!   inspect    summarize the artifact manifest
+//!   lp         lookahead-parallelism simulation report
+
+use anyhow::{bail, Result};
+
+use lookahead::engine::autoregressive::AutoRegressive;
+use lookahead::engine::jacobi::Jacobi;
+use lookahead::engine::lookahead::Lookahead;
+use lookahead::engine::prompt_lookup::PromptLookup;
+use lookahead::engine::spec_decode::SpecDecode;
+use lookahead::engine::{Decoder, GenParams, SamplingParams};
+use lookahead::layout::Wng;
+use lookahead::runtime::{cpu_client, Manifest, ModelRuntime};
+use lookahead::server::{serve_tcp, Policy, ServerConfig, WorkerConfig};
+use lookahead::tokenizer::ByteTokenizer;
+use lookahead::util::cli::{usage, Args, Opt};
+
+fn main() -> Result<()> {
+    lookahead::util::log::set_from_env();
+    let args = Args::parse_env();
+    match args.positional().first().map(String::as_str) {
+        Some("generate") => cmd_generate(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("client") => cmd_client(&args),
+        Some("inspect") => cmd_inspect(&args),
+        Some("lp") => cmd_lp(&args),
+        _ => {
+            print_usage(&args);
+            Ok(())
+        }
+    }
+}
+
+fn print_usage(args: &Args) {
+    let opts = [
+        Opt { name: "artifacts", default: Some("artifacts"), help: "artifact directory" },
+        Opt { name: "model", default: Some("tiny"), help: "model name (tiny/small)" },
+        Opt { name: "method", default: Some("lookahead"),
+              help: "lookahead|autoregressive|jacobi|spec_decode|prompt_lookup" },
+        Opt { name: "wng", default: Some("5,3,5"), help: "lookahead W,N,G" },
+        Opt { name: "prompt", default: None, help: "prompt text (generate)" },
+        Opt { name: "max-tokens", default: Some("64"), help: "generation budget" },
+        Opt { name: "temperature", default: Some("0"), help: "0 = greedy" },
+        Opt { name: "addr", default: Some("127.0.0.1:7878"), help: "serve/client address" },
+        Opt { name: "workers", default: Some("1"), help: "serving workers" },
+        Opt { name: "policy", default: Some("fifo"), help: "fifo | sjf" },
+        Opt { name: "devices", default: Some("4"), help: "LP simulated devices" },
+    ];
+    println!("{}", usage(args.program(),
+        "lookahead — Lookahead Decoding (ICML 2024) serving stack.\n\
+         COMMANDS: generate | serve | client | inspect | lp", &opts));
+}
+
+fn build_engine(args: &Args, manifest: &Manifest, rt: &ModelRuntime)
+                -> Result<Box<dyn Decoder>> {
+    let (w, n, g) = args.wng("wng", (5, 3, 5));
+    Ok(match args.str_or("method", "lookahead").as_str() {
+        "lookahead" => Box::new(Lookahead::with_wng(w, n, g)),
+        "autoregressive" | "ar" => Box::new(AutoRegressive::new()),
+        "jacobi" => Box::new(Jacobi::new(8)),
+        "prompt_lookup" => Box::new(PromptLookup::new(8, 1)),
+        "spec_decode" => {
+            let draft = ModelRuntime::load(&rt.client, manifest, "draft")?;
+            Box::new(SpecDecode::new(draft, 4))
+        }
+        other => bail!("unknown method '{other}'"),
+    })
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let manifest = Manifest::load(&dir)?;
+    let client = cpu_client()?;
+    let rt = ModelRuntime::load(&client, &manifest, &args.str_or("model", "tiny"))?;
+    let mut engine = build_engine(args, &manifest, &rt)?;
+
+    let prompt = match args.get("prompt") {
+        Some(p) => p.to_string(),
+        None => {
+            // no prompt: read stdin
+            let mut s = String::new();
+            std::io::Read::read_to_string(&mut std::io::stdin(), &mut s)?;
+            s
+        }
+    };
+    let tok = ByteTokenizer::new();
+    let ids = tok.encode_with_bos(&prompt);
+    let params = GenParams {
+        max_new_tokens: args.usize_or("max-tokens", 64),
+        sampling: SamplingParams {
+            temperature: args.f64_or("temperature", 0.0),
+            top_k: args.usize_or("top-k", 0),
+            top_p: args.f64_or("top-p", 1.0),
+        },
+        stop_at_eos: true,
+        seed: args.u64_or("seed", 0),
+    };
+    let out = engine.generate(&rt, &ids, &params)?;
+    println!("{}", out.text);
+    eprintln!(
+        "--- {} | {} tokens in {} steps (S = {:.2}) | {:.1} tok/s | pool hit-rate {:.0}%",
+        engine.name(),
+        out.stats.generated_tokens,
+        out.stats.decode_steps,
+        out.stats.compression(),
+        out.stats.tokens_per_sec(),
+        100.0 * out.stats.pool_hits as f64
+            / (out.stats.pool_hits + out.stats.pool_misses).max(1) as f64,
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = ServerConfig {
+        workers: args.usize_or("workers", 1),
+        policy: Policy::parse(&args.str_or("policy", "fifo")),
+        queue_depth: args.usize_or("queue-depth", 256),
+        worker: WorkerConfig {
+            artifacts_dir: args.str_or("artifacts", "artifacts"),
+            model: args.str_or("model", "tiny"),
+            wng: args.wng("wng", (5, 3, 5)),
+            draft_model: "draft".into(),
+        },
+    };
+    let max_conns = args.get("max-conns").and_then(|v| v.parse().ok());
+    serve_tcp(&args.str_or("addr", "127.0.0.1:7878"), cfg, max_conns)
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let req = lookahead::util::json::Json::obj(vec![
+        ("prompt", lookahead::util::json::Json::str(args.str_or("prompt", "hello"))),
+        ("max_tokens",
+         lookahead::util::json::Json::num(args.usize_or("max-tokens", 64) as f64)),
+        ("method", lookahead::util::json::Json::str(args.str_or("method", "lookahead"))),
+        ("temperature",
+         lookahead::util::json::Json::num(args.f64_or("temperature", 0.0))),
+    ]);
+    let resp = lookahead::server::client_request(
+        &args.str_or("addr", "127.0.0.1:7878"), &req.dump())?;
+    println!("{resp}");
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let manifest = Manifest::load(args.str_or("artifacts", "artifacts"))?;
+    println!("profile: {}   prefill_len: {}   commit_slots: {}",
+             manifest.profile, manifest.prefill_len, manifest.commit_slots);
+    for (name, mm) in &manifest.models {
+        println!("\nmodel {name}: {} layers, d={}, {} heads, {:.2}M params, \
+                  cache {:?} (junk row {})",
+                 mm.n_layers, mm.d_model, mm.n_heads, mm.params as f64 / 1e6,
+                 mm.cache_shape, mm.junk_row);
+        for (ename, spec) in &mm.executables {
+            println!("  {:<28} {:?}", ename, spec.kind);
+        }
+    }
+    Ok(())
+}
+
+fn cmd_lp(args: &Args) -> Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let manifest = Manifest::load(&dir)?;
+    let client = cpu_client()?;
+    let rt = ModelRuntime::load(&client, &manifest, &args.str_or("model", "tiny"))?;
+    let (w, n, g) = args.wng("wng", (15, 5, 15));
+    let wng = Wng::new(w, n, g);
+    let tok = ByteTokenizer::new();
+    let ids = tok.encode_with_bos("def warm(cache, token):\n    return cache");
+    let (_, cache) = rt.prefill(&ids)?;
+    let devices = args.usize_or("devices", 4);
+    let s = args.f64_or("s", 2.0);
+    let rep = lookahead::lp::simulate(&rt, &cache, wng, devices, s, 5)?;
+    println!("LP simulation for {:?} on {} devices (S={s:.2}):", wng, devices);
+    for (i, (sh, ms)) in rep.shards.iter().zip(&rep.shard_ms).enumerate() {
+        println!("  device {i}: cols {:?} cands {:?} t_in {:>3} -> {:.2} ms",
+                 sh.col_range, sh.cand_range, sh.t_in, ms);
+    }
+    println!("  step = {:.2} ms (comm {:.4} ms) -> {:.1} tok/s",
+             rep.step_ms, rep.comm_ms, rep.tokens_per_sec);
+    Ok(())
+}

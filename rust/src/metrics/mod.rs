@@ -1,0 +1,267 @@
+//! Serving metrics substrate: counters, latency histograms (p50/p90/p99),
+//! throughput accounting, and per-request decode statistics.
+
+pub mod rouge;
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Streaming histogram over f64 samples (exact quantiles via sorted store —
+/// sample counts here are small enough that exactness beats sketching).
+#[derive(Debug, Clone, Default)]
+pub struct Histogram {
+    samples: Vec<f64>,
+    sorted: bool,
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn record_duration(&mut self, d: Duration) {
+        self.record(d.as_secs_f64() * 1e3); // ms
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.samples.iter().sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.sum() / self.samples.len() as f64
+    }
+
+    pub fn quantile(&mut self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        if !self.sorted {
+            self.samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+        let idx = ((self.samples.len() - 1) as f64 * q).floor() as usize;
+        self.samples[idx]
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p90(&mut self) -> f64 {
+        self.quantile(0.90)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn summary(&mut self) -> String {
+        if self.samples.is_empty() {
+            return "n=0".to_string();
+        }
+        format!(
+            "n={} mean={:.2} p50={:.2} p90={:.2} p99={:.2} max={:.2}",
+            self.count(),
+            self.mean(),
+            self.p50(),
+            self.p90(),
+            self.p99(),
+            self.max()
+        )
+    }
+}
+
+/// Named counters + histograms for a serving process.
+#[derive(Debug, Default)]
+pub struct Registry {
+    pub counters: BTreeMap<String, u64>,
+    pub histograms: BTreeMap<String, Histogram>,
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn inc(&mut self, name: &str, by: u64) {
+        *self.counters.entry(name.to_string()).or_default() += by;
+    }
+
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.histograms.entry(name.to_string()).or_default().record(v);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn report(&mut self) -> String {
+        let mut s = String::new();
+        for (k, v) in &self.counters {
+            s.push_str(&format!("counter {k} = {v}\n"));
+        }
+        let names: Vec<String> = self.histograms.keys().cloned().collect();
+        for k in names {
+            let line = self.histograms.get_mut(&k).unwrap().summary();
+            s.push_str(&format!("hist    {k}: {line}\n"));
+        }
+        s
+    }
+}
+
+/// Per-request decode statistics — the paper's core measurables.
+#[derive(Debug, Clone, Default)]
+pub struct DecodeStats {
+    pub prompt_tokens: usize,
+    pub generated_tokens: usize,
+    pub decode_steps: usize,
+    pub accepted_by_len: Vec<usize>, // index = tokens accepted in a step
+    pub pool_hits: usize,
+    pub pool_misses: usize,
+    pub wall: Duration,
+    pub prefill_wall: Duration,
+}
+
+impl DecodeStats {
+    /// Step compression ratio S = generated tokens / decode steps (Eq. 6).
+    pub fn compression(&self) -> f64 {
+        if self.decode_steps == 0 {
+            return 1.0;
+        }
+        self.generated_tokens as f64 / self.decode_steps as f64
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        let s = self.wall.as_secs_f64();
+        if s <= 0.0 {
+            return 0.0;
+        }
+        self.generated_tokens as f64 / s
+    }
+
+    pub fn record_accept(&mut self, n: usize) {
+        if self.accepted_by_len.len() <= n {
+            self.accepted_by_len.resize(n + 1, 0);
+        }
+        self.accepted_by_len[n] += 1;
+        self.decode_steps += 1;
+        self.generated_tokens += n;
+    }
+
+    pub fn merge(&mut self, other: &DecodeStats) {
+        self.prompt_tokens += other.prompt_tokens;
+        self.generated_tokens += other.generated_tokens;
+        self.decode_steps += other.decode_steps;
+        self.pool_hits += other.pool_hits;
+        self.pool_misses += other.pool_misses;
+        self.wall += other.wall;
+        self.prefill_wall += other.prefill_wall;
+        for (i, &c) in other.accepted_by_len.iter().enumerate() {
+            if self.accepted_by_len.len() <= i {
+                self.accepted_by_len.resize(i + 1, 0);
+            }
+            self.accepted_by_len[i] += c;
+        }
+    }
+}
+
+/// Simple stopwatch.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(Instant::now())
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.0.elapsed()
+    }
+
+    pub fn ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert_eq!(h.p50(), 50.0);
+        assert_eq!(h.p99(), 99.0);
+        assert_eq!(h.count(), 100);
+        assert!((h.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_empty_safe() {
+        let mut h = Histogram::new();
+        assert_eq!(h.p50(), 0.0);
+        assert_eq!(h.mean(), 0.0);
+    }
+
+    #[test]
+    fn registry_counts() {
+        let mut r = Registry::new();
+        r.inc("requests", 1);
+        r.inc("requests", 2);
+        r.observe("latency_ms", 4.0);
+        assert_eq!(r.counter("requests"), 3);
+        assert!(r.report().contains("requests = 3"));
+    }
+
+    #[test]
+    fn compression_ratio() {
+        let mut s = DecodeStats::default();
+        s.record_accept(1);
+        s.record_accept(3);
+        s.record_accept(2);
+        assert_eq!(s.generated_tokens, 6);
+        assert_eq!(s.decode_steps, 3);
+        assert!((s.compression() - 2.0).abs() < 1e-12);
+        assert_eq!(s.accepted_by_len, vec![0, 1, 1, 1]);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = DecodeStats::default();
+        a.record_accept(2);
+        let mut b = DecodeStats::default();
+        b.record_accept(1);
+        b.record_accept(4);
+        a.merge(&b);
+        assert_eq!(a.generated_tokens, 7);
+        assert_eq!(a.decode_steps, 3);
+    }
+}

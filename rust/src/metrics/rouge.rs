@@ -1,0 +1,146 @@
+//! ROUGE-1/2/L for Tab. 2 (sampling quality): word-level n-gram recall /
+//! precision / F1 against a reference, matching the standard definitions.
+
+use std::collections::HashMap;
+
+fn words(s: &str) -> Vec<&str> {
+    s.split(|c: char| !c.is_alphanumeric()).filter(|w| !w.is_empty()).collect()
+}
+
+fn ngram_counts<'a>(ws: &[&'a str], n: usize) -> HashMap<Vec<&'a str>, usize> {
+    let mut m = HashMap::new();
+    if ws.len() >= n {
+        for win in ws.windows(n) {
+            *m.entry(win.to_vec()).or_insert(0) += 1;
+        }
+    }
+    m
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Score {
+    pub precision: f64,
+    pub recall: f64,
+    pub f1: f64,
+}
+
+impl Score {
+    fn from_counts(overlap: usize, cand: usize, refr: usize) -> Score {
+        let p = if cand == 0 { 0.0 } else { overlap as f64 / cand as f64 };
+        let r = if refr == 0 { 0.0 } else { overlap as f64 / refr as f64 };
+        let f1 = if p + r == 0.0 { 0.0 } else { 2.0 * p * r / (p + r) };
+        Score { precision: p, recall: r, f1 }
+    }
+}
+
+/// ROUGE-N (clipped n-gram overlap).
+pub fn rouge_n(candidate: &str, reference: &str, n: usize) -> Score {
+    let cw = words(candidate);
+    let rw = words(reference);
+    let cc = ngram_counts(&cw, n);
+    let rc = ngram_counts(&rw, n);
+    let overlap: usize =
+        cc.iter().map(|(g, &c)| c.min(rc.get(g).copied().unwrap_or(0))).sum();
+    let cand_total: usize = cc.values().sum();
+    let ref_total: usize = rc.values().sum();
+    Score::from_counts(overlap, cand_total, ref_total)
+}
+
+/// ROUGE-L via longest common subsequence of words.
+pub fn rouge_l(candidate: &str, reference: &str) -> Score {
+    let c = words(candidate);
+    let r = words(reference);
+    let lcs = lcs_len(&c, &r);
+    Score::from_counts(lcs, c.len(), r.len())
+}
+
+fn lcs_len(a: &[&str], b: &[&str]) -> usize {
+    if a.is_empty() || b.is_empty() {
+        return 0;
+    }
+    let mut prev = vec![0usize; b.len() + 1];
+    let mut cur = vec![0usize; b.len() + 1];
+    for i in 1..=a.len() {
+        for j in 1..=b.len() {
+            cur[j] = if a[i - 1] == b[j - 1] {
+                prev[j - 1] + 1
+            } else {
+                prev[j].max(cur[j - 1])
+            };
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[b.len()]
+}
+
+/// Average F1 of rouge-1/2/L over (candidate, reference) pairs — the three
+/// columns of the paper's Tab. 2.
+pub fn rouge_suite(pairs: &[(String, String)]) -> (f64, f64, f64) {
+    if pairs.is_empty() {
+        return (0.0, 0.0, 0.0);
+    }
+    let n = pairs.len() as f64;
+    let mut r1 = 0.0;
+    let mut r2 = 0.0;
+    let mut rl = 0.0;
+    for (c, r) in pairs {
+        r1 += rouge_n(c, r, 1).f1;
+        r2 += rouge_n(c, r, 2).f1;
+        rl += rouge_l(c, r).f1;
+    }
+    (100.0 * r1 / n, 100.0 * r2 / n, 100.0 * rl / n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identical_text_perfect() {
+        let s = rouge_n("the cat sat on the mat", "the cat sat on the mat", 1);
+        assert!((s.f1 - 1.0).abs() < 1e-12);
+        let l = rouge_l("the cat sat", "the cat sat");
+        assert!((l.f1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn disjoint_text_zero() {
+        assert_eq!(rouge_n("aa bb", "cc dd", 1).f1, 0.0);
+        assert_eq!(rouge_l("aa bb", "cc dd").f1, 0.0);
+    }
+
+    #[test]
+    fn partial_overlap() {
+        // candidate: "the cat", ref: "the cat sat" -> R1 p=1, r=2/3
+        let s = rouge_n("the cat", "the cat sat", 1);
+        assert!((s.precision - 1.0).abs() < 1e-12);
+        assert!((s.recall - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rouge2_needs_adjacent() {
+        let s = rouge_n("the mat cat sat", "the cat sat on", 2);
+        // bigrams cand: (the,mat)(mat,cat)(cat,sat); ref: (the,cat)(cat,sat)(sat,on)
+        assert!((s.precision - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn lcs_subsequence_not_substring() {
+        let l = rouge_l("a x b y c", "a b c");
+        assert!((l.recall - 1.0).abs() < 1e-12); // a b c is a subsequence
+    }
+
+    #[test]
+    fn clipping_repeated_ngrams() {
+        // candidate repeats "the" 4x, ref has it once -> overlap clipped to 1
+        let s = rouge_n("the the the the", "the", 1);
+        assert!((s.precision - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_safe() {
+        assert_eq!(rouge_n("", "x", 1).f1, 0.0);
+        assert_eq!(rouge_l("x", "").f1, 0.0);
+        assert_eq!(rouge_suite(&[]), (0.0, 0.0, 0.0));
+    }
+}

@@ -1,0 +1,239 @@
+//! The n-gram pool (paper §3.1/§3.2): caches n-grams harvested from the
+//! Jacobi trajectory (and optionally the prompt — "prompt as reference",
+//! Tab. 3), keyed by first token. Lookup returns up to G candidate suffixes
+//! for the verification branch.
+
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::collections::VecDeque;
+
+#[derive(Debug, Clone)]
+pub struct NgramPool {
+    /// n-gram length N (suffixes stored are length N-1).
+    n: usize,
+    /// per-key LRU of suffixes, most recent at the back.
+    map: HashMap<u32, VecDeque<Vec<u32>>>,
+    /// max suffixes retained per key.
+    per_key_cap: usize,
+    /// total suffixes across keys (for the global cap).
+    total: usize,
+    total_cap: usize,
+    pub hits: usize,
+    pub misses: usize,
+    /// round-robin eviction cursor over keys when the global cap is hit.
+    evict_keys: VecDeque<u32>,
+}
+
+impl NgramPool {
+    pub fn new(n: usize, per_key_cap: usize, total_cap: usize) -> Self {
+        assert!(n >= 2);
+        NgramPool {
+            n,
+            map: HashMap::new(),
+            per_key_cap: per_key_cap.max(1),
+            total: 0,
+            total_cap: total_cap.max(1),
+            hits: 0,
+            misses: 0,
+            evict_keys: VecDeque::new(),
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn len(&self) -> usize {
+        self.total
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Insert a full n-gram (length n). Deduplicates per key; refreshes LRU
+    /// position on re-insert.
+    pub fn insert(&mut self, ngram: &[u32]) {
+        if ngram.len() != self.n {
+            return;
+        }
+        let key = ngram[0];
+        let suffix = ngram[1..].to_vec();
+        match self.map.entry(key) {
+            Entry::Occupied(mut e) => {
+                let q = e.get_mut();
+                if let Some(pos) = q.iter().position(|s| *s == suffix) {
+                    // refresh: move to back
+                    let s = q.remove(pos).unwrap();
+                    q.push_back(s);
+                    return;
+                }
+                q.push_back(suffix);
+                self.total += 1;
+                if q.len() > self.per_key_cap {
+                    q.pop_front();
+                    self.total -= 1;
+                }
+            }
+            Entry::Vacant(e) => {
+                e.insert(VecDeque::from([suffix]));
+                self.evict_keys.push_back(key);
+                self.total += 1;
+            }
+        }
+        self.enforce_total_cap();
+    }
+
+    fn enforce_total_cap(&mut self) {
+        while self.total > self.total_cap {
+            let Some(key) = self.evict_keys.pop_front() else { break };
+            if let Some(q) = self.map.get_mut(&key) {
+                if q.pop_front().is_some() {
+                    self.total -= 1;
+                }
+                if q.is_empty() {
+                    self.map.remove(&key);
+                } else {
+                    self.evict_keys.push_back(key);
+                }
+            }
+        }
+    }
+
+    /// Up to `max` suffixes whose n-gram starts with `key`, most recent first
+    /// (recent trajectory n-grams are the best speculations).
+    pub fn lookup(&mut self, key: u32, max: usize) -> Vec<Vec<u32>> {
+        match self.map.get(&key) {
+            Some(q) if !q.is_empty() => {
+                self.hits += 1;
+                q.iter().rev().take(max).cloned().collect()
+            }
+            _ => {
+                self.misses += 1;
+                Vec::new()
+            }
+        }
+    }
+
+    /// Seed the pool with every n-gram window of `tokens` ("prompt as
+    /// reference", paper §5.4 configs ③⑥⑨).
+    pub fn seed_from(&mut self, tokens: &[u32]) {
+        if tokens.len() < self.n {
+            return;
+        }
+        for win in tokens.windows(self.n) {
+            self.insert(win);
+        }
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let t = self.hits + self.misses;
+        if t == 0 {
+            0.0
+        } else {
+            self.hits as f64 / t as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gen};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn insert_and_lookup() {
+        let mut p = NgramPool::new(3, 4, 100);
+        p.insert(&[1, 2, 3]);
+        p.insert(&[1, 4, 5]);
+        p.insert(&[2, 9, 9]);
+        let got = p.lookup(1, 10);
+        assert_eq!(got, vec![vec![4, 5], vec![2, 3]]); // most recent first
+        assert_eq!(p.lookup(7, 10), Vec::<Vec<u32>>::new());
+        assert_eq!(p.hits, 1);
+        assert_eq!(p.misses, 1);
+    }
+
+    #[test]
+    fn dedup_refreshes_lru() {
+        let mut p = NgramPool::new(2, 2, 100);
+        p.insert(&[1, 10]);
+        p.insert(&[1, 11]);
+        p.insert(&[1, 10]); // refresh, not duplicate
+        assert_eq!(p.len(), 2);
+        assert_eq!(p.lookup(1, 1), vec![vec![10]]);
+        p.insert(&[1, 12]); // evicts 11 (oldest)
+        let got = p.lookup(1, 10);
+        assert!(!got.contains(&vec![11]));
+    }
+
+    #[test]
+    fn per_key_cap_enforced() {
+        let mut p = NgramPool::new(2, 3, 100);
+        for i in 0..10 {
+            p.insert(&[5, i]);
+        }
+        assert_eq!(p.lookup(5, 10).len(), 3);
+    }
+
+    #[test]
+    fn total_cap_enforced() {
+        let mut p = NgramPool::new(2, 10, 5);
+        for i in 0..20u32 {
+            p.insert(&[i, i + 1]);
+        }
+        assert!(p.len() <= 5);
+    }
+
+    #[test]
+    fn seed_from_prompt() {
+        let mut p = NgramPool::new(3, 8, 100);
+        p.seed_from(&[1, 2, 3, 4]);
+        assert_eq!(p.lookup(1, 4), vec![vec![2, 3]]);
+        assert_eq!(p.lookup(2, 4), vec![vec![3, 4]]);
+    }
+
+    #[test]
+    fn wrong_length_ignored() {
+        let mut p = NgramPool::new(3, 8, 100);
+        p.insert(&[1, 2]);
+        p.insert(&[1, 2, 3, 4]);
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn prop_pool_invariants() {
+        // total == sum over keys; caps always hold; lookup never exceeds max.
+        forall(
+            150,
+            33,
+            gen::vec_of(0, 120, |r: &mut Rng| {
+                (r.below(8) as u32, r.below(8) as u32, r.below(8) as u32)
+            }),
+            |grams| {
+                let mut p = NgramPool::new(3, 3, 20);
+                for &(a, b, c) in grams {
+                    p.insert(&[a, b, c]);
+                }
+                let sum: usize = p.map.values().map(|q| q.len()).sum();
+                if sum != p.total {
+                    return Err(format!("total {} != sum {}", p.total, sum));
+                }
+                if p.total > 20 {
+                    return Err("total cap violated".into());
+                }
+                for q in p.map.values() {
+                    if q.len() > 3 {
+                        return Err("per-key cap violated".into());
+                    }
+                }
+                let mut p2 = p.clone();
+                if p2.lookup(3, 2).len() > 2 {
+                    return Err("lookup exceeded max".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,9 @@
+use anyhow::Result;
+
+pub fn smoke_load(path: &str) -> Result<()> {
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file(path)?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let _exe = client.compile(&comp)?;
+    Ok(())
+}

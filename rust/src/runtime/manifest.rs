@@ -1,0 +1,322 @@
+//! Typed view of `artifacts/manifest.json` — the binding contract emitted by
+//! `python/compile/aot.py`. Executable parameter order is positional:
+//!
+//!   prefill:     weights.. , tokens i32[P], n_valid i32
+//!   decode_la:   weights.. , cache, cache_len i32, tokens i32[T]
+//!   decode_lin:  weights.. , cache, cache_len i32, tokens i32[K]
+//!   decode_gen:  weights.. , cache, cache_len i32, tokens i32[T],
+//!                relpos i32[T], mask u8[T,T]
+//!   commit:      cache, new_kv, src_idx i32[slots], dest_start i32, count i32
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub profile: String,
+    pub prefill_len: usize,
+    pub commit_slots: usize,
+    pub vocab_size: usize,
+    pub vocab_padded: usize,
+    pub pad_id: u32,
+    pub bos_id: u32,
+    pub eos_id: u32,
+    pub models: BTreeMap<String, ModelManifest>,
+    pub dir: PathBuf,
+}
+
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+    pub params: usize,
+    pub weights_file: String,
+    pub weight_names: Vec<String>,
+    pub weight_shapes: Vec<Vec<usize>>,
+    /// [L, 2, S, Hk*D]
+    pub cache_shape: [usize; 4],
+    pub junk_row: usize,
+    pub executables: BTreeMap<String, ExeSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ExeSpec {
+    pub file: String,
+    pub kind: ExeKind,
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ExeKind {
+    Prefill { prompt_len: usize },
+    DecodeLa { w: usize, n: usize, g: usize, t_in: usize, attn: String },
+    DecodeLin { k: usize },
+    DecodeGen { t_pad: usize },
+    Commit { t_in: usize, slots: usize },
+}
+
+impl ExeKind {
+    /// Step-input token count for decode kinds.
+    pub fn t_in(&self) -> Option<usize> {
+        match self {
+            ExeKind::DecodeLa { t_in, .. } => Some(*t_in),
+            ExeKind::DecodeLin { k } => Some(*k),
+            ExeKind::DecodeGen { t_pad } => Some(*t_pad),
+            ExeKind::Commit { t_in, .. } => Some(*t_in),
+            ExeKind::Prefill { .. } => None,
+        }
+    }
+}
+
+fn req<'a>(j: &'a Json, key: &str, ctx: &str) -> Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow!("manifest: missing '{key}' in {ctx}"))
+}
+
+fn req_usize(j: &Json, key: &str, ctx: &str) -> Result<usize> {
+    req(j, key, ctx)?.as_usize().ok_or_else(|| anyhow!("manifest: '{key}' not usize in {ctx}"))
+}
+
+fn req_str(j: &Json, key: &str, ctx: &str) -> Result<String> {
+    Ok(req(j, key, ctx)?
+        .as_str()
+        .ok_or_else(|| anyhow!("manifest: '{key}' not str in {ctx}"))?
+        .to_string())
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+
+        let vocab = req(&j, "vocab", "root")?;
+        let mut models = BTreeMap::new();
+        for (name, mj) in req(&j, "models", "root")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest: models not an object"))?
+        {
+            models.insert(name.clone(), ModelManifest::from_json(name, mj)?);
+        }
+
+        Ok(Manifest {
+            profile: req_str(&j, "profile", "root")?,
+            prefill_len: req_usize(&j, "prefill_len", "root")?,
+            commit_slots: req_usize(&j, "commit_slots", "root")?,
+            vocab_size: req_usize(vocab, "size", "vocab")?,
+            vocab_padded: req_usize(vocab, "padded", "vocab")?,
+            pad_id: req_usize(vocab, "pad", "vocab")? as u32,
+            bos_id: req_usize(vocab, "bos", "vocab")? as u32,
+            eos_id: req_usize(vocab, "eos", "vocab")? as u32,
+            models,
+            dir,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .get(name)
+            .ok_or_else(|| anyhow!("model '{name}' not in manifest (have: {:?})",
+                                   self.models.keys().collect::<Vec<_>>()))
+    }
+}
+
+impl ModelManifest {
+    fn from_json(name: &str, j: &Json) -> Result<ModelManifest> {
+        let cfg = req(j, "config", name)?;
+        let cache: Vec<usize> = req(j, "cache_shape", name)?
+            .usize_vec()
+            .ok_or_else(|| anyhow!("bad cache_shape for {name}"))?;
+        if cache.len() != 4 {
+            bail!("cache_shape must be rank 4 for {name}");
+        }
+        let mut executables = BTreeMap::new();
+        for (ename, ej) in req(j, "executables", name)?
+            .as_obj()
+            .ok_or_else(|| anyhow!("bad executables for {name}"))?
+        {
+            executables.insert(ename.clone(), ExeSpec::from_json(ename, ej)?);
+        }
+        Ok(ModelManifest {
+            name: name.to_string(),
+            n_layers: req_usize(cfg, "n_layers", name)?,
+            d_model: req_usize(cfg, "d_model", name)?,
+            n_heads: req_usize(cfg, "n_heads", name)?,
+            n_kv_heads: req_usize(cfg, "n_kv_heads", name)?,
+            head_dim: req_usize(cfg, "head_dim", name)?,
+            max_seq: req_usize(cfg, "max_seq", name)?,
+            params: req_usize(cfg, "params", name)?,
+            weights_file: req_str(j, "weights_file", name)?,
+            weight_names: req(j, "weight_names", name)?
+                .str_vec()
+                .ok_or_else(|| anyhow!("bad weight_names for {name}"))?,
+            weight_shapes: req(j, "weight_shapes", name)?
+                .as_arr()
+                .ok_or_else(|| anyhow!("bad weight_shapes"))?
+                .iter()
+                .map(|x| x.usize_vec().ok_or_else(|| anyhow!("bad shape")))
+                .collect::<Result<_>>()?,
+            cache_shape: [cache[0], cache[1], cache[2], cache[3]],
+            junk_row: req_usize(j, "junk_row", name)?,
+            executables,
+        })
+    }
+
+    /// Usable committed rows (everything below the junk row).
+    pub fn capacity(&self) -> usize {
+        self.junk_row
+    }
+
+    /// Find the decode_la executable for (w, n, g), preferring `attn` impl.
+    pub fn find_decode_la(&self, w: usize, n: usize, g: usize, attn: &str)
+                          -> Option<(&str, &ExeSpec)> {
+        let mut fallback = None;
+        for (name, spec) in &self.executables {
+            if let ExeKind::DecodeLa { w: ww, n: nn, g: gg, attn: a, .. } = &spec.kind {
+                if (*ww, *nn, *gg) == (w, n, g) {
+                    if a == attn {
+                        return Some((name.as_str(), spec));
+                    }
+                    fallback = Some((name.as_str(), spec));
+                }
+            }
+        }
+        fallback
+    }
+
+    /// Smallest generic decode executable with t_pad >= t.
+    pub fn find_decode_gen(&self, t: usize) -> Option<(&str, usize)> {
+        let mut best: Option<(&str, usize)> = None;
+        for (name, spec) in &self.executables {
+            if let ExeKind::DecodeGen { t_pad } = spec.kind {
+                if t_pad >= t && best.map_or(true, |(_, b)| t_pad < b) {
+                    best = Some((name.as_str(), t_pad));
+                }
+            }
+        }
+        best
+    }
+
+    pub fn commit_exe(&self, t_in: usize) -> Result<&str> {
+        for (name, spec) in &self.executables {
+            if let ExeKind::Commit { t_in: t, .. } = spec.kind {
+                if t == t_in {
+                    return Ok(name.as_str());
+                }
+            }
+        }
+        bail!("no commit executable for t_in={t_in} in model {}", self.name)
+    }
+
+    pub fn decode_lin_exe(&self, k: usize) -> Result<&str> {
+        let name = format!("decode_lin_{k}");
+        if self.executables.contains_key(&name) {
+            Ok(self.executables.get_key_value(&name).unwrap().0)
+        } else {
+            bail!("no decode_lin_{k} for model {}", self.name)
+        }
+    }
+}
+
+impl ExeSpec {
+    fn from_json(name: &str, j: &Json) -> Result<ExeSpec> {
+        let file = req_str(j, "file", name)?;
+        let kind = req_str(j, "kind", name)?;
+        let kind = match kind.as_str() {
+            "prefill" => ExeKind::Prefill { prompt_len: req_usize(j, "prompt_len", name)? },
+            "decode_la" => ExeKind::DecodeLa {
+                w: req_usize(j, "w", name)?,
+                n: req_usize(j, "n", name)?,
+                g: req_usize(j, "g", name)?,
+                t_in: req_usize(j, "t_in", name)?,
+                attn: req_str(j, "attn", name)?,
+            },
+            "decode_lin" => ExeKind::DecodeLin { k: req_usize(j, "k", name)? },
+            "decode_gen" => ExeKind::DecodeGen { t_pad: req_usize(j, "t_pad", name)? },
+            "commit" => ExeKind::Commit {
+                t_in: req_usize(j, "t_in", name)?,
+                slots: req_usize(j, "slots", name)?,
+            },
+            other => bail!("unknown executable kind '{other}' for {name}"),
+        };
+        Ok(ExeSpec { file, kind })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> &'static str {
+        r#"{
+          "profile": "min", "prefill_len": 256, "commit_slots": 8,
+          "vocab": {"size": 259, "padded": 264, "pad": 256, "bos": 257, "eos": 258},
+          "models": {
+            "tiny": {
+              "config": {"name":"tiny","n_layers":2,"d_model":128,"n_heads":4,
+                         "n_kv_heads":4,"d_ff":352,"max_seq":768,"vocab":264,
+                         "rope_theta":10000.0,"norm_eps":1e-5,
+                         "head_dim":32,"params":500000},
+              "weights_file": "weights_tiny.npz",
+              "weight_names": ["embed","final_norm"],
+              "weight_shapes": [[264,128],[128]],
+              "cache_shape": [2,2,768,128],
+              "junk_row": 767,
+              "executables": {
+                "prefill": {"file":"tiny_prefill.hlo.txt","kind":"prefill","prompt_len":256},
+                "decode_lin_1": {"file":"a.hlo.txt","kind":"decode_lin","k":1,"t_in":1},
+                "decode_la_w5n3g5": {"file":"b.hlo.txt","kind":"decode_la",
+                  "w":5,"n":3,"g":5,"t_in":20,"n_lookahead":10,"tag":"w5n3g5","attn":"jnp"},
+                "decode_gen_64": {"file":"c.hlo.txt","kind":"decode_gen","t_pad":64,"t_in":64},
+                "commit_20": {"file":"d.hlo.txt","kind":"commit","t_in":20,"slots":8}
+              }
+            }
+          }
+        }"#
+    }
+
+    fn load_sample() -> Manifest {
+        let dir = std::env::temp_dir().join(format!("la-manifest-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), sample()).unwrap();
+        Manifest::load(&dir).unwrap()
+    }
+
+    #[test]
+    fn parses_sample() {
+        let m = load_sample();
+        assert_eq!(m.prefill_len, 256);
+        let tiny = m.model("tiny").unwrap();
+        assert_eq!(tiny.cache_shape, [2, 2, 768, 128]);
+        assert_eq!(tiny.capacity(), 767);
+        assert_eq!(tiny.executables.len(), 5);
+    }
+
+    #[test]
+    fn finds_executables() {
+        let m = load_sample();
+        let tiny = m.model("tiny").unwrap();
+        let (name, spec) = tiny.find_decode_la(5, 3, 5, "pallas").unwrap();
+        assert_eq!(name, "decode_la_w5n3g5"); // falls back to jnp impl
+        assert!(matches!(spec.kind, ExeKind::DecodeLa { t_in: 20, .. }));
+        assert_eq!(tiny.find_decode_gen(30), Some(("decode_gen_64", 64)));
+        assert!(tiny.find_decode_gen(100).is_none());
+        assert_eq!(tiny.commit_exe(20).unwrap(), "commit_20");
+        assert!(tiny.commit_exe(99).is_err());
+    }
+
+    #[test]
+    fn missing_model_errors() {
+        let m = load_sample();
+        assert!(m.model("nope").is_err());
+    }
+}

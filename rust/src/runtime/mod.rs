@@ -1,0 +1,24 @@
+//! PJRT runtime layer: load `artifacts/` (manifest + HLO text + npz weights),
+//! compile once per executable, and run steps with device-resident state.
+
+pub mod manifest;
+pub mod model;
+
+use anyhow::Result;
+
+pub use manifest::{ExeKind, Manifest, ModelManifest};
+pub use model::{Cache, Logits, ModelRuntime, StepOut};
+
+/// Create the PJRT CPU client (one per thread/device — the client is not
+/// Send; lookahead-parallel workers each build their own).
+pub fn cpu_client() -> Result<xla::PjRtClient> {
+    Ok(xla::PjRtClient::cpu()?)
+}
+
+/// Convenience: manifest + client + model runtime in one call.
+pub fn load_model(artifacts_dir: &str, model: &str) -> Result<(Manifest, ModelRuntime)> {
+    let manifest = Manifest::load(artifacts_dir)?;
+    let client = cpu_client()?;
+    let rt = ModelRuntime::load(&client, &manifest, model)?;
+    Ok((manifest, rt))
+}

@@ -1,0 +1,322 @@
+//! Per-model PJRT runtime: weights as device buffers, lazily compiled
+//! executables, and typed step calls (prefill / decode / commit).
+//!
+//! All heavy tensors (weights, KV cache, per-step new-KV) stay device-resident
+//! as `PjRtBuffer`s across calls — only token ids, scalars, and logits cross
+//! the host boundary per step (see the patched `untuple_result` note in
+//! `third_party/xla`).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+use xla::{FromRawBytes, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
+
+use crate::runtime::manifest::{ExeKind, Manifest, ModelManifest};
+use crate::{debug, info};
+
+/// Logits for the T step tokens: row-major [t, vocab_padded] f32.
+#[derive(Debug, Clone)]
+pub struct Logits {
+    pub data: Vec<f32>,
+    pub t: usize,
+    pub vocab: usize,
+}
+
+impl Logits {
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.vocab..(i + 1) * self.vocab]
+    }
+
+    pub fn argmax(&self, i: usize, vocab_live: usize) -> u32 {
+        let row = &self.row(i)[..vocab_live];
+        let mut best = 0usize;
+        let mut bv = f32::NEG_INFINITY;
+        for (j, &v) in row.iter().enumerate() {
+            if v > bv {
+                bv = v;
+                best = j;
+            }
+        }
+        best as u32
+    }
+}
+
+/// The committed-token KV cache, device-resident.
+pub struct Cache {
+    pub buf: PjRtBuffer,
+    /// valid committed rows (tokens *before* the current token)
+    pub len: usize,
+}
+
+/// Output of one decode step.
+pub struct StepOut {
+    pub logits: Logits,
+    /// [L, 2, T, Hk*D] — stays on device; handed to `commit`.
+    pub new_kv: PjRtBuffer,
+}
+
+pub struct ModelRuntime {
+    pub client: PjRtClient,
+    pub mm: ModelManifest,
+    pub prefill_len: usize,
+    pub commit_slots: usize,
+    pub vocab_padded: usize,
+    pub pad_id: u32,
+    weights: Vec<PjRtBuffer>,
+    exes: RefCell<BTreeMap<String, Rc<PjRtLoadedExecutable>>>,
+    dir: std::path::PathBuf,
+    /// wall-clock accounting: (compiles, executes)
+    pub exec_count: RefCell<u64>,
+}
+
+impl ModelRuntime {
+    pub fn load(client: &PjRtClient, manifest: &Manifest, model: &str) -> Result<Self> {
+        let mm = manifest.model(model)?.clone();
+        let npz = manifest.dir.join(&mm.weights_file);
+        let names: Vec<&str> = mm.weight_names.iter().map(String::as_str).collect();
+        let t0 = std::time::Instant::now();
+        let weights = PjRtBuffer::read_npz_by_name(&npz, client, &names)
+            .map_err(|e| anyhow!("loading {npz:?}: {e}"))?;
+        if weights.len() != mm.weight_names.len() {
+            bail!("weight count mismatch: {} vs {}", weights.len(), mm.weight_names.len());
+        }
+        info!("runtime", "loaded {} weights for '{model}' ({:.1}ms)",
+              weights.len(), t0.elapsed().as_secs_f64() * 1e3);
+        Ok(ModelRuntime {
+            client: client.clone(),
+            prefill_len: manifest.prefill_len,
+            commit_slots: manifest.commit_slots,
+            vocab_padded: manifest.vocab_padded,
+            pad_id: manifest.pad_id,
+            mm,
+            weights,
+            exes: RefCell::new(BTreeMap::new()),
+            dir: manifest.dir.clone(),
+            exec_count: RefCell::new(0),
+        })
+    }
+
+    /// Lazily compile an executable by manifest name.
+    pub fn exe(&self, name: &str) -> Result<Rc<PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self
+            .mm
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("no executable '{name}' for model {}", self.mm.name))?;
+        let path = self.dir.join(&spec.file);
+        let t0 = std::time::Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e}"))?;
+        debug!("runtime", "compiled {name} in {:.1}ms", t0.elapsed().as_secs_f64() * 1e3);
+        let rc = Rc::new(exe);
+        self.exes.borrow_mut().insert(name.to_string(), rc.clone());
+        Ok(rc)
+    }
+
+    pub fn precompile(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.exe(n)?;
+        }
+        Ok(())
+    }
+
+    // -- host<->device helpers ------------------------------------------------
+
+    fn tokens_buf(&self, tokens: &[u32], want_len: usize) -> Result<PjRtBuffer> {
+        let mut v: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        v.resize(want_len, self.pad_id as i32);
+        Ok(self.client.buffer_from_host_buffer(&v, &[want_len], None)?)
+    }
+
+    fn scalar_i32(&self, v: i32) -> Result<PjRtBuffer> {
+        // rank-0 via the host-buffer path: the copy is synchronous
+        // (kImmutableOnlyDuringCall), avoiding the literal path's
+        // transfer-ready Await (perf log in EXPERIMENTS.md §Perf)
+        Ok(self.client.buffer_from_host_buffer(&[v], &[], None)?)
+    }
+
+    fn i32_buf(&self, v: &[i32]) -> Result<PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(v, &[v.len()], None)?)
+    }
+
+    fn logits_from(&self, buf: &PjRtBuffer, t: usize) -> Result<Logits> {
+        let lit = buf.to_literal_sync()?;
+        let data = lit.to_vec::<f32>()?;
+        if data.len() != t * self.vocab_padded {
+            bail!("logits size {} != {}x{}", data.len(), t, self.vocab_padded);
+        }
+        Ok(Logits { data, t, vocab: self.vocab_padded })
+    }
+
+    fn run(&self, exe: &PjRtLoadedExecutable, args: &[&PjRtBuffer])
+           -> Result<Vec<PjRtBuffer>> {
+        *self.exec_count.borrow_mut() += 1;
+        let mut out = exe.execute_b(args)?;
+        if out.is_empty() || out[0].is_empty() {
+            bail!("executable returned no outputs");
+        }
+        Ok(out.remove(0))
+    }
+
+    // -- step calls -----------------------------------------------------------
+
+    /// Run prefill on a prompt (<= prefill_len tokens). Returns the per-token
+    /// logits, the cache (rows 0..P-1 filled), and cache_len = len-1: the KV
+    /// of every prompt token *except the current one* counts as committed.
+    pub fn prefill(&self, tokens: &[u32]) -> Result<(Logits, Cache)> {
+        if tokens.is_empty() {
+            bail!("empty prompt");
+        }
+        if tokens.len() > self.prefill_len {
+            bail!("prompt len {} > prefill capacity {}", tokens.len(), self.prefill_len);
+        }
+        let exe = self.exe("prefill")?;
+        let tb = self.tokens_buf(tokens, self.prefill_len)?;
+        let nv = self.scalar_i32(tokens.len() as i32)?;
+        let mut args: Vec<&PjRtBuffer> = self.weights.iter().collect();
+        args.push(&tb);
+        args.push(&nv);
+        let mut out = self.run(&exe, &args)?;
+        if out.len() != 2 {
+            bail!("prefill returned {} outputs, want 2", out.len());
+        }
+        let cache_buf = out.pop().unwrap();
+        let logits_buf = out.pop().unwrap();
+        let logits = self.logits_from(&logits_buf, self.prefill_len)?;
+        Ok((logits, Cache { buf: cache_buf, len: tokens.len() - 1 }))
+    }
+
+    /// One decode step through a specialized (decode_la / decode_lin)
+    /// executable. `tokens.len()` must equal the executable's t_in.
+    pub fn decode(&self, exe_name: &str, cache: &Cache, tokens: &[u32]) -> Result<StepOut> {
+        let spec_t = self
+            .mm
+            .executables
+            .get(exe_name)
+            .and_then(|s| s.kind.t_in())
+            .ok_or_else(|| anyhow!("'{exe_name}' is not a decode executable"))?;
+        if tokens.len() != spec_t {
+            bail!("'{exe_name}' expects {spec_t} tokens, got {}", tokens.len());
+        }
+        let exe = self.exe(exe_name)?;
+        let tb = self.tokens_buf(tokens, spec_t)?;
+        let cl = self.scalar_i32(cache.len as i32)?;
+        let mut args: Vec<&PjRtBuffer> = self.weights.iter().collect();
+        args.push(&cache.buf);
+        args.push(&cl);
+        args.push(&tb);
+        let mut out = self.run(&exe, &args)?;
+        if out.len() != 2 {
+            bail!("decode returned {} outputs, want 2", out.len());
+        }
+        let new_kv = out.pop().unwrap();
+        let logits = self.logits_from(&out.pop().unwrap(), spec_t)?;
+        Ok(StepOut { logits, new_kv })
+    }
+
+    /// Generic masked decode: caller provides the layout (tokens are padded
+    /// to the executable's t_pad by this function; mask rows for pad slots
+    /// must be pre-extended by the caller via `pad_mask`).
+    pub fn decode_generic(&self, exe_name: &str, cache: &Cache, tokens: &[u32],
+                          relpos: &[i32], mask: &[u8]) -> Result<StepOut> {
+        let t_pad = match self.mm.executables.get(exe_name).map(|s| &s.kind) {
+            Some(ExeKind::DecodeGen { t_pad }) => *t_pad,
+            _ => bail!("'{exe_name}' is not a decode_gen executable"),
+        };
+        if tokens.len() > t_pad || relpos.len() != t_pad || mask.len() != t_pad * t_pad {
+            bail!("generic decode arg shapes wrong for t_pad={t_pad}");
+        }
+        let exe = self.exe(exe_name)?;
+        let tb = self.tokens_buf(tokens, t_pad)?;
+        let cl = self.scalar_i32(cache.len as i32)?;
+        let rp = self.i32_buf(relpos)?;
+        let mb = self
+            .client
+            .buffer_from_host_raw_bytes(xla::ElementType::U8, mask, &[t_pad, t_pad], None)?;
+        let mut args: Vec<&PjRtBuffer> = self.weights.iter().collect();
+        args.push(&cache.buf);
+        args.push(&cl);
+        args.push(&tb);
+        args.push(&rp);
+        args.push(&mb);
+        let mut out = self.run(&exe, &args)?;
+        let new_kv = out.pop().ok_or_else(|| anyhow!("missing new_kv"))?;
+        let logits = self.logits_from(&out.pop().ok_or_else(|| anyhow!("missing logits"))?,
+                                      t_pad)?;
+        Ok(StepOut { logits, new_kv })
+    }
+
+    /// Scatter `count` accepted rows of `new_kv` (source indices `src_idx`)
+    /// into the cache starting at row `cache.len`; advances `cache.len`.
+    pub fn commit(&self, cache: Cache, new_kv: &PjRtBuffer, t_in: usize,
+                  src_idx: &[i32], count: usize) -> Result<Cache> {
+        if count > self.commit_slots || src_idx.len() > self.commit_slots {
+            bail!("commit count {count} exceeds slots {}", self.commit_slots);
+        }
+        if cache.len + count > self.mm.capacity() {
+            bail!("cache overflow: {} + {count} > {}", cache.len, self.mm.capacity());
+        }
+        let exe_name = self.mm.commit_exe(t_in)?.to_string();
+        let exe = self.exe(&exe_name)?;
+        let mut idx = src_idx.to_vec();
+        idx.resize(self.commit_slots, 0);
+        let ib = self.i32_buf(&idx)?;
+        let ds = self.scalar_i32(cache.len as i32)?;
+        let cnt = self.scalar_i32(count as i32)?;
+        let args: Vec<&PjRtBuffer> = vec![&cache.buf, new_kv, &ib, &ds, &cnt];
+        let mut out = self.run(&exe, &args)?;
+        let buf = out.pop().ok_or_else(|| anyhow!("commit returned nothing"))?;
+        Ok(Cache { buf, len: cache.len + count })
+    }
+
+    /// Extend a mask of live size t to the padded [t_pad x t_pad] layout
+    /// (pad rows see only themselves so softmax stays finite).
+    pub fn pad_mask(live: &[u8], t: usize, t_pad: usize) -> Vec<u8> {
+        assert_eq!(live.len(), t * t);
+        let mut m = vec![0u8; t_pad * t_pad];
+        for q in 0..t {
+            m[q * t_pad..q * t_pad + t].copy_from_slice(&live[q * t..(q + 1) * t]);
+        }
+        for q in t..t_pad {
+            m[q * t_pad + q] = 1;
+        }
+        m
+    }
+
+    pub fn executions(&self) -> u64 {
+        *self.exec_count.borrow()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pad_mask_extends() {
+        let live = vec![1, 0, 1, 1]; // 2x2
+        let m = ModelRuntime::pad_mask(&live, 2, 4);
+        #[rustfmt::skip]
+        let want = vec![
+            1,0,0,0,
+            1,1,0,0,
+            0,0,1,0,
+            0,0,0,1,
+        ];
+        assert_eq!(m, want);
+    }
+
+    #[test]
+    fn logits_argmax() {
+        let l = Logits { data: vec![0.0, 2.0, 1.0, 9.0, 1.0, 0.5, 0.2, 0.1], t: 2, vocab: 4 };
+        assert_eq!(l.argmax(0, 3), 1); // index 3 excluded by vocab_live
+        assert_eq!(l.argmax(1, 4), 0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Serving front (L3): request router, scheduler with back-pressure,
+//! dynamic worker pool, TCP JSON-lines protocol, in-process API.
+
+pub mod request;
+pub mod scheduler;
+pub mod server;
+pub mod worker;
+
+pub use request::{Request, Response};
+pub use scheduler::{Policy, Scheduler};
+pub use server::{client_request, serve_tcp, ServerConfig, ServerHandle};
+pub use worker::{Worker, WorkerConfig};

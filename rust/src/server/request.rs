@@ -1,0 +1,195 @@
+//! Request/response types + their JSON-lines wire format.
+
+use anyhow::{anyhow, Result};
+
+use crate::engine::{GenParams, SamplingParams};
+use crate::metrics::DecodeStats;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: String,
+    pub max_tokens: usize,
+    pub temperature: f64,
+    pub top_k: usize,
+    pub top_p: f64,
+    /// decoding method: "lookahead" (default), "autoregressive", "jacobi",
+    /// "spec_decode", "prompt_lookup"
+    pub method: String,
+    /// optional (W,N,G) override for lookahead
+    pub wng: Option<(usize, usize, usize)>,
+    pub seed: u64,
+}
+
+impl Default for Request {
+    fn default() -> Self {
+        Request {
+            id: 0,
+            prompt: String::new(),
+            max_tokens: 64,
+            temperature: 0.0,
+            top_k: 0,
+            top_p: 1.0,
+            method: "lookahead".into(),
+            wng: None,
+            seed: 0,
+        }
+    }
+}
+
+impl Request {
+    pub fn gen_params(&self) -> GenParams {
+        GenParams {
+            max_new_tokens: self.max_tokens,
+            sampling: SamplingParams {
+                temperature: self.temperature,
+                top_k: self.top_k,
+                top_p: self.top_p,
+            },
+            stop_at_eos: true,
+            seed: self.seed,
+        }
+    }
+
+    /// Parse one JSON line: {"prompt": "...", "max_tokens": 64, ...}
+    pub fn from_json_line(id: u64, line: &str) -> Result<Request> {
+        let j = Json::parse(line).map_err(|e| anyhow!("bad request json: {e}"))?;
+        let prompt = j
+            .get("prompt")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("request missing 'prompt'"))?
+            .to_string();
+        let mut r = Request { id, prompt, ..Default::default() };
+        if let Some(v) = j.get("max_tokens").and_then(Json::as_usize) {
+            r.max_tokens = v.clamp(1, 4096);
+        }
+        if let Some(v) = j.get("temperature").and_then(Json::as_f64) {
+            r.temperature = v.max(0.0);
+        }
+        if let Some(v) = j.get("top_k").and_then(Json::as_usize) {
+            r.top_k = v;
+        }
+        if let Some(v) = j.get("top_p").and_then(Json::as_f64) {
+            r.top_p = v.clamp(0.0, 1.0);
+        }
+        if let Some(v) = j.get("method").and_then(Json::as_str) {
+            r.method = v.to_string();
+        }
+        if let Some(v) = j.get("seed").and_then(Json::as_i64) {
+            r.seed = v as u64;
+        }
+        if let Some(arr) = j.get("wng").and_then(Json::as_arr) {
+            if arr.len() == 3 {
+                let v: Vec<usize> = arr.iter().filter_map(Json::as_usize).collect();
+                if v.len() == 3 {
+                    r.wng = Some((v[0], v[1], v[2]));
+                }
+            }
+        }
+        Ok(r)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub text: String,
+    pub tokens: usize,
+    pub steps: usize,
+    pub compression: f64,
+    pub wall_ms: f64,
+    pub queue_ms: f64,
+    pub error: Option<String>,
+}
+
+impl Response {
+    pub fn ok(id: u64, text: String, stats: &DecodeStats, queue_ms: f64) -> Response {
+        Response {
+            id,
+            text,
+            tokens: stats.generated_tokens,
+            steps: stats.decode_steps,
+            compression: stats.compression(),
+            wall_ms: stats.wall.as_secs_f64() * 1e3,
+            queue_ms,
+            error: None,
+        }
+    }
+
+    pub fn err(id: u64, msg: String) -> Response {
+        Response {
+            id,
+            text: String::new(),
+            tokens: 0,
+            steps: 0,
+            compression: 0.0,
+            wall_ms: 0.0,
+            queue_ms: 0.0,
+            error: Some(msg),
+        }
+    }
+
+    pub fn to_json_line(&self) -> String {
+        let mut fields = vec![
+            ("id", Json::num(self.id as f64)),
+            ("text", Json::str(self.text.clone())),
+            ("tokens", Json::num(self.tokens as f64)),
+            ("steps", Json::num(self.steps as f64)),
+            ("compression", Json::num((self.compression * 1000.0).round() / 1000.0)),
+            ("wall_ms", Json::num((self.wall_ms * 100.0).round() / 100.0)),
+            ("queue_ms", Json::num((self.queue_ms * 100.0).round() / 100.0)),
+        ];
+        if let Some(e) = &self.error {
+            fields.push(("error", Json::str(e.clone())));
+        }
+        Json::obj(fields).dump()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_request() {
+        let r = Request::from_json_line(3, r#"{"prompt": "hi"}"#).unwrap();
+        assert_eq!(r.id, 3);
+        assert_eq!(r.prompt, "hi");
+        assert_eq!(r.method, "lookahead");
+        assert_eq!(r.max_tokens, 64);
+    }
+
+    #[test]
+    fn parses_full_request() {
+        let r = Request::from_json_line(
+            1,
+            r#"{"prompt":"x","max_tokens":10,"temperature":0.7,"method":"autoregressive","wng":[5,3,5],"seed":9}"#,
+        )
+        .unwrap();
+        assert_eq!(r.max_tokens, 10);
+        assert!((r.temperature - 0.7).abs() < 1e-12);
+        assert_eq!(r.method, "autoregressive");
+        assert_eq!(r.wng, Some((5, 3, 5)));
+        assert_eq!(r.seed, 9);
+    }
+
+    #[test]
+    fn rejects_missing_prompt() {
+        assert!(Request::from_json_line(0, r#"{"max_tokens": 4}"#).is_err());
+        assert!(Request::from_json_line(0, "not json").is_err());
+    }
+
+    #[test]
+    fn response_roundtrips_as_json() {
+        let mut stats = DecodeStats::default();
+        stats.record_accept(2);
+        stats.wall = std::time::Duration::from_millis(12);
+        let line = Response::ok(7, "out".into(), &stats, 1.5).to_json_line();
+        let j = Json::parse(&line).unwrap();
+        assert_eq!(j.get("id").unwrap().as_usize(), Some(7));
+        assert_eq!(j.get("text").unwrap().as_str(), Some("out"));
+        assert_eq!(j.get("tokens").unwrap().as_usize(), Some(2));
+        assert!(j.get("error").is_none());
+    }
+}

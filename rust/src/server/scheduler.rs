@@ -1,0 +1,175 @@
+//! Request scheduler: a thread-safe queue with pluggable admission policies.
+//!
+//! The paper serves batch-1 requests; throughput comes from assigning queued
+//! requests to idle engine workers. Policies: FIFO (arrival order) and SJF
+//! (shortest-prompt-first, reduces head-of-line blocking for mixed lengths).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use crate::server::request::Request;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    Fifo,
+    ShortestFirst,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Policy {
+        match s {
+            "sjf" | "shortest" => Policy::ShortestFirst,
+            _ => Policy::Fifo,
+        }
+    }
+}
+
+struct Entry {
+    req: Request,
+    arrived: Instant,
+}
+
+#[derive(Default)]
+struct State {
+    queue: VecDeque<Entry>,
+    closed: bool,
+}
+
+pub struct Scheduler {
+    state: Mutex<State>,
+    cv: Condvar,
+    policy: Policy,
+    /// back-pressure: reject when the queue is deeper than this.
+    max_depth: usize,
+}
+
+pub struct Popped {
+    pub req: Request,
+    pub queued_ms: f64,
+}
+
+impl Scheduler {
+    pub fn new(policy: Policy, max_depth: usize) -> Self {
+        Scheduler {
+            state: Mutex::new(State::default()),
+            cv: Condvar::new(),
+            policy,
+            max_depth: max_depth.max(1),
+        }
+    }
+
+    /// Enqueue; Err(req) when the queue is full (back-pressure signal).
+    pub fn push(&self, req: Request) -> Result<(), Request> {
+        let mut st = self.state.lock().unwrap();
+        if st.queue.len() >= self.max_depth {
+            return Err(req);
+        }
+        st.queue.push_back(Entry { req, arrived: Instant::now() });
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; None once closed and drained.
+    pub fn pop(&self) -> Option<Popped> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(idx) = self.select(&st.queue) {
+                let e = st.queue.remove(idx).unwrap();
+                return Some(Popped {
+                    req: e.req,
+                    queued_ms: e.arrived.elapsed().as_secs_f64() * 1e3,
+                });
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    fn select(&self, q: &VecDeque<Entry>) -> Option<usize> {
+        if q.is_empty() {
+            return None;
+        }
+        match self.policy {
+            Policy::Fifo => Some(0),
+            Policy::ShortestFirst => {
+                let mut best = 0;
+                for i in 1..q.len() {
+                    if q[i].req.prompt.len() < q[best].req.prompt.len() {
+                        best = i;
+                    }
+                }
+                Some(best)
+            }
+        }
+    }
+
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn req(id: u64, prompt: &str) -> Request {
+        Request { id, prompt: prompt.into(), ..Default::default() }
+    }
+
+    #[test]
+    fn fifo_order() {
+        let s = Scheduler::new(Policy::Fifo, 16);
+        s.push(req(1, "aaa")).unwrap();
+        s.push(req(2, "b")).unwrap();
+        assert_eq!(s.pop().unwrap().req.id, 1);
+        assert_eq!(s.pop().unwrap().req.id, 2);
+    }
+
+    #[test]
+    fn sjf_prefers_short_prompts() {
+        let s = Scheduler::new(Policy::ShortestFirst, 16);
+        s.push(req(1, "aaaaaaaa")).unwrap();
+        s.push(req(2, "b")).unwrap();
+        s.push(req(3, "cc")).unwrap();
+        assert_eq!(s.pop().unwrap().req.id, 2);
+        assert_eq!(s.pop().unwrap().req.id, 3);
+        assert_eq!(s.pop().unwrap().req.id, 1);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let s = Scheduler::new(Policy::Fifo, 2);
+        s.push(req(1, "a")).unwrap();
+        s.push(req(2, "b")).unwrap();
+        assert!(s.push(req(3, "c")).is_err());
+        assert_eq!(s.depth(), 2);
+    }
+
+    #[test]
+    fn close_unblocks_pop() {
+        let s = Arc::new(Scheduler::new(Policy::Fifo, 4));
+        let s2 = s.clone();
+        let h = std::thread::spawn(move || s2.pop().is_none());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        s.close();
+        assert!(h.join().unwrap());
+    }
+
+    #[test]
+    fn drains_after_close() {
+        let s = Scheduler::new(Policy::Fifo, 4);
+        s.push(req(1, "a")).unwrap();
+        s.close();
+        assert!(s.pop().is_some());
+        assert!(s.pop().is_none());
+    }
+}

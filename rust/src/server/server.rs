@@ -1,0 +1,212 @@
+//! The serving front (vLLM-router-like, thread-based — no tokio offline):
+//!
+//!   TCP conn ──lines──> parse ──> Scheduler (FIFO/SJF, back-pressure)
+//!                                   │ pop
+//!                              Worker pool (one PJRT runtime each)
+//!                                   │ Response
+//!                              dispatcher ──> per-connection channel
+//!
+//! Also exposes an in-process `ServerHandle::submit` used by the examples
+//! and the e2e bench driver.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{Context, Result};
+
+use crate::info;
+use crate::metrics::Registry;
+use crate::server::request::{Request, Response};
+use crate::server::scheduler::{Policy, Scheduler};
+use crate::server::worker::{Worker, WorkerConfig};
+
+pub struct ServerConfig {
+    pub workers: usize,
+    pub policy: Policy,
+    pub queue_depth: usize,
+    pub worker: WorkerConfig,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            workers: 1,
+            policy: Policy::Fifo,
+            queue_depth: 256,
+            worker: WorkerConfig::default(),
+        }
+    }
+}
+
+/// In-process handle: submit requests, receive responses, shut down.
+pub struct ServerHandle {
+    sched: Arc<Scheduler>,
+    pending: Arc<Mutex<HashMap<u64, Sender<Response>>>>,
+    next_id: AtomicU64,
+    pub metrics: Arc<Mutex<Registry>>,
+    worker_joins: Vec<std::thread::JoinHandle<()>>,
+    dispatcher: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn start(cfg: ServerConfig) -> Result<ServerHandle> {
+        let sched = Arc::new(Scheduler::new(cfg.policy, cfg.queue_depth));
+        let pending: Arc<Mutex<HashMap<u64, Sender<Response>>>> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let metrics = Arc::new(Mutex::new(Registry::new()));
+        let (tx, rx): (Sender<Response>, Receiver<Response>) = channel();
+
+        let mut worker_joins = Vec::new();
+        for wid in 0..cfg.workers.max(1) {
+            let sched_c = sched.clone();
+            let tx_c = tx.clone();
+            let wcfg = cfg.worker.clone();
+            worker_joins.push(std::thread::spawn(move || {
+                match Worker::start(wid, wcfg) {
+                    Ok(w) => w.run(sched_c, tx_c),
+                    Err(e) => eprintln!("[ERROR] worker {wid} failed to start: {e}"),
+                }
+            }));
+        }
+        drop(tx);
+
+        // dispatcher: route worker responses to the submitting channel
+        let pending_c = pending.clone();
+        let metrics_c = metrics.clone();
+        let dispatcher = std::thread::spawn(move || {
+            while let Ok(resp) = rx.recv() {
+                {
+                    let mut m = metrics_c.lock().unwrap();
+                    if resp.error.is_none() {
+                        m.inc("responses_ok", 1);
+                        m.inc("tokens_out", resp.tokens as u64);
+                        m.observe("latency_ms", resp.wall_ms);
+                        m.observe("queue_ms", resp.queue_ms);
+                        m.observe("compression", resp.compression);
+                    } else {
+                        m.inc("responses_err", 1);
+                    }
+                }
+                let reply = pending_c.lock().unwrap().remove(&resp.id);
+                if let Some(ch) = reply {
+                    let _ = ch.send(resp);
+                }
+            }
+        });
+
+        Ok(ServerHandle {
+            sched,
+            pending,
+            next_id: AtomicU64::new(1),
+            metrics,
+            worker_joins,
+            dispatcher: Some(dispatcher),
+        })
+    }
+
+    /// Submit a request; returns the channel the response will arrive on.
+    pub fn submit(&self, mut req: Request) -> Result<Receiver<Response>> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        req.id = id;
+        let (tx, rx) = channel();
+        self.pending.lock().unwrap().insert(id, tx);
+        self.metrics.lock().unwrap().inc("requests", 1);
+        if let Err(rejected) = self.sched.push(req) {
+            self.pending.lock().unwrap().remove(&id);
+            self.metrics.lock().unwrap().inc("rejected", 1);
+            anyhow::bail!("queue full, request {} rejected", rejected.id);
+        }
+        Ok(rx)
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.sched.depth()
+    }
+
+    /// Close the queue and join all threads (drains in-flight work first).
+    pub fn shutdown(mut self) {
+        self.sched.close();
+        for j in self.worker_joins.drain(..) {
+            let _ = j.join();
+        }
+        if let Some(d) = self.dispatcher.take() {
+            let _ = d.join();
+        }
+    }
+}
+
+/// TCP front: JSON-lines protocol, one connection per client.
+/// Runs until `max_conns` connections have been served (None = forever).
+pub fn serve_tcp(addr: &str, cfg: ServerConfig, max_conns: Option<usize>) -> Result<()> {
+    let handle = Arc::new(ServerHandle::start(cfg)?);
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    info!("server", "listening on {addr}");
+    let mut served = 0usize;
+    let mut conn_joins = Vec::new();
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let h = handle.clone();
+        conn_joins.push(std::thread::spawn(move || {
+            if let Err(e) = handle_conn(stream, &h) {
+                crate::util::log::log(crate::util::log::Level::Warn, "server",
+                                      &format!("connection error: {e}"));
+            }
+        }));
+        served += 1;
+        if let Some(m) = max_conns {
+            if served >= m {
+                break;
+            }
+        }
+    }
+    for j in conn_joins {
+        let _ = j.join();
+    }
+    match Arc::try_unwrap(handle) {
+        Ok(h) => h.shutdown(),
+        Err(_) => {}
+    }
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, handle: &ServerHandle) -> Result<()> {
+    let peer = stream.peer_addr()?;
+    info!("server", "connection from {peer}");
+    let reader = BufReader::new(stream.try_clone()?);
+    let mut out = stream;
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let resp = match Request::from_json_line(0, &line) {
+            Ok(req) => match handle.submit(req) {
+                Ok(rx) => rx.recv().unwrap_or_else(|_| {
+                    Response::err(0, "server shutting down".into())
+                }),
+                Err(e) => Response::err(0, e.to_string()),
+            },
+            Err(e) => Response::err(0, e.to_string()),
+        };
+        out.write_all(resp.to_json_line().as_bytes())?;
+        out.write_all(b"\n")?;
+        out.flush()?;
+    }
+    Ok(())
+}
+
+/// Minimal client for the JSON-lines protocol (examples + CLI).
+pub fn client_request(addr: &str, req_json: &str) -> Result<String> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    stream.write_all(req_json.as_bytes())?;
+    stream.write_all(b"\n")?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    Ok(line.trim_end().to_string())
+}

@@ -1,0 +1,126 @@
+//! Engine workers: each worker thread owns its PJRT client, model runtime,
+//! and a cache of decoder instances (the PJRT client is not Send — per-thread
+//! ownership is mandatory, and it also mirrors lookahead parallelism's
+//! full-model-per-device design).
+
+use std::collections::HashMap;
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::engine::autoregressive::AutoRegressive;
+use crate::engine::jacobi::Jacobi;
+use crate::engine::lookahead::Lookahead;
+use crate::engine::prompt_lookup::PromptLookup;
+use crate::engine::spec_decode::SpecDecode;
+use crate::engine::Decoder;
+use crate::info;
+use crate::runtime::{cpu_client, Manifest, ModelRuntime};
+use crate::server::request::{Request, Response};
+use crate::server::scheduler::Scheduler;
+use crate::tokenizer::ByteTokenizer;
+
+#[derive(Debug, Clone)]
+pub struct WorkerConfig {
+    pub artifacts_dir: String,
+    pub model: String,
+    /// default (W,N,G) when the request does not override it
+    pub wng: (usize, usize, usize),
+    pub draft_model: String,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        WorkerConfig {
+            artifacts_dir: "artifacts".into(),
+            model: "tiny".into(),
+            wng: (5, 3, 5),
+            draft_model: "draft".into(),
+        }
+    }
+}
+
+pub struct Worker {
+    pub id: usize,
+    cfg: WorkerConfig,
+    manifest: Manifest,
+    rt: ModelRuntime,
+    engines: HashMap<String, Box<dyn Decoder>>,
+    tok: ByteTokenizer,
+}
+
+impl Worker {
+    pub fn start(id: usize, cfg: WorkerConfig) -> Result<Worker> {
+        let manifest = Manifest::load(&cfg.artifacts_dir)?;
+        let client = cpu_client()?;
+        let rt = ModelRuntime::load(&client, &manifest, &cfg.model)?;
+        Ok(Worker { id, cfg, manifest, rt, engines: HashMap::new(), tok: ByteTokenizer::new() })
+    }
+
+    fn engine_key(&self, req: &Request) -> String {
+        match (&req.method[..], req.wng) {
+            ("lookahead", Some((w, n, g))) => format!("lookahead:{w},{n},{g}"),
+            (m, _) => m.to_string(),
+        }
+    }
+
+    fn make_engine(&self, req: &Request) -> Result<Box<dyn Decoder>> {
+        let (w, n, g) = req.wng.unwrap_or(self.cfg.wng);
+        Ok(match &req.method[..] {
+            "lookahead" => Box::new(Lookahead::with_wng(w, n, g)),
+            "autoregressive" | "greedy" | "ar" => Box::new(AutoRegressive::new()),
+            "jacobi" => Box::new(Jacobi::new(8)),
+            "prompt_lookup" => Box::new(PromptLookup::new(8, 1)),
+            "spec_decode" => {
+                let draft =
+                    ModelRuntime::load(&self.rt.client, &self.manifest, &self.cfg.draft_model)?;
+                Box::new(SpecDecode::new(draft, 4))
+            }
+            other => return Err(anyhow!("unknown decoding method '{other}'")),
+        })
+    }
+
+    /// Token budget: keep the BOS + the most recent prompt bytes that fit.
+    fn encode_prompt(&self, prompt: &str) -> Vec<u32> {
+        let mut ids = self.tok.encode_with_bos(prompt);
+        let cap = self.rt.prefill_len;
+        if ids.len() > cap {
+            let tail = ids.len() - (cap - 1);
+            let mut v = vec![crate::tokenizer::BOS_ID];
+            v.extend_from_slice(&ids[tail..]);
+            ids = v;
+        }
+        ids
+    }
+
+    pub fn handle(&mut self, req: &Request, queued_ms: f64) -> Response {
+        let key = self.engine_key(req);
+        if !self.engines.contains_key(&key) {
+            match self.make_engine(req) {
+                Ok(e) => {
+                    self.engines.insert(key.clone(), e);
+                }
+                Err(e) => return Response::err(req.id, e.to_string()),
+            }
+        }
+        let ids = self.encode_prompt(&req.prompt);
+        let engine = self.engines.get_mut(&key).unwrap();
+        match engine.generate(&self.rt, &ids, &req.gen_params()) {
+            Ok(out) => Response::ok(req.id, out.text, &out.stats, queued_ms),
+            Err(e) => Response::err(req.id, e.to_string()),
+        }
+    }
+
+    /// Worker main loop: drain the scheduler until it closes.
+    pub fn run(mut self, sched: Arc<Scheduler>, replies: Sender<Response>) {
+        info!("worker", "worker {} ready (model={})", self.id, self.cfg.model);
+        while let Some(popped) = sched.pop() {
+            let resp = self.handle(&popped.req, popped.queued_ms);
+            if replies.send(resp).is_err() {
+                break; // server gone
+            }
+        }
+        info!("worker", "worker {} shutting down", self.id);
+    }
+}

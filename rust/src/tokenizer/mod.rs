@@ -1,0 +1,94 @@
+//! Byte-level tokenizer mirroring `python/compile/corpus.py` / `config.py`.
+//!
+//! Vocabulary: 256 raw bytes + PAD/BOS/EOS specials; model logits are padded
+//! to a multiple of 8 (`VOCAB_PADDED`) — ids in the pad tail are never
+//! sampled (the engines truncate logits at `VOCAB_SIZE`).
+
+pub const VOCAB_BYTES: u32 = 256;
+pub const PAD_ID: u32 = 256;
+pub const BOS_ID: u32 = 257;
+pub const EOS_ID: u32 = 258;
+pub const VOCAB_SIZE: u32 = 259;
+pub const VOCAB_PADDED: u32 = 264;
+
+#[derive(Debug, Clone, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn new() -> Self {
+        ByteTokenizer
+    }
+
+    /// Encode UTF-8 text to token ids (raw bytes).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.as_bytes().iter().map(|&b| b as u32).collect()
+    }
+
+    /// Encode with a leading BOS (prompt form used by the engines).
+    pub fn encode_with_bos(&self, text: &str) -> Vec<u32> {
+        let mut v = Vec::with_capacity(text.len() + 1);
+        v.push(BOS_ID);
+        v.extend(self.encode(text));
+        v
+    }
+
+    /// Decode ids back to text; specials are dropped, non-UTF8 byte runs are
+    /// replaced (lossy) — generation can emit arbitrary bytes.
+    pub fn decode(&self, ids: &[u32]) -> String {
+        let bytes: Vec<u8> =
+            ids.iter().filter(|&&t| t < VOCAB_BYTES).map(|&t| t as u8).collect();
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    pub fn is_special(&self, id: u32) -> bool {
+        id >= VOCAB_BYTES
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::{forall, gen};
+
+    #[test]
+    fn ascii_roundtrip() {
+        let t = ByteTokenizer::new();
+        let s = "def add(a, b):\n    return a + b\n";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn bos_prepended() {
+        let t = ByteTokenizer::new();
+        let ids = t.encode_with_bos("hi");
+        assert_eq!(ids, vec![BOS_ID, b'h' as u32, b'i' as u32]);
+    }
+
+    #[test]
+    fn specials_dropped_on_decode() {
+        let t = ByteTokenizer::new();
+        assert_eq!(t.decode(&[BOS_ID, b'x' as u32, EOS_ID, PAD_ID]), "x");
+    }
+
+    #[test]
+    fn utf8_roundtrip() {
+        let t = ByteTokenizer::new();
+        let s = "héllo → 世界";
+        assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn prop_roundtrip_byte_tokens() {
+        // any ASCII byte sequence round-trips exactly
+        forall(200, 17, gen::vec_of(0, 64, |r| r.below(128) as u32), |ids| {
+            let t = ByteTokenizer::new();
+            let text = t.decode(ids);
+            let re = t.encode(&text);
+            if &re == ids {
+                Ok(())
+            } else {
+                Err(format!("{ids:?} != {re:?}"))
+            }
+        });
+    }
+}

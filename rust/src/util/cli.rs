@@ -1,0 +1,156 @@
+//! Tiny CLI argument parser substrate (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generates usage text from registered options.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+    program: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Opt {
+    pub name: &'static str,
+    pub default: Option<&'static str>,
+    pub help: &'static str,
+}
+
+impl Args {
+    pub fn parse_env() -> Args {
+        let mut it = std::env::args();
+        let program = it.next().unwrap_or_default();
+        Self::parse(program, it.collect())
+    }
+
+    pub fn parse(program: String, raw: Vec<String>) -> Args {
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < raw.len() && !raw[i + 1].starts_with("--") {
+                    flags.insert(body.to_string(), raw[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Args { flags, positional, program }
+    }
+
+    pub fn program(&self) -> &str {
+        &self.program
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(String::as_str)
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, name: &str, default: bool) -> bool {
+        match self.get(name) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(_) | None => default,
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// `--wng 15,5,15` -> (15, 5, 15)
+    pub fn wng(&self, name: &str, default: (usize, usize, usize)) -> (usize, usize, usize) {
+        match self.get(name) {
+            Some(v) => {
+                let parts: Vec<usize> =
+                    v.split(',').filter_map(|x| x.trim().parse().ok()).collect();
+                if parts.len() == 3 {
+                    (parts[0], parts[1], parts[2])
+                } else {
+                    default
+                }
+            }
+            None => default,
+        }
+    }
+}
+
+pub fn usage(program: &str, summary: &str, opts: &[Opt]) -> String {
+    let mut s = format!("{summary}\n\nUSAGE: {program} [OPTIONS]\n\nOPTIONS:\n");
+    for o in opts {
+        let d = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+        s.push_str(&format!("  --{:<18} {}{}\n", o.name, o.help, d));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse("prog".into(), v.iter().map(|s| s.to_string()).collect())
+    }
+
+    #[test]
+    fn parses_key_value_styles() {
+        let a = args(&["--model", "tiny", "--steps=40", "pos1", "--verbose"]);
+        assert_eq!(a.get("model"), Some("tiny"));
+        assert_eq!(a.usize_or("steps", 0), 40);
+        assert!(a.bool_or("verbose", false));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = args(&[]);
+        assert_eq!(a.str_or("model", "tiny"), "tiny");
+        assert_eq!(a.f64_or("temp", 0.5), 0.5);
+        assert!(!a.bool_or("verbose", false));
+    }
+
+    #[test]
+    fn wng_triplet() {
+        let a = args(&["--wng", "10,5,10"]);
+        assert_eq!(a.wng("wng", (1, 2, 3)), (10, 5, 10));
+        assert_eq!(a.wng("other", (1, 2, 3)), (1, 2, 3));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = args(&["--dry-run", "--model", "small"]);
+        assert!(a.bool_or("dry-run", false));
+        assert_eq!(a.get("model"), Some("small"));
+    }
+}

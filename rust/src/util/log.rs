@@ -1,0 +1,80 @@
+//! Leveled stderr logger with a global verbosity switch.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn set_from_env() {
+    match std::env::var("LOOKAHEAD_LOG").as_deref() {
+        Ok("debug") => set_level(Level::Debug),
+        Ok("warn") => set_level(Level::Warn),
+        Ok("error") => set_level(Level::Error),
+        _ => {}
+    }
+}
+
+pub fn enabled(l: Level) -> bool {
+    (l as u8) <= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(l: Level, target: &str, msg: &str) {
+    if enabled(l) {
+        let tag = match l {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+        };
+        eprintln!("[{tag}] {target}: {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Info, $target,
+                               &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Debug, $target,
+                               &format!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::log::log($crate::util::log::Level::Warn, $target,
+                               &format!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,187 @@
+//! Mini property-based testing harness (no `proptest` offline).
+//!
+//! `forall(cases, gen, check)` draws `cases` random inputs from `gen` and, on
+//! failure, greedily shrinks via the value's `Shrink` implementation before
+//! reporting the minimal counterexample. Used by the coordinator invariant
+//! tests (ngram pool, window update, verification, scheduler).
+
+use crate::util::rng::Rng;
+
+pub trait Shrink: Sized {
+    /// Candidate strictly-smaller values, most aggressive first.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for u32 {
+    fn shrink(&self) -> Vec<u32> {
+        (*self as usize).shrink().into_iter().map(|x| x as u32).collect()
+    }
+}
+
+impl Shrink for i32 {
+    fn shrink(&self) -> Vec<i32> {
+        let mut out = Vec::new();
+        if *self != 0 {
+            out.push(0);
+            out.push(self / 2);
+        }
+        out
+    }
+}
+
+impl<T: Clone + Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Vec<T>> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        out.push(Vec::new());
+        out.push(self[..self.len() / 2].to_vec());
+        out.push(self[1..].to_vec());
+        out.push(self[..self.len() - 1].to_vec());
+        // element-wise shrink of the first shrinkable element
+        for (i, x) in self.iter().enumerate() {
+            if let Some(sx) = x.shrink().into_iter().next() {
+                let mut v = self.clone();
+                v[i] = sx;
+                out.push(v);
+                break;
+            }
+        }
+        out
+    }
+}
+
+impl<A: Clone + Shrink, B: Clone + Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<(A, B)> {
+        let mut out: Vec<(A, B)> =
+            self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+impl<A: Clone + Shrink, B: Clone + Shrink, C: Clone + Shrink> Shrink for (A, B, C) {
+    fn shrink(&self) -> Vec<(A, B, C)> {
+        let mut out: Vec<(A, B, C)> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone(), self.2.clone()))
+            .collect();
+        out.extend(
+            self.1.shrink().into_iter().map(|b| (self.0.clone(), b, self.2.clone())),
+        );
+        out.extend(
+            self.2.shrink().into_iter().map(|c| (self.0.clone(), self.1.clone(), c)),
+        );
+        out
+    }
+}
+
+/// Run `check` on `cases` random inputs; panic with a shrunk counterexample.
+pub fn forall<T, G, C>(cases: usize, seed: u64, mut gen: G, mut check: C)
+where
+    T: Clone + std::fmt::Debug + Shrink,
+    G: FnMut(&mut Rng) -> T,
+    C: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = check(&input) {
+            // Greedy shrink: first failing candidate wins, up to a depth cap.
+            let mut best = input.clone();
+            let mut best_msg = msg;
+            'outer: for _ in 0..200 {
+                for cand in best.shrink() {
+                    if let Err(m) = check(&cand) {
+                        best = cand;
+                        best_msg = m;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}/{cases}, seed {seed}):\n  \
+                 input (shrunk): {best:?}\n  error: {best_msg}"
+            );
+        }
+    }
+}
+
+/// Convenience generators.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    pub fn usize_in(lo: usize, hi: usize) -> impl FnMut(&mut Rng) -> usize {
+        move |r| r.range(lo, hi)
+    }
+
+    pub fn vec_of<T>(
+        len_lo: usize,
+        len_hi: usize,
+        mut item: impl FnMut(&mut Rng) -> T,
+    ) -> impl FnMut(&mut Rng) -> Vec<T> {
+        move |r| {
+            let n = r.range(len_lo, len_hi);
+            (0..n).map(|_| item(r)).collect()
+        }
+    }
+
+    pub fn tokens(len_lo: usize, len_hi: usize) -> impl FnMut(&mut Rng) -> Vec<u32> {
+        vec_of(len_lo, len_hi, |r| r.below(256) as u32)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        forall(200, 1, gen::usize_in(0, 1000), |&x| {
+            if x < 1000 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn fails_and_shrinks() {
+        forall(500, 2, gen::tokens(0, 50), |v| {
+            if v.len() < 10 {
+                Ok(())
+            } else {
+                Err(format!("len {}", v.len()))
+            }
+        });
+    }
+
+    #[test]
+    fn shrink_vec_produces_smaller() {
+        let v = vec![5u32, 6, 7, 8];
+        for s in v.shrink() {
+            assert!(s.len() < v.len() || s.iter().sum::<u32>() < v.iter().sum());
+        }
+    }
+}

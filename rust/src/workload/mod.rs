@@ -1,0 +1,91 @@
+//! Evaluation workload suites: deterministic prompt sets generated at
+//! artifact-build time by `python/compile/corpus.py` (substitutes for
+//! MT-Bench / HumanEval / GSM8K / MBPP / ClassEval / XSum — DESIGN.md §2)
+//! and loaded from `artifacts/workloads.json`.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Suite name -> prompts. Names: chat, code, class-code, math, summarize.
+#[derive(Debug, Clone)]
+pub struct Workloads {
+    pub suites: BTreeMap<String, Vec<String>>,
+}
+
+pub const SUITE_NAMES: [&str; 5] = ["chat", "class-code", "code", "math", "summarize"];
+
+/// Which paper dataset each suite substitutes (for bench table headers).
+pub fn paper_dataset(suite: &str) -> &'static str {
+    match suite {
+        "chat" => "MT-Bench",
+        "code" => "HumanEval",
+        "class-code" => "ClassEval",
+        "math" => "GSM8K",
+        "summarize" => "XSum/CNN-DM",
+        _ => "?",
+    }
+}
+
+impl Workloads {
+    pub fn load(artifacts_dir: impl AsRef<Path>) -> Result<Workloads> {
+        let path = artifacts_dir.as_ref().join("workloads.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts`"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        let suites_j = j
+            .get("suites")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("workloads.json: missing suites object"))?;
+        let mut suites = BTreeMap::new();
+        for (name, arr) in suites_j {
+            let prompts = arr
+                .str_vec()
+                .ok_or_else(|| anyhow!("suite {name}: not a string array"))?;
+            suites.insert(name.clone(), prompts);
+        }
+        Ok(Workloads { suites })
+    }
+
+    pub fn suite(&self, name: &str) -> Result<&[String]> {
+        self.suites
+            .get(name)
+            .map(Vec::as_slice)
+            .ok_or_else(|| anyhow!("no workload suite '{name}' (have {:?})",
+                                   self.suites.keys().collect::<Vec<_>>()))
+    }
+
+    /// First `n` prompts of a suite (benches subsample for time budget).
+    pub fn take(&self, name: &str, n: usize) -> Result<Vec<String>> {
+        Ok(self.suite(name)?.iter().take(n).cloned().collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_workloads_json_shape() {
+        let dir = std::env::temp_dir().join(format!("la-wl-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("workloads.json"),
+            r#"{"suites": {"chat": ["hello", "hi"], "code": ["def f():"]}}"#,
+        )
+        .unwrap();
+        let w = Workloads::load(&dir).unwrap();
+        assert_eq!(w.suite("chat").unwrap().len(), 2);
+        assert_eq!(w.take("code", 5).unwrap(), vec!["def f():".to_string()]);
+        assert!(w.suite("nope").is_err());
+    }
+
+    #[test]
+    fn dataset_mapping() {
+        assert_eq!(paper_dataset("chat"), "MT-Bench");
+        assert_eq!(paper_dataset("code"), "HumanEval");
+    }
+}

@@ -1,0 +1,47 @@
+//! Cross-check the Rust layout canon against the Python-emitted golden file
+//! (`artifacts/layout_golden.json`). Any drift between `masks.py` and
+//! `rust/src/layout` means the coordinator would feed executables a layout
+//! they were not lowered for — this test makes that impossible to miss.
+
+use lookahead::layout::Wng;
+use lookahead::util::json::Json;
+
+#[test]
+fn rust_layout_matches_python_golden() {
+    let text = std::fs::read_to_string("artifacts/layout_golden.json")
+        .expect("run `make artifacts` first");
+    let j = Json::parse(&text).unwrap();
+    let records = j.get("records").unwrap().as_arr().unwrap();
+    assert!(records.len() >= 5);
+
+    for rec in records {
+        let w = rec.get("w").unwrap().as_usize().unwrap();
+        let n = rec.get("n").unwrap().as_usize().unwrap();
+        let g = rec.get("g").unwrap().as_usize().unwrap();
+        let wng = Wng::new(w, n, g);
+        let t = wng.t_in();
+        assert_eq!(t, rec.get("t_in").unwrap().as_usize().unwrap(), "({w},{n},{g})");
+
+        let ds = wng.descriptors();
+        let branch = rec.get("branch").unwrap().i32_vec().unwrap();
+        let row = rec.get("row").unwrap().i32_vec().unwrap();
+        let col = rec.get("col").unwrap().i32_vec().unwrap();
+        let relpos = rec.get("relpos").unwrap().i32_vec().unwrap();
+        for i in 0..t {
+            assert_eq!(ds[i].branch as i32, branch[i], "branch[{i}] ({w},{n},{g})");
+            assert_eq!(ds[i].row as i32, row[i], "row[{i}] ({w},{n},{g})");
+            assert_eq!(ds[i].col as i32, col[i], "col[{i}] ({w},{n},{g})");
+            assert_eq!(ds[i].relpos as i32, relpos[i], "relpos[{i}] ({w},{n},{g})");
+        }
+
+        let mask = wng.intra_mask();
+        let rows = rec.get("mask_rows").unwrap().str_vec().unwrap();
+        for (qi, bits) in rows.iter().enumerate() {
+            for (ki, ch) in bits.chars().enumerate() {
+                let want = ch == '1';
+                let got = mask[qi * t + ki] == 1;
+                assert_eq!(got, want, "mask[{qi},{ki}] ({w},{n},{g})");
+            }
+        }
+    }
+}

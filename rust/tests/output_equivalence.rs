@@ -1,0 +1,139 @@
+//! Paper Appendix E: every exact engine must reproduce the autoregressive
+//! greedy output byte-for-byte (lookahead specialized/generic/pallas,
+//! speculative decoding, prompt lookup, jacobi). This is the lossless-ness
+//! claim of the whole paper, verified end-to-end through the real
+//! PJRT runtime and AOT artifacts.
+
+use lookahead::engine::autoregressive::AutoRegressive;
+use lookahead::engine::jacobi::Jacobi;
+use lookahead::engine::lookahead::{Lookahead, LookaheadConfig};
+use lookahead::engine::prompt_lookup::PromptLookup;
+use lookahead::engine::spec_decode::SpecDecode;
+use lookahead::engine::{Decoder, GenParams};
+use lookahead::runtime::{cpu_client, Manifest, ModelRuntime};
+use lookahead::tokenizer::ByteTokenizer;
+
+fn setup() -> (Manifest, ModelRuntime) {
+    let manifest = Manifest::load("artifacts").expect("run `make artifacts` first");
+    let client = cpu_client().unwrap();
+    let rt = ModelRuntime::load(&client, &manifest, "tiny").unwrap();
+    (manifest, rt)
+}
+
+fn prompts() -> Vec<Vec<u32>> {
+    let tok = ByteTokenizer::new();
+    [
+        "def add_ab(a, b):\n    result = a",
+        "user: how does the warm cache work with the token?\n",
+        "Q: what is 12 + 34?\n",
+        "class QueueCache:\n    def __init__(self, size):\n",
+    ]
+    .iter()
+    .map(|p| tok.encode_with_bos(p))
+    .collect()
+}
+
+fn run(engine: &mut dyn Decoder, rt: &ModelRuntime, prompt: &[u32]) -> Vec<u32> {
+    let params = GenParams { max_new_tokens: 48, ..Default::default() };
+    engine.generate(rt, prompt, &params).unwrap().tokens
+}
+
+#[test]
+fn lookahead_specialized_matches_autoregressive() {
+    let (_, rt) = setup();
+    let mut ar = AutoRegressive::new();
+    let mut la = Lookahead::with_wng(5, 3, 5);
+    for p in prompts() {
+        let want = run(&mut ar, &rt, &p);
+        let got = run(&mut la, &rt, &p);
+        assert_eq!(got, want, "lookahead diverged from AR");
+    }
+}
+
+#[test]
+fn lookahead_pallas_matches_autoregressive() {
+    let (_, rt) = setup();
+    let mut ar = AutoRegressive::new();
+    let mut cfg = LookaheadConfig::new(5, 3, 5);
+    cfg.attn = "pallas".into();
+    let mut la = Lookahead::new(cfg);
+    for p in prompts().into_iter().take(2) {
+        let want = run(&mut ar, &rt, &p);
+        let got = run(&mut la, &rt, &p);
+        assert_eq!(got, want, "pallas lookahead diverged from AR");
+    }
+}
+
+#[test]
+fn lookahead_generic_matches_autoregressive() {
+    let (_, rt) = setup();
+    let mut ar = AutoRegressive::new();
+    let mut cfg = LookaheadConfig::new(4, 3, 4); // no specialized artifact
+    cfg.force_generic = true;
+    let mut la = Lookahead::new(cfg);
+    for p in prompts().into_iter().take(2) {
+        let want = run(&mut ar, &rt, &p);
+        let got = run(&mut la, &rt, &p);
+        assert_eq!(got, want, "generic lookahead diverged from AR");
+    }
+}
+
+#[test]
+fn lookahead_without_prompt_ref_matches_autoregressive() {
+    let (_, rt) = setup();
+    let mut ar = AutoRegressive::new();
+    let mut cfg = LookaheadConfig::new(5, 3, 5);
+    cfg.prompt_as_ref = false;
+    let mut la = Lookahead::new(cfg);
+    let p = &prompts()[0];
+    assert_eq!(run(&mut la, &rt, p), run(&mut ar, &rt, p));
+}
+
+#[test]
+fn spec_decode_matches_autoregressive() {
+    let (manifest, rt) = setup();
+    let draft = ModelRuntime::load(&rt.client, &manifest, "draft").unwrap();
+    let mut ar = AutoRegressive::new();
+    let mut sd = SpecDecode::new(draft, 4);
+    for p in prompts().into_iter().take(2) {
+        let want = run(&mut ar, &rt, &p);
+        let got = run(&mut sd, &rt, &p);
+        assert_eq!(got, want, "spec_decode diverged from AR");
+    }
+}
+
+#[test]
+fn prompt_lookup_matches_autoregressive() {
+    let (_, rt) = setup();
+    let mut ar = AutoRegressive::new();
+    let mut pl = PromptLookup::new(8, 1);
+    for p in prompts().into_iter().take(2) {
+        let want = run(&mut ar, &rt, &p);
+        let got = run(&mut pl, &rt, &p);
+        assert_eq!(got, want, "prompt_lookup diverged from AR");
+    }
+}
+
+#[test]
+fn jacobi_matches_autoregressive() {
+    let (_, rt) = setup();
+    let mut ar = AutoRegressive::new();
+    let mut j = Jacobi::new(8);
+    let p = &prompts()[0];
+    assert_eq!(run(&mut j, &rt, p), run(&mut ar, &rt, p), "jacobi diverged");
+}
+
+#[test]
+fn lookahead_compresses_steps() {
+    // the headline property: S > 1 on a predictable (code) prompt
+    let (_, rt) = setup();
+    let tok = ByteTokenizer::new();
+    let p = tok.encode_with_bos("def add_ab(a, b):\n    result = a + b\n    return result\n\ndef add_xy(x, y):\n    result = x");
+    let mut la = Lookahead::with_wng(5, 3, 5);
+    let params = GenParams { max_new_tokens: 64, ..Default::default() };
+    let out = la.generate(&rt, &p, &params).unwrap();
+    let s = out.stats.compression();
+    assert!(s > 1.2, "expected step compression > 1.2, got {s:.2} \
+                      ({} tokens / {} steps)", out.stats.generated_tokens,
+            out.stats.decode_steps);
+}

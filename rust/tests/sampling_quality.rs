@@ -1,0 +1,137 @@
+//! Sampling-mode quality through the REAL runtime (paper §5.3 / Appendix B):
+//! Algorithm 4 must preserve the output distribution. We verify with a
+//! first-token chi-square-style check: the distribution of the first
+//! generated token under lookahead sampling must match autoregressive
+//! sampling across many seeds, and both must be non-degenerate.
+
+use std::collections::HashMap;
+
+use lookahead::engine::autoregressive::AutoRegressive;
+use lookahead::engine::lookahead::Lookahead;
+use lookahead::engine::{Decoder, GenParams, SamplingParams};
+use lookahead::runtime::{cpu_client, Manifest, ModelRuntime};
+use lookahead::tokenizer::ByteTokenizer;
+
+fn first_token_hist(engine: &mut dyn Decoder, rt: &ModelRuntime, prompt: &[u32],
+                    seeds: u64, temp: f64) -> HashMap<u32, usize> {
+    let mut h = HashMap::new();
+    for seed in 0..seeds {
+        let params = GenParams {
+            max_new_tokens: 2,
+            sampling: SamplingParams { temperature: temp, ..Default::default() },
+            stop_at_eos: false,
+            seed,
+        };
+        let out = engine.generate(rt, prompt, &params).unwrap();
+        if let Some(&t) = out.tokens.first() {
+            *h.entry(t).or_insert(0) += 1;
+        }
+    }
+    h
+}
+
+#[test]
+fn algorithm4_preserves_first_token_distribution() {
+    let manifest = Manifest::load("artifacts").unwrap();
+    let client = cpu_client().unwrap();
+    let rt = ModelRuntime::load(&client, &manifest, "tiny").unwrap();
+    let tok = ByteTokenizer::new();
+    let prompt = tok.encode_with_bos("user: how does the ");
+    let seeds = 300;
+    let temp = 1.0;
+
+    let ar = first_token_hist(&mut AutoRegressive::new(), &rt, &prompt, seeds, temp);
+    let la = first_token_hist(&mut Lookahead::with_wng(5, 3, 5), &rt, &prompt,
+                              seeds, temp);
+
+    // union support, compare empirical frequencies
+    let mut keys: Vec<u32> = ar.keys().chain(la.keys()).copied().collect();
+    keys.sort();
+    keys.dedup();
+    assert!(keys.len() >= 2, "degenerate distribution? {ar:?}");
+    let mut max_diff = 0.0f64;
+    for k in keys {
+        let pa = *ar.get(&k).unwrap_or(&0) as f64 / seeds as f64;
+        let pl = *la.get(&k).unwrap_or(&0) as f64 / seeds as f64;
+        max_diff = max_diff.max((pa - pl).abs());
+    }
+    // 300 samples -> ~3 sigma tolerance for p in [0,1] is about 0.09
+    assert!(max_diff < 0.12,
+            "first-token distributions diverge (max diff {max_diff:.3})\nAR: {ar:?}\nLA: {la:?}");
+}
+
+#[test]
+fn sampling_speedup_below_greedy_speedup() {
+    // paper Tab. 2: sampling lowers the acceptance ratio, hence S.
+    let manifest = Manifest::load("artifacts").unwrap();
+    let client = cpu_client().unwrap();
+    let rt = ModelRuntime::load(&client, &manifest, "tiny").unwrap();
+    let tok = ByteTokenizer::new();
+    let prompt = tok.encode_with_bos(
+        "def pad_ab(a, b):\n    result = a + b\n    return result\n\ndef pad_xy(x, y):\n    result = x");
+
+    let run = |temp: f64, seed: u64| {
+        let mut e = Lookahead::with_wng(15, 5, 15);
+        let params = GenParams {
+            max_new_tokens: 64,
+            sampling: SamplingParams { temperature: temp, ..Default::default() },
+            stop_at_eos: false,
+            seed,
+        };
+        e.generate(&rt, &prompt, &params).unwrap().stats.compression()
+    };
+    let greedy = run(0.0, 0);
+    let sampled: f64 = (0..4).map(|s| run(1.0, s)).sum::<f64>() / 4.0;
+    assert!(greedy > 1.2, "greedy S {greedy:.2}");
+    assert!(sampled <= greedy + 0.25,
+            "sampling S {sampled:.2} unexpectedly above greedy {greedy:.2}");
+}
+
+#[test]
+fn generation_stops_at_cache_capacity() {
+    // ask for far more tokens than the cache can hold; engine must stop
+    // cleanly without error
+    let manifest = Manifest::load("artifacts").unwrap();
+    let client = cpu_client().unwrap();
+    let rt = ModelRuntime::load(&client, &manifest, "tiny").unwrap();
+    let tok = ByteTokenizer::new();
+    let prompt = tok.encode_with_bos("for a in range(10):\n");
+    let mut e = Lookahead::with_wng(5, 3, 5);
+    let params = GenParams { max_new_tokens: 100_000, stop_at_eos: false,
+                             ..Default::default() };
+    let out = e.generate(&rt, &prompt, &params).unwrap();
+    let cap = rt.mm.capacity();
+    assert!(out.tokens.len() <= cap);
+    assert!(out.tokens.len() > cap / 2, "stopped far too early: {}", out.tokens.len());
+}
+
+#[test]
+fn oversized_prompt_rejected_cleanly() {
+    let manifest = Manifest::load("artifacts").unwrap();
+    let client = cpu_client().unwrap();
+    let rt = ModelRuntime::load(&client, &manifest, "tiny").unwrap();
+    let prompt: Vec<u32> = (0..300).map(|i| (i % 256) as u32).collect();
+    let err = match rt.prefill(&prompt) {
+        Err(e) => e.to_string(),
+        Ok(_) => panic!("oversized prompt accepted"),
+    };
+    assert!(err.contains("prefill capacity"), "{err}");
+}
+
+#[test]
+fn zero_g_config_still_exact() {
+    // G = 0: lookahead branch only, no verification candidates — every step
+    // falls back to the model's own next token (AR-equivalent).
+    let manifest = Manifest::load("artifacts").unwrap();
+    let client = cpu_client().unwrap();
+    let rt = ModelRuntime::load(&client, &manifest, "tiny").unwrap();
+    let tok = ByteTokenizer::new();
+    let prompt = tok.encode_with_bos("Q: what is 3 + 4?\n");
+    let params = GenParams { max_new_tokens: 24, ..Default::default() };
+
+    let want = AutoRegressive::new().generate(&rt, &prompt, &params).unwrap().tokens;
+    let mut cfg = lookahead::engine::lookahead::LookaheadConfig::new(4, 3, 0);
+    cfg.force_generic = true;
+    let got = Lookahead::new(cfg).generate(&rt, &prompt, &params).unwrap().tokens;
+    assert_eq!(got, want);
+}
