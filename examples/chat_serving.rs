@@ -15,11 +15,12 @@ fn main() -> anyhow::Result<()> {
         workers: 1,
         policy: Policy::ShortestFirst,
         queue_depth: 64,
+        share_ngrams: true, // multi-turn chat re-serves templates: warm pools
         worker: WorkerConfig {
             artifacts_dir: "artifacts".into(),
             model: "tiny".into(),
             wng: (15, 5, 15),
-            draft_model: "draft".into(),
+            ..WorkerConfig::default()
         },
     })?;
 
@@ -43,6 +44,7 @@ fn main() -> anyhow::Result<()> {
     let mut queue = Histogram::new();
     let mut s_hist = Histogram::new();
     let mut total_tokens = 0usize;
+    let mut warm = 0usize;
     for rx in rxs {
         let r = rx.recv()?;
         assert!(r.error.is_none(), "{:?}", r.error);
@@ -50,6 +52,7 @@ fn main() -> anyhow::Result<()> {
         queue.record(r.queue_ms);
         s_hist.record(r.compression);
         total_tokens += r.tokens;
+        warm += r.pool_warm as usize;
     }
     let wall = t0.elapsed().as_secs_f64();
 
@@ -59,7 +62,9 @@ fn main() -> anyhow::Result<()> {
     println!("  queue wait      : {}", queue.summary());
     println!("  step compression: mean {:.2} (chat is the paper's hardest suite)",
              s_hist.mean());
-    println!("\nserver metrics:\n{}", h.metrics.lock().unwrap().report());
+    println!("  warm-pool starts: {}/{} (cross-request shared n-gram cache)",
+             warm, prompts.len());
+    println!("\nserver metrics:\n{}", h.report());
     h.shutdown();
     Ok(())
 }

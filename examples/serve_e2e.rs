@@ -22,11 +22,12 @@ fn run_method(method: &str, wng: (usize, usize, usize), n_req: usize,
         workers: 1,
         policy: Policy::Fifo,
         queue_depth: 1024,
+        share_ngrams: true,
         worker: WorkerConfig {
             artifacts_dir: "artifacts".into(),
             model: "tiny".into(),
             wng,
-            draft_model: "draft".into(),
+            ..WorkerConfig::default()
         },
     })?;
     let t0 = std::time::Instant::now();

@@ -78,11 +78,12 @@ fn main() -> anyhow::Result<()> {
             workers: 1,
             policy,
             queue_depth: 256,
+            share_ngrams: false, // isolate scheduler effects from cache warmth
             worker: WorkerConfig {
                 artifacts_dir: "artifacts".into(),
                 model: "tiny".into(),
                 wng: (5, 3, 5),
-                draft_model: "draft".into(),
+                ..WorkerConfig::default()
             },
         })?;
         // warm the worker first (engine + prefill compilation must not

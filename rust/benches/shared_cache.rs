@@ -1,0 +1,110 @@
+//! Cross-request shared n-gram cache bench — the serving scenario from
+//! `examples/chat_serving.rs`: a small set of templated prompts re-served
+//! over several rounds, as production traffic does (shared system prompts,
+//! boilerplate completions).
+//!
+//! Cold = every request decodes against a fresh private pool (the paper's
+//! per-request setting). Warm = all requests share one `SharedNgramCache`,
+//! so round r+1 starts with the n-grams rounds 1..r harvested. Greedy
+//! verification keeps outputs byte-identical either way — the cache can
+//! only raise the mean accepted-tokens-per-step S, never change text.
+//!
+//!   cargo bench --bench shared_cache [-- --quick]
+
+use std::sync::Arc;
+
+use lookahead::bench::driver::{run_suite_cached, SuiteRun};
+use lookahead::bench::{bench_args, save_result, Table};
+use lookahead::engine::lookahead::Lookahead;
+use lookahead::engine::prompt_lookup::PromptLookup;
+use lookahead::engine::Decoder;
+use lookahead::ngram::{SharedCacheStats, SharedNgramCache};
+use lookahead::runtime::ModelRuntime;
+use lookahead::util::json::Json;
+use lookahead::workload::Workloads;
+
+/// Run the same templated stream cold (private per-request pools) and warm
+/// (one shared cache), asserting byte-identical outputs.
+fn cold_vs_warm(rt: &ModelRuntime, engine: &mut dyn Decoder, stream: &[String],
+                max_tokens: usize)
+                -> anyhow::Result<(SuiteRun, SuiteRun, SharedCacheStats)> {
+    let (cold, cold_texts) = run_suite_cached(rt, engine, stream, max_tokens, 0.0, None)?;
+    let cache = Arc::new(SharedNgramCache::with_defaults(
+        engine.pool_spec().expect("engine keeps no pool"),
+    ));
+    let (warm, warm_texts) =
+        run_suite_cached(rt, engine, stream, max_tokens, 0.0, Some(&cache))?;
+    assert_eq!(cold_texts, warm_texts,
+               "shared cache changed greedy output bytes — losslessness broken");
+    Ok((cold, warm, cache.stats()))
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = bench_args();
+    let quick = args.bool_or("quick", false);
+    if lookahead::bench::skip_without_artifacts("shared_cache bench") {
+        return Ok(());
+    }
+    let (_, rt) = lookahead::runtime::load_model("artifacts", "tiny")?;
+    let workloads = Workloads::load("artifacts")?;
+
+    // Templated serving traffic: few distinct prompts, many rounds.
+    let base = workloads.take("chat", if quick { 2 } else { 3 })?;
+    let rounds = if quick { 2 } else { 4 };
+    let mut stream: Vec<String> = Vec::with_capacity(base.len() * rounds);
+    for _ in 0..rounds {
+        stream.extend(base.iter().cloned());
+    }
+    let max_tokens = if quick { 32 } else { 64 };
+
+    println!("shared n-gram cache: {} requests ({} templates x {} rounds), \
+              {} max tokens\n",
+             stream.len(), base.len(), rounds, max_tokens);
+
+    let mut table = Table::new(&["engine", "pool", "S", "hit%", "warm-starts",
+                                 "steps"]);
+    let mut rows = Vec::new();
+    let mut headline: Option<(f64, f64)> = None;
+
+    let mut la = Lookahead::with_wng(15, 5, 15);
+    let mut pl = PromptLookup::new(8, 1);
+    let engines: [(&str, &mut dyn Decoder); 2] =
+        [("lookahead[w15n5g15]", &mut la), ("prompt_lookup[k8]", &mut pl)];
+    for (name, engine) in engines {
+        let (cold, warm, cache) = cold_vs_warm(&rt, engine, &stream, max_tokens)?;
+        for (tag, run) in [("cold", &cold), ("warm", &warm)] {
+            table.row(vec![
+                name.into(),
+                tag.into(),
+                format!("{:.3}", run.s()),
+                format!("{:.0}", 100.0 * run.pool_hit_rate()),
+                format!("{}/{}", run.warm_starts, run.prompts),
+                run.steps.to_string(),
+            ]);
+        }
+        if headline.is_none() {
+            headline = Some((cold.s(), warm.s()));
+        }
+        rows.push(Json::obj(vec![
+            ("engine", Json::str(name)),
+            ("cold_s", Json::num(cold.s())),
+            ("warm_s", Json::num(warm.s())),
+            ("cold_hit_rate", Json::num(cold.pool_hit_rate())),
+            ("warm_hit_rate", Json::num(warm.pool_hit_rate())),
+            ("warm_starts", Json::num(warm.warm_starts as f64)),
+            ("cache_entries", Json::num(cache.entries as f64)),
+            ("cache_evictions", Json::num(cache.evictions as f64)),
+        ]));
+    }
+
+    table.print();
+    if let Some((cold_s, warm_s)) = headline {
+        println!("\nheadline: warm shared cache S = {warm_s:.3} vs cold S = \
+                  {cold_s:.3} ({:+.1}% accepted tokens/step on repeated \
+                  templates)",
+                 100.0 * (warm_s / cold_s.max(1e-9) - 1.0));
+    }
+    println!("outputs byte-identical cold vs warm (greedy losslessness held).");
+    save_result("shared_cache", Json::Arr(rows));
+    Ok(())
+}

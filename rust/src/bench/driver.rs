@@ -2,11 +2,14 @@
 //! paper's measurables (S, tok/s, per-step latency), plus the A100/3090
 //! projections from DESIGN.md §6.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::analytic::{projected_speedup, Device};
 use crate::engine::{Decoder, GenParams, SamplingParams};
 use crate::metrics::DecodeStats;
+use crate::ngram::{PoolHandle, SharedNgramCache};
 use crate::runtime::ModelRuntime;
 use crate::tokenizer::ByteTokenizer;
 
@@ -19,6 +22,8 @@ pub struct SuiteRun {
     pub decode_wall_s: f64,
     pub pool_hits: usize,
     pub pool_misses: usize,
+    /// requests that started against an already-populated n-gram store.
+    pub warm_starts: usize,
 }
 
 impl SuiteRun {
@@ -53,6 +58,11 @@ impl SuiteRun {
         projected_speedup(dev, params, t_in.max(1), self.s())
     }
 
+    /// Pool hit rate aggregated over the suite.
+    pub fn pool_hit_rate(&self) -> f64 {
+        crate::metrics::hit_rate(self.pool_hits as u64, self.pool_misses as u64)
+    }
+
     fn absorb(&mut self, st: &DecodeStats) {
         self.prompts += 1;
         self.tokens += st.generated_tokens;
@@ -61,6 +71,7 @@ impl SuiteRun {
         self.decode_wall_s += (st.wall - st.prefill_wall).as_secs_f64();
         self.pool_hits += st.pool_hits;
         self.pool_misses += st.pool_misses;
+        self.warm_starts += st.pool_warm_start as usize;
     }
 }
 
@@ -74,8 +85,21 @@ pub fn run_suite(rt: &ModelRuntime, engine: &mut dyn Decoder, prompts: &[String]
 pub fn run_suite_outputs(rt: &ModelRuntime, engine: &mut dyn Decoder,
                          prompts: &[String], max_tokens: usize, temperature: f64)
                          -> Result<(SuiteRun, Vec<String>)> {
+    run_suite_cached(rt, engine, prompts, max_tokens, temperature, None)
+}
+
+/// Like `run_suite_outputs`, but when `cache` is given every request is
+/// served from that cross-request [`SharedNgramCache`] — the serving
+/// scenario where request k+1 reuses the n-grams requests 1..k harvested.
+/// `None` reproduces the paper's cold per-request pools.
+pub fn run_suite_cached(rt: &ModelRuntime, engine: &mut dyn Decoder,
+                        prompts: &[String], max_tokens: usize, temperature: f64,
+                        cache: Option<&Arc<SharedNgramCache>>)
+                        -> Result<(SuiteRun, Vec<String>)> {
     let tok = ByteTokenizer::new();
     // warmup: pay one-time executable compilation outside the timed region
+    // (always against a private pool so a shared cache stays cold until the
+    // measured requests run)
     if let Some(p0) = prompts.first() {
         let ids = tok.encode_with_bos(p0);
         let warm = GenParams { max_new_tokens: 2, ..GenParams::default() };
@@ -94,7 +118,11 @@ pub fn run_suite_outputs(rt: &ModelRuntime, engine: &mut dyn Decoder,
             stop_at_eos: true,
             seed: i as u64,
         };
-        let out = engine.generate(rt, &ids, &params)?;
+        let mut pool = match cache {
+            Some(c) => PoolHandle::shared(c.clone()),
+            None => PoolHandle::for_spec(engine.pool_spec()),
+        };
+        let out = engine.generate_with_pool(rt, &ids, &params, &mut pool)?;
         agg.absorb(&out.stats);
         texts.push(out.text);
     }

@@ -120,6 +120,17 @@ pub fn save_result(bench: &str, payload: Json) {
     let _ = std::fs::write(path, root.dump());
 }
 
+/// Artifact gating shared by integration tests and benches: returns true
+/// (after logging why) when the AOT artifacts are absent so the caller can
+/// skip cleanly — CI runs without PJRT or `make artifacts`.
+pub fn skip_without_artifacts(what: &str) -> bool {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        return false;
+    }
+    eprintln!("{what}: skipping — artifacts/ missing (run `make artifacts`)");
+    true
+}
+
 /// Common CLI for bench binaries: honor `--quick` (fewer prompts) and
 /// cargo-bench's trailing `--bench` flag.
 pub fn bench_args() -> crate::util::cli::Args {

@@ -6,6 +6,7 @@ use anyhow::Result;
 
 use crate::engine::{capacity_left, finish, vocab_live, Decoder, GenOutput, GenParams};
 use crate::metrics::{DecodeStats, Timer};
+use crate::ngram::PoolHandle;
 use crate::runtime::ModelRuntime;
 use crate::util::rng::Rng;
 
@@ -23,8 +24,9 @@ impl Decoder for AutoRegressive {
         "autoregressive".into()
     }
 
-    fn generate(&mut self, rt: &ModelRuntime, prompt: &[u32], params: &GenParams)
-                -> Result<GenOutput> {
+    fn generate_with_pool(&mut self, rt: &ModelRuntime, prompt: &[u32],
+                          params: &GenParams, _pool: &mut PoolHandle)
+                          -> Result<GenOutput> {
         let timer = Timer::start();
         let mut stats = DecodeStats { prompt_tokens: prompt.len(), ..Default::default() };
         let mut rng = Rng::new(params.seed);

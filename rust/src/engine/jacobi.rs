@@ -7,6 +7,7 @@ use anyhow::{anyhow, Result};
 
 use crate::engine::{capacity_left, finish, vocab_live, Decoder, GenOutput, GenParams};
 use crate::metrics::{DecodeStats, Timer};
+use crate::ngram::PoolHandle;
 use crate::runtime::ModelRuntime;
 use crate::tokenizer::EOS_ID;
 use crate::util::rng::Rng;
@@ -27,8 +28,9 @@ impl Decoder for Jacobi {
         format!("jacobi[k{}]", self.window)
     }
 
-    fn generate(&mut self, rt: &ModelRuntime, prompt: &[u32], params: &GenParams)
-                -> Result<GenOutput> {
+    fn generate_with_pool(&mut self, rt: &ModelRuntime, prompt: &[u32],
+                          params: &GenParams, _pool: &mut PoolHandle)
+                          -> Result<GenOutput> {
         let timer = Timer::start();
         let k = self.window;
         rt.mm.decode_lin_exe(k).map_err(|e| anyhow!("{e}"))?;

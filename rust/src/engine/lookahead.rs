@@ -18,7 +18,7 @@ use crate::engine::{capacity_left, finish, vocab_live, verify, Decoder, GenOutpu
                     GenParams};
 use crate::layout::Wng;
 use crate::metrics::{DecodeStats, Timer};
-use crate::ngram::NgramPool;
+use crate::ngram::{PoolHandle, PoolSpec};
 use crate::runtime::{ModelRuntime, StepOut};
 use crate::tokenizer::EOS_ID;
 use crate::util::rng::Rng;
@@ -105,12 +105,20 @@ impl Decoder for Lookahead {
                 if self.cfg.prompt_as_ref { "+pref" } else { "" })
     }
 
-    fn generate(&mut self, rt: &ModelRuntime, prompt: &[u32], params: &GenParams)
-                -> Result<GenOutput> {
+    fn pool_spec(&self) -> Option<PoolSpec> {
+        Some(
+            PoolSpec::new(self.cfg.wng.n, self.cfg.pool_per_key, self.cfg.pool_total)
+                .with_kind("lookahead"),
+        )
+    }
+
+    fn generate_with_pool(&mut self, rt: &ModelRuntime, prompt: &[u32],
+                          params: &GenParams, pool: &mut PoolHandle)
+                          -> Result<GenOutput> {
         let timer = Timer::start();
         let Wng { w, n, g } = self.cfg.wng;
         let t_in = self.cfg.wng.t_in();
-        
+
         let vocab = vocab_live(rt);
         let exe = self.resolve_exe(rt)?;
         // commit executables are keyed by the executable's token count,
@@ -122,7 +130,9 @@ impl Decoder for Lookahead {
         let mut rng = Rng::new(params.seed ^ 0x1007AE4D);
 
         let mut stats = DecodeStats { prompt_tokens: prompt.len(), ..Default::default() };
-        let mut pool = NgramPool::new(n, self.cfg.pool_per_key, self.cfg.pool_total);
+        // degrade to a private pool if the caller bound a handle with the
+        // wrong n-gram length (or none at all)
+        pool.ensure(self.pool_spec().unwrap());
         if self.cfg.prompt_as_ref {
             pool.seed_from(prompt);
         }
@@ -233,8 +243,7 @@ impl Decoder for Lookahead {
             }
         }
 
-        stats.pool_hits = pool.hits;
-        stats.pool_misses = pool.misses;
+        pool.fill_stats(&mut stats);
         Ok(finish(out, params, stats, timer.elapsed()))
     }
 }

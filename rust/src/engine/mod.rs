@@ -20,6 +20,7 @@ pub mod verify;
 use anyhow::Result;
 
 use crate::metrics::DecodeStats;
+use crate::ngram::{PoolHandle, PoolSpec};
 use crate::runtime::ModelRuntime;
 use crate::tokenizer::{ByteTokenizer, EOS_ID, VOCAB_SIZE};
 
@@ -55,11 +56,32 @@ pub struct GenOutput {
 pub trait Decoder {
     fn name(&self) -> String;
 
+    /// The n-gram pool shape this engine consults per request, or None when
+    /// the engine keeps no pool (autoregressive, Jacobi, spec-decode). The
+    /// serving layer uses this to bind requests to the right cross-request
+    /// `SharedNgramCache` (keyed by model + n).
+    fn pool_spec(&self) -> Option<PoolSpec> {
+        None
+    }
+
     /// Generate a continuation of `prompt` (token ids, BOS included by the
-    /// caller). Greedy engines must be byte-exact w.r.t. autoregressive
-    /// decoding — checked by `rust/tests/output_equivalence.rs`.
+    /// caller), storing/retrieving speculation n-grams through `pool`. The
+    /// handle may wrap a cold private pool or a warm cross-request shared
+    /// cache — pool contents only affect speed (accept length), never
+    /// output bytes: greedy engines must stay byte-exact w.r.t.
+    /// autoregressive decoding (checked by
+    /// `rust/tests/output_equivalence.rs`).
+    fn generate_with_pool(&mut self, rt: &ModelRuntime, prompt: &[u32],
+                          params: &GenParams, pool: &mut PoolHandle)
+                          -> Result<GenOutput>;
+
+    /// Generate with a cold per-request pool — the paper's single-request
+    /// setting and the pre-sharing behavior of this crate.
     fn generate(&mut self, rt: &ModelRuntime, prompt: &[u32], params: &GenParams)
-                -> Result<GenOutput>;
+                -> Result<GenOutput> {
+        let mut pool = PoolHandle::for_spec(self.pool_spec());
+        self.generate_with_pool(rt, prompt, params, &mut pool)
+    }
 }
 
 /// Shared post-processing: truncate at EOS, decode text, finalize stats.

@@ -2,11 +2,17 @@
 //! speculate by copying the continuation of the most recent match of the
 //! current suffix inside [prompt + generated so far], then verify with one
 //! `decode_lin_k` target call. No draft model, no lookahead branch.
+//!
+//! Serving extension: when the local history has no match, the engine falls
+//! back to its [`PoolHandle`] — which, under the serving front, wraps the
+//! cross-request `SharedNgramCache` — and it feeds accepted continuations
+//! back into that pool. Verification keeps the output byte-exact either way.
 
 use anyhow::{bail, Result};
 
 use crate::engine::{capacity_left, finish, vocab_live, Decoder, GenOutput, GenParams};
 use crate::metrics::{DecodeStats, Timer};
+use crate::ngram::{PoolHandle, PoolSpec};
 use crate::runtime::ModelRuntime;
 use crate::tokenizer::EOS_ID;
 
@@ -49,8 +55,14 @@ impl Decoder for PromptLookup {
         format!("prompt_lookup[k{},m{}]", self.k, self.match_len)
     }
 
-    fn generate(&mut self, rt: &ModelRuntime, prompt: &[u32], params: &GenParams)
-                -> Result<GenOutput> {
+    fn pool_spec(&self) -> Option<PoolSpec> {
+        // pool n-grams are [key + (k-1)-token suffix]: one verification chain
+        Some(PoolSpec::new(self.k, 8, 16_384).with_kind("prompt_lookup"))
+    }
+
+    fn generate_with_pool(&mut self, rt: &ModelRuntime, prompt: &[u32],
+                          params: &GenParams, pool: &mut PoolHandle)
+                          -> Result<GenOutput> {
         if !params.sampling.is_greedy() {
             bail!("prompt_lookup baseline implements greedy verification only");
         }
@@ -62,6 +74,11 @@ impl Decoder for PromptLookup {
         }
         let vocab = vocab_live(rt);
         let mut stats = DecodeStats { prompt_tokens: prompt.len(), ..Default::default() };
+
+        // bind (or degrade to) a pool of the right n-gram length; under the
+        // serving front this is the cross-request shared cache
+        pool.ensure(self.pool_spec().unwrap());
+        pool.seed_from(prompt);
 
         let pf = Timer::start();
         let (_, mut cache) = rt.prefill(prompt)?;
@@ -75,7 +92,9 @@ impl Decoder for PromptLookup {
             let cur = *history.last().unwrap();
             let mut spec = lookup_continuation(&history, self.match_len, k - 1);
             if spec.is_empty() {
-                stats.pool_misses += 1;
+                // local-history miss: fall back to the (possibly warm,
+                // cross-request) pool — the handle counts the hit/miss
+                spec = pool.lookup(cur, 1).into_iter().next().unwrap_or_default();
             } else {
                 stats.pool_hits += 1;
             }
@@ -105,10 +124,14 @@ impl Decoder for PromptLookup {
             let hit_eos = params.stop_at_eos && accepted.contains(&EOS_ID);
             out.extend_from_slice(&accepted);
             history.extend_from_slice(&accepted);
+            // feed the pool every n-gram window the accepted tokens created
+            let fed = history.len().saturating_sub(a + k - 1);
+            pool.seed_from(&history[fed..]);
             if hit_eos {
                 break;
             }
         }
+        pool.fill_stats(&mut stats);
         Ok(finish(out, params, stats, timer.elapsed()))
     }
 }

@@ -8,6 +8,7 @@ use anyhow::{bail, Result};
 
 use crate::engine::{capacity_left, finish, vocab_live, Decoder, GenOutput, GenParams};
 use crate::metrics::{DecodeStats, Timer};
+use crate::ngram::PoolHandle;
 use crate::runtime::ModelRuntime;
 use crate::tokenizer::EOS_ID;
 
@@ -29,8 +30,9 @@ impl Decoder for SpecDecode {
         format!("spec_decode[draft={},g{}]", self.draft.mm.name, self.gamma)
     }
 
-    fn generate(&mut self, rt: &ModelRuntime, prompt: &[u32], params: &GenParams)
-                -> Result<GenOutput> {
+    fn generate_with_pool(&mut self, rt: &ModelRuntime, prompt: &[u32],
+                          params: &GenParams, _pool: &mut PoolHandle)
+                          -> Result<GenOutput> {
         if !params.sampling.is_greedy() {
             bail!("spec_decode baseline implements greedy verification only");
         }

@@ -50,6 +50,8 @@ fn print_usage(args: &Args) {
         Opt { name: "addr", default: Some("127.0.0.1:7878"), help: "serve/client address" },
         Opt { name: "workers", default: Some("1"), help: "serving workers" },
         Opt { name: "policy", default: Some("fifo"), help: "fifo | sjf" },
+        Opt { name: "share-ngrams", default: Some("true"),
+              help: "cross-request shared n-gram cache (serve)" },
         Opt { name: "devices", default: Some("4"), help: "LP simulated devices" },
     ];
     println!("{}", usage(args.program(),
@@ -117,10 +119,12 @@ fn cmd_generate(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    let share_ngrams = args.bool_or("share-ngrams", true);
     let cfg = ServerConfig {
         workers: args.usize_or("workers", 1),
         policy: Policy::parse(&args.str_or("policy", "fifo")),
         queue_depth: args.usize_or("queue-depth", 256),
+        share_ngrams,
         worker: WorkerConfig {
             artifacts_dir: args.str_or("artifacts", "artifacts"),
             model: args.str_or("model", "tiny"),

@@ -6,6 +6,17 @@ pub mod rouge;
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
+/// hits / (hits + misses), 0 when no observations — the one hit-rate
+/// convention shared by pools, caches, suites, and per-request stats.
+pub fn hit_rate(hits: u64, misses: u64) -> f64 {
+    let total = hits + misses;
+    if total == 0 {
+        0.0
+    } else {
+        hits as f64 / total as f64
+    }
+}
+
 /// Streaming histogram over f64 samples (exact quantiles via sorted store —
 /// sample counts here are small enough that exactness beats sketching).
 #[derive(Debug, Clone, Default)]
@@ -138,6 +149,13 @@ pub struct DecodeStats {
     pub accepted_by_len: Vec<usize>, // index = tokens accepted in a step
     pub pool_hits: usize,
     pub pool_misses: usize,
+    /// the n-gram store already held entries when this request started
+    /// (only possible with a cross-request shared cache).
+    pub pool_warm_start: bool,
+    /// the request used a shared (cross-request) n-gram cache.
+    pub pool_shared: bool,
+    pub pool_entries_start: usize,
+    pub pool_entries_end: usize,
     pub wall: Duration,
     pub prefill_wall: Duration,
 }
@@ -168,12 +186,21 @@ impl DecodeStats {
         self.generated_tokens += n;
     }
 
+    /// Per-request pool hit rate (0 when the engine keeps no pool).
+    pub fn pool_hit_rate(&self) -> f64 {
+        hit_rate(self.pool_hits as u64, self.pool_misses as u64)
+    }
+
     pub fn merge(&mut self, other: &DecodeStats) {
         self.prompt_tokens += other.prompt_tokens;
         self.generated_tokens += other.generated_tokens;
         self.decode_steps += other.decode_steps;
         self.pool_hits += other.pool_hits;
         self.pool_misses += other.pool_misses;
+        self.pool_warm_start |= other.pool_warm_start;
+        self.pool_shared |= other.pool_shared;
+        self.pool_entries_start += other.pool_entries_start;
+        self.pool_entries_end += other.pool_entries_end;
         self.wall += other.wall;
         self.prefill_wall += other.prefill_wall;
         for (i, &c) in other.accepted_by_len.iter().enumerate() {

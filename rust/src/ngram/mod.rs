@@ -2,10 +2,56 @@
 //! Jacobi trajectory (and optionally the prompt — "prompt as reference",
 //! Tab. 3), keyed by first token. Lookup returns up to G candidate suffixes
 //! for the verification branch.
+//!
+//! Two storage strategies implement the [`NgramSource`] trait:
+//! [`NgramPool`] (per-request, single-threaded — the paper's setting) and
+//! [`shared::SharedNgramCache`] (cross-request, sharded + locked — the
+//! serving setting). Engines receive either through a
+//! [`shared::PoolHandle`] and cannot tell them apart.
+
+pub mod shared;
+
+pub use shared::{
+    NgramCacheRegistry, PoolHandle, PoolSpec, SharedCacheStats, SharedNgramCache,
+};
 
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::collections::VecDeque;
+
+/// Anything that can store and retrieve n-grams for the verification branch.
+///
+/// `lookup` takes `&mut self` so single-threaded implementations can keep
+/// plain hit/miss counters; concurrent implementations use interior
+/// mutability and implement the trait on `Arc<Self>`.
+pub trait NgramSource {
+    /// n-gram length N (stored suffixes are N-1 tokens).
+    fn n(&self) -> usize;
+
+    /// Total stored suffixes.
+    fn len(&self) -> usize;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Insert a full n-gram (length N; other lengths are ignored).
+    fn insert(&mut self, ngram: &[u32]);
+
+    /// Up to `max` suffixes whose n-gram starts with `key`, best first.
+    fn lookup(&mut self, key: u32, max: usize) -> Vec<Vec<u32>>;
+
+    /// Seed with every n-gram window of `tokens` ("prompt as reference").
+    fn seed_from(&mut self, tokens: &[u32]) {
+        let n = self.n();
+        if tokens.len() < n {
+            return;
+        }
+        for win in tokens.windows(n) {
+            self.insert(win);
+        }
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct NgramPool {
@@ -20,6 +66,8 @@ pub struct NgramPool {
     total_cap: usize,
     pub hits: usize,
     pub misses: usize,
+    /// suffixes dropped by either cap (LRU pressure accounting).
+    pub evictions: usize,
     /// round-robin eviction cursor over keys when the global cap is hit.
     evict_keys: VecDeque<u32>,
 }
@@ -35,6 +83,7 @@ impl NgramPool {
             total_cap: total_cap.max(1),
             hits: 0,
             misses: 0,
+            evictions: 0,
             evict_keys: VecDeque::new(),
         }
     }
@@ -73,6 +122,7 @@ impl NgramPool {
                 if q.len() > self.per_key_cap {
                     q.pop_front();
                     self.total -= 1;
+                    self.evictions += 1;
                 }
             }
             Entry::Vacant(e) => {
@@ -90,6 +140,7 @@ impl NgramPool {
             if let Some(q) = self.map.get_mut(&key) {
                 if q.pop_front().is_some() {
                     self.total -= 1;
+                    self.evictions += 1;
                 }
                 if q.is_empty() {
                     self.map.remove(&key);
@@ -127,12 +178,29 @@ impl NgramPool {
     }
 
     pub fn hit_rate(&self) -> f64 {
-        let t = self.hits + self.misses;
-        if t == 0 {
-            0.0
-        } else {
-            self.hits as f64 / t as f64
-        }
+        crate::metrics::hit_rate(self.hits as u64, self.misses as u64)
+    }
+}
+
+impl NgramSource for NgramPool {
+    fn n(&self) -> usize {
+        NgramPool::n(self)
+    }
+
+    fn len(&self) -> usize {
+        NgramPool::len(self)
+    }
+
+    fn insert(&mut self, ngram: &[u32]) {
+        NgramPool::insert(self, ngram)
+    }
+
+    fn lookup(&mut self, key: u32, max: usize) -> Vec<Vec<u32>> {
+        NgramPool::lookup(self, key, max)
+    }
+
+    fn seed_from(&mut self, tokens: &[u32]) {
+        NgramPool::seed_from(self, tokens)
     }
 }
 
@@ -200,6 +268,31 @@ mod tests {
         p.insert(&[1, 2]);
         p.insert(&[1, 2, 3, 4]);
         assert!(p.is_empty());
+    }
+
+    #[test]
+    fn trait_object_dispatch() {
+        let mut p = NgramPool::new(3, 4, 100);
+        let src: &mut dyn NgramSource = &mut p;
+        assert_eq!(src.n(), 3);
+        src.insert(&[1, 2, 3]);
+        assert_eq!(src.lookup(1, 4), vec![vec![2, 3]]);
+        assert_eq!(src.len(), 1);
+        assert!(!src.is_empty());
+    }
+
+    #[test]
+    fn evictions_counted() {
+        let mut p = NgramPool::new(2, 2, 100);
+        p.insert(&[1, 10]);
+        p.insert(&[1, 11]);
+        p.insert(&[1, 12]); // per-key cap evicts 10
+        assert_eq!(p.evictions, 1);
+        let mut p = NgramPool::new(2, 10, 3);
+        for i in 0..6u32 {
+            p.insert(&[i, i + 1]);
+        }
+        assert_eq!(p.evictions, 3); // global cap evicted the overflow
     }
 
     #[test]

@@ -1,0 +1,519 @@
+//! Cross-request shared n-gram cache — the serving-level extension of the
+//! paper's per-request pool (§3.1/§3.2, Tab. 3 "prompt as ref").
+//!
+//! Production traffic is heavily templated: repeated system prompts, shared
+//! boilerplate, near-duplicate code completions. A per-request pool re-learns
+//! those n-grams from scratch on every call; [`SharedNgramCache`] persists
+//! them across requests and across worker threads, so request k+1 starts
+//! with the trajectory n-grams harvested by requests 1..k ("warm" start).
+//!
+//! Exactness: greedy verification (Alg. 3) accepts only tokens the model
+//! itself would emit, so *greedy* outputs are byte-identical warm or cold —
+//! sharing changes accept length only. Sampling verification (Alg. 4)
+//! preserves the output *distribution* with any candidate set, but the
+//! per-seed token sequence depends on cache contents; the serving layer
+//! therefore defaults sampled requests to private pools (see
+//! `Worker::bind_pool_for`).
+//!
+//! Concurrency: the cache is sharded by first-token key; each shard is an
+//! independently locked [`NgramPool`] with its own slice of the global cap.
+//! Workers therefore contend only when operating on the same key shard.
+//! Counters are lock-free atomics.
+//!
+//! Ownership: a [`NgramCacheRegistry`] (one per server) hands out one cache
+//! per (model, engine kind, n) triple; engines access it through a
+//! per-request [`PoolHandle`] that also tracks per-request hit/miss/warm
+//! statistics.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::DecodeStats;
+use crate::ngram::{NgramPool, NgramSource};
+
+/// Shape of an engine's n-gram pool: n-gram length + LRU capacities.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolSpec {
+    /// n-gram length N (keys are 1 token, stored suffixes are N-1).
+    pub n: usize,
+    /// max suffixes retained per key.
+    pub per_key_cap: usize,
+    /// global suffix capacity.
+    pub total_cap: usize,
+    /// engine family the pool belongs to. Part of the registry key:
+    /// engines of different kinds with coinciding N must not share a cache
+    /// (their harvesting strategies and cap intents differ).
+    pub kind: &'static str,
+}
+
+impl PoolSpec {
+    pub fn new(n: usize, per_key_cap: usize, total_cap: usize) -> PoolSpec {
+        PoolSpec {
+            n,
+            per_key_cap: per_key_cap.max(1),
+            total_cap: total_cap.max(1),
+            kind: "ngram",
+        }
+    }
+
+    /// Tag the spec with its engine family (used in the registry key).
+    pub fn with_kind(mut self, kind: &'static str) -> PoolSpec {
+        self.kind = kind;
+        self
+    }
+}
+
+/// Default shard count: enough to keep worker threads off each other's keys
+/// without bloating per-shard cap granularity.
+pub const DEFAULT_SHARDS: usize = 16;
+
+/// Aggregate counters of a [`SharedNgramCache`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SharedCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+    pub entries: usize,
+}
+
+impl SharedCacheStats {
+    pub fn hit_rate(&self) -> f64 {
+        crate::metrics::hit_rate(self.hits, self.misses)
+    }
+}
+
+/// Thread-safe, sharded, LRU-capped n-gram store shared by all workers
+/// serving one model.
+pub struct SharedNgramCache {
+    spec: PoolSpec,
+    shards: Vec<Mutex<NgramPool>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    inserts: AtomicU64,
+}
+
+impl SharedNgramCache {
+    pub fn new(spec: PoolSpec, shards: usize) -> SharedNgramCache {
+        let shards = shards.max(1);
+        let per_shard_cap = spec.total_cap.div_ceil(shards).max(1);
+        SharedNgramCache {
+            spec,
+            shards: (0..shards)
+                .map(|_| Mutex::new(NgramPool::new(spec.n, spec.per_key_cap, per_shard_cap)))
+                .collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            inserts: AtomicU64::new(0),
+        }
+    }
+
+    pub fn with_defaults(spec: PoolSpec) -> SharedNgramCache {
+        SharedNgramCache::new(spec, DEFAULT_SHARDS)
+    }
+
+    pub fn spec(&self) -> PoolSpec {
+        self.spec
+    }
+
+    pub fn n(&self) -> usize {
+        self.spec.n
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Fibonacci-hash the key so dense byte-token keys spread over shards.
+    fn shard_for(&self, key: u32) -> &Mutex<NgramPool> {
+        let h = (key as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32;
+        &self.shards[(h as usize) % self.shards.len()]
+    }
+
+    /// Insert one n-gram (length must equal `spec.n`; others are ignored,
+    /// matching `NgramPool::insert`).
+    pub fn insert(&self, ngram: &[u32]) {
+        if ngram.len() != self.spec.n {
+            return;
+        }
+        self.inserts.fetch_add(1, Ordering::Relaxed);
+        self.shard_for(ngram[0]).lock().unwrap().insert(ngram);
+    }
+
+    /// Up to `max` suffixes for `key`, most recent first.
+    pub fn lookup(&self, key: u32, max: usize) -> Vec<Vec<u32>> {
+        let got = self.shard_for(key).lock().unwrap().lookup(key, max);
+        if got.is_empty() {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+        }
+        got
+    }
+
+    /// Seed with every n-gram window of `tokens` (cross-request
+    /// "prompt as reference").
+    pub fn seed_from(&self, tokens: &[u32]) {
+        if tokens.len() < self.spec.n {
+            return;
+        }
+        for win in tokens.windows(self.spec.n) {
+            self.insert(win);
+        }
+    }
+
+    /// Total stored suffixes (sums shard lengths; a point-in-time value
+    /// under concurrent mutation).
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> SharedCacheStats {
+        let mut entries = 0usize;
+        let mut evictions = 0u64;
+        for s in &self.shards {
+            let p = s.lock().unwrap();
+            entries += p.len();
+            evictions += p.evictions as u64;
+        }
+        SharedCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            inserts: self.inserts.load(Ordering::Relaxed),
+            evictions,
+            entries,
+        }
+    }
+}
+
+impl NgramSource for Arc<SharedNgramCache> {
+    fn n(&self) -> usize {
+        SharedNgramCache::n(self)
+    }
+
+    fn len(&self) -> usize {
+        SharedNgramCache::len(self)
+    }
+
+    fn insert(&mut self, ngram: &[u32]) {
+        SharedNgramCache::insert(self, ngram)
+    }
+
+    fn lookup(&mut self, key: u32, max: usize) -> Vec<Vec<u32>> {
+        SharedNgramCache::lookup(self, key, max)
+    }
+
+    fn seed_from(&mut self, tokens: &[u32]) {
+        SharedNgramCache::seed_from(self, tokens)
+    }
+}
+
+/// Server-level registry: one shared cache per (model, engine kind, n-gram
+/// length). Workers with different models, engine families, or lookahead
+/// configs with different N must never cross-pollinate pools, so the key
+/// includes all three.
+pub struct NgramCacheRegistry {
+    shards: usize,
+    caches: Mutex<HashMap<String, Arc<SharedNgramCache>>>,
+}
+
+impl NgramCacheRegistry {
+    pub fn new() -> NgramCacheRegistry {
+        NgramCacheRegistry { shards: DEFAULT_SHARDS, caches: Mutex::new(HashMap::new()) }
+    }
+
+    pub fn with_shards(shards: usize) -> NgramCacheRegistry {
+        NgramCacheRegistry { shards: shards.max(1), caches: Mutex::new(HashMap::new()) }
+    }
+
+    fn key(model: &str, spec: &PoolSpec) -> String {
+        format!("{model}:{}:n{}", spec.kind, spec.n)
+    }
+
+    /// The shared cache for `(model, spec.kind, spec.n)`, created on first
+    /// use. The first caller's capacities win; later specs with the same
+    /// key reuse the existing cache (capacity is a server-level property,
+    /// not per-request).
+    pub fn get_or_create(&self, model: &str, spec: PoolSpec) -> Arc<SharedNgramCache> {
+        let mut m = self.caches.lock().unwrap();
+        m.entry(Self::key(model, &spec))
+            .or_insert_with(|| Arc::new(SharedNgramCache::new(spec, self.shards)))
+            .clone()
+    }
+
+    /// Snapshot of every cache's counters, sorted by key.
+    pub fn stats(&self) -> Vec<(String, SharedCacheStats)> {
+        let m = self.caches.lock().unwrap();
+        let mut out: Vec<(String, SharedCacheStats)> =
+            m.iter().map(|(k, c)| (k.clone(), c.stats())).collect();
+        out.sort_by(|a, b| a.0.cmp(&b.0));
+        out
+    }
+
+    /// Human-readable report for server metrics output.
+    pub fn report(&self) -> String {
+        let mut s = String::new();
+        for (key, st) in self.stats() {
+            s.push_str(&format!(
+                "ngram_cache {key}: entries={} hits={} misses={} hit_rate={:.2} \
+                 inserts={} evictions={}\n",
+                st.entries, st.hits, st.misses, st.hit_rate(), st.inserts, st.evictions
+            ));
+        }
+        s
+    }
+}
+
+impl Default for NgramCacheRegistry {
+    fn default() -> Self {
+        NgramCacheRegistry::new()
+    }
+}
+
+/// Per-request view of an n-gram store, handed to `Decoder::generate_with_pool`.
+///
+/// Storage is any [`NgramSource`] behind dynamic dispatch — a private
+/// [`NgramPool`] or an `Arc<SharedNgramCache>` — or detached (`None`) for
+/// engines that keep no pool. The handle tracks *this request's* hit/miss
+/// counts and whether the backing store was already warm when the request
+/// started, independent of the store's global counters — so per-request
+/// `DecodeStats` stay exact even when many workers share one cache.
+pub struct PoolHandle {
+    src: Option<Box<dyn NgramSource + Send>>,
+    shared: bool,
+    pub hits: usize,
+    pub misses: usize,
+    warm_start: bool,
+    entries_start: usize,
+}
+
+impl PoolHandle {
+    fn from_src(src: Option<Box<dyn NgramSource + Send>>, shared: bool) -> PoolHandle {
+        let entries = src.as_ref().map_or(0, |s| s.len());
+        PoolHandle {
+            src,
+            shared,
+            hits: 0,
+            misses: 0,
+            warm_start: entries > 0,
+            entries_start: entries,
+        }
+    }
+
+    /// Detached handle for engines without a pool (AR, Jacobi, spec-decode).
+    pub fn none() -> PoolHandle {
+        PoolHandle::from_src(None, false)
+    }
+
+    /// Cold per-request pool (the pre-sharing behavior).
+    pub fn private(spec: PoolSpec) -> PoolHandle {
+        let pool = NgramPool::new(spec.n, spec.per_key_cap, spec.total_cap);
+        PoolHandle::from_src(Some(Box::new(pool)), false)
+    }
+
+    /// Cross-request shared cache.
+    pub fn shared(cache: Arc<SharedNgramCache>) -> PoolHandle {
+        PoolHandle::from_src(Some(Box::new(cache)), true)
+    }
+
+    /// Build the handle an engine's [`PoolSpec`] asks for (none when the
+    /// engine keeps no pool).
+    pub fn for_spec(spec: Option<PoolSpec>) -> PoolHandle {
+        match spec {
+            Some(s) => PoolHandle::private(s),
+            None => PoolHandle::none(),
+        }
+    }
+
+    /// Guarantee a usable pool of n-gram length `spec.n`: engines call this
+    /// first so a mismatched or absent handle degrades to a private pool
+    /// instead of corrupting a shared cache of different N.
+    pub fn ensure(&mut self, spec: PoolSpec) {
+        if self.src.as_ref().map(|s| s.n()) != Some(spec.n) {
+            *self = PoolHandle::private(spec);
+        }
+    }
+
+    pub fn is_shared(&self) -> bool {
+        self.shared
+    }
+
+    pub fn is_attached(&self) -> bool {
+        self.src.is_some()
+    }
+
+    /// True when the backing store already held n-grams at request start.
+    pub fn warm_start(&self) -> bool {
+        self.warm_start
+    }
+
+    pub fn entries_start(&self) -> usize {
+        self.entries_start
+    }
+
+    /// Current entry count of the backing store.
+    pub fn entries(&self) -> usize {
+        self.src.as_ref().map_or(0, |s| s.len())
+    }
+
+    pub fn lookup(&mut self, key: u32, max: usize) -> Vec<Vec<u32>> {
+        let got = match &mut self.src {
+            Some(s) => s.lookup(key, max),
+            None => Vec::new(),
+        };
+        if got.is_empty() {
+            self.misses += 1;
+        } else {
+            self.hits += 1;
+        }
+        got
+    }
+
+    pub fn insert(&mut self, ngram: &[u32]) {
+        if let Some(s) = &mut self.src {
+            s.insert(ngram);
+        }
+    }
+
+    pub fn seed_from(&mut self, tokens: &[u32]) {
+        if let Some(s) = &mut self.src {
+            s.seed_from(tokens);
+        }
+    }
+
+    /// Fold this request's pool accounting into its `DecodeStats`.
+    /// Hit/miss counts are additive so engines that also count non-pool
+    /// speculation sources (e.g. prompt-lookup's history scan) keep both.
+    pub fn fill_stats(&self, stats: &mut DecodeStats) {
+        stats.pool_hits += self.hits;
+        stats.pool_misses += self.misses;
+        stats.pool_shared = self.is_shared();
+        stats.pool_warm_start = self.warm_start;
+        stats.pool_entries_start = self.entries_start;
+        stats.pool_entries_end = self.entries();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> PoolSpec {
+        PoolSpec::new(3, 4, 64)
+    }
+
+    #[test]
+    fn insert_lookup_roundtrip() {
+        let c = SharedNgramCache::new(spec(), 4);
+        c.insert(&[1, 2, 3]);
+        c.insert(&[1, 4, 5]);
+        assert_eq!(c.lookup(1, 8), vec![vec![4, 5], vec![2, 3]]);
+        assert!(c.lookup(9, 8).is_empty());
+        let st = c.stats();
+        assert_eq!((st.hits, st.misses, st.inserts), (1, 1, 2));
+        assert_eq!(st.entries, 2);
+    }
+
+    #[test]
+    fn wrong_length_ignored() {
+        let c = SharedNgramCache::new(spec(), 2);
+        c.insert(&[1, 2]);
+        c.insert(&[1, 2, 3, 4]);
+        assert!(c.is_empty());
+        assert_eq!(c.stats().inserts, 0);
+    }
+
+    #[test]
+    fn global_cap_respected_across_shards() {
+        let c = SharedNgramCache::new(PoolSpec::new(2, 64, 32), 4);
+        for i in 0..500u32 {
+            c.insert(&[i, i + 1]);
+        }
+        // per-shard cap is ceil(32/4) = 8 -> at most 32 total
+        assert!(c.len() <= 32, "len {}", c.len());
+        assert!(c.stats().evictions > 0);
+    }
+
+    #[test]
+    fn seed_from_prompt_windows() {
+        let c = SharedNgramCache::with_defaults(spec());
+        c.seed_from(&[1, 2, 3, 4]);
+        assert_eq!(c.lookup(1, 4), vec![vec![2, 3]]);
+        assert_eq!(c.lookup(2, 4), vec![vec![3, 4]]);
+    }
+
+    #[test]
+    fn handle_tracks_per_request_stats() {
+        let c = Arc::new(SharedNgramCache::with_defaults(spec()));
+        let mut h1 = PoolHandle::shared(c.clone());
+        assert!(!h1.warm_start());
+        h1.insert(&[7, 8, 9]);
+
+        // a second request sees the first request's n-grams: warm start
+        let mut h2 = PoolHandle::shared(c.clone());
+        assert!(h2.warm_start());
+        assert_eq!(h2.entries_start(), 1);
+        assert_eq!(h2.lookup(7, 4), vec![vec![8, 9]]);
+        assert!(h2.lookup(1, 4).is_empty());
+        assert_eq!((h2.hits, h2.misses), (1, 1));
+        // h1's counters are untouched by h2's traffic
+        assert_eq!((h1.hits, h1.misses), (0, 0));
+    }
+
+    #[test]
+    fn handle_ensure_replaces_mismatched_backend() {
+        let c = Arc::new(SharedNgramCache::with_defaults(PoolSpec::new(5, 4, 64)));
+        let mut h = PoolHandle::shared(c);
+        h.ensure(PoolSpec::new(3, 4, 64)); // engine wants n=3, cache is n=5
+        assert!(!h.is_shared());
+        h.insert(&[1, 2, 3]);
+        assert_eq!(h.lookup(1, 4), vec![vec![2, 3]]);
+
+        let mut none = PoolHandle::none();
+        none.ensure(PoolSpec::new(3, 4, 64));
+        assert!(none.is_attached());
+    }
+
+    #[test]
+    fn registry_keys_by_model_kind_and_n() {
+        let reg = NgramCacheRegistry::new();
+        let a = reg.get_or_create("tiny", PoolSpec::new(3, 4, 64));
+        let b = reg.get_or_create("tiny", PoolSpec::new(3, 8, 128));
+        let c = reg.get_or_create("tiny", PoolSpec::new(5, 4, 64));
+        let d = reg.get_or_create("small", PoolSpec::new(3, 4, 64));
+        let e = reg.get_or_create("tiny", PoolSpec::new(3, 4, 64).with_kind("pl"));
+        assert!(Arc::ptr_eq(&a, &b), "same (model, kind, n) must share");
+        assert!(!Arc::ptr_eq(&a, &c), "different n must not share");
+        assert!(!Arc::ptr_eq(&a, &d), "different model must not share");
+        assert!(!Arc::ptr_eq(&a, &e), "different engine kind must not share");
+        assert!(reg.report().contains("tiny:ngram:n3"));
+    }
+
+    #[test]
+    fn concurrent_inserts_and_lookups() {
+        let c = Arc::new(SharedNgramCache::new(PoolSpec::new(3, 8, 256), 8));
+        let mut joins = Vec::new();
+        for t in 0..8u32 {
+            let c = c.clone();
+            joins.push(std::thread::spawn(move || {
+                for i in 0..2_000u32 {
+                    let k = (t * 31 + i) % 97;
+                    c.insert(&[k, i % 17, (i + t) % 13]);
+                    let _ = c.lookup(i % 97, 4);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let st = c.stats();
+        assert_eq!(st.inserts, 16_000);
+        assert_eq!(st.hits + st.misses, 16_000);
+        assert!(c.len() <= 256, "global cap violated: {}", c.len());
+    }
+}

@@ -198,7 +198,7 @@ impl ModelManifest {
         let mut best: Option<(&str, usize)> = None;
         for (name, spec) in &self.executables {
             if let ExeKind::DecodeGen { t_pad } = spec.kind {
-                if t_pad >= t && best.map_or(true, |(_, b)| t_pad < b) {
+                if t_pad >= t && best.is_none_or(|(_, b)| t_pad < b) {
                     best = Some((name.as_str(), t_pad));
                 }
             }

@@ -19,6 +19,9 @@ pub struct Request {
     pub method: String,
     /// optional (W,N,G) override for lookahead
     pub wng: Option<(usize, usize, usize)>,
+    /// per-request override of the server's cross-request n-gram sharing
+    /// toggle (None = use the server default).
+    pub share_ngrams: Option<bool>,
     pub seed: u64,
 }
 
@@ -33,6 +36,7 @@ impl Default for Request {
             top_p: 1.0,
             method: "lookahead".into(),
             wng: None,
+            share_ngrams: None,
             seed: 0,
         }
     }
@@ -79,6 +83,9 @@ impl Request {
         if let Some(v) = j.get("seed").and_then(Json::as_i64) {
             r.seed = v as u64;
         }
+        if let Some(v) = j.get("share_ngrams").and_then(Json::as_bool) {
+            r.share_ngrams = Some(v);
+        }
         if let Some(arr) = j.get("wng").and_then(Json::as_arr) {
             if arr.len() == 3 {
                 let v: Vec<usize> = arr.iter().filter_map(Json::as_usize).collect();
@@ -100,6 +107,13 @@ pub struct Response {
     pub compression: f64,
     pub wall_ms: f64,
     pub queue_ms: f64,
+    /// request was served from an n-gram store that already held entries
+    /// (cross-request shared cache warmed by earlier traffic).
+    pub pool_warm: bool,
+    /// request used the cross-request shared n-gram cache.
+    pub pool_shared: bool,
+    /// per-request n-gram speculation hit rate.
+    pub pool_hit_rate: f64,
     pub error: Option<String>,
 }
 
@@ -113,6 +127,9 @@ impl Response {
             compression: stats.compression(),
             wall_ms: stats.wall.as_secs_f64() * 1e3,
             queue_ms,
+            pool_warm: stats.pool_warm_start,
+            pool_shared: stats.pool_shared,
+            pool_hit_rate: stats.pool_hit_rate(),
             error: None,
         }
     }
@@ -126,6 +143,9 @@ impl Response {
             compression: 0.0,
             wall_ms: 0.0,
             queue_ms: 0.0,
+            pool_warm: false,
+            pool_shared: false,
+            pool_hit_rate: 0.0,
             error: Some(msg),
         }
     }
@@ -139,6 +159,9 @@ impl Response {
             ("compression", Json::num((self.compression * 1000.0).round() / 1000.0)),
             ("wall_ms", Json::num((self.wall_ms * 100.0).round() / 100.0)),
             ("queue_ms", Json::num((self.queue_ms * 100.0).round() / 100.0)),
+            ("pool_warm", Json::Bool(self.pool_warm)),
+            ("pool_shared", Json::Bool(self.pool_shared)),
+            ("pool_hit_rate", Json::num((self.pool_hit_rate * 1000.0).round() / 1000.0)),
         ];
         if let Some(e) = &self.error {
             fields.push(("error", Json::str(e.clone())));
@@ -172,6 +195,33 @@ mod tests {
         assert_eq!(r.method, "autoregressive");
         assert_eq!(r.wng, Some((5, 3, 5)));
         assert_eq!(r.seed, 9);
+    }
+
+    #[test]
+    fn parses_share_ngrams_override() {
+        let r = Request::from_json_line(1, r#"{"prompt":"x","share_ngrams":false}"#)
+            .unwrap();
+        assert_eq!(r.share_ngrams, Some(false));
+        let r = Request::from_json_line(1, r#"{"prompt":"x"}"#).unwrap();
+        assert_eq!(r.share_ngrams, None);
+    }
+
+    #[test]
+    fn response_carries_pool_stats() {
+        let stats = DecodeStats {
+            pool_hits: 3,
+            pool_misses: 1,
+            pool_warm_start: true,
+            pool_shared: true,
+            ..Default::default()
+        };
+        let r = Response::ok(1, "t".into(), &stats, 0.0);
+        assert!(r.pool_warm && r.pool_shared);
+        assert!((r.pool_hit_rate - 0.75).abs() < 1e-12);
+        let j = Json::parse(&r.to_json_line()).unwrap();
+        assert_eq!(j.get("pool_warm").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("pool_shared").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("pool_hit_rate").unwrap().as_f64(), Some(0.75));
     }
 
     #[test]

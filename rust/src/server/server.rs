@@ -20,6 +20,7 @@ use anyhow::{Context, Result};
 
 use crate::info;
 use crate::metrics::Registry;
+use crate::ngram::NgramCacheRegistry;
 use crate::server::request::{Request, Response};
 use crate::server::scheduler::{Policy, Scheduler};
 use crate::server::worker::{Worker, WorkerConfig};
@@ -28,6 +29,11 @@ pub struct ServerConfig {
     pub workers: usize,
     pub policy: Policy,
     pub queue_depth: usize,
+    /// server-level toggle for the cross-request shared n-gram cache. When
+    /// true, one `NgramCacheRegistry` spans all workers; individual
+    /// requests can still opt out via `share_ngrams: false`. When false,
+    /// no registry exists and every request decodes against a cold pool.
+    pub share_ngrams: bool,
     pub worker: WorkerConfig,
 }
 
@@ -37,6 +43,7 @@ impl Default for ServerConfig {
             workers: 1,
             policy: Policy::Fifo,
             queue_depth: 256,
+            share_ngrams: true,
             worker: WorkerConfig::default(),
         }
     }
@@ -48,6 +55,8 @@ pub struct ServerHandle {
     pending: Arc<Mutex<HashMap<u64, Sender<Response>>>>,
     next_id: AtomicU64,
     pub metrics: Arc<Mutex<Registry>>,
+    /// cross-request n-gram caches (None when sharing is disabled).
+    pub ngram_caches: Option<Arc<NgramCacheRegistry>>,
     worker_joins: Vec<std::thread::JoinHandle<()>>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
 }
@@ -58,6 +67,8 @@ impl ServerHandle {
         let pending: Arc<Mutex<HashMap<u64, Sender<Response>>>> =
             Arc::new(Mutex::new(HashMap::new()));
         let metrics = Arc::new(Mutex::new(Registry::new()));
+        let ngram_caches =
+            cfg.share_ngrams.then(|| Arc::new(NgramCacheRegistry::new()));
         let (tx, rx): (Sender<Response>, Receiver<Response>) = channel();
 
         let mut worker_joins = Vec::new();
@@ -65,8 +76,9 @@ impl ServerHandle {
             let sched_c = sched.clone();
             let tx_c = tx.clone();
             let wcfg = cfg.worker.clone();
+            let caches_c = ngram_caches.clone();
             worker_joins.push(std::thread::spawn(move || {
-                match Worker::start(wid, wcfg) {
+                match Worker::start(wid, wcfg, caches_c) {
                     Ok(w) => w.run(sched_c, tx_c),
                     Err(e) => eprintln!("[ERROR] worker {wid} failed to start: {e}"),
                 }
@@ -87,6 +99,17 @@ impl ServerHandle {
                         m.observe("latency_ms", resp.wall_ms);
                         m.observe("queue_ms", resp.queue_ms);
                         m.observe("compression", resp.compression);
+                        if resp.pool_shared {
+                            m.inc(
+                                if resp.pool_warm {
+                                    "ngram_warm_requests"
+                                } else {
+                                    "ngram_cold_requests"
+                                },
+                                1,
+                            );
+                            m.observe("pool_hit_rate", resp.pool_hit_rate);
+                        }
                     } else {
                         m.inc("responses_err", 1);
                     }
@@ -103,9 +126,19 @@ impl ServerHandle {
             pending,
             next_id: AtomicU64::new(1),
             metrics,
+            ngram_caches,
             worker_joins,
             dispatcher: Some(dispatcher),
         })
+    }
+
+    /// Server metrics report including per-cache n-gram counters.
+    pub fn report(&self) -> String {
+        let mut s = self.metrics.lock().unwrap().report();
+        if let Some(reg) = &self.ngram_caches {
+            s.push_str(&reg.report());
+        }
+        s
     }
 
     /// Submit a request; returns the channel the response will arrive on.
@@ -166,9 +199,8 @@ pub fn serve_tcp(addr: &str, cfg: ServerConfig, max_conns: Option<usize>) -> Res
     for j in conn_joins {
         let _ = j.join();
     }
-    match Arc::try_unwrap(handle) {
-        Ok(h) => h.shutdown(),
-        Err(_) => {}
+    if let Ok(h) = Arc::try_unwrap(handle) {
+        h.shutdown();
     }
     Ok(())
 }

@@ -3,6 +3,7 @@
 //! ownership is mandatory, and it also mirrors lookahead parallelism's
 //! full-model-per-device design).
 
+use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
@@ -16,6 +17,7 @@ use crate::engine::prompt_lookup::PromptLookup;
 use crate::engine::spec_decode::SpecDecode;
 use crate::engine::Decoder;
 use crate::info;
+use crate::ngram::{NgramCacheRegistry, PoolHandle};
 use crate::runtime::{cpu_client, Manifest, ModelRuntime};
 use crate::server::request::{Request, Response};
 use crate::server::scheduler::Scheduler;
@@ -48,14 +50,25 @@ pub struct Worker {
     rt: ModelRuntime,
     engines: HashMap<String, Box<dyn Decoder>>,
     tok: ByteTokenizer,
+    /// server-level shared n-gram caches (None = sharing disabled).
+    ngram_caches: Option<Arc<NgramCacheRegistry>>,
 }
 
 impl Worker {
-    pub fn start(id: usize, cfg: WorkerConfig) -> Result<Worker> {
+    pub fn start(id: usize, cfg: WorkerConfig,
+                 ngram_caches: Option<Arc<NgramCacheRegistry>>) -> Result<Worker> {
         let manifest = Manifest::load(&cfg.artifacts_dir)?;
         let client = cpu_client()?;
         let rt = ModelRuntime::load(&client, &manifest, &cfg.model)?;
-        Ok(Worker { id, cfg, manifest, rt, engines: HashMap::new(), tok: ByteTokenizer::new() })
+        Ok(Worker {
+            id,
+            cfg,
+            manifest,
+            rt,
+            engines: HashMap::new(),
+            tok: ByteTokenizer::new(),
+            ngram_caches,
+        })
     }
 
     fn engine_key(&self, req: &Request) -> String {
@@ -65,16 +78,18 @@ impl Worker {
         }
     }
 
-    fn make_engine(&self, req: &Request) -> Result<Box<dyn Decoder>> {
-        let (w, n, g) = req.wng.unwrap_or(self.cfg.wng);
+    /// (Associated fn over disjoint fields so `handle` can call it while
+    /// holding the engine-map entry.)
+    fn make_engine(cfg: &WorkerConfig, manifest: &Manifest, rt: &ModelRuntime,
+                   req: &Request) -> Result<Box<dyn Decoder>> {
+        let (w, n, g) = req.wng.unwrap_or(cfg.wng);
         Ok(match &req.method[..] {
             "lookahead" => Box::new(Lookahead::with_wng(w, n, g)),
             "autoregressive" | "greedy" | "ar" => Box::new(AutoRegressive::new()),
             "jacobi" => Box::new(Jacobi::new(8)),
             "prompt_lookup" => Box::new(PromptLookup::new(8, 1)),
             "spec_decode" => {
-                let draft =
-                    ModelRuntime::load(&self.rt.client, &self.manifest, &self.cfg.draft_model)?;
+                let draft = ModelRuntime::load(&rt.client, manifest, &cfg.draft_model)?;
                 Box::new(SpecDecode::new(draft, 4))
             }
             other => return Err(anyhow!("unknown decoding method '{other}'")),
@@ -94,19 +109,47 @@ impl Worker {
         ids
     }
 
+    /// Bind the request to an n-gram store: the server's shared cache when
+    /// the server handed this worker a registry (`ServerConfig.share_ngrams`,
+    /// per-request overridable), else a cold private pool. Engines without a
+    /// pool get a detached handle.
+    ///
+    /// Sampled requests (`temperature > 0`) default to a private pool even
+    /// when the server shares: Algorithm 4 preserves the output
+    /// *distribution* with any candidate set, but the per-seed token
+    /// sequence depends on which candidates the cache holds — a warm cache
+    /// would silently break seeded reproducibility. An explicit
+    /// `share_ngrams: true` on the request still opts in.
+    /// (Associated fn: `handle` calls it while holding `&mut` on the engine
+    /// map.)
+    fn bind_pool_for(cfg: &WorkerConfig, caches: &Option<Arc<NgramCacheRegistry>>,
+                     req: &Request, engine: &dyn Decoder) -> PoolHandle {
+        let Some(spec) = engine.pool_spec() else {
+            return PoolHandle::none();
+        };
+        let greedy = req.temperature <= 0.0;
+        let share = req.share_ngrams.unwrap_or(greedy);
+        match (caches, share) {
+            (Some(reg), true) => PoolHandle::shared(reg.get_or_create(&cfg.model, spec)),
+            _ => PoolHandle::private(spec),
+        }
+    }
+
     pub fn handle(&mut self, req: &Request, queued_ms: f64) -> Response {
         let key = self.engine_key(req);
-        if !self.engines.contains_key(&key) {
-            match self.make_engine(req) {
-                Ok(e) => {
-                    self.engines.insert(key.clone(), e);
-                }
-                Err(e) => return Response::err(req.id, e.to_string()),
-            }
-        }
         let ids = self.encode_prompt(&req.prompt);
-        let engine = self.engines.get_mut(&key).unwrap();
-        match engine.generate(&self.rt, &ids, &req.gen_params()) {
+        let engine = match self.engines.entry(key) {
+            Entry::Occupied(e) => e.into_mut(),
+            Entry::Vacant(v) => {
+                match Self::make_engine(&self.cfg, &self.manifest, &self.rt, req) {
+                    Ok(e) => v.insert(e),
+                    Err(e) => return Response::err(req.id, e.to_string()),
+                }
+            }
+        };
+        let mut pool = Self::bind_pool_for(&self.cfg, &self.ngram_caches, req,
+                                           engine.as_ref());
+        match engine.generate_with_pool(&self.rt, &ids, &req.gen_params(), &mut pool) {
             Ok(out) => Response::ok(req.id, out.text, &out.stats, queued_ms),
             Err(e) => Response::err(req.id, e.to_string()),
         }

@@ -6,8 +6,16 @@
 use lookahead::layout::Wng;
 use lookahead::util::json::Json;
 
+/// Skip (returning true) when the AOT artifacts are not built.
+fn no_artifacts() -> bool {
+    lookahead::bench::skip_without_artifacts(module_path!())
+}
+
 #[test]
 fn rust_layout_matches_python_golden() {
+    if no_artifacts() {
+        return;
+    }
     let text = std::fs::read_to_string("artifacts/layout_golden.json")
         .expect("run `make artifacts` first");
     let j = Json::parse(&text).unwrap();

@@ -13,6 +13,11 @@ use lookahead::engine::{Decoder, GenParams};
 use lookahead::runtime::{cpu_client, Manifest, ModelRuntime};
 use lookahead::tokenizer::ByteTokenizer;
 
+/// Skip (returning true) when the AOT artifacts are not built.
+fn no_artifacts() -> bool {
+    lookahead::bench::skip_without_artifacts(module_path!())
+}
+
 fn setup() -> (Manifest, ModelRuntime) {
     let manifest = Manifest::load("artifacts").expect("run `make artifacts` first");
     let client = cpu_client().unwrap();
@@ -40,6 +45,9 @@ fn run(engine: &mut dyn Decoder, rt: &ModelRuntime, prompt: &[u32]) -> Vec<u32> 
 
 #[test]
 fn lookahead_specialized_matches_autoregressive() {
+    if no_artifacts() {
+        return;
+    }
     let (_, rt) = setup();
     let mut ar = AutoRegressive::new();
     let mut la = Lookahead::with_wng(5, 3, 5);
@@ -52,6 +60,9 @@ fn lookahead_specialized_matches_autoregressive() {
 
 #[test]
 fn lookahead_pallas_matches_autoregressive() {
+    if no_artifacts() {
+        return;
+    }
     let (_, rt) = setup();
     let mut ar = AutoRegressive::new();
     let mut cfg = LookaheadConfig::new(5, 3, 5);
@@ -66,6 +77,9 @@ fn lookahead_pallas_matches_autoregressive() {
 
 #[test]
 fn lookahead_generic_matches_autoregressive() {
+    if no_artifacts() {
+        return;
+    }
     let (_, rt) = setup();
     let mut ar = AutoRegressive::new();
     let mut cfg = LookaheadConfig::new(4, 3, 4); // no specialized artifact
@@ -80,6 +94,9 @@ fn lookahead_generic_matches_autoregressive() {
 
 #[test]
 fn lookahead_without_prompt_ref_matches_autoregressive() {
+    if no_artifacts() {
+        return;
+    }
     let (_, rt) = setup();
     let mut ar = AutoRegressive::new();
     let mut cfg = LookaheadConfig::new(5, 3, 5);
@@ -91,6 +108,9 @@ fn lookahead_without_prompt_ref_matches_autoregressive() {
 
 #[test]
 fn spec_decode_matches_autoregressive() {
+    if no_artifacts() {
+        return;
+    }
     let (manifest, rt) = setup();
     let draft = ModelRuntime::load(&rt.client, &manifest, "draft").unwrap();
     let mut ar = AutoRegressive::new();
@@ -104,6 +124,9 @@ fn spec_decode_matches_autoregressive() {
 
 #[test]
 fn prompt_lookup_matches_autoregressive() {
+    if no_artifacts() {
+        return;
+    }
     let (_, rt) = setup();
     let mut ar = AutoRegressive::new();
     let mut pl = PromptLookup::new(8, 1);
@@ -116,6 +139,9 @@ fn prompt_lookup_matches_autoregressive() {
 
 #[test]
 fn jacobi_matches_autoregressive() {
+    if no_artifacts() {
+        return;
+    }
     let (_, rt) = setup();
     let mut ar = AutoRegressive::new();
     let mut j = Jacobi::new(8);
@@ -125,6 +151,9 @@ fn jacobi_matches_autoregressive() {
 
 #[test]
 fn lookahead_compresses_steps() {
+    if no_artifacts() {
+        return;
+    }
     // the headline property: S > 1 on a predictable (code) prompt
     let (_, rt) = setup();
     let tok = ByteTokenizer::new();

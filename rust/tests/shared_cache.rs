@@ -1,0 +1,197 @@
+//! Shared n-gram cache integration: concurrent insert/lookup under load
+//! (no deadlock, caps respected), warm-vs-cold accept length on a repeated
+//! prompt through the real runtime, and the scheduler+worker share-toggle.
+//!
+//! Runtime-dependent tests gate on `artifacts/manifest.json` and skip when
+//! the AOT artifacts are absent (CI runs without PJRT).
+
+use std::sync::Arc;
+
+use lookahead::engine::lookahead::Lookahead;
+use lookahead::engine::{Decoder, GenParams};
+use lookahead::ngram::{NgramCacheRegistry, PoolHandle, PoolSpec, SharedNgramCache};
+use lookahead::runtime::load_model;
+use lookahead::server::{Policy, Request, ServerConfig, ServerHandle, WorkerConfig};
+use lookahead::tokenizer::ByteTokenizer;
+
+/// Skip (returning true) when the AOT artifacts are not built.
+fn no_artifacts() -> bool {
+    lookahead::bench::skip_without_artifacts(module_path!())
+}
+
+#[test]
+fn concurrent_insert_lookup_caps_and_counters() {
+    let spec = PoolSpec::new(4, 6, 512);
+    let cache = Arc::new(SharedNgramCache::new(spec, 8));
+    let threads = 8;
+    let ops = 5_000u32;
+    let mut joins = Vec::new();
+    for t in 0..threads as u32 {
+        let cache = cache.clone();
+        joins.push(std::thread::spawn(move || {
+            let mut handle = PoolHandle::shared(cache);
+            let mut local_lookups = 0usize;
+            for i in 0..ops {
+                let k = (i * 7 + t * 131) % 251;
+                handle.insert(&[k, i % 23, (i + t) % 19, i % 11]);
+                if i % 3 == 0 {
+                    let got = handle.lookup(i % 251, 4);
+                    assert!(got.len() <= 4, "lookup exceeded max");
+                    for s in got {
+                        assert_eq!(s.len(), 3, "suffix length must be n-1");
+                    }
+                    local_lookups += 1;
+                }
+            }
+            assert_eq!(handle.hits + handle.misses, local_lookups);
+        }));
+    }
+    for j in joins {
+        j.join().unwrap(); // no deadlock: all threads drain
+    }
+    let st = cache.stats();
+    assert_eq!(st.inserts, (threads as u64) * ops as u64);
+    assert!(cache.len() <= 512, "global cap violated: {}", cache.len());
+    assert_eq!(st.entries, cache.len());
+    // heavy over-insertion must have evicted
+    assert!(st.evictions > 0);
+}
+
+#[test]
+fn registry_is_race_free_across_threads() {
+    let reg = Arc::new(NgramCacheRegistry::new());
+    let spec = PoolSpec::new(3, 4, 64);
+    let mut joins = Vec::new();
+    for _ in 0..8 {
+        let reg = reg.clone();
+        joins.push(std::thread::spawn(move || reg.get_or_create("tiny", spec)));
+    }
+    let caches: Vec<Arc<SharedNgramCache>> =
+        joins.into_iter().map(|j| j.join().unwrap()).collect();
+    for c in &caches[1..] {
+        assert!(Arc::ptr_eq(&caches[0], c), "racing workers must get one cache");
+    }
+}
+
+#[test]
+fn cross_thread_warmth_via_handles() {
+    let cache = Arc::new(SharedNgramCache::with_defaults(PoolSpec::new(3, 4, 256)));
+    let c = cache.clone();
+    std::thread::spawn(move || {
+        let mut h = PoolHandle::shared(c);
+        h.seed_from(&[1, 2, 3, 4, 5]);
+    })
+    .join()
+    .unwrap();
+    let mut h = PoolHandle::shared(cache);
+    assert!(h.warm_start(), "second request must see first request's n-grams");
+    assert_eq!(h.lookup(1, 4), vec![vec![2, 3]]);
+}
+
+#[test]
+fn warm_cache_raises_accept_length_on_repeated_prompt() {
+    if no_artifacts() {
+        return;
+    }
+    let (_, rt) = load_model("artifacts", "tiny").unwrap();
+    let tok = ByteTokenizer::new();
+    let prompt = tok.encode_with_bos(
+        "def add_ab(a, b):\n    result = a + b\n    return result\n\ndef add_xy(x, y):\n    result = x");
+    let params = GenParams { max_new_tokens: 48, ..Default::default() };
+    let mut e = Lookahead::with_wng(5, 3, 5);
+
+    // cold: per-request private pool (the paper's setting)
+    let cold = e.generate(&rt, &prompt, &params).unwrap();
+
+    // warm: same repeated prompt through one shared cache
+    let cache = Arc::new(SharedNgramCache::with_defaults(e.pool_spec().unwrap()));
+    let mut h1 = PoolHandle::shared(cache.clone());
+    let first = e.generate_with_pool(&rt, &prompt, &params, &mut h1).unwrap();
+    assert!(!first.stats.pool_warm_start, "cache must start cold");
+    let mut h2 = PoolHandle::shared(cache.clone());
+    let warm = e.generate_with_pool(&rt, &prompt, &params, &mut h2).unwrap();
+
+    assert!(warm.stats.pool_warm_start, "repeat request must start warm");
+    assert!(warm.stats.pool_shared);
+    assert_eq!(warm.tokens, cold.tokens, "sharing changed greedy output bytes");
+    // A warm cache changes which G candidates each step verifies, so the
+    // step trajectory may diverge from the cold run; allow a small slack
+    // rather than demanding per-prompt monotonicity (the shared_cache
+    // bench measures the mean improvement across a suite).
+    assert!(
+        warm.stats.compression() >= cold.stats.compression() - 0.25,
+        "warm accept length {:.3} collapsed vs cold {:.3}",
+        warm.stats.compression(),
+        cold.stats.compression()
+    );
+    assert!(warm.stats.pool_hits > 0, "warm run never hit the pool");
+    assert!(cache.stats().hits > 0, "warm run never hit the shared cache");
+}
+
+fn server_cfg(share: bool) -> ServerConfig {
+    ServerConfig {
+        workers: 1,
+        policy: Policy::Fifo,
+        queue_depth: 64,
+        share_ngrams: share,
+        worker: WorkerConfig {
+            artifacts_dir: "artifacts".into(),
+            model: "tiny".into(),
+            wng: (5, 3, 5),
+            ..WorkerConfig::default()
+        },
+    }
+}
+
+fn req(prompt: &str) -> Request {
+    Request { prompt: prompt.into(), max_tokens: 24, ..Default::default() }
+}
+
+#[test]
+fn share_toggle_through_scheduler_and_worker() {
+    if no_artifacts() {
+        return;
+    }
+    let prompt = "def cap_xy(x, y):\n    result = x";
+
+    // sharing on: the second identical request starts warm
+    let h = ServerHandle::start(server_cfg(true)).unwrap();
+    let r1 = h.submit(req(prompt)).unwrap().recv().unwrap();
+    let r2 = h.submit(req(prompt)).unwrap().recv().unwrap();
+    assert!(r1.error.is_none() && r2.error.is_none(), "{:?} {:?}", r1.error, r2.error);
+    assert!(r1.pool_shared && r2.pool_shared);
+    assert!(!r1.pool_warm, "first request must be cold");
+    assert!(r2.pool_warm, "second request must reuse the shared cache");
+    assert_eq!(r1.text, r2.text, "sharing changed output");
+    let warm = h.metrics.lock().unwrap().counter("ngram_warm_requests");
+    assert_eq!(warm, 1);
+    assert!(h.report().contains("ngram_cache tiny:lookahead:n3"));
+
+    // per-request opt-out under a sharing server
+    let mut opt_out = req(prompt);
+    opt_out.share_ngrams = Some(false);
+    let r3 = h.submit(opt_out).unwrap().recv().unwrap();
+    assert!(r3.error.is_none(), "{:?}", r3.error);
+    assert!(!r3.pool_shared && !r3.pool_warm);
+    assert_eq!(r3.text, r1.text);
+
+    // sampled requests default to private pools under a sharing server
+    // (seeded reproducibility; see Worker::bind_pool_for)
+    let mut sampled = req(prompt);
+    sampled.temperature = 0.8;
+    sampled.seed = 7;
+    let r4 = h.submit(sampled).unwrap().recv().unwrap();
+    assert!(r4.error.is_none(), "{:?}", r4.error);
+    assert!(!r4.pool_shared, "sampled request must not share by default");
+    h.shutdown();
+
+    // sharing off: repeat requests stay cold
+    let h = ServerHandle::start(server_cfg(false)).unwrap();
+    assert!(h.ngram_caches.is_none());
+    let r1 = h.submit(req(prompt)).unwrap().recv().unwrap();
+    let r2 = h.submit(req(prompt)).unwrap().recv().unwrap();
+    assert!(r1.error.is_none() && r2.error.is_none());
+    assert!(!r1.pool_shared && !r2.pool_shared);
+    assert!(!r2.pool_warm, "sharing disabled but second request was warm");
+    h.shutdown();
+}

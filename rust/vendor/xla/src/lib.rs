@@ -1,0 +1,195 @@
+//! Offline stub of the `xla` PJRT bindings.
+//!
+//! The serving coordinator (`rust/src/runtime/`) talks to PJRT through this
+//! crate's API. The real build links the patched xla-rs bindings (native
+//! PJRT CPU plugin + `untuple_result` patch); this stub reproduces the exact
+//! API surface the coordinator uses so the whole workspace compiles, lints,
+//! and unit-tests on machines without the PJRT toolchain. Every runtime
+//! entry point returns [`Error`] — integration tests and benches that need
+//! real artifacts gate on `artifacts/manifest.json` and skip cleanly.
+//!
+//! Keep this file in sync with the call sites in `rust/src/runtime/model.rs`
+//! and `rust/src/runtime/client.rs`; it intentionally contains nothing more.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring xla-rs: a display-able wrapper the coordinator maps
+/// into `anyhow` contexts.
+#[derive(Debug, Clone)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: PJRT runtime unavailable (stub `xla` crate; build against \
+         the real xla-rs bindings to execute models)"
+    )))
+}
+
+/// Element types the coordinator passes for raw-byte host buffers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    U8,
+    S32,
+    S64,
+    F32,
+    F64,
+}
+
+/// Host types accepted by `buffer_from_host_buffer` / `Literal::to_vec`.
+pub trait NativeType: Copy {}
+
+impl NativeType for u8 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u32 {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+
+/// A PJRT device handle (never materialized by the stub; present so
+/// `Option<&PjRtDevice>` arguments type-check).
+#[derive(Debug)]
+pub struct PjRtDevice;
+
+/// A PJRT client. Not `Send` in the real bindings — the coordinator keeps
+/// one per worker thread; the stub mirrors that by holding a `Rc`-like
+/// non-Send marker.
+#[derive(Clone)]
+pub struct PjRtClient {
+    _not_send: std::marker::PhantomData<std::rc::Rc<()>>,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_buffer")
+    }
+
+    pub fn buffer_from_host_raw_bytes(
+        &self,
+        _ty: ElementType,
+        _bytes: &[u8],
+        _dims: &[usize],
+        _device: Option<&PjRtDevice>,
+    ) -> Result<PjRtBuffer> {
+        unavailable("PjRtClient::buffer_from_host_raw_bytes")
+    }
+}
+
+/// A device-resident buffer.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// Host-side literal produced by `to_literal_sync`.
+pub struct Literal {
+    _private: (),
+}
+
+impl Literal {
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+}
+
+/// Bulk weight loading from `.npz` archives (trait form mirrors xla-rs).
+pub trait FromRawBytes: Sized {
+    fn read_npz_by_name(
+        path: impl AsRef<Path>,
+        client: &PjRtClient,
+        names: &[&str],
+    ) -> Result<Vec<Self>>;
+}
+
+impl FromRawBytes for PjRtBuffer {
+    fn read_npz_by_name(
+        path: impl AsRef<Path>,
+        _client: &PjRtClient,
+        _names: &[&str],
+    ) -> Result<Vec<PjRtBuffer>> {
+        unavailable(&format!(
+            "PjRtBuffer::read_npz_by_name({:?})",
+            path.as_ref()
+        ))
+    }
+}
+
+/// A compiled-and-loaded executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with borrowed buffer arguments; outer Vec is per-device.
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute_b")
+    }
+}
+
+/// Parsed HLO module text.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        unavailable(&format!("HloModuleProto::from_text_file({:?})", path.as_ref()))
+    }
+}
+
+/// An XLA computation wrapping a parsed HLO module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let err = PjRtClient::cpu().err().unwrap();
+        assert!(err.to_string().contains("PJRT runtime unavailable"));
+    }
+
+    #[test]
+    fn error_is_std_error() {
+        fn takes_err(_e: &dyn std::error::Error) {}
+        takes_err(&Error("x".into()));
+    }
+}
