@@ -1,10 +1,12 @@
 //! Multi-turn chat serving (the paper's MT-Bench analogue) through the full
-//! serving front: scheduler, worker pool, per-request latency percentiles.
+//! serving front: scheduler, time-sliced worker pool, per-request latency
+//! percentiles, and a live streaming turn at the end.
 //!
 //!   cargo run --release --example chat_serving
 
 use lookahead::metrics::Histogram;
-use lookahead::server::{Policy, Request, ServerConfig, ServerHandle, WorkerConfig};
+use lookahead::server::{Policy, Reply, Request, ServerConfig, ServerHandle,
+                        WorkerConfig};
 use lookahead::workload::Workloads;
 
 fn main() -> anyhow::Result<()> {
@@ -16,6 +18,7 @@ fn main() -> anyhow::Result<()> {
         policy: Policy::ShortestFirst,
         queue_depth: 64,
         share_ngrams: true, // multi-turn chat re-serves templates: warm pools
+        ngram_ttl_ms: Some(600_000), // decay templates idle for 10 minutes
         worker: WorkerConfig {
             artifacts_dir: "artifacts".into(),
             model: "tiny".into(),
@@ -42,14 +45,16 @@ fn main() -> anyhow::Result<()> {
 
     let mut lat = Histogram::new();
     let mut queue = Histogram::new();
+    let mut ttft = Histogram::new();
     let mut s_hist = Histogram::new();
     let mut total_tokens = 0usize;
     let mut warm = 0usize;
     for rx in rxs {
-        let r = rx.recv()?;
+        let r = rx.wait()?;
         assert!(r.error.is_none(), "{:?}", r.error);
         lat.record(r.wall_ms + r.queue_ms);
         queue.record(r.queue_ms);
+        ttft.record(r.ttft_ms);
         s_hist.record(r.compression);
         total_tokens += r.tokens;
         warm += r.pool_warm as usize;
@@ -60,10 +65,31 @@ fn main() -> anyhow::Result<()> {
     println!("  throughput      : {:.1} tok/s aggregate", total_tokens as f64 / wall);
     println!("  e2e latency     : {}", lat.summary());
     println!("  queue wait      : {}", queue.summary());
+    println!("  time-to-first   : {}", ttft.summary());
     println!("  step compression: mean {:.2} (chat is the paper's hardest suite)",
              s_hist.mean());
     println!("  warm-pool starts: {}/{} (cross-request shared n-gram cache)",
              warm, prompts.len());
+
+    // one streaming turn: chunks print as each lookahead step commits
+    println!("\nstreaming turn:");
+    let rs = h.submit(Request {
+        prompt: prompts[0].clone(),
+        max_tokens: 48,
+        stream: true,
+        ..Default::default()
+    })?;
+    loop {
+        match rs.recv()? {
+            Reply::Chunk(c) => print!("{}", c.delta),
+            Reply::Done(r) => {
+                println!("\n  [finish={} ttft={:.1}ms wall={:.1}ms tokens={}]",
+                         r.finish, r.ttft_ms, r.wall_ms, r.tokens);
+                break;
+            }
+        }
+    }
+
     println!("\nserver metrics:\n{}", h.report());
     h.shutdown();
     Ok(())

@@ -1,12 +1,14 @@
 //! Quickstart: load the trained model from `artifacts/`, generate with
-//! Lookahead Decoding, and print the step-compression statistics.
+//! Lookahead Decoding (one-shot AND step-by-step via `DecodeSession`), and
+//! print the step-compression statistics.
 //!
 //!   make artifacts && cargo run --release --example quickstart
 
 use lookahead::engine::lookahead::Lookahead;
-use lookahead::engine::{Decoder, GenParams};
+use lookahead::engine::{Decoder, GenParams, StepOutcome};
+use lookahead::ngram::PoolHandle;
 use lookahead::runtime::load_model;
-use lookahead::tokenizer::ByteTokenizer;
+use lookahead::tokenizer::{ByteTokenizer, Utf8StreamDecoder};
 
 fn main() -> anyhow::Result<()> {
     // 1. Load the artifact manifest + model weights onto the PJRT CPU device.
@@ -33,5 +35,30 @@ fn main() -> anyhow::Result<()> {
     println!("throughput        : {:.1} tok/s", out.stats.tokens_per_sec());
     println!("n-gram pool hits  : {} / {}", out.stats.pool_hits,
              out.stats.pool_hits + out.stats.pool_misses);
+
+    // 4. The same generation, resumable: a DecodeSession commits a
+    //    variable-length run of verified tokens per step — this is what the
+    //    serving layer streams, time-slices, and cancels. Concatenated
+    //    deltas are byte-identical to the one-shot output above.
+    println!("\n--- per-step commits (DecodeSession) ---");
+    let pool = PoolHandle::for_spec(engine.pool_spec());
+    let mut sess = engine.begin(&rt, &ids, &params, pool)?;
+    let mut dec = Utf8StreamDecoder::new();
+    let mut step_no = 0usize;
+    loop {
+        match sess.step()? {
+            StepOutcome::Committed { tokens } => {
+                step_no += 1;
+                println!("step {:>3}: +{} token(s) {:?}",
+                         step_no, tokens.len(), dec.push(&tok.bytes(&tokens)));
+            }
+            StepOutcome::Finished { reason } => {
+                println!("finished: {}", reason.as_str());
+                break;
+            }
+        }
+    }
+    let (session_out, _pool) = sess.into_output();
+    assert_eq!(session_out.tokens, out.tokens, "session must match one-shot");
     Ok(())
 }

@@ -23,6 +23,7 @@ fn run_method(method: &str, wng: (usize, usize, usize), n_req: usize,
         policy: Policy::Fifo,
         queue_depth: 1024,
         share_ngrams: true,
+        ngram_ttl_ms: None,
         worker: WorkerConfig {
             artifacts_dir: "artifacts".into(),
             model: "tiny".into(),
@@ -46,7 +47,7 @@ fn run_method(method: &str, wng: (usize, usize, usize), n_req: usize,
     let mut s_hist = Histogram::new();
     let mut tokens = 0usize;
     for rx in rxs {
-        let r = rx.recv()?;
+        let r = rx.wait()?;
         anyhow::ensure!(r.error.is_none(), "{:?}", r.error);
         lat.record(r.wall_ms);
         s_hist.record(r.compression);

@@ -79,6 +79,7 @@ fn main() -> anyhow::Result<()> {
             policy,
             queue_depth: 256,
             share_ngrams: false, // isolate scheduler effects from cache warmth
+            ngram_ttl_ms: None,
             worker: WorkerConfig {
                 artifacts_dir: "artifacts".into(),
                 model: "tiny".into(),
@@ -93,7 +94,7 @@ fn main() -> anyhow::Result<()> {
             max_tokens: 2,
             ..Default::default()
         })?;
-        warm.recv()?;
+        warm.wait()?;
         // alternate long prompts (class-code, long generations) with short
         // ones (math, short generations) — the head-of-line blocking case.
         // SJF keys on prompt length, so the prompts themselves must differ.
@@ -113,7 +114,7 @@ fn main() -> anyhow::Result<()> {
         }
         let mut q = lookahead::metrics::Histogram::new();
         for rx in rxs {
-            let r = rx.recv()?;
+            let r = rx.wait()?;
             anyhow::ensure!(r.error.is_none(), "{:?}", r.error);
             q.record(r.queue_ms);
         }

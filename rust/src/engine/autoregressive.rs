@@ -4,10 +4,12 @@
 
 use anyhow::Result;
 
-use crate::engine::{capacity_left, finish, vocab_live, Decoder, GenOutput, GenParams};
-use crate::metrics::{DecodeStats, Timer};
+use crate::engine::session::{EngineStep, RawStep, Session, SessionCore};
+use crate::engine::{capacity_left, vocab_live, Decoder, DecodeSession, FinishReason,
+                    GenParams};
+use crate::metrics::Timer;
 use crate::ngram::PoolHandle;
-use crate::runtime::ModelRuntime;
+use crate::runtime::{Cache, ModelRuntime};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Default, Clone)]
@@ -19,41 +21,56 @@ impl AutoRegressive {
     }
 }
 
+struct ArState<'rt> {
+    rt: &'rt ModelRuntime,
+    cache: Option<Cache>,
+    cur: u32,
+    rng: Rng,
+    vocab: usize,
+    pool: PoolHandle,
+}
+
+impl EngineStep for ArState<'_> {
+    fn raw_step(&mut self, core: &mut SessionCore) -> Result<RawStep> {
+        let cache_len = self.cache.as_ref().unwrap().len;
+        if !capacity_left(self.rt, cache_len, 1) {
+            return Ok(RawStep::Stop(FinishReason::CacheFull));
+        }
+        let step = self.rt.decode("decode_lin_1", self.cache.as_ref().unwrap(),
+                                  &[self.cur])?;
+        let next = if core.params.sampling.is_greedy() {
+            step.logits.argmax(0, self.vocab)
+        } else {
+            core.params.sampling.sample(&step.logits.row(0)[..self.vocab],
+                                        &mut self.rng)
+        };
+        let cache = self.cache.take().unwrap();
+        self.cache = Some(self.rt.commit(cache, &step.new_kv, 1, &[0], 1)?);
+        self.cur = next;
+        Ok(RawStep::Tokens(vec![next]))
+    }
+
+    fn pool_mut(&mut self) -> &mut PoolHandle {
+        &mut self.pool
+    }
+}
+
 impl Decoder for AutoRegressive {
     fn name(&self) -> String {
         "autoregressive".into()
     }
 
-    fn generate_with_pool(&mut self, rt: &ModelRuntime, prompt: &[u32],
-                          params: &GenParams, _pool: &mut PoolHandle)
-                          -> Result<GenOutput> {
-        let timer = Timer::start();
-        let mut stats = DecodeStats { prompt_tokens: prompt.len(), ..Default::default() };
-        let mut rng = Rng::new(params.seed);
+    fn begin<'rt>(&self, rt: &'rt ModelRuntime, prompt: &[u32], params: &GenParams,
+                  pool: PoolHandle) -> Result<Box<dyn DecodeSession + 'rt>> {
+        let mut core = SessionCore::new(prompt.len(), params.clone());
+        let rng = Rng::new(params.seed);
         let vocab = vocab_live(rt);
 
         let pf = Timer::start();
-        let (_, mut cache) = rt.prefill(prompt)?;
-        stats.prefill_wall = pf.elapsed();
+        let (_, cache) = rt.prefill(prompt)?;
+        core.stats.prefill_wall = pf.elapsed();
 
-        let mut cur = *prompt.last().unwrap();
-        let mut out = Vec::with_capacity(params.max_new_tokens);
-
-        while out.len() < params.max_new_tokens && capacity_left(rt, cache.len, 1) {
-            let step = rt.decode("decode_lin_1", &cache, &[cur])?;
-            let next = if params.sampling.is_greedy() {
-                step.logits.argmax(0, vocab)
-            } else {
-                params.sampling.sample(&step.logits.row(0)[..vocab], &mut rng)
-            };
-            cache = rt.commit(cache, &step.new_kv, 1, &[0], 1)?;
-            stats.record_accept(1);
-            out.push(next);
-            cur = next;
-            if params.stop_at_eos && next == crate::tokenizer::EOS_ID {
-                break;
-            }
-        }
-        Ok(finish(out, params, stats, timer.elapsed()))
+        let cur = *prompt.last().unwrap();
+        Ok(Session::boxed(core, ArState { rt, cache: Some(cache), cur, rng, vocab, pool }))
     }
 }

@@ -5,11 +5,12 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::engine::{capacity_left, finish, vocab_live, Decoder, GenOutput, GenParams};
-use crate::metrics::{DecodeStats, Timer};
+use crate::engine::session::{EngineStep, RawStep, Session, SessionCore};
+use crate::engine::{capacity_left, vocab_live, Decoder, DecodeSession, FinishReason,
+                    GenParams};
+use crate::metrics::Timer;
 use crate::ngram::PoolHandle;
-use crate::runtime::ModelRuntime;
-use crate::tokenizer::EOS_ID;
+use crate::runtime::{Cache, ModelRuntime};
 use crate::util::rng::Rng;
 
 pub struct Jacobi {
@@ -23,81 +24,110 @@ impl Jacobi {
     }
 }
 
+struct JacobiState<'rt> {
+    rt: &'rt ModelRuntime,
+    k: usize,
+    exe: String,
+    rng: Rng,
+    /// guesses y_1..y_{k-1} for the next positions.
+    guesses: Vec<u32>,
+    tokens: Vec<u32>,
+    cur: u32,
+    cache: Option<Cache>,
+    vocab: usize,
+    pool: PoolHandle,
+}
+
+impl EngineStep for JacobiState<'_> {
+    fn raw_step(&mut self, _core: &mut SessionCore) -> Result<RawStep> {
+        let k = self.k;
+        let cache_len = self.cache.as_ref().unwrap().len;
+        if !capacity_left(self.rt, cache_len, k) {
+            return Ok(RawStep::Stop(FinishReason::CacheFull));
+        }
+        self.tokens[0] = self.cur;
+        self.tokens[1..].copy_from_slice(&self.guesses);
+        let step = self.rt.decode(&self.exe, self.cache.as_ref().unwrap(),
+                                  &self.tokens)?;
+
+        // Jacobi update: output i is the new value for position i+1.
+        let new_vals: Vec<u32> =
+            (0..k).map(|i| step.logits.argmax(i, self.vocab)).collect();
+
+        // Fixed-point acceptance: y_{i+1} is final iff the input guess at
+        // position i+1 equals the model output given positions <= i
+        // (all of which are final).
+        let mut accepted: Vec<u32> = vec![new_vals[0]];
+        for i in 0..k - 1 {
+            if self.guesses[i] == new_vals[i] {
+                // the guess was already the model's output -> position
+                // i+2's output new_vals[i+1] is also computed from a
+                // fully-final prefix
+                accepted.push(new_vals[i + 1]);
+            } else {
+                break;
+            }
+        }
+        let a = accepted.len().min(self.rt.commit_slots);
+        accepted.truncate(a);
+
+        // Commit rows: cur (idx 0) + the matched guesses (idx 1..a-1).
+        let src: Vec<i32> = (0..a as i32).collect();
+        let cache = self.cache.take().unwrap();
+        self.cache = Some(self.rt.commit(cache, &step.new_kv, k, &src, a)?);
+
+        self.cur = *accepted.last().unwrap();
+
+        // Next window: shift the trajectory by a, refill tail from the
+        // model's own new values (better than random re-init).
+        let mut next: Vec<u32> = Vec::with_capacity(k - 1);
+        next.extend(new_vals.iter().copied().skip(a).take(k - 1));
+        while next.len() < k - 1 {
+            next.push(self.rng.below(256) as u32);
+        }
+        self.guesses = next;
+
+        Ok(RawStep::Tokens(accepted))
+    }
+
+    fn pool_mut(&mut self) -> &mut PoolHandle {
+        &mut self.pool
+    }
+}
+
 impl Decoder for Jacobi {
     fn name(&self) -> String {
         format!("jacobi[k{}]", self.window)
     }
 
-    fn generate_with_pool(&mut self, rt: &ModelRuntime, prompt: &[u32],
-                          params: &GenParams, _pool: &mut PoolHandle)
-                          -> Result<GenOutput> {
-        let timer = Timer::start();
+    fn begin<'rt>(&self, rt: &'rt ModelRuntime, prompt: &[u32], params: &GenParams,
+                  pool: PoolHandle) -> Result<Box<dyn DecodeSession + 'rt>> {
+        let mut core = SessionCore::new(prompt.len(), params.clone());
         let k = self.window;
         rt.mm.decode_lin_exe(k).map_err(|e| anyhow!("{e}"))?;
         let exe = format!("decode_lin_{k}");
         let vocab = vocab_live(rt);
         let mut rng = Rng::new(params.seed ^ 0x1AC0B1);
-        let mut stats = DecodeStats { prompt_tokens: prompt.len(), ..Default::default() };
 
         let pf = Timer::start();
-        let (_, mut cache) = rt.prefill(prompt)?;
-        stats.prefill_wall = pf.elapsed();
+        let (_, cache) = rt.prefill(prompt)?;
+        core.stats.prefill_wall = pf.elapsed();
 
-        let mut cur = *prompt.last().unwrap();
-        // guesses y_1..y_{k-1} for the next positions (random init)
-        let mut guesses: Vec<u32> =
-            (0..k - 1).map(|_| rng.below(256) as u32).collect();
-        let mut out: Vec<u32> = Vec::new();
-        let mut tokens = vec![0u32; k];
+        let cur = *prompt.last().unwrap();
+        // random init, matching the historical generate() path
+        let guesses: Vec<u32> = (0..k - 1).map(|_| rng.below(256) as u32).collect();
 
-        while out.len() < params.max_new_tokens && capacity_left(rt, cache.len, k) {
-            tokens[0] = cur;
-            tokens[1..].copy_from_slice(&guesses);
-            let step = rt.decode(&exe, &cache, &tokens)?;
-
-            // Jacobi update: output i is the new value for position i+1.
-            let new_vals: Vec<u32> =
-                (0..k).map(|i| step.logits.argmax(i, vocab)).collect();
-
-            // Fixed-point acceptance: y_{i+1} is final iff the input guess at
-            // position i+1 equals the model output given positions <= i
-            // (all of which are final).
-            let mut accepted: Vec<u32> = vec![new_vals[0]];
-            for i in 0..k - 1 {
-                if guesses[i] == new_vals[i] {
-                    // the guess was already the model's output -> position
-                    // i+2's output new_vals[i+1] is also computed from a
-                    // fully-final prefix
-                    accepted.push(new_vals[i + 1]);
-                } else {
-                    break;
-                }
-            }
-            let a = accepted.len().min(rt.commit_slots);
-            accepted.truncate(a);
-
-            // Commit rows: cur (idx 0) + the matched guesses (idx 1..a-1).
-            let src: Vec<i32> = (0..a as i32).collect();
-            cache = rt.commit(cache, &step.new_kv, k, &src, a)?;
-            stats.record_accept(a);
-
-            let hit_eos = params.stop_at_eos && accepted.contains(&EOS_ID);
-            out.extend_from_slice(&accepted);
-            cur = *out.last().unwrap();
-
-            // Next window: shift the trajectory by a, refill tail from the
-            // model's own new values (better than random re-init).
-            let mut next: Vec<u32> = Vec::with_capacity(k - 1);
-            next.extend(new_vals.iter().copied().skip(a).take(k - 1));
-            while next.len() < k - 1 {
-                next.push(rng.below(256) as u32);
-            }
-            guesses = next;
-
-            if hit_eos {
-                break;
-            }
-        }
-        Ok(finish(out, params, stats, timer.elapsed()))
+        Ok(Session::boxed(core, JacobiState {
+            rt,
+            k,
+            exe,
+            rng,
+            guesses,
+            tokens: vec![0u32; k],
+            cur,
+            cache: Some(cache),
+            vocab,
+            pool,
+        }))
     }
 }

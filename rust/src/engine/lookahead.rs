@@ -11,16 +11,20 @@
 //! The engine prefers a *specialized* executable (lookahead mask hardcoded at
 //! lowering time — the Pallas/FlashAttention path) and falls back to the
 //! *generic* mask-as-input executable for arbitrary (W,N,G) sweeps.
+//!
+//! Each step commits a variable-length run of verified tokens, which the
+//! [`crate::engine::DecodeSession`] API exposes directly: `begin()` sets up
+//! the window + pool, every `step()` is one fused forward.
 
 use anyhow::{anyhow, Result};
 
-use crate::engine::{capacity_left, finish, vocab_live, verify, Decoder, GenOutput,
-                    GenParams};
+use crate::engine::session::{EngineStep, RawStep, Session, SessionCore};
+use crate::engine::{capacity_left, verify, vocab_live, Decoder, DecodeSession,
+                    FinishReason, GenParams};
 use crate::layout::Wng;
-use crate::metrics::{DecodeStats, Timer};
+use crate::metrics::Timer;
 use crate::ngram::{PoolHandle, PoolSpec};
-use crate::runtime::{ModelRuntime, StepOut};
-use crate::tokenizer::EOS_ID;
+use crate::runtime::{Cache, ModelRuntime, StepOut};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
@@ -87,15 +91,131 @@ impl Lookahead {
         let mask = ModelRuntime::pad_mask(&self.cfg.wng.intra_mask(), t, t_pad);
         Ok(Exe::Generic { name: name.to_string(), t_pad, relpos, mask })
     }
+}
 
-    fn run_step(&self, rt: &ModelRuntime, exe: &Exe, cache: &crate::runtime::Cache,
-                tokens: &[u32]) -> Result<StepOut> {
-        match exe {
-            Exe::Specialized(name) => rt.decode(name, cache, tokens),
+struct LookaheadState<'rt> {
+    rt: &'rt ModelRuntime,
+    wng: Wng,
+    exe: Exe,
+    commit_t: usize,
+    rng: Rng,
+    /// 2D window: rows[r][c] = trajectory guess at relative position r+c.
+    rows: Vec<Vec<u32>>,
+    tokens: Vec<u32>,
+    cur: u32,
+    cache: Option<Cache>,
+    vocab: usize,
+    pool: PoolHandle,
+}
+
+impl LookaheadState<'_> {
+    fn run_step(&self, cache: &Cache, tokens: &[u32]) -> Result<StepOut> {
+        match &self.exe {
+            Exe::Specialized(name) => self.rt.decode(name, cache, tokens),
             Exe::Generic { name, relpos, mask, .. } => {
-                rt.decode_generic(name, cache, tokens, relpos, mask)
+                self.rt.decode_generic(name, cache, tokens, relpos, mask)
             }
         }
+    }
+}
+
+impl EngineStep for LookaheadState<'_> {
+    fn raw_step(&mut self, core: &mut SessionCore) -> Result<RawStep> {
+        let Wng { w, n, g } = self.wng;
+        let cache_len = self.cache.as_ref().unwrap().len;
+        if !capacity_left(self.rt, cache_len, n) {
+            return Ok(RawStep::Stop(FinishReason::CacheFull));
+        }
+        self.rows[0][0] = self.cur;
+
+        // -- assemble the step input ------------------------------------
+        for r in 0..n - 1 {
+            self.tokens[r * w..(r + 1) * w].copy_from_slice(&self.rows[r]);
+        }
+        let cands: Vec<Vec<u32>> = self.pool.lookup(self.cur, g);
+        for i in 0..g {
+            for j in 0..n - 1 {
+                self.tokens[self.wng.verify_index(i, j)] = match cands.get(i) {
+                    Some(c) => c[j],
+                    None => self.cur, // padding candidate, ignored by verify
+                };
+            }
+        }
+
+        // -- one fused forward ------------------------------------------
+        let step = self.run_step(self.cache.as_ref().unwrap(), &self.tokens)?;
+
+        // -- verification branch -----------------------------------------
+        let wng = self.wng;
+        let vocab = self.vocab;
+        let dist = |c: usize, depth: usize| -> Vec<f32> {
+            let row = if depth == 0 {
+                step.logits.row(0)
+            } else {
+                step.logits.row(wng.verify_index(c, depth - 1))
+            };
+            core.params.sampling.dist(&row[..vocab])
+        };
+        let outcome = if core.params.sampling.is_greedy() {
+            verify::greedy_verify(&cands, n - 1, dist)
+        } else {
+            verify::sample_verify(&cands, n - 1, dist, &mut self.rng)
+        };
+
+        let a = outcome.tokens.len();
+        debug_assert!((1..=n).contains(&a));
+
+        // -- commit: KVs of [cur, matched tokens...] ---------------------
+        let mut src: Vec<i32> = Vec::with_capacity(a);
+        src.push(0);
+        if let Some(wi) = outcome.winner {
+            for d in 0..outcome.matched_depths.min(a - 1) {
+                src.push(self.wng.verify_index(wi, d) as i32);
+            }
+        }
+        debug_assert_eq!(src.len(), a);
+        let cache = self.cache.take().unwrap();
+        self.cache = Some(self.rt.commit(cache, &step.new_kv, self.commit_t, &src, a)?);
+
+        // -- harvest W n-grams + the new trajectory row ------------------
+        let mut new_row = Vec::with_capacity(w);
+        let mut gram = Vec::with_capacity(n);
+        for c in 0..w {
+            // pool generation is always greedy (Algorithm 4 requires
+            // one-hot proposal distributions)
+            let tok = step.logits.argmax(self.wng.la_index(n - 2, c), self.vocab);
+            new_row.push(tok);
+            gram.clear();
+            for r in 0..n - 1 {
+                gram.push(self.rows[r][c]);
+            }
+            gram.push(tok);
+            self.pool.insert(&gram);
+        }
+
+        // -- window update: rows move up one step in time, columns shift
+        //    left by (a-1) positions; vacated tail refilled randomly ------
+        let shift = a - 1;
+        for r in 0..n - 2 {
+            self.rows[r] = self.rows[r + 1].clone();
+        }
+        self.rows[n - 2] = new_row;
+        if shift > 0 {
+            for row in self.rows.iter_mut() {
+                row.rotate_left(shift.min(w));
+                let start = w - shift.min(w);
+                for slot in row[start..].iter_mut() {
+                    *slot = self.rng.below(256) as u32;
+                }
+            }
+        }
+
+        self.cur = *outcome.tokens.last().unwrap();
+        Ok(RawStep::Tokens(outcome.tokens))
+    }
+
+    fn pool_mut(&mut self) -> &mut PoolHandle {
+        &mut self.pool
     }
 }
 
@@ -112,11 +232,10 @@ impl Decoder for Lookahead {
         )
     }
 
-    fn generate_with_pool(&mut self, rt: &ModelRuntime, prompt: &[u32],
-                          params: &GenParams, pool: &mut PoolHandle)
-                          -> Result<GenOutput> {
-        let timer = Timer::start();
-        let Wng { w, n, g } = self.cfg.wng;
+    fn begin<'rt>(&self, rt: &'rt ModelRuntime, prompt: &[u32], params: &GenParams,
+                  mut pool: PoolHandle) -> Result<Box<dyn DecodeSession + 'rt>> {
+        let mut core = SessionCore::new(prompt.len(), params.clone());
+        let Wng { w, n, .. } = self.cfg.wng;
         let t_in = self.cfg.wng.t_in();
 
         let vocab = vocab_live(rt);
@@ -129,7 +248,6 @@ impl Decoder for Lookahead {
         };
         let mut rng = Rng::new(params.seed ^ 0x1007AE4D);
 
-        let mut stats = DecodeStats { prompt_tokens: prompt.len(), ..Default::default() };
         // degrade to a private pool if the caller bound a handle with the
         // wrong n-gram length (or none at all)
         pool.ensure(self.pool_spec().unwrap());
@@ -138,113 +256,28 @@ impl Decoder for Lookahead {
         }
 
         let pf = Timer::start();
-        let (_, mut cache) = rt.prefill(prompt)?;
-        stats.prefill_wall = pf.elapsed();
+        let (_, cache) = rt.prefill(prompt)?;
+        core.stats.prefill_wall = pf.elapsed();
 
-        let mut cur = *prompt.last().unwrap();
-        let mut out: Vec<u32> = Vec::with_capacity(params.max_new_tokens);
+        let cur = *prompt.last().unwrap();
 
-        // 2D window: rows[r][c] = trajectory guess at relative position r+c.
         // Random initialization per Algorithm 2 line 4.
-        let mut rows: Vec<Vec<u32>> =
+        let rows: Vec<Vec<u32>> =
             (0..n - 1).map(|_| (0..w).map(|_| rng.below(256) as u32).collect()).collect();
 
-        let mut tokens = vec![0u32; t_in];
-
-        while out.len() < params.max_new_tokens && capacity_left(rt, cache.len, n) {
-            rows[0][0] = cur;
-
-            // -- assemble the step input ------------------------------------
-            for r in 0..n - 1 {
-                tokens[r * w..(r + 1) * w].copy_from_slice(&rows[r]);
-            }
-            let cands: Vec<Vec<u32>> = pool.lookup(cur, g);
-            for i in 0..g {
-                for j in 0..n - 1 {
-                    tokens[self.cfg.wng.verify_index(i, j)] = match cands.get(i) {
-                        Some(c) => c[j],
-                        None => cur, // padding candidate, ignored by verify
-                    };
-                }
-            }
-
-            // -- one fused forward ------------------------------------------
-            let step = self.run_step(rt, &exe, &cache, &tokens)?;
-
-            // -- verification branch -----------------------------------------
-            let dist = |c: usize, depth: usize| -> Vec<f32> {
-                let row = if depth == 0 {
-                    step.logits.row(0)
-                } else {
-                    step.logits.row(self.cfg.wng.verify_index(c, depth - 1))
-                };
-                params.sampling.dist(&row[..vocab])
-            };
-            let outcome = if params.sampling.is_greedy() {
-                verify::greedy_verify(&cands, n - 1, dist)
-            } else {
-                verify::sample_verify(&cands, n - 1, dist, &mut rng)
-            };
-
-            let a = outcome.tokens.len();
-            debug_assert!((1..=n).contains(&a));
-
-            // -- commit: KVs of [cur, matched tokens...] ---------------------
-            let mut src: Vec<i32> = Vec::with_capacity(a);
-            src.push(0);
-            if let Some(wi) = outcome.winner {
-                for d in 0..outcome.matched_depths.min(a - 1) {
-                    src.push(self.cfg.wng.verify_index(wi, d) as i32);
-                }
-            }
-            debug_assert_eq!(src.len(), a);
-            cache = rt.commit(cache, &step.new_kv, commit_t, &src, a)?;
-            stats.record_accept(a);
-
-            // -- harvest W n-grams + the new trajectory row ------------------
-            let mut new_row = Vec::with_capacity(w);
-            let mut gram = Vec::with_capacity(n);
-            for c in 0..w {
-                // pool generation is always greedy (Algorithm 4 requires
-                // one-hot proposal distributions)
-                let tok = step.logits.argmax(self.cfg.wng.la_index(n - 2, c), vocab);
-                new_row.push(tok);
-                gram.clear();
-                for r in 0..n - 1 {
-                    gram.push(rows[r][c]);
-                }
-                gram.push(tok);
-                pool.insert(&gram);
-            }
-
-            // -- window update: rows move up one step in time, columns shift
-            //    left by (a-1) positions; vacated tail refilled randomly ------
-            let shift = a - 1;
-            for r in 0..n - 2 {
-                rows[r] = rows[r + 1].clone();
-            }
-            rows[n - 2] = new_row;
-            if shift > 0 {
-                for row in rows.iter_mut() {
-                    row.rotate_left(shift.min(w));
-                    let start = w - shift.min(w);
-                    for slot in row[start..].iter_mut() {
-                        *slot = rng.below(256) as u32;
-                    }
-                }
-            }
-
-            // -- bookkeeping --------------------------------------------------
-            let hit_eos = params.stop_at_eos && outcome.tokens.contains(&EOS_ID);
-            out.extend_from_slice(&outcome.tokens);
-            cur = *out.last().unwrap();
-            if hit_eos {
-                break;
-            }
-        }
-
-        pool.fill_stats(&mut stats);
-        Ok(finish(out, params, stats, timer.elapsed()))
+        Ok(Session::boxed(core, LookaheadState {
+            rt,
+            wng: self.cfg.wng,
+            exe,
+            commit_t,
+            rng,
+            rows,
+            tokens: vec![0u32; t_in],
+            cur,
+            cache: Some(cache),
+            vocab,
+            pool,
+        }))
     }
 }
 

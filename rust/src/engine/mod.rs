@@ -8,12 +8,18 @@
 //! | `jacobi`          | Jacobi decoding (§2, "Limitations")          |
 //! | `spec_decode`     | draft-model speculative decoding (§2)        |
 //! | `prompt_lookup`   | prompt-lookup baseline (Tab. 3 row ②)        |
+//!
+//! Every engine exposes the resumable [`DecodeSession`] API: `begin()` opens
+//! a session, `step()` commits one variable-length run of verified tokens.
+//! The one-shot `generate()`/`generate_with_pool()` calls are thin loops
+//! over `step()` and stay byte-exact with the historical behavior.
 
 pub mod autoregressive;
 pub mod jacobi;
 pub mod lookahead;
 pub mod prompt_lookup;
 pub mod sampling;
+pub mod session;
 pub mod spec_decode;
 pub mod verify;
 
@@ -25,6 +31,7 @@ use crate::runtime::ModelRuntime;
 use crate::tokenizer::{ByteTokenizer, EOS_ID, VOCAB_SIZE};
 
 pub use sampling::SamplingParams;
+pub use session::{DecodeSession, FinishReason, StepOutcome};
 
 #[derive(Debug, Clone)]
 pub struct GenParams {
@@ -64,16 +71,39 @@ pub trait Decoder {
         None
     }
 
-    /// Generate a continuation of `prompt` (token ids, BOS included by the
-    /// caller), storing/retrieving speculation n-grams through `pool`. The
-    /// handle may wrap a cold private pool or a warm cross-request shared
-    /// cache — pool contents only affect speed (accept length), never
-    /// output bytes: greedy engines must stay byte-exact w.r.t.
-    /// autoregressive decoding (checked by
-    /// `rust/tests/output_equivalence.rs`).
+    /// Open a resumable decoding session for `prompt` (token ids, BOS
+    /// included by the caller). The session takes ownership of `pool` — a
+    /// cold private pool or a warm cross-request shared cache handle — and
+    /// returns it from [`DecodeSession::into_output`]. Pool contents only
+    /// affect speed (accept length), never output bytes: greedy engines
+    /// stay byte-exact w.r.t. autoregressive decoding (checked by
+    /// `rust/tests/output_equivalence.rs` and `rust/tests/streaming.rs`).
+    ///
+    /// Sessions borrow only the runtime (`'rt`), never the engine, so one
+    /// engine instance can have many concurrent sessions — the property the
+    /// worker's time-sliced interleave loop relies on.
+    fn begin<'rt>(&self, rt: &'rt ModelRuntime, prompt: &[u32], params: &GenParams,
+                  pool: PoolHandle) -> Result<Box<dyn DecodeSession + 'rt>>;
+
+    /// One-shot generation through `pool`: drives a session to completion.
+    /// Kept for benches/tests and simple callers; new serving code should
+    /// use [`Decoder::begin`] directly (see DESIGN.md "Deprecation path").
+    ///
+    /// On success the caller's `pool` handle is returned intact (with this
+    /// request's hit/miss accounting); if `begin`/`step` fail the handle
+    /// degrades to a detached one.
     fn generate_with_pool(&mut self, rt: &ModelRuntime, prompt: &[u32],
                           params: &GenParams, pool: &mut PoolHandle)
-                          -> Result<GenOutput>;
+                          -> Result<GenOutput> {
+        let owned = std::mem::replace(pool, PoolHandle::none());
+        let mut sess = self.begin(rt, prompt, params, owned)?;
+        while sess.finished().is_none() {
+            sess.step()?;
+        }
+        let (out, owned) = sess.into_output();
+        *pool = owned;
+        Ok(out)
+    }
 
     /// Generate with a cold per-request pool — the paper's single-request
     /// setting and the pre-sharing behavior of this crate.
@@ -84,7 +114,10 @@ pub trait Decoder {
     }
 }
 
-/// Shared post-processing: truncate at EOS, decode text, finalize stats.
+/// Shared post-processing: truncate at the budget and at EOS, decode text,
+/// finalize stats. Both truncation paths adjust `stats.generated_tokens` so
+/// the stats always agree with the returned token list (sessions apply the
+/// same contract incrementally in `session::SessionCore::commit_step`).
 pub(crate) fn finish(tokens: Vec<u32>, params: &GenParams, mut stats: DecodeStats,
                      wall: std::time::Duration) -> GenOutput {
     let mut tokens = tokens;
@@ -96,6 +129,8 @@ pub(crate) fn finish(tokens: Vec<u32>, params: &GenParams, mut stats: DecodeStat
     }
     if params.stop_at_eos {
         if let Some(pos) = tokens.iter().position(|&t| t == EOS_ID) {
+            let dropped = tokens.len() - pos;
+            stats.generated_tokens = stats.generated_tokens.saturating_sub(dropped);
             tokens.truncate(pos);
         }
     }
@@ -113,4 +148,61 @@ pub(crate) fn capacity_left(rt: &ModelRuntime, cache_len: usize, margin: usize) 
 /// Live vocab size (ids above VOCAB_SIZE are padding and never sampled).
 pub(crate) fn vocab_live(rt: &ModelRuntime) -> usize {
     (VOCAB_SIZE as usize).min(rt.vocab_padded)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats_for(steps: &[usize]) -> DecodeStats {
+        let mut s = DecodeStats::default();
+        for &n in steps {
+            s.record_accept(n);
+        }
+        s
+    }
+
+    #[test]
+    fn finish_overshoot_adjusts_generated_tokens() {
+        let p = GenParams { max_new_tokens: 3, ..Default::default() };
+        let out = finish(vec![1, 2, 3, 4, 5], &p, stats_for(&[2, 3]),
+                         std::time::Duration::ZERO);
+        assert_eq!(out.tokens, vec![1, 2, 3]);
+        assert_eq!(out.stats.generated_tokens, 3);
+    }
+
+    #[test]
+    fn finish_eos_truncation_adjusts_generated_tokens() {
+        // regression: the EOS path used to drop tokens without touching
+        // stats.generated_tokens while the overshoot path adjusted it
+        let p = GenParams { max_new_tokens: 16, ..Default::default() };
+        let out = finish(vec![1, 2, EOS_ID, 9], &p, stats_for(&[4]),
+                         std::time::Duration::ZERO);
+        assert_eq!(out.tokens, vec![1, 2]);
+        assert_eq!(out.stats.generated_tokens, out.tokens.len());
+    }
+
+    #[test]
+    fn finish_both_paths_agree_with_output_len() {
+        // EOS beyond the budget: the budget trim removes it first
+        let p = GenParams { max_new_tokens: 2, ..Default::default() };
+        let out = finish(vec![1, 2, EOS_ID], &p, stats_for(&[3]),
+                         std::time::Duration::ZERO);
+        assert_eq!(out.tokens, vec![1, 2]);
+        assert_eq!(out.stats.generated_tokens, 2);
+        // EOS inside the budget: both trims stack consistently
+        let out = finish(vec![EOS_ID, 7, 8, 9], &p, stats_for(&[4]),
+                         std::time::Duration::ZERO);
+        assert_eq!(out.tokens, Vec::<u32>::new());
+        assert_eq!(out.stats.generated_tokens, 0);
+    }
+
+    #[test]
+    fn finish_ignores_eos_when_disabled() {
+        let p = GenParams { max_new_tokens: 8, stop_at_eos: false, ..Default::default() };
+        let out = finish(vec![1, EOS_ID, 2], &p, stats_for(&[3]),
+                         std::time::Duration::ZERO);
+        assert_eq!(out.tokens, vec![1, EOS_ID, 2]);
+        assert_eq!(out.stats.generated_tokens, 3);
+    }
 }

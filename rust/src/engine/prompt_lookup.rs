@@ -10,11 +10,12 @@
 
 use anyhow::{bail, Result};
 
-use crate::engine::{capacity_left, finish, vocab_live, Decoder, GenOutput, GenParams};
-use crate::metrics::{DecodeStats, Timer};
+use crate::engine::session::{EngineStep, RawStep, Session, SessionCore};
+use crate::engine::{capacity_left, vocab_live, Decoder, DecodeSession, FinishReason,
+                    GenParams};
+use crate::metrics::Timer;
 use crate::ngram::{PoolHandle, PoolSpec};
-use crate::runtime::ModelRuntime;
-use crate::tokenizer::EOS_ID;
+use crate::runtime::{Cache, ModelRuntime};
 
 pub struct PromptLookup {
     /// total chain length (1 current + k-1 speculated); needs decode_lin_k.
@@ -50,6 +51,73 @@ pub fn lookup_continuation(history: &[u32], match_len: usize, want: usize) -> Ve
     Vec::new()
 }
 
+struct PromptLookupState<'rt> {
+    rt: &'rt ModelRuntime,
+    k: usize,
+    match_len: usize,
+    exe: String,
+    /// prompt + every accepted token (untrimmed — the speculation source).
+    history: Vec<u32>,
+    tokens: Vec<u32>,
+    cache: Option<Cache>,
+    vocab: usize,
+    pool: PoolHandle,
+}
+
+impl EngineStep for PromptLookupState<'_> {
+    fn raw_step(&mut self, core: &mut SessionCore) -> Result<RawStep> {
+        let k = self.k;
+        let cache_len = self.cache.as_ref().unwrap().len;
+        if !capacity_left(self.rt, cache_len, k) {
+            return Ok(RawStep::Stop(FinishReason::CacheFull));
+        }
+        let cur = *self.history.last().unwrap();
+        let mut spec = lookup_continuation(&self.history, self.match_len, k - 1);
+        if spec.is_empty() {
+            // local-history miss: fall back to the (possibly warm,
+            // cross-request) pool — the handle counts the hit/miss
+            spec = self.pool.lookup(cur, 1).into_iter().next().unwrap_or_default();
+        } else {
+            core.stats.pool_hits += 1;
+        }
+        // pad the chain with repeats of the last speculated/current token
+        while spec.len() < k - 1 {
+            spec.push(*spec.last().unwrap_or(&cur));
+        }
+
+        self.tokens[0] = cur;
+        self.tokens[1..].copy_from_slice(&spec);
+        let step = self.rt.decode(&self.exe, self.cache.as_ref().unwrap(),
+                                  &self.tokens)?;
+
+        let mut accepted: Vec<u32> = Vec::new();
+        for i in 0..k {
+            let target = step.logits.argmax(i, self.vocab);
+            accepted.push(target);
+            if i < k - 1 && spec[i] != target {
+                break;
+            }
+        }
+        let a = accepted.len().min(self.rt.commit_slots);
+        accepted.truncate(a);
+        let src: Vec<i32> = (0..a as i32).collect();
+        let cache = self.cache.take().unwrap();
+        self.cache = Some(self.rt.commit(cache, &step.new_kv, k, &src, a)?);
+
+        self.history.extend_from_slice(&accepted);
+        // feed the pool every n-gram window the accepted tokens created
+        let fed = self.history.len().saturating_sub(a + k - 1);
+        let window = self.history[fed..].to_vec();
+        self.pool.seed_from(&window);
+
+        Ok(RawStep::Tokens(accepted))
+    }
+
+    fn pool_mut(&mut self) -> &mut PoolHandle {
+        &mut self.pool
+    }
+}
+
 impl Decoder for PromptLookup {
     fn name(&self) -> String {
         format!("prompt_lookup[k{},m{}]", self.k, self.match_len)
@@ -60,20 +128,18 @@ impl Decoder for PromptLookup {
         Some(PoolSpec::new(self.k, 8, 16_384).with_kind("prompt_lookup"))
     }
 
-    fn generate_with_pool(&mut self, rt: &ModelRuntime, prompt: &[u32],
-                          params: &GenParams, pool: &mut PoolHandle)
-                          -> Result<GenOutput> {
+    fn begin<'rt>(&self, rt: &'rt ModelRuntime, prompt: &[u32], params: &GenParams,
+                  mut pool: PoolHandle) -> Result<Box<dyn DecodeSession + 'rt>> {
         if !params.sampling.is_greedy() {
             bail!("prompt_lookup baseline implements greedy verification only");
         }
-        let timer = Timer::start();
+        let mut core = SessionCore::new(prompt.len(), params.clone());
         let k = self.k;
         let exe = format!("decode_lin_{k}");
         if !rt.mm.executables.contains_key(&exe) {
             bail!("model lacks {exe}");
         }
         let vocab = vocab_live(rt);
-        let mut stats = DecodeStats { prompt_tokens: prompt.len(), ..Default::default() };
 
         // bind (or degrade to) a pool of the right n-gram length; under the
         // serving front this is the cross-request shared cache
@@ -81,58 +147,20 @@ impl Decoder for PromptLookup {
         pool.seed_from(prompt);
 
         let pf = Timer::start();
-        let (_, mut cache) = rt.prefill(prompt)?;
-        stats.prefill_wall = pf.elapsed();
+        let (_, cache) = rt.prefill(prompt)?;
+        core.stats.prefill_wall = pf.elapsed();
 
-        let mut history: Vec<u32> = prompt.to_vec();
-        let mut out: Vec<u32> = Vec::new();
-        let mut tokens = vec![0u32; k];
-
-        while out.len() < params.max_new_tokens && capacity_left(rt, cache.len, k) {
-            let cur = *history.last().unwrap();
-            let mut spec = lookup_continuation(&history, self.match_len, k - 1);
-            if spec.is_empty() {
-                // local-history miss: fall back to the (possibly warm,
-                // cross-request) pool — the handle counts the hit/miss
-                spec = pool.lookup(cur, 1).into_iter().next().unwrap_or_default();
-            } else {
-                stats.pool_hits += 1;
-            }
-            // pad the chain with repeats of the last speculated/current token
-            while spec.len() < k - 1 {
-                spec.push(*spec.last().unwrap_or(&cur));
-            }
-
-            tokens[0] = cur;
-            tokens[1..].copy_from_slice(&spec);
-            let step = rt.decode(&exe, &cache, &tokens)?;
-
-            let mut accepted: Vec<u32> = Vec::new();
-            for i in 0..k {
-                let target = step.logits.argmax(i, vocab);
-                accepted.push(target);
-                if i < k - 1 && spec[i] != target {
-                    break;
-                }
-            }
-            let a = accepted.len().min(rt.commit_slots);
-            accepted.truncate(a);
-            let src: Vec<i32> = (0..a as i32).collect();
-            cache = rt.commit(cache, &step.new_kv, k, &src, a)?;
-            stats.record_accept(a);
-
-            let hit_eos = params.stop_at_eos && accepted.contains(&EOS_ID);
-            out.extend_from_slice(&accepted);
-            history.extend_from_slice(&accepted);
-            // feed the pool every n-gram window the accepted tokens created
-            let fed = history.len().saturating_sub(a + k - 1);
-            pool.seed_from(&history[fed..]);
-            if hit_eos {
-                break;
-            }
-        }
-        pool.fill_stats(&mut stats);
-        Ok(finish(out, params, stats, timer.elapsed()))
+        Ok(Session::boxed(core, PromptLookupState {
+            rt,
+            k,
+            match_len: self.match_len,
+            exe,
+            history: prompt.to_vec(),
+            tokens: vec![0u32; k],
+            cache: Some(cache),
+            vocab,
+            pool,
+        }))
     }
 }
 

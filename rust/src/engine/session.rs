@@ -1,0 +1,479 @@
+//! Resumable decoding sessions — the step-structured view of Algorithm 2.
+//!
+//! Lookahead decoding commits a variable-length run of verified tokens per
+//! step, but the original `Decoder::generate_with_pool` hid that behind a
+//! blocking, all-at-once call. [`DecodeSession`] exposes the step structure:
+//! `Decoder::begin` opens a session that owns its KV cache, n-gram pool
+//! handle, and per-step stats; each [`DecodeSession::step`] advances one
+//! fused model call and reports the tokens it committed. The serving layer
+//! builds streaming, cancellation, and time-sliced multi-request
+//! interleaving on top; the one-shot `generate()`/`generate_with_pool()`
+//! are now thin loops over `step()` (byte-exact with the old behavior).
+//!
+//! Internals: engines implement the private [`EngineStep`] trait (one raw
+//! Algorithm-2 step, no budget/EOS bookkeeping); the generic [`Session`]
+//! wrapper folds raw commits through [`SessionCore::commit_step`], which
+//! applies the same budget/EOS trimming contract as `engine::finish` —
+//! incrementally, so streamed deltas concatenate to exactly the one-shot
+//! output.
+
+use anyhow::Result;
+
+use crate::engine::{finish, GenOutput, GenParams};
+use crate::metrics::{DecodeStats, Timer};
+use crate::ngram::PoolHandle;
+use crate::tokenizer::EOS_ID;
+
+/// Why a session stopped producing tokens.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// EOS was committed (and trimmed from the output).
+    Eos,
+    /// `max_new_tokens` reached.
+    Budget,
+    /// The KV cache cannot hold another step.
+    CacheFull,
+    /// The caller cancelled the session.
+    Cancelled,
+    /// The request's serving deadline expired.
+    Deadline,
+    /// A step returned an error; the session is poisoned.
+    Failed,
+}
+
+impl FinishReason {
+    /// Stable wire-format tag (the `finish` field of the final record).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FinishReason::Eos => "eos",
+            FinishReason::Budget => "budget",
+            FinishReason::CacheFull => "cache_full",
+            FinishReason::Cancelled => "cancelled",
+            FinishReason::Deadline => "deadline",
+            FinishReason::Failed => "failed",
+        }
+    }
+}
+
+/// Result of one [`DecodeSession::step`] call.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StepOutcome {
+    /// The step committed these tokens to the output (already trimmed to the
+    /// generation budget and cut at EOS — concatenating every `Committed`
+    /// payload reproduces the one-shot output byte-exactly). May be empty
+    /// when the step's tokens were entirely trimmed (e.g. EOS first).
+    Committed { tokens: Vec<u32> },
+    /// The session is finished; no tokens were committed by this call.
+    Finished { reason: FinishReason },
+}
+
+/// A resumable decoding session over one request.
+///
+/// Sessions borrow the [`crate::runtime::ModelRuntime`] they were opened on
+/// and own everything else: KV cache position, n-gram pool handle, RNG,
+/// window/trajectory state, and per-step [`DecodeStats`]. Drive with
+/// [`step`](DecodeSession::step) until [`finished`](DecodeSession::finished)
+/// is `Some`, then call [`into_output`](DecodeSession::into_output) for the
+/// final record.
+pub trait DecodeSession {
+    /// Advance one decode step. After the session finishes, further calls
+    /// return `Finished` with the same reason and do no work.
+    fn step(&mut self) -> Result<StepOutcome>;
+
+    /// Tokens committed so far (already budget/EOS-trimmed).
+    fn tokens(&self) -> &[u32];
+
+    /// Per-step statistics so far. Pool counters are folded in when the
+    /// session finishes (they are exact in `into_output`'s stats).
+    fn stats(&self) -> &DecodeStats;
+
+    /// `Some(reason)` once the session will produce no more tokens.
+    fn finished(&self) -> Option<FinishReason>;
+
+    /// Stop the session before its natural end (`FinishReason::Cancelled`
+    /// or `FinishReason::Deadline`). Tokens committed so far remain valid;
+    /// the next `step()` reports `Finished`. No-op on a finished session.
+    fn cancel(&mut self, reason: FinishReason);
+
+    /// Consume the session into the final output (text decoded, wall-clock
+    /// and pool stats finalized) plus the n-gram pool handle, returned so
+    /// callers that loaned a shared-cache handle get it back.
+    fn into_output(self: Box<Self>) -> (GenOutput, PoolHandle);
+}
+
+/// One raw engine step: either the tokens Algorithm 2/3/4 committed this
+/// step (pre-trim), or a stop condition hit before any model call.
+pub(crate) enum RawStep {
+    Tokens(Vec<u32>),
+    Stop(FinishReason),
+}
+
+/// The engine-specific half of a session: one untrimmed Algorithm-2 step.
+/// Implementations keep the window/trajectory/cache state; budget and EOS
+/// bookkeeping live in [`SessionCore`] so every engine shares one contract.
+pub(crate) trait EngineStep {
+    fn raw_step(&mut self, core: &mut SessionCore) -> Result<RawStep>;
+
+    /// The session's n-gram pool handle (a detached handle for engines that
+    /// keep no pool). Used to seal pool stats and return the handle.
+    fn pool_mut(&mut self) -> &mut PoolHandle;
+}
+
+/// Shared per-session bookkeeping: params, stats, committed output, and the
+/// incremental budget/EOS trimming contract (mirrors `engine::finish`).
+pub(crate) struct SessionCore {
+    pub params: GenParams,
+    pub stats: DecodeStats,
+    pub timer: Timer,
+    pub out: Vec<u32>,
+    pub finished: Option<FinishReason>,
+}
+
+impl SessionCore {
+    pub fn new(prompt_tokens: usize, params: GenParams) -> SessionCore {
+        SessionCore {
+            out: Vec::with_capacity(params.max_new_tokens),
+            params,
+            stats: DecodeStats { prompt_tokens, ..Default::default() },
+            timer: Timer::start(),
+            finished: None,
+        }
+    }
+
+    /// Fold one raw step commit into the session: record the accept length,
+    /// trim to the remaining budget, cut at EOS, and adjust
+    /// `stats.generated_tokens` for every dropped token (the `finish()`
+    /// consistency contract). Returns the tokens actually added, and sets
+    /// `finished` when the step ended the generation.
+    pub fn commit_step(&mut self, raw: Vec<u32>) -> Vec<u32> {
+        debug_assert!(self.finished.is_none());
+        self.stats.record_accept(raw.len());
+        if self.stats.decode_steps == 1 {
+            self.stats.ttft = self.timer.elapsed();
+        }
+        let mut add = raw;
+        let remaining = self.params.max_new_tokens.saturating_sub(self.out.len());
+        if add.len() >= remaining {
+            let dropped = add.len() - remaining;
+            self.stats.generated_tokens =
+                self.stats.generated_tokens.saturating_sub(dropped);
+            add.truncate(remaining);
+            self.finished = Some(FinishReason::Budget);
+        }
+        if self.params.stop_at_eos {
+            if let Some(pos) = add.iter().position(|&t| t == EOS_ID) {
+                self.stats.generated_tokens =
+                    self.stats.generated_tokens.saturating_sub(add.len() - pos);
+                add.truncate(pos);
+                self.finished = Some(FinishReason::Eos);
+            }
+        }
+        self.out.extend_from_slice(&add);
+        add
+    }
+}
+
+/// Generic session: an [`EngineStep`] plus the shared [`SessionCore`].
+/// All five engines are `Session<TheirState>` under the hood.
+pub(crate) struct Session<E: EngineStep> {
+    core: SessionCore,
+    eng: E,
+    /// pool stats folded into `core.stats` (exactly once, at finish).
+    sealed: bool,
+}
+
+impl<E: EngineStep> Session<E> {
+    pub fn new(core: SessionCore, eng: E) -> Session<E> {
+        Session { core, eng, sealed: false }
+    }
+
+    pub fn boxed<'rt>(core: SessionCore, eng: E) -> Box<dyn DecodeSession + 'rt>
+    where
+        E: 'rt,
+    {
+        Box::new(Session::new(core, eng))
+    }
+
+    fn seal(&mut self) {
+        if !self.sealed {
+            self.eng.pool_mut().fill_stats(&mut self.core.stats);
+            self.sealed = true;
+        }
+    }
+}
+
+impl<E: EngineStep> DecodeSession for Session<E> {
+    fn step(&mut self) -> Result<StepOutcome> {
+        if let Some(reason) = self.core.finished {
+            self.seal();
+            return Ok(StepOutcome::Finished { reason });
+        }
+        // budget exhausted before the step (e.g. max_new_tokens == 0)
+        if self.core.out.len() >= self.core.params.max_new_tokens {
+            self.core.finished = Some(FinishReason::Budget);
+            self.seal();
+            return Ok(StepOutcome::Finished { reason: FinishReason::Budget });
+        }
+        match self.eng.raw_step(&mut self.core) {
+            Ok(RawStep::Tokens(raw)) => {
+                let added = self.core.commit_step(raw);
+                if self.core.finished.is_some() {
+                    self.seal();
+                }
+                Ok(StepOutcome::Committed { tokens: added })
+            }
+            Ok(RawStep::Stop(reason)) => {
+                self.core.finished = Some(reason);
+                self.seal();
+                Ok(StepOutcome::Finished { reason })
+            }
+            Err(e) => {
+                self.core.finished = Some(FinishReason::Failed);
+                self.seal();
+                Err(e)
+            }
+        }
+    }
+
+    fn tokens(&self) -> &[u32] {
+        &self.core.out
+    }
+
+    fn stats(&self) -> &DecodeStats {
+        &self.core.stats
+    }
+
+    fn finished(&self) -> Option<FinishReason> {
+        self.core.finished
+    }
+
+    fn cancel(&mut self, reason: FinishReason) {
+        if self.core.finished.is_none() {
+            self.core.finished = Some(reason);
+            self.seal();
+        }
+    }
+
+    fn into_output(self: Box<Self>) -> (GenOutput, PoolHandle) {
+        let mut this = *self;
+        this.seal();
+        let wall = this.core.timer.elapsed();
+        // `finish` is idempotent on an already-trimmed session: no overshoot
+        // remains and EOS was cut, so it only decodes text + stamps wall.
+        let out = finish(this.core.out, &this.core.params, this.core.stats, wall);
+        let pool = std::mem::replace(this.eng.pool_mut(), PoolHandle::none());
+        (out, pool)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::SamplingParams;
+    use crate::util::rng::Rng;
+
+    /// Scripted engine: commits pre-baked token batches, then stops.
+    struct Scripted {
+        steps: Vec<Vec<u32>>,
+        at: usize,
+        pool: PoolHandle,
+    }
+
+    impl Scripted {
+        fn new(steps: Vec<Vec<u32>>) -> Scripted {
+            Scripted { steps, at: 0, pool: PoolHandle::none() }
+        }
+    }
+
+    impl EngineStep for Scripted {
+        fn raw_step(&mut self, _core: &mut SessionCore) -> Result<RawStep> {
+            match self.steps.get(self.at) {
+                Some(s) => {
+                    self.at += 1;
+                    Ok(RawStep::Tokens(s.clone()))
+                }
+                None => Ok(RawStep::Stop(FinishReason::CacheFull)),
+            }
+        }
+
+        fn pool_mut(&mut self) -> &mut PoolHandle {
+            &mut self.pool
+        }
+    }
+
+    fn params(max: usize) -> GenParams {
+        GenParams { max_new_tokens: max, ..Default::default() }
+    }
+
+    fn run_session(steps: Vec<Vec<u32>>, p: GenParams) -> (GenOutput, Vec<Vec<u32>>) {
+        let mut sess = Session::new(SessionCore::new(1, p), Scripted::new(steps));
+        let mut deltas = Vec::new();
+        loop {
+            match sess.step().unwrap() {
+                StepOutcome::Committed { tokens } => deltas.push(tokens),
+                StepOutcome::Finished { .. } => break,
+            }
+        }
+        let (out, _) = Box::new(sess).into_output();
+        (out, deltas)
+    }
+
+    #[test]
+    fn budget_trims_overshoot_and_adjusts_stats() {
+        let (out, _) = run_session(vec![vec![1, 2], vec![3, 4, 5]], params(3));
+        assert_eq!(out.tokens, vec![1, 2, 3]);
+        assert_eq!(out.stats.generated_tokens, 3);
+        assert_eq!(out.stats.decode_steps, 2);
+    }
+
+    #[test]
+    fn eos_trims_tail_and_adjusts_stats() {
+        let (out, _) = run_session(vec![vec![1, 2], vec![3, EOS_ID, 9]], params(16));
+        assert_eq!(out.tokens, vec![1, 2, 3]);
+        // EOS + the token after it were dropped; stats must agree with the
+        // output (the finish() consistency contract)
+        assert_eq!(out.stats.generated_tokens, 3);
+        assert_eq!(out.stats.decode_steps, 2);
+    }
+
+    #[test]
+    fn eos_beyond_budget_reports_budget() {
+        let mut sess = Session::new(
+            SessionCore::new(1, params(2)),
+            Scripted::new(vec![vec![1, 2, EOS_ID]]),
+        );
+        sess.step().unwrap();
+        assert_eq!(sess.finished(), Some(FinishReason::Budget));
+        assert_eq!(sess.tokens(), &[1, 2]);
+    }
+
+    #[test]
+    fn deltas_concatenate_to_final_output() {
+        let (out, deltas) =
+            run_session(vec![vec![1], vec![2, 3], vec![4, EOS_ID]], params(16));
+        let cat: Vec<u32> = deltas.into_iter().flatten().collect();
+        assert_eq!(cat, out.tokens);
+        assert_eq!(out.tokens, vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn cache_full_stop_reported() {
+        let mut sess =
+            Session::new(SessionCore::new(1, params(16)), Scripted::new(vec![vec![7]]));
+        assert_eq!(sess.step().unwrap(), StepOutcome::Committed { tokens: vec![7] });
+        assert_eq!(
+            sess.step().unwrap(),
+            StepOutcome::Finished { reason: FinishReason::CacheFull }
+        );
+        assert_eq!(sess.finished(), Some(FinishReason::CacheFull));
+    }
+
+    #[test]
+    fn cancel_stops_within_one_step() {
+        let mut sess = Session::new(
+            SessionCore::new(1, params(16)),
+            Scripted::new(vec![vec![1], vec![2], vec![3]]),
+        );
+        sess.step().unwrap();
+        sess.cancel(FinishReason::Cancelled);
+        assert_eq!(
+            sess.step().unwrap(),
+            StepOutcome::Finished { reason: FinishReason::Cancelled }
+        );
+        let (out, _) = Box::new(sess).into_output();
+        assert_eq!(out.tokens, vec![1]); // partial output is well-formed
+        assert_eq!(out.stats.generated_tokens, 1);
+    }
+
+    #[test]
+    fn ttft_recorded_on_first_commit() {
+        let mut sess = Session::new(
+            SessionCore::new(1, params(4)),
+            Scripted::new(vec![vec![1], vec![2]]),
+        );
+        assert_eq!(sess.stats().ttft, std::time::Duration::ZERO);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        sess.step().unwrap();
+        let ttft = sess.stats().ttft;
+        assert!(ttft > std::time::Duration::ZERO);
+        sess.step().unwrap();
+        assert_eq!(sess.stats().ttft, ttft, "ttft must not move after step 1");
+    }
+
+    #[test]
+    fn zero_budget_finishes_immediately() {
+        let mut sess = Session::new(
+            SessionCore::new(1, params(0)),
+            Scripted::new(vec![vec![1]]),
+        );
+        assert_eq!(
+            sess.step().unwrap(),
+            StepOutcome::Finished { reason: FinishReason::Budget }
+        );
+        assert_eq!(sess.stats().decode_steps, 0);
+    }
+
+    #[test]
+    fn prop_incremental_trim_matches_one_shot_finish() {
+        // The streamed (incremental) trimming and the one-shot `finish()`
+        // post-processing must agree on tokens AND stats for any step split.
+        crate::util::prop::forall(
+            200,
+            41,
+            |r: &mut Rng| {
+                let total = r.range(1, 40);
+                let toks: Vec<u32> =
+                    (0..total).map(|_| if r.below(12) == 0 { EOS_ID } else { r.below(256) as u32 }).collect();
+                // random split into step batches
+                let mut steps: Vec<Vec<u32>> = Vec::new();
+                let mut i = 0;
+                while i < toks.len() {
+                    let take = r.range(1, 5).min(toks.len() - i);
+                    steps.push(toks[i..i + take].to_vec());
+                    i += take;
+                }
+                let max = r.range(1, 48);
+                (toks, steps, max)
+            },
+            |(toks, steps, max)| {
+                let p = GenParams {
+                    max_new_tokens: *max,
+                    sampling: SamplingParams::greedy(),
+                    stop_at_eos: true,
+                    seed: 0,
+                };
+                // one-shot: replay the raw stream through finish(), stopping
+                // where the old engine loops stopped (EOS or budget)
+                let mut raw = Vec::new();
+                let mut stats = DecodeStats::default();
+                for s in steps.iter() {
+                    raw.extend_from_slice(s);
+                    stats.record_accept(s.len());
+                    if s.contains(&EOS_ID) || raw.len() >= *max {
+                        break;
+                    }
+                }
+                let one =
+                    finish(raw, &p, stats, std::time::Duration::from_millis(1));
+                let (inc, deltas) = run_session(steps.clone(), p);
+                if inc.tokens != one.tokens {
+                    return Err(format!("tokens {:?} != {:?} (src {toks:?})",
+                                       inc.tokens, one.tokens));
+                }
+                if inc.stats.generated_tokens != one.stats.generated_tokens {
+                    return Err(format!(
+                        "generated {} != {} (src {toks:?})",
+                        inc.stats.generated_tokens, one.stats.generated_tokens));
+                }
+                if inc.stats.generated_tokens != inc.tokens.len() {
+                    return Err("stats disagree with output length".into());
+                }
+                let cat: Vec<u32> = deltas.into_iter().flatten().collect();
+                if cat != inc.tokens {
+                    return Err("deltas do not concatenate to output".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

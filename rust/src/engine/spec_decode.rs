@@ -4,16 +4,21 @@
 //! Greedy verification here (the guess-and-verify comparison point for
 //! Fig. 5 / the scaling-law analysis of §4.1).
 
+use std::rc::Rc;
+
 use anyhow::{bail, Result};
 
-use crate::engine::{capacity_left, finish, vocab_live, Decoder, GenOutput, GenParams};
-use crate::metrics::{DecodeStats, Timer};
+use crate::engine::session::{EngineStep, RawStep, Session, SessionCore};
+use crate::engine::{capacity_left, vocab_live, Decoder, DecodeSession, FinishReason,
+                    GenParams};
+use crate::metrics::Timer;
 use crate::ngram::PoolHandle;
-use crate::runtime::ModelRuntime;
-use crate::tokenizer::EOS_ID;
+use crate::runtime::{Cache, ModelRuntime};
 
 pub struct SpecDecode {
-    pub draft: ModelRuntime,
+    /// Shared with every open session (sessions must not borrow the engine,
+    /// so the draft runtime lives behind an `Rc`).
+    pub draft: Rc<ModelRuntime>,
     pub gamma: usize,
 }
 
@@ -21,7 +26,84 @@ impl SpecDecode {
     /// `gamma + 1` must have a matching `decode_lin_{gamma+1}` target
     /// executable (the shipped artifacts provide gamma = 4).
     pub fn new(draft: ModelRuntime, gamma: usize) -> Self {
-        SpecDecode { draft, gamma }
+        SpecDecode { draft: Rc::new(draft), gamma }
+    }
+}
+
+struct SpecState<'rt> {
+    rt: &'rt ModelRuntime,
+    draft: Rc<ModelRuntime>,
+    gamma: usize,
+    verify_exe: String,
+    tokens: Vec<u32>,
+    cur: u32,
+    cache: Option<Cache>,
+    dcache: Option<Cache>,
+    vocab: usize,
+    dvocab: usize,
+    pool: PoolHandle,
+}
+
+impl EngineStep for SpecState<'_> {
+    fn raw_step(&mut self, _core: &mut SessionCore) -> Result<RawStep> {
+        let k = self.gamma + 1;
+        let cache_len = self.cache.as_ref().unwrap().len;
+        if !capacity_left(self.rt, cache_len, k) {
+            return Ok(RawStep::Stop(FinishReason::CacheFull));
+        }
+
+        // -- draft proposes gamma tokens autoregressively ----------------
+        let mut draft_toks = Vec::with_capacity(self.gamma);
+        let mut dcur = self.cur;
+        for _ in 0..self.gamma {
+            let ds = self.draft.decode("decode_lin_1", self.dcache.as_ref().unwrap(),
+                                       &[dcur])?;
+            let t = ds.logits.argmax(0, self.dvocab);
+            let dcache = self.dcache.take().unwrap();
+            self.dcache = Some(self.draft.commit(dcache, &ds.new_kv, 1, &[0], 1)?);
+            draft_toks.push(t);
+            dcur = t;
+        }
+
+        // -- target verifies [cur, d1..d_gamma] in parallel ---------------
+        self.tokens[0] = self.cur;
+        self.tokens[1..].copy_from_slice(&draft_toks);
+        let step = self.rt.decode(&self.verify_exe, self.cache.as_ref().unwrap(),
+                                  &self.tokens)?;
+
+        let mut accepted: Vec<u32> = Vec::new();
+        for i in 0..k {
+            let target = step.logits.argmax(i, self.vocab);
+            accepted.push(target);
+            if i < self.gamma && draft_toks[i] != target {
+                break; // draft diverged; `target` is the corrected token
+            }
+            // matched (or bonus position i == gamma): continue
+        }
+        let a = accepted.len();
+        let src: Vec<i32> = (0..a as i32).collect();
+        let cache = self.cache.take().unwrap();
+        self.cache = Some(self.rt.commit(cache, &step.new_kv, k, &src, a)?);
+
+        // -- draft cache sync ---------------------------------------------
+        // Draft committed rows for [cur, d1..d_{gamma-1}] during proposal.
+        // Accepted prefix matches those rows; roll draft length back to
+        // the target's and, when everything was accepted, ingest the last
+        // draft token whose KV the draft never computed.
+        if a == k {
+            let ds = self.draft.decode("decode_lin_1", self.dcache.as_ref().unwrap(),
+                                       &[draft_toks[self.gamma - 1]])?;
+            let dcache = self.dcache.take().unwrap();
+            self.dcache = Some(self.draft.commit(dcache, &ds.new_kv, 1, &[0], 1)?);
+        }
+        self.dcache.as_mut().unwrap().len = self.cache.as_ref().unwrap().len;
+
+        self.cur = *accepted.last().unwrap();
+        Ok(RawStep::Tokens(accepted))
+    }
+
+    fn pool_mut(&mut self) -> &mut PoolHandle {
+        &mut self.pool
     }
 }
 
@@ -30,13 +112,12 @@ impl Decoder for SpecDecode {
         format!("spec_decode[draft={},g{}]", self.draft.mm.name, self.gamma)
     }
 
-    fn generate_with_pool(&mut self, rt: &ModelRuntime, prompt: &[u32],
-                          params: &GenParams, _pool: &mut PoolHandle)
-                          -> Result<GenOutput> {
+    fn begin<'rt>(&self, rt: &'rt ModelRuntime, prompt: &[u32], params: &GenParams,
+                  pool: PoolHandle) -> Result<Box<dyn DecodeSession + 'rt>> {
         if !params.sampling.is_greedy() {
             bail!("spec_decode baseline implements greedy verification only");
         }
-        let timer = Timer::start();
+        let mut core = SessionCore::new(prompt.len(), params.clone());
         let k = self.gamma + 1;
         let verify_exe = format!("decode_lin_{k}");
         if !rt.mm.executables.contains_key(&verify_exe) {
@@ -44,66 +125,25 @@ impl Decoder for SpecDecode {
         }
         let vocab = vocab_live(rt);
         let dvocab = vocab_live(&self.draft);
-        let mut stats = DecodeStats { prompt_tokens: prompt.len(), ..Default::default() };
 
         let pf = Timer::start();
-        let (_, mut cache) = rt.prefill(prompt)?;
-        let (_, mut dcache) = self.draft.prefill(prompt)?;
-        stats.prefill_wall = pf.elapsed();
+        let (_, cache) = rt.prefill(prompt)?;
+        let (_, dcache) = self.draft.prefill(prompt)?;
+        core.stats.prefill_wall = pf.elapsed();
 
-        let mut cur = *prompt.last().unwrap();
-        let mut out: Vec<u32> = Vec::new();
-        let mut tokens = vec![0u32; k];
-
-        while out.len() < params.max_new_tokens && capacity_left(rt, cache.len, k) {
-            // -- draft proposes gamma tokens autoregressively ----------------
-            let mut draft_toks = Vec::with_capacity(self.gamma);
-            let mut dcur = cur;
-            for _ in 0..self.gamma {
-                let ds = self.draft.decode("decode_lin_1", &dcache, &[dcur])?;
-                let t = ds.logits.argmax(0, dvocab);
-                dcache = self.draft.commit(dcache, &ds.new_kv, 1, &[0], 1)?;
-                draft_toks.push(t);
-                dcur = t;
-            }
-
-            // -- target verifies [cur, d1..d_gamma] in parallel ---------------
-            tokens[0] = cur;
-            tokens[1..].copy_from_slice(&draft_toks);
-            let step = rt.decode(&verify_exe, &cache, &tokens)?;
-
-            let mut accepted: Vec<u32> = Vec::new();
-            for i in 0..k {
-                let target = step.logits.argmax(i, vocab);
-                accepted.push(target);
-                if i < self.gamma && draft_toks[i] != target {
-                    break; // draft diverged; `target` is the corrected token
-                }
-                // matched (or bonus position i == gamma): continue
-            }
-            let a = accepted.len();
-            let src: Vec<i32> = (0..a as i32).collect();
-            cache = rt.commit(cache, &step.new_kv, k, &src, a)?;
-            stats.record_accept(a);
-
-            // -- draft cache sync ---------------------------------------------
-            // Draft committed rows for [cur, d1..d_{gamma-1}] during proposal.
-            // Accepted prefix matches those rows; roll draft length back to
-            // the target's and, when everything was accepted, ingest the last
-            // draft token whose KV the draft never computed.
-            if a == k {
-                let ds = self.draft.decode("decode_lin_1", &dcache, &[draft_toks[self.gamma - 1]])?;
-                dcache = self.draft.commit(dcache, &ds.new_kv, 1, &[0], 1)?;
-            }
-            dcache.len = cache.len;
-
-            let hit_eos = params.stop_at_eos && accepted.contains(&EOS_ID);
-            out.extend_from_slice(&accepted);
-            cur = *out.last().unwrap();
-            if hit_eos {
-                break;
-            }
-        }
-        Ok(finish(out, params, stats, timer.elapsed()))
+        let cur = *prompt.last().unwrap();
+        Ok(Session::boxed(core, SpecState {
+            rt,
+            draft: self.draft.clone(),
+            gamma: self.gamma,
+            verify_exe,
+            tokens: vec![0u32; k],
+            cur,
+            cache: Some(cache),
+            dcache: Some(dcache),
+            vocab,
+            dvocab,
+            pool,
+        }))
     }
 }

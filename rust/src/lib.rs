@@ -6,8 +6,10 @@
 //!
 //! - **L3 (this crate)**: the serving coordinator — lookahead engine
 //!   (2D window + n-gram pool + disjoint-n-gram verification), baselines
-//!   (autoregressive, Jacobi, speculative, prompt-lookup), request
-//!   router/batcher/scheduler, lookahead parallelism, metrics, benches.
+//!   (autoregressive, Jacobi, speculative, prompt-lookup) behind the
+//!   resumable [`engine::DecodeSession`] API, a request router/scheduler
+//!   whose workers time-slice steps across concurrent sessions (streaming,
+//!   cancellation, deadlines), lookahead parallelism, metrics, benches.
 //! - **L2 (python/compile, build-time)**: LLaMA-style byte transformer
 //!   AOT-lowered to HLO text, executed here via PJRT.
 //! - **L1 (python/compile/kernels)**: Pallas flash-style attention kernel

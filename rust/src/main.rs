@@ -52,6 +52,14 @@ fn print_usage(args: &Args) {
         Opt { name: "policy", default: Some("fifo"), help: "fifo | sjf" },
         Opt { name: "share-ngrams", default: Some("true"),
               help: "cross-request shared n-gram cache (serve)" },
+        Opt { name: "ngram-ttl-ms", default: None,
+              help: "TTL decay for shared n-gram caches (serve)" },
+        Opt { name: "time-slice", default: Some("4"),
+              help: "decode steps per session per scheduling round (serve)" },
+        Opt { name: "max-live", default: Some("4"),
+              help: "interleaved sessions per worker (serve)" },
+        Opt { name: "stream", default: Some("false"),
+              help: "stream chunk lines before the final record (client)" },
         Opt { name: "devices", default: Some("4"), help: "LP simulated devices" },
     ];
     println!("{}", usage(args.program(),
@@ -125,11 +133,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
         policy: Policy::parse(&args.str_or("policy", "fifo")),
         queue_depth: args.usize_or("queue-depth", 256),
         share_ngrams,
+        ngram_ttl_ms: args.get("ngram-ttl-ms").and_then(|v| v.parse().ok()),
         worker: WorkerConfig {
             artifacts_dir: args.str_or("artifacts", "artifacts"),
             model: args.str_or("model", "tiny"),
             wng: args.wng("wng", (5, 3, 5)),
             draft_model: "draft".into(),
+            time_slice: args.usize_or("time-slice", 4),
+            max_live: args.usize_or("max-live", 4),
         },
     };
     let max_conns = args.get("max-conns").and_then(|v| v.parse().ok());
@@ -137,16 +148,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_client(args: &Args) -> Result<()> {
-    let req = lookahead::util::json::Json::obj(vec![
-        ("prompt", lookahead::util::json::Json::str(args.str_or("prompt", "hello"))),
-        ("max_tokens",
-         lookahead::util::json::Json::num(args.usize_or("max-tokens", 64) as f64)),
-        ("method", lookahead::util::json::Json::str(args.str_or("method", "lookahead"))),
-        ("temperature",
-         lookahead::util::json::Json::num(args.f64_or("temperature", 0.0))),
+    use lookahead::util::json::Json;
+    let stream = args.bool_or("stream", false);
+    let req = Json::obj(vec![
+        ("prompt", Json::str(args.str_or("prompt", "hello"))),
+        ("max_tokens", Json::num(args.usize_or("max-tokens", 64) as f64)),
+        ("method", Json::str(args.str_or("method", "lookahead"))),
+        ("temperature", Json::num(args.f64_or("temperature", 0.0))),
+        ("stream", Json::Bool(stream)),
     ]);
-    let resp = lookahead::server::client_request(
-        &args.str_or("addr", "127.0.0.1:7878"), &req.dump())?;
+    let addr = args.str_or("addr", "127.0.0.1:7878");
+    let resp = if stream {
+        lookahead::server::client_request_stream(&addr, &req.dump(),
+                                                 |chunk| println!("{chunk}"))?
+    } else {
+        lookahead::server::client_request(&addr, &req.dump())?
+    };
     println!("{resp}");
     Ok(())
 }

@@ -158,6 +158,9 @@ pub struct DecodeStats {
     pub pool_entries_end: usize,
     pub wall: Duration,
     pub prefill_wall: Duration,
+    /// Time to first token: session start -> end of the first decode step
+    /// (includes prefill). Zero until the first step commits.
+    pub ttft: Duration,
 }
 
 impl DecodeStats {
@@ -203,6 +206,7 @@ impl DecodeStats {
         self.pool_entries_end += other.pool_entries_end;
         self.wall += other.wall;
         self.prefill_wall += other.prefill_wall;
+        self.ttft = self.ttft.max(other.ttft);
         for (i, &c) in other.accepted_by_len.iter().enumerate() {
             if self.accepted_by_len.len() <= i {
                 self.accepted_by_len.resize(i + 1, 0);

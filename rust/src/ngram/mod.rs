@@ -18,6 +18,7 @@ pub use shared::{
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::collections::VecDeque;
+use std::time::{Duration, Instant};
 
 /// Anything that can store and retrieve n-grams for the verification branch.
 ///
@@ -53,14 +54,25 @@ pub trait NgramSource {
     }
 }
 
+/// One stored suffix plus its last-touch time (for TTL decay).
+#[derive(Debug, Clone)]
+struct Stored {
+    suffix: Vec<u32>,
+    stamp: Instant,
+}
+
 #[derive(Debug, Clone)]
 pub struct NgramPool {
     /// n-gram length N (suffixes stored are length N-1).
     n: usize,
     /// per-key LRU of suffixes, most recent at the back.
-    map: HashMap<u32, VecDeque<Vec<u32>>>,
+    map: HashMap<u32, VecDeque<Stored>>,
     /// max suffixes retained per key.
     per_key_cap: usize,
+    /// entries older than this are evicted on key access (None = keep
+    /// forever — the paper's per-request setting). Serving sets it to decay
+    /// stale templates out of long-lived shared caches.
+    max_age: Option<Duration>,
     /// total suffixes across keys (for the global cap).
     total: usize,
     total_cap: usize,
@@ -79,12 +91,44 @@ impl NgramPool {
             n,
             map: HashMap::new(),
             per_key_cap: per_key_cap.max(1),
+            max_age: None,
             total: 0,
             total_cap: total_cap.max(1),
             hits: 0,
             misses: 0,
             evictions: 0,
             evict_keys: VecDeque::new(),
+        }
+    }
+
+    /// Enable TTL decay: entries untouched for longer than `max_age` are
+    /// evicted the next time their key shard is accessed.
+    pub fn with_max_age(mut self, max_age: Duration) -> Self {
+        self.max_age = Some(max_age);
+        self
+    }
+
+    pub fn set_max_age(&mut self, max_age: Option<Duration>) {
+        self.max_age = max_age;
+    }
+
+    /// Drop `key`'s expired entries (no-op without a `max_age`).
+    fn prune_key(&mut self, key: u32) {
+        let Some(ttl) = self.max_age else { return };
+        let now = Instant::now();
+        if let Some(q) = self.map.get_mut(&key) {
+            let before = q.len();
+            q.retain(|e| now.duration_since(e.stamp) <= ttl);
+            let dropped = before - q.len();
+            self.total -= dropped;
+            self.evictions += dropped;
+            if q.is_empty() {
+                // retire the key from the eviction rotation too, or a
+                // later re-insert would push a duplicate rotation entry
+                // (unbounded growth + unfair multi-slot LRU pressure)
+                self.map.remove(&key);
+                self.evict_keys.retain(|&k| k != key);
+            }
         }
     }
 
@@ -101,23 +145,25 @@ impl NgramPool {
     }
 
     /// Insert a full n-gram (length n). Deduplicates per key; refreshes LRU
-    /// position on re-insert.
+    /// position (and TTL stamp) on re-insert.
     pub fn insert(&mut self, ngram: &[u32]) {
         if ngram.len() != self.n {
             return;
         }
         let key = ngram[0];
+        self.prune_key(key);
         let suffix = ngram[1..].to_vec();
+        let stored = Stored { suffix, stamp: Instant::now() };
         match self.map.entry(key) {
             Entry::Occupied(mut e) => {
                 let q = e.get_mut();
-                if let Some(pos) = q.iter().position(|s| *s == suffix) {
-                    // refresh: move to back
-                    let s = q.remove(pos).unwrap();
-                    q.push_back(s);
+                if let Some(pos) = q.iter().position(|s| s.suffix == stored.suffix) {
+                    // refresh: move to back, restamp
+                    q.remove(pos);
+                    q.push_back(stored);
                     return;
                 }
-                q.push_back(suffix);
+                q.push_back(stored);
                 self.total += 1;
                 if q.len() > self.per_key_cap {
                     q.pop_front();
@@ -126,7 +172,7 @@ impl NgramPool {
                 }
             }
             Entry::Vacant(e) => {
-                e.insert(VecDeque::from([suffix]));
+                e.insert(VecDeque::from([stored]));
                 self.evict_keys.push_back(key);
                 self.total += 1;
             }
@@ -152,12 +198,14 @@ impl NgramPool {
     }
 
     /// Up to `max` suffixes whose n-gram starts with `key`, most recent first
-    /// (recent trajectory n-grams are the best speculations).
+    /// (recent trajectory n-grams are the best speculations). Expired
+    /// entries are evicted before the scan ("checked on shard access").
     pub fn lookup(&mut self, key: u32, max: usize) -> Vec<Vec<u32>> {
+        self.prune_key(key);
         match self.map.get(&key) {
             Some(q) if !q.is_empty() => {
                 self.hits += 1;
-                q.iter().rev().take(max).cloned().collect()
+                q.iter().rev().take(max).map(|s| s.suffix.clone()).collect()
             }
             _ => {
                 self.misses += 1;
@@ -293,6 +341,33 @@ mod tests {
             p.insert(&[i, i + 1]);
         }
         assert_eq!(p.evictions, 3); // global cap evicted the overflow
+    }
+
+    #[test]
+    fn ttl_evicts_stale_entries_on_access() {
+        let mut p = NgramPool::new(3, 8, 100).with_max_age(Duration::from_millis(15));
+        p.insert(&[1, 2, 3]);
+        assert_eq!(p.lookup(1, 4), vec![vec![2, 3]], "fresh entry must survive");
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(p.lookup(1, 4).is_empty(), "stale entry must decay");
+        assert_eq!(p.evictions, 1);
+        assert!(p.is_empty());
+        // re-insert after decay works (key bookkeeping stays consistent)
+        p.insert(&[1, 4, 5]);
+        assert_eq!(p.lookup(1, 4), vec![vec![4, 5]]);
+        // the eviction rotation must not accumulate duplicate key entries
+        // across expire/re-learn cycles
+        assert_eq!(p.evict_keys.iter().filter(|&&k| k == 1).count(), 1);
+    }
+
+    #[test]
+    fn ttl_refresh_on_reinsert_keeps_entry_alive() {
+        let mut p = NgramPool::new(2, 8, 100).with_max_age(Duration::from_millis(40));
+        p.insert(&[7, 8]);
+        std::thread::sleep(Duration::from_millis(25));
+        p.insert(&[7, 8]); // refresh restamps
+        std::thread::sleep(Duration::from_millis(25));
+        assert_eq!(p.lookup(7, 4), vec![vec![8]], "refreshed entry must survive");
     }
 
     #[test]

@@ -28,6 +28,7 @@
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::metrics::DecodeStats;
 use crate::ngram::{NgramPool, NgramSource};
@@ -111,6 +112,16 @@ impl SharedNgramCache {
 
     pub fn with_defaults(spec: PoolSpec) -> SharedNgramCache {
         SharedNgramCache::new(spec, DEFAULT_SHARDS)
+    }
+
+    /// TTL decay for stale templates: entries untouched for longer than
+    /// `max_age` are evicted the next time their shard is accessed (inserts
+    /// and lookups both prune). `None` disables decay. Long-lived serving
+    /// caches use this so yesterday's templates stop occupying LRU slots.
+    pub fn set_max_age(&self, max_age: Option<Duration>) {
+        for s in &self.shards {
+            s.lock().unwrap().set_max_age(max_age);
+        }
     }
 
     pub fn spec(&self) -> PoolSpec {
@@ -219,16 +230,29 @@ impl NgramSource for Arc<SharedNgramCache> {
 /// includes all three.
 pub struct NgramCacheRegistry {
     shards: usize,
+    /// TTL applied to every cache this registry creates (None = no decay).
+    max_age: Option<Duration>,
     caches: Mutex<HashMap<String, Arc<SharedNgramCache>>>,
 }
 
 impl NgramCacheRegistry {
     pub fn new() -> NgramCacheRegistry {
-        NgramCacheRegistry { shards: DEFAULT_SHARDS, caches: Mutex::new(HashMap::new()) }
+        NgramCacheRegistry {
+            shards: DEFAULT_SHARDS,
+            max_age: None,
+            caches: Mutex::new(HashMap::new()),
+        }
     }
 
     pub fn with_shards(shards: usize) -> NgramCacheRegistry {
-        NgramCacheRegistry { shards: shards.max(1), caches: Mutex::new(HashMap::new()) }
+        NgramCacheRegistry { shards: shards.max(1), ..NgramCacheRegistry::new() }
+    }
+
+    /// Builder: TTL decay for every cache created by this registry
+    /// (`ServerConfig::ngram_ttl_ms` lands here).
+    pub fn with_max_age(mut self, max_age: Option<Duration>) -> NgramCacheRegistry {
+        self.max_age = max_age;
+        self
     }
 
     fn key(model: &str, spec: &PoolSpec) -> String {
@@ -242,7 +266,11 @@ impl NgramCacheRegistry {
     pub fn get_or_create(&self, model: &str, spec: PoolSpec) -> Arc<SharedNgramCache> {
         let mut m = self.caches.lock().unwrap();
         m.entry(Self::key(model, &spec))
-            .or_insert_with(|| Arc::new(SharedNgramCache::new(spec, self.shards)))
+            .or_insert_with(|| {
+                let c = SharedNgramCache::new(spec, self.shards);
+                c.set_max_age(self.max_age);
+                Arc::new(c)
+            })
             .clone()
     }
 
@@ -445,6 +473,34 @@ mod tests {
         c.seed_from(&[1, 2, 3, 4]);
         assert_eq!(c.lookup(1, 4), vec![vec![2, 3]]);
         assert_eq!(c.lookup(2, 4), vec![vec![3, 4]]);
+    }
+
+    #[test]
+    fn shared_cache_ttl_decays_stale_templates() {
+        let c = SharedNgramCache::new(spec(), 4);
+        c.set_max_age(Some(Duration::from_millis(15)));
+        c.insert(&[1, 2, 3]);
+        assert_eq!(c.lookup(1, 4), vec![vec![2, 3]], "fresh entry must survive");
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(c.lookup(1, 4).is_empty(), "stale template must decay");
+        let st = c.stats();
+        assert_eq!(st.evictions, 1);
+        assert_eq!(st.entries, 0);
+    }
+
+    #[test]
+    fn registry_applies_ttl_to_created_caches() {
+        let reg = NgramCacheRegistry::with_shards(2)
+            .with_max_age(Some(Duration::from_millis(10)));
+        let c = reg.get_or_create("tiny", spec());
+        c.insert(&[1, 2, 3]);
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(c.lookup(1, 4).is_empty(), "registry-created cache must decay");
+
+        let no_ttl = NgramCacheRegistry::with_shards(2).get_or_create("tiny", spec());
+        no_ttl.insert(&[1, 2, 3]);
+        std::thread::sleep(Duration::from_millis(25));
+        assert_eq!(no_ttl.lookup(1, 4), vec![vec![2, 3]], "no TTL -> no decay");
     }
 
     #[test]

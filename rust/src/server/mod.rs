@@ -1,12 +1,14 @@
 //! Serving front (L3): request router, scheduler with back-pressure,
-//! dynamic worker pool, TCP JSON-lines protocol, in-process API.
+//! dynamic worker pool with time-sliced session interleaving, streaming +
+//! cancellation, TCP JSON-lines protocol, in-process API.
 
 pub mod request;
 pub mod scheduler;
 pub mod server;
 pub mod worker;
 
-pub use request::{Request, Response};
-pub use scheduler::{Policy, Scheduler};
-pub use server::{client_request, serve_tcp, ServerConfig, ServerHandle};
+pub use request::{Reply, Request, Response, StreamChunk};
+pub use scheduler::{CancelSet, Policy, Scheduler};
+pub use server::{client_request, client_request_stream, serve_tcp, ResponseStream,
+                 ServerConfig, ServerHandle};
 pub use worker::{Worker, WorkerConfig};

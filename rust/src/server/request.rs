@@ -1,6 +1,14 @@
 //! Request/response types + their JSON-lines wire format.
+//!
+//! Streaming protocol: a request with `"stream": true` receives zero or more
+//! chunk lines `{"id":..,"seq":..,"delta":"..","done":false}` followed by
+//! one final stats record (the [`Response`] JSON, which always carries
+//! `"done":true`). Non-streaming requests get only the final record. A
+//! control line `{"cancel": <id>}` stops a queued or running request; the
+//! cancelled request still receives a well-formed final record with
+//! `"finish":"cancelled"` and whatever text it had committed.
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::engine::{GenParams, SamplingParams};
 use crate::metrics::DecodeStats;
@@ -23,6 +31,13 @@ pub struct Request {
     /// toggle (None = use the server default).
     pub share_ngrams: Option<bool>,
     pub seed: u64,
+    /// stream per-step token deltas as JSON-lines chunks before the final
+    /// stats record.
+    pub stream: bool,
+    /// serving deadline: decode wall-clock budget in ms, measured from the
+    /// moment a worker opens the session. On expiry the request finishes
+    /// with `"finish":"deadline"` and a partial result.
+    pub deadline_ms: Option<u64>,
 }
 
 impl Default for Request {
@@ -38,6 +53,8 @@ impl Default for Request {
             wng: None,
             share_ngrams: None,
             seed: 0,
+            stream: false,
+            deadline_ms: None,
         }
     }
 }
@@ -59,6 +76,12 @@ impl Request {
     /// Parse one JSON line: {"prompt": "...", "max_tokens": 64, ...}
     pub fn from_json_line(id: u64, line: &str) -> Result<Request> {
         let j = Json::parse(line).map_err(|e| anyhow!("bad request json: {e}"))?;
+        Request::from_json(id, &j)
+    }
+
+    /// Parse an already-parsed request object (the TCP front parses once to
+    /// tell control lines from requests).
+    pub fn from_json(id: u64, j: &Json) -> Result<Request> {
         let prompt = j
             .get("prompt")
             .and_then(Json::as_str)
@@ -81,20 +104,83 @@ impl Request {
             r.method = v.to_string();
         }
         if let Some(v) = j.get("seed").and_then(Json::as_i64) {
+            // a negative seed used to wrap silently via `as u64`, making
+            // "seed": -1 a different (undocumented) stream than documented
+            if v < 0 {
+                bail!("'seed' must be non-negative, got {v}");
+            }
             r.seed = v as u64;
         }
         if let Some(v) = j.get("share_ngrams").and_then(Json::as_bool) {
             r.share_ngrams = Some(v);
         }
+        if let Some(v) = j.get("stream").and_then(Json::as_bool) {
+            r.stream = v;
+        }
+        if let Some(v) = j.get("deadline_ms").and_then(Json::as_usize) {
+            r.deadline_ms = Some(v as u64);
+        }
         if let Some(arr) = j.get("wng").and_then(Json::as_arr) {
-            if arr.len() == 3 {
-                let v: Vec<usize> = arr.iter().filter_map(Json::as_usize).collect();
-                if v.len() == 3 {
-                    r.wng = Some((v[0], v[1], v[2]));
-                }
+            let v: Vec<usize> = arr.iter().filter_map(Json::as_usize).collect();
+            if v.len() != 3 {
+                bail!("'wng' must be three non-negative integers [W, N, G]");
             }
+            // zero components would panic the layout (W >= 1, N >= 2) or
+            // degenerate the verification branch — reject at the boundary
+            if v[0] == 0 || v[2] == 0 {
+                bail!("'wng' components must be positive, got {v:?}");
+            }
+            if v[1] < 2 {
+                bail!("'wng' N must be >= 2 (n-gram length), got {}", v[1]);
+            }
+            r.wng = Some((v[0], v[1], v[2]));
         }
         Ok(r)
+    }
+}
+
+/// One incremental streaming chunk (committed-token text delta).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StreamChunk {
+    pub id: u64,
+    /// 1-based chunk sequence number within the request.
+    pub seq: u64,
+    pub delta: String,
+}
+
+impl StreamChunk {
+    pub fn to_json_line(&self) -> String {
+        Json::obj(vec![
+            ("id", Json::num(self.id as f64)),
+            ("seq", Json::num(self.seq as f64)),
+            ("delta", Json::str(self.delta.clone())),
+            ("done", Json::Bool(false)),
+        ])
+        .dump()
+    }
+}
+
+/// A message from the serving pipeline to a submitter: either an
+/// incremental chunk or the final stats record.
+#[derive(Debug, Clone)]
+pub enum Reply {
+    Chunk(StreamChunk),
+    Done(Response),
+}
+
+impl Reply {
+    pub fn id(&self) -> u64 {
+        match self {
+            Reply::Chunk(c) => c.id,
+            Reply::Done(r) => r.id,
+        }
+    }
+
+    pub fn into_response(self) -> Option<Response> {
+        match self {
+            Reply::Done(r) => Some(r),
+            Reply::Chunk(_) => None,
+        }
     }
 }
 
@@ -107,6 +193,13 @@ pub struct Response {
     pub compression: f64,
     pub wall_ms: f64,
     pub queue_ms: f64,
+    /// time to first token (ms), session open -> first committed step.
+    pub ttft_ms: f64,
+    /// why generation stopped: "eos" | "budget" | "cache_full" |
+    /// "cancelled" | "deadline" (empty for error responses).
+    pub finish: String,
+    /// per-step accept-length histogram: index = tokens accepted in a step.
+    pub accept_hist: Vec<usize>,
     /// request was served from an n-gram store that already held entries
     /// (cross-request shared cache warmed by earlier traffic).
     pub pool_warm: bool,
@@ -127,6 +220,9 @@ impl Response {
             compression: stats.compression(),
             wall_ms: stats.wall.as_secs_f64() * 1e3,
             queue_ms,
+            ttft_ms: stats.ttft.as_secs_f64() * 1e3,
+            finish: String::new(),
+            accept_hist: stats.accepted_by_len.clone(),
             pool_warm: stats.pool_warm_start,
             pool_shared: stats.pool_shared,
             pool_hit_rate: stats.pool_hit_rate(),
@@ -143,11 +239,28 @@ impl Response {
             compression: 0.0,
             wall_ms: 0.0,
             queue_ms: 0.0,
+            ttft_ms: 0.0,
+            finish: String::new(),
+            accept_hist: Vec::new(),
             pool_warm: false,
             pool_shared: false,
             pool_hit_rate: 0.0,
             error: Some(msg),
         }
+    }
+
+    /// Final record for a request cancelled while still queued (it never
+    /// reached a worker — zero tokens, no error).
+    pub fn cancelled(id: u64) -> Response {
+        let mut r = Response::err(id, String::new());
+        r.error = None;
+        r.finish = "cancelled".into();
+        r
+    }
+
+    pub fn with_finish(mut self, finish: &str) -> Response {
+        self.finish = finish.to_string();
+        self
     }
 
     pub fn to_json_line(&self) -> String {
@@ -159,9 +272,15 @@ impl Response {
             ("compression", Json::num((self.compression * 1000.0).round() / 1000.0)),
             ("wall_ms", Json::num((self.wall_ms * 100.0).round() / 100.0)),
             ("queue_ms", Json::num((self.queue_ms * 100.0).round() / 100.0)),
+            ("ttft_ms", Json::num((self.ttft_ms * 100.0).round() / 100.0)),
+            ("finish", Json::str(self.finish.clone())),
+            ("accept_hist",
+             Json::arr(self.accept_hist.iter().map(|&c| Json::num(c as f64)).collect())),
             ("pool_warm", Json::Bool(self.pool_warm)),
             ("pool_shared", Json::Bool(self.pool_shared)),
             ("pool_hit_rate", Json::num((self.pool_hit_rate * 1000.0).round() / 1000.0)),
+            // terminates a streaming exchange; constant true on final records
+            ("done", Json::Bool(true)),
         ];
         if let Some(e) = &self.error {
             fields.push(("error", Json::str(e.clone())));
@@ -181,13 +300,15 @@ mod tests {
         assert_eq!(r.prompt, "hi");
         assert_eq!(r.method, "lookahead");
         assert_eq!(r.max_tokens, 64);
+        assert!(!r.stream);
+        assert_eq!(r.deadline_ms, None);
     }
 
     #[test]
     fn parses_full_request() {
         let r = Request::from_json_line(
             1,
-            r#"{"prompt":"x","max_tokens":10,"temperature":0.7,"method":"autoregressive","wng":[5,3,5],"seed":9}"#,
+            r#"{"prompt":"x","max_tokens":10,"temperature":0.7,"method":"autoregressive","wng":[5,3,5],"seed":9,"stream":true,"deadline_ms":250}"#,
         )
         .unwrap();
         assert_eq!(r.max_tokens, 10);
@@ -195,6 +316,34 @@ mod tests {
         assert_eq!(r.method, "autoregressive");
         assert_eq!(r.wng, Some((5, 3, 5)));
         assert_eq!(r.seed, 9);
+        assert!(r.stream);
+        assert_eq!(r.deadline_ms, Some(250));
+    }
+
+    #[test]
+    fn rejects_negative_seed() {
+        // used to wrap silently via `as u64`
+        let e = Request::from_json_line(0, r#"{"prompt":"x","seed":-1}"#);
+        assert!(e.is_err(), "negative seed must be rejected");
+        assert!(e.unwrap_err().to_string().contains("seed"));
+        // zero and positive still fine
+        assert_eq!(Request::from_json_line(0, r#"{"prompt":"x","seed":0}"#)
+                       .unwrap().seed, 0);
+    }
+
+    #[test]
+    fn rejects_zero_wng_components() {
+        for bad in [
+            r#"{"prompt":"x","wng":[0,3,5]}"#,
+            r#"{"prompt":"x","wng":[5,3,0]}"#,
+            r#"{"prompt":"x","wng":[5,0,5]}"#,
+            r#"{"prompt":"x","wng":[5,1,5]}"#, // N=1: not an n-gram
+            r#"{"prompt":"x","wng":[5,3]}"#,   // wrong arity
+        ] {
+            assert!(Request::from_json_line(0, bad).is_err(), "accepted {bad}");
+        }
+        let ok = Request::from_json_line(0, r#"{"prompt":"x","wng":[1,2,1]}"#).unwrap();
+        assert_eq!(ok.wng, Some((1, 2, 1)));
     }
 
     #[test]
@@ -235,11 +384,38 @@ mod tests {
         let mut stats = DecodeStats::default();
         stats.record_accept(2);
         stats.wall = std::time::Duration::from_millis(12);
-        let line = Response::ok(7, "out".into(), &stats, 1.5).to_json_line();
+        stats.ttft = std::time::Duration::from_millis(3);
+        let line = Response::ok(7, "out".into(), &stats, 1.5)
+            .with_finish("eos")
+            .to_json_line();
         let j = Json::parse(&line).unwrap();
         assert_eq!(j.get("id").unwrap().as_usize(), Some(7));
         assert_eq!(j.get("text").unwrap().as_str(), Some("out"));
         assert_eq!(j.get("tokens").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("finish").unwrap().as_str(), Some("eos"));
+        assert_eq!(j.get("done").unwrap().as_bool(), Some(true));
+        assert_eq!(j.get("ttft_ms").unwrap().as_f64(), Some(3.0));
+        assert_eq!(j.get("accept_hist").unwrap().usize_vec().unwrap(), vec![0, 0, 1]);
         assert!(j.get("error").is_none());
+    }
+
+    #[test]
+    fn chunk_wire_format() {
+        let c = StreamChunk { id: 4, seq: 2, delta: "ab\n".into() };
+        let j = Json::parse(&c.to_json_line()).unwrap();
+        assert_eq!(j.get("id").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("seq").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("delta").unwrap().as_str(), Some("ab\n"));
+        assert_eq!(j.get("done").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn cancelled_record_is_well_formed() {
+        let r = Response::cancelled(9);
+        assert!(r.error.is_none());
+        assert_eq!(r.finish, "cancelled");
+        assert_eq!(r.tokens, 0);
+        let j = Json::parse(&r.to_json_line()).unwrap();
+        assert_eq!(j.get("finish").unwrap().as_str(), Some("cancelled"));
     }
 }

@@ -1,14 +1,48 @@
-//! Request scheduler: a thread-safe queue with pluggable admission policies.
+//! Request scheduler: a thread-safe queue with pluggable admission policies,
+//! plus the cancellation rendezvous ([`CancelSet`]).
 //!
 //! The paper serves batch-1 requests; throughput comes from assigning queued
-//! requests to idle engine workers. Policies: FIFO (arrival order) and SJF
-//! (shortest-prompt-first, reduces head-of-line blocking for mixed lengths).
+//! requests to engine workers, each of which time-slices steps across up to
+//! `max_live` concurrent [`crate::engine::DecodeSession`]s. Policies: FIFO
+//! (arrival order) and SJF (shortest-prompt-first, reduces head-of-line
+//! blocking for mixed lengths). Workers block on [`Scheduler::pop`] only
+//! when idle and poll [`Scheduler::try_pop`] between scheduling rounds while
+//! they have live sessions.
 
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 use std::sync::{Condvar, Mutex};
 use std::time::Instant;
 
 use crate::server::request::Request;
+
+/// Cancellation rendezvous between the server front and the workers: the
+/// front marks ids, workers check the mark between steps — so a cancelled
+/// in-flight request stops within one decode step.
+#[derive(Debug, Default)]
+pub struct CancelSet {
+    ids: Mutex<HashSet<u64>>,
+}
+
+impl CancelSet {
+    pub fn new() -> CancelSet {
+        CancelSet::default()
+    }
+
+    /// Mark `id` for cancellation.
+    pub fn request(&self, id: u64) {
+        self.ids.lock().unwrap().insert(id);
+    }
+
+    /// Is `id` marked? (Checked by workers between steps.)
+    pub fn contains(&self, id: u64) -> bool {
+        self.ids.lock().unwrap().contains(&id)
+    }
+
+    /// Drop the mark (request retired or record delivered).
+    pub fn clear(&self, id: u64) {
+        self.ids.lock().unwrap().remove(&id);
+    }
+}
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Policy {
@@ -85,6 +119,32 @@ impl Scheduler {
                 return None;
             }
             st = self.cv.wait(st).unwrap();
+        }
+    }
+
+    /// Non-blocking pop; None when the queue is currently empty (or closed).
+    /// Workers with live sessions use this between scheduling rounds so a
+    /// long-running request never blocks admission of new ones.
+    pub fn try_pop(&self) -> Option<Popped> {
+        let mut st = self.state.lock().unwrap();
+        let idx = self.select(&st.queue)?;
+        let e = st.queue.remove(idx).unwrap();
+        Some(Popped {
+            req: e.req,
+            queued_ms: e.arrived.elapsed().as_secs_f64() * 1e3,
+        })
+    }
+
+    /// Remove a still-queued request; false when `id` is not in the queue
+    /// (it already reached a worker, finished, or never existed).
+    pub fn cancel(&self, id: u64) -> bool {
+        let mut st = self.state.lock().unwrap();
+        match st.queue.iter().position(|e| e.req.id == id) {
+            Some(pos) => {
+                st.queue.remove(pos);
+                true
+            }
+            None => false,
         }
     }
 
@@ -171,5 +231,36 @@ mod tests {
         s.close();
         assert!(s.pop().is_some());
         assert!(s.pop().is_none());
+    }
+
+    #[test]
+    fn try_pop_never_blocks() {
+        let s = Scheduler::new(Policy::Fifo, 4);
+        assert!(s.try_pop().is_none());
+        s.push(req(1, "a")).unwrap();
+        assert_eq!(s.try_pop().unwrap().req.id, 1);
+        assert!(s.try_pop().is_none());
+    }
+
+    #[test]
+    fn cancel_removes_queued_request() {
+        let s = Scheduler::new(Policy::Fifo, 4);
+        s.push(req(1, "a")).unwrap();
+        s.push(req(2, "b")).unwrap();
+        assert!(s.cancel(1));
+        assert!(!s.cancel(1), "double cancel must report not-found");
+        assert!(!s.cancel(99));
+        assert_eq!(s.depth(), 1);
+        assert_eq!(s.try_pop().unwrap().req.id, 2);
+    }
+
+    #[test]
+    fn cancel_set_roundtrip() {
+        let c = CancelSet::new();
+        assert!(!c.contains(5));
+        c.request(5);
+        assert!(c.contains(5));
+        c.clear(5);
+        assert!(!c.contains(5));
     }
 }

@@ -1,13 +1,15 @@
 //! The serving front (vLLM-router-like, thread-based — no tokio offline):
 //!
 //!   TCP conn ──lines──> parse ──> Scheduler (FIFO/SJF, back-pressure)
-//!                                   │ pop
-//!                              Worker pool (one PJRT runtime each)
-//!                                   │ Response
-//!                              dispatcher ──> per-connection channel
+//!                                   │ pop / try_pop
+//!                              Worker pool (one PJRT runtime each,
+//!                              time-sliced multi-session interleave)
+//!                                   │ Reply::Chunk* + Reply::Done
+//!                              dispatcher ──> per-request channel
 //!
-//! Also exposes an in-process `ServerHandle::submit` used by the examples
-//! and the e2e bench driver.
+//! Also exposes an in-process `ServerHandle::submit` (returning a
+//! [`ResponseStream`]) used by the examples, tests, and the e2e bench
+//! driver, plus `ServerHandle::cancel` for queued or in-flight requests.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -16,14 +18,15 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::info;
 use crate::metrics::Registry;
 use crate::ngram::NgramCacheRegistry;
-use crate::server::request::{Request, Response};
-use crate::server::scheduler::{Policy, Scheduler};
+use crate::server::request::{Reply, Request, Response};
+use crate::server::scheduler::{CancelSet, Policy, Scheduler};
 use crate::server::worker::{Worker, WorkerConfig};
+use crate::util::json::Json;
 
 pub struct ServerConfig {
     pub workers: usize,
@@ -34,6 +37,9 @@ pub struct ServerConfig {
     /// requests can still opt out via `share_ngrams: false`. When false,
     /// no registry exists and every request decodes against a cold pool.
     pub share_ngrams: bool,
+    /// TTL decay for shared n-gram caches: entries untouched for this many
+    /// ms are evicted on shard access (None = keep until LRU pressure).
+    pub ngram_ttl_ms: Option<u64>,
     pub worker: WorkerConfig,
 }
 
@@ -44,19 +50,54 @@ impl Default for ServerConfig {
             policy: Policy::Fifo,
             queue_depth: 256,
             share_ngrams: true,
+            ngram_ttl_ms: None,
             worker: WorkerConfig::default(),
         }
     }
 }
 
-/// In-process handle: submit requests, receive responses, shut down.
+/// Per-request reply stream returned by [`ServerHandle::submit`]: zero or
+/// more `Reply::Chunk`s (streaming requests only) followed by exactly one
+/// `Reply::Done` with the final stats record. The `id` is the server-side
+/// request id — pass it to [`ServerHandle::cancel`].
+pub struct ResponseStream {
+    pub id: u64,
+    rx: Receiver<Reply>,
+}
+
+impl ResponseStream {
+    /// Next event (blocking).
+    pub fn recv(&self) -> Result<Reply> {
+        self.rx.recv().map_err(|_| anyhow::anyhow!("server shutting down"))
+    }
+
+    /// Non-blocking poll; None when nothing is pending.
+    pub fn try_recv(&self) -> Option<Reply> {
+        self.rx.try_recv().ok()
+    }
+
+    /// Drain chunks and return the final record (the final `text` is always
+    /// the full completion, so non-streaming callers lose nothing).
+    pub fn wait(self) -> Result<Response> {
+        loop {
+            match self.recv()? {
+                Reply::Done(r) => return Ok(r),
+                Reply::Chunk(_) => {}
+            }
+        }
+    }
+}
+
+/// In-process handle: submit requests, receive reply streams, cancel, shut
+/// down.
 pub struct ServerHandle {
     sched: Arc<Scheduler>,
-    pending: Arc<Mutex<HashMap<u64, Sender<Response>>>>,
+    pending: Arc<Mutex<HashMap<u64, Sender<Reply>>>>,
     next_id: AtomicU64,
     pub metrics: Arc<Mutex<Registry>>,
     /// cross-request n-gram caches (None when sharing is disabled).
     pub ngram_caches: Option<Arc<NgramCacheRegistry>>,
+    cancels: Arc<CancelSet>,
     worker_joins: Vec<std::thread::JoinHandle<()>>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
 }
@@ -64,12 +105,15 @@ pub struct ServerHandle {
 impl ServerHandle {
     pub fn start(cfg: ServerConfig) -> Result<ServerHandle> {
         let sched = Arc::new(Scheduler::new(cfg.policy, cfg.queue_depth));
-        let pending: Arc<Mutex<HashMap<u64, Sender<Response>>>> =
+        let pending: Arc<Mutex<HashMap<u64, Sender<Reply>>>> =
             Arc::new(Mutex::new(HashMap::new()));
         let metrics = Arc::new(Mutex::new(Registry::new()));
-        let ngram_caches =
-            cfg.share_ngrams.then(|| Arc::new(NgramCacheRegistry::new()));
-        let (tx, rx): (Sender<Response>, Receiver<Response>) = channel();
+        let cancels = Arc::new(CancelSet::new());
+        let ngram_caches = cfg.share_ngrams.then(|| {
+            let ttl = cfg.ngram_ttl_ms.map(std::time::Duration::from_millis);
+            Arc::new(NgramCacheRegistry::new().with_max_age(ttl))
+        });
+        let (tx, rx): (Sender<Reply>, Receiver<Reply>) = channel();
 
         let mut worker_joins = Vec::new();
         for wid in 0..cfg.workers.max(1) {
@@ -77,8 +121,9 @@ impl ServerHandle {
             let tx_c = tx.clone();
             let wcfg = cfg.worker.clone();
             let caches_c = ngram_caches.clone();
+            let cancels_c = cancels.clone();
             worker_joins.push(std::thread::spawn(move || {
-                match Worker::start(wid, wcfg, caches_c) {
+                match Worker::start(wid, wcfg, caches_c, cancels_c) {
                     Ok(w) => w.run(sched_c, tx_c),
                     Err(e) => eprintln!("[ERROR] worker {wid} failed to start: {e}"),
                 }
@@ -86,37 +131,67 @@ impl ServerHandle {
         }
         drop(tx);
 
-        // dispatcher: route worker responses to the submitting channel
+        // dispatcher: route worker replies to the submitting channel.
+        // Chunks are forwarded without consuming the pending entry; the
+        // Done record removes it and feeds the serving metrics.
         let pending_c = pending.clone();
         let metrics_c = metrics.clone();
+        let cancels_c = cancels.clone();
         let dispatcher = std::thread::spawn(move || {
-            while let Ok(resp) = rx.recv() {
-                {
-                    let mut m = metrics_c.lock().unwrap();
-                    if resp.error.is_none() {
-                        m.inc("responses_ok", 1);
-                        m.inc("tokens_out", resp.tokens as u64);
-                        m.observe("latency_ms", resp.wall_ms);
-                        m.observe("queue_ms", resp.queue_ms);
-                        m.observe("compression", resp.compression);
-                        if resp.pool_shared {
-                            m.inc(
-                                if resp.pool_warm {
-                                    "ngram_warm_requests"
-                                } else {
-                                    "ngram_cold_requests"
-                                },
-                                1,
-                            );
-                            m.observe("pool_hit_rate", resp.pool_hit_rate);
+            while let Ok(reply) = rx.recv() {
+                match reply {
+                    Reply::Chunk(c) => {
+                        let ch = pending_c.lock().unwrap().get(&c.id).cloned();
+                        if let Some(ch) = ch {
+                            let _ = ch.send(Reply::Chunk(c));
                         }
-                    } else {
-                        m.inc("responses_err", 1);
                     }
-                }
-                let reply = pending_c.lock().unwrap().remove(&resp.id);
-                if let Some(ch) = reply {
-                    let _ = ch.send(resp);
+                    Reply::Done(resp) => {
+                        {
+                            let mut m = metrics_c.lock().unwrap();
+                            if resp.error.is_none() {
+                                m.inc("responses_ok", 1);
+                                m.inc("tokens_out", resp.tokens as u64);
+                                m.observe("latency_ms", resp.wall_ms);
+                                m.observe("queue_ms", resp.queue_ms);
+                                m.observe("ttft_ms", resp.ttft_ms);
+                                m.observe("compression", resp.compression);
+                                // per-step accept-length histogram across
+                                // all requests (the paper's S distribution)
+                                for (len, &cnt) in resp.accept_hist.iter().enumerate() {
+                                    for _ in 0..cnt {
+                                        m.observe("accept_len", len as f64);
+                                    }
+                                }
+                                if !resp.finish.is_empty() {
+                                    m.inc(&format!("finish_{}", resp.finish), 1);
+                                }
+                                if resp.pool_shared {
+                                    m.inc(
+                                        if resp.pool_warm {
+                                            "ngram_warm_requests"
+                                        } else {
+                                            "ngram_cold_requests"
+                                        },
+                                        1,
+                                    );
+                                    m.observe("pool_hit_rate", resp.pool_hit_rate);
+                                }
+                            } else {
+                                m.inc("responses_err", 1);
+                            }
+                        }
+                        let ch = pending_c.lock().unwrap().remove(&resp.id);
+                        // clear AFTER removing the pending entry: cancel()
+                        // only marks ids it observed in `pending` (under the
+                        // same lock), so this ordering guarantees any mark
+                        // racing with completion is swept — no stale ids
+                        // accumulate in the CancelSet.
+                        cancels_c.clear(resp.id);
+                        if let Some(ch) = ch {
+                            let _ = ch.send(Reply::Done(resp));
+                        }
+                    }
                 }
             }
         });
@@ -127,6 +202,7 @@ impl ServerHandle {
             next_id: AtomicU64::new(1),
             metrics,
             ngram_caches,
+            cancels,
             worker_joins,
             dispatcher: Some(dispatcher),
         })
@@ -141,8 +217,9 @@ impl ServerHandle {
         s
     }
 
-    /// Submit a request; returns the channel the response will arrive on.
-    pub fn submit(&self, mut req: Request) -> Result<Receiver<Response>> {
+    /// Submit a request; returns the per-request reply stream (chunks for
+    /// `stream: true` requests, then the final record).
+    pub fn submit(&self, mut req: Request) -> Result<ResponseStream> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         req.id = id;
         let (tx, rx) = channel();
@@ -151,9 +228,34 @@ impl ServerHandle {
         if let Err(rejected) = self.sched.push(req) {
             self.pending.lock().unwrap().remove(&id);
             self.metrics.lock().unwrap().inc("rejected", 1);
-            anyhow::bail!("queue full, request {} rejected", rejected.id);
+            bail!("queue full, request {} rejected", rejected.id);
         }
-        Ok(rx)
+        Ok(ResponseStream { id, rx })
+    }
+
+    /// Cancel a request by id. A still-queued request is removed and its
+    /// final record synthesized immediately; an in-flight request is marked
+    /// and its worker stops it within one decode step (the final record
+    /// then carries the partial text and `"finish":"cancelled"`). Returns
+    /// false when the id is unknown or already finished.
+    pub fn cancel(&self, id: u64) -> bool {
+        if self.sched.cancel(id) {
+            self.metrics.lock().unwrap().inc("finish_cancelled", 1);
+            if let Some(ch) = self.pending.lock().unwrap().remove(&id) {
+                let _ = ch.send(Reply::Done(Response::cancelled(id)));
+            }
+            return true;
+        }
+        // Mark while holding the pending lock: the dispatcher removes the
+        // pending entry (same lock) before clearing marks, so a mark set
+        // here for a still-pending request is either observed by the worker
+        // or swept by the dispatcher's clear — never left behind.
+        let pending = self.pending.lock().unwrap();
+        if pending.contains_key(&id) {
+            self.cancels.request(id);
+            return true;
+        }
+        false
     }
 
     pub fn queue_depth(&self) -> usize {
@@ -215,23 +317,63 @@ fn handle_conn(stream: TcpStream, handle: &ServerHandle) -> Result<()> {
         if line.trim().is_empty() {
             continue;
         }
-        let resp = match Request::from_json_line(0, &line) {
-            Ok(req) => match handle.submit(req) {
-                Ok(rx) => rx.recv().unwrap_or_else(|_| {
-                    Response::err(0, "server shutting down".into())
-                }),
-                Err(e) => Response::err(0, e.to_string()),
+        // control line: {"cancel": <id>} — ids are reported in every chunk
+        // and final record, so streaming clients can cancel from a second
+        // connection.
+        let parsed = Json::parse(&line);
+        if let Ok(j) = &parsed {
+            if let Some(cid) = j.get("cancel").and_then(Json::as_usize) {
+                let ok = handle.cancel(cid as u64);
+                let ack = Json::obj(vec![
+                    ("cancel", Json::num(cid as f64)),
+                    ("ok", Json::Bool(ok)),
+                ]);
+                out.write_all(ack.dump().as_bytes())?;
+                out.write_all(b"\n")?;
+                out.flush()?;
+                continue;
+            }
+        }
+        let submitted = parsed
+            .map_err(|e| anyhow::anyhow!("bad request json: {e}"))
+            .and_then(|j| Request::from_json(0, &j))
+            .and_then(|req| handle.submit(req));
+        match submitted {
+            Ok(rs) => loop {
+                match rs.recv() {
+                    Ok(Reply::Chunk(c)) => {
+                        out.write_all(c.to_json_line().as_bytes())?;
+                        out.write_all(b"\n")?;
+                        out.flush()?;
+                    }
+                    Ok(Reply::Done(r)) => {
+                        out.write_all(r.to_json_line().as_bytes())?;
+                        out.write_all(b"\n")?;
+                        out.flush()?;
+                        break;
+                    }
+                    Err(_) => {
+                        let r = Response::err(0, "server shutting down".into());
+                        out.write_all(r.to_json_line().as_bytes())?;
+                        out.write_all(b"\n")?;
+                        out.flush()?;
+                        break;
+                    }
+                }
             },
-            Err(e) => Response::err(0, e.to_string()),
-        };
-        out.write_all(resp.to_json_line().as_bytes())?;
-        out.write_all(b"\n")?;
-        out.flush()?;
+            Err(e) => {
+                let r = Response::err(0, e.to_string());
+                out.write_all(r.to_json_line().as_bytes())?;
+                out.write_all(b"\n")?;
+                out.flush()?;
+            }
+        }
     }
     Ok(())
 }
 
-/// Minimal client for the JSON-lines protocol (examples + CLI).
+/// Minimal client for the JSON-lines protocol (examples + CLI): one request,
+/// one final line (non-streaming).
 pub fn client_request(addr: &str, req_json: &str) -> Result<String> {
     let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
     stream.write_all(req_json.as_bytes())?;
@@ -241,4 +383,32 @@ pub fn client_request(addr: &str, req_json: &str) -> Result<String> {
     let mut line = String::new();
     reader.read_line(&mut line)?;
     Ok(line.trim_end().to_string())
+}
+
+/// Streaming client: sends one request, invokes `on_chunk` for every chunk
+/// line, returns the final (`"done":true`) record line.
+pub fn client_request_stream(addr: &str, req_json: &str,
+                             mut on_chunk: impl FnMut(&str)) -> Result<String> {
+    let mut stream =
+        TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    stream.write_all(req_json.as_bytes())?;
+    stream.write_all(b"\n")?;
+    stream.flush()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        line.clear();
+        if reader.read_line(&mut line)? == 0 {
+            bail!("connection closed before the final record");
+        }
+        let t = line.trim_end();
+        let done = Json::parse(t)
+            .ok()
+            .and_then(|j| j.get("done").and_then(Json::as_bool))
+            .unwrap_or(true);
+        if done {
+            return Ok(t.to_string());
+        }
+        on_chunk(t);
+    }
 }

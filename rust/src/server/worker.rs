@@ -2,11 +2,18 @@
 //! and a cache of decoder instances (the PJRT client is not Send — per-thread
 //! ownership is mandatory, and it also mirrors lookahead parallelism's
 //! full-model-per-device design).
+//!
+//! Scheduling: instead of running one request to completion, a worker keeps
+//! up to `max_live` open [`DecodeSession`]s and round-robins a configurable
+//! time-slice of decode steps across them. Long generations therefore no
+//! longer block short ones behind them (the single-worker head-of-line
+//! case), streaming requests emit chunks as steps commit, and cancellation
+//! is observed between steps — a cancelled request stops within one step.
 
-use std::collections::hash_map::Entry;
 use std::collections::HashMap;
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
@@ -15,13 +22,13 @@ use crate::engine::jacobi::Jacobi;
 use crate::engine::lookahead::Lookahead;
 use crate::engine::prompt_lookup::PromptLookup;
 use crate::engine::spec_decode::SpecDecode;
-use crate::engine::Decoder;
+use crate::engine::{Decoder, DecodeSession, FinishReason, StepOutcome};
 use crate::info;
 use crate::ngram::{NgramCacheRegistry, PoolHandle};
 use crate::runtime::{cpu_client, Manifest, ModelRuntime};
-use crate::server::request::{Request, Response};
-use crate::server::scheduler::Scheduler;
-use crate::tokenizer::ByteTokenizer;
+use crate::server::request::{Reply, Request, Response, StreamChunk};
+use crate::server::scheduler::{CancelSet, Popped, Scheduler};
+use crate::tokenizer::{ByteTokenizer, Utf8StreamDecoder};
 
 #[derive(Debug, Clone)]
 pub struct WorkerConfig {
@@ -30,6 +37,10 @@ pub struct WorkerConfig {
     /// default (W,N,G) when the request does not override it
     pub wng: (usize, usize, usize),
     pub draft_model: String,
+    /// decode steps each live session gets per scheduling round.
+    pub time_slice: usize,
+    /// max concurrently interleaved sessions per worker.
+    pub max_live: usize,
 }
 
 impl Default for WorkerConfig {
@@ -39,8 +50,22 @@ impl Default for WorkerConfig {
             model: "tiny".into(),
             wng: (5, 3, 5),
             draft_model: "draft".into(),
+            time_slice: 4,
+            max_live: 4,
         }
     }
+}
+
+/// One open request on a worker: the session plus its streaming state.
+struct LiveSession<'rt> {
+    id: u64,
+    stream: bool,
+    queued_ms: f64,
+    seq: u64,
+    dec: Utf8StreamDecoder,
+    deadline: Option<Instant>,
+    sess: Box<dyn DecodeSession + 'rt>,
+    error: Option<String>,
 }
 
 pub struct Worker {
@@ -48,15 +73,17 @@ pub struct Worker {
     cfg: WorkerConfig,
     manifest: Manifest,
     rt: ModelRuntime,
-    engines: HashMap<String, Box<dyn Decoder>>,
     tok: ByteTokenizer,
     /// server-level shared n-gram caches (None = sharing disabled).
     ngram_caches: Option<Arc<NgramCacheRegistry>>,
+    /// server-level cancellation marks, checked between steps.
+    cancels: Arc<CancelSet>,
 }
 
 impl Worker {
     pub fn start(id: usize, cfg: WorkerConfig,
-                 ngram_caches: Option<Arc<NgramCacheRegistry>>) -> Result<Worker> {
+                 ngram_caches: Option<Arc<NgramCacheRegistry>>,
+                 cancels: Arc<CancelSet>) -> Result<Worker> {
         let manifest = Manifest::load(&cfg.artifacts_dir)?;
         let client = cpu_client()?;
         let rt = ModelRuntime::load(&client, &manifest, &cfg.model)?;
@@ -65,21 +92,19 @@ impl Worker {
             cfg,
             manifest,
             rt,
-            engines: HashMap::new(),
             tok: ByteTokenizer::new(),
             ngram_caches,
+            cancels,
         })
     }
 
-    fn engine_key(&self, req: &Request) -> String {
+    fn engine_key(req: &Request) -> String {
         match (&req.method[..], req.wng) {
             ("lookahead", Some((w, n, g))) => format!("lookahead:{w},{n},{g}"),
             (m, _) => m.to_string(),
         }
     }
 
-    /// (Associated fn over disjoint fields so `handle` can call it while
-    /// holding the engine-map entry.)
     fn make_engine(cfg: &WorkerConfig, manifest: &Manifest, rt: &ModelRuntime,
                    req: &Request) -> Result<Box<dyn Decoder>> {
         let (w, n, g) = req.wng.unwrap_or(cfg.wng);
@@ -97,9 +122,9 @@ impl Worker {
     }
 
     /// Token budget: keep the BOS + the most recent prompt bytes that fit.
-    fn encode_prompt(&self, prompt: &str) -> Vec<u32> {
-        let mut ids = self.tok.encode_with_bos(prompt);
-        let cap = self.rt.prefill_len;
+    fn encode_prompt(tok: &ByteTokenizer, rt: &ModelRuntime, prompt: &str) -> Vec<u32> {
+        let mut ids = tok.encode_with_bos(prompt);
+        let cap = rt.prefill_len;
         if ids.len() > cap {
             let tail = ids.len() - (cap - 1);
             let mut v = vec![crate::tokenizer::BOS_ID];
@@ -120,8 +145,6 @@ impl Worker {
     /// sequence depends on which candidates the cache holds — a warm cache
     /// would silently break seeded reproducibility. An explicit
     /// `share_ngrams: true` on the request still opts in.
-    /// (Associated fn: `handle` calls it while holding `&mut` on the engine
-    /// map.)
     fn bind_pool_for(cfg: &WorkerConfig, caches: &Option<Arc<NgramCacheRegistry>>,
                      req: &Request, engine: &dyn Decoder) -> PoolHandle {
         let Some(spec) = engine.pool_spec() else {
@@ -135,35 +158,152 @@ impl Worker {
         }
     }
 
-    pub fn handle(&mut self, req: &Request, queued_ms: f64) -> Response {
-        let key = self.engine_key(req);
-        let ids = self.encode_prompt(&req.prompt);
-        let engine = match self.engines.entry(key) {
-            Entry::Occupied(e) => e.into_mut(),
-            Entry::Vacant(v) => {
-                match Self::make_engine(&self.cfg, &self.manifest, &self.rt, req) {
-                    Ok(e) => v.insert(e),
-                    Err(e) => return Response::err(req.id, e.to_string()),
-                }
-            }
-        };
-        let mut pool = Self::bind_pool_for(&self.cfg, &self.ngram_caches, req,
-                                           engine.as_ref());
-        match engine.generate_with_pool(&self.rt, &ids, &req.gen_params(), &mut pool) {
-            Ok(out) => Response::ok(req.id, out.text, &out.stats, queued_ms),
-            Err(e) => Response::err(req.id, e.to_string()),
+    /// Open a session for a popped request. Engines are cached per
+    /// (method, wng) key; sessions never borrow the engine, so one cached
+    /// engine can back several interleaved sessions.
+    fn open<'rt>(cfg: &WorkerConfig, manifest: &Manifest, rt: &'rt ModelRuntime,
+                 engines: &mut HashMap<String, Box<dyn Decoder>>,
+                 caches: &Option<Arc<NgramCacheRegistry>>, tok: &ByteTokenizer,
+                 popped: Popped) -> Result<LiveSession<'rt>, (u64, String)> {
+        let req = popped.req;
+        let rid = req.id;
+        let key = Self::engine_key(&req);
+        if !engines.contains_key(&key) {
+            let engine = Self::make_engine(cfg, manifest, rt, &req)
+                .map_err(|e| (rid, e.to_string()))?;
+            engines.insert(key.clone(), engine);
         }
+        let engine = engines.get(&key).unwrap();
+        let ids = Self::encode_prompt(tok, rt, &req.prompt);
+        let pool = Self::bind_pool_for(cfg, caches, &req, engine.as_ref());
+        let sess = engine
+            .begin(rt, &ids, &req.gen_params(), pool)
+            .map_err(|e| (rid, e.to_string()))?;
+        Ok(LiveSession {
+            id: rid,
+            stream: req.stream,
+            queued_ms: popped.queued_ms,
+            seq: 0,
+            dec: Utf8StreamDecoder::new(),
+            deadline: req.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms)),
+            sess,
+            error: None,
+        })
     }
 
-    /// Worker main loop: drain the scheduler until it closes.
-    pub fn run(mut self, sched: Arc<Scheduler>, replies: Sender<Response>) {
-        info!("worker", "worker {} ready (model={})", self.id, self.cfg.model);
-        while let Some(popped) = sched.pop() {
-            let resp = self.handle(&popped.req, popped.queued_ms);
-            if replies.send(resp).is_err() {
-                break; // server gone
+    /// Run one time-slice for a session: up to `slice` steps, checking
+    /// cancellation and the deadline before each. Emits streaming chunks.
+    /// Returns true when the session is ready to retire.
+    fn drive(ls: &mut LiveSession, slice: usize, tok: &ByteTokenizer,
+             cancels: &CancelSet, replies: &Sender<Reply>) -> bool {
+        for _ in 0..slice {
+            if ls.sess.finished().is_some() {
+                return true;
+            }
+            if cancels.contains(ls.id) {
+                ls.sess.cancel(FinishReason::Cancelled);
+                return true;
+            }
+            if let Some(d) = ls.deadline {
+                if Instant::now() >= d {
+                    ls.sess.cancel(FinishReason::Deadline);
+                    return true;
+                }
+            }
+            match ls.sess.step() {
+                Ok(StepOutcome::Committed { tokens }) => {
+                    if ls.stream && !tokens.is_empty() {
+                        let delta = ls.dec.push(&tok.bytes(&tokens));
+                        if !delta.is_empty() {
+                            ls.seq += 1;
+                            let _ = replies.send(Reply::Chunk(StreamChunk {
+                                id: ls.id,
+                                seq: ls.seq,
+                                delta,
+                            }));
+                        }
+                    }
+                }
+                Ok(StepOutcome::Finished { .. }) => return true,
+                Err(e) => {
+                    ls.error = Some(e.to_string());
+                    return true;
+                }
             }
         }
-        info!("worker", "worker {} shutting down", self.id);
+        ls.sess.finished().is_some()
+    }
+
+    /// Deliver the final record for a finished/cancelled/failed session.
+    /// Returns false when the reply channel is gone (server shut down).
+    fn retire(ls: LiveSession, cancels: &CancelSet, replies: &Sender<Reply>) -> bool {
+        cancels.clear(ls.id);
+        let LiveSession { id, stream, queued_ms, mut dec, seq, sess, error, .. } = ls;
+        if let Some(msg) = error {
+            return replies.send(Reply::Done(Response::err(id, msg))).is_ok();
+        }
+        let finish = sess.finished().map_or("", |r| r.as_str());
+        let (out, _pool) = sess.into_output();
+        if stream {
+            // flush any held-back partial UTF-8 sequence as a last chunk
+            let tail = dec.finish();
+            if !tail.is_empty() {
+                let _ = replies.send(Reply::Chunk(StreamChunk {
+                    id,
+                    seq: seq + 1,
+                    delta: tail,
+                }));
+            }
+        }
+        let resp = Response::ok(id, out.text, &out.stats, queued_ms).with_finish(finish);
+        replies.send(Reply::Done(resp)).is_ok()
+    }
+
+    /// Worker main loop: admit up to `max_live` sessions (blocking on the
+    /// scheduler only when idle), then round-robin `time_slice` steps per
+    /// session per round until the scheduler closes and all sessions drain.
+    pub fn run(self, sched: Arc<Scheduler>, replies: Sender<Reply>) {
+        info!("worker", "worker {} ready (model={}, time_slice={}, max_live={})",
+              self.id, self.cfg.model, self.cfg.time_slice, self.cfg.max_live);
+        let Worker { id, cfg, manifest, rt, tok, ngram_caches, cancels } = self;
+        let max_live = cfg.max_live.max(1);
+        let slice = cfg.time_slice.max(1);
+        let mut engines: HashMap<String, Box<dyn Decoder>> = HashMap::new();
+        let mut live: Vec<LiveSession<'_>> = Vec::new();
+        'serve: loop {
+            // -- admission: top up the live set ------------------------------
+            while live.len() < max_live {
+                let popped = if live.is_empty() { sched.pop() } else { sched.try_pop() };
+                let Some(popped) = popped else {
+                    if live.is_empty() {
+                        break 'serve; // scheduler closed and drained
+                    }
+                    break; // queue momentarily empty; keep stepping
+                };
+                match Self::open(&cfg, &manifest, &rt, &mut engines, &ngram_caches,
+                                 &tok, popped) {
+                    Ok(ls) => live.push(ls),
+                    Err((rid, msg)) => {
+                        cancels.clear(rid);
+                        if replies.send(Reply::Done(Response::err(rid, msg))).is_err() {
+                            break 'serve;
+                        }
+                    }
+                }
+            }
+            // -- one scheduling round: a slice per live session --------------
+            let mut i = 0;
+            while i < live.len() {
+                if Self::drive(&mut live[i], slice, &tok, &cancels, &replies) {
+                    let ls = live.swap_remove(i);
+                    if !Self::retire(ls, &cancels, &replies) {
+                        break 'serve; // server gone
+                    }
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        info!("worker", "worker {} shutting down", id);
     }
 }

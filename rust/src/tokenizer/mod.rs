@@ -32,16 +32,89 @@ impl ByteTokenizer {
         v
     }
 
+    /// Raw bytes of a token sequence; specials are dropped. This is THE
+    /// token→byte mapping — the streaming path feeds these bytes through a
+    /// [`Utf8StreamDecoder`] and must agree with [`ByteTokenizer::decode`]
+    /// byte-for-byte, so both go through here.
+    pub fn bytes(&self, ids: &[u32]) -> Vec<u8> {
+        ids.iter().filter(|&&t| t < VOCAB_BYTES).map(|&t| t as u8).collect()
+    }
+
     /// Decode ids back to text; specials are dropped, non-UTF8 byte runs are
     /// replaced (lossy) — generation can emit arbitrary bytes.
     pub fn decode(&self, ids: &[u32]) -> String {
-        let bytes: Vec<u8> =
-            ids.iter().filter(|&&t| t < VOCAB_BYTES).map(|&t| t as u8).collect();
-        String::from_utf8_lossy(&bytes).into_owned()
+        String::from_utf8_lossy(&self.bytes(ids)).into_owned()
     }
 
     pub fn is_special(&self, id: u32) -> bool {
         id >= VOCAB_BYTES
+    }
+}
+
+/// Incremental lossy UTF-8 decoder for streaming deltas.
+///
+/// Token commits can split a multi-byte UTF-8 sequence across two decode
+/// steps; naively lossy-decoding each step's bytes would emit U+FFFD where
+/// the one-shot decode emits a real character. This decoder holds back an
+/// incomplete trailing sequence (at most 3 bytes) and replaces genuinely
+/// invalid sequences exactly like `String::from_utf8_lossy`, so the
+/// concatenation of every `push()` return value plus `finish()` is
+/// byte-identical to the one-shot lossy decode of the whole stream — the
+/// invariant the streaming-equivalence suite checks.
+#[derive(Debug, Clone, Default)]
+pub struct Utf8StreamDecoder {
+    pending: Vec<u8>,
+}
+
+impl Utf8StreamDecoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Feed bytes; returns the text completed by this chunk.
+    pub fn push(&mut self, bytes: &[u8]) -> String {
+        self.pending.extend_from_slice(bytes);
+        let mut out = String::new();
+        let mut i = 0;
+        loop {
+            match std::str::from_utf8(&self.pending[i..]) {
+                Ok(s) => {
+                    out.push_str(s);
+                    i = self.pending.len();
+                    break;
+                }
+                Err(e) => {
+                    let valid = e.valid_up_to();
+                    out.push_str(
+                        std::str::from_utf8(&self.pending[i..i + valid]).unwrap(),
+                    );
+                    match e.error_len() {
+                        // invalid sequence: replace it, like from_utf8_lossy
+                        Some(bad) => {
+                            out.push('\u{FFFD}');
+                            i += valid + bad;
+                        }
+                        // incomplete trailing sequence: hold it back
+                        None => {
+                            i += valid;
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        self.pending.drain(..i);
+        out
+    }
+
+    /// Flush the held-back tail (lossy) at end of stream.
+    pub fn finish(&mut self) -> String {
+        if self.pending.is_empty() {
+            return String::new();
+        }
+        let out = String::from_utf8_lossy(&self.pending).into_owned();
+        self.pending.clear();
+        out
     }
 }
 
@@ -75,6 +148,67 @@ mod tests {
         let t = ByteTokenizer::new();
         let s = "héllo → 世界";
         assert_eq!(t.decode(&t.encode(s)), s);
+    }
+
+    #[test]
+    fn stream_decoder_holds_back_split_multibyte() {
+        let s = "héllo → 世界";
+        let bytes = s.as_bytes();
+        let mut d = Utf8StreamDecoder::new();
+        // feed one byte at a time: every multi-byte char crosses a boundary
+        let mut out = String::new();
+        for &b in bytes {
+            out.push_str(&d.push(&[b]));
+        }
+        out.push_str(&d.finish());
+        assert_eq!(out, s);
+    }
+
+    #[test]
+    fn stream_decoder_replaces_invalid_like_lossy() {
+        let bytes: &[u8] = &[0x68, 0xFF, 0x69, 0xE4, 0xB8]; // h <bad> i <incomplete>
+        let mut d = Utf8StreamDecoder::new();
+        let mut out = d.push(&bytes[..2]);
+        out.push_str(&d.push(&bytes[2..]));
+        out.push_str(&d.finish());
+        assert_eq!(out, String::from_utf8_lossy(bytes));
+    }
+
+    #[test]
+    fn prop_stream_decode_matches_one_shot_lossy() {
+        use crate::util::rng::Rng;
+        // any byte stream, any chunking: concat(push*) + finish == lossy
+        forall(
+            300,
+            29,
+            |r: &mut Rng| {
+                let bytes: Vec<u32> =
+                    (0..r.range(0, 48)).map(|_| r.below(256) as u32).collect();
+                let cuts: Vec<u32> =
+                    (0..r.range(0, 8)).map(|_| r.below(49) as u32).collect();
+                (bytes, cuts)
+            },
+            |(bytes, cuts)| {
+                let bytes: Vec<u8> = bytes.iter().map(|&b| b as u8).collect();
+                let mut cuts: Vec<usize> =
+                    cuts.iter().map(|&c| (c as usize).min(bytes.len())).collect();
+                cuts.push(0);
+                cuts.push(bytes.len());
+                cuts.sort();
+                let mut d = Utf8StreamDecoder::new();
+                let mut out = String::new();
+                for w in cuts.windows(2) {
+                    out.push_str(&d.push(&bytes[w[0]..w[1]]));
+                }
+                out.push_str(&d.finish());
+                let want = String::from_utf8_lossy(&bytes).into_owned();
+                if out == want {
+                    Ok(())
+                } else {
+                    Err(format!("{out:?} != {want:?}"))
+                }
+            },
+        );
     }
 
     #[test]

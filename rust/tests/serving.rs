@@ -19,6 +19,7 @@ fn cfg() -> ServerConfig {
         policy: Policy::Fifo,
         queue_depth: 64,
         share_ngrams: true,
+        ngram_ttl_ms: None,
         worker: WorkerConfig {
             artifacts_dir: "artifacts".into(),
             model: "tiny".into(),
@@ -41,10 +42,11 @@ fn inprocess_serving_roundtrip() {
             ..Default::default()
         })
         .unwrap();
-    let resp = rx.recv().unwrap();
+    let resp = rx.wait().unwrap();
     assert!(resp.error.is_none(), "{:?}", resp.error);
     assert!(resp.tokens > 0);
     assert!(resp.compression >= 1.0);
+    assert!(!resp.finish.is_empty(), "finish reason must be reported");
     let m = h.metrics.lock().unwrap().counter("responses_ok");
     assert_eq!(m, 1);
     h.shutdown();
@@ -70,7 +72,7 @@ fn serving_multiple_requests_and_methods() {
     }
     // same prompt+greedy across exact methods must give identical text
     let texts: Vec<String> = rxs.into_iter().map(|rx| {
-        let r = rx.recv().unwrap();
+        let r = rx.wait().unwrap();
         assert!(r.error.is_none(), "{:?}", r.error);
         r.text
     }).collect();
@@ -89,7 +91,7 @@ fn unknown_method_reports_error() {
         method: "warp_drive".into(),
         ..Default::default()
     }).unwrap();
-    let resp = rx.recv().unwrap();
+    let resp = rx.wait().unwrap();
     assert!(resp.error.is_some());
     h.shutdown();
 }

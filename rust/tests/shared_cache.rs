@@ -134,6 +134,7 @@ fn server_cfg(share: bool) -> ServerConfig {
         policy: Policy::Fifo,
         queue_depth: 64,
         share_ngrams: share,
+        ngram_ttl_ms: None,
         worker: WorkerConfig {
             artifacts_dir: "artifacts".into(),
             model: "tiny".into(),
@@ -156,8 +157,8 @@ fn share_toggle_through_scheduler_and_worker() {
 
     // sharing on: the second identical request starts warm
     let h = ServerHandle::start(server_cfg(true)).unwrap();
-    let r1 = h.submit(req(prompt)).unwrap().recv().unwrap();
-    let r2 = h.submit(req(prompt)).unwrap().recv().unwrap();
+    let r1 = h.submit(req(prompt)).unwrap().wait().unwrap();
+    let r2 = h.submit(req(prompt)).unwrap().wait().unwrap();
     assert!(r1.error.is_none() && r2.error.is_none(), "{:?} {:?}", r1.error, r2.error);
     assert!(r1.pool_shared && r2.pool_shared);
     assert!(!r1.pool_warm, "first request must be cold");
@@ -170,7 +171,7 @@ fn share_toggle_through_scheduler_and_worker() {
     // per-request opt-out under a sharing server
     let mut opt_out = req(prompt);
     opt_out.share_ngrams = Some(false);
-    let r3 = h.submit(opt_out).unwrap().recv().unwrap();
+    let r3 = h.submit(opt_out).unwrap().wait().unwrap();
     assert!(r3.error.is_none(), "{:?}", r3.error);
     assert!(!r3.pool_shared && !r3.pool_warm);
     assert_eq!(r3.text, r1.text);
@@ -180,7 +181,7 @@ fn share_toggle_through_scheduler_and_worker() {
     let mut sampled = req(prompt);
     sampled.temperature = 0.8;
     sampled.seed = 7;
-    let r4 = h.submit(sampled).unwrap().recv().unwrap();
+    let r4 = h.submit(sampled).unwrap().wait().unwrap();
     assert!(r4.error.is_none(), "{:?}", r4.error);
     assert!(!r4.pool_shared, "sampled request must not share by default");
     h.shutdown();
@@ -188,8 +189,8 @@ fn share_toggle_through_scheduler_and_worker() {
     // sharing off: repeat requests stay cold
     let h = ServerHandle::start(server_cfg(false)).unwrap();
     assert!(h.ngram_caches.is_none());
-    let r1 = h.submit(req(prompt)).unwrap().recv().unwrap();
-    let r2 = h.submit(req(prompt)).unwrap().recv().unwrap();
+    let r1 = h.submit(req(prompt)).unwrap().wait().unwrap();
+    let r2 = h.submit(req(prompt)).unwrap().wait().unwrap();
     assert!(r1.error.is_none() && r2.error.is_none());
     assert!(!r1.pool_shared && !r2.pool_shared);
     assert!(!r2.pool_warm, "sharing disabled but second request was warm");

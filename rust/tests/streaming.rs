@@ -1,0 +1,311 @@
+//! Streaming-equivalence suite for the resumable `DecodeSession` API.
+//!
+//! Core claims verified end-to-end against real artifacts:
+//!   1. For EVERY engine, the concatenation of per-step `Committed` deltas
+//!      (tokens and incrementally-decoded text) is byte-identical to the
+//!      one-shot `generate()` output for the same seed.
+//!   2. A worker interleaves >= 2 concurrent sessions under a time-slice:
+//!      a short request submitted behind a long one finishes first.
+//!   3. Cancelling mid-generation stops within one step and still yields a
+//!      well-formed final record with the partial text.
+//!   4. Time-to-first-token is recorded on sessions and served responses.
+//!
+//! Every runtime-dependent test skips when `artifacts/` is absent (CI runs
+//! without PJRT).
+
+use lookahead::engine::autoregressive::AutoRegressive;
+use lookahead::engine::jacobi::Jacobi;
+use lookahead::engine::lookahead::Lookahead;
+use lookahead::engine::prompt_lookup::PromptLookup;
+use lookahead::engine::spec_decode::SpecDecode;
+use lookahead::engine::{Decoder, FinishReason, GenParams, StepOutcome};
+use lookahead::ngram::PoolHandle;
+use lookahead::runtime::{cpu_client, Manifest, ModelRuntime};
+use lookahead::server::{Policy, Reply, Request, ServerConfig, ServerHandle,
+                        WorkerConfig};
+use lookahead::tokenizer::{ByteTokenizer, Utf8StreamDecoder};
+
+/// Skip (returning true) when the AOT artifacts are not built.
+fn no_artifacts() -> bool {
+    lookahead::bench::skip_without_artifacts(module_path!())
+}
+
+fn setup() -> (Manifest, ModelRuntime) {
+    let manifest = Manifest::load("artifacts").expect("run `make artifacts` first");
+    let client = cpu_client().unwrap();
+    let rt = ModelRuntime::load(&client, &manifest, "tiny").unwrap();
+    (manifest, rt)
+}
+
+fn engines(manifest: &Manifest, rt: &ModelRuntime) -> Vec<Box<dyn Decoder>> {
+    let draft = ModelRuntime::load(&rt.client, manifest, "draft").unwrap();
+    vec![
+        Box::new(AutoRegressive::new()),
+        Box::new(Lookahead::with_wng(5, 3, 5)),
+        Box::new(Jacobi::new(8)),
+        Box::new(PromptLookup::new(8, 1)),
+        Box::new(SpecDecode::new(draft, 4)),
+    ]
+}
+
+/// Drive a session to completion, returning (token deltas, streamed text).
+fn drive_session(engine: &dyn Decoder, rt: &ModelRuntime, prompt: &[u32],
+                 params: &GenParams) -> (Vec<u32>, String, FinishReason) {
+    let tok = ByteTokenizer::new();
+    let pool = PoolHandle::for_spec(engine.pool_spec());
+    let mut sess = engine.begin(rt, prompt, params, pool).unwrap();
+    let mut toks: Vec<u32> = Vec::new();
+    let mut dec = Utf8StreamDecoder::new();
+    let mut text = String::new();
+    let reason = loop {
+        match sess.step().unwrap() {
+            StepOutcome::Committed { tokens } => {
+                text.push_str(&dec.push(&tok.bytes(&tokens)));
+                toks.extend(tokens);
+            }
+            StepOutcome::Finished { reason } => break reason,
+        }
+    };
+    text.push_str(&dec.finish());
+    assert_eq!(sess.tokens(), &toks[..], "session token log != deltas");
+    (toks, text, reason)
+}
+
+#[test]
+fn step_deltas_match_one_shot_for_every_engine() {
+    if no_artifacts() {
+        return;
+    }
+    let (manifest, rt) = setup();
+    let tok = ByteTokenizer::new();
+    let prompt = tok.encode_with_bos("def add_ab(a, b):\n    result = a");
+    let params = GenParams { max_new_tokens: 48, ..Default::default() };
+    for mut engine in engines(&manifest, &rt) {
+        let one = engine.generate(&rt, &prompt, &params).unwrap();
+        let (toks, text, _) = drive_session(engine.as_ref(), &rt, &prompt, &params);
+        assert_eq!(toks, one.tokens, "{}: step deltas diverged from one-shot",
+                   engine.name());
+        assert_eq!(text, one.text, "{}: streamed text diverged from one-shot",
+                   engine.name());
+        assert_eq!(one.stats.generated_tokens, one.tokens.len(),
+                   "{}: stats disagree with output length", engine.name());
+    }
+}
+
+#[test]
+fn session_stats_match_one_shot_for_lookahead() {
+    if no_artifacts() {
+        return;
+    }
+    let (_, rt) = setup();
+    let tok = ByteTokenizer::new();
+    let prompt = tok.encode_with_bos("Q: what is 12 + 34?\n");
+    let params = GenParams { max_new_tokens: 32, ..Default::default() };
+    let mut engine = Lookahead::with_wng(5, 3, 5);
+    let one = engine.generate(&rt, &prompt, &params).unwrap();
+
+    let pool = PoolHandle::for_spec(engine.pool_spec());
+    let mut sess = engine.begin(&rt, &prompt, &params, pool).unwrap();
+    while sess.finished().is_none() {
+        sess.step().unwrap();
+    }
+    let (out, _pool) = sess.into_output();
+    assert_eq!(out.tokens, one.tokens);
+    assert_eq!(out.stats.generated_tokens, one.stats.generated_tokens);
+    assert_eq!(out.stats.decode_steps, one.stats.decode_steps);
+    assert_eq!(out.stats.accepted_by_len, one.stats.accepted_by_len);
+    assert!(out.stats.ttft > std::time::Duration::ZERO, "ttft not recorded");
+    assert!(out.stats.ttft <= out.stats.wall, "ttft beyond total wall");
+}
+
+#[test]
+fn session_cancel_yields_partial_output() {
+    if no_artifacts() {
+        return;
+    }
+    let (_, rt) = setup();
+    let tok = ByteTokenizer::new();
+    let prompt = tok.encode_with_bos("def add_ab(a, b):\n    result = a");
+    let params = GenParams { max_new_tokens: 64, ..Default::default() };
+    let engine = AutoRegressive::new();
+    let mut sess = engine.begin(&rt, &prompt, &params, PoolHandle::none()).unwrap();
+    sess.step().unwrap();
+    let before = sess.tokens().len();
+    assert!(before > 0);
+    sess.cancel(FinishReason::Cancelled);
+    // cancelled session stops within one step: no further tokens
+    assert_eq!(sess.step().unwrap(),
+               StepOutcome::Finished { reason: FinishReason::Cancelled });
+    assert_eq!(sess.tokens().len(), before);
+    let (out, _) = sess.into_output();
+    assert_eq!(out.tokens.len(), before);
+    assert_eq!(out.stats.generated_tokens, before);
+}
+
+// ---------------------------------------------------------------------------
+// serving-layer tests: interleave, streaming wire, cancel, deadline, ttft
+// ---------------------------------------------------------------------------
+
+fn cfg(max_live: usize, time_slice: usize) -> ServerConfig {
+    ServerConfig {
+        workers: 1,
+        policy: Policy::Fifo,
+        queue_depth: 64,
+        share_ngrams: true,
+        ngram_ttl_ms: None,
+        worker: WorkerConfig {
+            artifacts_dir: "artifacts".into(),
+            model: "tiny".into(),
+            wng: (5, 3, 5),
+            time_slice,
+            max_live,
+            ..WorkerConfig::default()
+        },
+    }
+}
+
+fn req(prompt: &str, max_tokens: usize) -> Request {
+    Request { prompt: prompt.into(), max_tokens, ..Default::default() }
+}
+
+#[test]
+fn streaming_chunks_concatenate_to_final_text() {
+    if no_artifacts() {
+        return;
+    }
+    let h = ServerHandle::start(cfg(2, 2)).unwrap();
+    let mut r = req("def add_ab(a, b):\n    result = a", 32);
+    r.stream = true;
+    let rs = h.submit(r).unwrap();
+    let mut streamed = String::new();
+    let mut chunks = 0usize;
+    let mut last_seq = 0u64;
+    let done = loop {
+        match rs.recv().unwrap() {
+            Reply::Chunk(c) => {
+                assert!(c.seq > last_seq, "chunk seq must increase");
+                last_seq = c.seq;
+                chunks += 1;
+                streamed.push_str(&c.delta);
+            }
+            Reply::Done(resp) => break resp,
+        }
+    };
+    assert!(done.error.is_none(), "{:?}", done.error);
+    assert!(chunks > 1, "a 32-token generation must stream multiple chunks");
+    assert_eq!(streamed, done.text,
+               "concatenated chunk deltas must equal the final text");
+    assert!(done.ttft_ms > 0.0, "ttft must be recorded");
+    assert!(done.ttft_ms <= done.wall_ms + 1e-6);
+    assert!(!done.finish.is_empty(), "final record must carry a finish reason");
+    h.shutdown();
+}
+
+#[test]
+fn worker_interleaves_concurrent_sessions() {
+    if no_artifacts() {
+        return;
+    }
+    // one worker, two live session slots, one step per slice: the short
+    // request submitted AFTER the long one must finish first — impossible
+    // under run-to-completion serving.
+    let h = ServerHandle::start(cfg(2, 1)).unwrap();
+    let long = h.submit(req("def add_ab(a, b):\n    result = a", 192)).unwrap();
+    let short = h.submit(req("Q: what is 12 + 34?\n", 4)).unwrap();
+    let short_resp = short.wait().unwrap();
+    assert!(short_resp.error.is_none(), "{:?}", short_resp.error);
+    assert!(
+        long.try_recv().is_none(),
+        "long request finished before the short one: worker did not interleave"
+    );
+    let long_resp = long.wait().unwrap();
+    assert!(long_resp.error.is_none(), "{:?}", long_resp.error);
+    assert!(long_resp.tokens > short_resp.tokens);
+    h.shutdown();
+}
+
+#[test]
+fn cancel_in_flight_stops_with_partial_record() {
+    if no_artifacts() {
+        return;
+    }
+    let h = ServerHandle::start(cfg(2, 1)).unwrap();
+    let mut r = req("def add_ab(a, b):\n    result = a", 256);
+    r.stream = true;
+    let rs = h.submit(r).unwrap();
+    // wait until generation demonstrably started, then cancel
+    let first = loop {
+        match rs.recv().unwrap() {
+            Reply::Chunk(c) => break c,
+            Reply::Done(resp) => panic!("finished before first chunk: {resp:?}"),
+        }
+    };
+    assert!(!first.delta.is_empty());
+    assert!(h.cancel(rs.id), "cancel of an in-flight request must be accepted");
+    let mut streamed = first.delta.clone();
+    let done = loop {
+        match rs.recv().unwrap() {
+            Reply::Chunk(c) => streamed.push_str(&c.delta),
+            Reply::Done(resp) => break resp,
+        }
+    };
+    assert!(done.error.is_none(), "{:?}", done.error);
+    assert_eq!(done.finish, "cancelled");
+    assert!(done.tokens < 256, "cancelled request must return a partial");
+    assert!(done.tokens > 0, "partial must contain the pre-cancel tokens");
+    assert_eq!(streamed, done.text, "partial record must be well-formed");
+    h.shutdown();
+}
+
+#[test]
+fn cancel_queued_request_never_runs() {
+    if no_artifacts() {
+        return;
+    }
+    // max_live = 1: the second request stays queued while the first runs
+    let h = ServerHandle::start(cfg(1, 4)).unwrap();
+    let first = h.submit(req("def add_ab(a, b):\n    result = a", 96)).unwrap();
+    let queued = h.submit(req("Q: what is 1 + 1?\n", 32)).unwrap();
+    assert!(h.cancel(queued.id), "queued request must be cancellable");
+    let resp = queued.wait().unwrap();
+    assert_eq!(resp.finish, "cancelled");
+    assert_eq!(resp.tokens, 0, "a queued-cancelled request never decodes");
+    assert!(resp.error.is_none());
+    assert!(first.wait().unwrap().error.is_none());
+    assert!(!h.cancel(9999), "unknown id must report false");
+    h.shutdown();
+}
+
+#[test]
+fn deadline_expires_to_partial_record() {
+    if no_artifacts() {
+        return;
+    }
+    let h = ServerHandle::start(cfg(1, 1)).unwrap();
+    let mut r = req("def add_ab(a, b):\n    result = a", 512);
+    r.deadline_ms = Some(1); // expires almost immediately
+    let resp = h.submit(r).unwrap().wait().unwrap();
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert_eq!(resp.finish, "deadline");
+    assert!(resp.tokens < 512);
+    let m = h.metrics.lock().unwrap().counter("finish_deadline");
+    assert_eq!(m, 1);
+    h.shutdown();
+}
+
+#[test]
+fn ttft_metric_recorded_for_served_requests() {
+    if no_artifacts() {
+        return;
+    }
+    let h = ServerHandle::start(cfg(2, 4)).unwrap();
+    let resp = h.submit(req("Q: what is 12 + 34?\n", 16)).unwrap().wait().unwrap();
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert!(resp.ttft_ms > 0.0, "response must carry ttft");
+    assert!(resp.ttft_ms <= resp.wall_ms + 1e-6);
+    let report = h.report();
+    assert!(report.contains("ttft_ms"), "server metrics must report ttft:\n{report}");
+    assert!(report.contains("accept_len"),
+            "server metrics must report the accept-length histogram:\n{report}");
+    h.shutdown();
+}
