@@ -19,6 +19,7 @@ fn main() -> anyhow::Result<()> {
         queue_depth: 64,
         share_ngrams: true, // multi-turn chat re-serves templates: warm pools
         ngram_ttl_ms: Some(600_000), // decay templates idle for 10 minutes
+        batch_decode: true,
         worker: WorkerConfig {
             artifacts_dir: "artifacts".into(),
             model: "tiny".into(),

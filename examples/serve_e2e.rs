@@ -24,6 +24,7 @@ fn run_method(method: &str, wng: (usize, usize, usize), n_req: usize,
         queue_depth: 1024,
         share_ngrams: true,
         ngram_ttl_ms: None,
+        batch_decode: true,
         worker: WorkerConfig {
             artifacts_dir: "artifacts".into(),
             model: "tiny".into(),

@@ -80,6 +80,7 @@ fn main() -> anyhow::Result<()> {
             queue_depth: 256,
             share_ngrams: false, // isolate scheduler effects from cache warmth
             ngram_ttl_ms: None,
+            batch_decode: true,
             worker: WorkerConfig {
                 artifacts_dir: "artifacts".into(),
                 model: "tiny".into(),

@@ -4,12 +4,12 @@
 
 use anyhow::Result;
 
-use crate::engine::session::{EngineStep, RawStep, Session, SessionCore};
+use crate::engine::session::{EngineStep, RawStep, Session, SessionCore, StepPlan};
 use crate::engine::{capacity_left, vocab_live, Decoder, DecodeSession, FinishReason,
                     GenParams};
 use crate::metrics::Timer;
 use crate::ngram::PoolHandle;
-use crate::runtime::{Cache, ModelRuntime};
+use crate::runtime::{Cache, ModelRuntime, StepOut};
 use crate::util::rng::Rng;
 
 #[derive(Debug, Default, Clone)]
@@ -31,13 +31,36 @@ struct ArState<'rt> {
 }
 
 impl EngineStep for ArState<'_> {
+    // raw_step ≡ plan → decode → finish: the per-session and fused-batch
+    // paths execute the identical operation sequence (BatchStep contract).
     fn raw_step(&mut self, core: &mut SessionCore) -> Result<RawStep> {
+        match self.plan_step(core)? {
+            StepPlan::Stop(reason) => Ok(RawStep::Stop(reason)),
+            StepPlan::Run => {
+                let step = self.rt.decode("decode_lin_1", self.cache.as_ref().unwrap(),
+                                          &[self.cur])?;
+                self.finish_step(core, step)
+            }
+        }
+    }
+
+    fn pool_mut(&mut self) -> &mut PoolHandle {
+        &mut self.pool
+    }
+
+    fn batchable(&self) -> bool {
+        true
+    }
+
+    fn plan_step(&mut self, _core: &mut SessionCore) -> Result<StepPlan> {
         let cache_len = self.cache.as_ref().unwrap().len;
         if !capacity_left(self.rt, cache_len, 1) {
-            return Ok(RawStep::Stop(FinishReason::CacheFull));
+            return Ok(StepPlan::Stop(FinishReason::CacheFull));
         }
-        let step = self.rt.decode("decode_lin_1", self.cache.as_ref().unwrap(),
-                                  &[self.cur])?;
+        Ok(StepPlan::Run)
+    }
+
+    fn finish_step(&mut self, core: &mut SessionCore, step: StepOut) -> Result<RawStep> {
         let next = if core.params.sampling.is_greedy() {
             step.logits.argmax(0, self.vocab)
         } else {
@@ -50,8 +73,20 @@ impl EngineStep for ArState<'_> {
         Ok(RawStep::Tokens(vec![next]))
     }
 
-    fn pool_mut(&mut self) -> &mut PoolHandle {
-        &mut self.pool
+    fn window(&self) -> &[u32] {
+        std::slice::from_ref(&self.cur)
+    }
+
+    fn batch_exe(&self) -> &str {
+        "decode_lin_1"
+    }
+
+    fn group_key(&self) -> String {
+        "autoregressive:decode_lin_1".into()
+    }
+
+    fn batch_cache(&self) -> Option<&Cache> {
+        self.cache.as_ref()
     }
 }
 

@@ -18,7 +18,7 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::engine::session::{EngineStep, RawStep, Session, SessionCore};
+use crate::engine::session::{EngineStep, RawStep, Session, SessionCore, StepPlan};
 use crate::engine::{capacity_left, verify, vocab_live, Decoder, DecodeSession,
                     FinishReason, GenParams};
 use crate::layout::Wng;
@@ -102,6 +102,9 @@ struct LookaheadState<'rt> {
     /// 2D window: rows[r][c] = trajectory guess at relative position r+c.
     rows: Vec<Vec<u32>>,
     tokens: Vec<u32>,
+    /// verification-branch candidates drawn by `plan_step`, consumed by
+    /// `finish_step` (the two halves of one Algorithm-2 step).
+    cands: Vec<Vec<u32>>,
     cur: u32,
     cache: Option<Cache>,
     vocab: usize,
@@ -120,11 +123,31 @@ impl LookaheadState<'_> {
 }
 
 impl EngineStep for LookaheadState<'_> {
+    // raw_step ≡ plan → decode → finish: the per-session and fused-batch
+    // paths execute the identical operation sequence (BatchStep contract).
     fn raw_step(&mut self, core: &mut SessionCore) -> Result<RawStep> {
+        match self.plan_step(core)? {
+            StepPlan::Stop(reason) => Ok(RawStep::Stop(reason)),
+            StepPlan::Run => {
+                let step = self.run_step(self.cache.as_ref().unwrap(), &self.tokens)?;
+                self.finish_step(core, step)
+            }
+        }
+    }
+
+    fn pool_mut(&mut self) -> &mut PoolHandle {
+        &mut self.pool
+    }
+
+    fn batchable(&self) -> bool {
+        true
+    }
+
+    fn plan_step(&mut self, _core: &mut SessionCore) -> Result<StepPlan> {
         let Wng { w, n, g } = self.wng;
         let cache_len = self.cache.as_ref().unwrap().len;
         if !capacity_left(self.rt, cache_len, n) {
-            return Ok(RawStep::Stop(FinishReason::CacheFull));
+            return Ok(StepPlan::Stop(FinishReason::CacheFull));
         }
         self.rows[0][0] = self.cur;
 
@@ -132,18 +155,21 @@ impl EngineStep for LookaheadState<'_> {
         for r in 0..n - 1 {
             self.tokens[r * w..(r + 1) * w].copy_from_slice(&self.rows[r]);
         }
-        let cands: Vec<Vec<u32>> = self.pool.lookup(self.cur, g);
+        self.cands = self.pool.lookup(self.cur, g);
         for i in 0..g {
             for j in 0..n - 1 {
-                self.tokens[self.wng.verify_index(i, j)] = match cands.get(i) {
+                self.tokens[self.wng.verify_index(i, j)] = match self.cands.get(i) {
                     Some(c) => c[j],
                     None => self.cur, // padding candidate, ignored by verify
                 };
             }
         }
+        Ok(StepPlan::Run)
+    }
 
-        // -- one fused forward ------------------------------------------
-        let step = self.run_step(self.cache.as_ref().unwrap(), &self.tokens)?;
+    fn finish_step(&mut self, core: &mut SessionCore, step: StepOut) -> Result<RawStep> {
+        let Wng { w, n, .. } = self.wng;
+        let cands = std::mem::take(&mut self.cands);
 
         // -- verification branch -----------------------------------------
         let wng = self.wng;
@@ -214,8 +240,32 @@ impl EngineStep for LookaheadState<'_> {
         Ok(RawStep::Tokens(outcome.tokens))
     }
 
-    fn pool_mut(&mut self) -> &mut PoolHandle {
-        &mut self.pool
+    fn window(&self) -> &[u32] {
+        &self.tokens
+    }
+
+    fn batch_exe(&self) -> &str {
+        match &self.exe {
+            Exe::Specialized(name) => name,
+            Exe::Generic { name, .. } => name,
+        }
+    }
+
+    fn group_key(&self) -> String {
+        // executable name alone does not pin the layout: one decode_gen
+        // artifact serves many (W,N,G) configs with different masks
+        format!("lookahead:{}:{}", self.batch_exe(), self.wng.tag())
+    }
+
+    fn batch_cache(&self) -> Option<&Cache> {
+        self.cache.as_ref()
+    }
+
+    fn batch_mask(&self) -> Option<(&[i32], &[u8])> {
+        match &self.exe {
+            Exe::Specialized(_) => None,
+            Exe::Generic { relpos, mask, .. } => Some((relpos, mask)),
+        }
     }
 }
 
@@ -273,6 +323,7 @@ impl Decoder for Lookahead {
             rng,
             rows,
             tokens: vec![0u32; t_in],
+            cands: Vec::new(),
             cur,
             cache: Some(cache),
             vocab,

@@ -31,7 +31,8 @@ use crate::runtime::ModelRuntime;
 use crate::tokenizer::{ByteTokenizer, EOS_ID, VOCAB_SIZE};
 
 pub use sampling::SamplingParams;
-pub use session::{DecodeSession, FinishReason, StepOutcome};
+pub use session::{step_group, BatchPlan, BatchStep, DecodeSession, FinishReason,
+                  GroupOutcome, StepOutcome};
 
 #[derive(Debug, Clone)]
 pub struct GenParams {

@@ -17,11 +17,12 @@
 //! incrementally, so streamed deltas concatenate to exactly the one-shot
 //! output.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::engine::{finish, GenOutput, GenParams};
 use crate::metrics::{DecodeStats, Timer};
 use crate::ngram::PoolHandle;
+use crate::runtime::{Cache, ModelRuntime, StepOut};
 use crate::tokenizer::EOS_ID;
 
 /// Why a session stopped producing tokens.
@@ -99,6 +100,72 @@ pub trait DecodeSession {
     /// and pool stats finalized) plus the n-gram pool handle, returned so
     /// callers that loaned a shared-cache handle get it back.
     fn into_output(self: Box<Self>) -> (GenOutput, PoolHandle);
+
+    /// Batched-decode extension ([`BatchStep`]): `Some` when this session's
+    /// engine can split a step into plan / fused-call / complete phases so
+    /// a group of compatible sessions shares one model call per round.
+    /// `None` (the default) means the session only supports per-session
+    /// `step()` calls — the serving layer falls back accordingly.
+    fn batch(&mut self) -> Option<&mut dyn BatchStep> {
+        None
+    }
+
+    /// Shared-borrow view of the [`BatchStep`] extension (used to gather
+    /// caches and token windows from every group member simultaneously
+    /// while the fused call is assembled).
+    fn batch_ref(&self) -> Option<&dyn BatchStep> {
+        None
+    }
+}
+
+/// Whether a session joins the round's fused decode call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchPlan {
+    /// The session assembled its token window ([`BatchStep::window`]) and
+    /// MUST receive [`BatchStep::complete`] with its slot's output.
+    Join,
+    /// The session cannot join this round (finished, budget exhausted, or a
+    /// stop condition like a full cache): drive it with
+    /// [`DecodeSession::step`] instead, which resolves the stop itself.
+    Solo,
+}
+
+/// The batched-decode extension of [`DecodeSession`]: a group of sessions
+/// with equal [`group_key`](BatchStep::group_key)s submits per-step token
+/// windows, one fused `decode_batched` / `decode_generic_batched` call
+/// serves all of them, and each session folds its slot's [`StepOut`] back
+/// through the unchanged `commit_step` budget/EOS-trim semantics — so
+/// batched and sequential execution commit byte-identical token streams
+/// (pinned by `rust/tests/batched_equivalence.rs`).
+///
+/// Call protocol per round: `plan()` every member; gather `window()` /
+/// `cache()` / `mask()` from the `Join`ers; run the fused call; `complete()`
+/// each joiner with its slot output. [`step_group`] drives this protocol.
+pub trait BatchStep {
+    /// Grouping key: equal keys guarantee the same fused-call shape (same
+    /// base executable AND the same mask/relpos layout).
+    fn group_key(&self) -> String;
+
+    /// The per-session decode executable the fused call must emulate.
+    fn exe_name(&self) -> &str;
+
+    /// Plan the next step (may assemble the token window and consult the
+    /// n-gram pool). On error the session is poisoned (`Failed`).
+    fn plan(&mut self) -> Result<BatchPlan>;
+
+    /// The step-input token window assembled by the last `Join` plan.
+    fn window(&self) -> &[u32];
+
+    /// The session's device cache for the fused call.
+    fn cache(&self) -> &Cache;
+
+    /// Generic-path layout, shared across the group (None = linear or
+    /// specialized executable; the layout is baked in).
+    fn mask(&self) -> Option<(&[i32], &[u8])>;
+
+    /// Fold the fused call's slot output into the session: verification,
+    /// per-session commit, window update, and the budget/EOS trim.
+    fn complete(&mut self, out: StepOut) -> Result<StepOutcome>;
 }
 
 /// One raw engine step: either the tokens Algorithm 2/3/4 committed this
@@ -108,15 +175,69 @@ pub(crate) enum RawStep {
     Stop(FinishReason),
 }
 
+/// Plan result of a batchable engine's step front half.
+pub(crate) enum StepPlan {
+    /// Token window assembled ([`EngineStep::window`]); run the model call,
+    /// then [`EngineStep::finish_step`].
+    Run,
+    /// A stop condition fired before any model call.
+    Stop(FinishReason),
+}
+
 /// The engine-specific half of a session: one untrimmed Algorithm-2 step.
 /// Implementations keep the window/trajectory/cache state; budget and EOS
 /// bookkeeping live in [`SessionCore`] so every engine shares one contract.
+///
+/// Batchable engines (autoregressive, lookahead) additionally split
+/// `raw_step` into `plan_step` (assemble the token window, no model call)
+/// and `finish_step` (fold one [`StepOut`] back: verify, commit, window
+/// update) and implement `raw_step` as plan → decode → finish, so the
+/// per-session and fused paths execute the identical sequence of
+/// operations. The remaining hooks expose the fused call's inputs.
 pub(crate) trait EngineStep {
     fn raw_step(&mut self, core: &mut SessionCore) -> Result<RawStep>;
 
     /// The session's n-gram pool handle (a detached handle for engines that
     /// keep no pool). Used to seal pool stats and return the handle.
     fn pool_mut(&mut self) -> &mut PoolHandle;
+
+    // --- batched-decode hooks (defaults: not batchable) ---------------
+
+    /// Whether this engine supports the plan/finish split at all.
+    fn batchable(&self) -> bool {
+        false
+    }
+
+    fn plan_step(&mut self, _core: &mut SessionCore) -> Result<StepPlan> {
+        Ok(StepPlan::Stop(FinishReason::Failed))
+    }
+
+    fn finish_step(&mut self, _core: &mut SessionCore, _out: StepOut) -> Result<RawStep> {
+        Err(anyhow!("engine does not implement batched steps"))
+    }
+
+    /// The token window assembled by the last `plan_step` → `Run`.
+    fn window(&self) -> &[u32] {
+        &[]
+    }
+
+    /// Base decode executable name for the fused call.
+    fn batch_exe(&self) -> &str {
+        ""
+    }
+
+    /// Fused-group compatibility key (must pin executable + layout).
+    fn group_key(&self) -> String {
+        String::new()
+    }
+
+    fn batch_cache(&self) -> Option<&Cache> {
+        None
+    }
+
+    fn batch_mask(&self) -> Option<(&[i32], &[u8])> {
+        None
+    }
 }
 
 /// Shared per-session bookkeeping: params, stats, committed output, and the
@@ -263,6 +384,251 @@ impl<E: EngineStep> DecodeSession for Session<E> {
         let out = finish(this.core.out, &this.core.params, this.core.stats, wall);
         let pool = std::mem::replace(this.eng.pool_mut(), PoolHandle::none());
         (out, pool)
+    }
+
+    fn batch(&mut self) -> Option<&mut dyn BatchStep> {
+        if self.eng.batchable() {
+            Some(self)
+        } else {
+            None
+        }
+    }
+
+    fn batch_ref(&self) -> Option<&dyn BatchStep> {
+        if self.eng.batchable() {
+            Some(self)
+        } else {
+            None
+        }
+    }
+}
+
+impl<E: EngineStep> BatchStep for Session<E> {
+    fn group_key(&self) -> String {
+        self.eng.group_key()
+    }
+
+    fn exe_name(&self) -> &str {
+        self.eng.batch_exe()
+    }
+
+    fn plan(&mut self) -> Result<BatchPlan> {
+        // mirror step()'s preamble: finished sessions and pre-exhausted
+        // budgets resolve through step() so the finish bookkeeping stays in
+        // exactly one place
+        if self.core.finished.is_some()
+            || self.core.out.len() >= self.core.params.max_new_tokens
+        {
+            return Ok(BatchPlan::Solo);
+        }
+        match self.eng.plan_step(&mut self.core) {
+            // a stop condition (e.g. cache full) is stateless to plan:
+            // step() re-plans and reports the Finished outcome itself
+            Ok(StepPlan::Run) => Ok(BatchPlan::Join),
+            Ok(StepPlan::Stop(_)) => Ok(BatchPlan::Solo),
+            Err(e) => {
+                self.core.finished = Some(FinishReason::Failed);
+                self.seal();
+                Err(e)
+            }
+        }
+    }
+
+    fn window(&self) -> &[u32] {
+        self.eng.window()
+    }
+
+    fn cache(&self) -> &Cache {
+        self.eng.batch_cache().expect("batchable engine must expose its cache")
+    }
+
+    fn mask(&self) -> Option<(&[i32], &[u8])> {
+        self.eng.batch_mask()
+    }
+
+    fn complete(&mut self, out: StepOut) -> Result<StepOutcome> {
+        if let Some(reason) = self.core.finished {
+            self.seal();
+            return Ok(StepOutcome::Finished { reason });
+        }
+        match self.eng.finish_step(&mut self.core, out) {
+            Ok(RawStep::Tokens(raw)) => {
+                let added = self.core.commit_step(raw);
+                if self.core.finished.is_some() {
+                    self.seal();
+                }
+                Ok(StepOutcome::Committed { tokens: added })
+            }
+            Ok(RawStep::Stop(reason)) => {
+                self.core.finished = Some(reason);
+                self.seal();
+                Ok(StepOutcome::Finished { reason })
+            }
+            Err(e) => {
+                self.core.finished = Some(FinishReason::Failed);
+                self.seal();
+                Err(e)
+            }
+        }
+    }
+}
+
+/// Result of one fused round over a session group.
+pub struct GroupOutcome {
+    /// Per-session step outcome, in group order (same semantics as
+    /// [`DecodeSession::step`]: an `Err` poisons that session only).
+    pub outcomes: Vec<Result<StepOutcome>>,
+    /// Sizes of the fused decode calls actually issued (for the serving
+    /// metrics: one entry per `decode_batched` launch, always >= 2; solo
+    /// fallbacks, singleton chunks, and sessions that resolved without a
+    /// model call do not appear).
+    pub fused: Vec<usize>,
+}
+
+/// Drive one decode step for every session in `group`, fusing compatible
+/// sessions into batched model calls.
+///
+/// Protocol: every session able to join ([`BatchStep::plan`] → `Join`)
+/// contributes its token window and cache to a fused
+/// [`ModelRuntime::decode_batched`] / `decode_generic_batched` call; runs
+/// of equal [`BatchStep::group_key`] are chunked to the batched
+/// executable's capacity. Sessions that cannot join — unsupported engine,
+/// finished, stop condition — are driven with plain
+/// [`DecodeSession::step`]. When the model has no batched executable for a
+/// group's base, each planned session runs its own per-session decode and
+/// completes normally (the fallback path: identical bytes, no fusion).
+///
+/// `rt` must be the runtime every session in `group` was opened on.
+pub fn step_group(rt: &ModelRuntime, group: &mut [&mut (dyn DecodeSession + '_)])
+                  -> GroupOutcome {
+    let n = group.len();
+    let mut outcomes: Vec<Option<Result<StepOutcome>>> = (0..n).map(|_| None).collect();
+    let mut fused: Vec<usize> = Vec::new();
+
+    // -- plan phase: who joins this round's fused call? -----------------
+    let mut joined: Vec<(String, usize)> = Vec::new(); // (group key, index)
+    for i in 0..n {
+        let plan = match group[i].batch() {
+            Some(b) => match b.plan() {
+                Ok(p) => p,
+                Err(e) => {
+                    outcomes[i] = Some(Err(e));
+                    continue;
+                }
+            },
+            None => BatchPlan::Solo,
+        };
+        match plan {
+            BatchPlan::Join => {
+                let key = group[i].batch_ref().map(|b| b.group_key()).unwrap_or_default();
+                joined.push((key, i));
+            }
+            BatchPlan::Solo => outcomes[i] = Some(group[i].step()),
+        }
+    }
+    joined.sort_by(|a, b| a.0.cmp(&b.0)); // stable: group order kept per key
+
+    // -- fused phase: one batched call per (key, chunk) ------------------
+    let mut at = 0;
+    while at < joined.len() {
+        let mut end = at + 1;
+        while end < joined.len() && joined[end].0 == joined[at].0 {
+            end += 1;
+        }
+        let exe = group[joined[at].1]
+            .batch_ref()
+            .map(|b| b.exe_name().to_string())
+            .unwrap_or_default();
+        let cap = rt.max_batch(&exe);
+        let mut lo = at;
+        while lo < end {
+            let hi = match cap {
+                Some(c) => end.min(lo + c.max(1)),
+                None => lo + 1, // no batched executable: per-session decode
+            };
+            let chunk: Vec<usize> = joined[lo..hi].iter().map(|j| j.1).collect();
+            run_chunk(rt, group, &chunk, &exe, cap.is_some(), &mut outcomes, &mut fused);
+            lo = hi;
+        }
+        at = end;
+    }
+
+    GroupOutcome {
+        outcomes: outcomes
+            .into_iter()
+            .map(|o| o.unwrap_or_else(|| Err(anyhow!("session skipped by step_group"))))
+            .collect(),
+        fused,
+    }
+}
+
+/// One fused (or per-session fallback) decode call over `chunk`, completing
+/// every member with its slot output.
+fn run_chunk(rt: &ModelRuntime, group: &mut [&mut (dyn DecodeSession + '_)],
+             chunk: &[usize], exe: &str, have_batched: bool,
+             outcomes: &mut [Option<Result<StepOutcome>>], fused: &mut Vec<usize>) {
+    // Solo path — singleton chunk (group drained to one live session: a
+    // padded B-slot fused launch would pay up to B× the decode cost for
+    // identical bytes) or no batched executable. Runs the base executable
+    // once per member with no re-planning, so pool accounting, committed
+    // bytes, AND error isolation stay identical to the sequential path: a
+    // failing decode poisons only its own session.
+    if !(have_batched && chunk.len() > 1) {
+        for &i in chunk {
+            let res = {
+                let b = group[i].batch_ref().expect("joined session lost BatchStep");
+                match b.mask() {
+                    Some((relpos, m)) => {
+                        rt.decode_generic(exe, b.cache(), b.window(), relpos, m)
+                    }
+                    None => rt.decode(exe, b.cache(), b.window()),
+                }
+            };
+            outcomes[i] = Some(match res {
+                Ok(out) => group[i].batch().expect("joined session").complete(out),
+                Err(e) => {
+                    group[i].cancel(FinishReason::Failed);
+                    Err(e)
+                }
+            });
+        }
+        return;
+    }
+
+    // Fused path: gather every member's inputs through shared borrows, one
+    // batched launch serves the whole chunk.
+    fused.push(chunk.len());
+    let step_outs: Result<Vec<StepOut>> = {
+        let members: Vec<&dyn BatchStep> = group
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| chunk.contains(i))
+            .map(|(_, s)| (**s).batch_ref().expect("joined session lost BatchStep"))
+            .collect();
+        let caches: Vec<&Cache> = members.iter().map(|b| b.cache()).collect();
+        let windows: Vec<&[u32]> = members.iter().map(|b| b.window()).collect();
+        match members[0].mask() {
+            Some((relpos, m)) => {
+                rt.decode_generic_batched(exe, &caches, &windows, relpos, m)
+            }
+            None => rt.decode_batched(exe, &caches, &windows),
+        }
+    };
+    match step_outs {
+        Ok(outs) => {
+            for (&i, out) in chunk.iter().zip(outs) {
+                outcomes[i] = Some(group[i].batch().expect("joined session").complete(out));
+            }
+        }
+        Err(e) => {
+            // the single fused launch failed for everyone it served: poison
+            // every member (same contract as a failed per-session step)
+            let msg = format!("batched decode failed: {e}");
+            for &i in chunk {
+                group[i].cancel(FinishReason::Failed);
+                outcomes[i] = Some(Err(anyhow!("{msg}")));
+            }
+        }
     }
 }
 
@@ -411,6 +777,41 @@ mod tests {
             StepOutcome::Finished { reason: FinishReason::Budget }
         );
         assert_eq!(sess.stats().decode_steps, 0);
+    }
+
+    #[test]
+    fn non_batchable_engine_has_no_batch_view() {
+        let mut sess = Session::new(
+            SessionCore::new(1, params(4)),
+            Scripted::new(vec![vec![1]]),
+        );
+        assert!(sess.batch().is_none());
+        assert!(sess.batch_ref().is_none());
+        // and step() still works as before
+        assert_eq!(sess.step().unwrap(), StepOutcome::Committed { tokens: vec![1] });
+    }
+
+    #[test]
+    fn step_group_falls_back_to_solo_for_non_batchable_sessions() {
+        // without a runtime-capable engine the group driver must still
+        // produce one outcome per session, all via the solo path
+        let dir = crate::runtime::sim::ensure_sim_artifacts().unwrap();
+        let manifest = crate::runtime::Manifest::load(&dir).unwrap();
+        let client = crate::runtime::cpu_client().unwrap();
+        let rt = crate::runtime::ModelRuntime::load(&client, &manifest, "tiny").unwrap();
+
+        let mut a = Session::new(SessionCore::new(1, params(4)),
+                                 Scripted::new(vec![vec![1], vec![2]]));
+        let mut b = Session::new(SessionCore::new(1, params(4)),
+                                 Scripted::new(vec![vec![7]]));
+        let mut group: Vec<&mut (dyn DecodeSession + '_)> = vec![&mut a, &mut b];
+        let out = step_group(&rt, &mut group);
+        assert!(out.fused.is_empty(), "scripted engines must not fuse");
+        assert_eq!(out.outcomes.len(), 2);
+        assert_eq!(*out.outcomes[0].as_ref().unwrap(),
+                   StepOutcome::Committed { tokens: vec![1] });
+        assert_eq!(*out.outcomes[1].as_ref().unwrap(),
+                   StepOutcome::Committed { tokens: vec![7] });
     }
 
     #[test]

@@ -58,6 +58,9 @@ fn print_usage(args: &Args) {
               help: "decode steps per session per scheduling round (serve)" },
         Opt { name: "max-live", default: Some("4"),
               help: "interleaved sessions per worker (serve)" },
+        Opt { name: "batch-decode", default: Some("true"),
+              help: "fuse compatible live sessions into one batched \
+                     decode call per round (serve)" },
         Opt { name: "stream", default: Some("false"),
               help: "stream chunk lines before the final record (client)" },
         Opt { name: "devices", default: Some("4"), help: "LP simulated devices" },
@@ -134,6 +137,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         queue_depth: args.usize_or("queue-depth", 256),
         share_ngrams,
         ngram_ttl_ms: args.get("ngram-ttl-ms").and_then(|v| v.parse().ok()),
+        batch_decode: args.bool_or("batch-decode", true),
         worker: WorkerConfig {
             artifacts_dir: args.str_or("artifacts", "artifacts"),
             model: args.str_or("model", "tiny"),
@@ -141,6 +145,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             draft_model: "draft".into(),
             time_slice: args.usize_or("time-slice", 4),
             max_live: args.usize_or("max-live", 4),
+            batch_decode: args.bool_or("batch-decode", true),
         },
     };
     let max_conns = args.get("max-conns").and_then(|v| v.parse().ok());

@@ -7,6 +7,18 @@
 //!   decode_gen:  weights.. , cache, cache_len i32, tokens i32[T],
 //!                relpos i32[T], mask u8[T,T]
 //!   commit:      cache, new_kv, src_idx i32[slots], dest_start i32, count i32
+//!
+//! Batched decode executables (`kind: "decode_batch"`) fuse up to `batch`
+//! sessions of a base decode executable (`of`) into one call:
+//!
+//!   decode_batch(of=decode_lin_*): weights.. , cache_0..cache_{B-1},
+//!                cache_lens i32[B], tokens i32[B,T]
+//!   decode_batch(of=decode_gen_*): weights.. , cache_0..cache_{B-1},
+//!                cache_lens i32[B], tokens i32[B,T], relpos i32[T],
+//!                mask u8[T,T]   (relpos/mask shared across the batch —
+//!                batched groups always share one engine config)
+//!
+//! Outputs: logits f32[B*T, vocab] followed by one new_kv per slot.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -60,6 +72,9 @@ pub enum ExeKind {
     DecodeLa { w: usize, n: usize, g: usize, t_in: usize, attn: String },
     DecodeLin { k: usize },
     DecodeGen { t_pad: usize },
+    /// Batched variant of the base decode executable `of`: up to `batch`
+    /// fused (cache, token-window) slots per call.
+    DecodeBatch { of: String, batch: usize },
     Commit { t_in: usize, slots: usize },
 }
 
@@ -71,6 +86,8 @@ impl ExeKind {
             ExeKind::DecodeLin { k } => Some(*k),
             ExeKind::DecodeGen { t_pad } => Some(*t_pad),
             ExeKind::Commit { t_in, .. } => Some(*t_in),
+            // per-slot token count comes from the base executable
+            ExeKind::DecodeBatch { .. } => None,
             ExeKind::Prefill { .. } => None,
         }
     }
@@ -206,6 +223,32 @@ impl ModelManifest {
         best
     }
 
+    /// Smallest batched executable fusing base executable `of` with
+    /// `batch >= n` slots. None = this base has no batched variant big
+    /// enough (the serving layer then falls back to per-session calls).
+    pub fn find_batched(&self, of: &str, n: usize) -> Option<(&str, usize)> {
+        let mut best: Option<(&str, usize)> = None;
+        for (name, spec) in &self.executables {
+            if let ExeKind::DecodeBatch { of: base, batch } = &spec.kind {
+                if base == of && *batch >= n && best.is_none_or(|(_, b)| *batch < b) {
+                    best = Some((name.as_str(), *batch));
+                }
+            }
+        }
+        best
+    }
+
+    /// Largest batch any batched variant of `of` supports (grouping cap).
+    pub fn max_batch(&self, of: &str) -> Option<usize> {
+        self.executables
+            .values()
+            .filter_map(|spec| match &spec.kind {
+                ExeKind::DecodeBatch { of: base, batch } if base == of => Some(*batch),
+                _ => None,
+            })
+            .max()
+    }
+
     pub fn commit_exe(&self, t_in: usize) -> Result<&str> {
         for (name, spec) in &self.executables {
             if let ExeKind::Commit { t_in: t, .. } = spec.kind {
@@ -242,6 +285,10 @@ impl ExeSpec {
             },
             "decode_lin" => ExeKind::DecodeLin { k: req_usize(j, "k", name)? },
             "decode_gen" => ExeKind::DecodeGen { t_pad: req_usize(j, "t_pad", name)? },
+            "decode_batch" => ExeKind::DecodeBatch {
+                of: req_str(j, "of", name)?,
+                batch: req_usize(j, "batch", name)?,
+            },
             "commit" => ExeKind::Commit {
                 t_in: req_usize(j, "t_in", name)?,
                 slots: req_usize(j, "slots", name)?,
@@ -277,6 +324,10 @@ mod tests {
                 "decode_la_w5n3g5": {"file":"b.hlo.txt","kind":"decode_la",
                   "w":5,"n":3,"g":5,"t_in":20,"n_lookahead":10,"tag":"w5n3g5","attn":"jnp"},
                 "decode_gen_64": {"file":"c.hlo.txt","kind":"decode_gen","t_pad":64,"t_in":64},
+                "decode_lin_1_b4": {"file":"e.hlo.txt","kind":"decode_batch",
+                  "of":"decode_lin_1","batch":4},
+                "decode_lin_1_b8": {"file":"f.hlo.txt","kind":"decode_batch",
+                  "of":"decode_lin_1","batch":8},
                 "commit_20": {"file":"d.hlo.txt","kind":"commit","t_in":20,"slots":8}
               }
             }
@@ -298,7 +349,24 @@ mod tests {
         let tiny = m.model("tiny").unwrap();
         assert_eq!(tiny.cache_shape, [2, 2, 768, 128]);
         assert_eq!(tiny.capacity(), 767);
-        assert_eq!(tiny.executables.len(), 5);
+        assert_eq!(tiny.executables.len(), 7);
+    }
+
+    #[test]
+    fn finds_batched_executables() {
+        let m = load_sample();
+        let tiny = m.model("tiny").unwrap();
+        // smallest batch >= n wins
+        assert_eq!(tiny.find_batched("decode_lin_1", 1), Some(("decode_lin_1_b4", 4)));
+        assert_eq!(tiny.find_batched("decode_lin_1", 4), Some(("decode_lin_1_b4", 4)));
+        assert_eq!(tiny.find_batched("decode_lin_1", 5), Some(("decode_lin_1_b8", 8)));
+        assert_eq!(tiny.find_batched("decode_lin_1", 9), None);
+        assert_eq!(tiny.find_batched("decode_gen_64", 2), None);
+        assert_eq!(tiny.max_batch("decode_lin_1"), Some(8));
+        assert_eq!(tiny.max_batch("decode_gen_64"), None);
+        // batched kinds report no per-slot token count of their own
+        let spec = &tiny.executables["decode_lin_1_b4"];
+        assert_eq!(spec.kind.t_in(), None);
     }
 
     #[test]

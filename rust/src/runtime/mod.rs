@@ -3,6 +3,7 @@
 
 pub mod manifest;
 pub mod model;
+pub mod sim;
 
 use anyhow::Result;
 

@@ -221,6 +221,135 @@ impl ModelRuntime {
         Ok(StepOut { logits, new_kv })
     }
 
+    /// Max fused slots any batched variant of `base_exe` supports; None =
+    /// no batched executable (callers fall back to per-session decode).
+    pub fn max_batch(&self, base_exe: &str) -> Option<usize> {
+        self.mm.max_batch(base_exe)
+    }
+
+    /// Shared front half of the batched decode calls: resolve the batched
+    /// executable, then build the fused argument tail
+    /// `cache_0..cache_{B-1}, cache_lens i32[B], tokens i32[B*t]` (unused
+    /// slots padded with the first cache at length 0 and pad tokens, whose
+    /// outputs are discarded).
+    fn batched_args<'a>(&self, base_exe: &str, t: usize, caches: &[&'a Cache],
+                        tokens: &[&[u32]])
+                        -> Result<(Rc<PjRtLoadedExecutable>, usize,
+                                   Vec<&'a PjRtBuffer>, PjRtBuffer, PjRtBuffer)> {
+        let n = caches.len();
+        if n == 0 || tokens.len() != n {
+            bail!("batched decode: {} caches vs {} token windows", n, tokens.len());
+        }
+        let (bname, batch) = self
+            .mm
+            .find_batched(base_exe, n)
+            .ok_or_else(|| anyhow!("no batched executable for '{base_exe}' x{n} \
+                                    in model {}", self.mm.name))?;
+        let exe = self.exe(bname)?;
+        let mut cache_args: Vec<&PjRtBuffer> = Vec::with_capacity(batch);
+        let mut lens: Vec<i32> = Vec::with_capacity(batch);
+        let mut toks: Vec<i32> = Vec::with_capacity(batch * t);
+        for (c, w) in caches.iter().zip(tokens) {
+            if w.len() > t {
+                bail!("batched decode: window {} > t {t}", w.len());
+            }
+            cache_args.push(&c.buf);
+            lens.push(c.len as i32);
+            toks.extend(w.iter().map(|&x| x as i32));
+            toks.resize(toks.len() + (t - w.len()), self.pad_id as i32);
+        }
+        for _ in n..batch {
+            cache_args.push(&caches[0].buf);
+            lens.push(0);
+            toks.resize(toks.len() + t, self.pad_id as i32);
+        }
+        Ok((exe, batch, cache_args, self.i32_buf(&lens)?, self.i32_buf(&toks)?))
+    }
+
+    /// Shared back half: split `[logits f32[B*t, vocab], new_kv_0..]` into
+    /// one [`StepOut`] per live slot (padding slots dropped).
+    fn batched_outs(&self, mut out: Vec<PjRtBuffer>, batch: usize, n: usize,
+                    t: usize) -> Result<Vec<StepOut>> {
+        if out.len() != 1 + batch {
+            bail!("batched decode returned {} outputs, want {}", out.len(), 1 + batch);
+        }
+        let kvs: Vec<PjRtBuffer> = out.drain(1..).collect();
+        let lit = out[0].to_literal_sync()?;
+        let data = lit.to_vec::<f32>()?;
+        if data.len() != batch * t * self.vocab_padded {
+            bail!("batched logits size {} != {batch}x{t}x{}", data.len(),
+                  self.vocab_padded);
+        }
+        let mut steps = Vec::with_capacity(n);
+        for (b, new_kv) in kvs.into_iter().enumerate().take(n) {
+            let logits = Logits {
+                data: data[b * t * self.vocab_padded..(b + 1) * t * self.vocab_padded]
+                    .to_vec(),
+                t,
+                vocab: self.vocab_padded,
+            };
+            steps.push(StepOut { logits, new_kv });
+        }
+        Ok(steps)
+    }
+
+    /// One fused decode step for a group of sessions sharing a linear or
+    /// specialized decode executable: each slot gets its own cache and
+    /// token window, one executable launch serves them all. Per-slot
+    /// results are identical to calling [`ModelRuntime::decode`] per
+    /// session (bit-exact on the sim backend; see DESIGN.md §3c).
+    pub fn decode_batched(&self, base_exe: &str, caches: &[&Cache],
+                          tokens: &[&[u32]]) -> Result<Vec<StepOut>> {
+        let t = self
+            .mm
+            .executables
+            .get(base_exe)
+            .and_then(|s| s.kind.t_in())
+            .ok_or_else(|| anyhow!("'{base_exe}' is not a decode executable"))?;
+        if let Some(w) = tokens.iter().find(|w| w.len() != t) {
+            bail!("'{base_exe}' expects {t} tokens per slot, got {}", w.len());
+        }
+        let (exe, batch, cache_args, lens, toks) =
+            self.batched_args(base_exe, t, caches, tokens)?;
+        let mut args: Vec<&PjRtBuffer> = self.weights.iter().collect();
+        args.extend(cache_args);
+        args.push(&lens);
+        args.push(&toks);
+        let out = self.run(&exe, &args)?;
+        self.batched_outs(out, batch, caches.len(), t)
+    }
+
+    /// Fused generic masked decode: like [`ModelRuntime::decode_generic`]
+    /// for every slot at once. The group shares one (relpos, mask) layout —
+    /// batched groups are formed per engine config, so this is not a
+    /// restriction in practice.
+    pub fn decode_generic_batched(&self, base_exe: &str, caches: &[&Cache],
+                                  tokens: &[&[u32]], relpos: &[i32], mask: &[u8])
+                                  -> Result<Vec<StepOut>> {
+        let t_pad = match self.mm.executables.get(base_exe).map(|s| &s.kind) {
+            Some(ExeKind::DecodeGen { t_pad }) => *t_pad,
+            _ => bail!("'{base_exe}' is not a decode_gen executable"),
+        };
+        if relpos.len() != t_pad || mask.len() != t_pad * t_pad {
+            bail!("batched generic decode: layout shapes wrong for t_pad={t_pad}");
+        }
+        let (exe, batch, cache_args, lens, toks) =
+            self.batched_args(base_exe, t_pad, caches, tokens)?;
+        let rp = self.i32_buf(relpos)?;
+        let mb = self
+            .client
+            .buffer_from_host_raw_bytes(xla::ElementType::U8, mask,
+                                        &[t_pad, t_pad], None)?;
+        let mut args: Vec<&PjRtBuffer> = self.weights.iter().collect();
+        args.extend(cache_args);
+        args.push(&lens);
+        args.push(&toks);
+        args.push(&rp);
+        args.push(&mb);
+        let out = self.run(&exe, &args)?;
+        self.batched_outs(out, batch, caches.len(), t_pad)
+    }
+
     /// Generic masked decode: caller provides the layout (tokens are padded
     /// to the executable's t_pad by this function; mask rows for pad slots
     /// must be pre-extended by the caller via `pad_mask`).

@@ -1,0 +1,251 @@
+//! Simulated artifact set for the vendored `xla` stub's deterministic
+//! backend — the test substrate for everything downstream of the runtime.
+//!
+//! [`write_sim_artifacts`] emits a self-contained artifact directory
+//! (manifest.json + `sim` directive files + a `SIM` magic weights file)
+//! that [`crate::runtime::Manifest::load`] / [`crate::runtime::ModelRuntime`]
+//! consume exactly like AOT-lowered artifacts, but which the stub can
+//! *execute*: the stub implements a deterministic causal LM over token ids
+//! (see `rust/vendor/xla/src/lib.rs` for the model), so engines, sessions,
+//! batched rounds, and the serving front all run for real — without PJRT.
+//!
+//! The sim model set mirrors the real profile's surface:
+//!   - `tiny` and `draft` models (the sim LM is weight-free, so the draft
+//!     agrees with the target — spec-decode accepts aggressively);
+//!   - `prefill` (64 tokens), `decode_lin_{1,5,8}`, `decode_gen_{20,64}`,
+//!     `commit_{1,5,8,20,64}`;
+//!   - batched variants `decode_lin_1_b8` and `decode_gen_20_b8`
+//!     (`kind: "decode_batch"`), sized for the default lookahead config
+//!     W=5, N=3, G=5 (t_in = 20) and up to 8 fused sessions.
+//!
+//! No specialized `decode_la` executable is included: the lookahead engine
+//! falls back to the generic mask-as-input path, which is the layout the
+//! batched executables fuse.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// Rows in the sim KV cache (= max_seq; junk row is the last one).
+pub const SIM_ROWS: usize = 256;
+/// Prefill capacity of the sim artifacts.
+pub const SIM_PREFILL_LEN: usize = 64;
+/// Max fused sessions per batched executable.
+pub const SIM_MAX_BATCH: usize = 8;
+
+const VOCAB: usize = 264;
+const WEIGHTS: usize = 2;
+
+/// Version tag baked into the `ensure_*` directory names. Bump whenever
+/// the sim format changes (directive grammar, LM constants, executable
+/// set, manifest layout): the pid-keyed temp dirs survive process exit,
+/// and PID reuse must never pick up a stale-format artifact set —
+/// same-version content is byte-identical, so reuse of a completed dir is
+/// safe (manifest.json is written last, marking completion).
+const SIM_FORMAT: u32 = 1;
+
+fn exe_files(delay_ms: u64) -> Vec<(&'static str, String)> {
+    let w = WEIGHTS;
+    // decode executables carry the per-launch delay (one sleep per fused
+    // call); prefill/commit stay instant
+    let d = if delay_ms > 0 { format!(" delay_ms={delay_ms}") } else { String::new() };
+    vec![
+        ("sim_prefill.hlo.txt",
+         format!("sim prefill plen={SIM_PREFILL_LEN} rows={SIM_ROWS} vocab={VOCAB} weights={w}")),
+        ("sim_decode_lin_1.hlo.txt", format!("sim decode_lin k=1 vocab={VOCAB} weights={w}{d}")),
+        ("sim_decode_lin_5.hlo.txt", format!("sim decode_lin k=5 vocab={VOCAB} weights={w}{d}")),
+        ("sim_decode_lin_8.hlo.txt", format!("sim decode_lin k=8 vocab={VOCAB} weights={w}{d}")),
+        ("sim_decode_gen_20.hlo.txt", format!("sim decode_gen t_pad=20 vocab={VOCAB} weights={w}{d}")),
+        ("sim_decode_gen_64.hlo.txt", format!("sim decode_gen t_pad=64 vocab={VOCAB} weights={w}{d}")),
+        ("sim_decode_lin_1_b8.hlo.txt",
+         format!("sim decode_lin_b k=1 batch={SIM_MAX_BATCH} vocab={VOCAB} weights={w}{d}")),
+        ("sim_decode_gen_20_b8.hlo.txt",
+         format!("sim decode_gen_b t_pad=20 batch={SIM_MAX_BATCH} vocab={VOCAB} weights={w}{d}")),
+        ("sim_commit.hlo.txt", "sim commit slots=8".to_string()),
+    ]
+}
+
+fn executables_json() -> String {
+    let mut entries = vec![
+        format!(r#""prefill": {{"file":"sim_prefill.hlo.txt","kind":"prefill","prompt_len":{SIM_PREFILL_LEN}}}"#),
+    ];
+    for k in [1usize, 5, 8] {
+        entries.push(format!(
+            r#""decode_lin_{k}": {{"file":"sim_decode_lin_{k}.hlo.txt","kind":"decode_lin","k":{k}}}"#));
+    }
+    for t in [20usize, 64] {
+        entries.push(format!(
+            r#""decode_gen_{t}": {{"file":"sim_decode_gen_{t}.hlo.txt","kind":"decode_gen","t_pad":{t}}}"#));
+    }
+    for t in [1usize, 5, 8, 20, 64] {
+        entries.push(format!(
+            r#""commit_{t}": {{"file":"sim_commit.hlo.txt","kind":"commit","t_in":{t},"slots":8}}"#));
+    }
+    entries.push(format!(
+        r#""decode_lin_1_b8": {{"file":"sim_decode_lin_1_b8.hlo.txt","kind":"decode_batch","of":"decode_lin_1","batch":{SIM_MAX_BATCH}}}"#));
+    entries.push(format!(
+        r#""decode_gen_20_b8": {{"file":"sim_decode_gen_20_b8.hlo.txt","kind":"decode_batch","of":"decode_gen_20","batch":{SIM_MAX_BATCH}}}"#));
+    entries.join(",\n        ")
+}
+
+fn model_json(name: &str) -> String {
+    let rows = SIM_ROWS;
+    let exes = executables_json();
+    format!(
+        r#""{name}": {{
+      "config": {{"name":"{name}","n_layers":2,"d_model":64,"n_heads":4,
+                 "n_kv_heads":4,"head_dim":16,"max_seq":{rows},"params":100000}},
+      "weights_file": "weights_sim.npz",
+      "weight_names": ["embed","final_norm"],
+      "weight_shapes": [[{VOCAB},64],[64]],
+      "cache_shape": [2,2,{rows},64],
+      "junk_row": {junk},
+      "executables": {{
+        {exes}
+      }}
+    }}"#,
+        junk = rows - 1,
+    )
+}
+
+/// Write the simulated artifact directory (idempotent: existing files are
+/// overwritten with identical content).
+pub fn write_sim_artifacts(dir: impl AsRef<Path>) -> Result<()> {
+    write_sim_artifacts_with(dir, 0)
+}
+
+/// Like [`write_sim_artifacts`], with every decode launch sleeping
+/// `delay_ms` — token streams are identical to the instant variant; only
+/// wall-clock changes. Serving tests use this to make cancellation and
+/// grouping windows deterministic.
+pub fn write_sim_artifacts_with(dir: impl AsRef<Path>, delay_ms: u64) -> Result<()> {
+    let dir = dir.as_ref();
+    std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+    for (name, text) in exe_files(delay_ms) {
+        std::fs::write(dir.join(name), text).with_context(|| format!("writing {name}"))?;
+    }
+    std::fs::write(dir.join("weights_sim.npz"), b"SIMWEIGHTS")
+        .context("writing sim weights")?;
+    let manifest = format!(
+        r#"{{
+  "profile": "sim",
+  "prefill_len": {SIM_PREFILL_LEN},
+  "commit_slots": 8,
+  "vocab": {{"size": 259, "padded": {VOCAB}, "pad": 256, "bos": 257, "eos": 258}},
+  "models": {{
+    {tiny},
+    {draft}
+  }}
+}}"#,
+        tiny = model_json("tiny"),
+        draft = model_json("draft"),
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).context("writing sim manifest")?;
+    Ok(())
+}
+
+/// Serializes the check-then-write in the `ensure_*` helpers: parallel
+/// test threads must not interleave a `Manifest::load` with a concurrent
+/// (re)write of manifest.json. Directories are pid-keyed, so in-process
+/// exclusion is sufficient; manifest.json is also written last, after
+/// every file it references.
+static ENSURE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+/// Write (once per process) and return the shared sim artifact directory.
+/// Integration tests use this to exercise the full runtime/engine/serving
+/// stack without PJRT or `make artifacts`.
+pub fn ensure_sim_artifacts() -> Result<PathBuf> {
+    let _g = ENSURE_LOCK.lock().unwrap();
+    let dir = std::env::temp_dir()
+        .join(format!("la-sim-artifacts-v{SIM_FORMAT}-{}", std::process::id()));
+    if !dir.join("manifest.json").exists() {
+        write_sim_artifacts(&dir)?;
+    }
+    Ok(dir)
+}
+
+/// Slow-decode sibling of [`ensure_sim_artifacts`] (identical token
+/// streams, ~`5ms` per decode launch) for timing-sensitive serving tests.
+pub fn ensure_slow_sim_artifacts() -> Result<PathBuf> {
+    let _g = ENSURE_LOCK.lock().unwrap();
+    let dir = std::env::temp_dir()
+        .join(format!("la-sim-artifacts-v{SIM_FORMAT}-slow-{}", std::process::id()));
+    if !dir.join("manifest.json").exists() {
+        write_sim_artifacts_with(&dir, 5)?;
+    }
+    Ok(dir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::{cpu_client, Manifest, ModelRuntime};
+
+    #[test]
+    fn sim_artifacts_load_and_execute() {
+        let dir = ensure_sim_artifacts().unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        assert_eq!(manifest.profile, "sim");
+        assert_eq!(manifest.prefill_len, SIM_PREFILL_LEN);
+        let tiny = manifest.model("tiny").unwrap();
+        assert_eq!(tiny.capacity(), SIM_ROWS - 1);
+        assert_eq!(tiny.find_batched("decode_lin_1", 3),
+                   Some(("decode_lin_1_b8", SIM_MAX_BATCH)));
+
+        let client = cpu_client().unwrap();
+        let rt = ModelRuntime::load(&client, &manifest, "tiny").unwrap();
+        let prompt: Vec<u32> = vec![257, 10, 11, 12];
+        let (_, cache) = rt.prefill(&prompt).unwrap();
+        assert_eq!(cache.len, 3);
+        let step = rt.decode("decode_lin_1", &cache, &[12]).unwrap();
+        let next = step.logits.argmax(0, 259);
+        // deterministic: same call, same answer
+        let step2 = rt.decode("decode_lin_1", &cache, &[12]).unwrap();
+        assert_eq!(next, step2.logits.argmax(0, 259));
+        // commit advances the cache
+        let cache = rt.commit(cache, &step.new_kv, 1, &[0], 1).unwrap();
+        assert_eq!(cache.len, 4);
+    }
+
+    #[test]
+    fn sim_batched_decode_matches_sequential() {
+        let dir = ensure_sim_artifacts().unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        let client = cpu_client().unwrap();
+        let rt = ModelRuntime::load(&client, &manifest, "tiny").unwrap();
+
+        let (_, ca) = rt.prefill(&[257, 1, 2, 3]).unwrap();
+        let (_, cb) = rt.prefill(&[257, 9]).unwrap();
+        let sa = rt.decode("decode_lin_1", &ca, &[3]).unwrap();
+        let sb = rt.decode("decode_lin_1", &cb, &[9]).unwrap();
+
+        let fused = rt
+            .decode_batched("decode_lin_1", &[&ca, &cb], &[&[3], &[9]])
+            .unwrap();
+        assert_eq!(fused.len(), 2);
+        assert_eq!(fused[0].logits.data, sa.logits.data, "slot 0 diverged");
+        assert_eq!(fused[1].logits.data, sb.logits.data, "slot 1 diverged");
+
+        // the per-slot new_kv commits identically to the sequential one
+        let c_seq = rt.commit(ca, &sa.new_kv, 1, &[0], 1).unwrap();
+        let (_, ca2) = rt.prefill(&[257, 1, 2, 3]).unwrap();
+        let c_fused = rt.commit(ca2, &fused[0].new_kv, 1, &[0], 1).unwrap();
+        let after_seq = rt.decode("decode_lin_1", &c_seq, &[0]).unwrap();
+        let after_fused = rt.decode("decode_lin_1", &c_fused, &[0]).unwrap();
+        assert_eq!(after_seq.logits.data, after_fused.logits.data);
+    }
+
+    #[test]
+    fn missing_batched_exe_is_an_error() {
+        let dir = ensure_sim_artifacts().unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        let client = cpu_client().unwrap();
+        let rt = ModelRuntime::load(&client, &manifest, "tiny").unwrap();
+        let (_, c) = rt.prefill(&[257, 1]).unwrap();
+        let w = [1u32; 8];
+        // decode_lin_8 has no batched variant
+        assert!(rt.decode_batched("decode_lin_8", &[&c], &[&w[..]]).is_err());
+        assert_eq!(rt.max_batch("decode_lin_8"), None);
+        assert_eq!(rt.max_batch("decode_lin_1"), Some(SIM_MAX_BATCH));
+    }
+}

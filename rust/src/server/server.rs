@@ -40,6 +40,12 @@ pub struct ServerConfig {
     /// TTL decay for shared n-gram caches: entries untouched for this many
     /// ms are evicted on shard access (None = keep until LRU pressure).
     pub ngram_ttl_ms: Option<u64>,
+    /// Continuous batching: fuse compatible live sessions into one batched
+    /// decode call per scheduling round. Workers batch only when BOTH this
+    /// and their `WorkerConfig::batch_decode` are true (both default on),
+    /// so an explicit `false` at either level wins. The sequential
+    /// per-session path commits byte-identical token streams.
+    pub batch_decode: bool,
     pub worker: WorkerConfig,
 }
 
@@ -51,6 +57,7 @@ impl Default for ServerConfig {
             queue_depth: 256,
             share_ngrams: true,
             ngram_ttl_ms: None,
+            batch_decode: true,
             worker: WorkerConfig::default(),
         }
     }
@@ -119,11 +126,13 @@ impl ServerHandle {
         for wid in 0..cfg.workers.max(1) {
             let sched_c = sched.clone();
             let tx_c = tx.clone();
-            let wcfg = cfg.worker.clone();
+            let mut wcfg = cfg.worker.clone();
+            wcfg.batch_decode = cfg.batch_decode && cfg.worker.batch_decode;
             let caches_c = ngram_caches.clone();
             let cancels_c = cancels.clone();
+            let metrics_c = metrics.clone();
             worker_joins.push(std::thread::spawn(move || {
-                match Worker::start(wid, wcfg, caches_c, cancels_c) {
+                match Worker::start(wid, wcfg, caches_c, cancels_c, Some(metrics_c)) {
                     Ok(w) => w.run(sched_c, tx_c),
                     Err(e) => eprintln!("[ERROR] worker {wid} failed to start: {e}"),
                 }

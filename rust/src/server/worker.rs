@@ -9,10 +9,21 @@
 //! longer block short ones behind them (the single-worker head-of-line
 //! case), streaming requests emit chunks as steps commit, and cancellation
 //! is observed between steps — a cancelled request stops within one step.
+//!
+//! Continuous batching (`WorkerConfig::batch_decode`, default on): each
+//! scheduling round groups live sessions by their [`BatchStep`] group key
+//! (engine + executable + layout) and runs one *fused* decode call per
+//! group per step via [`crate::engine::step_group`], instead of one model
+//! call per session per step — the memory-bandwidth-bound decode cost is
+//! paid once per round. Sessions without batch support (or singleton
+//! groups) keep the per-session drive path; cancellation and deadlines are
+//! checked between fused rounds, so both still land within one decode
+//! step. Batched and sequential execution commit byte-identical token
+//! streams (`rust/tests/batched_equivalence.rs`).
 
 use std::collections::HashMap;
 use std::sync::mpsc::Sender;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -22,8 +33,10 @@ use crate::engine::jacobi::Jacobi;
 use crate::engine::lookahead::Lookahead;
 use crate::engine::prompt_lookup::PromptLookup;
 use crate::engine::spec_decode::SpecDecode;
-use crate::engine::{Decoder, DecodeSession, FinishReason, StepOutcome};
+use crate::engine::{step_group, BatchStep, Decoder, DecodeSession, FinishReason,
+                    StepOutcome};
 use crate::info;
+use crate::metrics::Registry;
 use crate::ngram::{NgramCacheRegistry, PoolHandle};
 use crate::runtime::{cpu_client, Manifest, ModelRuntime};
 use crate::server::request::{Reply, Request, Response, StreamChunk};
@@ -41,6 +54,10 @@ pub struct WorkerConfig {
     pub time_slice: usize,
     /// max concurrently interleaved sessions per worker.
     pub max_live: usize,
+    /// fuse compatible live sessions into one batched decode call per round
+    /// (falls back to per-session calls when the model has no batched
+    /// executable for a group).
+    pub batch_decode: bool,
 }
 
 impl Default for WorkerConfig {
@@ -52,6 +69,7 @@ impl Default for WorkerConfig {
             draft_model: "draft".into(),
             time_slice: 4,
             max_live: 4,
+            batch_decode: true,
         }
     }
 }
@@ -78,12 +96,16 @@ pub struct Worker {
     ngram_caches: Option<Arc<NgramCacheRegistry>>,
     /// server-level cancellation marks, checked between steps.
     cancels: Arc<CancelSet>,
+    /// server metrics (batched_rounds counter + batch_size histogram);
+    /// None for workers driven outside a [`crate::server::ServerHandle`].
+    metrics: Option<Arc<Mutex<Registry>>>,
 }
 
 impl Worker {
     pub fn start(id: usize, cfg: WorkerConfig,
                  ngram_caches: Option<Arc<NgramCacheRegistry>>,
-                 cancels: Arc<CancelSet>) -> Result<Worker> {
+                 cancels: Arc<CancelSet>,
+                 metrics: Option<Arc<Mutex<Registry>>>) -> Result<Worker> {
         let manifest = Manifest::load(&cfg.artifacts_dir)?;
         let client = cpu_client()?;
         let rt = ModelRuntime::load(&client, &manifest, &cfg.model)?;
@@ -95,6 +117,7 @@ impl Worker {
             tok: ByteTokenizer::new(),
             ngram_caches,
             cancels,
+            metrics,
         })
     }
 
@@ -191,47 +214,148 @@ impl Worker {
         })
     }
 
+    /// Emit the streaming chunk for one committed step (no-op for
+    /// non-streaming sessions or empty deltas).
+    fn emit_commit(ls: &mut LiveSession, tokens: &[u32], tok: &ByteTokenizer,
+                   replies: &Sender<Reply>) {
+        if ls.stream && !tokens.is_empty() {
+            let delta = ls.dec.push(&tok.bytes(tokens));
+            if !delta.is_empty() {
+                ls.seq += 1;
+                let _ = replies.send(Reply::Chunk(StreamChunk {
+                    id: ls.id,
+                    seq: ls.seq,
+                    delta,
+                }));
+            }
+        }
+    }
+
+    /// Check the session's stop signals (cancellation mark, deadline);
+    /// returns true when the session is stopped or already finished.
+    fn check_stops(ls: &mut LiveSession, cancels: &CancelSet) -> bool {
+        if ls.sess.finished().is_some() || ls.error.is_some() {
+            return true;
+        }
+        if cancels.contains(ls.id) {
+            ls.sess.cancel(FinishReason::Cancelled);
+            return true;
+        }
+        if let Some(d) = ls.deadline {
+            if Instant::now() >= d {
+                ls.sess.cancel(FinishReason::Deadline);
+                return true;
+            }
+        }
+        false
+    }
+
     /// Run one time-slice for a session: up to `slice` steps, checking
     /// cancellation and the deadline before each. Emits streaming chunks.
-    /// Returns true when the session is ready to retire.
+    /// Readiness to retire is left on the session (`finished()` / `error`)
+    /// for the caller's post-round sweep.
     fn drive(ls: &mut LiveSession, slice: usize, tok: &ByteTokenizer,
-             cancels: &CancelSet, replies: &Sender<Reply>) -> bool {
+             cancels: &CancelSet, replies: &Sender<Reply>) {
         for _ in 0..slice {
-            if ls.sess.finished().is_some() {
-                return true;
-            }
-            if cancels.contains(ls.id) {
-                ls.sess.cancel(FinishReason::Cancelled);
-                return true;
-            }
-            if let Some(d) = ls.deadline {
-                if Instant::now() >= d {
-                    ls.sess.cancel(FinishReason::Deadline);
-                    return true;
-                }
+            if Self::check_stops(ls, cancels) {
+                return;
             }
             match ls.sess.step() {
                 Ok(StepOutcome::Committed { tokens }) => {
-                    if ls.stream && !tokens.is_empty() {
-                        let delta = ls.dec.push(&tok.bytes(&tokens));
-                        if !delta.is_empty() {
-                            ls.seq += 1;
-                            let _ = replies.send(Reply::Chunk(StreamChunk {
-                                id: ls.id,
-                                seq: ls.seq,
-                                delta,
-                            }));
-                        }
-                    }
+                    Self::emit_commit(ls, &tokens, tok, replies);
                 }
-                Ok(StepOutcome::Finished { .. }) => return true,
+                Ok(StepOutcome::Finished { .. }) => return,
                 Err(e) => {
                     ls.error = Some(e.to_string());
-                    return true;
+                    return;
                 }
             }
         }
-        ls.sess.finished().is_some()
+    }
+
+    /// The per-session batch-group key; None = this session cannot batch.
+    fn group_key(ls: &LiveSession) -> Option<String> {
+        ls.sess.batch_ref().map(|b| b.group_key())
+    }
+
+    /// One `BatchedRound`: group live sessions by batch key and give every
+    /// group `slice` *fused* decode steps (one `step_group` call per step
+    /// per group). Singleton and non-batchable sessions fall back to the
+    /// sequential [`Worker::drive`] path for their slice. Stop signals are
+    /// checked between fused rounds, so a cancel or deadline inside a
+    /// batched round still lands within one decode step. Retirement is the
+    /// caller's job (sweep on `finished()`/`error`).
+    fn batched_round<'rt>(rt: &'rt ModelRuntime, live: &mut [LiveSession<'rt>],
+                          slice: usize, tok: &ByteTokenizer, cancels: &CancelSet,
+                          replies: &Sender<Reply>,
+                          metrics: &Option<Arc<Mutex<Registry>>>) {
+        // contiguous runs of one group key; stable per-key arrival order.
+        // group_key allocates, so keys are computed once for the sort
+        // (cached) and once more for the run scan — 2N small allocations
+        // per round, not O(N log N).
+        live.sort_by_cached_key(Self::group_key);
+        let keys: Vec<Option<String>> = live.iter().map(Self::group_key).collect();
+        let mut at = 0;
+        while at < live.len() {
+            let mut end = at + 1;
+            while end < keys.len() && keys[end] == keys[at] {
+                end += 1;
+            }
+            if keys[at].is_none() || end - at == 1 {
+                for ls in live[at..end].iter_mut() {
+                    Self::drive(ls, slice, tok, cancels, replies);
+                }
+            } else {
+                Self::drive_group(rt, &mut live[at..end], slice, tok, cancels,
+                                  replies, metrics);
+            }
+            at = end;
+        }
+    }
+
+    /// `slice` fused steps for one compatible group.
+    fn drive_group<'rt>(rt: &'rt ModelRuntime, group: &mut [LiveSession<'rt>],
+                        slice: usize, tok: &ByteTokenizer, cancels: &CancelSet,
+                        replies: &Sender<Reply>,
+                        metrics: &Option<Arc<Mutex<Registry>>>) {
+        for _ in 0..slice {
+            // stop checks between fused rounds (cancel/deadline land
+            // within one decode step, batched or not)
+            let mut active: Vec<usize> = Vec::new();
+            for (i, ls) in group.iter_mut().enumerate() {
+                if !Self::check_stops(ls, cancels) {
+                    active.push(i);
+                }
+            }
+            if active.is_empty() {
+                return;
+            }
+            let mut refs: Vec<&mut (dyn DecodeSession + '_)> = group
+                .iter_mut()
+                .enumerate()
+                .filter(|(i, _)| active.contains(i))
+                .map(|(_, ls)| ls.sess.as_mut())
+                .collect();
+            let out = step_group(rt, &mut refs);
+            drop(refs);
+            if let Some(m) = metrics {
+                let mut m = m.lock().unwrap();
+                for sz in &out.fused {
+                    m.inc("batched_rounds", 1);
+                    m.observe("batch_size", *sz as f64);
+                }
+            }
+            for (k, res) in out.outcomes.into_iter().enumerate() {
+                let ls = &mut group[active[k]];
+                match res {
+                    Ok(StepOutcome::Committed { tokens }) => {
+                        Self::emit_commit(ls, &tokens, tok, replies);
+                    }
+                    Ok(StepOutcome::Finished { .. }) => {}
+                    Err(e) => ls.error = Some(e.to_string()),
+                }
+            }
+        }
     }
 
     /// Deliver the final record for a finished/cancelled/failed session.
@@ -260,12 +384,16 @@ impl Worker {
     }
 
     /// Worker main loop: admit up to `max_live` sessions (blocking on the
-    /// scheduler only when idle), then round-robin `time_slice` steps per
-    /// session per round until the scheduler closes and all sessions drain.
+    /// scheduler only when idle), then run one scheduling round — fused
+    /// batched rounds when `batch_decode` is on, else `time_slice` steps
+    /// per session — until the scheduler closes and all sessions drain.
     pub fn run(self, sched: Arc<Scheduler>, replies: Sender<Reply>) {
-        info!("worker", "worker {} ready (model={}, time_slice={}, max_live={})",
-              self.id, self.cfg.model, self.cfg.time_slice, self.cfg.max_live);
-        let Worker { id, cfg, manifest, rt, tok, ngram_caches, cancels } = self;
+        info!("worker",
+              "worker {} ready (model={}, time_slice={}, max_live={}, batch={})",
+              self.id, self.cfg.model, self.cfg.time_slice, self.cfg.max_live,
+              self.cfg.batch_decode);
+        let Worker { id, cfg, manifest, rt, tok, ngram_caches, cancels, metrics } =
+            self;
         let max_live = cfg.max_live.max(1);
         let slice = cfg.time_slice.max(1);
         let mut engines: HashMap<String, Box<dyn Decoder>> = HashMap::new();
@@ -291,10 +419,21 @@ impl Worker {
                     }
                 }
             }
-            // -- one scheduling round: a slice per live session --------------
+            // -- one scheduling round ----------------------------------------
+            if cfg.batch_decode && live.len() > 1 {
+                Self::batched_round(&rt, &mut live, slice, &tok, &cancels, &replies,
+                                    &metrics);
+            } else {
+                // sequential: a slice per live session
+                for ls in live.iter_mut() {
+                    Self::drive(ls, slice, &tok, &cancels, &replies);
+                }
+            }
+            // -- retirement sweep: deliver final records for every session
+            //    the round finished, cancelled, or failed -------------------
             let mut i = 0;
             while i < live.len() {
-                if Self::drive(&mut live[i], slice, &tok, &cancels, &replies) {
+                if live[i].sess.finished().is_some() || live[i].error.is_some() {
                     let ls = live.swap_remove(i);
                     if !Self::retire(ls, &cancels, &replies) {
                         break 'serve; // server gone

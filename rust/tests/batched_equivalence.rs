@@ -1,0 +1,472 @@
+//! Batched-vs-sequential equivalence suite — the central invariant of the
+//! continuous-batching subsystem: fusing live sessions into one batched
+//! decode call per round commits **byte-identical token streams** to
+//! driving each session with per-session calls.
+//!
+//! Runs against the simulated artifacts
+//! (`lookahead::runtime::sim::write_sim_artifacts` + the vendored xla
+//! stub's deterministic LM), so the whole path — runtime, engines,
+//! `step_group`, `BatchedRound` serving — executes for real without PJRT.
+//!
+//! Claims pinned here:
+//!   1. For autoregressive and lookahead engines, batch sizes 1/2/5 with
+//!      mixed prompt lengths: identical tokens, identical
+//!      `DecodeStats.generated_tokens` / `decode_steps`, identical
+//!      per-step delta sequences (private pools).
+//!   2. Works under sampling (per-session RNG state is batch-invariant).
+//!   3. Mixed-engine groups fuse per group key and stay correct.
+//!   4. A `ServerHandle` with `batch_decode` on serves the same streams
+//!      (chunk deltas + final records) as one with it off, and reports
+//!      `batched_rounds` / `batch_size` metrics.
+//!   5. Property: random open/cancel interleavings never leak tokens
+//!      across sessions and always end in well-formed final records.
+
+use std::collections::HashMap;
+
+use lookahead::engine::autoregressive::AutoRegressive;
+use lookahead::engine::lookahead::Lookahead;
+use lookahead::engine::{step_group, Decoder, DecodeSession, GenParams, SamplingParams,
+                        StepOutcome};
+use lookahead::ngram::PoolHandle;
+use lookahead::runtime::sim::{ensure_sim_artifacts, ensure_slow_sim_artifacts};
+use lookahead::runtime::{cpu_client, Manifest, ModelRuntime};
+use lookahead::server::{Policy, Reply, Request, Response, ServerConfig, ServerHandle,
+                        WorkerConfig};
+use lookahead::tokenizer::ByteTokenizer;
+use lookahead::util::prop::forall;
+use lookahead::util::rng::Rng;
+
+fn sim_dir() -> String {
+    ensure_sim_artifacts().unwrap().to_string_lossy().into_owned()
+}
+
+fn setup() -> ModelRuntime {
+    let manifest = Manifest::load(sim_dir()).unwrap();
+    let client = cpu_client().unwrap();
+    ModelRuntime::load(&client, &manifest, "tiny").unwrap()
+}
+
+const PROMPTS: [&str; 5] = [
+    "def add_ab(a, b):\n    result = a",
+    "Q: 12 + 34?\n",
+    "the quick brown fox jumps over",
+    "x",
+    "lorem ipsum dolor sit amet, consectetur",
+];
+
+fn prompt_ids(n: usize) -> Vec<Vec<u32>> {
+    let tok = ByteTokenizer::new();
+    PROMPTS.iter().cycle().take(n).map(|t| tok.encode_with_bos(t)).collect()
+}
+
+/// Everything a run commits, step-structured.
+#[derive(Debug, PartialEq)]
+struct RunLog {
+    tokens: Vec<u32>,
+    deltas: Vec<Vec<u32>>,
+    generated: usize,
+    steps: usize,
+}
+
+fn run_sequential(engine: &dyn Decoder, rt: &ModelRuntime, prompt: &[u32],
+                  params: &GenParams) -> RunLog {
+    let pool = PoolHandle::for_spec(engine.pool_spec());
+    let mut sess = engine.begin(rt, prompt, params, pool).unwrap();
+    let mut deltas = Vec::new();
+    loop {
+        match sess.step().unwrap() {
+            // skip empty commits (an EOS-first step trims to nothing) so
+            // delta logs match what the streaming layer would emit
+            StepOutcome::Committed { tokens } if !tokens.is_empty() => {
+                deltas.push(tokens)
+            }
+            StepOutcome::Committed { .. } => {}
+            StepOutcome::Finished { .. } => break,
+        }
+    }
+    let (out, _) = sess.into_output();
+    RunLog {
+        tokens: out.tokens,
+        deltas,
+        generated: out.stats.generated_tokens,
+        steps: out.stats.decode_steps,
+    }
+}
+
+/// Drive a set of already-opened sessions to completion through
+/// `step_group` (one fused round per iteration). Returns per-session logs
+/// plus the sizes of every fused call issued.
+fn drain_group(rt: &ModelRuntime, mut sessions: Vec<Box<dyn DecodeSession + '_>>)
+               -> (Vec<RunLog>, Vec<usize>) {
+    let n = sessions.len();
+    let mut deltas: Vec<Vec<Vec<u32>>> = vec![Vec::new(); n];
+    let mut fused_sizes: Vec<usize> = Vec::new();
+    loop {
+        let active: Vec<usize> =
+            (0..n).filter(|&i| sessions[i].finished().is_none()).collect();
+        if active.is_empty() {
+            break;
+        }
+        let mut refs: Vec<&mut (dyn DecodeSession + '_)> = sessions
+            .iter_mut()
+            .enumerate()
+            .filter(|(i, _)| active.contains(i))
+            .map(|(_, s)| s.as_mut())
+            .collect();
+        let out = step_group(rt, &mut refs);
+        drop(refs);
+        fused_sizes.extend(out.fused);
+        for (k, res) in out.outcomes.into_iter().enumerate() {
+            if let StepOutcome::Committed { tokens } = res.unwrap() {
+                if !tokens.is_empty() {
+                    deltas[active[k]].push(tokens);
+                }
+            }
+        }
+    }
+    let logs = sessions
+        .into_iter()
+        .zip(deltas)
+        .map(|(s, d)| {
+            let (out, _) = s.into_output();
+            RunLog {
+                tokens: out.tokens,
+                deltas: d,
+                generated: out.stats.generated_tokens,
+                steps: out.stats.decode_steps,
+            }
+        })
+        .collect();
+    (logs, fused_sizes)
+}
+
+fn run_batched(engine: &dyn Decoder, rt: &ModelRuntime, prompts: &[Vec<u32>],
+               params: &GenParams) -> (Vec<RunLog>, Vec<usize>) {
+    let sessions: Vec<Box<dyn DecodeSession + '_>> = prompts
+        .iter()
+        .map(|p| {
+            engine
+                .begin(rt, p, params, PoolHandle::for_spec(engine.pool_spec()))
+                .unwrap()
+        })
+        .collect();
+    drain_group(rt, sessions)
+}
+
+#[test]
+fn batched_matches_sequential_at_batch_1_2_5() {
+    let rt = setup();
+    let engines: Vec<Box<dyn Decoder>> =
+        vec![Box::new(AutoRegressive::new()), Box::new(Lookahead::with_wng(5, 3, 5))];
+    let params = GenParams { max_new_tokens: 32, ..Default::default() };
+    for engine in &engines {
+        for batch in [1usize, 2, 5] {
+            let prompts = prompt_ids(batch);
+            let seq: Vec<RunLog> = prompts
+                .iter()
+                .map(|p| run_sequential(engine.as_ref(), &rt, p, &params))
+                .collect();
+            let (bat, fused) = run_batched(engine.as_ref(), &rt, &prompts, &params);
+            if batch == 1 {
+                // singleton groups take the per-session executable (a padded
+                // fused launch would waste bandwidth for identical bytes)
+                assert!(fused.is_empty(),
+                        "{}: singleton group must not fuse", engine.name());
+            } else {
+                assert!(!fused.is_empty(), "{}: batch {batch} issued no fused calls",
+                        engine.name());
+                assert!(fused.iter().all(|&s| (2..=batch).contains(&s)));
+            }
+            for (i, (s, b)) in seq.iter().zip(&bat).enumerate() {
+                assert_eq!(s.tokens, b.tokens,
+                           "{}: batch {batch} session {i}: tokens diverged",
+                           engine.name());
+                assert_eq!(s.deltas, b.deltas,
+                           "{}: batch {batch} session {i}: step deltas diverged",
+                           engine.name());
+                assert_eq!(s.generated, b.generated,
+                           "{}: batch {batch} session {i}: generated_tokens diverged",
+                           engine.name());
+                assert_eq!(s.steps, b.steps,
+                           "{}: batch {batch} session {i}: decode_steps diverged",
+                           engine.name());
+            }
+            // the suite must exercise real decoding, not 5 EOS-first stubs
+            // (one prompt intentionally EOSes immediately — the empty-stream
+            // edge case — but not all of them)
+            assert!(seq.iter().map(|l| l.tokens.len()).sum::<usize>() > 0,
+                    "{}: batch {batch}: every run was empty", engine.name());
+        }
+    }
+}
+
+#[test]
+fn batched_matches_sequential_under_sampling() {
+    let rt = setup();
+    let engine = AutoRegressive::new();
+    let params = GenParams {
+        max_new_tokens: 24,
+        sampling: SamplingParams { temperature: 0.8, top_k: 40, top_p: 0.95 },
+        stop_at_eos: true,
+        seed: 7,
+    };
+    let prompts = prompt_ids(3);
+    let seq: Vec<RunLog> =
+        prompts.iter().map(|p| run_sequential(&engine, &rt, p, &params)).collect();
+    let (bat, _) = run_batched(&engine, &rt, &prompts, &params);
+    for (s, b) in seq.iter().zip(&bat) {
+        assert_eq!(s.tokens, b.tokens, "sampled batched run diverged");
+        assert_eq!(s.deltas, b.deltas);
+    }
+}
+
+#[test]
+fn mixed_engine_group_fuses_per_key_and_stays_correct() {
+    let rt = setup();
+    let ar = AutoRegressive::new();
+    let la = Lookahead::with_wng(5, 3, 5);
+    let params = GenParams { max_new_tokens: 24, ..Default::default() };
+    let prompts = prompt_ids(4);
+
+    let seq: Vec<RunLog> = vec![
+        run_sequential(&ar, &rt, &prompts[0], &params),
+        run_sequential(&la, &rt, &prompts[1], &params),
+        run_sequential(&ar, &rt, &prompts[2], &params),
+        run_sequential(&la, &rt, &prompts[3], &params),
+    ];
+
+    let sessions: Vec<Box<dyn DecodeSession + '_>> = vec![
+        ar.begin(&rt, &prompts[0], &params, PoolHandle::none()).unwrap(),
+        la.begin(&rt, &prompts[1], &params, PoolHandle::for_spec(la.pool_spec()))
+            .unwrap(),
+        ar.begin(&rt, &prompts[2], &params, PoolHandle::none()).unwrap(),
+        la.begin(&rt, &prompts[3], &params, PoolHandle::for_spec(la.pool_spec()))
+            .unwrap(),
+    ];
+    let (bat, fused) = drain_group(&rt, sessions);
+    // two engines -> two fused calls per round while all four run
+    assert!(fused.iter().any(|&s| s == 2), "expected fused pairs, got {fused:?}");
+    for (i, (s, b)) in seq.iter().zip(&bat).enumerate() {
+        assert_eq!(s.tokens, b.tokens, "mixed group session {i} diverged");
+        assert_eq!(s.deltas, b.deltas, "mixed group session {i} deltas diverged");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// serving-layer equivalence: BatchedRound vs sequential drive
+// ---------------------------------------------------------------------------
+
+fn server_cfg(artifacts: String, batch: bool, max_live: usize, time_slice: usize)
+              -> ServerConfig {
+    ServerConfig {
+        workers: 1,
+        policy: Policy::Fifo,
+        queue_depth: 64,
+        // private pools: each session's stream is then a pure function of
+        // its own request, so streams are invariant to batching AND to
+        // admission timing (shared pools keep bytes identical but may move
+        // step boundaries — see DESIGN.md §3c)
+        share_ngrams: false,
+        ngram_ttl_ms: None,
+        batch_decode: batch,
+        worker: WorkerConfig {
+            artifacts_dir: artifacts,
+            model: "tiny".into(),
+            wng: (5, 3, 5),
+            time_slice,
+            max_live,
+            ..WorkerConfig::default()
+        },
+    }
+}
+
+/// Slow-decode sim artifacts (identical token streams, ~5ms per decode
+/// launch): submissions land well inside request 1's first steps, so the
+/// batched server demonstrably groups sessions.
+fn slow_dir() -> String {
+    ensure_slow_sim_artifacts().unwrap().to_string_lossy().into_owned()
+}
+
+fn requests() -> Vec<Request> {
+    PROMPTS
+        .iter()
+        .enumerate()
+        .map(|(i, p)| Request {
+            prompt: (*p).into(),
+            max_tokens: 24 + 4 * i,
+            method: if i % 2 == 0 { "autoregressive" } else { "lookahead" }.into(),
+            stream: true,
+            ..Default::default()
+        })
+        .collect()
+}
+
+/// Submit `reqs` and collect (chunk deltas, final record) per request.
+fn serve_all(h: &ServerHandle, reqs: Vec<Request>) -> Vec<(Vec<String>, Response)> {
+    let streams: Vec<_> = reqs.into_iter().map(|r| h.submit(r).unwrap()).collect();
+    streams
+        .into_iter()
+        .map(|rs| {
+            let mut deltas = Vec::new();
+            loop {
+                match rs.recv().unwrap() {
+                    Reply::Chunk(c) => {
+                        assert_eq!(c.id, rs.id, "chunk routed to the wrong stream");
+                        deltas.push(c.delta);
+                    }
+                    Reply::Done(resp) => {
+                        assert_eq!(resp.id, rs.id);
+                        return (deltas, resp);
+                    }
+                }
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn server_batched_serving_matches_sequential_serving() {
+    let h_seq = ServerHandle::start(server_cfg(slow_dir(), false, 5, 2)).unwrap();
+    let seq = serve_all(&h_seq, requests());
+    h_seq.shutdown();
+
+    let h_bat = ServerHandle::start(server_cfg(slow_dir(), true, 5, 2)).unwrap();
+    let bat = serve_all(&h_bat, requests());
+
+    for (i, ((sd, sr), (bd, br))) in seq.iter().zip(&bat).enumerate() {
+        assert!(sr.error.is_none() && br.error.is_none(), "request {i} errored");
+        assert_eq!(sr.text, br.text, "request {i}: final text diverged");
+        assert_eq!(sr.tokens, br.tokens, "request {i}: token count diverged");
+        assert_eq!(sr.finish, br.finish, "request {i}: finish reason diverged");
+        assert_eq!(sd, bd, "request {i}: streaming delta sequence diverged");
+        assert_eq!(sd.concat(), sr.text, "request {i}: deltas must rebuild text");
+    }
+
+    // the batched server must actually have fused rounds, and say so
+    {
+        let mut m = h_bat.metrics.lock().unwrap();
+        assert!(m.counter("batched_rounds") > 0,
+                "batch_decode server never fused a round");
+        let sizes = m.histograms.get_mut("batch_size").expect("batch_size histogram");
+        assert!(sizes.max() >= 2.0, "fused rounds never reached batch >= 2");
+    }
+    h_bat.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// property: random open/cancel interleavings across batched rounds
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_random_interleave_never_crosses_sessions() {
+    // instant decodes: cancels usually land after natural completion (the
+    // reference-equality oracle) and occasionally mid-run (the partial
+    // path, deterministically covered by rust/tests/streaming.rs)
+    let h = ServerHandle::start(server_cfg(sim_dir(), true, 4, 1)).unwrap();
+    let rt = setup();
+    let tok = ByteTokenizer::new();
+    // solo reference outputs, computed on demand per (prompt, method, max)
+    let mut refs: HashMap<(usize, usize, usize), String> = HashMap::new();
+    let mut reference = |pi: usize, mi: usize, max: usize| -> String {
+        refs.entry((pi, mi, max))
+            .or_insert_with(|| {
+                let params = GenParams { max_new_tokens: max, ..Default::default() };
+                let ids = tok.encode_with_bos(PROMPTS[pi]);
+                let out;
+                if mi == 0 {
+                    let mut e = AutoRegressive::new();
+                    out = e.generate(&rt, &ids, &params);
+                } else {
+                    let mut e = Lookahead::with_wng(5, 3, 5);
+                    out = e.generate(&rt, &ids, &params);
+                }
+                out.unwrap().text
+            })
+            .clone()
+    };
+
+    forall(
+        10,
+        0xBA7C4,
+        |r: &mut Rng| -> Vec<(usize, usize, usize)> {
+            let n = r.range(2, 6);
+            (0..n)
+                .map(|_| {
+                    // (prompt index, max_tokens, cancel-after-k-chunks; 0 = run
+                    // to completion)
+                    (r.below(PROMPTS.len()), r.range(4, 40), r.below(4))
+                })
+                .collect()
+        },
+        |script| {
+            let streams: Vec<_> = script
+                .iter()
+                .map(|&(pi, max, _)| {
+                    h.submit(Request {
+                        prompt: PROMPTS[pi].into(),
+                        max_tokens: max,
+                        method: if pi % 2 == 0 { "autoregressive" } else { "lookahead" }
+                            .into(),
+                        stream: true,
+                        ..Default::default()
+                    })
+                    .map_err(|e| e.to_string())
+                })
+                .collect::<Result<_, _>>()?;
+            for (rs, &(pi, max, cancel_after)) in streams.iter().zip(script.iter()) {
+                let mut deltas = String::new();
+                let mut chunks = 0usize;
+                let mut last_seq = 0u64;
+                let done = loop {
+                    match rs.recv().map_err(|e| e.to_string())? {
+                        Reply::Chunk(c) => {
+                            if c.id != rs.id {
+                                return Err(format!("chunk id {} on stream {}", c.id,
+                                                   rs.id));
+                            }
+                            if c.seq <= last_seq {
+                                return Err("chunk seq not increasing".into());
+                            }
+                            last_seq = c.seq;
+                            chunks += 1;
+                            deltas.push_str(&c.delta);
+                            if cancel_after > 0 && chunks == cancel_after {
+                                h.cancel(rs.id);
+                            }
+                        }
+                        Reply::Done(resp) => break resp,
+                    }
+                };
+                if done.id != rs.id {
+                    return Err("final record routed to the wrong stream".into());
+                }
+                if let Some(e) = &done.error {
+                    return Err(format!("request errored: {e}"));
+                }
+                if done.finish.is_empty() {
+                    return Err("final record missing finish reason".into());
+                }
+                if deltas != done.text {
+                    return Err(format!(
+                        "deltas do not rebuild final text ({} vs {} bytes)",
+                        deltas.len(), done.text.len()));
+                }
+                if done.tokens > max {
+                    return Err("budget exceeded".into());
+                }
+                // completed requests must be byte-identical to a solo run of
+                // the same request — the strongest no-cross-talk oracle
+                if done.finish == "eos" || done.finish == "budget" {
+                    let want = reference(pi, pi % 2, max);
+                    if done.text != want {
+                        return Err(format!(
+                            "completed text diverged from solo reference \
+                             (prompt {pi}, max {max})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+    h.shutdown();
+}

@@ -20,6 +20,7 @@ fn cfg() -> ServerConfig {
         queue_depth: 64,
         share_ngrams: true,
         ngram_ttl_ms: None,
+        batch_decode: true,
         worker: WorkerConfig {
             artifacts_dir: "artifacts".into(),
             model: "tiny".into(),

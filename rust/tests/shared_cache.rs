@@ -135,6 +135,7 @@ fn server_cfg(share: bool) -> ServerConfig {
         queue_depth: 64,
         share_ngrams: share,
         ngram_ttl_ms: None,
+        batch_decode: true,
         worker: WorkerConfig {
             artifacts_dir: "artifacts".into(),
             model: "tiny".into(),

@@ -153,6 +153,7 @@ fn cfg(max_live: usize, time_slice: usize) -> ServerConfig {
         queue_depth: 64,
         share_ngrams: true,
         ngram_ttl_ms: None,
+        batch_decode: true,
         worker: WorkerConfig {
             artifacts_dir: "artifacts".into(),
             model: "tiny".into(),
@@ -290,6 +291,98 @@ fn deadline_expires_to_partial_record() {
     assert!(resp.tokens < 512);
     let m = h.metrics.lock().unwrap().counter("finish_deadline");
     assert_eq!(m, 1);
+    h.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// batched-round cancellation (simulated artifacts: runs without PJRT)
+// ---------------------------------------------------------------------------
+
+/// Regression for the batched drive loop: the worker must check the
+/// `CancelSet` between *fused rounds* (not just between whole slices), so a
+/// cancel arriving while a session sits inside a batched group still lands
+/// within one decode step and yields a well-formed partial record — while
+/// the group's other member keeps decoding unharmed.
+#[test]
+fn batched_round_cancel_lands_within_one_step() {
+    // slow sim artifacts (~5ms per decode launch): the cancel round-trip is
+    // orders of magnitude shorter than the remaining generation, so "stops
+    // within one step" is observable without PJRT
+    let dir = lookahead::runtime::sim::ensure_slow_sim_artifacts().unwrap();
+    let mut c = cfg(4, 4);
+    c.worker.artifacts_dir = dir.to_string_lossy().into_owned();
+    c.batch_decode = true;
+    c.share_ngrams = false;
+    let h = ServerHandle::start(c).unwrap();
+
+    // pick a prompt whose (deterministic) sim generation runs >= 48 tokens
+    // before its natural EOS (>= 240ms of decode wall under the slow
+    // artifacts) — probe with the instant artifacts
+    let tok = ByteTokenizer::new();
+    let fast = lookahead::runtime::sim::ensure_sim_artifacts().unwrap();
+    let manifest = Manifest::load(&fast).unwrap();
+    let client = cpu_client().unwrap();
+    let rt = ModelRuntime::load(&client, &manifest, "tiny").unwrap();
+    let mut ar = AutoRegressive::new();
+    let candidates: Vec<String> =
+        (0..32).map(|i| format!("probe prompt #{i}: def f_{i}(x):\n    return x")).collect();
+    let prompt: &str = candidates
+        .iter()
+        .map(String::as_str)
+        .find(|p| {
+            let ids = tok.encode_with_bos(p);
+            let params = GenParams { max_new_tokens: 512, ..Default::default() };
+            ar.generate(&rt, &ids, &params).unwrap().tokens.len() >= 48
+        })
+        .expect("no sim prompt decodes >= 48 tokens");
+
+    let mk = |max| {
+        let mut r = req(prompt, max);
+        r.method = "autoregressive".into();
+        r.stream = true;
+        r
+    };
+    let a = h.submit(mk(512)).unwrap();
+    let b = h.submit(mk(512)).unwrap();
+
+    // wait until BOTH sessions demonstrably decode (so they coexist in one
+    // batched group), then cancel A
+    let first_a = loop {
+        match a.recv().unwrap() {
+            Reply::Chunk(ch) => break ch,
+            Reply::Done(r) => panic!("A finished before first chunk: {r:?}"),
+        }
+    };
+    loop {
+        match b.recv().unwrap() {
+            Reply::Chunk(_) => break,
+            Reply::Done(r) => panic!("B finished before first chunk: {r:?}"),
+        }
+    }
+    assert!(h.cancel(a.id), "in-flight cancel must be accepted");
+
+    let mut streamed = first_a.delta.clone();
+    let done_a = loop {
+        match a.recv().unwrap() {
+            Reply::Chunk(c) => streamed.push_str(&c.delta),
+            Reply::Done(r) => break r,
+        }
+    };
+    assert!(done_a.error.is_none(), "{:?}", done_a.error);
+    assert_eq!(done_a.finish, "cancelled");
+    assert!(done_a.tokens > 0, "partial must keep pre-cancel tokens");
+    assert!(done_a.tokens < 512, "cancelled request must stop early");
+    assert_eq!(streamed, done_a.text, "partial record must be well-formed");
+
+    // the surviving group member is unaffected
+    let done_b = b.wait().unwrap();
+    assert!(done_b.error.is_none(), "{:?}", done_b.error);
+    assert!(done_b.tokens > done_a.tokens,
+            "survivor must outlive the cancelled session");
+
+    // and the batched path provably ran while both were live
+    assert!(h.metrics.lock().unwrap().counter("batched_rounds") > 0,
+            "cancel regression must exercise the batched drive loop");
     h.shutdown();
 }
 

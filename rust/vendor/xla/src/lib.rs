@@ -1,15 +1,57 @@
-//! Offline stub of the `xla` PJRT bindings.
+//! Offline stub of the `xla` PJRT bindings — now with a deterministic
+//! simulation backend.
 //!
 //! The serving coordinator (`rust/src/runtime/`) talks to PJRT through this
 //! crate's API. The real build links the patched xla-rs bindings (native
-//! PJRT CPU plugin + `untuple_result` patch); this stub reproduces the exact
+//! PJRT CPU plugin + `untuple_result` patch). This stub reproduces the exact
 //! API surface the coordinator uses so the whole workspace compiles, lints,
-//! and unit-tests on machines without the PJRT toolchain. Every runtime
-//! entry point returns [`Error`] — integration tests and benches that need
-//! real artifacts gate on `artifacts/manifest.json` and skip cleanly.
+//! and tests on machines without the PJRT toolchain — and it can *execute*
+//! a small class of artifacts: HLO text files whose first line is a
+//! `sim <kind> key=value ...` directive (written by
+//! `lookahead::runtime::sim::write_sim_artifacts`). Real HLO text still
+//! fails with the historical "PJRT runtime unavailable" error at compile
+//! time, so integration tests that need real artifacts keep gating on
+//! `artifacts/manifest.json` and skipping cleanly.
+//!
+//! ## The simulated model
+//!
+//! The sim implements a *deterministic causal language model* over token-id
+//! sequences, with the same calling convention as the AOT-lowered
+//! executables (see `rust/src/runtime/manifest.rs` for parameter order):
+//!
+//! - a KV-cache row holds exactly the token id committed at that absolute
+//!   position (junk rows hold -1);
+//! - the logits for a query are a pure function of the ordered sequence of
+//!   `(absolute position, token)` pairs the query attends to: the committed
+//!   prefix (cache rows `0..cache_len`), then the intra-step tokens visible
+//!   under the causal chain (linear order for `decode_lin`, the caller's
+//!   mask/relpos for `decode_gen`, position = `cache_len + relpos`);
+//! - the argmax token follows short predictable ramps with occasional
+//!   hash-driven jumps and rare EOS emissions, so speculation (n-gram pools,
+//!   draft models, Jacobi fixed points) gets realistic accept lengths while
+//!   every engine's greedy output stays byte-exact with autoregressive
+//!   decoding.
+//!
+//! Because the logits depend only on the attended `(position, token)`
+//! sequence, batched executables (`decode_lin_b` / `decode_gen_b`) are
+//! bit-identical to running their per-session base executable once per
+//! slot — the invariant the batched-vs-sequential equivalence suite pins.
+//!
+//! Directive grammar (first whitespace-separated line of the .hlo.txt file):
+//!
+//!   sim prefill      plen=P rows=S vocab=V weights=K
+//!   sim decode_lin   k=T vocab=V weights=K [delay_ms=D]
+//!   sim decode_gen   t_pad=T vocab=V weights=K [delay_ms=D]
+//!   sim decode_lin_b k=T batch=B vocab=V weights=K [delay_ms=D]
+//!   sim decode_gen_b t_pad=T batch=B vocab=V weights=K [delay_ms=D]
+//!   sim commit       slots=C
+//!
+//! `delay_ms` makes each decode *launch* sleep (once per call, batched or
+//! not — modeling the fused-call economics); serving tests use it to open
+//! deterministic windows for cancellation/deadline races.
 //!
 //! Keep this file in sync with the call sites in `rust/src/runtime/model.rs`
-//! and `rust/src/runtime/client.rs`; it intentionally contains nothing more.
+//! and `rust/src/runtime/client.rs`.
 
 use std::fmt;
 use std::path::Path;
@@ -31,9 +73,14 @@ pub type Result<T> = std::result::Result<T, Error>;
 
 fn unavailable<T>(what: &str) -> Result<T> {
     Err(Error(format!(
-        "{what}: PJRT runtime unavailable (stub `xla` crate; build against \
-         the real xla-rs bindings to execute models)"
+        "{what}: PJRT runtime unavailable (stub `xla` crate executes only \
+         `sim` directives; build against the real xla-rs bindings to run \
+         AOT-lowered models)"
     )))
+}
+
+fn err<T>(msg: impl Into<String>) -> Result<T> {
+    Err(Error(msg.into()))
 }
 
 /// Element types the coordinator passes for raw-byte host buffers.
@@ -47,18 +94,109 @@ pub enum ElementType {
     F64,
 }
 
+// ---------------------------------------------------------------------------
+// buffers
+// ---------------------------------------------------------------------------
+
+/// What a simulated device buffer holds.
+#[derive(Debug, Clone)]
+enum Payload {
+    I32(Vec<i32>),
+    U8(Vec<u8>),
+    F32(Vec<f32>),
+    /// KV cache: token id per committed row, -1 for junk rows.
+    Cache(Vec<i32>),
+    /// Per-step new KV: the step-input token per slot.
+    NewKv(Vec<i32>),
+    /// Weight placeholder (the sim model is weight-free).
+    Weight,
+    /// Wide host types kept lossless so a future i64/f64 call site fails
+    /// with a type mismatch instead of silently truncating through i32/f32
+    /// (the sim executables only consume I32/U8/F32 today).
+    I64(Vec<i64>),
+    F64(Vec<f64>),
+}
+
 /// Host types accepted by `buffer_from_host_buffer` / `Literal::to_vec`.
-pub trait NativeType: Copy {}
+pub trait NativeType: Copy {
+    fn to_payload(data: &[Self]) -> Payload;
+    fn from_payload(p: &Payload) -> Option<Vec<Self>>;
+}
 
-impl NativeType for u8 {}
-impl NativeType for i32 {}
-impl NativeType for i64 {}
-impl NativeType for u32 {}
-impl NativeType for f32 {}
-impl NativeType for f64 {}
+impl NativeType for i32 {
+    fn to_payload(data: &[Self]) -> Payload {
+        Payload::I32(data.to_vec())
+    }
+    fn from_payload(p: &Payload) -> Option<Vec<Self>> {
+        match p {
+            Payload::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
 
-/// A PJRT device handle (never materialized by the stub; present so
-/// `Option<&PjRtDevice>` arguments type-check).
+impl NativeType for u8 {
+    fn to_payload(data: &[Self]) -> Payload {
+        Payload::U8(data.to_vec())
+    }
+    fn from_payload(p: &Payload) -> Option<Vec<Self>> {
+        match p {
+            Payload::U8(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for f32 {
+    fn to_payload(data: &[Self]) -> Payload {
+        Payload::F32(data.to_vec())
+    }
+    fn from_payload(p: &Payload) -> Option<Vec<Self>> {
+        match p {
+            Payload::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for u32 {
+    fn to_payload(data: &[Self]) -> Payload {
+        Payload::I32(data.iter().map(|&x| x as i32).collect())
+    }
+    fn from_payload(p: &Payload) -> Option<Vec<Self>> {
+        match p {
+            Payload::I32(v) => Some(v.iter().map(|&x| x as u32).collect()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i64 {
+    fn to_payload(data: &[Self]) -> Payload {
+        Payload::I64(data.to_vec())
+    }
+    fn from_payload(p: &Payload) -> Option<Vec<Self>> {
+        match p {
+            Payload::I64(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for f64 {
+    fn to_payload(data: &[Self]) -> Payload {
+        Payload::F64(data.to_vec())
+    }
+    fn from_payload(p: &Payload) -> Option<Vec<Self>> {
+        match p {
+            Payload::F64(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// A PJRT device handle (present so `Option<&PjRtDevice>` arguments
+/// type-check; the sim ignores device placement).
 #[derive(Debug)]
 pub struct PjRtDevice;
 
@@ -71,57 +209,70 @@ pub struct PjRtClient {
 }
 
 impl PjRtClient {
+    /// The sim client always constructs; whether anything can *execute* is
+    /// decided per-executable at compile time (sim directive vs real HLO).
     pub fn cpu() -> Result<PjRtClient> {
-        unavailable("PjRtClient::cpu")
+        Ok(PjRtClient { _not_send: std::marker::PhantomData })
     }
 
-    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
-        unavailable("PjRtClient::compile")
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        match SimExe::parse(&comp.text) {
+            Some(exe) => Ok(PjRtLoadedExecutable { exe }),
+            None => unavailable("PjRtClient::compile(non-sim HLO)"),
+        }
     }
 
     pub fn buffer_from_host_buffer<T: NativeType>(
         &self,
-        _data: &[T],
+        data: &[T],
         _dims: &[usize],
         _device: Option<&PjRtDevice>,
     ) -> Result<PjRtBuffer> {
-        unavailable("PjRtClient::buffer_from_host_buffer")
+        Ok(PjRtBuffer { payload: T::to_payload(data) })
     }
 
     pub fn buffer_from_host_raw_bytes(
         &self,
-        _ty: ElementType,
-        _bytes: &[u8],
+        ty: ElementType,
+        bytes: &[u8],
         _dims: &[usize],
         _device: Option<&PjRtDevice>,
     ) -> Result<PjRtBuffer> {
-        unavailable("PjRtClient::buffer_from_host_raw_bytes")
+        match ty {
+            ElementType::U8 | ElementType::Pred => {
+                Ok(PjRtBuffer { payload: Payload::U8(bytes.to_vec()) })
+            }
+            other => err(format!("buffer_from_host_raw_bytes: unsupported {other:?}")),
+        }
     }
 }
 
 /// A device-resident buffer.
 pub struct PjRtBuffer {
-    _private: (),
+    payload: Payload,
 }
 
 impl PjRtBuffer {
     pub fn to_literal_sync(&self) -> Result<Literal> {
-        unavailable("PjRtBuffer::to_literal_sync")
+        Ok(Literal { payload: self.payload.clone() })
     }
 }
 
 /// Host-side literal produced by `to_literal_sync`.
 pub struct Literal {
-    _private: (),
+    payload: Payload,
 }
 
 impl Literal {
     pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
-        unavailable("Literal::to_vec")
+        T::from_payload(&self.payload)
+            .ok_or_else(|| Error("Literal::to_vec: payload type mismatch".into()))
     }
 }
 
 /// Bulk weight loading from `.npz` archives (trait form mirrors xla-rs).
+/// The sim accepts weight files starting with the `SIM` magic and returns
+/// one placeholder buffer per requested name (the sim model is weight-free).
 pub trait FromRawBytes: Sized {
     fn read_npz_by_name(
         path: impl AsRef<Path>,
@@ -134,46 +285,425 @@ impl FromRawBytes for PjRtBuffer {
     fn read_npz_by_name(
         path: impl AsRef<Path>,
         _client: &PjRtClient,
-        _names: &[&str],
+        names: &[&str],
     ) -> Result<Vec<PjRtBuffer>> {
-        unavailable(&format!(
-            "PjRtBuffer::read_npz_by_name({:?})",
-            path.as_ref()
-        ))
-    }
-}
-
-/// A compiled-and-loaded executable.
-pub struct PjRtLoadedExecutable {
-    _private: (),
-}
-
-impl PjRtLoadedExecutable {
-    /// Execute with borrowed buffer arguments; outer Vec is per-device.
-    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
-        unavailable("PjRtLoadedExecutable::execute_b")
+        let path = path.as_ref();
+        let head = std::fs::read(path)
+            .map_err(|e| Error(format!("read_npz_by_name({path:?}): {e}")))?;
+        if head.starts_with(b"SIM") {
+            return Ok(names
+                .iter()
+                .map(|_| PjRtBuffer { payload: Payload::Weight })
+                .collect());
+        }
+        unavailable(&format!("PjRtBuffer::read_npz_by_name({path:?}): real npz"))
     }
 }
 
 /// Parsed HLO module text.
 pub struct HloModuleProto {
-    _private: (),
+    text: String,
 }
 
 impl HloModuleProto {
     pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
-        unavailable(&format!("HloModuleProto::from_text_file({:?})", path.as_ref()))
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error(format!("HloModuleProto::from_text_file({path:?}): {e}")))?;
+        Ok(HloModuleProto { text })
     }
 }
 
 /// An XLA computation wrapping a parsed HLO module.
 pub struct XlaComputation {
-    _private: (),
+    text: String,
 }
 
 impl XlaComputation {
-    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
-        XlaComputation { _private: () }
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { text: proto.text.clone() }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the simulated executables
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum SimKind {
+    Prefill,
+    DecodeLin,
+    DecodeGen,
+    DecodeLinB,
+    DecodeGenB,
+    Commit,
+}
+
+#[derive(Debug, Clone)]
+struct SimExe {
+    kind: SimKind,
+    /// step-input tokens per slot (plen for prefill, k / t_pad for decode).
+    t: usize,
+    /// cache rows (prefill only — decode infers from the incoming cache).
+    rows: usize,
+    vocab: usize,
+    weights: usize,
+    batch: usize,
+    slots: usize,
+    delay_ms: u64,
+}
+
+impl SimExe {
+    /// Parse the `sim <kind> key=value ...` directive; None for real HLO.
+    fn parse(text: &str) -> Option<SimExe> {
+        let line = text.lines().next()?.trim();
+        let mut it = line.split_whitespace();
+        if it.next()? != "sim" {
+            return None;
+        }
+        let kind = match it.next()? {
+            "prefill" => SimKind::Prefill,
+            "decode_lin" => SimKind::DecodeLin,
+            "decode_gen" => SimKind::DecodeGen,
+            "decode_lin_b" => SimKind::DecodeLinB,
+            "decode_gen_b" => SimKind::DecodeGenB,
+            "commit" => SimKind::Commit,
+            _ => return None,
+        };
+        let mut exe = SimExe {
+            kind,
+            t: 0,
+            rows: 0,
+            vocab: 0,
+            weights: 0,
+            batch: 1,
+            slots: 0,
+            delay_ms: 0,
+        };
+        for kv in it {
+            let (k, v) = kv.split_once('=')?;
+            let v: usize = v.parse().ok()?;
+            match k {
+                "plen" | "k" | "t_pad" => exe.t = v,
+                "rows" => exe.rows = v,
+                "vocab" => exe.vocab = v,
+                "weights" => exe.weights = v,
+                "batch" => exe.batch = v,
+                "slots" => exe.slots = v,
+                "delay_ms" => exe.delay_ms = v as u64,
+                _ => return None,
+            }
+        }
+        Some(exe)
+    }
+}
+
+// -- the deterministic LM ---------------------------------------------------
+
+/// Order-sensitive fold of one `(position, token)` pair into the running
+/// prefix hash (splitmix64-style finalizer).
+fn mix(h: u64, pos: i64, tok: i64) -> u64 {
+    let mut x = h
+        ^ (pos as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        ^ (tok as u64).wrapping_add(1).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    x
+}
+
+/// EOS token id of the byte tokenizer (`rust/src/tokenizer`): the sim emits
+/// it rarely so finish-by-EOS paths get exercised.
+const SIM_EOS: i64 = 258;
+
+/// The sim LM's next token given the prefix hash and the last attended
+/// token: short +1 ramps (speculation-friendly), occasional hash jumps,
+/// rare EOS. Always < 259 (the live vocab).
+fn sim_next_token(h: u64, last: i64) -> i64 {
+    if h % 41 == 0 {
+        SIM_EOS
+    } else if h % 5 == 0 {
+        ((h >> 16) % 251) as i64
+    } else {
+        (last.max(0) + 1) % 251
+    }
+}
+
+/// Deterministic logits row: every id gets noise in [0, 1); the sim LM's
+/// chosen next token gets 2.0 so greedy argmax (over the live vocab, which
+/// always contains it) recovers `sim_next_token` exactly.
+fn sim_logits_row(h: u64, last: i64, vocab: usize, out: &mut Vec<f32>) {
+    let next = sim_next_token(h, last);
+    for v in 0..vocab {
+        let n = mix(h ^ 0xA5A5_5A5A_DEAD_BEEF, v as i64, 1);
+        out.push((n % 1024) as f32 / 1024.0);
+    }
+    let base = out.len() - vocab;
+    out[base + next as usize] = 2.0;
+}
+
+/// Fold the committed prefix (cache rows `0..cache_len`) into a hash.
+fn fold_prefix(cache: &[i32], cache_len: usize) -> (u64, i64) {
+    let mut h = 0x5EED_u64;
+    let mut last = -1i64;
+    for (p, &t) in cache.iter().take(cache_len).enumerate() {
+        h = mix(h, p as i64, t as i64);
+        last = t as i64;
+    }
+    (h, last)
+}
+
+// -- argument plumbing ------------------------------------------------------
+
+fn arg_i32(args: &[&PjRtBuffer], i: usize, what: &str) -> Result<Vec<i32>> {
+    match args.get(i).map(|b| &b.payload) {
+        Some(Payload::I32(v)) => Ok(v.clone()),
+        other => err(format!("sim: arg {i} ({what}) must be i32, got {other:?}")),
+    }
+}
+
+fn arg_scalar(args: &[&PjRtBuffer], i: usize, what: &str) -> Result<i32> {
+    let v = arg_i32(args, i, what)?;
+    v.first()
+        .copied()
+        .ok_or_else(|| Error(format!("sim: arg {i} ({what}) is empty")))
+}
+
+fn arg_u8(args: &[&PjRtBuffer], i: usize, what: &str) -> Result<Vec<u8>> {
+    match args.get(i).map(|b| &b.payload) {
+        Some(Payload::U8(v)) => Ok(v.clone()),
+        other => err(format!("sim: arg {i} ({what}) must be u8, got {other:?}")),
+    }
+}
+
+fn arg_cache(args: &[&PjRtBuffer], i: usize) -> Result<Vec<i32>> {
+    match args.get(i).map(|b| &b.payload) {
+        Some(Payload::Cache(v)) => Ok(v.clone()),
+        other => err(format!("sim: arg {i} (cache) must be a cache, got {other:?}")),
+    }
+}
+
+fn arg_newkv(args: &[&PjRtBuffer], i: usize) -> Result<Vec<i32>> {
+    match args.get(i).map(|b| &b.payload) {
+        Some(Payload::NewKv(v)) => Ok(v.clone()),
+        other => err(format!("sim: arg {i} (new_kv) must be new_kv, got {other:?}")),
+    }
+}
+
+fn buf(p: Payload) -> PjRtBuffer {
+    PjRtBuffer { payload: p }
+}
+
+/// A compiled-and-loaded executable.
+pub struct PjRtLoadedExecutable {
+    exe: SimExe,
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with borrowed buffer arguments; outer Vec is per-device.
+    pub fn execute_b(&self, args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        if self.exe.delay_ms > 0 {
+            std::thread::sleep(std::time::Duration::from_millis(self.exe.delay_ms));
+        }
+        let out = match self.exe.kind {
+            SimKind::Prefill => self.run_prefill(args)?,
+            SimKind::DecodeLin => self.run_decode_lin(args)?,
+            SimKind::DecodeGen => self.run_decode_gen(args)?,
+            SimKind::DecodeLinB => self.run_decode_lin_b(args)?,
+            SimKind::DecodeGenB => self.run_decode_gen_b(args)?,
+            SimKind::Commit => self.run_commit(args)?,
+        };
+        Ok(vec![out])
+    }
+
+    /// prefill: weights.., tokens i32[plen], n_valid -> [logits, cache]
+    fn run_prefill(&self, args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>> {
+        let SimExe { t: plen, rows, vocab, weights, .. } = self.exe;
+        if args.len() != weights + 2 {
+            return err(format!("sim prefill: want {} args, got {}", weights + 2,
+                               args.len()));
+        }
+        let tokens = arg_i32(args, weights, "tokens")?;
+        let n_valid = arg_scalar(args, weights + 1, "n_valid")? as usize;
+        if tokens.len() != plen || n_valid > plen {
+            return err(format!("sim prefill: tokens {}/{} n_valid {}",
+                               tokens.len(), plen, n_valid));
+        }
+        let mut logits = Vec::with_capacity(plen * vocab);
+        let mut h = 0x5EED_u64;
+        for (p, &tok) in tokens.iter().enumerate() {
+            h = mix(h, p as i64, tok as i64);
+            sim_logits_row(h, tok as i64, vocab, &mut logits);
+        }
+        let mut cache = vec![-1i32; rows];
+        cache[..n_valid].copy_from_slice(&tokens[..n_valid]);
+        Ok(vec![buf(Payload::F32(logits)), buf(Payload::Cache(cache))])
+    }
+
+    /// One linear-chain slot: logits for `tokens` given `cache[0..cache_len]`.
+    fn lin_slot(&self, cache: &[i32], cache_len: usize, tokens: &[i32],
+                logits: &mut Vec<f32>) {
+        let (mut h, _) = fold_prefix(cache, cache_len);
+        for (j, &tok) in tokens.iter().enumerate() {
+            h = mix(h, (cache_len + j) as i64, tok as i64);
+            sim_logits_row(h, tok as i64, self.exe.vocab, logits);
+        }
+    }
+
+    /// decode_lin: weights.., cache, cache_len, tokens i32[k]
+    /// -> [logits, new_kv]
+    fn run_decode_lin(&self, args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>> {
+        let SimExe { t: k, weights, .. } = self.exe;
+        if args.len() != weights + 3 {
+            return err(format!("sim decode_lin: want {} args, got {}",
+                               weights + 3, args.len()));
+        }
+        let cache = arg_cache(args, weights)?;
+        let cache_len = arg_scalar(args, weights + 1, "cache_len")? as usize;
+        let tokens = arg_i32(args, weights + 2, "tokens")?;
+        if tokens.len() != k || cache_len > cache.len() {
+            return err(format!("sim decode_lin: tokens {}/{k} cache_len {}",
+                               tokens.len(), cache_len));
+        }
+        let mut logits = Vec::with_capacity(k * self.exe.vocab);
+        self.lin_slot(&cache, cache_len, &tokens, &mut logits);
+        Ok(vec![buf(Payload::F32(logits)), buf(Payload::NewKv(tokens))])
+    }
+
+    /// One masked slot: logits for `tokens` under (relpos, mask) given
+    /// `cache[0..cache_len]`. Query q attends to the committed prefix plus
+    /// every intra-step slot its mask row admits, ordered by (relpos, slot).
+    fn gen_slot(&self, cache: &[i32], cache_len: usize, tokens: &[i32],
+                relpos: &[i32], mask: &[u8], logits: &mut Vec<f32>) {
+        let t = self.exe.t;
+        let (h0, last0) = fold_prefix(cache, cache_len);
+        for q in 0..t {
+            let mut vis: Vec<usize> =
+                (0..t).filter(|&j| mask[q * t + j] != 0).collect();
+            vis.sort_by_key(|&j| (relpos[j], j));
+            let mut h = h0;
+            let mut last = last0;
+            for &j in &vis {
+                h = mix(h, cache_len as i64 + relpos[j] as i64, tokens[j] as i64);
+                last = tokens[j] as i64;
+            }
+            sim_logits_row(h, last, self.exe.vocab, logits);
+        }
+    }
+
+    /// decode_gen: weights.., cache, cache_len, tokens i32[t_pad],
+    /// relpos i32[t_pad], mask u8[t_pad*t_pad] -> [logits, new_kv]
+    fn run_decode_gen(&self, args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>> {
+        let SimExe { t, weights, .. } = self.exe;
+        if args.len() != weights + 5 {
+            return err(format!("sim decode_gen: want {} args, got {}",
+                               weights + 5, args.len()));
+        }
+        let cache = arg_cache(args, weights)?;
+        let cache_len = arg_scalar(args, weights + 1, "cache_len")? as usize;
+        let tokens = arg_i32(args, weights + 2, "tokens")?;
+        let relpos = arg_i32(args, weights + 3, "relpos")?;
+        let mask = arg_u8(args, weights + 4, "mask")?;
+        if tokens.len() != t || relpos.len() != t || mask.len() != t * t
+            || cache_len > cache.len()
+        {
+            return err("sim decode_gen: arg shapes wrong");
+        }
+        let mut logits = Vec::with_capacity(t * self.exe.vocab);
+        self.gen_slot(&cache, cache_len, &tokens, &relpos, &mask, &mut logits);
+        Ok(vec![buf(Payload::F32(logits)), buf(Payload::NewKv(tokens))])
+    }
+
+    /// decode_lin_b: weights.., cache_0..cache_{B-1}, cache_lens i32[B],
+    /// tokens i32[B*k] -> [logits f32[B*k*V], new_kv_0.., new_kv_{B-1}]
+    fn run_decode_lin_b(&self, args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>> {
+        let SimExe { t: k, weights, batch, .. } = self.exe;
+        if args.len() != weights + batch + 2 {
+            return err(format!("sim decode_lin_b: want {} args, got {}",
+                               weights + batch + 2, args.len()));
+        }
+        let lens = arg_i32(args, weights + batch, "cache_lens")?;
+        let tokens = arg_i32(args, weights + batch + 1, "tokens")?;
+        if lens.len() != batch || tokens.len() != batch * k {
+            return err("sim decode_lin_b: arg shapes wrong");
+        }
+        let mut logits = Vec::with_capacity(batch * k * self.exe.vocab);
+        let mut outs = Vec::with_capacity(1 + batch);
+        outs.push(buf(Payload::F32(Vec::new()))); // placeholder, filled below
+        for b in 0..batch {
+            let cache = arg_cache(args, weights + b)?;
+            let cache_len = lens[b] as usize;
+            if cache_len > cache.len() {
+                return err(format!("sim decode_lin_b: slot {b} cache_len"));
+            }
+            let slot = &tokens[b * k..(b + 1) * k];
+            self.lin_slot(&cache, cache_len, slot, &mut logits);
+            outs.push(buf(Payload::NewKv(slot.to_vec())));
+        }
+        outs[0] = buf(Payload::F32(logits));
+        Ok(outs)
+    }
+
+    /// decode_gen_b: weights.., cache_0..cache_{B-1}, cache_lens i32[B],
+    /// tokens i32[B*t_pad], relpos i32[t_pad], mask u8[t_pad*t_pad]
+    /// (relpos/mask shared — batched groups share one engine config)
+    /// -> [logits f32[B*t_pad*V], new_kv_0.., new_kv_{B-1}]
+    fn run_decode_gen_b(&self, args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>> {
+        let SimExe { t, weights, batch, .. } = self.exe;
+        if args.len() != weights + batch + 4 {
+            return err(format!("sim decode_gen_b: want {} args, got {}",
+                               weights + batch + 4, args.len()));
+        }
+        let lens = arg_i32(args, weights + batch, "cache_lens")?;
+        let tokens = arg_i32(args, weights + batch + 1, "tokens")?;
+        let relpos = arg_i32(args, weights + batch + 2, "relpos")?;
+        let mask = arg_u8(args, weights + batch + 3, "mask")?;
+        if lens.len() != batch || tokens.len() != batch * t || relpos.len() != t
+            || mask.len() != t * t
+        {
+            return err("sim decode_gen_b: arg shapes wrong");
+        }
+        let mut logits = Vec::with_capacity(batch * t * self.exe.vocab);
+        let mut outs = Vec::with_capacity(1 + batch);
+        outs.push(buf(Payload::F32(Vec::new())));
+        for b in 0..batch {
+            let cache = arg_cache(args, weights + b)?;
+            let cache_len = lens[b] as usize;
+            if cache_len > cache.len() {
+                return err(format!("sim decode_gen_b: slot {b} cache_len"));
+            }
+            let slot = &tokens[b * t..(b + 1) * t];
+            self.gen_slot(&cache, cache_len, slot, &relpos, &mask, &mut logits);
+            outs.push(buf(Payload::NewKv(slot.to_vec())));
+        }
+        outs[0] = buf(Payload::F32(logits));
+        Ok(outs)
+    }
+
+    /// commit: cache, new_kv, src_idx i32[slots], dest_start, count
+    /// -> [cache'] (scatter accepted new-KV rows into a fresh cache buffer)
+    fn run_commit(&self, args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>> {
+        if args.len() != 5 {
+            return err(format!("sim commit: want 5 args, got {}", args.len()));
+        }
+        let mut cache = arg_cache(args, 0)?;
+        let new_kv = arg_newkv(args, 1)?;
+        let src_idx = arg_i32(args, 2, "src_idx")?;
+        let dest_start = arg_scalar(args, 3, "dest_start")? as usize;
+        let count = arg_scalar(args, 4, "count")? as usize;
+        if count > src_idx.len() || dest_start + count > cache.len() {
+            return err("sim commit: scatter out of range");
+        }
+        for k in 0..count {
+            let src = src_idx[k] as usize;
+            if src >= new_kv.len() {
+                return err(format!("sim commit: src_idx[{k}]={src} out of range"));
+            }
+            cache[dest_start + k] = new_kv[src];
+        }
+        Ok(vec![buf(Payload::Cache(cache))])
     }
 }
 
@@ -181,15 +711,261 @@ impl XlaComputation {
 mod tests {
     use super::*;
 
+    fn client() -> PjRtClient {
+        PjRtClient::cpu().unwrap()
+    }
+
+    fn compile(directive: &str) -> PjRtLoadedExecutable {
+        let comp = XlaComputation { text: directive.to_string() };
+        client().compile(&comp).unwrap()
+    }
+
+    fn i32_buf(v: &[i32]) -> PjRtBuffer {
+        client().buffer_from_host_buffer(v, &[v.len()], None).unwrap()
+    }
+
+    fn scalar(v: i32) -> PjRtBuffer {
+        client().buffer_from_host_buffer(&[v], &[], None).unwrap()
+    }
+
+    fn weight() -> PjRtBuffer {
+        buf(Payload::Weight)
+    }
+
+    fn f32s(b: &PjRtBuffer) -> Vec<f32> {
+        b.to_literal_sync().unwrap().to_vec::<f32>().unwrap()
+    }
+
+    fn argmax(row: &[f32]) -> usize {
+        let mut best = 0;
+        for (i, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = i;
+            }
+        }
+        best
+    }
+
+    const V: usize = 264;
+
+    fn prefill_exe() -> PjRtLoadedExecutable {
+        compile("sim prefill plen=8 rows=32 vocab=264 weights=1")
+    }
+
+    fn lin_exe(k: usize) -> PjRtLoadedExecutable {
+        compile(&format!("sim decode_lin k={k} vocab=264 weights=1"))
+    }
+
+    /// Run prefill on `prompt` (padded to 8); returns (logits, cache).
+    fn run_prefill(prompt: &[i32]) -> (Vec<f32>, PjRtBuffer) {
+        let mut toks = prompt.to_vec();
+        toks.resize(8, 256);
+        let w = weight();
+        let tb = i32_buf(&toks);
+        let nv = scalar(prompt.len() as i32);
+        let mut out = prefill_exe()
+            .execute_b(&[&w, &tb, &nv])
+            .unwrap()
+            .remove(0);
+        let cache = out.pop().unwrap();
+        let logits = f32s(&out.pop().unwrap());
+        (logits, cache)
+    }
+
     #[test]
-    fn stub_reports_unavailable() {
-        let err = PjRtClient::cpu().err().unwrap();
-        assert!(err.to_string().contains("PJRT runtime unavailable"));
+    fn compile_rejects_real_hlo_text() {
+        let comp = XlaComputation { text: "HloModule real_thing".into() };
+        let e = client().compile(&comp).err().unwrap();
+        assert!(e.to_string().contains("PJRT runtime unavailable"));
+    }
+
+    #[test]
+    fn directive_parsing_roundtrip() {
+        let e = SimExe::parse("sim decode_gen_b t_pad=20 batch=8 vocab=264 weights=2")
+            .unwrap();
+        assert_eq!(e.kind, SimKind::DecodeGenB);
+        assert_eq!((e.t, e.batch, e.vocab, e.weights), (20, 8, 264, 2));
+        assert!(SimExe::parse("sim bogus x=1").is_none());
+        assert!(SimExe::parse("").is_none());
     }
 
     #[test]
     fn error_is_std_error() {
         fn takes_err(_e: &dyn std::error::Error) {}
         takes_err(&Error("x".into()));
+    }
+
+    #[test]
+    fn prefill_then_decode_lin_extends_the_same_lm() {
+        // the LM invariant: decode after a committed prefix produces the
+        // same next-token as the prefill row at the same prefix depth
+        let prompt = [10i32, 11, 12, 13];
+        let (logits, cache) = run_prefill(&prompt);
+        let want = argmax(&logits[3 * V..4 * V]); // prefix = all 4 tokens
+
+        // decode the last prompt token on top of cache_len = 3
+        let w = weight();
+        let cl = scalar(3);
+        let tb = i32_buf(&[13]);
+        let mut out = lin_exe(1).execute_b(&[&w, &cache, &cl, &tb]).unwrap().remove(0);
+        let _kv = out.pop().unwrap();
+        let dl = f32s(&out.pop().unwrap());
+        assert_eq!(argmax(&dl[..V]), want, "decode_lin diverged from prefill");
+    }
+
+    #[test]
+    fn lin_chain_matches_token_by_token() {
+        // a k=3 chain row j must equal three successive k=1 calls
+        let prompt = [5i32, 6];
+        let (_, cache) = run_prefill(&prompt);
+        let w = weight();
+        let chain = [6i32, 7, 8];
+        let cl = scalar(1);
+        let tb = i32_buf(&chain);
+        let mut out = lin_exe(3).execute_b(&[&w, &cache, &cl, &tb]).unwrap().remove(0);
+        out.pop().unwrap();
+        let big = f32s(&out.pop().unwrap());
+
+        // k=1 replay: commit each token then decode the next
+        let commit = compile("sim commit slots=4");
+        let mut c = cache;
+        for (j, &tok) in chain.iter().enumerate() {
+            let cl = scalar((1 + j) as i32);
+            let tb = i32_buf(&[tok]);
+            let mut o = lin_exe(1).execute_b(&[&w, &c, &cl, &tb]).unwrap().remove(0);
+            let kv = o.pop().unwrap();
+            let row = f32s(&o.pop().unwrap());
+            assert_eq!(row, big[j * V..(j + 1) * V].to_vec(),
+                       "chain row {j} != sequential");
+            let idx = i32_buf(&[0, 0, 0, 0]);
+            let ds = scalar((1 + j) as i32);
+            let cnt = scalar(1);
+            let mut co = commit.execute_b(&[&c, &kv, &idx, &ds, &cnt]).unwrap()
+                .remove(0);
+            c = co.pop().unwrap();
+        }
+    }
+
+    #[test]
+    fn batched_lin_matches_per_slot_sequential() {
+        let (_, cache_a) = run_prefill(&[1, 2, 3]);
+        let (_, cache_b) = run_prefill(&[9, 8]);
+        let w = weight();
+
+        // sequential slots
+        let mut seq = Vec::new();
+        for (cache, len, tok) in [(&cache_a, 2, 3), (&cache_b, 1, 8)] {
+            let cl = scalar(len);
+            let tb = i32_buf(&[tok]);
+            let mut o = lin_exe(1).execute_b(&[&w, cache, &cl, &tb]).unwrap().remove(0);
+            o.pop().unwrap();
+            seq.push(f32s(&o.pop().unwrap()));
+        }
+
+        // batched (batch=3: third slot is padding and must not disturb 0/1)
+        let be = compile("sim decode_lin_b k=1 batch=3 vocab=264 weights=1");
+        let lens = i32_buf(&[2, 1, 0]);
+        let toks = i32_buf(&[3, 8, 256]);
+        let mut out = be
+            .execute_b(&[&w, &cache_a, &cache_b, &cache_a, &lens, &toks])
+            .unwrap()
+            .remove(0);
+        assert_eq!(out.len(), 4, "logits + one new_kv per slot");
+        let big = f32s(&out.remove(0));
+        assert_eq!(big.len(), 3 * V);
+        assert_eq!(big[..V].to_vec(), seq[0], "slot 0 diverged");
+        assert_eq!(big[V..2 * V].to_vec(), seq[1], "slot 1 diverged");
+    }
+
+    #[test]
+    fn batched_gen_matches_per_slot_sequential() {
+        // 2-slot causal chain via the mask path: mask = lower triangle,
+        // relpos = 0,1 — must equal decode_lin k=2 per slot.
+        let (_, cache_a) = run_prefill(&[4, 5, 6]);
+        let (_, cache_b) = run_prefill(&[7]);
+        let w = weight();
+        let relpos = i32_buf(&[0, 1]);
+        let mask = client()
+            .buffer_from_host_raw_bytes(ElementType::U8, &[1, 0, 1, 1], &[2, 2], None)
+            .unwrap();
+
+        let ge = compile("sim decode_gen t_pad=2 vocab=264 weights=1");
+        let mut seq = Vec::new();
+        for (cache, len, toks) in [(&cache_a, 2i32, [6, 20]), (&cache_b, 0, [7, 9])] {
+            let cl = scalar(len);
+            let tb = i32_buf(&toks);
+            let mut o = ge
+                .execute_b(&[&w, cache, &cl, &tb, &relpos, &mask])
+                .unwrap()
+                .remove(0);
+            o.pop().unwrap();
+            seq.push(f32s(&o.pop().unwrap()));
+        }
+
+        let gb = compile("sim decode_gen_b t_pad=2 batch=2 vocab=264 weights=1");
+        let lens = i32_buf(&[2, 0]);
+        let toks = i32_buf(&[6, 20, 7, 9]);
+        let mut out = gb
+            .execute_b(&[&w, &cache_a, &cache_b, &lens, &toks, &relpos, &mask])
+            .unwrap()
+            .remove(0);
+        assert_eq!(out.len(), 3);
+        let big = f32s(&out.remove(0));
+        assert_eq!(big[..2 * V].to_vec(), seq[0], "slot 0 diverged");
+        assert_eq!(big[2 * V..].to_vec(), seq[1], "slot 1 diverged");
+
+        // the masked causal chain equals the linear chain
+        let cl = scalar(2);
+        let tb = i32_buf(&[6, 20]);
+        let mut o = lin_exe(2).execute_b(&[&w, &cache_a, &cl, &tb]).unwrap().remove(0);
+        o.pop().unwrap();
+        assert_eq!(f32s(&o.pop().unwrap()), seq[0], "gen mask != lin chain");
+    }
+
+    #[test]
+    fn commit_scatters_and_rejects_out_of_range() {
+        let (_, cache) = run_prefill(&[1, 2, 3]);
+        let kv = buf(Payload::NewKv(vec![40, 41, 42]));
+        let commit = compile("sim commit slots=4");
+        let idx = i32_buf(&[2, 0, 0, 0]);
+        let ds = scalar(3);
+        let cnt = scalar(2);
+        let mut out = commit.execute_b(&[&cache, &kv, &idx, &ds, &cnt]).unwrap()
+            .remove(0);
+        let c = out.pop().unwrap();
+        let rows = match &c.payload {
+            Payload::Cache(r) => r.clone(),
+            _ => panic!("commit must return a cache"),
+        };
+        assert_eq!(&rows[..5], &[1, 2, 3, 42, 40]);
+
+        let bad_idx = i32_buf(&[9, 0, 0, 0]);
+        assert!(commit.execute_b(&[&cache, &kv, &bad_idx, &ds, &cnt]).is_err());
+    }
+
+    #[test]
+    fn shape_mismatches_surface_as_stub_errors() {
+        // wrong arg count and wrong payload type must fail loudly so engine
+        // tests never chase silent garbage
+        let w = weight();
+        assert!(lin_exe(1).execute_b(&[&w]).is_err());
+        let not_cache = i32_buf(&[1, 2, 3]);
+        let cl = scalar(0);
+        let tb = i32_buf(&[1]);
+        assert!(lin_exe(1).execute_b(&[&w, &not_cache, &cl, &tb]).is_err());
+    }
+
+    #[test]
+    fn weight_file_gate() {
+        let dir = std::env::temp_dir().join(format!("xla-sim-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let sim = dir.join("w_sim.npz");
+        std::fs::write(&sim, b"SIMWEIGHTS").unwrap();
+        let bufs =
+            PjRtBuffer::read_npz_by_name(&sim, &client(), &["a", "b"]).unwrap();
+        assert_eq!(bufs.len(), 2);
+        let real = dir.join("w_real.npz");
+        std::fs::write(&real, b"PK\x03\x04").unwrap();
+        assert!(PjRtBuffer::read_npz_by_name(&real, &client(), &["a"]).is_err());
     }
 }
