@@ -2,11 +2,13 @@
 //! This is the reference implementation every speedup is measured against
 //! and the byte-exactness oracle for the greedy engines.
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
-use crate::engine::session::{EngineStep, RawStep, Session, SessionCore, StepPlan};
+use crate::engine::session::{EngineStep, EngineSuspend, RawStep, Session, SessionCore,
+                             StepPlan};
 use crate::engine::{capacity_left, vocab_live, Decoder, DecodeSession, FinishReason,
                     GenParams};
+use crate::kv::EngineState;
 use crate::metrics::Timer;
 use crate::ngram::PoolHandle;
 use crate::runtime::{Cache, ModelRuntime, StepOut};
@@ -46,6 +48,24 @@ impl EngineStep for ArState<'_> {
 
     fn pool_mut(&mut self) -> &mut PoolHandle {
         &mut self.pool
+    }
+
+    fn suspendable(&self) -> bool {
+        self.rt.supports_cache_io()
+    }
+
+    fn suspend_engine(&mut self) -> Result<EngineSuspend> {
+        let kv = {
+            let cache = self.cache.as_ref().ok_or_else(|| anyhow!("session lost its cache"))?;
+            self.rt.cache_to_host(cache)?
+        };
+        self.cache = None; // free the device buffer
+        Ok(EngineSuspend {
+            model: self.rt.mm.name.clone(),
+            state: EngineState::Autoregressive { cur: self.cur, rng: self.rng.state() },
+            kv,
+            pool: std::mem::replace(&mut self.pool, PoolHandle::none()),
+        })
     }
 
     fn batchable(&self) -> bool {
@@ -102,10 +122,20 @@ impl Decoder for AutoRegressive {
         let vocab = vocab_live(rt);
 
         let pf = Timer::start();
-        let (_, cache) = rt.prefill(prompt)?;
+        // prefix-reuse-aware prefill (engines ignore the prompt logits)
+        let cache = rt.prefill_reuse(prompt)?;
         core.stats.prefill_wall = pf.elapsed();
 
         let cur = *prompt.last().unwrap();
         Ok(Session::boxed(core, ArState { rt, cache: Some(cache), cur, rng, vocab, pool }))
     }
+}
+
+/// Reopen a suspended autoregressive session from its snapshot parts
+/// (`kv::SessionSnapshot::resume` dispatches here).
+pub(crate) fn resume_session<'rt>(rt: &'rt ModelRuntime, core: SessionCore,
+                                  cache: Cache, cur: u32, rng: Rng, pool: PoolHandle)
+                                  -> Box<dyn DecodeSession + 'rt> {
+    let vocab = vocab_live(rt);
+    Session::boxed(core, ArState { rt, cache: Some(cache), cur, rng, vocab, pool })
 }

@@ -110,7 +110,8 @@ impl Decoder for Jacobi {
         let mut rng = Rng::new(params.seed ^ 0x1AC0B1);
 
         let pf = Timer::start();
-        let (_, cache) = rt.prefill(prompt)?;
+        // prefix-reuse-aware prefill (engines ignore the prompt logits)
+        let cache = rt.prefill_reuse(prompt)?;
         core.stats.prefill_wall = pf.elapsed();
 
         let cur = *prompt.last().unwrap();

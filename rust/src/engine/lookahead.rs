@@ -18,9 +18,11 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::engine::session::{EngineStep, RawStep, Session, SessionCore, StepPlan};
+use crate::engine::session::{EngineStep, EngineSuspend, RawStep, Session, SessionCore,
+                             StepPlan};
 use crate::engine::{capacity_left, verify, vocab_live, Decoder, DecodeSession,
                     FinishReason, GenParams};
+use crate::kv::EngineState;
 use crate::layout::Wng;
 use crate::metrics::Timer;
 use crate::ngram::{PoolHandle, PoolSpec};
@@ -96,6 +98,10 @@ impl Lookahead {
 struct LookaheadState<'rt> {
     rt: &'rt ModelRuntime,
     wng: Wng,
+    /// config bits a suspend must carry so resume re-derives the same
+    /// executable resolution.
+    attn: String,
+    force_generic: bool,
     exe: Exe,
     commit_t: usize,
     rng: Rng,
@@ -137,6 +143,37 @@ impl EngineStep for LookaheadState<'_> {
 
     fn pool_mut(&mut self) -> &mut PoolHandle {
         &mut self.pool
+    }
+
+    fn suspendable(&self) -> bool {
+        self.rt.supports_cache_io()
+    }
+
+    fn suspend_engine(&mut self) -> Result<EngineSuspend> {
+        // between steps `cands` is always drained (taken by finish_step)
+        // and `tokens` is fully rewritten by the next plan, so the window
+        // rows + rng stream + current token are the whole step state
+        debug_assert!(self.cands.is_empty());
+        let kv = {
+            let cache = self.cache.as_ref().ok_or_else(|| anyhow!("session lost its cache"))?;
+            self.rt.cache_to_host(cache)?
+        };
+        self.cache = None; // free the device buffer
+        Ok(EngineSuspend {
+            model: self.rt.mm.name.clone(),
+            state: EngineState::Lookahead {
+                w: self.wng.w,
+                n: self.wng.n,
+                g: self.wng.g,
+                attn: self.attn.clone(),
+                force_generic: self.force_generic,
+                rows: self.rows.clone(),
+                cur: self.cur,
+                rng: self.rng.state(),
+            },
+            kv,
+            pool: std::mem::replace(&mut self.pool, PoolHandle::none()),
+        })
     }
 
     fn batchable(&self) -> bool {
@@ -306,7 +343,8 @@ impl Decoder for Lookahead {
         }
 
         let pf = Timer::start();
-        let (_, cache) = rt.prefill(prompt)?;
+        // prefix-reuse-aware prefill (engines ignore the prompt logits)
+        let cache = rt.prefill_reuse(prompt)?;
         core.stats.prefill_wall = pf.elapsed();
 
         let cur = *prompt.last().unwrap();
@@ -318,6 +356,8 @@ impl Decoder for Lookahead {
         Ok(Session::boxed(core, LookaheadState {
             rt,
             wng: self.cfg.wng,
+            attn: self.cfg.attn.clone(),
+            force_generic: self.cfg.force_generic,
             exe,
             commit_t,
             rng,
@@ -330,6 +370,55 @@ impl Decoder for Lookahead {
             pool,
         }))
     }
+}
+
+/// Reopen a suspended lookahead session from its snapshot parts
+/// (`kv::SessionSnapshot::resume` dispatches here). The executable
+/// resolution, commit width, and padded token buffer are re-derived from
+/// the (W,N,G) config exactly as `begin` derives them; the window rows,
+/// RNG stream, and current token continue from the snapshot.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn resume_session<'rt>(rt: &'rt ModelRuntime, core: SessionCore,
+                                  cache: Cache, (w, n, g): (usize, usize, usize),
+                                  attn: String, force_generic: bool,
+                                  rows: Vec<Vec<u32>>, cur: u32, rng: Rng,
+                                  pool: PoolHandle)
+                                  -> Result<Box<dyn DecodeSession + 'rt>> {
+    // validate BEFORE Wng::new: snapshots are cross-process input, and the
+    // layout constructors assert on degenerate configs instead of erroring
+    if w == 0 || n < 2 || g == 0 {
+        return Err(anyhow!("lookahead snapshot has invalid config w={w} n={n} g={g}"));
+    }
+    if rows.len() + 1 != n || rows.iter().any(|r| r.len() != w) {
+        return Err(anyhow!("lookahead snapshot window is {}x{:?}, want {}x{w}",
+                           rows.len(), rows.first().map(Vec::len), n - 1));
+    }
+    let mut cfg = LookaheadConfig::new(w, n, g);
+    cfg.attn = attn.clone();
+    cfg.force_generic = force_generic;
+    let eng = Lookahead::new(cfg);
+    let exe = eng.resolve_exe(rt)?;
+    let t_in = eng.cfg.wng.t_in();
+    let commit_t = match &exe {
+        Exe::Specialized(_) => t_in,
+        Exe::Generic { t_pad, .. } => *t_pad,
+    };
+    Ok(Session::boxed(core, LookaheadState {
+        rt,
+        wng: eng.cfg.wng,
+        attn,
+        force_generic,
+        exe,
+        commit_t,
+        rng,
+        rows,
+        tokens: vec![0u32; t_in],
+        cands: Vec::new(),
+        cur,
+        cache: Some(cache),
+        vocab: vocab_live(rt),
+        pool,
+    }))
 }
 
 #[cfg(test)]

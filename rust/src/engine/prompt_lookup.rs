@@ -147,7 +147,8 @@ impl Decoder for PromptLookup {
         pool.seed_from(prompt);
 
         let pf = Timer::start();
-        let (_, cache) = rt.prefill(prompt)?;
+        // prefix-reuse-aware prefill (engines ignore the prompt logits)
+        let cache = rt.prefill_reuse(prompt)?;
         core.stats.prefill_wall = pf.elapsed();
 
         Ok(Session::boxed(core, PromptLookupState {

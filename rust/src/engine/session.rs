@@ -17,12 +17,13 @@
 //! incrementally, so streamed deltas concatenate to exactly the one-shot
 //! output.
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::engine::{finish, GenOutput, GenParams};
+use crate::kv::{EngineState, SessionSnapshot};
 use crate::metrics::{DecodeStats, Timer};
 use crate::ngram::PoolHandle;
-use crate::runtime::{Cache, ModelRuntime, StepOut};
+use crate::runtime::{Cache, CacheOverflow, HostKv, ModelRuntime, StepOut};
 use crate::tokenizer::EOS_ID;
 
 /// Why a session stopped producing tokens.
@@ -40,6 +41,11 @@ pub enum FinishReason {
     Deadline,
     /// A step returned an error; the session is poisoned.
     Failed,
+    /// The session was suspended ([`DecodeSession::suspend`]): its state
+    /// lives on in a [`SessionSnapshot`] and the resumed session reports
+    /// the true finish reason — a suspended session never emits a final
+    /// record of its own.
+    Suspended,
 }
 
 impl FinishReason {
@@ -52,6 +58,7 @@ impl FinishReason {
             FinishReason::Cancelled => "cancelled",
             FinishReason::Deadline => "deadline",
             FinishReason::Failed => "failed",
+            FinishReason::Suspended => "suspended",
         }
     }
 }
@@ -100,6 +107,24 @@ pub trait DecodeSession {
     /// and pool stats finalized) plus the n-gram pool handle, returned so
     /// callers that loaned a shared-cache handle get it back.
     fn into_output(self: Box<Self>) -> (GenOutput, PoolHandle);
+
+    /// Whether [`DecodeSession::suspend`] can capture this session: the
+    /// engine supports state snapshots AND the runtime has a `cache_io`
+    /// executable AND the session is still live. The worker's park/revive
+    /// scheduler only ever parks suspendable sessions.
+    fn suspendable(&self) -> bool {
+        false
+    }
+
+    /// Capture the full session state into a host-resident
+    /// [`SessionSnapshot`] and release the device cache. The session
+    /// finishes with [`FinishReason::Suspended`] (no final record); the
+    /// snapshot resumes via [`SessionSnapshot::resume`] — in-process, after
+    /// a disk round trip, or on another worker — byte-identically. Errors
+    /// poison the session (`Failed`).
+    fn suspend(&mut self) -> Result<SessionSnapshot> {
+        Err(anyhow!("this session does not support suspend/resume"))
+    }
 
     /// Batched-decode extension ([`BatchStep`]): `Some` when this session's
     /// engine can split a step into plan / fused-call / complete phases so
@@ -175,6 +200,16 @@ pub(crate) enum RawStep {
     Stop(FinishReason),
 }
 
+/// What an engine hands over when its session suspends: the serializable
+/// engine state, the host image of its device cache (the device buffer is
+/// freed), and the live pool handle.
+pub(crate) struct EngineSuspend {
+    pub model: String,
+    pub state: EngineState,
+    pub kv: HostKv,
+    pub pool: PoolHandle,
+}
+
 /// Plan result of a batchable engine's step front half.
 pub(crate) enum StepPlan {
     /// Token window assembled ([`EngineStep::window`]); run the model call,
@@ -200,6 +235,20 @@ pub(crate) trait EngineStep {
     /// The session's n-gram pool handle (a detached handle for engines that
     /// keep no pool). Used to seal pool stats and return the handle.
     fn pool_mut(&mut self) -> &mut PoolHandle;
+
+    // --- suspend/resume hooks (defaults: not suspendable) -------------
+
+    /// Whether this engine can capture its state (and its runtime can
+    /// serialize the cache).
+    fn suspendable(&self) -> bool {
+        false
+    }
+
+    /// Capture engine state + download the KV cache; on success the device
+    /// cache is freed and the engine must not step again.
+    fn suspend_engine(&mut self) -> Result<EngineSuspend> {
+        Err(anyhow!("engine does not support suspend"))
+    }
 
     // --- batched-decode hooks (defaults: not batchable) ---------------
 
@@ -246,6 +295,10 @@ pub(crate) struct SessionCore {
     pub params: GenParams,
     pub stats: DecodeStats,
     pub timer: Timer,
+    /// decode wall-clock accumulated before a suspend: `stats.wall` is
+    /// stamped as `wall_offset + timer.elapsed()`, so parked time never
+    /// counts as decode time.
+    pub wall_offset: std::time::Duration,
     pub out: Vec<u32>,
     pub finished: Option<FinishReason>,
 }
@@ -257,6 +310,20 @@ impl SessionCore {
             params,
             stats: DecodeStats { prompt_tokens, ..Default::default() },
             timer: Timer::start(),
+            wall_offset: std::time::Duration::ZERO,
+            finished: None,
+        }
+    }
+
+    /// Rebuild the core of a resumed session from its snapshot parts.
+    pub fn resumed(params: GenParams, stats: DecodeStats, out: Vec<u32>,
+                   wall_offset: std::time::Duration) -> SessionCore {
+        SessionCore {
+            params,
+            stats,
+            timer: Timer::start(),
+            wall_offset,
+            out,
             finished: None,
         }
     }
@@ -270,7 +337,9 @@ impl SessionCore {
         debug_assert!(self.finished.is_none());
         self.stats.record_accept(raw.len());
         if self.stats.decode_steps == 1 {
-            self.stats.ttft = self.timer.elapsed();
+            // include time accumulated before a suspend (a session parked
+            // before its first commit must not report a resume-relative ttft)
+            self.stats.ttft = self.wall_offset + self.timer.elapsed();
         }
         let mut add = raw;
         let remaining = self.params.max_new_tokens.saturating_sub(self.out.len());
@@ -321,6 +390,21 @@ impl<E: EngineStep> Session<E> {
             self.sealed = true;
         }
     }
+
+    /// Shared error path for step()/complete(): a typed
+    /// [`CacheOverflow`] from `commit` finishes the session gracefully
+    /// (`CacheFull` — the tokens committed so far stand); anything else
+    /// poisons it (`Failed`).
+    fn step_error(&mut self, e: anyhow::Error) -> Result<StepOutcome> {
+        if e.downcast_ref::<CacheOverflow>().is_some() {
+            self.core.finished = Some(FinishReason::CacheFull);
+            self.seal();
+            return Ok(StepOutcome::Finished { reason: FinishReason::CacheFull });
+        }
+        self.core.finished = Some(FinishReason::Failed);
+        self.seal();
+        Err(e)
+    }
 }
 
 impl<E: EngineStep> DecodeSession for Session<E> {
@@ -348,11 +432,7 @@ impl<E: EngineStep> DecodeSession for Session<E> {
                 self.seal();
                 Ok(StepOutcome::Finished { reason })
             }
-            Err(e) => {
-                self.core.finished = Some(FinishReason::Failed);
-                self.seal();
-                Err(e)
-            }
+            Err(e) => self.step_error(e),
         }
     }
 
@@ -375,10 +455,46 @@ impl<E: EngineStep> DecodeSession for Session<E> {
         }
     }
 
+    fn suspendable(&self) -> bool {
+        self.core.finished.is_none() && self.eng.suspendable()
+    }
+
+    fn suspend(&mut self) -> Result<SessionSnapshot> {
+        if let Some(reason) = self.core.finished {
+            bail!("cannot suspend a session finished with {reason:?}");
+        }
+        if !self.eng.suspendable() {
+            bail!("engine does not support suspend/resume");
+        }
+        match self.eng.suspend_engine() {
+            Ok(es) => {
+                self.core.finished = Some(FinishReason::Suspended);
+                // the pool handle moved into the snapshot: stats seal
+                // happens when the RESUMED session finishes, not here
+                self.sealed = true;
+                Ok(SessionSnapshot {
+                    model: es.model,
+                    engine: es.state,
+                    kv: es.kv,
+                    params: self.core.params.clone(),
+                    out: std::mem::take(&mut self.core.out),
+                    stats: self.core.stats.clone(),
+                    wall_offset: self.core.wall_offset + self.core.timer.elapsed(),
+                    pool: es.pool,
+                })
+            }
+            Err(e) => {
+                self.core.finished = Some(FinishReason::Failed);
+                self.seal();
+                Err(e)
+            }
+        }
+    }
+
     fn into_output(self: Box<Self>) -> (GenOutput, PoolHandle) {
         let mut this = *self;
         this.seal();
-        let wall = this.core.timer.elapsed();
+        let wall = this.core.wall_offset + this.core.timer.elapsed();
         // `finish` is idempotent on an already-trimmed session: no overshoot
         // remains and EOS was cut, so it only decodes text + stamps wall.
         let out = finish(this.core.out, &this.core.params, this.core.stats, wall);
@@ -464,11 +580,7 @@ impl<E: EngineStep> BatchStep for Session<E> {
                 self.seal();
                 Ok(StepOutcome::Finished { reason })
             }
-            Err(e) => {
-                self.core.finished = Some(FinishReason::Failed);
-                self.seal();
-                Err(e)
-            }
+            Err(e) => self.step_error(e),
         }
     }
 }
@@ -812,6 +924,65 @@ mod tests {
                    StepOutcome::Committed { tokens: vec![1] });
         assert_eq!(*out.outcomes[1].as_ref().unwrap(),
                    StepOutcome::Committed { tokens: vec![7] });
+    }
+
+    /// Engine whose every step fails with the given error constructor.
+    struct Erroring<F: Fn() -> anyhow::Error> {
+        mk: F,
+        pool: PoolHandle,
+    }
+
+    impl<F: Fn() -> anyhow::Error> EngineStep for Erroring<F> {
+        fn raw_step(&mut self, _core: &mut SessionCore) -> Result<RawStep> {
+            Err((self.mk)())
+        }
+
+        fn pool_mut(&mut self) -> &mut PoolHandle {
+            &mut self.pool
+        }
+    }
+
+    #[test]
+    fn commit_overflow_finishes_with_cache_full() {
+        // the typed CacheOverflow from ModelRuntime::commit must finish the
+        // session gracefully instead of poisoning it
+        let mk = || anyhow::Error::new(CacheOverflow { len: 250, add: 10, capacity: 255 });
+        let mut sess = Session::new(
+            SessionCore::new(1, params(8)),
+            Erroring { mk, pool: PoolHandle::none() },
+        );
+        assert_eq!(
+            sess.step().unwrap(),
+            StepOutcome::Finished { reason: FinishReason::CacheFull }
+        );
+        assert_eq!(sess.finished(), Some(FinishReason::CacheFull));
+        // the finished session yields a well-formed (empty) output
+        let (out, _) = Box::new(sess).into_output();
+        assert_eq!(out.tokens, Vec::<u32>::new());
+    }
+
+    #[test]
+    fn non_overflow_errors_still_poison() {
+        let mk = || anyhow!("device fell over");
+        let mut sess = Session::new(
+            SessionCore::new(1, params(8)),
+            Erroring { mk, pool: PoolHandle::none() },
+        );
+        assert!(sess.step().is_err());
+        assert_eq!(sess.finished(), Some(FinishReason::Failed));
+    }
+
+    #[test]
+    fn suspend_rejected_for_unsupported_engine() {
+        let mut sess = Session::new(
+            SessionCore::new(1, params(4)),
+            Scripted::new(vec![vec![1], vec![2]]),
+        );
+        assert!(!sess.suspendable());
+        assert!(sess.suspend().is_err());
+        // a rejected suspend leaves the session fully usable
+        assert_eq!(sess.step().unwrap(), StepOutcome::Committed { tokens: vec![1] });
+        assert_eq!(sess.finished(), None);
     }
 
     #[test]

@@ -127,8 +127,11 @@ impl Decoder for SpecDecode {
         let dvocab = vocab_live(&self.draft);
 
         let pf = Timer::start();
-        let (_, cache) = rt.prefill(prompt)?;
-        let (_, dcache) = self.draft.prefill(prompt)?;
+        // prefix-reuse-aware prefill (engines ignore the prompt logits);
+        // the draft runtime has no prefix cache attached, so its call
+        // falls through to a plain prefill
+        let cache = rt.prefill_reuse(prompt)?;
+        let dcache = self.draft.prefill_reuse(prompt)?;
         core.stats.prefill_wall = pf.elapsed();
 
         let cur = *prompt.last().unwrap();

@@ -1,0 +1,177 @@
+//! KV-cache manager (L3.5): the layer that turns the per-session device
+//! cache from an unmovable, lifetime-pinned buffer into a managed resource.
+//!
+//! Three capabilities, all built on the runtime's `cache_io` serialization
+//! hook (`ModelRuntime::cache_to_host` / `cache_from_host`):
+//!
+//! - **snapshot/restore** ([`snapshot::SessionSnapshot`]): a suspended
+//!   session serializes to a versioned host/disk image and resumes
+//!   byte-identically — later, or on another worker with the same model
+//!   artifacts (the roadmap's session persistence/migration item);
+//! - **prefix reuse** ([`prefix::PrefixCache`]): a trie of committed-prompt
+//!   KV snapshots lets requests sharing a long prompt prefix fork a stored
+//!   cache (restore = fresh device buffer = copy-on-write) instead of
+//!   paying a full prefill;
+//! - **suspend/resume scheduling** ([`KvManager`] + the worker's park/revive
+//!   loop): when live sessions exceed the device budget (`--kv-budget`),
+//!   the coldest suspendable session is parked (snapshot + device free) and
+//!   revived when a slot frees — `max_live` becomes a soft limit instead of
+//!   an admission wall.
+//!
+//! The manager owns every parked cache behind a [`KvHandle`]; device-resident
+//! caches stay inside their live session (the established ownership design —
+//! the session borrows only the runtime) and return to the manager on park.
+//! See DESIGN.md §4 for the handle lifecycle, snapshot format, and
+//! prefix-trie invalidation rules.
+
+pub mod prefix;
+pub mod snapshot;
+
+use std::collections::BTreeMap;
+use std::collections::VecDeque;
+
+use anyhow::{anyhow, Result};
+
+pub use prefix::{PrefixCache, PrefixStats, DEFAULT_MAX_ENTRIES, DEFAULT_MIN_PREFIX};
+pub use snapshot::{EngineState, SessionSnapshot, SNAPSHOT_VERSION};
+
+/// Names a parked (host-resident) session cache inside a [`KvManager`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct KvHandle(u64);
+
+/// Point-in-time counters of a [`KvManager`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct KvStats {
+    /// sessions parked (device -> host serializations).
+    pub snapshots: u64,
+    /// sessions revived (host -> device restores).
+    pub restores: u64,
+    /// currently parked sessions.
+    pub parked: usize,
+    /// host bytes held by parked KV images.
+    pub parked_bytes: usize,
+}
+
+/// Owns parked session snapshots behind handles, in park order (FIFO revive
+/// keeps the suspend/resume rotation fair). One manager per worker — the
+/// snapshots are host data, so handing one to another worker (or to disk via
+/// [`KvManager::save`]) is how sessions migrate.
+#[derive(Default)]
+pub struct KvManager {
+    next: u64,
+    parked: BTreeMap<u64, SessionSnapshot>,
+    order: VecDeque<u64>,
+    snapshots: u64,
+    restores: u64,
+}
+
+impl KvManager {
+    pub fn new() -> KvManager {
+        KvManager::default()
+    }
+
+    /// Take ownership of a suspended session's snapshot.
+    pub fn park(&mut self, snap: SessionSnapshot) -> KvHandle {
+        self.next += 1;
+        self.snapshots += 1;
+        self.parked.insert(self.next, snap);
+        self.order.push_back(self.next);
+        KvHandle(self.next)
+    }
+
+    /// Give a parked snapshot back for resumption. None = unknown handle
+    /// (already revived, or never parked here).
+    pub fn revive(&mut self, h: KvHandle) -> Option<SessionSnapshot> {
+        let snap = self.parked.remove(&h.0)?;
+        self.order.retain(|&id| id != h.0);
+        self.restores += 1;
+        Some(snap)
+    }
+
+    /// The longest-parked session (FIFO revive order).
+    pub fn oldest(&self) -> Option<KvHandle> {
+        self.order.front().map(|&id| KvHandle(id))
+    }
+
+    pub fn parked_count(&self) -> usize {
+        self.parked.len()
+    }
+
+    pub fn stats(&self) -> KvStats {
+        KvStats {
+            snapshots: self.snapshots,
+            restores: self.restores,
+            parked: self.parked.len(),
+            parked_bytes: self.parked.values().map(|s| s.kv.bytes()).sum(),
+        }
+    }
+
+    /// Write a parked snapshot to disk (it stays parked — the file is a
+    /// portable copy another process or worker can [`KvManager::load`]).
+    pub fn save(&self, h: KvHandle, path: impl AsRef<std::path::Path>) -> Result<()> {
+        self.parked
+            .get(&h.0)
+            .ok_or_else(|| anyhow!("no parked session for {h:?}"))?
+            .save(path)
+    }
+
+    /// Park a snapshot read from disk (the other end of a migration).
+    pub fn load(&mut self, path: impl AsRef<std::path::Path>) -> Result<KvHandle> {
+        Ok(self.park(SessionSnapshot::load(path)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::GenParams;
+    use crate::metrics::DecodeStats;
+    use crate::ngram::PoolHandle;
+    use crate::runtime::HostKv;
+
+    fn snap(tag: u8) -> SessionSnapshot {
+        SessionSnapshot {
+            model: "tiny".into(),
+            engine: EngineState::Autoregressive { cur: tag as u32, rng: [1, 2, 3, 4] },
+            kv: HostKv { len: 3, elem: "i32".into(), data: vec![tag; 16] },
+            params: GenParams::default(),
+            out: vec![tag as u32],
+            stats: DecodeStats::default(),
+            wall_offset: std::time::Duration::ZERO,
+            pool: PoolHandle::none(),
+        }
+    }
+
+    #[test]
+    fn park_revive_fifo_and_counters() {
+        let mut kv = KvManager::new();
+        let a = kv.park(snap(1));
+        let b = kv.park(snap(2));
+        assert_eq!(kv.parked_count(), 2);
+        assert_eq!(kv.oldest(), Some(a));
+        let s = kv.revive(a).unwrap();
+        assert_eq!(s.out, vec![1]);
+        assert_eq!(kv.oldest(), Some(b));
+        assert!(kv.revive(a).is_none(), "double revive must fail");
+        let st = kv.stats();
+        assert_eq!((st.snapshots, st.restores, st.parked), (2, 1, 1));
+        assert_eq!(st.parked_bytes, 16);
+    }
+
+    #[test]
+    fn save_load_migrates_a_parked_session() {
+        let dir = std::env::temp_dir().join(format!("la-kvmgr-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("parked.kvsnap");
+        let mut src = KvManager::new();
+        let h = src.park(snap(7));
+        src.save(h, &path).unwrap();
+        // "another worker": a fresh manager loads the file
+        let mut dst = KvManager::new();
+        let h2 = dst.load(&path).unwrap();
+        let s = dst.revive(h2).unwrap();
+        assert_eq!(s.out, vec![7]);
+        assert_eq!(s.kv.data, vec![7; 16]);
+        assert!(src.save(KvHandle(999), &path).is_err());
+    }
+}

@@ -1,0 +1,442 @@
+//! Prefix-reuse trie: host-resident KV snapshots keyed by committed prompt
+//! token sequences.
+//!
+//! Production prompt traffic is dominated by shared prefixes (system
+//! prompts, few-shot templates, conversation history). Every byte of a
+//! shared prefix still pays a full prefill per request because the KV cache
+//! is private to the session. The [`PrefixCache`] closes that gap at the
+//! *host* level: after a prefill, the runtime stores a [`HostKv`] image of
+//! the cache keyed by the full prompt; a later request walks the trie along
+//! its own prompt and, from the deepest reachable node, forks any stored
+//! snapshot that shares that prefix — restore (fresh device buffer =
+//! copy-on-write) plus a token-by-token extension for the unshared tail.
+//! Bit-exactness: a cache row holds the KV of exactly one committed token,
+//! so rows `0..d` of any snapshot whose key shares a `d`-token prefix with
+//! the new prompt are identical to what a cold prefill would produce.
+//!
+//! Invalidation rules (see DESIGN.md §4): entries are only ever evicted —
+//! never mutated — because keys are immutable token sequences; eviction is
+//! LRU by last fork/insert with a `max_entries` cap, and interior trie
+//! nodes are pruned as soon as they lead to no entry. A `min_prefix` floor
+//! keeps short prompts (where prefill is cheap and reuse pollutes the trie)
+//! out entirely.
+//!
+//! The trie stores host data only, so one `Arc<PrefixCache>` is shared by
+//! all workers of a model (interior `Mutex`); device restore happens on the
+//! worker's own runtime.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::runtime::HostKv;
+
+/// Default minimum shared-prefix length (tokens) for storing/forking.
+pub const DEFAULT_MIN_PREFIX: usize = 32;
+/// Default snapshot-count cap.
+pub const DEFAULT_MAX_ENTRIES: usize = 64;
+
+/// Point-in-time counters of a [`PrefixCache`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefixStats {
+    /// lookups that forked a snapshot (the request skipped its prefill).
+    pub hits: u64,
+    /// lookups that fell through to a full prefill.
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+    /// stored snapshots.
+    pub entries: usize,
+    /// bytes held by stored snapshots.
+    pub bytes: usize,
+    /// cumulative snapshot bytes served from the trie instead of prefill.
+    pub bytes_reused: u64,
+}
+
+impl PrefixStats {
+    pub fn hit_rate(&self) -> f64 {
+        crate::metrics::hit_rate(self.hits, self.misses)
+    }
+}
+
+#[derive(Default)]
+struct Node {
+    children: HashMap<u32, Node>,
+    /// snapshot stored at this exact key depth, with its LRU stamp.
+    entry: Option<(Arc<HostKv>, u64)>,
+}
+
+impl Node {
+    /// Most-recently-used snapshot anywhere in this subtree.
+    fn best(&self) -> Option<(Arc<HostKv>, u64)> {
+        let mut best = self.entry.clone();
+        for c in self.children.values() {
+            if let Some(b) = c.best() {
+                if best.as_ref().is_none_or(|(_, s)| b.1 > *s) {
+                    best = Some(b);
+                }
+            }
+        }
+        best
+    }
+
+    /// Path (from here) to the least-recently-used entry in this subtree.
+    fn lru_path(&self, path: &mut Vec<u32>, out: &mut Option<(Vec<u32>, u64)>) {
+        if let Some((_, stamp)) = &self.entry {
+            if out.as_ref().is_none_or(|(_, s)| *stamp < *s) {
+                *out = Some((path.clone(), *stamp));
+            }
+        }
+        for (&t, c) in &self.children {
+            path.push(t);
+            c.lru_path(path, out);
+            path.pop();
+        }
+    }
+}
+
+struct Trie {
+    /// one root per namespace: tenants must never observe (or time) each
+    /// other's prefixes — a shared-prefix cache is a classic cross-tenant
+    /// probing side channel. "" is the default (no-tenant) namespace.
+    roots: HashMap<String, Node>,
+    clock: u64,
+    entries: usize,
+    bytes: usize,
+    hits: u64,
+    misses: u64,
+    inserts: u64,
+    evictions: u64,
+    bytes_reused: u64,
+}
+
+/// Thread-safe prefix-reuse trie shared by all workers serving one model.
+pub struct PrefixCache {
+    min_prefix: usize,
+    max_entries: usize,
+    inner: Mutex<Trie>,
+}
+
+impl PrefixCache {
+    pub fn new(min_prefix: usize, max_entries: usize) -> PrefixCache {
+        PrefixCache {
+            min_prefix: min_prefix.max(1),
+            max_entries: max_entries.max(1),
+            inner: Mutex::new(Trie {
+                roots: HashMap::new(),
+                clock: 0,
+                entries: 0,
+                bytes: 0,
+                hits: 0,
+                misses: 0,
+                inserts: 0,
+                evictions: 0,
+                bytes_reused: 0,
+            }),
+        }
+    }
+
+    pub fn with_defaults() -> PrefixCache {
+        PrefixCache::new(DEFAULT_MIN_PREFIX, DEFAULT_MAX_ENTRIES)
+    }
+
+    pub fn min_prefix(&self) -> usize {
+        self.min_prefix
+    }
+
+    /// The longest stored prefix usable for `tokens` in namespace `ns`
+    /// (the serving layer passes the request tenant; "" = default): walks
+    /// that namespace's trie along the prompt to the deepest reachable
+    /// node (depth `d` = the shared committed prefix) and returns the
+    /// most-recent snapshot in that node's subtree — every snapshot there
+    /// shares exactly `d` leading tokens with the prompt, so its first `d`
+    /// cache rows are the rows a cold prefill would write.
+    /// `allow_partial = false` restricts to full-prompt coverage
+    /// (`d == tokens.len()`) for callers that cannot extend a forked cache
+    /// token-by-token. Hit/miss counters reflect whether the caller skips
+    /// its prefill.
+    pub fn lookup(&self, ns: &str, tokens: &[u32], allow_partial: bool)
+                  -> Option<(usize, Arc<HostKv>)> {
+        let mut t = self.inner.lock().unwrap();
+        let Some(root) = t.roots.get(ns) else {
+            t.misses += 1;
+            return None;
+        };
+        let mut node = root;
+        let mut depth = 0usize;
+        for &tok in tokens {
+            match node.children.get(&tok) {
+                Some(c) => {
+                    node = c;
+                    depth += 1;
+                }
+                None => break,
+            }
+        }
+        if depth < self.min_prefix || (!allow_partial && depth < tokens.len()) {
+            t.misses += 1;
+            return None;
+        }
+        let Some((kv, _)) = node.best() else {
+            // a trie node always leads to >= 1 entry (pruned on eviction),
+            // but stay defensive
+            t.misses += 1;
+            return None;
+        };
+        t.hits += 1;
+        t.bytes_reused += kv.bytes() as u64;
+        // touch for LRU: restamp the chosen entry wherever it lives
+        t.clock += 1;
+        let stamp = t.clock;
+        if let Some(root) = t.roots.get_mut(ns) {
+            Self::restamp(root, &kv, stamp);
+        }
+        Some((depth, kv))
+    }
+
+    /// Restamp the entry holding `kv` (pointer identity) to `stamp`.
+    fn restamp(node: &mut Node, kv: &Arc<HostKv>, stamp: u64) -> bool {
+        if let Some((e, s)) = &mut node.entry {
+            if Arc::ptr_eq(e, kv) {
+                *s = stamp;
+                return true;
+            }
+        }
+        for c in node.children.values_mut() {
+            if Self::restamp(c, kv, stamp) {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Store a snapshot keyed by the full prompt under namespace `ns`.
+    /// No-ops on short prompts and existing keys (first snapshot wins —
+    /// identical by construction).
+    pub fn insert(&self, ns: &str, tokens: &[u32], kv: HostKv) {
+        if tokens.len() < self.min_prefix {
+            return;
+        }
+        let mut t = self.inner.lock().unwrap();
+        t.clock += 1;
+        let stamp = t.clock;
+        let bytes = kv.bytes();
+        let mut node = t.roots.entry(ns.to_string()).or_default();
+        for &tok in tokens {
+            node = node.children.entry(tok).or_default();
+        }
+        if node.entry.is_some() {
+            return;
+        }
+        node.entry = Some((Arc::new(kv), stamp));
+        t.entries += 1;
+        t.bytes += bytes;
+        t.inserts += 1;
+        while t.entries > self.max_entries {
+            Self::evict_lru(&mut t);
+        }
+    }
+
+    fn evict_lru(t: &mut Trie) {
+        // LRU across every namespace (the entry cap is global)
+        let mut victim: Option<(String, Vec<u32>, u64)> = None;
+        for (ns, root) in &t.roots {
+            let mut path = Vec::new();
+            let mut v: Option<(Vec<u32>, u64)> = None;
+            root.lru_path(&mut path, &mut v);
+            if let Some((key, stamp)) = v {
+                if victim.as_ref().is_none_or(|(_, _, s)| stamp < *s) {
+                    victim = Some((ns.clone(), key, stamp));
+                }
+            }
+        }
+        let Some((ns, key, _)) = victim else { return };
+        // remove the entry, pruning nodes that lead nowhere
+        fn remove(node: &mut Node, key: &[u32]) -> Option<usize> {
+            match key.first() {
+                None => {
+                    let (kv, _) = node.entry.take()?;
+                    Some(kv.bytes())
+                }
+                Some(&t) => {
+                    let child = node.children.get_mut(&t)?;
+                    let freed = remove(child, &key[1..])?;
+                    if child.children.is_empty() && child.entry.is_none() {
+                        node.children.remove(&t);
+                    }
+                    Some(freed)
+                }
+            }
+        }
+        let Some(root) = t.roots.get_mut(&ns) else { return };
+        if let Some(freed) = remove(&mut *root, &key) {
+            if root.children.is_empty() && root.entry.is_none() {
+                t.roots.remove(&ns);
+            }
+            t.entries -= 1;
+            t.bytes -= freed;
+            t.evictions += 1;
+        }
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        let t = self.inner.lock().unwrap();
+        PrefixStats {
+            hits: t.hits,
+            misses: t.misses,
+            inserts: t.inserts,
+            evictions: t.evictions,
+            entries: t.entries,
+            bytes: t.bytes,
+            bytes_reused: t.bytes_reused,
+        }
+    }
+
+    /// One human-readable metrics line (server report format).
+    pub fn report(&self) -> String {
+        let s = self.stats();
+        format!(
+            "prefix_cache: entries={} bytes={} hits={} misses={} hit_rate={:.2} \
+             inserts={} evictions={} bytes_reused={}\n",
+            s.entries, s.bytes, s.hits, s.misses, s.hit_rate(), s.inserts,
+            s.evictions, s.bytes_reused
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kv(len: usize, tag: u8) -> HostKv {
+        HostKv { len, elem: "i32".into(), data: vec![tag; 64] }
+    }
+
+    fn toks(base: &[u32], tail: &[u32]) -> Vec<u32> {
+        let mut v = base.to_vec();
+        v.extend_from_slice(tail);
+        v
+    }
+
+    #[test]
+    fn exact_and_partial_hits() {
+        let pc = PrefixCache::new(4, 8);
+        let sys: Vec<u32> = (0..10).collect();
+        let p1 = toks(&sys, &[100, 101]);
+        pc.insert("", &p1, kv(p1.len() - 1, 1));
+
+        // exact: full key walk
+        let (d, got) = pc.lookup("", &p1, false).unwrap();
+        assert_eq!(d, p1.len());
+        assert_eq!(got.data, vec![1; 64]);
+
+        // partial: diverges after the shared prefix
+        let p2 = toks(&sys, &[200, 201, 202]);
+        let (d, _) = pc.lookup("", &p2, true).unwrap();
+        assert_eq!(d, sys.len(), "shared prefix depth");
+        // without extension support, partial coverage is a miss
+        assert!(pc.lookup("", &p2, false).is_none());
+
+        let st = pc.stats();
+        assert_eq!((st.hits, st.misses), (2, 1));
+        assert!(st.bytes_reused > 0);
+    }
+
+    #[test]
+    fn min_prefix_floor() {
+        let pc = PrefixCache::new(8, 8);
+        pc.insert("", &[1, 2, 3], kv(2, 1)); // too short: not stored
+        assert_eq!(pc.stats().entries, 0);
+        let long: Vec<u32> = (0..12).collect();
+        pc.insert("", &long, kv(11, 2));
+        // shared prefix of 5 < min_prefix: miss
+        assert!(pc
+            .lookup("", &[0, 1, 2, 3, 4, 99, 98, 97, 96, 95, 94, 93], true)
+            .is_none());
+        assert!(pc.lookup("", &long, false).is_some());
+    }
+
+    #[test]
+    fn prefers_most_recent_snapshot_in_subtree() {
+        let pc = PrefixCache::new(2, 8);
+        let sys = [5u32, 6];
+        pc.insert("", &toks(&sys, &[10, 11]), kv(3, 1));
+        pc.insert("", &toks(&sys, &[20, 21]), kv(3, 2));
+        // both share prefix [5,6] with the probe; the newer one wins
+        let (d, got) = pc.lookup("", &toks(&sys, &[30]), true).unwrap();
+        assert_eq!(d, 2);
+        assert_eq!(got.data, vec![2; 64]);
+    }
+
+    #[test]
+    fn lru_eviction_prunes_and_counts() {
+        let pc = PrefixCache::new(2, 2);
+        pc.insert("", &[1, 2, 3], kv(2, 1));
+        pc.insert("", &[4, 5, 6], kv(2, 2));
+        // touch the first so the second becomes LRU
+        assert!(pc.lookup("", &[1, 2, 3], false).is_some());
+        pc.insert("", &[7, 8, 9], kv(2, 3)); // evicts [4,5,6]
+        let st = pc.stats();
+        assert_eq!(st.entries, 2);
+        assert_eq!(st.evictions, 1);
+        assert!(pc.lookup("", &[4, 5, 6], false).is_none());
+        assert!(pc.lookup("", &[1, 2, 3], false).is_some());
+        assert!(pc.lookup("", &[7, 8, 9], false).is_some());
+        // bytes accounting survives eviction
+        assert_eq!(st.bytes, 2 * 64);
+    }
+
+    #[test]
+    fn duplicate_insert_is_a_noop() {
+        let pc = PrefixCache::new(2, 8);
+        pc.insert("", &[1, 2, 3], kv(2, 1));
+        pc.insert("", &[1, 2, 3], kv(2, 9));
+        let st = pc.stats();
+        assert_eq!((st.entries, st.inserts), (1, 1));
+        let (_, got) = pc.lookup("", &[1, 2, 3], false).unwrap();
+        assert_eq!(got.data, vec![1; 64], "first snapshot wins");
+    }
+
+    #[test]
+    fn namespaces_isolate_tenants() {
+        let pc = PrefixCache::new(2, 8);
+        let prompt = [1u32, 2, 3, 4];
+        pc.insert("acme", &prompt, kv(3, 1));
+        // the exact same prefix must NOT hit from another tenant (or the
+        // default namespace): that timing difference is a side channel
+        assert!(pc.lookup("globex", &prompt, true).is_none());
+        assert!(pc.lookup("", &prompt, true).is_none());
+        assert!(pc.lookup("acme", &prompt, false).is_some());
+        // eviction spans namespaces (the cap is global) and prunes empty
+        // namespace roots
+        let pc = PrefixCache::new(2, 1);
+        pc.insert("a", &[1, 2, 3], kv(2, 1));
+        pc.insert("b", &[4, 5, 6], kv(2, 2)); // evicts a's only entry
+        assert!(pc.lookup("a", &[1, 2, 3], false).is_none());
+        assert!(pc.lookup("b", &[4, 5, 6], false).is_some());
+        assert_eq!(pc.stats().entries, 1);
+        assert_eq!(pc.stats().evictions, 1);
+    }
+
+    #[test]
+    fn concurrent_access_is_safe() {
+        let pc = Arc::new(PrefixCache::new(2, 16));
+        let mut joins = Vec::new();
+        for t in 0..4u32 {
+            let pc = pc.clone();
+            joins.push(std::thread::spawn(move || {
+                let ns = if t % 2 == 0 { "even" } else { "odd" };
+                for i in 0..200u32 {
+                    let key = vec![t, i % 8, i % 5];
+                    pc.insert(ns, &key, kv(2, t as u8));
+                    let _ = pc.lookup(ns, &key, true);
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        let st = pc.stats();
+        assert!(st.entries <= 16);
+        assert!(st.hits > 0);
+    }
+}

@@ -1,0 +1,508 @@
+//! Versioned session snapshots: the host-resident, serializable form of a
+//! suspended [`crate::engine::DecodeSession`].
+//!
+//! A snapshot captures everything a deterministic engine needs to continue
+//! byte-identically: the committed output and stats, the generation params,
+//! the engine's own state (window, RNG stream, current token), the n-gram
+//! pool, and the [`HostKv`] image of the device cache. In-memory snapshots
+//! keep the live [`PoolHandle`] (exact resume, shared caches included);
+//! the on-disk form ([`SessionSnapshot::to_bytes`]) serializes private-pool
+//! contents and re-binds (or cold-starts) shared caches on load — pool
+//! contents affect accept length, never output bytes, so the on-disk round
+//! trip stays byte-identical for tokens and deltas in every case, and for
+//! stats whenever the pool was private (the suite pins this).
+//!
+//! ## On-disk format (version 1)
+//!
+//! ```text
+//! LAKV1\n
+//! <one JSON header line: model, engine state, params, output, stats, pool>\n
+//! <raw HostKv payload bytes>
+//! ```
+//!
+//! The header carries `kv.bytes` so the payload length is validated on
+//! load; 64-bit values (seed, RNG state) are hex strings because the JSON
+//! substrate is f64-backed. Snapshots are worker- and process-portable:
+//! resuming on another worker only requires the same model artifacts.
+
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::engine::session::SessionCore;
+use crate::engine::{DecodeSession, GenParams, SamplingParams};
+use crate::metrics::DecodeStats;
+use crate::ngram::{NgramCacheRegistry, PoolHandle};
+use crate::runtime::{HostKv, ModelRuntime};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+const MAGIC: &[u8] = b"LAKV1\n";
+pub const SNAPSHOT_VERSION: u32 = 1;
+
+/// Engine-specific resumable state. Only deterministic engines whose whole
+/// step state lives between steps are snapshotable (autoregressive and
+/// lookahead — jointly the serving default and the paper's contribution);
+/// the other baselines report `suspendable() == false` and are simply never
+/// parked by the worker.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EngineState {
+    Autoregressive {
+        cur: u32,
+        rng: [u64; 4],
+    },
+    Lookahead {
+        w: usize,
+        n: usize,
+        g: usize,
+        attn: String,
+        force_generic: bool,
+        /// the 2D lookahead window (N-1 rows x W columns).
+        rows: Vec<Vec<u32>>,
+        cur: u32,
+        rng: [u64; 4],
+    },
+}
+
+/// A suspended session: host-resident, serializable, resumable on any
+/// runtime loaded from the same model artifacts.
+pub struct SessionSnapshot {
+    pub model: String,
+    pub engine: EngineState,
+    pub kv: HostKv,
+    pub params: GenParams,
+    /// committed (budget/EOS-trimmed) output so far.
+    pub out: Vec<u32>,
+    pub stats: DecodeStats,
+    /// decode wall-clock accumulated before the suspend (suspended time is
+    /// excluded from the resumed session's `stats.wall`).
+    pub wall_offset: Duration,
+    pub pool: PoolHandle,
+}
+
+fn hex_u64(v: u64) -> Json {
+    Json::str(format!("{v:016x}"))
+}
+
+fn parse_hex(j: &Json, what: &str) -> Result<u64> {
+    let s = j.as_str().ok_or_else(|| anyhow!("snapshot: {what} not a hex string"))?;
+    u64::from_str_radix(s, 16).map_err(|e| anyhow!("snapshot: bad {what}: {e}"))
+}
+
+fn rng_json(s: &[u64; 4]) -> Json {
+    Json::arr(s.iter().map(|&v| hex_u64(v)).collect())
+}
+
+fn parse_rng(j: &Json, what: &str) -> Result<[u64; 4]> {
+    let arr = j.as_arr().ok_or_else(|| anyhow!("snapshot: {what} not an array"))?;
+    if arr.len() != 4 {
+        bail!("snapshot: {what} must have 4 words");
+    }
+    let mut out = [0u64; 4];
+    for (i, v) in arr.iter().enumerate() {
+        out[i] = parse_hex(v, what)?;
+    }
+    Ok(out)
+}
+
+fn u32s_json(v: &[u32]) -> Json {
+    Json::arr(v.iter().map(|&x| Json::num(x as f64)).collect())
+}
+
+fn parse_u32s(j: &Json, what: &str) -> Result<Vec<u32>> {
+    j.usize_vec()
+        .map(|v| v.into_iter().map(|x| x as u32).collect())
+        .ok_or_else(|| anyhow!("snapshot: {what} not a token array"))
+}
+
+fn req<'a>(j: &'a Json, key: &str) -> Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow!("snapshot: missing '{key}'"))
+}
+
+fn req_usize(j: &Json, key: &str) -> Result<usize> {
+    req(j, key)?.as_usize().ok_or_else(|| anyhow!("snapshot: '{key}' not usize"))
+}
+
+fn req_f64(j: &Json, key: &str) -> Result<f64> {
+    req(j, key)?.as_f64().ok_or_else(|| anyhow!("snapshot: '{key}' not a number"))
+}
+
+fn req_bool(j: &Json, key: &str) -> Result<bool> {
+    req(j, key)?.as_bool().ok_or_else(|| anyhow!("snapshot: '{key}' not a bool"))
+}
+
+fn req_str(j: &Json, key: &str) -> Result<String> {
+    Ok(req(j, key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("snapshot: '{key}' not a string"))?
+        .to_string())
+}
+
+fn dur_us(d: Duration) -> Json {
+    Json::num(d.as_micros() as f64)
+}
+
+fn parse_dur(j: &Json, key: &str) -> Result<Duration> {
+    Ok(Duration::from_micros(req_f64(j, key)? as u64))
+}
+
+impl SessionSnapshot {
+    /// Serialize to the versioned on-disk format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let engine = match &self.engine {
+            EngineState::Autoregressive { cur, rng } => Json::obj(vec![
+                ("kind", Json::str("autoregressive")),
+                ("cur", Json::num(*cur as f64)),
+                ("rng", rng_json(rng)),
+            ]),
+            EngineState::Lookahead { w, n, g, attn, force_generic, rows, cur, rng } => {
+                Json::obj(vec![
+                    ("kind", Json::str("lookahead")),
+                    ("w", Json::num(*w as f64)),
+                    ("n", Json::num(*n as f64)),
+                    ("g", Json::num(*g as f64)),
+                    ("attn", Json::str(attn.clone())),
+                    ("force_generic", Json::Bool(*force_generic)),
+                    ("rows", Json::arr(rows.iter().map(|r| u32s_json(r)).collect())),
+                    ("cur", Json::num(*cur as f64)),
+                    ("rng", rng_json(rng)),
+                ])
+            }
+        };
+        let p = &self.params;
+        let params = Json::obj(vec![
+            ("max_new_tokens", Json::num(p.max_new_tokens as f64)),
+            ("temperature", Json::num(p.sampling.temperature)),
+            ("top_k", Json::num(p.sampling.top_k as f64)),
+            ("top_p", Json::num(p.sampling.top_p)),
+            ("stop_at_eos", Json::Bool(p.stop_at_eos)),
+            ("seed", hex_u64(p.seed)),
+        ]);
+        let s = &self.stats;
+        let stats = Json::obj(vec![
+            ("prompt_tokens", Json::num(s.prompt_tokens as f64)),
+            ("generated_tokens", Json::num(s.generated_tokens as f64)),
+            ("decode_steps", Json::num(s.decode_steps as f64)),
+            ("accepted_by_len",
+             Json::arr(s.accepted_by_len.iter().map(|&c| Json::num(c as f64)).collect())),
+            ("pool_hits", Json::num(s.pool_hits as f64)),
+            ("pool_misses", Json::num(s.pool_misses as f64)),
+            ("pool_warm_start", Json::Bool(s.pool_warm_start)),
+            ("pool_shared", Json::Bool(s.pool_shared)),
+            ("pool_entries_start", Json::num(s.pool_entries_start as f64)),
+            ("pool_entries_end", Json::num(s.pool_entries_end as f64)),
+            ("prefill_us", dur_us(s.prefill_wall)),
+            ("ttft_us", dur_us(s.ttft)),
+        ]);
+        let pe = self.pool.export();
+        let pool = Json::obj(vec![
+            ("shared", Json::Bool(pe.shared)),
+            ("tenant", match &pe.tenant {
+                Some(t) => Json::str(t.clone()),
+                None => Json::Null,
+            }),
+            ("spec", match &pe.spec {
+                Some((n, pk, tot, kind)) => Json::arr(vec![
+                    Json::num(*n as f64),
+                    Json::num(*pk as f64),
+                    Json::num(*tot as f64),
+                    Json::str(kind.clone()),
+                ]),
+                None => Json::Null,
+            }),
+            ("entries", Json::arr(pe.entries.iter().map(|g| u32s_json(g)).collect())),
+            ("hits", Json::num(pe.hits as f64)),
+            ("misses", Json::num(pe.misses as f64)),
+            ("warm_start", Json::Bool(pe.warm_start)),
+            ("entries_start", Json::num(pe.entries_start as f64)),
+        ]);
+        let header = Json::obj(vec![
+            ("version", Json::num(SNAPSHOT_VERSION as f64)),
+            ("model", Json::str(self.model.clone())),
+            ("engine", engine),
+            ("params", params),
+            ("out", u32s_json(&self.out)),
+            ("stats", stats),
+            ("wall_offset_us", dur_us(self.wall_offset)),
+            ("pool", pool),
+            ("kv", Json::obj(vec![
+                ("len", Json::num(self.kv.len as f64)),
+                ("elem", Json::str(self.kv.elem.clone())),
+                ("bytes", Json::num(self.kv.data.len() as f64)),
+            ])),
+        ]);
+        let mut bytes = Vec::with_capacity(MAGIC.len() + self.kv.data.len() + 512);
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(header.dump().as_bytes());
+        bytes.push(b'\n');
+        bytes.extend_from_slice(&self.kv.data);
+        bytes
+    }
+
+    /// Deserialize; shared pools degrade to cold private pools (pass a
+    /// registry via [`SessionSnapshot::from_bytes_with`] to re-bind).
+    pub fn from_bytes(bytes: &[u8]) -> Result<SessionSnapshot> {
+        Self::from_bytes_with(bytes, None)
+    }
+
+    /// Deserialize, re-binding a shared n-gram pool to `registry`'s cache
+    /// for the snapshot's model when one is provided.
+    pub fn from_bytes_with(bytes: &[u8], registry: Option<&NgramCacheRegistry>)
+                           -> Result<SessionSnapshot> {
+        let Some(rest) = bytes.strip_prefix(MAGIC) else {
+            bail!("not a session snapshot (bad magic)");
+        };
+        let nl = rest
+            .iter()
+            .position(|&b| b == b'\n')
+            .ok_or_else(|| anyhow!("snapshot: truncated header"))?;
+        let header = std::str::from_utf8(&rest[..nl])
+            .map_err(|_| anyhow!("snapshot: header not UTF-8"))?;
+        let data = &rest[nl + 1..];
+        let j = Json::parse(header).map_err(|e| anyhow!("snapshot header: {e}"))?;
+        let version = req_usize(&j, "version")? as u32;
+        if version != SNAPSHOT_VERSION {
+            bail!("snapshot version {version} unsupported (want {SNAPSHOT_VERSION})");
+        }
+        let model = req_str(&j, "model")?;
+
+        let ej = req(&j, "engine")?;
+        let engine = match req_str(ej, "kind")?.as_str() {
+            "autoregressive" => EngineState::Autoregressive {
+                cur: req_usize(ej, "cur")? as u32,
+                rng: parse_rng(req(ej, "rng")?, "engine.rng")?,
+            },
+            "lookahead" => {
+                let rows_j = req(ej, "rows")?
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("snapshot: rows not an array"))?;
+                let rows = rows_j
+                    .iter()
+                    .map(|r| parse_u32s(r, "engine.rows"))
+                    .collect::<Result<Vec<_>>>()?;
+                EngineState::Lookahead {
+                    w: req_usize(ej, "w")?,
+                    n: req_usize(ej, "n")?,
+                    g: req_usize(ej, "g")?,
+                    attn: req_str(ej, "attn")?,
+                    force_generic: req_bool(ej, "force_generic")?,
+                    rows,
+                    cur: req_usize(ej, "cur")? as u32,
+                    rng: parse_rng(req(ej, "rng")?, "engine.rng")?,
+                }
+            }
+            other => bail!("snapshot: unknown engine kind '{other}'"),
+        };
+
+        let pj = req(&j, "params")?;
+        let params = GenParams {
+            max_new_tokens: req_usize(pj, "max_new_tokens")?,
+            sampling: SamplingParams {
+                temperature: req_f64(pj, "temperature")?,
+                top_k: req_usize(pj, "top_k")?,
+                top_p: req_f64(pj, "top_p")?,
+            },
+            stop_at_eos: req_bool(pj, "stop_at_eos")?,
+            seed: parse_hex(req(pj, "seed")?, "params.seed")?,
+        };
+
+        let sj = req(&j, "stats")?;
+        let stats = DecodeStats {
+            prompt_tokens: req_usize(sj, "prompt_tokens")?,
+            generated_tokens: req_usize(sj, "generated_tokens")?,
+            decode_steps: req_usize(sj, "decode_steps")?,
+            accepted_by_len: req(sj, "accepted_by_len")?
+                .usize_vec()
+                .ok_or_else(|| anyhow!("snapshot: accepted_by_len"))?,
+            pool_hits: req_usize(sj, "pool_hits")?,
+            pool_misses: req_usize(sj, "pool_misses")?,
+            pool_warm_start: req_bool(sj, "pool_warm_start")?,
+            pool_shared: req_bool(sj, "pool_shared")?,
+            pool_entries_start: req_usize(sj, "pool_entries_start")?,
+            pool_entries_end: req_usize(sj, "pool_entries_end")?,
+            wall: Duration::ZERO, // stamped at finish from wall_offset + timer
+            prefill_wall: parse_dur(sj, "prefill_us")?,
+            ttft: parse_dur(sj, "ttft_us")?,
+        };
+
+        let plj = req(&j, "pool")?;
+        let export = crate::ngram::shared::PoolExport {
+            spec: match req(plj, "spec")? {
+                Json::Null => None,
+                sp => {
+                    let arr = sp.as_arr().ok_or_else(|| anyhow!("snapshot: pool.spec"))?;
+                    if arr.len() != 4 {
+                        bail!("snapshot: pool.spec arity");
+                    }
+                    Some((
+                        arr[0].as_usize().ok_or_else(|| anyhow!("pool.spec n"))?,
+                        arr[1].as_usize().ok_or_else(|| anyhow!("pool.spec per_key"))?,
+                        arr[2].as_usize().ok_or_else(|| anyhow!("pool.spec total"))?,
+                        arr[3]
+                            .as_str()
+                            .ok_or_else(|| anyhow!("pool.spec kind"))?
+                            .to_string(),
+                    ))
+                }
+            },
+            shared: req_bool(plj, "shared")?,
+            tenant: req(plj, "tenant")?.as_str().map(str::to_string),
+            entries: req(plj, "entries")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("snapshot: pool.entries"))?
+                .iter()
+                .map(|g| parse_u32s(g, "pool.entries"))
+                .collect::<Result<Vec<_>>>()?,
+            hits: req_usize(plj, "hits")?,
+            misses: req_usize(plj, "misses")?,
+            warm_start: req_bool(plj, "warm_start")?,
+            entries_start: req_usize(plj, "entries_start")?,
+        };
+        let pool = export.restore(registry.map(|r| (r, model.as_str())));
+
+        let kj = req(&j, "kv")?;
+        let kv_len = req_usize(kj, "len")?;
+        let kv_elem = req_str(kj, "elem")?;
+        let kv_bytes = req_usize(kj, "bytes")?;
+        if data.len() != kv_bytes {
+            bail!("snapshot: payload is {} bytes, header says {kv_bytes}", data.len());
+        }
+
+        Ok(SessionSnapshot {
+            model,
+            engine,
+            kv: HostKv { len: kv_len, elem: kv_elem, data: data.to_vec() },
+            params,
+            out: parse_u32s(req(&j, "out")?, "out")?,
+            stats,
+            wall_offset: parse_dur(&j, "wall_offset_us")?,
+            pool,
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let path = path.as_ref();
+        std::fs::write(path, self.to_bytes())
+            .map_err(|e| anyhow!("writing snapshot {path:?}: {e}"))
+    }
+
+    pub fn load(path: impl AsRef<std::path::Path>) -> Result<SessionSnapshot> {
+        let path = path.as_ref();
+        let bytes =
+            std::fs::read(path).map_err(|e| anyhow!("reading snapshot {path:?}: {e}"))?;
+        Self::from_bytes(&bytes)
+    }
+
+    /// Reopen the session on `rt` (same model artifacts required) and
+    /// continue exactly where it was suspended: the KV cache is restored to
+    /// a fresh device buffer and the engine state (window, RNG stream,
+    /// current token) picks up mid-generation — tokens, deltas, and stats
+    /// are byte-identical to a never-suspended run (`rust/tests/kv_manager.rs`).
+    pub fn resume<'rt>(self, rt: &'rt ModelRuntime)
+                       -> Result<Box<dyn DecodeSession + 'rt>> {
+        if self.model != rt.mm.name {
+            bail!("snapshot is for model '{}', runtime serves '{}'",
+                  self.model, rt.mm.name);
+        }
+        let cache = rt.cache_from_host(&self.kv)?;
+        let core =
+            SessionCore::resumed(self.params, self.stats, self.out, self.wall_offset);
+        match self.engine {
+            EngineState::Autoregressive { cur, rng } => {
+                Ok(crate::engine::autoregressive::resume_session(
+                    rt, core, cache, cur, Rng::from_state(rng), self.pool))
+            }
+            EngineState::Lookahead { w, n, g, attn, force_generic, rows, cur, rng } => {
+                crate::engine::lookahead::resume_session(
+                    rt, core, cache, (w, n, g), attn, force_generic, rows, cur,
+                    Rng::from_state(rng), self.pool)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> SessionSnapshot {
+        let mut pool = PoolHandle::private(crate::ngram::PoolSpec::new(3, 4, 64));
+        pool.insert(&[1, 2, 3]);
+        let _ = pool.lookup(1, 4);
+        let mut stats = DecodeStats { prompt_tokens: 5, ..Default::default() };
+        stats.record_accept(2);
+        stats.record_accept(3);
+        stats.ttft = Duration::from_micros(1500);
+        SessionSnapshot {
+            model: "tiny".into(),
+            engine: EngineState::Lookahead {
+                w: 5,
+                n: 3,
+                g: 5,
+                attn: "jnp".into(),
+                force_generic: false,
+                rows: vec![vec![1, 2, 3, 4, 5], vec![9, 8, 7, 6, 5]],
+                cur: 42,
+                rng: [u64::MAX, 1, 0x1234_5678_9abc_def0, 7],
+            },
+            kv: HostKv { len: 9, elem: "i32".into(), data: vec![0xAB; 40] },
+            params: GenParams {
+                max_new_tokens: 64,
+                sampling: SamplingParams { temperature: 0.7, top_k: 5, top_p: 0.9 },
+                stop_at_eos: true,
+                seed: u64::MAX - 3,
+            },
+            out: vec![10, 11, 12],
+            stats,
+            wall_offset: Duration::from_micros(2500),
+            pool,
+        }
+    }
+
+    #[test]
+    fn disk_format_roundtrips() {
+        let snap = sample();
+        let bytes = snap.to_bytes();
+        assert!(bytes.starts_with(MAGIC));
+        let back = SessionSnapshot::from_bytes(&bytes).unwrap();
+        assert_eq!(back.model, "tiny");
+        assert_eq!(back.engine, snap.engine);
+        assert_eq!(back.kv, snap.kv);
+        assert_eq!(back.out, snap.out);
+        assert_eq!(back.params.seed, u64::MAX - 3, "64-bit seed must survive");
+        assert_eq!(back.params.sampling, snap.params.sampling);
+        assert_eq!(back.stats.generated_tokens, 5);
+        assert_eq!(back.stats.accepted_by_len, snap.stats.accepted_by_len);
+        assert_eq!(back.stats.ttft, snap.stats.ttft);
+        assert_eq!(back.wall_offset, snap.wall_offset);
+        // restored pool reproduces lookups and counters
+        let mut p = back.pool;
+        assert_eq!(p.lookup(1, 4), vec![vec![2, 3]]);
+        assert_eq!((p.hits, p.misses), (2, 0));
+    }
+
+    #[test]
+    fn rejects_corrupt_snapshots() {
+        let snap = sample();
+        let bytes = snap.to_bytes();
+        assert!(SessionSnapshot::from_bytes(b"nope").is_err());
+        // truncated payload
+        assert!(SessionSnapshot::from_bytes(&bytes[..bytes.len() - 3]).is_err());
+        // wrong magic
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(SessionSnapshot::from_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn save_load_file_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("la-snap-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("s1.kvsnap");
+        let snap = sample();
+        snap.save(&path).unwrap();
+        let back = SessionSnapshot::load(&path).unwrap();
+        assert_eq!(back.engine, snap.engine);
+        assert_eq!(back.kv, snap.kv);
+    }
+}

@@ -19,6 +19,7 @@
 
 pub mod analytic;
 pub mod engine;
+pub mod kv;
 pub mod layout;
 pub mod lp;
 pub mod metrics;

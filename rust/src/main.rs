@@ -61,6 +61,13 @@ fn print_usage(args: &Args) {
         Opt { name: "batch-decode", default: Some("true"),
               help: "fuse compatible live sessions into one batched \
                      decode call per round (serve)" },
+        Opt { name: "kv-budget", default: Some("0"),
+              help: "device KV budget per worker: sessions beyond it are \
+                     suspended (snapshot+free) and resumed round-robin; \
+                     0 = unlimited (serve)" },
+        Opt { name: "prefix-cache", default: Some("true"),
+              help: "fork cached KV snapshots for requests sharing a \
+                     long prompt prefix instead of re-prefilling (serve)" },
         Opt { name: "stream", default: Some("false"),
               help: "stream chunk lines before the final record (client)" },
         Opt { name: "devices", default: Some("4"), help: "LP simulated devices" },
@@ -146,6 +153,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             time_slice: args.usize_or("time-slice", 4),
             max_live: args.usize_or("max-live", 4),
             batch_decode: args.bool_or("batch-decode", true),
+            kv_budget: args.usize_or("kv-budget", 0),
+            prefix_cache: args.bool_or("prefix-cache", true),
         },
     };
     let max_conns = args.get("max-conns").and_then(|v| v.parse().ok());

@@ -118,6 +118,11 @@ impl Registry {
         *self.counters.entry(name.to_string()).or_default() += by;
     }
 
+    /// Gauge semantics: overwrite the value (e.g. `suspended_sessions`).
+    pub fn set(&mut self, name: &str, v: u64) {
+        self.counters.insert(name.to_string(), v);
+    }
+
     pub fn observe(&mut self, name: &str, v: f64) {
         self.histograms.entry(name.to_string()).or_default().record(v);
     }
@@ -270,6 +275,14 @@ mod tests {
         r.observe("latency_ms", 4.0);
         assert_eq!(r.counter("requests"), 3);
         assert!(r.report().contains("requests = 3"));
+    }
+
+    #[test]
+    fn registry_gauge_overwrites() {
+        let mut r = Registry::new();
+        r.set("suspended_sessions", 3);
+        r.set("suspended_sessions", 1);
+        assert_eq!(r.counter("suspended_sessions"), 1);
     }
 
     #[test]

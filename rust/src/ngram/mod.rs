@@ -12,7 +12,8 @@
 pub mod shared;
 
 pub use shared::{
-    NgramCacheRegistry, PoolHandle, PoolSpec, SharedCacheStats, SharedNgramCache,
+    NgramCacheRegistry, PoolExport, PoolHandle, PoolSpec, SharedCacheStats,
+    SharedNgramCache,
 };
 
 use std::collections::hash_map::Entry;
@@ -51,6 +52,15 @@ pub trait NgramSource {
         for win in tokens.windows(n) {
             self.insert(win);
         }
+    }
+
+    /// Export every stored n-gram (key + suffix) for session snapshots,
+    /// grouped by key with per-key LRU order preserved oldest-first — so
+    /// re-inserting the dump into a fresh pool reproduces every lookup.
+    /// `None` = contents are not exportable (shared caches live server-side
+    /// and are re-bound, not copied, on resume).
+    fn dump(&self) -> Option<Vec<Vec<u32>>> {
+        None
     }
 }
 
@@ -228,6 +238,25 @@ impl NgramPool {
     pub fn hit_rate(&self) -> f64 {
         crate::metrics::hit_rate(self.hits as u64, self.misses as u64)
     }
+
+    /// Every stored n-gram, keys sorted, per-key LRU order oldest-first
+    /// (see [`NgramSource::dump`]). The global eviction rotation is not
+    /// captured — irrelevant unless the restored pool is re-filled past its
+    /// caps.
+    pub fn dump_grams(&self) -> Vec<Vec<u32>> {
+        let mut keys: Vec<u32> = self.map.keys().copied().collect();
+        keys.sort_unstable();
+        let mut out = Vec::with_capacity(self.total);
+        for k in keys {
+            for s in &self.map[&k] {
+                let mut g = Vec::with_capacity(self.n);
+                g.push(k);
+                g.extend_from_slice(&s.suffix);
+                out.push(g);
+            }
+        }
+        out
+    }
 }
 
 impl NgramSource for NgramPool {
@@ -249,6 +278,10 @@ impl NgramSource for NgramPool {
 
     fn seed_from(&mut self, tokens: &[u32]) {
         NgramPool::seed_from(self, tokens)
+    }
+
+    fn dump(&self) -> Option<Vec<Vec<u32>>> {
+        Some(self.dump_grams())
     }
 }
 
@@ -327,6 +360,21 @@ mod tests {
         assert_eq!(src.lookup(1, 4), vec![vec![2, 3]]);
         assert_eq!(src.len(), 1);
         assert!(!src.is_empty());
+    }
+
+    #[test]
+    fn dump_reproduces_lookups_in_a_fresh_pool() {
+        let mut p = NgramPool::new(3, 4, 100);
+        p.insert(&[1, 2, 3]);
+        p.insert(&[1, 4, 5]);
+        p.insert(&[9, 8, 7]);
+        let mut q = NgramPool::new(3, 4, 100);
+        for g in p.dump_grams() {
+            q.insert(&g);
+        }
+        assert_eq!(q.lookup(1, 8), p.lookup(1, 8), "per-key LRU order lost");
+        assert_eq!(q.lookup(9, 8), p.lookup(9, 8));
+        assert_eq!(q.len(), p.len());
     }
 
     #[test]

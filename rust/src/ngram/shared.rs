@@ -224,10 +224,14 @@ impl NgramSource for Arc<SharedNgramCache> {
     }
 }
 
-/// Server-level registry: one shared cache per (model, engine kind, n-gram
-/// length). Workers with different models, engine families, or lookahead
-/// configs with different N must never cross-pollinate pools, so the key
-/// includes all three.
+/// Server-level registry: one shared cache per (tenant, model, engine kind,
+/// n-gram length). Workers with different models, engine families, or
+/// lookahead configs with different N must never cross-pollinate pools, so
+/// the key includes all three — and multi-tenant deployments additionally
+/// namespace by the request's `tenant` field (n-gram contents leak prompt
+/// material, so tenants must never warm each other's caches). Requests
+/// without a tenant share the default namespace, preserving the
+/// single-tenant behavior.
 pub struct NgramCacheRegistry {
     shards: usize,
     /// TTL applied to every cache this registry creates (None = no decay).
@@ -255,17 +259,25 @@ impl NgramCacheRegistry {
         self
     }
 
-    fn key(model: &str, spec: &PoolSpec) -> String {
-        format!("{model}:{}:n{}", spec.kind, spec.n)
+    fn key(tenant: Option<&str>, model: &str, spec: &PoolSpec) -> String {
+        format!("{}/{model}:{}:n{}", tenant.unwrap_or("_shared"), spec.kind, spec.n)
     }
 
-    /// The shared cache for `(model, spec.kind, spec.n)`, created on first
-    /// use. The first caller's capacities win; later specs with the same
-    /// key reuse the existing cache (capacity is a server-level property,
-    /// not per-request).
+    /// The shared cache for `(default tenant, model, spec.kind, spec.n)`,
+    /// created on first use. The first caller's capacities win; later specs
+    /// with the same key reuse the existing cache (capacity is a
+    /// server-level property, not per-request).
     pub fn get_or_create(&self, model: &str, spec: PoolSpec) -> Arc<SharedNgramCache> {
+        self.get_or_create_scoped(None, model, spec)
+    }
+
+    /// Tenant-scoped variant: `None` is the default shared namespace (the
+    /// pre-namespacing behavior); `Some(tenant)` gets a fully isolated
+    /// cache per tenant.
+    pub fn get_or_create_scoped(&self, tenant: Option<&str>, model: &str,
+                                spec: PoolSpec) -> Arc<SharedNgramCache> {
         let mut m = self.caches.lock().unwrap();
-        m.entry(Self::key(model, &spec))
+        m.entry(Self::key(tenant, model, &spec))
             .or_insert_with(|| {
                 let c = SharedNgramCache::new(spec, self.shards);
                 c.set_max_age(self.max_age);
@@ -314,6 +326,12 @@ impl Default for NgramCacheRegistry {
 pub struct PoolHandle {
     src: Option<Box<dyn NgramSource + Send>>,
     shared: bool,
+    /// shape of the backing store, kept for suspend/resume snapshots.
+    spec: Option<PoolSpec>,
+    /// tenant namespace of a shared backing cache (None = default ns or
+    /// not shared), kept so a snapshot restored with a registry re-binds
+    /// to the SAME tenant's cache — never the cross-tenant default.
+    tenant: Option<String>,
     pub hits: usize,
     pub misses: usize,
     warm_start: bool,
@@ -321,11 +339,14 @@ pub struct PoolHandle {
 }
 
 impl PoolHandle {
-    fn from_src(src: Option<Box<dyn NgramSource + Send>>, shared: bool) -> PoolHandle {
+    fn from_src(src: Option<Box<dyn NgramSource + Send>>, shared: bool,
+                spec: Option<PoolSpec>, tenant: Option<String>) -> PoolHandle {
         let entries = src.as_ref().map_or(0, |s| s.len());
         PoolHandle {
             src,
             shared,
+            spec,
+            tenant,
             hits: 0,
             misses: 0,
             warm_start: entries > 0,
@@ -335,18 +356,27 @@ impl PoolHandle {
 
     /// Detached handle for engines without a pool (AR, Jacobi, spec-decode).
     pub fn none() -> PoolHandle {
-        PoolHandle::from_src(None, false)
+        PoolHandle::from_src(None, false, None, None)
     }
 
     /// Cold per-request pool (the pre-sharing behavior).
     pub fn private(spec: PoolSpec) -> PoolHandle {
         let pool = NgramPool::new(spec.n, spec.per_key_cap, spec.total_cap);
-        PoolHandle::from_src(Some(Box::new(pool)), false)
+        PoolHandle::from_src(Some(Box::new(pool)), false, Some(spec), None)
     }
 
-    /// Cross-request shared cache.
+    /// Cross-request shared cache (default tenant namespace).
     pub fn shared(cache: Arc<SharedNgramCache>) -> PoolHandle {
-        PoolHandle::from_src(Some(Box::new(cache)), true)
+        PoolHandle::shared_scoped(cache, None)
+    }
+
+    /// Cross-request shared cache bound under a tenant namespace — the
+    /// tenant travels with suspend/resume snapshots so a resumed session
+    /// re-binds to its own tenant's cache.
+    pub fn shared_scoped(cache: Arc<SharedNgramCache>, tenant: Option<String>)
+                         -> PoolHandle {
+        let spec = cache.spec();
+        PoolHandle::from_src(Some(Box::new(cache)), true, Some(spec), tenant)
     }
 
     /// Build the handle an engine's [`PoolSpec`] asks for (none when the
@@ -414,6 +444,25 @@ impl PoolHandle {
         }
     }
 
+    /// Serialize this handle for a session snapshot. Private pools export
+    /// their full contents; shared caches export only their shape (the
+    /// contents live server-side — [`PoolExport::restore`] re-binds or
+    /// degrades, see there).
+    pub fn export(&self) -> PoolExport {
+        PoolExport {
+            spec: self.spec.map(|s| {
+                (s.n, s.per_key_cap, s.total_cap, s.kind.to_string())
+            }),
+            shared: self.shared,
+            tenant: self.tenant.clone(),
+            entries: self.src.as_ref().and_then(|s| s.dump()).unwrap_or_default(),
+            hits: self.hits,
+            misses: self.misses,
+            warm_start: self.warm_start,
+            entries_start: self.entries_start,
+        }
+    }
+
     /// Fold this request's pool accounting into its `DecodeStats`.
     /// Hit/miss counts are additive so engines that also count non-pool
     /// speculation sources (e.g. prompt-lookup's history scan) keep both.
@@ -424,6 +473,69 @@ impl PoolHandle {
         stats.pool_warm_start = self.warm_start;
         stats.pool_entries_start = self.entries_start;
         stats.pool_entries_end = self.entries();
+    }
+}
+
+/// Serialized form of a [`PoolHandle`] inside a session snapshot.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolExport {
+    /// (n, per_key_cap, total_cap, kind) of the backing store.
+    pub spec: Option<(usize, usize, usize, String)>,
+    pub shared: bool,
+    /// tenant namespace of a shared backing cache.
+    pub tenant: Option<String>,
+    /// private-pool contents ([`NgramSource::dump`] order); empty for
+    /// shared/detached handles.
+    pub entries: Vec<Vec<u32>>,
+    pub hits: usize,
+    pub misses: usize,
+    pub warm_start: bool,
+    pub entries_start: usize,
+}
+
+/// Map a serialized kind tag back to the engine-family statics the registry
+/// keys on (unknown tags degrade to the generic family).
+fn static_kind(kind: &str) -> &'static str {
+    match kind {
+        "lookahead" => "lookahead",
+        "prompt_lookup" => "prompt_lookup",
+        _ => "ngram",
+    }
+}
+
+impl PoolExport {
+    /// Rebuild a live handle. A shared export re-binds to `registry`'s
+    /// cache for `model` — under the export's tenant namespace, so a
+    /// tenant-scoped session never resumes onto the cross-tenant default —
+    /// when one is provided (in-server resume — the contents were never
+    /// copied); without a registry it degrades to a private pool holding
+    /// the exported entries (exact for private pools, cold for shared ones
+    /// — pool contents affect speed, never bytes). The per-request
+    /// counters are restored either way so resumed-session stats match an
+    /// uninterrupted run.
+    pub fn restore(self, registry: Option<(&NgramCacheRegistry, &str)>) -> PoolHandle {
+        let spec = self
+            .spec
+            .map(|(n, pk, tot, kind)| PoolSpec::new(n, pk, tot).with_kind(static_kind(&kind)));
+        let mut h = match (self.shared, spec, registry) {
+            (true, Some(s), Some((reg, model))) => {
+                let cache = reg.get_or_create_scoped(self.tenant.as_deref(), model, s);
+                PoolHandle::shared_scoped(cache, self.tenant.clone())
+            }
+            (_, Some(s), _) => {
+                let mut h = PoolHandle::private(s);
+                for g in &self.entries {
+                    h.insert(g);
+                }
+                h
+            }
+            _ => PoolHandle::none(),
+        };
+        h.hits = self.hits;
+        h.misses = self.misses;
+        h.warm_start = self.warm_start;
+        h.entries_start = self.entries_start;
+        h
     }
 }
 
@@ -548,6 +660,82 @@ mod tests {
         assert!(!Arc::ptr_eq(&a, &d), "different model must not share");
         assert!(!Arc::ptr_eq(&a, &e), "different engine kind must not share");
         assert!(reg.report().contains("tiny:ngram:n3"));
+    }
+
+    #[test]
+    fn registry_namespaces_by_tenant() {
+        let reg = NgramCacheRegistry::new();
+        let shared = reg.get_or_create("tiny", spec());
+        let default_ns = reg.get_or_create_scoped(None, "tiny", spec());
+        let a = reg.get_or_create_scoped(Some("acme"), "tiny", spec());
+        let a2 = reg.get_or_create_scoped(Some("acme"), "tiny", spec());
+        let b = reg.get_or_create_scoped(Some("globex"), "tiny", spec());
+        assert!(Arc::ptr_eq(&shared, &default_ns),
+                "no tenant must mean the default shared namespace");
+        assert!(Arc::ptr_eq(&a, &a2), "same tenant must share");
+        assert!(!Arc::ptr_eq(&a, &b), "different tenants must not share");
+        assert!(!Arc::ptr_eq(&a, &shared), "tenants must not see the default ns");
+        // isolation is real, not just pointer identity
+        a.insert(&[1, 2, 3]);
+        assert!(b.lookup(1, 4).is_empty());
+        assert!(shared.lookup(1, 4).is_empty());
+        assert!(reg.report().contains("acme/tiny:ngram:n3"));
+        assert!(reg.report().contains("_shared/tiny:ngram:n3"));
+    }
+
+    #[test]
+    fn export_restore_private_pool_is_exact() {
+        let mut h = PoolHandle::private(spec());
+        h.insert(&[1, 2, 3]);
+        h.insert(&[1, 4, 5]);
+        assert_eq!(h.lookup(1, 8).len(), 2); // hits = 1
+        let _ = h.lookup(9, 8); // misses = 1
+        let ex = h.export();
+        assert!(!ex.shared);
+        assert_eq!(ex.entries.len(), 2);
+        let mut r = ex.restore(None);
+        assert_eq!(r.lookup(1, 8), h.lookup(1, 8), "restored lookups diverged");
+        // counters restored from the export, then advanced by the line above
+        assert_eq!((r.hits, r.misses), (2, 1));
+        assert!(!r.is_shared());
+    }
+
+    #[test]
+    fn export_restore_shared_rebinds_or_degrades() {
+        let reg = NgramCacheRegistry::new();
+        let c = reg.get_or_create("tiny", spec());
+        c.insert(&[7, 8, 9]);
+        let mut h = PoolHandle::shared(c);
+        assert_eq!(h.lookup(7, 4), vec![vec![8, 9]]);
+        let ex = h.export();
+        assert!(ex.shared && ex.entries.is_empty(), "shared contents stay server-side");
+        // with a registry: re-binds to the live cache (contents visible)
+        let mut rebound = ex.clone().restore(Some((&reg, "tiny")));
+        assert!(rebound.is_shared());
+        assert_eq!(rebound.lookup(7, 4), vec![vec![8, 9]]);
+        assert_eq!(rebound.hits, 2, "exported counter + this lookup");
+        // without a registry: degrades to a cold private pool, counters kept
+        let mut cold = ex.restore(None);
+        assert!(!cold.is_shared());
+        assert_eq!((cold.hits, cold.misses), (1, 0));
+        assert!(cold.lookup(7, 4).is_empty());
+    }
+
+    #[test]
+    fn export_restore_preserves_tenant_namespace() {
+        let reg = NgramCacheRegistry::new();
+        let acme = reg.get_or_create_scoped(Some("acme"), "tiny", spec());
+        acme.insert(&[7, 8, 9]);
+        let h = PoolHandle::shared_scoped(acme, Some("acme".into()));
+        let ex = h.export();
+        assert_eq!(ex.tenant.as_deref(), Some("acme"));
+        // restored with a registry: binds back to acme's cache, NOT the
+        // cross-tenant default namespace
+        let mut r = ex.restore(Some((&reg, "tiny")));
+        assert_eq!(r.lookup(7, 4), vec![vec![8, 9]], "must rebind to acme's cache");
+        let shared_ns = reg.get_or_create("tiny", spec());
+        assert!(shared_ns.lookup(7, 4).is_empty(),
+                "default namespace must stay unwarmed by acme's session");
     }
 
     #[test]

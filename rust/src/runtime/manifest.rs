@@ -7,6 +7,10 @@
 //!   decode_gen:  weights.. , cache, cache_len i32, tokens i32[T],
 //!                relpos i32[T], mask u8[T,T]
 //!   commit:      cache, new_kv, src_idx i32[slots], dest_start i32, count i32
+//!   cache_io:    cache -> raw rows   |   raw rows -> cache
+//!                (device<->host KV serialization for the `kv` subsystem:
+//!                one executable, direction decided by the argument — see
+//!                `ModelRuntime::cache_to_host` / `cache_from_host`)
 //!
 //! Batched decode executables (`kind: "decode_batch"`) fuse up to `batch`
 //! sessions of a base decode executable (`of`) into one call:
@@ -76,6 +80,8 @@ pub enum ExeKind {
     /// fused (cache, token-window) slots per call.
     DecodeBatch { of: String, batch: usize },
     Commit { t_in: usize, slots: usize },
+    /// Device<->host KV-cache serialization hook (snapshot/restore).
+    CacheIo,
 }
 
 impl ExeKind {
@@ -89,6 +95,7 @@ impl ExeKind {
             // per-slot token count comes from the base executable
             ExeKind::DecodeBatch { .. } => None,
             ExeKind::Prefill { .. } => None,
+            ExeKind::CacheIo => None,
         }
     }
 }
@@ -249,6 +256,16 @@ impl ModelManifest {
             .max()
     }
 
+    /// The cache_io (device<->host KV serialization) executable, if this
+    /// model's artifact set was lowered with one. None = snapshot/restore
+    /// and prefix reuse are unavailable for this model.
+    pub fn cache_io_exe(&self) -> Option<&str> {
+        self.executables
+            .iter()
+            .find(|(_, spec)| spec.kind == ExeKind::CacheIo)
+            .map(|(name, _)| name.as_str())
+    }
+
     pub fn commit_exe(&self, t_in: usize) -> Result<&str> {
         for (name, spec) in &self.executables {
             if let ExeKind::Commit { t_in: t, .. } = spec.kind {
@@ -293,6 +310,7 @@ impl ExeSpec {
                 t_in: req_usize(j, "t_in", name)?,
                 slots: req_usize(j, "slots", name)?,
             },
+            "cache_io" => ExeKind::CacheIo,
             other => bail!("unknown executable kind '{other}' for {name}"),
         };
         Ok(ExeSpec { file, kind })
@@ -328,7 +346,8 @@ mod tests {
                   "of":"decode_lin_1","batch":4},
                 "decode_lin_1_b8": {"file":"f.hlo.txt","kind":"decode_batch",
                   "of":"decode_lin_1","batch":8},
-                "commit_20": {"file":"d.hlo.txt","kind":"commit","t_in":20,"slots":8}
+                "commit_20": {"file":"d.hlo.txt","kind":"commit","t_in":20,"slots":8},
+                "cache_io": {"file":"g.hlo.txt","kind":"cache_io"}
               }
             }
           }
@@ -349,7 +368,15 @@ mod tests {
         let tiny = m.model("tiny").unwrap();
         assert_eq!(tiny.cache_shape, [2, 2, 768, 128]);
         assert_eq!(tiny.capacity(), 767);
-        assert_eq!(tiny.executables.len(), 7);
+        assert_eq!(tiny.executables.len(), 8);
+    }
+
+    #[test]
+    fn finds_cache_io() {
+        let m = load_sample();
+        let tiny = m.model("tiny").unwrap();
+        assert_eq!(tiny.cache_io_exe(), Some("cache_io"));
+        assert_eq!(tiny.executables["cache_io"].kind.t_in(), None);
     }
 
     #[test]

@@ -8,7 +8,7 @@ pub mod sim;
 use anyhow::Result;
 
 pub use manifest::{ExeKind, Manifest, ModelManifest};
-pub use model::{Cache, Logits, ModelRuntime, StepOut};
+pub use model::{Cache, CacheOverflow, HostKv, Logits, ModelRuntime, StepOut};
 
 /// Create the PJRT CPU client (one per thread/device — the client is not
 /// Send; lookahead-parallel workers each build their own).

@@ -13,6 +13,7 @@ use std::rc::Rc;
 use anyhow::{anyhow, bail, Result};
 use xla::{FromRawBytes, PjRtBuffer, PjRtClient, PjRtLoadedExecutable};
 
+use crate::kv::PrefixCache;
 use crate::runtime::manifest::{ExeKind, Manifest, ModelManifest};
 use crate::{debug, info};
 
@@ -50,6 +51,46 @@ pub struct Cache {
     pub len: usize,
 }
 
+/// A host-resident KV cache image produced by [`ModelRuntime::cache_to_host`]
+/// and consumed by [`ModelRuntime::cache_from_host`] — the unit the `kv`
+/// subsystem snapshots to disk, parks during suspend, and forks for prefix
+/// reuse. `data` is the backend's raw row-major payload; `elem` tags its
+/// element type so a snapshot taken on one backend is never silently
+/// reinterpreted on another.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HostKv {
+    /// committed rows (mirrors [`Cache::len`] at snapshot time).
+    pub len: usize,
+    /// element type tag of `data` ("i32" on the sim backend).
+    pub elem: String,
+    /// raw little-endian payload, all cache rows.
+    pub data: Vec<u8>,
+}
+
+impl HostKv {
+    pub fn bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// Typed error for a commit that would write past the cache capacity.
+/// Sessions downcast this to finish gracefully with
+/// `FinishReason::CacheFull` instead of poisoning the session.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CacheOverflow {
+    pub len: usize,
+    pub add: usize,
+    pub capacity: usize,
+}
+
+impl std::fmt::Display for CacheOverflow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "cache overflow: {} + {} > {}", self.len, self.add, self.capacity)
+    }
+}
+
+impl std::error::Error for CacheOverflow {}
+
 /// Output of one decode step.
 pub struct StepOut {
     pub logits: Logits,
@@ -69,6 +110,13 @@ pub struct ModelRuntime {
     dir: std::path::PathBuf,
     /// wall-clock accounting: (compiles, executes)
     pub exec_count: RefCell<u64>,
+    /// prefix-reuse trie consulted by [`ModelRuntime::prefill_reuse`]
+    /// (attached by the serving layer; None = prefix reuse off).
+    prefix: RefCell<Option<std::sync::Arc<PrefixCache>>>,
+    /// namespace for prefix-trie operations ("" = default). The worker sets
+    /// the request tenant here before opening a session, so tenants never
+    /// observe (or time) each other's cached prefixes.
+    prefix_ns: RefCell<String>,
 }
 
 impl ModelRuntime {
@@ -95,6 +143,8 @@ impl ModelRuntime {
             exes: RefCell::new(BTreeMap::new()),
             dir: manifest.dir.clone(),
             exec_count: RefCell::new(0),
+            prefix: RefCell::new(None),
+            prefix_ns: RefCell::new(String::new()),
         })
     }
 
@@ -390,7 +440,12 @@ impl ModelRuntime {
             bail!("commit count {count} exceeds slots {}", self.commit_slots);
         }
         if cache.len + count > self.mm.capacity() {
-            bail!("cache overflow: {} + {count} > {}", cache.len, self.mm.capacity());
+            // typed so sessions can map it to a graceful CacheFull finish
+            return Err(anyhow::Error::new(CacheOverflow {
+                len: cache.len,
+                add: count,
+                capacity: self.mm.capacity(),
+            }));
         }
         let exe_name = self.mm.commit_exe(t_in)?.to_string();
         let exe = self.exe(&exe_name)?;
@@ -403,6 +458,147 @@ impl ModelRuntime {
         let mut out = self.run(&exe, &args)?;
         let buf = out.pop().ok_or_else(|| anyhow!("commit returned nothing"))?;
         Ok(Cache { buf, len: cache.len + count })
+    }
+
+    // -- KV-cache serialization (the `kv` subsystem's runtime hooks) ----------
+
+    /// Whether this model's artifact set carries a `cache_io` executable —
+    /// the gate for snapshot/restore, prefix reuse, and session suspend.
+    pub fn supports_cache_io(&self) -> bool {
+        self.mm.cache_io_exe().is_some()
+    }
+
+    /// Attach (or detach) the prefix-reuse trie consulted by
+    /// [`ModelRuntime::prefill_reuse`]. The serving layer shares one
+    /// [`PrefixCache`] across all workers of a model; the trie stores only
+    /// host-resident data, so it is `Send + Sync` even though the runtime
+    /// itself is thread-pinned.
+    pub fn set_prefix_cache(&self, pc: Option<std::sync::Arc<PrefixCache>>) {
+        *self.prefix.borrow_mut() = pc;
+    }
+
+    /// Set the prefix-trie namespace for subsequent [`prefill_reuse`]
+    /// calls (None = the default namespace). The serving layer passes the
+    /// request tenant before opening each session.
+    ///
+    /// [`prefill_reuse`]: ModelRuntime::prefill_reuse
+    pub fn set_prefix_namespace(&self, ns: Option<&str>) {
+        *self.prefix_ns.borrow_mut() = ns.unwrap_or("").to_string();
+    }
+
+    /// Serialize a device cache to host memory via the `cache_io`
+    /// executable. Only the meaningful rows are kept — the committed
+    /// prefix plus the current-token row (`len + 1` rows): every row
+    /// beyond `len` is unobservable (decode attends to rows `0..len`;
+    /// commits overwrite from `len`), so truncating makes snapshots and
+    /// trie entries prompt-proportional instead of full-capacity while a
+    /// restore stays bit-identical for every observable row.
+    pub fn cache_to_host(&self, cache: &Cache) -> Result<HostKv> {
+        let name = self
+            .mm
+            .cache_io_exe()
+            .ok_or_else(|| anyhow!("model {} has no cache_io executable", self.mm.name))?;
+        let exe = self.exe(name)?;
+        let mut out = self.run(&exe, &[&cache.buf])?;
+        let buf = out.pop().ok_or_else(|| anyhow!("cache_io returned nothing"))?;
+        let rows = buf.to_literal_sync()?.to_vec::<i32>()?;
+        let keep = rows.len().min(cache.len + 1);
+        let mut data = Vec::with_capacity(keep * 4);
+        for r in &rows[..keep] {
+            data.extend_from_slice(&r.to_le_bytes());
+        }
+        Ok(HostKv { len: cache.len, elem: "i32".into(), data })
+    }
+
+    /// Rebuild a device cache from a host image (the inverse of
+    /// [`ModelRuntime::cache_to_host`]). The returned cache is a fresh
+    /// device buffer — restoring twice yields two independent caches, which
+    /// is what makes prefix forking copy-on-write at the device level.
+    pub fn cache_from_host(&self, host: &HostKv) -> Result<Cache> {
+        let name = self
+            .mm
+            .cache_io_exe()
+            .ok_or_else(|| anyhow!("model {} has no cache_io executable", self.mm.name))?;
+        if host.elem != "i32" {
+            bail!("cache_from_host: unsupported element type '{}'", host.elem);
+        }
+        if host.data.len() % 4 != 0 {
+            bail!("cache_from_host: payload length {} not a multiple of 4",
+                  host.data.len());
+        }
+        let mut rows: Vec<i32> = host
+            .data
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        // pad truncated snapshots back to full capacity with junk rows
+        // (what those rows hold on a freshly prefilled cache)
+        let total = self.mm.cache_shape[2];
+        if rows.len() > total {
+            bail!("cache_from_host: snapshot has {} rows, cache holds {total}",
+                  rows.len());
+        }
+        if host.len >= total || host.len >= rows.len() + 1 {
+            bail!("cache_from_host: committed len {} not covered by {} snapshot \
+                   rows (capacity {total})", host.len, rows.len());
+        }
+        rows.resize(total, -1);
+        let exe = self.exe(name)?;
+        let db = self.i32_buf(&rows)?;
+        let mut out = self.run(&exe, &[&db])?;
+        let buf = out.pop().ok_or_else(|| anyhow!("cache_io returned nothing"))?;
+        Ok(Cache { buf, len: host.len })
+    }
+
+    /// Prefill with prefix reuse: when a [`PrefixCache`] is attached and the
+    /// model supports `cache_io`, a stored snapshot sharing a long-enough
+    /// committed prefix with `tokens` is restored (fresh device buffer) and
+    /// extended token-by-token instead of running the full prefill — the
+    /// cache contents are bit-identical to a cold prefill for every row a
+    /// later decode can observe. Engines that ignore prefill logits call
+    /// this; callers needing the prompt logits keep
+    /// [`ModelRuntime::prefill`].
+    pub fn prefill_reuse(&self, tokens: &[u32]) -> Result<Cache> {
+        let pc = self.prefix.borrow().clone();
+        let Some(pc) = pc else {
+            return Ok(self.prefill(tokens)?.1);
+        };
+        // below the trie's floor nothing can be stored or forked: skip the
+        // lookup AND the post-prefill snapshot download entirely
+        if !self.supports_cache_io() || tokens.is_empty()
+            || tokens.len() > self.prefill_len || tokens.len() < pc.min_prefix()
+        {
+            return Ok(self.prefill(tokens)?.1);
+        }
+        // partial hits need the token-by-token extension path: a k=1 linear
+        // decode (resolved by kind, not name) plus a 1-slot commit
+        let lin1 = self
+            .mm
+            .executables
+            .iter()
+            .find(|(_, s)| matches!(s.kind, ExeKind::DecodeLin { k: 1 }))
+            .map(|(n, _)| n.as_str());
+        let can_extend = lin1.is_some() && self.mm.commit_exe(1).is_ok();
+        let ns = self.prefix_ns.borrow().clone();
+        if let Some((depth, kv)) = pc.lookup(&ns, tokens, can_extend) {
+            debug_assert!(depth >= 1 && depth <= tokens.len());
+            let mut cache = self.cache_from_host(&kv)?;
+            // rows 0..depth of the donor hold exactly tokens[0..depth]
+            // (shared prefix); commit the rest incrementally
+            cache.len = depth - 1;
+            if depth < tokens.len() {
+                let lin1 = lin1.expect("partial hit requires the extension path");
+                for i in (depth - 1)..(tokens.len() - 1) {
+                    let so = self.decode(lin1, &cache, &[tokens[i]])?;
+                    cache = self.commit(cache, &so.new_kv, 1, &[0], 1)?;
+                }
+                pc.insert(&ns, tokens, self.cache_to_host(&cache)?);
+            }
+            return Ok(cache);
+        }
+        let (_, cache) = self.prefill(tokens)?;
+        pc.insert(&ns, tokens, self.cache_to_host(&cache)?);
+        Ok(cache)
     }
 
     /// Extend a mask of live size t to the padded [t_pad x t_pad] layout

@@ -16,7 +16,10 @@
 //!     `commit_{1,5,8,20,64}`;
 //!   - batched variants `decode_lin_1_b8` and `decode_gen_20_b8`
 //!     (`kind: "decode_batch"`), sized for the default lookahead config
-//!     W=5, N=3, G=5 (t_in = 20) and up to 8 fused sessions.
+//!     W=5, N=3, G=5 (t_in = 20) and up to 8 fused sessions;
+//!   - a `cache_io` executable (`kind: "cache_io"`) — the device<->host
+//!     KV serialization hook the `kv` subsystem (snapshot/restore, prefix
+//!     reuse, session suspend/resume) builds on.
 //!
 //! No specialized `decode_la` executable is included: the lookahead engine
 //! falls back to the generic mask-as-input path, which is the layout the
@@ -42,7 +45,7 @@ const WEIGHTS: usize = 2;
 /// and PID reuse must never pick up a stale-format artifact set —
 /// same-version content is byte-identical, so reuse of a completed dir is
 /// safe (manifest.json is written last, marking completion).
-const SIM_FORMAT: u32 = 1;
+const SIM_FORMAT: u32 = 2;
 
 fn exe_files(delay_ms: u64) -> Vec<(&'static str, String)> {
     let w = WEIGHTS;
@@ -62,6 +65,7 @@ fn exe_files(delay_ms: u64) -> Vec<(&'static str, String)> {
         ("sim_decode_gen_20_b8.hlo.txt",
          format!("sim decode_gen_b t_pad=20 batch={SIM_MAX_BATCH} vocab={VOCAB} weights={w}{d}")),
         ("sim_commit.hlo.txt", "sim commit slots=8".to_string()),
+        ("sim_cache_io.hlo.txt", format!("sim cache_io rows={SIM_ROWS}")),
     ]
 }
 
@@ -85,6 +89,7 @@ fn executables_json() -> String {
         r#""decode_lin_1_b8": {{"file":"sim_decode_lin_1_b8.hlo.txt","kind":"decode_batch","of":"decode_lin_1","batch":{SIM_MAX_BATCH}}}"#));
     entries.push(format!(
         r#""decode_gen_20_b8": {{"file":"sim_decode_gen_20_b8.hlo.txt","kind":"decode_batch","of":"decode_gen_20","batch":{SIM_MAX_BATCH}}}"#));
+    entries.push(r#""cache_io": {"file":"sim_cache_io.hlo.txt","kind":"cache_io"}"#.to_string());
     entries.join(",\n        ")
 }
 
@@ -233,6 +238,50 @@ mod tests {
         let after_seq = rt.decode("decode_lin_1", &c_seq, &[0]).unwrap();
         let after_fused = rt.decode("decode_lin_1", &c_fused, &[0]).unwrap();
         assert_eq!(after_seq.logits.data, after_fused.logits.data);
+    }
+
+    #[test]
+    fn cache_io_roundtrip_preserves_decode_state() {
+        let dir = ensure_sim_artifacts().unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        let client = cpu_client().unwrap();
+        let rt = ModelRuntime::load(&client, &manifest, "tiny").unwrap();
+        assert!(rt.supports_cache_io());
+
+        let (_, cache) = rt.prefill(&[257, 10, 11, 12]).unwrap();
+        let host = rt.cache_to_host(&cache).unwrap();
+        assert_eq!(host.len, 3);
+        assert_eq!(host.elem, "i32");
+        // prompt-proportional: committed rows + the current-token row, not
+        // the full cache capacity
+        assert_eq!(host.data.len(), (cache.len + 1) * 4);
+
+        let restored = rt.cache_from_host(&host).unwrap();
+        assert_eq!(restored.len, 3);
+        let a = rt.decode("decode_lin_1", &cache, &[12]).unwrap();
+        let b = rt.decode("decode_lin_1", &restored, &[12]).unwrap();
+        assert_eq!(a.logits.data, b.logits.data, "restored cache diverged");
+
+        // restore is a fresh buffer: committing to one leaves the other alone
+        let restored = rt.commit(restored, &b.new_kv, 1, &[0], 1).unwrap();
+        assert_eq!(restored.len, 4);
+        let c = rt.decode("decode_lin_1", &cache, &[12]).unwrap();
+        assert_eq!(a.logits.data, c.logits.data, "donor cache was mutated");
+    }
+
+    #[test]
+    fn commit_overflow_error_is_typed() {
+        let dir = ensure_sim_artifacts().unwrap();
+        let manifest = Manifest::load(&dir).unwrap();
+        let client = cpu_client().unwrap();
+        let rt = ModelRuntime::load(&client, &manifest, "tiny").unwrap();
+        let (_, mut cache) = rt.prefill(&[257, 1]).unwrap();
+        let step = rt.decode("decode_lin_1", &cache, &[1]).unwrap();
+        cache.len = SIM_ROWS - 1; // == capacity: one more committed row overflows
+        let err = rt.commit(cache, &step.new_kv, 1, &[0], 1).unwrap_err();
+        let overflow = err.downcast_ref::<crate::runtime::model::CacheOverflow>();
+        assert!(overflow.is_some(), "commit overflow must be the typed error: {err}");
+        assert_eq!(overflow.unwrap().capacity, SIM_ROWS - 1);
     }
 
     #[test]

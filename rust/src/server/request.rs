@@ -30,6 +30,10 @@ pub struct Request {
     /// per-request override of the server's cross-request n-gram sharing
     /// toggle (None = use the server default).
     pub share_ngrams: Option<bool>,
+    /// tenant namespace for shared caches: requests with a tenant only ever
+    /// warm (and are warmed by) caches of the same tenant; None = the
+    /// default shared namespace (single-tenant behavior).
+    pub tenant: Option<String>,
     pub seed: u64,
     /// stream per-step token deltas as JSON-lines chunks before the final
     /// stats record.
@@ -52,6 +56,7 @@ impl Default for Request {
             method: "lookahead".into(),
             wng: None,
             share_ngrams: None,
+            tenant: None,
             seed: 0,
             stream: false,
             deadline_ms: None,
@@ -113,6 +118,12 @@ impl Request {
         }
         if let Some(v) = j.get("share_ngrams").and_then(Json::as_bool) {
             r.share_ngrams = Some(v);
+        }
+        if let Some(v) = j.get("tenant").and_then(Json::as_str) {
+            if v.is_empty() {
+                bail!("'tenant' must be a non-empty string");
+            }
+            r.tenant = Some(v.to_string());
         }
         if let Some(v) = j.get("stream").and_then(Json::as_bool) {
             r.stream = v;
@@ -353,6 +364,16 @@ mod tests {
         assert_eq!(r.share_ngrams, Some(false));
         let r = Request::from_json_line(1, r#"{"prompt":"x"}"#).unwrap();
         assert_eq!(r.share_ngrams, None);
+    }
+
+    #[test]
+    fn parses_tenant_namespace() {
+        let r = Request::from_json_line(1, r#"{"prompt":"x","tenant":"acme"}"#).unwrap();
+        assert_eq!(r.tenant.as_deref(), Some("acme"));
+        let r = Request::from_json_line(1, r#"{"prompt":"x"}"#).unwrap();
+        assert_eq!(r.tenant, None, "no tenant means the default shared namespace");
+        assert!(Request::from_json_line(1, r#"{"prompt":"x","tenant":""}"#).is_err(),
+                "empty tenant must be rejected");
     }
 
     #[test]

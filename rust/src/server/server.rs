@@ -21,6 +21,7 @@ use std::sync::{Arc, Mutex};
 use anyhow::{bail, Context, Result};
 
 use crate::info;
+use crate::kv::PrefixCache;
 use crate::metrics::Registry;
 use crate::ngram::NgramCacheRegistry;
 use crate::server::request::{Reply, Request, Response};
@@ -104,6 +105,9 @@ pub struct ServerHandle {
     pub metrics: Arc<Mutex<Registry>>,
     /// cross-request n-gram caches (None when sharing is disabled).
     pub ngram_caches: Option<Arc<NgramCacheRegistry>>,
+    /// prefix-reuse trie shared by all workers (None when disabled via
+    /// `WorkerConfig::prefix_cache = false`).
+    pub prefix_cache: Option<Arc<PrefixCache>>,
     cancels: Arc<CancelSet>,
     worker_joins: Vec<std::thread::JoinHandle<()>>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
@@ -120,6 +124,11 @@ impl ServerHandle {
             let ttl = cfg.ngram_ttl_ms.map(std::time::Duration::from_millis);
             Arc::new(NgramCacheRegistry::new().with_max_age(ttl))
         });
+        // one prefix-reuse trie spans all workers: it stores host data
+        // only, so sharing it is what lets a prompt prefilled on worker 0
+        // skip prefill on worker 1
+        let prefix_cache =
+            cfg.worker.prefix_cache.then(|| Arc::new(PrefixCache::with_defaults()));
         let (tx, rx): (Sender<Reply>, Receiver<Reply>) = channel();
 
         let mut worker_joins = Vec::new();
@@ -131,8 +140,10 @@ impl ServerHandle {
             let caches_c = ngram_caches.clone();
             let cancels_c = cancels.clone();
             let metrics_c = metrics.clone();
+            let prefix_c = prefix_cache.clone();
             worker_joins.push(std::thread::spawn(move || {
-                match Worker::start(wid, wcfg, caches_c, cancels_c, Some(metrics_c)) {
+                match Worker::start(wid, wcfg, caches_c, cancels_c, Some(metrics_c),
+                                    prefix_c) {
                     Ok(w) => w.run(sched_c, tx_c),
                     Err(e) => eprintln!("[ERROR] worker {wid} failed to start: {e}"),
                 }
@@ -211,17 +222,43 @@ impl ServerHandle {
             next_id: AtomicU64::new(1),
             metrics,
             ngram_caches,
+            prefix_cache,
             cancels,
             worker_joins,
             dispatcher: Some(dispatcher),
         })
     }
 
-    /// Server metrics report including per-cache n-gram counters.
+    /// Server metrics report including per-cache n-gram counters and the
+    /// KV subsystem (prefix-reuse gauges are synced into the registry here,
+    /// so the dispatcher metrics endpoint always carries them).
     pub fn report(&self) -> String {
+        {
+            let mut m = self.metrics.lock().unwrap();
+            if let Some(pc) = &self.prefix_cache {
+                let st = pc.stats();
+                m.set("prefix_hits", st.hits);
+                m.set("prefix_miss", st.misses);
+                m.set("prefix_entries", st.entries as u64);
+                m.set("prefix_bytes", st.bytes as u64);
+                m.set("prefix_bytes_reused", st.bytes_reused);
+            }
+            // workers write per-worker parked gauges so they never clobber
+            // each other; the endpoint reports the server-wide total
+            let total: u64 = m
+                .counters
+                .iter()
+                .filter(|(k, _)| k.starts_with("suspended_sessions_w"))
+                .map(|(_, v)| *v)
+                .sum();
+            m.set("suspended_sessions", total);
+        }
         let mut s = self.metrics.lock().unwrap().report();
         if let Some(reg) = &self.ngram_caches {
             s.push_str(&reg.report());
+        }
+        if let Some(pc) = &self.prefix_cache {
+            s.push_str(&pc.report());
         }
         s
     }

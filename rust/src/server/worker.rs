@@ -21,7 +21,7 @@
 //! step. Batched and sequential execution commit byte-identical token
 //! streams (`rust/tests/batched_equivalence.rs`).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -36,6 +36,7 @@ use crate::engine::spec_decode::SpecDecode;
 use crate::engine::{step_group, BatchStep, Decoder, DecodeSession, FinishReason,
                     StepOutcome};
 use crate::info;
+use crate::kv::{KvHandle, KvManager, PrefixCache};
 use crate::metrics::Registry;
 use crate::ngram::{NgramCacheRegistry, PoolHandle};
 use crate::runtime::{cpu_client, Manifest, ModelRuntime};
@@ -58,6 +59,16 @@ pub struct WorkerConfig {
     /// (falls back to per-session calls when the model has no batched
     /// executable for a group).
     pub batch_decode: bool,
+    /// device KV budget: max device-resident session caches. When live
+    /// sessions exceed it, the coldest suspendable session is parked
+    /// (snapshot to host + device free) and revived when a slot opens —
+    /// `max_live` then counts live + parked, a soft limit. 0 = unlimited
+    /// (every admitted session stays device-resident, the pre-kv behavior).
+    pub kv_budget: usize,
+    /// prefix-reuse trie: requests sharing a long committed prompt prefix
+    /// fork a stored KV snapshot instead of paying a full prefill
+    /// (byte-exact; needs a `cache_io` executable in the artifacts).
+    pub prefix_cache: bool,
 }
 
 impl Default for WorkerConfig {
@@ -70,6 +81,8 @@ impl Default for WorkerConfig {
             time_slice: 4,
             max_live: 4,
             batch_decode: true,
+            kv_budget: 0,
+            prefix_cache: true,
         }
     }
 }
@@ -84,6 +97,21 @@ struct LiveSession<'rt> {
     deadline: Option<Instant>,
     sess: Box<dyn DecodeSession + 'rt>,
     error: Option<String>,
+    /// scheduling rounds since this session was admitted or last revived
+    /// ("hottest" has the lowest count; the park victim has the highest).
+    rounds: u64,
+}
+
+/// A suspended request: its streaming state stays with the worker, the
+/// session itself lives in the [`KvManager`] as a host snapshot.
+struct ParkedSession {
+    id: u64,
+    stream: bool,
+    queued_ms: f64,
+    seq: u64,
+    dec: Utf8StreamDecoder,
+    deadline: Option<Instant>,
+    handle: KvHandle,
 }
 
 pub struct Worker {
@@ -105,10 +133,17 @@ impl Worker {
     pub fn start(id: usize, cfg: WorkerConfig,
                  ngram_caches: Option<Arc<NgramCacheRegistry>>,
                  cancels: Arc<CancelSet>,
-                 metrics: Option<Arc<Mutex<Registry>>>) -> Result<Worker> {
+                 metrics: Option<Arc<Mutex<Registry>>>,
+                 prefix: Option<Arc<PrefixCache>>) -> Result<Worker> {
         let manifest = Manifest::load(&cfg.artifacts_dir)?;
         let client = cpu_client()?;
         let rt = ModelRuntime::load(&client, &manifest, &cfg.model)?;
+        if cfg.prefix_cache {
+            // server-shared trie when one was handed down, else private
+            rt.set_prefix_cache(Some(
+                prefix.unwrap_or_else(|| Arc::new(PrefixCache::with_defaults())),
+            ));
+        }
         Ok(Worker {
             id,
             cfg,
@@ -176,7 +211,10 @@ impl Worker {
         let greedy = req.temperature <= 0.0;
         let share = req.share_ngrams.unwrap_or(greedy);
         match (caches, share) {
-            (Some(reg), true) => PoolHandle::shared(reg.get_or_create(&cfg.model, spec)),
+            (Some(reg), true) => PoolHandle::shared_scoped(
+                reg.get_or_create_scoped(req.tenant.as_deref(), &cfg.model, spec),
+                req.tenant.clone(),
+            ),
             _ => PoolHandle::private(spec),
         }
     }
@@ -199,6 +237,9 @@ impl Worker {
         let engine = engines.get(&key).unwrap();
         let ids = Self::encode_prompt(tok, rt, &req.prompt);
         let pool = Self::bind_pool_for(cfg, caches, &req, engine.as_ref());
+        // prefix-trie namespace for the prefill inside begin(): tenants
+        // must never fork (or time) each other's cached prefixes
+        rt.set_prefix_namespace(req.tenant.as_deref());
         let sess = engine
             .begin(rt, &ids, &req.gen_params(), pool)
             .map_err(|e| (rid, e.to_string()))?;
@@ -211,6 +252,7 @@ impl Worker {
             deadline: req.deadline_ms.map(|ms| Instant::now() + Duration::from_millis(ms)),
             sess,
             error: None,
+            rounds: 0,
         })
     }
 
@@ -358,6 +400,137 @@ impl Worker {
         }
     }
 
+    /// Park the coldest suspendable live session: snapshot to the
+    /// [`KvManager`], free its device cache. Returns false when no session
+    /// can be parked (none suspendable — the budget stays soft-violated).
+    /// A failing suspend poisons only its own session (picked up by the
+    /// caller's retirement sweep).
+    fn park_one<'rt>(live: &mut Vec<LiveSession<'rt>>,
+                     parked: &mut VecDeque<ParkedSession>, kv: &mut KvManager,
+                     metrics: &Option<Arc<Mutex<Registry>>>) -> bool {
+        // coldest = most rounds since admission/revival (ties: first found)
+        let mut best: Option<usize> = None;
+        for (i, ls) in live.iter().enumerate() {
+            if ls.error.is_none() && ls.sess.suspendable()
+                && best.is_none_or(|b: usize| ls.rounds > live[b].rounds)
+            {
+                best = Some(i);
+            }
+        }
+        let Some(i) = best else { return false };
+        let mut ls = live.remove(i);
+        match ls.sess.suspend() {
+            Ok(snap) => {
+                let handle = kv.park(snap);
+                if let Some(m) = metrics {
+                    m.lock().unwrap().inc("kv_snapshots", 1);
+                }
+                parked.push_back(ParkedSession {
+                    id: ls.id,
+                    stream: ls.stream,
+                    queued_ms: ls.queued_ms,
+                    seq: ls.seq,
+                    dec: ls.dec,
+                    deadline: ls.deadline,
+                    handle,
+                });
+                true
+            }
+            Err(e) => {
+                ls.error = Some(format!("suspend failed: {e}"));
+                live.push(ls);
+                false
+            }
+        }
+    }
+
+    /// Revive the longest-parked session back onto the device. Returns
+    /// false only when the reply channel is gone (server shut down).
+    fn revive_one<'rt>(rt: &'rt ModelRuntime, live: &mut Vec<LiveSession<'rt>>,
+                       parked: &mut VecDeque<ParkedSession>, kv: &mut KvManager,
+                       cancels: &CancelSet, replies: &Sender<Reply>,
+                       metrics: &Option<Arc<Mutex<Registry>>>) -> bool {
+        let Some(p) = parked.pop_front() else { return true };
+        let resumed = kv
+            .revive(p.handle)
+            .ok_or_else(|| anyhow!("parked session {} lost its snapshot", p.id))
+            .and_then(|snap| snap.resume(rt));
+        match resumed {
+            Ok(sess) => {
+                if let Some(m) = metrics {
+                    m.lock().unwrap().inc("kv_restores", 1);
+                }
+                live.push(LiveSession {
+                    id: p.id,
+                    stream: p.stream,
+                    queued_ms: p.queued_ms,
+                    seq: p.seq,
+                    dec: p.dec,
+                    deadline: p.deadline,
+                    sess,
+                    error: None,
+                    rounds: 0,
+                });
+                true
+            }
+            Err(e) => {
+                cancels.clear(p.id);
+                replies.send(Reply::Done(Response::err(p.id, e.to_string()))).is_ok()
+            }
+        }
+    }
+
+    /// Retire parked sessions whose cancel mark or deadline already fired —
+    /// straight from the host snapshot, with no device restore and no wait
+    /// for a rotation slot (keeps the "cancel lands within one step"
+    /// promise even for suspended sessions). The final record is built the
+    /// same way `retire` builds it: full text decode of the committed
+    /// tokens (equal to the streamed deltas + tail by the
+    /// `Utf8StreamDecoder` one-shot equivalence) and manually sealed pool
+    /// stats. Returns false when the reply channel is gone.
+    fn sweep_parked(parked: &mut VecDeque<ParkedSession>, kv: &mut KvManager,
+                    tok: &ByteTokenizer, cancels: &CancelSet,
+                    replies: &Sender<Reply>) -> bool {
+        let mut i = 0;
+        while i < parked.len() {
+            let reason = if cancels.contains(parked[i].id) {
+                Some(FinishReason::Cancelled)
+            } else if parked[i].deadline.is_some_and(|d| Instant::now() >= d) {
+                Some(FinishReason::Deadline)
+            } else {
+                None
+            };
+            let Some(reason) = reason else {
+                i += 1;
+                continue;
+            };
+            let Some(p) = parked.remove(i) else { break };
+            cancels.clear(p.id);
+            let Some(snap) = kv.revive(p.handle) else { continue };
+            let mut stats = snap.stats.clone();
+            snap.pool.fill_stats(&mut stats);
+            stats.wall = snap.wall_offset;
+            if p.stream {
+                let mut dec = p.dec;
+                let tail = dec.finish();
+                if !tail.is_empty() {
+                    let _ = replies.send(Reply::Chunk(StreamChunk {
+                        id: p.id,
+                        seq: p.seq + 1,
+                        delta: tail,
+                    }));
+                }
+            }
+            let text = tok.decode(&snap.out);
+            let resp = Response::ok(p.id, text, &stats, p.queued_ms)
+                .with_finish(reason.as_str());
+            if replies.send(Reply::Done(resp)).is_err() {
+                return false;
+            }
+        }
+        true
+    }
+
     /// Deliver the final record for a finished/cancelled/failed session.
     /// Returns false when the reply channel is gone (server shut down).
     fn retire(ls: LiveSession, cancels: &CancelSet, replies: &Sender<Reply>) -> bool {
@@ -387,30 +560,52 @@ impl Worker {
     /// scheduler only when idle), then run one scheduling round — fused
     /// batched rounds when `batch_decode` is on, else `time_slice` steps
     /// per session — until the scheduler closes and all sessions drain.
+    ///
+    /// With a `kv_budget`, `max_live` counts live + parked sessions: the
+    /// admission overflow is parked (suspend = snapshot + device free),
+    /// revived FIFO into freed slots, and — while the budget stays
+    /// saturated — rotated one per round so every parked session keeps
+    /// making progress (time-slicing through the suspend/resume path).
     pub fn run(self, sched: Arc<Scheduler>, replies: Sender<Reply>) {
         info!("worker",
-              "worker {} ready (model={}, time_slice={}, max_live={}, batch={})",
+              "worker {} ready (model={}, time_slice={}, max_live={}, batch={}, \
+               kv_budget={})",
               self.id, self.cfg.model, self.cfg.time_slice, self.cfg.max_live,
-              self.cfg.batch_decode);
+              self.cfg.batch_decode, self.cfg.kv_budget);
         let Worker { id, cfg, manifest, rt, tok, ngram_caches, cancels, metrics } =
             self;
         let max_live = cfg.max_live.max(1);
         let slice = cfg.time_slice.max(1);
+        let budget = if cfg.kv_budget == 0 { usize::MAX } else { cfg.kv_budget };
         let mut engines: HashMap<String, Box<dyn Decoder>> = HashMap::new();
         let mut live: Vec<LiveSession<'_>> = Vec::new();
+        let mut parked: VecDeque<ParkedSession> = VecDeque::new();
+        let mut kv = KvManager::new();
         'serve: loop {
-            // -- admission: top up the live set ------------------------------
-            while live.len() < max_live {
-                let popped = if live.is_empty() { sched.pop() } else { sched.try_pop() };
+            // -- admission: top up the live + parked set ---------------------
+            while live.len() + parked.len() < max_live {
+                let idle = live.is_empty() && parked.is_empty();
+                let popped = if idle { sched.pop() } else { sched.try_pop() };
                 let Some(popped) = popped else {
-                    if live.is_empty() {
+                    if idle {
                         break 'serve; // scheduler closed and drained
                     }
                     break; // queue momentarily empty; keep stepping
                 };
                 match Self::open(&cfg, &manifest, &rt, &mut engines, &ngram_caches,
                                  &tok, popped) {
-                    Ok(ls) => live.push(ls),
+                    Ok(ls) => {
+                        live.push(ls);
+                        // enforce the device budget as each session opens
+                        // (opening ran the prefill), so transient residency
+                        // is capped at budget + 1 — not max_live
+                        while live.len() > budget {
+                            if !Self::park_one(&mut live, &mut parked, &mut kv,
+                                               &metrics) {
+                                break; // nothing suspendable: budget is soft
+                            }
+                        }
+                    }
                     Err((rid, msg)) => {
                         cancels.clear(rid);
                         if replies.send(Reply::Done(Response::err(rid, msg))).is_err() {
@@ -429,6 +624,9 @@ impl Worker {
                     Self::drive(ls, slice, &tok, &cancels, &replies);
                 }
             }
+            for ls in live.iter_mut() {
+                ls.rounds += 1;
+            }
             // -- retirement sweep: deliver final records for every session
             //    the round finished, cancelled, or failed -------------------
             let mut i = 0;
@@ -441,6 +639,36 @@ impl Worker {
                 } else {
                     i += 1;
                 }
+            }
+            // -- parked stop signals: cancelled / deadline-expired parked
+            //    sessions retire from their host snapshot, skipping both
+            //    the rotation wait and the device restore ------------------
+            if !Self::sweep_parked(&mut parked, &mut kv, &tok, &cancels, &replies) {
+                break 'serve;
+            }
+            // -- revive parked sessions into freed device slots --------------
+            while live.len() < budget && !parked.is_empty() {
+                if !Self::revive_one(&rt, &mut live, &mut parked, &mut kv, &cancels,
+                                     &replies, &metrics) {
+                    break 'serve;
+                }
+            }
+            // -- rotation: budget saturated with sessions still parked — swap
+            //    the coldest live one out so the parked set keeps stepping ---
+            if !parked.is_empty()
+                && Self::park_one(&mut live, &mut parked, &mut kv, &metrics)
+                && !Self::revive_one(&rt, &mut live, &mut parked, &mut kv, &cancels,
+                                     &replies, &metrics)
+            {
+                break 'serve;
+            }
+            if let Some(m) = &metrics {
+                // per-worker gauge key — concurrent workers must not clobber
+                // each other; the server report sums these into the
+                // `suspended_sessions` total
+                m.lock()
+                    .unwrap()
+                    .set(&format!("suspended_sessions_w{id}"), parked.len() as u64);
             }
         }
         info!("worker", "worker {} shutting down", id);

@@ -1,0 +1,419 @@
+//! KV-manager suite (simulated artifacts — runs without PJRT).
+//!
+//! Pins the three tentpole claims of the `kv` subsystem:
+//!   1. **Snapshot/restore**: a session suspended mid-generation and
+//!      resumed — in-process, through the versioned on-disk snapshot, and
+//!      on a *different* runtime instance (worker migration) — produces
+//!      byte-identical tokens, deltas, and stats to an uninterrupted run,
+//!      for the autoregressive and lookahead engines (prop-tested over
+//!      random prompts/budgets/suspend points).
+//!   2. **Prefix reuse**: requests sharing a long prompt prefix fork a
+//!      cached snapshot (`prefix_hits >= 1`), skip the full prefill, and
+//!      still decode byte-identically to a cold runtime.
+//!   3. **Suspend/resume serving**: a worker with `kv_budget` smaller than
+//!      the offered load completes every request with no cross-talk, and
+//!      the `kv_snapshots`/`kv_restores`/`suspended_sessions` metrics flow
+//!      through the dispatcher metrics endpoint.
+
+use std::sync::Arc;
+
+use lookahead::engine::autoregressive::AutoRegressive;
+use lookahead::engine::jacobi::Jacobi;
+use lookahead::engine::lookahead::Lookahead;
+use lookahead::engine::{Decoder, FinishReason, GenParams, StepOutcome};
+use lookahead::kv::{KvManager, PrefixCache, SessionSnapshot};
+use lookahead::ngram::PoolHandle;
+use lookahead::runtime::sim::ensure_sim_artifacts;
+use lookahead::runtime::{cpu_client, Manifest, ModelRuntime};
+use lookahead::server::{Policy, Request, ServerConfig, ServerHandle, WorkerConfig};
+use lookahead::tokenizer::{ByteTokenizer, BOS_ID};
+use lookahead::util::prop::forall;
+use lookahead::util::rng::Rng;
+
+fn sim_rt() -> ModelRuntime {
+    let dir = ensure_sim_artifacts().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let client = cpu_client().unwrap();
+    ModelRuntime::load(&client, &manifest, "tiny").unwrap()
+}
+
+fn params(max: usize) -> GenParams {
+    GenParams { max_new_tokens: max, ..Default::default() }
+}
+
+/// Drive a session to completion, returning (per-step deltas, finish).
+fn drain(sess: &mut Box<dyn lookahead::engine::DecodeSession + '_>)
+         -> (Vec<Vec<u32>>, FinishReason) {
+    let mut deltas = Vec::new();
+    loop {
+        match sess.step().unwrap() {
+            StepOutcome::Committed { tokens } => deltas.push(tokens),
+            StepOutcome::Finished { reason } => return (deltas, reason),
+        }
+    }
+}
+
+/// Uninterrupted reference run.
+fn reference(engine: &dyn Decoder, rt: &ModelRuntime, prompt: &[u32], p: &GenParams)
+             -> (lookahead::engine::GenOutput, Vec<Vec<u32>>, FinishReason) {
+    let pool = PoolHandle::for_spec(engine.pool_spec());
+    let mut sess = engine.begin(rt, prompt, p, pool).unwrap();
+    let (deltas, reason) = drain(&mut sess);
+    let (out, _) = sess.into_output();
+    (out, deltas, reason)
+}
+
+/// Same request, suspended after `k` steps, optionally round-tripped
+/// through the on-disk format, resumed on `resume_rt`.
+fn with_suspend(engine: &dyn Decoder, rt: &ModelRuntime, resume_rt: &ModelRuntime,
+                prompt: &[u32], p: &GenParams, k: usize, via_disk: bool)
+                -> (lookahead::engine::GenOutput, Vec<Vec<u32>>, FinishReason) {
+    let pool = PoolHandle::for_spec(engine.pool_spec());
+    let mut sess = engine.begin(rt, prompt, p, pool).unwrap();
+    let mut deltas = Vec::new();
+    for _ in 0..k {
+        if sess.finished().is_some() {
+            break;
+        }
+        match sess.step().unwrap() {
+            StepOutcome::Committed { tokens } => deltas.push(tokens),
+            StepOutcome::Finished { .. } => break,
+        }
+    }
+    if let Some(reason) = sess.finished() {
+        // finished before the suspend point: nothing to suspend
+        let (out, _) = sess.into_output();
+        return (out, deltas, reason);
+    }
+    assert!(sess.suspendable(), "live session on sim artifacts must be suspendable");
+    let snap = sess.suspend().unwrap();
+    assert_eq!(sess.finished(), Some(FinishReason::Suspended));
+    assert_eq!(
+        sess.step().unwrap(),
+        StepOutcome::Finished { reason: FinishReason::Suspended },
+        "a suspended session must not step"
+    );
+    let snap = if via_disk {
+        SessionSnapshot::from_bytes(&snap.to_bytes()).unwrap()
+    } else {
+        snap
+    };
+    let mut sess = snap.resume(resume_rt).unwrap();
+    let (rest, reason) = drain(&mut sess);
+    deltas.extend(rest);
+    let (out, _) = sess.into_output();
+    (out, deltas, reason)
+}
+
+fn assert_identical(tag: &str,
+                    a: &(lookahead::engine::GenOutput, Vec<Vec<u32>>, FinishReason),
+                    b: &(lookahead::engine::GenOutput, Vec<Vec<u32>>, FinishReason)) {
+    assert_eq!(a.0.tokens, b.0.tokens, "{tag}: tokens diverged");
+    assert_eq!(a.0.text, b.0.text, "{tag}: text diverged");
+    assert_eq!(a.1, b.1, "{tag}: per-step deltas diverged");
+    assert_eq!(a.2, b.2, "{tag}: finish reason diverged");
+    let (sa, sb) = (&a.0.stats, &b.0.stats);
+    assert_eq!(sa.generated_tokens, sb.generated_tokens, "{tag}: generated_tokens");
+    assert_eq!(sa.decode_steps, sb.decode_steps, "{tag}: decode_steps");
+    assert_eq!(sa.accepted_by_len, sb.accepted_by_len, "{tag}: accept histogram");
+    assert_eq!(sa.pool_hits, sb.pool_hits, "{tag}: pool_hits");
+    assert_eq!(sa.pool_misses, sb.pool_misses, "{tag}: pool_misses");
+    assert_eq!(sa.prompt_tokens, sb.prompt_tokens, "{tag}: prompt_tokens");
+}
+
+fn engines() -> Vec<(&'static str, Box<dyn Decoder>)> {
+    vec![
+        ("autoregressive", Box::new(AutoRegressive::new())),
+        ("lookahead", Box::new(Lookahead::with_wng(5, 3, 5))),
+    ]
+}
+
+#[test]
+fn suspend_resume_is_byte_identical() {
+    let rt = sim_rt();
+    let rt2 = sim_rt(); // "another worker": independent runtime, same model
+    let tok = ByteTokenizer::new();
+    let prompt = tok.encode_with_bos("def add_ab(a, b):\n    result = a");
+    let p = params(48);
+    for (name, engine) in engines() {
+        let want = reference(engine.as_ref(), &rt, &prompt, &p);
+        for k in [0usize, 1, 3] {
+            let inproc = with_suspend(engine.as_ref(), &rt, &rt, &prompt, &p, k, false);
+            assert_identical(&format!("{name} in-process k={k}"), &inproc, &want);
+            let disk = with_suspend(engine.as_ref(), &rt, &rt, &prompt, &p, k, true);
+            assert_identical(&format!("{name} disk k={k}"), &disk, &want);
+            let migrated = with_suspend(engine.as_ref(), &rt, &rt2, &prompt, &p, k, true);
+            assert_identical(&format!("{name} migrated k={k}"), &migrated, &want);
+        }
+    }
+}
+
+#[test]
+fn unsupported_engines_report_not_suspendable() {
+    let rt = sim_rt();
+    let tok = ByteTokenizer::new();
+    let prompt = tok.encode_with_bos("Q: what is 1 + 1?\n");
+    let engine = Jacobi::new(8);
+    let mut sess = engine.begin(&rt, &prompt, &params(8), PoolHandle::none()).unwrap();
+    assert!(!sess.suspendable());
+    assert!(sess.suspend().is_err());
+    // session stays usable after the rejected suspend
+    assert!(sess.step().is_ok());
+}
+
+#[test]
+fn prop_suspend_resume_any_split_point() {
+    let rt = sim_rt();
+    forall(
+        20,
+        77,
+        |r: &mut Rng| {
+            let plen = r.range(1, 40);
+            let mut prompt = vec![BOS_ID];
+            prompt.extend((0..plen).map(|_| r.below(250) as u32));
+            let k = r.range(0, 7);
+            let max = r.range(4, 48);
+            (prompt, k, max)
+        },
+        |(prompt, k, max)| {
+            let p = params(*max);
+            for (name, engine) in engines() {
+                let want = reference(engine.as_ref(), &rt, prompt, &p);
+                for via_disk in [false, true] {
+                    let got = with_suspend(engine.as_ref(), &rt, &rt, prompt, &p, *k,
+                                           via_disk);
+                    if got.0.tokens != want.0.tokens {
+                        return Err(format!(
+                            "{name} (disk={via_disk}) tokens {:?} != {:?}",
+                            got.0.tokens, want.0.tokens));
+                    }
+                    if got.1 != want.1 {
+                        return Err(format!("{name} (disk={via_disk}) deltas diverged"));
+                    }
+                    let (gs, ws) = (&got.0.stats, &want.0.stats);
+                    if (gs.decode_steps, gs.generated_tokens, &gs.accepted_by_len)
+                        != (ws.decode_steps, ws.generated_tokens, &ws.accepted_by_len)
+                    {
+                        return Err(format!("{name} (disk={via_disk}) stats diverged"));
+                    }
+                    if (gs.pool_hits, gs.pool_misses) != (ws.pool_hits, ws.pool_misses) {
+                        return Err(format!("{name} (disk={via_disk}) pool stats diverged"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn kv_manager_parks_and_migrates_real_sessions() {
+    let rt = sim_rt();
+    let tok = ByteTokenizer::new();
+    let prompt = tok.encode_with_bos("def mul_xy(x, y):\n    return x");
+    let p = params(32);
+    let engine = AutoRegressive::new();
+    let want = reference(&engine, &rt, &prompt, &p);
+
+    let mut sess = engine.begin(&rt, &prompt, &p, PoolHandle::none()).unwrap();
+    let mut deltas = Vec::new();
+    if let StepOutcome::Committed { tokens } = sess.step().unwrap() {
+        deltas.push(tokens);
+    }
+    let mut kv = KvManager::new();
+    let h = kv.park(sess.suspend().unwrap());
+    assert_eq!(kv.stats().parked, 1);
+    assert!(kv.stats().parked_bytes > 0);
+
+    // round-trip through disk (the migration file)
+    let dir = std::env::temp_dir().join(format!("la-kvtest-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("mig.kvsnap");
+    kv.save(h, &path).unwrap();
+    let mut kv2 = KvManager::new();
+    let h2 = kv2.load(&path).unwrap();
+    let mut sess = kv2.revive(h2).unwrap().resume(&rt).unwrap();
+    let (rest, reason) = drain(&mut sess);
+    deltas.extend(rest);
+    let (out, _) = sess.into_output();
+    assert_identical("kv-manager migration", &(out, deltas, reason), &want);
+    assert_eq!(kv2.stats().restores, 1);
+}
+
+// ---------------------------------------------------------------------------
+// prefix reuse
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prefix_reuse_skips_prefill_and_stays_byte_identical() {
+    let cold = sim_rt(); // reference runtime without a prefix cache
+    let tok = ByteTokenizer::new();
+    let sys = "You are a helpful assistant."; // 28 bytes + BOS = 29 shared tokens
+    let p1 = tok.encode_with_bos(&format!("{sys} Q1: add?"));
+    let p2 = tok.encode_with_bos(&format!("{sys} Q2: mul?"));
+    let p = params(24);
+
+    for (name, engine) in engines() {
+        // fresh runtime + trie per engine so hit/miss counts start clean
+        let rt = sim_rt();
+        let pc = Arc::new(PrefixCache::new(16, 8));
+        rt.set_prefix_cache(Some(pc.clone()));
+
+        // first request: miss + insert
+        let (one, _, _) = reference(engine.as_ref(), &rt, &p1, &p);
+        let st1 = pc.stats();
+        assert!(st1.misses >= 1, "{name}: first prompt must miss");
+        assert!(st1.inserts >= 1, "{name}: first prompt must insert");
+
+        // shared-prefix request: forks the snapshot (partial hit)
+        let (two, _, _) = reference(engine.as_ref(), &rt, &p2, &p);
+        let st2 = pc.stats();
+        assert!(st2.hits > st1.hits, "{name}: shared prefix must hit");
+
+        // exact repeat: hits again, zero extension
+        let (one_again, _, _) = reference(engine.as_ref(), &rt, &p1, &p);
+        assert!(pc.stats().hits > st2.hits, "{name}: exact repeat must hit");
+
+        // byte-identity against the cold runtime
+        let (cold_one, _, _) = reference(engine.as_ref(), &cold, &p1, &p);
+        let (cold_two, _, _) = reference(engine.as_ref(), &cold, &p2, &p);
+        assert_eq!(one.tokens, cold_one.tokens, "{name}: p1 diverged under reuse");
+        assert_eq!(one_again.tokens, cold_one.tokens,
+                   "{name}: exact-hit p1 diverged under reuse");
+        assert_eq!(two.tokens, cold_two.tokens, "{name}: p2 diverged under reuse");
+        assert_eq!(two.text, cold_two.text);
+
+        let st = pc.stats();
+        assert!(st.bytes_reused > 0, "{name}: forks must count reused bytes");
+        assert!(st.entries >= 2, "{name}: both prompts should be cached");
+    }
+}
+
+#[test]
+fn short_prompts_bypass_the_prefix_cache() {
+    let rt = sim_rt();
+    let pc = Arc::new(PrefixCache::new(32, 8));
+    rt.set_prefix_cache(Some(pc.clone()));
+    let tok = ByteTokenizer::new();
+    let prompt = tok.encode_with_bos("hi"); // far below min_prefix
+    let engine = AutoRegressive::new();
+    let _ = reference(&engine, &rt, &prompt, &params(8));
+    let _ = reference(&engine, &rt, &prompt, &params(8));
+    let st = pc.stats();
+    assert_eq!(st.entries, 0, "short prompts must not be cached");
+    assert_eq!(st.hits, 0);
+}
+
+// ---------------------------------------------------------------------------
+// serving: budgeted suspend/resume + metrics endpoint
+// ---------------------------------------------------------------------------
+
+fn serve_cfg(dir: &str, max_live: usize, kv_budget: usize, prefix: bool)
+             -> ServerConfig {
+    ServerConfig {
+        workers: 1,
+        policy: Policy::Fifo,
+        queue_depth: 64,
+        share_ngrams: false,
+        ngram_ttl_ms: None,
+        batch_decode: true,
+        worker: WorkerConfig {
+            artifacts_dir: dir.into(),
+            model: "tiny".into(),
+            wng: (5, 3, 5),
+            time_slice: 2,
+            max_live,
+            kv_budget,
+            prefix_cache: prefix,
+            ..WorkerConfig::default()
+        },
+    }
+}
+
+#[test]
+fn kv_budget_serves_overload_with_no_cross_talk() {
+    let dir = ensure_sim_artifacts().unwrap();
+    let dir_s = dir.to_string_lossy().into_owned();
+    // budget of 2 device caches, 4 concurrent sessions offered
+    let h = ServerHandle::start(serve_cfg(&dir_s, 4, 2, false)).unwrap();
+
+    let prompts = [
+        ("def f_a(x):\n    return x", "autoregressive"),
+        ("def f_b(x, y):\n    return y", "autoregressive"),
+        ("Q: what is 12 + 34?\n", "lookahead"),
+        ("Once upon a time there was", "lookahead"),
+    ];
+    let rxs: Vec<_> = prompts
+        .iter()
+        .map(|(prompt, method)| {
+            h.submit(Request {
+                prompt: (*prompt).into(),
+                max_tokens: 40,
+                method: (*method).into(),
+                ..Default::default()
+            })
+            .unwrap()
+        })
+        .collect();
+    let resps: Vec<_> = rxs.into_iter().map(|rx| rx.wait().unwrap()).collect();
+
+    // every request completed, byte-identical to a solo run (no cross-talk)
+    let rt = sim_rt();
+    let tok = ByteTokenizer::new();
+    for ((prompt, method), resp) in prompts.iter().zip(&resps) {
+        assert!(resp.error.is_none(), "{method} '{prompt}': {:?}", resp.error);
+        let engine: Box<dyn Decoder> = match *method {
+            "lookahead" => Box::new(Lookahead::with_wng(5, 3, 5)),
+            _ => Box::new(AutoRegressive::new()),
+        };
+        let ids = tok.encode_with_bos(prompt);
+        let (want, _, _) = reference(engine.as_ref(), &rt, &ids, &params(40));
+        assert_eq!(resp.text, want.text, "{method} '{prompt}' diverged under budget");
+        assert_eq!(resp.tokens, want.stats.generated_tokens);
+    }
+
+    // the suspend/resume path demonstrably ran, and the metrics flow
+    // through the dispatcher metrics endpoint
+    let (snaps, restores) = {
+        let m = h.metrics.lock().unwrap();
+        (m.counter("kv_snapshots"), m.counter("kv_restores"))
+    };
+    assert!(snaps >= 1, "over-budget load must park sessions (snapshots={snaps})");
+    assert!(restores >= 1, "parked sessions must be revived (restores={restores})");
+    let report = h.report();
+    assert!(report.contains("kv_snapshots"), "metrics endpoint must report kv:\n{report}");
+    assert!(report.contains("suspended_sessions"),
+            "metrics endpoint must carry the suspended gauge:\n{report}");
+    h.shutdown();
+}
+
+#[test]
+fn serving_prefix_hits_flow_through_metrics() {
+    let dir = ensure_sim_artifacts().unwrap();
+    let dir_s = dir.to_string_lossy().into_owned();
+    let h = ServerHandle::start(serve_cfg(&dir_s, 2, 0, true)).unwrap();
+
+    // >= 32 shared prompt tokens (BOS + 39 bytes), distinct tails
+    let sys = "System: you are a terse coding assistant";
+    let mk = |tail: &str| Request {
+        prompt: format!("{sys}{tail}"),
+        max_tokens: 12,
+        method: "autoregressive".into(),
+        ..Default::default()
+    };
+    // serialize the two requests so the first inserts before the second opens
+    let r1 = h.submit(mk(" one")).unwrap().wait().unwrap();
+    assert!(r1.error.is_none(), "{:?}", r1.error);
+    let r2 = h.submit(mk(" two")).unwrap().wait().unwrap();
+    assert!(r2.error.is_none(), "{:?}", r2.error);
+
+    let pc = h.prefix_cache.as_ref().expect("prefix cache enabled").clone();
+    let st = pc.stats();
+    assert!(st.hits >= 1,
+            "second request shares a {}+ token prefix and must skip its prefill: {st:?}",
+            sys.len() + 1);
+    let report = h.report();
+    assert!(report.contains("prefix_hits"), "metrics endpoint must report:\n{report}");
+    assert!(report.contains("prefix_cache:"), "report must carry the trie line:\n{report}");
+    h.shutdown();
+}

@@ -167,7 +167,7 @@ fn share_toggle_through_scheduler_and_worker() {
     assert_eq!(r1.text, r2.text, "sharing changed output");
     let warm = h.metrics.lock().unwrap().counter("ngram_warm_requests");
     assert_eq!(warm, 1);
-    assert!(h.report().contains("ngram_cache tiny:lookahead:n3"));
+    assert!(h.report().contains("ngram_cache _shared/tiny:lookahead:n3"));
 
     // per-request opt-out under a sharing server
     let mut opt_out = req(prompt);

@@ -45,6 +45,14 @@
 //!   sim decode_lin_b k=T batch=B vocab=V weights=K [delay_ms=D]
 //!   sim decode_gen_b t_pad=T batch=B vocab=V weights=K [delay_ms=D]
 //!   sim commit       slots=C
+//!   sim cache_io     rows=S
+//!
+//! `cache_io` is the device<->host serialization hook for the KV-cache
+//! manager (`rust/src/kv/`): called with a cache buffer it returns the raw
+//! rows as `i32[rows]` (download); called with an `i32[rows]` buffer it
+//! returns a fresh cache holding those rows (upload). A real-PJRT lowering
+//! of the same contract is a pair of identity/convert programs over the
+//! cache tensor.
 //!
 //! `delay_ms` makes each decode *launch* sleep (once per call, batched or
 //! not — modeling the fused-call economics); serving tests use it to open
@@ -337,6 +345,7 @@ enum SimKind {
     DecodeLinB,
     DecodeGenB,
     Commit,
+    CacheIo,
 }
 
 #[derive(Debug, Clone)]
@@ -368,6 +377,7 @@ impl SimExe {
             "decode_lin_b" => SimKind::DecodeLinB,
             "decode_gen_b" => SimKind::DecodeGenB,
             "commit" => SimKind::Commit,
+            "cache_io" => SimKind::CacheIo,
             _ => return None,
         };
         let mut exe = SimExe {
@@ -514,8 +524,36 @@ impl PjRtLoadedExecutable {
             SimKind::DecodeLinB => self.run_decode_lin_b(args)?,
             SimKind::DecodeGenB => self.run_decode_gen_b(args)?,
             SimKind::Commit => self.run_commit(args)?,
+            SimKind::CacheIo => self.run_cache_io(args)?,
         };
         Ok(vec![out])
+    }
+
+    /// cache_io: one arg, direction decided by its payload.
+    ///   [cache]        -> [i32[rows]]  (download: raw committed rows)
+    ///   [i32[rows]]    -> [cache]      (upload: rebuild a device cache)
+    fn run_cache_io(&self, args: &[&PjRtBuffer]) -> Result<Vec<PjRtBuffer>> {
+        let rows = self.exe.rows;
+        if args.len() != 1 {
+            return err(format!("sim cache_io: want 1 arg, got {}", args.len()));
+        }
+        match &args[0].payload {
+            Payload::Cache(v) => {
+                if v.len() != rows {
+                    return err(format!("sim cache_io: cache has {} rows, want {rows}",
+                                       v.len()));
+                }
+                Ok(vec![buf(Payload::I32(v.clone()))])
+            }
+            Payload::I32(v) => {
+                if v.len() != rows {
+                    return err(format!("sim cache_io: data has {} rows, want {rows}",
+                                       v.len()));
+                }
+                Ok(vec![buf(Payload::Cache(v.clone()))])
+            }
+            other => err(format!("sim cache_io: arg must be cache or i32, got {other:?}")),
+        }
     }
 
     /// prefill: weights.., tokens i32[plen], n_valid -> [logits, cache]
@@ -953,6 +991,31 @@ mod tests {
         let cl = scalar(0);
         let tb = i32_buf(&[1]);
         assert!(lin_exe(1).execute_b(&[&w, &not_cache, &cl, &tb]).is_err());
+    }
+
+    #[test]
+    fn cache_io_roundtrips_and_validates() {
+        let (_, cache) = run_prefill(&[1, 2, 3]);
+        let io = compile("sim cache_io rows=32");
+        // download: cache -> raw i32 rows
+        let mut out = io.execute_b(&[&cache]).unwrap().remove(0);
+        let rows = out.pop().unwrap().to_literal_sync().unwrap().to_vec::<i32>().unwrap();
+        assert_eq!(rows.len(), 32);
+        assert_eq!(&rows[..4], &[1, 2, 3, -1]);
+        // upload: raw rows -> a cache that decodes identically
+        let data = i32_buf(&rows);
+        let mut out = io.execute_b(&[&data]).unwrap().remove(0);
+        let rebuilt = out.pop().unwrap();
+        let w = weight();
+        let cl = scalar(2);
+        let tb = i32_buf(&[3]);
+        let a = lin_exe(1).execute_b(&[&w, &cache, &cl, &tb]).unwrap().remove(0);
+        let b = lin_exe(1).execute_b(&[&w, &rebuilt, &cl, &tb]).unwrap().remove(0);
+        assert_eq!(f32s(&a[0]), f32s(&b[0]), "rebuilt cache diverged");
+        // wrong row count and wrong payload type fail loudly
+        let short = i32_buf(&[1, 2, 3]);
+        assert!(io.execute_b(&[&short]).is_err());
+        assert!(io.execute_b(&[&w]).is_err());
     }
 
     #[test]
