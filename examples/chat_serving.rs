@@ -20,6 +20,8 @@ fn main() -> anyhow::Result<()> {
         share_ngrams: true, // multi-turn chat re-serves templates: warm pools
         ngram_ttl_ms: Some(600_000), // decay templates idle for 10 minutes
         batch_decode: true,
+        rebalance: false,
+        rebalance_interval_ms: 50,
         worker: WorkerConfig {
             artifacts_dir: "artifacts".into(),
             model: "tiny".into(),

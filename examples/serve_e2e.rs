@@ -25,6 +25,8 @@ fn run_method(method: &str, wng: (usize, usize, usize), n_req: usize,
         share_ngrams: true,
         ngram_ttl_ms: None,
         batch_decode: true,
+        rebalance: false,
+        rebalance_interval_ms: 50,
         worker: WorkerConfig {
             artifacts_dir: "artifacts".into(),
             model: "tiny".into(),

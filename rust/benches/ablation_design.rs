@@ -81,6 +81,8 @@ fn main() -> anyhow::Result<()> {
             share_ngrams: false, // isolate scheduler effects from cache warmth
             ngram_ttl_ms: None,
             batch_decode: true,
+            rebalance: false,
+            rebalance_interval_ms: 50,
             worker: WorkerConfig {
                 artifacts_dir: "artifacts".into(),
                 model: "tiny".into(),

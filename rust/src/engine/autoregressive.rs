@@ -64,6 +64,7 @@ impl EngineStep for ArState<'_> {
             model: self.rt.mm.name.clone(),
             state: EngineState::Autoregressive { cur: self.cur, rng: self.rng.state() },
             kv,
+            draft_kv: None,
             pool: std::mem::replace(&mut self.pool, PoolHandle::none()),
         })
     }

@@ -5,9 +5,10 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::engine::session::{EngineStep, RawStep, Session, SessionCore};
+use crate::engine::session::{EngineStep, EngineSuspend, RawStep, Session, SessionCore};
 use crate::engine::{capacity_left, vocab_live, Decoder, DecodeSession, FinishReason,
                     GenParams};
+use crate::kv::EngineState;
 use crate::metrics::Timer;
 use crate::ngram::PoolHandle;
 use crate::runtime::{Cache, ModelRuntime};
@@ -93,6 +94,33 @@ impl EngineStep for JacobiState<'_> {
     fn pool_mut(&mut self) -> &mut PoolHandle {
         &mut self.pool
     }
+
+    fn suspendable(&self) -> bool {
+        self.rt.supports_cache_io()
+    }
+
+    fn suspend_engine(&mut self) -> Result<EngineSuspend> {
+        // `tokens` is fully rewritten by every step (cur + guesses), so the
+        // trajectory guesses + rng stream + current token are the whole
+        // inter-step state
+        let kv = {
+            let cache = self.cache.as_ref().ok_or_else(|| anyhow!("session lost its cache"))?;
+            self.rt.cache_to_host(cache)?
+        };
+        self.cache = None; // free the device buffer
+        Ok(EngineSuspend {
+            model: self.rt.mm.name.clone(),
+            state: EngineState::Jacobi {
+                k: self.k,
+                guesses: self.guesses.clone(),
+                cur: self.cur,
+                rng: self.rng.state(),
+            },
+            kv,
+            draft_kv: None,
+            pool: std::mem::replace(&mut self.pool, PoolHandle::none()),
+        })
+    }
 }
 
 impl Decoder for Jacobi {
@@ -131,4 +159,35 @@ impl Decoder for Jacobi {
             pool,
         }))
     }
+}
+
+/// Reopen a suspended Jacobi session from its snapshot parts
+/// (`kv::SessionSnapshot::resume` dispatches here). The chain executable is
+/// re-derived from `k` exactly as `begin` derives it; the trajectory
+/// guesses, RNG stream, and current token continue from the snapshot.
+pub(crate) fn resume_session<'rt>(rt: &'rt ModelRuntime, core: SessionCore,
+                                  cache: Cache, k: usize, guesses: Vec<u32>, cur: u32,
+                                  rng: Rng, pool: PoolHandle)
+                                  -> Result<Box<dyn DecodeSession + 'rt>> {
+    // snapshots are cross-process input: validate before indexing
+    if k < 2 {
+        return Err(anyhow!("jacobi snapshot has invalid window k={k}"));
+    }
+    if guesses.len() != k - 1 {
+        return Err(anyhow!("jacobi snapshot has {} guesses, want {}",
+                           guesses.len(), k - 1));
+    }
+    rt.mm.decode_lin_exe(k).map_err(|e| anyhow!("{e}"))?;
+    Ok(Session::boxed(core, JacobiState {
+        rt,
+        k,
+        exe: format!("decode_lin_{k}"),
+        rng,
+        guesses,
+        tokens: vec![0u32; k],
+        cur,
+        cache: Some(cache),
+        vocab: vocab_live(rt),
+        pool,
+    }))
 }

@@ -172,6 +172,7 @@ impl EngineStep for LookaheadState<'_> {
                 rng: self.rng.state(),
             },
             kv,
+            draft_kv: None,
             pool: std::mem::replace(&mut self.pool, PoolHandle::none()),
         })
     }

@@ -8,11 +8,12 @@
 //! cross-request `SharedNgramCache` — and it feeds accepted continuations
 //! back into that pool. Verification keeps the output byte-exact either way.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
-use crate::engine::session::{EngineStep, RawStep, Session, SessionCore};
+use crate::engine::session::{EngineStep, EngineSuspend, RawStep, Session, SessionCore};
 use crate::engine::{capacity_left, vocab_live, Decoder, DecodeSession, FinishReason,
                     GenParams};
+use crate::kv::EngineState;
 use crate::metrics::Timer;
 use crate::ngram::{PoolHandle, PoolSpec};
 use crate::runtime::{Cache, ModelRuntime};
@@ -116,6 +117,32 @@ impl EngineStep for PromptLookupState<'_> {
     fn pool_mut(&mut self) -> &mut PoolHandle {
         &mut self.pool
     }
+
+    fn suspendable(&self) -> bool {
+        self.rt.supports_cache_io()
+    }
+
+    fn suspend_engine(&mut self) -> Result<EngineSuspend> {
+        // `tokens` is fully rewritten by every step; the speculation window
+        // is derived from `history`, and the pool handle travels with the
+        // snapshot — so k, match_len, and history are the whole state
+        let kv = {
+            let cache = self.cache.as_ref().ok_or_else(|| anyhow!("session lost its cache"))?;
+            self.rt.cache_to_host(cache)?
+        };
+        self.cache = None; // free the device buffer
+        Ok(EngineSuspend {
+            model: self.rt.mm.name.clone(),
+            state: EngineState::PromptLookup {
+                k: self.k,
+                match_len: self.match_len,
+                history: self.history.clone(),
+            },
+            kv,
+            draft_kv: None,
+            pool: std::mem::replace(&mut self.pool, PoolHandle::none()),
+        })
+    }
 }
 
 impl Decoder for PromptLookup {
@@ -163,6 +190,40 @@ impl Decoder for PromptLookup {
             pool,
         }))
     }
+}
+
+/// Reopen a suspended prompt-lookup session from its snapshot parts
+/// (`kv::SessionSnapshot::resume` dispatches here). The pool is NOT
+/// re-seeded from the history: the handle restored with the snapshot
+/// already holds the session's exact pool state, and re-seeding would
+/// shuffle its LRU order (changing candidate sets, hence stats).
+pub(crate) fn resume_session<'rt>(rt: &'rt ModelRuntime, core: SessionCore,
+                                  cache: Cache, k: usize, match_len: usize,
+                                  history: Vec<u32>, pool: PoolHandle)
+                                  -> Result<Box<dyn DecodeSession + 'rt>> {
+    // snapshots are cross-process input: validate before indexing
+    if k < 2 || match_len == 0 {
+        return Err(anyhow!(
+            "prompt_lookup snapshot has invalid config k={k} match_len={match_len}"));
+    }
+    if history.is_empty() {
+        return Err(anyhow!("prompt_lookup snapshot has an empty history"));
+    }
+    let exe = format!("decode_lin_{k}");
+    if !rt.mm.executables.contains_key(&exe) {
+        return Err(anyhow!("model lacks {exe}"));
+    }
+    Ok(Session::boxed(core, PromptLookupState {
+        rt,
+        k,
+        match_len,
+        exe,
+        history,
+        tokens: vec![0u32; k],
+        cache: Some(cache),
+        vocab: vocab_live(rt),
+        pool,
+    }))
 }
 
 #[cfg(test)]

@@ -202,11 +202,13 @@ pub(crate) enum RawStep {
 
 /// What an engine hands over when its session suspends: the serializable
 /// engine state, the host image of its device cache (the device buffer is
-/// freed), and the live pool handle.
+/// freed), the draft model's cache image for two-model engines
+/// (spec-decode; `None` elsewhere), and the live pool handle.
 pub(crate) struct EngineSuspend {
     pub model: String,
     pub state: EngineState,
     pub kv: HostKv,
+    pub draft_kv: Option<HostKv>,
     pub pool: PoolHandle,
 }
 
@@ -476,6 +478,7 @@ impl<E: EngineStep> DecodeSession for Session<E> {
                     model: es.model,
                     engine: es.state,
                     kv: es.kv,
+                    draft_kv: es.draft_kv,
                     params: self.core.params.clone(),
                     out: std::mem::take(&mut self.core.out),
                     stats: self.core.stats.clone(),

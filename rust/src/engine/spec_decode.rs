@@ -6,11 +6,12 @@
 
 use std::rc::Rc;
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
-use crate::engine::session::{EngineStep, RawStep, Session, SessionCore};
+use crate::engine::session::{EngineStep, EngineSuspend, RawStep, Session, SessionCore};
 use crate::engine::{capacity_left, vocab_live, Decoder, DecodeSession, FinishReason,
                     GenParams};
+use crate::kv::EngineState;
 use crate::metrics::Timer;
 use crate::ngram::PoolHandle;
 use crate::runtime::{Cache, ModelRuntime};
@@ -26,7 +27,14 @@ impl SpecDecode {
     /// `gamma + 1` must have a matching `decode_lin_{gamma+1}` target
     /// executable (the shipped artifacts provide gamma = 4).
     pub fn new(draft: ModelRuntime, gamma: usize) -> Self {
-        SpecDecode { draft: Rc::new(draft), gamma }
+        Self::with_shared(Rc::new(draft), gamma)
+    }
+
+    /// Build on an already-shared draft runtime (the worker keeps one draft
+    /// runtime per model name and hands it to both fresh engines and
+    /// snapshot resumes).
+    pub fn with_shared(draft: Rc<ModelRuntime>, gamma: usize) -> Self {
+        SpecDecode { draft, gamma }
     }
 }
 
@@ -105,6 +113,43 @@ impl EngineStep for SpecState<'_> {
     fn pool_mut(&mut self) -> &mut PoolHandle {
         &mut self.pool
     }
+
+    fn suspendable(&self) -> bool {
+        // BOTH caches must be serializable: the draft's sequentially-built
+        // cache is as much session state as the target's
+        self.rt.supports_cache_io() && self.draft.supports_cache_io()
+    }
+
+    fn suspend_engine(&mut self) -> Result<EngineSuspend> {
+        // capture both caches before freeing either, so a failed draft
+        // capture leaves the (poisoned) session internally consistent
+        let kv = {
+            let cache = self.cache.as_ref().ok_or_else(|| anyhow!("session lost its cache"))?;
+            self.rt.cache_to_host(cache)?
+        };
+        let dkv = {
+            let dcache = self
+                .dcache
+                .as_ref()
+                .ok_or_else(|| anyhow!("session lost its draft cache"))?;
+            // second cache_io pass, through the DRAFT runtime: its cache
+            // shape and element type are the draft model's, not the target's
+            self.draft.cache_to_host(dcache)?
+        };
+        self.cache = None; // free the device buffers
+        self.dcache = None;
+        Ok(EngineSuspend {
+            model: self.rt.mm.name.clone(),
+            state: EngineState::SpecDecode {
+                gamma: self.gamma,
+                cur: self.cur,
+                draft: self.draft.mm.name.clone(),
+            },
+            kv,
+            draft_kv: Some(dkv),
+            pool: std::mem::replace(&mut self.pool, PoolHandle::none()),
+        })
+    }
 }
 
 impl Decoder for SpecDecode {
@@ -149,4 +194,37 @@ impl Decoder for SpecDecode {
             pool,
         }))
     }
+}
+
+/// Reopen a suspended spec-decode session from its snapshot parts
+/// (`kv::SessionSnapshot::resume_with` dispatches here, providing a draft
+/// runtime for the snapshot's draft model — the second half of the
+/// two-model state the `draft_kv` snapshot section captures).
+pub(crate) fn resume_session<'rt>(rt: &'rt ModelRuntime, draft: Rc<ModelRuntime>,
+                                  core: SessionCore, cache: Cache, dcache: Cache,
+                                  gamma: usize, cur: u32, pool: PoolHandle)
+                                  -> Result<Box<dyn DecodeSession + 'rt>> {
+    // snapshots are cross-process input: validate before indexing
+    if gamma == 0 {
+        return Err(anyhow!("spec_decode snapshot has invalid gamma=0"));
+    }
+    let k = gamma + 1;
+    let verify_exe = format!("decode_lin_{k}");
+    if !rt.mm.executables.contains_key(&verify_exe) {
+        return Err(anyhow!("target model lacks {verify_exe}"));
+    }
+    let dvocab = vocab_live(&draft);
+    Ok(Session::boxed(core, SpecState {
+        rt,
+        draft,
+        gamma,
+        verify_exe,
+        tokens: vec![0u32; k],
+        cur,
+        cache: Some(cache),
+        dcache: Some(dcache),
+        vocab: vocab_live(rt),
+        dvocab,
+        pool,
+    }))
 }

@@ -5,9 +5,11 @@
 //! hook (`ModelRuntime::cache_to_host` / `cache_from_host`):
 //!
 //! - **snapshot/restore** ([`snapshot::SessionSnapshot`]): a suspended
-//!   session serializes to a versioned host/disk image and resumes
-//!   byte-identically — later, or on another worker with the same model
-//!   artifacts (the roadmap's session persistence/migration item);
+//!   session — any of the five engines — serializes to a versioned
+//!   host/disk image and resumes byte-identically — later, or on another
+//!   worker with the same model artifacts (the roadmap's session
+//!   persistence/migration item); two-model engines (spec-decode) carry
+//!   the draft cache as a second `cache_io` payload;
 //! - **prefix reuse** ([`prefix::PrefixCache`]): a trie of committed-prompt
 //!   KV snapshots lets requests sharing a long prompt prefix fork a stored
 //!   cache (restore = fresh device buffer = copy-on-write) instead of
@@ -33,7 +35,8 @@ use std::collections::VecDeque;
 use anyhow::{anyhow, Result};
 
 pub use prefix::{PrefixCache, PrefixStats, DEFAULT_MAX_ENTRIES, DEFAULT_MIN_PREFIX};
-pub use snapshot::{EngineState, SessionSnapshot, SNAPSHOT_VERSION};
+pub use snapshot::{EngineState, SessionSnapshot, SNAPSHOT_MIN_VERSION,
+                   SNAPSHOT_VERSION};
 
 /// Names a parked (host-resident) session cache inside a [`KvManager`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -134,6 +137,7 @@ mod tests {
             model: "tiny".into(),
             engine: EngineState::Autoregressive { cur: tag as u32, rng: [1, 2, 3, 4] },
             kv: HostKv { len: 3, elem: "i32".into(), data: vec![tag; 16] },
+            draft_kv: None,
             params: GenParams::default(),
             out: vec![tag as u32],
             stats: DecodeStats::default(),

@@ -12,19 +12,24 @@
 //! trip stays byte-identical for tokens and deltas in every case, and for
 //! stats whenever the pool was private (the suite pins this).
 //!
-//! ## On-disk format (version 1)
+//! ## On-disk format (version 2)
 //!
 //! ```text
 //! LAKV1\n
 //! <one JSON header line: model, engine state, params, output, stats, pool>\n
-//! <raw HostKv payload bytes>
+//! <raw HostKv payload bytes>[<raw draft HostKv payload bytes>]
 //! ```
 //!
-//! The header carries `kv.bytes` so the payload length is validated on
-//! load; 64-bit values (seed, RNG state) are hex strings because the JSON
-//! substrate is f64-backed. Snapshots are worker- and process-portable:
-//! resuming on another worker only requires the same model artifacts.
+//! The header carries `kv.bytes` (and `draft_kv.bytes` for two-model
+//! engines) so the payload length is validated on load; 64-bit values
+//! (seed, RNG state) are hex strings because the JSON substrate is
+//! f64-backed. Version 2 adds the optional `draft_kv` section — the draft
+//! model's cache image a suspended spec-decode session needs — appended
+//! after the target payload; version-1 snapshots (no `draft_kv` key) still
+//! load. Snapshots are worker- and process-portable: resuming on another
+//! worker only requires the same model artifacts.
 
+use std::rc::Rc;
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
@@ -38,13 +43,15 @@ use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 const MAGIC: &[u8] = b"LAKV1\n";
-pub const SNAPSHOT_VERSION: u32 = 1;
+pub const SNAPSHOT_VERSION: u32 = 2;
+/// Oldest header version [`SessionSnapshot::from_bytes`] still reads.
+pub const SNAPSHOT_MIN_VERSION: u32 = 1;
 
-/// Engine-specific resumable state. Only deterministic engines whose whole
-/// step state lives between steps are snapshotable (autoregressive and
-/// lookahead — jointly the serving default and the paper's contribution);
-/// the other baselines report `suspendable() == false` and are simply never
-/// parked by the worker.
+/// Engine-specific resumable state. Every engine is snapshotable: the
+/// deterministic inter-step state is the current token plus the engine's
+/// own speculation source — RNG-fed trajectory rows (lookahead/Jacobi),
+/// the token history (prompt-lookup), or the draft model's cache
+/// (spec-decode, carried as the snapshot's `draft_kv` section).
 #[derive(Debug, Clone, PartialEq)]
 pub enum EngineState {
     Autoregressive {
@@ -62,6 +69,28 @@ pub enum EngineState {
         cur: u32,
         rng: [u64; 4],
     },
+    Jacobi {
+        /// chain length (decode_lin_k).
+        k: usize,
+        /// trajectory guesses y_1..y_{k-1} for the next positions.
+        guesses: Vec<u32>,
+        cur: u32,
+        rng: [u64; 4],
+    },
+    PromptLookup {
+        k: usize,
+        match_len: usize,
+        /// prompt + every accepted token (untrimmed — the speculation
+        /// source; the candidate window is re-derived from it each step).
+        history: Vec<u32>,
+    },
+    SpecDecode {
+        gamma: usize,
+        cur: u32,
+        /// draft model name; resume needs a runtime for it (plus the
+        /// snapshot's `draft_kv` cache image).
+        draft: String,
+    },
 }
 
 /// A suspended session: host-resident, serializable, resumable on any
@@ -70,6 +99,9 @@ pub struct SessionSnapshot {
     pub model: String,
     pub engine: EngineState,
     pub kv: HostKv,
+    /// the draft model's cache image (spec-decode only): the second
+    /// `cache_io` pass of a two-model suspend.
+    pub draft_kv: Option<HostKv>,
     pub params: GenParams,
     /// committed (budget/EOS-trimmed) output so far.
     pub out: Vec<u32>,
@@ -168,6 +200,25 @@ impl SessionSnapshot {
                     ("rng", rng_json(rng)),
                 ])
             }
+            EngineState::Jacobi { k, guesses, cur, rng } => Json::obj(vec![
+                ("kind", Json::str("jacobi")),
+                ("k", Json::num(*k as f64)),
+                ("guesses", u32s_json(guesses)),
+                ("cur", Json::num(*cur as f64)),
+                ("rng", rng_json(rng)),
+            ]),
+            EngineState::PromptLookup { k, match_len, history } => Json::obj(vec![
+                ("kind", Json::str("prompt_lookup")),
+                ("k", Json::num(*k as f64)),
+                ("match_len", Json::num(*match_len as f64)),
+                ("history", u32s_json(history)),
+            ]),
+            EngineState::SpecDecode { gamma, cur, draft } => Json::obj(vec![
+                ("kind", Json::str("spec_decode")),
+                ("gamma", Json::num(*gamma as f64)),
+                ("cur", Json::num(*cur as f64)),
+                ("draft", Json::str(draft.clone())),
+            ]),
         };
         let p = &self.params;
         let params = Json::obj(vec![
@@ -230,12 +281,27 @@ impl SessionSnapshot {
                 ("elem", Json::str(self.kv.elem.clone())),
                 ("bytes", Json::num(self.kv.data.len() as f64)),
             ])),
+            // v2: the draft model's cache image, appended after the target
+            // payload (spec-decode only; Null elsewhere)
+            ("draft_kv", match &self.draft_kv {
+                Some(d) => Json::obj(vec![
+                    ("len", Json::num(d.len as f64)),
+                    ("elem", Json::str(d.elem.clone())),
+                    ("bytes", Json::num(d.data.len() as f64)),
+                ]),
+                None => Json::Null,
+            }),
         ]);
-        let mut bytes = Vec::with_capacity(MAGIC.len() + self.kv.data.len() + 512);
+        let draft_len = self.draft_kv.as_ref().map_or(0, |d| d.data.len());
+        let mut bytes =
+            Vec::with_capacity(MAGIC.len() + self.kv.data.len() + draft_len + 512);
         bytes.extend_from_slice(MAGIC);
         bytes.extend_from_slice(header.dump().as_bytes());
         bytes.push(b'\n');
         bytes.extend_from_slice(&self.kv.data);
+        if let Some(d) = &self.draft_kv {
+            bytes.extend_from_slice(&d.data);
+        }
         bytes
     }
 
@@ -261,8 +327,9 @@ impl SessionSnapshot {
         let data = &rest[nl + 1..];
         let j = Json::parse(header).map_err(|e| anyhow!("snapshot header: {e}"))?;
         let version = req_usize(&j, "version")? as u32;
-        if version != SNAPSHOT_VERSION {
-            bail!("snapshot version {version} unsupported (want {SNAPSHOT_VERSION})");
+        if !(SNAPSHOT_MIN_VERSION..=SNAPSHOT_VERSION).contains(&version) {
+            bail!("snapshot version {version} unsupported \
+                   (want {SNAPSHOT_MIN_VERSION}..={SNAPSHOT_VERSION})");
         }
         let model = req_str(&j, "model")?;
 
@@ -291,6 +358,22 @@ impl SessionSnapshot {
                     rng: parse_rng(req(ej, "rng")?, "engine.rng")?,
                 }
             }
+            "jacobi" => EngineState::Jacobi {
+                k: req_usize(ej, "k")?,
+                guesses: parse_u32s(req(ej, "guesses")?, "engine.guesses")?,
+                cur: req_usize(ej, "cur")? as u32,
+                rng: parse_rng(req(ej, "rng")?, "engine.rng")?,
+            },
+            "prompt_lookup" => EngineState::PromptLookup {
+                k: req_usize(ej, "k")?,
+                match_len: req_usize(ej, "match_len")?,
+                history: parse_u32s(req(ej, "history")?, "engine.history")?,
+            },
+            "spec_decode" => EngineState::SpecDecode {
+                gamma: req_usize(ej, "gamma")?,
+                cur: req_usize(ej, "cur")? as u32,
+                draft: req_str(ej, "draft")?,
+            },
             other => bail!("snapshot: unknown engine kind '{other}'"),
         };
 
@@ -364,14 +447,32 @@ impl SessionSnapshot {
         let kv_len = req_usize(kj, "len")?;
         let kv_elem = req_str(kj, "elem")?;
         let kv_bytes = req_usize(kj, "bytes")?;
-        if data.len() != kv_bytes {
-            bail!("snapshot: payload is {} bytes, header says {kv_bytes}", data.len());
+        // v2 appends the draft payload after the target payload; a missing
+        // key (v1 header) and an explicit Null both mean "no draft cache"
+        let draft_hdr = match j.get("draft_kv") {
+            None | Some(Json::Null) => None,
+            Some(dj) => Some((
+                req_usize(dj, "len")?,
+                req_str(dj, "elem")?,
+                req_usize(dj, "bytes")?,
+            )),
+        };
+        let draft_bytes = draft_hdr.as_ref().map_or(0, |(_, _, b)| *b);
+        if data.len() != kv_bytes + draft_bytes {
+            bail!("snapshot: payload is {} bytes, header says {kv_bytes}+{draft_bytes}",
+                  data.len());
         }
+        let draft_kv = draft_hdr.map(|(len, elem, _)| HostKv {
+            len,
+            elem,
+            data: data[kv_bytes..].to_vec(),
+        });
 
         Ok(SessionSnapshot {
             model,
             engine,
-            kv: HostKv { len: kv_len, elem: kv_elem, data: data.to_vec() },
+            kv: HostKv { len: kv_len, elem: kv_elem, data: data[..kv_bytes].to_vec() },
+            draft_kv,
             params,
             out: parse_u32s(req(&j, "out")?, "out")?,
             stats,
@@ -393,29 +494,76 @@ impl SessionSnapshot {
         Self::from_bytes(&bytes)
     }
 
+    /// The draft model this snapshot needs a runtime for at resume time
+    /// (`Some` only for spec-decode sessions). Callers holding one — the
+    /// worker keeps a per-model draft-runtime cache — resume through
+    /// [`SessionSnapshot::resume_with`].
+    pub fn draft_model(&self) -> Option<&str> {
+        match &self.engine {
+            EngineState::SpecDecode { draft, .. } => Some(draft),
+            _ => None,
+        }
+    }
+
     /// Reopen the session on `rt` (same model artifacts required) and
     /// continue exactly where it was suspended: the KV cache is restored to
-    /// a fresh device buffer and the engine state (window, RNG stream,
-    /// current token) picks up mid-generation — tokens, deltas, and stats
-    /// are byte-identical to a never-suspended run (`rust/tests/kv_manager.rs`).
+    /// a fresh device buffer and the engine state (window/trajectory/
+    /// history, RNG stream, current token) picks up mid-generation —
+    /// tokens, deltas, and stats are byte-identical to a never-suspended
+    /// run (`rust/tests/kv_manager.rs`). Spec-decode snapshots additionally
+    /// need a draft runtime: use [`SessionSnapshot::resume_with`].
     pub fn resume<'rt>(self, rt: &'rt ModelRuntime)
                        -> Result<Box<dyn DecodeSession + 'rt>> {
+        self.resume_with(rt, None)
+    }
+
+    /// [`SessionSnapshot::resume`] with a draft runtime for two-model
+    /// engines. `draft` must serve the snapshot's [`SessionSnapshot::
+    /// draft_model`]; it is ignored for single-model engines.
+    pub fn resume_with<'rt>(self, rt: &'rt ModelRuntime,
+                            draft: Option<Rc<ModelRuntime>>)
+                            -> Result<Box<dyn DecodeSession + 'rt>> {
         if self.model != rt.mm.name {
             bail!("snapshot is for model '{}', runtime serves '{}'",
                   self.model, rt.mm.name);
         }
-        let cache = rt.cache_from_host(&self.kv)?;
-        let core =
-            SessionCore::resumed(self.params, self.stats, self.out, self.wall_offset);
-        match self.engine {
+        let SessionSnapshot { engine, kv, draft_kv, params, out, stats, wall_offset,
+                              pool, .. } = self;
+        let cache = rt.cache_from_host(&kv)?;
+        let core = SessionCore::resumed(params, stats, out, wall_offset);
+        match engine {
             EngineState::Autoregressive { cur, rng } => {
                 Ok(crate::engine::autoregressive::resume_session(
-                    rt, core, cache, cur, Rng::from_state(rng), self.pool))
+                    rt, core, cache, cur, Rng::from_state(rng), pool))
             }
             EngineState::Lookahead { w, n, g, attn, force_generic, rows, cur, rng } => {
                 crate::engine::lookahead::resume_session(
                     rt, core, cache, (w, n, g), attn, force_generic, rows, cur,
-                    Rng::from_state(rng), self.pool)
+                    Rng::from_state(rng), pool)
+            }
+            EngineState::Jacobi { k, guesses, cur, rng } => {
+                crate::engine::jacobi::resume_session(
+                    rt, core, cache, k, guesses, cur, Rng::from_state(rng), pool)
+            }
+            EngineState::PromptLookup { k, match_len, history } => {
+                crate::engine::prompt_lookup::resume_session(
+                    rt, core, cache, k, match_len, history, pool)
+            }
+            EngineState::SpecDecode { gamma, cur, draft: draft_name } => {
+                let draft_rt = draft.ok_or_else(|| {
+                    anyhow!("spec_decode snapshot needs a runtime for draft model \
+                             '{draft_name}': resume via resume_with")
+                })?;
+                if draft_rt.mm.name != draft_name {
+                    bail!("snapshot drafts with model '{draft_name}', runtime serves \
+                           '{}'", draft_rt.mm.name);
+                }
+                let dkv = draft_kv.ok_or_else(|| {
+                    anyhow!("spec_decode snapshot is missing its draft_kv section")
+                })?;
+                let dcache = draft_rt.cache_from_host(&dkv)?;
+                crate::engine::spec_decode::resume_session(
+                    rt, draft_rt, core, cache, dcache, gamma, cur, pool)
             }
         }
     }
@@ -446,6 +594,7 @@ mod tests {
                 rng: [u64::MAX, 1, 0x1234_5678_9abc_def0, 7],
             },
             kv: HostKv { len: 9, elem: "i32".into(), data: vec![0xAB; 40] },
+            draft_kv: None,
             params: GenParams {
                 max_new_tokens: 64,
                 sampling: SamplingParams { temperature: 0.7, top_k: 5, top_p: 0.9 },
@@ -479,6 +628,82 @@ mod tests {
         let mut p = back.pool;
         assert_eq!(p.lookup(1, 4), vec![vec![2, 3]]);
         assert_eq!((p.hits, p.misses), (2, 0));
+    }
+
+    #[test]
+    fn spec_snapshot_roundtrips_with_draft_payload() {
+        let mut snap = sample();
+        snap.engine =
+            EngineState::SpecDecode { gamma: 4, cur: 99, draft: "draft".into() };
+        snap.draft_kv =
+            Some(HostKv { len: 9, elem: "i32".into(), data: vec![0xCD; 24] });
+        assert_eq!(snap.draft_model(), Some("draft"));
+        let bytes = snap.to_bytes();
+        let back = SessionSnapshot::from_bytes(&bytes).unwrap();
+        assert_eq!(back.engine, snap.engine);
+        // the concatenated payload splits back into the two cache images
+        assert_eq!(back.kv, snap.kv);
+        assert_eq!(back.draft_kv, snap.draft_kv);
+        // truncating inside the draft section is caught by the length check
+        assert!(SessionSnapshot::from_bytes(&bytes[..bytes.len() - 5]).is_err());
+    }
+
+    #[test]
+    fn jacobi_and_prompt_lookup_states_roundtrip() {
+        for engine in [
+            EngineState::Jacobi {
+                k: 8,
+                guesses: vec![3, 1, 4, 1, 5, 9, 2],
+                cur: 6,
+                rng: [5, 6, 7, 8],
+            },
+            EngineState::PromptLookup {
+                k: 8,
+                match_len: 1,
+                history: vec![257, 10, 20, 30, 10, 20],
+            },
+        ] {
+            let mut snap = sample();
+            snap.engine = engine.clone();
+            let back = SessionSnapshot::from_bytes(&snap.to_bytes()).unwrap();
+            assert_eq!(back.engine, engine);
+            assert_eq!(back.draft_model(), None);
+        }
+    }
+
+    #[test]
+    fn version_1_snapshots_still_load() {
+        // reconstruct a v1 image: same layout, header without the
+        // `draft_kv` key and with the old version number
+        let snap = sample();
+        let bytes = snap.to_bytes();
+        let rest = &bytes[MAGIC.len()..];
+        let nl = rest.iter().position(|&b| b == b'\n').unwrap();
+        let header = std::str::from_utf8(&rest[..nl]).unwrap();
+        assert!(header.contains("\"version\":2"), "writer must stamp v2");
+        // the JSON substrate sorts keys, so tolerate either comma side
+        let v1 = header
+            .replace("\"version\":2", "\"version\":1")
+            .replace("\"draft_kv\":null,", "")
+            .replace(",\"draft_kv\":null", "");
+        assert!(!v1.contains("draft_kv"), "surgery failed: {v1}");
+        let mut old = Vec::new();
+        old.extend_from_slice(MAGIC);
+        old.extend_from_slice(v1.as_bytes());
+        old.push(b'\n');
+        old.extend_from_slice(&rest[nl + 1..]);
+        let back = SessionSnapshot::from_bytes(&old).unwrap();
+        assert_eq!(back.engine, snap.engine);
+        assert_eq!(back.kv, snap.kv);
+        assert_eq!(back.draft_kv, None);
+        // versions beyond the writer's are rejected, not misparsed
+        let v3 = header.replace("\"version\":2", "\"version\":3");
+        let mut future = Vec::new();
+        future.extend_from_slice(MAGIC);
+        future.extend_from_slice(v3.as_bytes());
+        future.push(b'\n');
+        future.extend_from_slice(&rest[nl + 1..]);
+        assert!(SessionSnapshot::from_bytes(&future).is_err());
     }
 
     #[test]

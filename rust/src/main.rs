@@ -68,6 +68,13 @@ fn print_usage(args: &Args) {
         Opt { name: "prefix-cache", default: Some("true"),
               help: "fork cached KV snapshots for requests sharing a \
                      long prompt prefix instead of re-prefilling (serve)" },
+        Opt { name: "rebalance", default: Some("false"),
+              help: "move parked session snapshots from overloaded to \
+                     idle workers (serve; needs workers > 1, pairs with \
+                     --kv-budget)" },
+        Opt { name: "rebalance-interval-ms", default: Some("50"),
+              help: "how often the rebalancer compares per-worker \
+                     live+parked depth (serve)" },
         Opt { name: "stream", default: Some("false"),
               help: "stream chunk lines before the final record (client)" },
         Opt { name: "devices", default: Some("4"), help: "LP simulated devices" },
@@ -145,6 +152,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         share_ngrams,
         ngram_ttl_ms: args.get("ngram-ttl-ms").and_then(|v| v.parse().ok()),
         batch_decode: args.bool_or("batch-decode", true),
+        rebalance: args.bool_or("rebalance", false),
+        rebalance_interval_ms: args.u64_or("rebalance-interval-ms", 50),
         worker: WorkerConfig {
             artifacts_dir: args.str_or("artifacts", "artifacts"),
             model: args.str_or("model", "tiny"),

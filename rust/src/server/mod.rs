@@ -8,7 +8,8 @@ pub mod server;
 pub mod worker;
 
 pub use request::{Reply, Request, Response, StreamChunk};
-pub use scheduler::{CancelSet, Policy, Scheduler};
-pub use server::{client_request, client_request_stream, serve_tcp, ResponseStream,
-                 ServerConfig, ServerHandle};
+pub use scheduler::{CancelSet, MigratedSession, Policy, PopOutcome, RebalanceHub,
+                    Scheduler, WorkerLoad};
+pub use server::{client_request, client_request_stream, serve_tcp, RebalancePolicy,
+                 ResponseStream, ServerConfig, ServerHandle};
 pub use worker::{Worker, WorkerConfig};

@@ -1,5 +1,6 @@
 //! Request scheduler: a thread-safe queue with pluggable admission policies,
-//! plus the cancellation rendezvous ([`CancelSet`]).
+//! plus the cancellation rendezvous ([`CancelSet`]) and the cross-worker
+//! rebalance rendezvous ([`RebalanceHub`]).
 //!
 //! The paper serves batch-1 requests; throughput comes from assigning queued
 //! requests to engine workers, each of which time-slices steps across up to
@@ -7,13 +8,17 @@
 //! (arrival order) and SJF (shortest-prompt-first, reduces head-of-line
 //! blocking for mixed lengths). Workers block on [`Scheduler::pop`] only
 //! when idle and poll [`Scheduler::try_pop`] between scheduling rounds while
-//! they have live sessions.
+//! they have live sessions (or [`Scheduler::pop_timeout`] when a rebalance
+//! hub is attached, so idle workers still observe incoming migrations).
 
 use std::collections::{HashSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use crate::server::request::Request;
+use crate::kv::SessionSnapshot;
+use crate::server::request::{Request, Response, StreamChunk};
+use crate::tokenizer::Utf8StreamDecoder;
 
 /// Cancellation rendezvous between the server front and the workers: the
 /// front marks ids, workers check the mark between steps — so a cancelled
@@ -122,6 +127,35 @@ impl Scheduler {
         }
     }
 
+    /// Bounded-wait pop: like [`Scheduler::pop`] but gives up after
+    /// `timeout`, distinguishing "nothing arrived yet" ([`PopOutcome::Empty`])
+    /// from "closed and drained" ([`PopOutcome::Closed`]). Idle workers use
+    /// this instead of the blocking pop when a [`RebalanceHub`] is attached,
+    /// so they periodically return to their serve loop and adopt sessions
+    /// migrated to them.
+    pub fn pop_timeout(&self, timeout: Duration) -> PopOutcome {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(idx) = self.select(&st.queue) {
+                let e = st.queue.remove(idx).unwrap();
+                return PopOutcome::Got(Popped {
+                    req: e.req,
+                    queued_ms: e.arrived.elapsed().as_secs_f64() * 1e3,
+                });
+            }
+            if st.closed {
+                return PopOutcome::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return PopOutcome::Empty;
+            }
+            let (g, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            st = g;
+        }
+    }
+
     /// Non-blocking pop; None when the queue is currently empty (or closed).
     /// Workers with live sessions use this between scheduling rounds so a
     /// long-running request never blocks admission of new ones.
@@ -173,6 +207,215 @@ impl Scheduler {
 
     pub fn depth(&self) -> usize {
         self.state.lock().unwrap().queue.len()
+    }
+}
+
+/// Result of a bounded scheduler wait ([`Scheduler::pop_timeout`]).
+pub enum PopOutcome {
+    Got(Popped),
+    /// The timeout elapsed with the queue still empty (scheduler open).
+    Empty,
+    /// The scheduler is closed and drained: no request will ever arrive.
+    Closed,
+}
+
+// ---------------------------------------------------------------------------
+// cross-worker rebalance rendezvous
+// ---------------------------------------------------------------------------
+
+/// Per-worker load snapshot, published by the worker loop once per
+/// scheduling round and read by the server's rebalance policy.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkerLoad {
+    /// device-resident sessions this round.
+    pub live: usize,
+    /// host-parked (suspended) sessions this round.
+    pub parked: usize,
+    /// false once the worker left its serve loop — never a donor or a
+    /// target afterwards.
+    pub alive: bool,
+}
+
+impl WorkerLoad {
+    /// Total session depth (live + parked) — the quantity the rebalance
+    /// policy equalizes.
+    pub fn depth(&self) -> usize {
+        self.live + self.parked
+    }
+}
+
+/// A parked session in flight between workers: the donor's streaming state
+/// (chunk sequence, held-back UTF-8 bytes, deadline) plus the portable
+/// [`SessionSnapshot`]. Snapshots are host data, so handing one across the
+/// hub is the whole migration — the adopter parks it in its own
+/// [`crate::kv::KvManager`] and revives it like any local parked session.
+pub struct MigratedSession {
+    /// adopting worker id.
+    pub to: usize,
+    pub id: u64,
+    pub stream: bool,
+    pub queued_ms: f64,
+    pub seq: u64,
+    pub dec: Utf8StreamDecoder,
+    pub deadline: Option<Instant>,
+    pub snap: SessionSnapshot,
+}
+
+impl MigratedSession {
+    /// Final-record parts for a migration that can no longer be served
+    /// (its worker is gone): the held-back stream-decoder tail to flush
+    /// first (streaming sessions only), then the Failed record. Every
+    /// failure path uses this so a migrated stream never ends on a
+    /// truncated UTF-8 sequence.
+    pub fn into_failure(mut self, why: &str) -> (Option<StreamChunk>, Response) {
+        let tail = if self.stream {
+            let t = self.dec.finish();
+            (!t.is_empty()).then(|| StreamChunk {
+                id: self.id,
+                seq: self.seq + 1,
+                delta: t,
+            })
+        } else {
+            None
+        };
+        (tail, Response::err(self.id, format!("{why} (session {})", self.id)))
+    }
+}
+
+struct HubState {
+    loads: Vec<WorkerLoad>,
+    /// pending donation directive per worker: `directives[w] = Some(t)`
+    /// asks worker `w` to move its coldest parked session to worker `t`.
+    directives: Vec<Option<usize>>,
+    /// in-flight migrations, queued per adopting worker.
+    queues: Vec<VecDeque<MigratedSession>>,
+}
+
+/// Rendezvous for cross-worker session rebalancing. Three parties meet
+/// here: workers publish their load and poll for directives/migrations
+/// every scheduling round, and the server's rebalance thread turns load
+/// imbalance into donation directives. All state sits behind one lock so
+/// worker exit ([`RebalanceHub::mark_exited`]) atomically rejects future
+/// transfers while draining the already-queued ones — a migration is never
+/// silently stranded on a dead worker.
+pub struct RebalanceHub {
+    st: Mutex<HubState>,
+    moves: AtomicU64,
+}
+
+impl RebalanceHub {
+    pub fn new(workers: usize) -> RebalanceHub {
+        RebalanceHub {
+            st: Mutex::new(HubState {
+                loads: vec![WorkerLoad { live: 0, parked: 0, alive: true }; workers],
+                directives: vec![None; workers],
+                queues: (0..workers).map(|_| VecDeque::new()).collect(),
+            }),
+            moves: AtomicU64::new(0),
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.st.lock().unwrap().loads.len()
+    }
+
+    /// Publish worker `w`'s depth for this round (the queue-depth report
+    /// the rebalance policy reads).
+    pub fn report_load(&self, w: usize, live: usize, parked: usize) {
+        let mut st = self.st.lock().unwrap();
+        if let Some(l) = st.loads.get_mut(w) {
+            l.live = live;
+            l.parked = parked;
+        }
+    }
+
+    /// Point-in-time copy of every worker's load.
+    pub fn loads(&self) -> Vec<WorkerLoad> {
+        self.st.lock().unwrap().loads.clone()
+    }
+
+    /// Ask worker `from` to move its coldest parked session to worker `to`.
+    /// Returns false (no directive recorded) when either end is unknown or
+    /// exited, `from == to`, or a directive for `from` is already pending.
+    pub fn direct(&self, from: usize, to: usize) -> bool {
+        let mut st = self.st.lock().unwrap();
+        let n = st.loads.len();
+        if from >= n || to >= n || from == to {
+            return false;
+        }
+        if !st.loads[from].alive || !st.loads[to].alive || st.directives[from].is_some()
+        {
+            return false;
+        }
+        st.directives[from] = Some(to);
+        true
+    }
+
+    /// Consume the pending donation directive for worker `w`, if any.
+    pub fn take_directive(&self, w: usize) -> Option<usize> {
+        self.st.lock().unwrap().directives.get_mut(w)?.take()
+    }
+
+    /// Hand a parked session to its adopting worker. Fails (returning the
+    /// migration so the donor re-parks it locally) when the target already
+    /// exited — the check and the enqueue are atomic with
+    /// [`RebalanceHub::mark_exited`], so acceptance means the adopter will
+    /// observe it before exiting.
+    pub fn transfer(&self, m: MigratedSession) -> Result<(), MigratedSession> {
+        let mut st = self.st.lock().unwrap();
+        if m.to >= st.loads.len() || !st.loads[m.to].alive {
+            return Err(m);
+        }
+        let to = m.to;
+        st.queues[to].push_back(m);
+        self.moves.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Migrations addressed to worker `w` (drained; adoption order = send
+    /// order).
+    pub fn take_transfers(&self, w: usize) -> Vec<MigratedSession> {
+        let mut st = self.st.lock().unwrap();
+        match st.queues.get_mut(w) {
+            Some(q) => q.drain(..).collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Worker `w` is leaving its serve loop: refuse future transfers and
+    /// return any still queued for it (the exiting worker either serves
+    /// them or fails them — never drops them silently).
+    pub fn mark_exited(&self, w: usize) -> Vec<MigratedSession> {
+        let mut st = self.st.lock().unwrap();
+        if let Some(l) = st.loads.get_mut(w) {
+            l.alive = false;
+            l.live = 0;
+            l.parked = 0;
+        }
+        if let Some(d) = st.directives.get_mut(w) {
+            *d = None;
+        }
+        match st.queues.get_mut(w) {
+            Some(q) => q.drain(..).collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Drain every queued migration (the server's shutdown sweep: after all
+    /// workers joined, anything left here gets a final error record so no
+    /// client hangs).
+    pub fn drain(&self) -> Vec<MigratedSession> {
+        let mut st = self.st.lock().unwrap();
+        let mut out = Vec::new();
+        for q in st.queues.iter_mut() {
+            out.extend(q.drain(..));
+        }
+        out
+    }
+
+    /// Total accepted transfers so far.
+    pub fn moves(&self) -> u64 {
+        self.moves.load(Ordering::Relaxed)
     }
 }
 
@@ -262,5 +505,108 @@ mod tests {
         assert!(c.contains(5));
         c.clear(5);
         assert!(!c.contains(5));
+    }
+
+    #[test]
+    fn pop_timeout_distinguishes_empty_from_closed() {
+        let s = Scheduler::new(Policy::Fifo, 4);
+        // empty + open: times out
+        let t0 = std::time::Instant::now();
+        assert!(matches!(s.pop_timeout(Duration::from_millis(10)), PopOutcome::Empty));
+        assert!(t0.elapsed() >= Duration::from_millis(10));
+        // queued request: returned immediately
+        s.push(req(1, "a")).unwrap();
+        match s.pop_timeout(Duration::from_millis(10)) {
+            PopOutcome::Got(p) => assert_eq!(p.req.id, 1),
+            _ => panic!("queued request must pop"),
+        }
+        // closed + drained: Closed, without waiting out the timeout
+        s.close();
+        assert!(matches!(s.pop_timeout(Duration::from_secs(30)), PopOutcome::Closed));
+    }
+
+    fn mig(to: usize, id: u64) -> MigratedSession {
+        MigratedSession {
+            to,
+            id,
+            stream: false,
+            queued_ms: 0.0,
+            seq: 0,
+            dec: Utf8StreamDecoder::new(),
+            deadline: None,
+            snap: SessionSnapshot {
+                model: "tiny".into(),
+                engine: crate::kv::EngineState::Autoregressive {
+                    cur: id as u32,
+                    rng: [1, 2, 3, 4],
+                },
+                kv: crate::runtime::HostKv {
+                    len: 1,
+                    elem: "i32".into(),
+                    data: vec![0; 8],
+                },
+                draft_kv: None,
+                params: crate::engine::GenParams::default(),
+                out: vec![],
+                stats: crate::metrics::DecodeStats::default(),
+                wall_offset: Duration::ZERO,
+                pool: crate::ngram::PoolHandle::none(),
+            },
+        }
+    }
+
+    #[test]
+    fn hub_load_directive_transfer_lifecycle() {
+        let hub = RebalanceHub::new(2);
+        assert_eq!(hub.workers(), 2);
+        hub.report_load(0, 3, 2);
+        hub.report_load(1, 1, 0);
+        let loads = hub.loads();
+        assert_eq!((loads[0].depth(), loads[1].depth()), (5, 1));
+        assert!(loads.iter().all(|l| l.alive));
+
+        // directive: recorded once, consumed once
+        assert!(hub.direct(0, 1));
+        assert!(!hub.direct(0, 1), "second directive must wait for the first");
+        assert!(!hub.direct(0, 0), "self-donation is meaningless");
+        assert!(!hub.direct(5, 1), "unknown donor");
+        assert_eq!(hub.take_directive(0), Some(1));
+        assert_eq!(hub.take_directive(0), None);
+
+        // transfer: queued for the adopter, counted
+        assert!(hub.transfer(mig(1, 7)).is_ok());
+        assert_eq!(hub.moves(), 1);
+        let got = hub.take_transfers(1);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].id, 7);
+        assert!(hub.take_transfers(1).is_empty());
+    }
+
+    #[test]
+    fn hub_exited_worker_rejects_transfers_and_drains_pending() {
+        let hub = RebalanceHub::new(2);
+        assert!(hub.transfer(mig(1, 7)).is_ok());
+        // exit returns what was already queued...
+        let pending = hub.mark_exited(1);
+        assert_eq!(pending.len(), 1);
+        assert_eq!(pending[0].id, 7);
+        // ...and later transfers bounce back to the donor
+        let rejected = hub.transfer(mig(1, 8)).unwrap_err();
+        assert_eq!(rejected.id, 8);
+        assert!(!hub.direct(0, 1), "exited workers are not targets");
+        assert!(!hub.loads()[1].alive);
+        assert_eq!(hub.loads()[1].depth(), 0, "exit zeroes the load report");
+    }
+
+    #[test]
+    fn hub_drain_sweeps_every_queue() {
+        let hub = RebalanceHub::new(3);
+        assert!(hub.transfer(mig(1, 1)).is_ok());
+        assert!(hub.transfer(mig(2, 2)).is_ok());
+        assert!(hub.transfer(mig(2, 3)).is_ok());
+        let mut ids: Vec<u64> = hub.drain().into_iter().map(|m| m.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, vec![1, 2, 3]);
+        assert!(hub.drain().is_empty());
     }
 }

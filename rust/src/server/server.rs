@@ -14,9 +14,10 @@
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -25,7 +26,7 @@ use crate::kv::PrefixCache;
 use crate::metrics::Registry;
 use crate::ngram::NgramCacheRegistry;
 use crate::server::request::{Reply, Request, Response};
-use crate::server::scheduler::{CancelSet, Policy, Scheduler};
+use crate::server::scheduler::{CancelSet, Policy, RebalanceHub, Scheduler, WorkerLoad};
 use crate::server::worker::{Worker, WorkerConfig};
 use crate::util::json::Json;
 
@@ -47,6 +48,16 @@ pub struct ServerConfig {
     /// so an explicit `false` at either level wins. The sequential
     /// per-session path commits byte-identical token streams.
     pub batch_decode: bool,
+    /// Cross-worker session rebalancing: a server thread periodically
+    /// compares per-worker live+parked depth and moves the coldest parked
+    /// [`crate::kv::SessionSnapshot`] from the deepest worker to the
+    /// shallowest one (snapshots are runtime-portable, so the adopter
+    /// resumes byte-identically). Only meaningful with `workers > 1`; the
+    /// donor must have parked sessions, so pair it with
+    /// `WorkerConfig::kv_budget`.
+    pub rebalance: bool,
+    /// Rebalance scan interval in ms (ignored when `rebalance` is false).
+    pub rebalance_interval_ms: u64,
     pub worker: WorkerConfig,
 }
 
@@ -59,8 +70,57 @@ impl Default for ServerConfig {
             share_ngrams: true,
             ngram_ttl_ms: None,
             batch_decode: true,
+            rebalance: false,
+            rebalance_interval_ms: 50,
             worker: WorkerConfig::default(),
         }
+    }
+}
+
+/// Decision logic of the cross-worker rebalancer: equalize per-worker
+/// session depth (live + parked) by moving one parked snapshot per scan
+/// from the deepest worker with parked sessions to the shallowest live
+/// worker, whenever the gap is at least `min_gap`.
+#[derive(Debug, Clone)]
+pub struct RebalancePolicy {
+    /// minimum (donor depth - target depth) before a move pays for itself:
+    /// moving one session shrinks the gap by 2, so anything below 2 would
+    /// oscillate.
+    pub min_gap: usize,
+}
+
+impl Default for RebalancePolicy {
+    fn default() -> Self {
+        RebalancePolicy { min_gap: 2 }
+    }
+}
+
+impl RebalancePolicy {
+    /// Pick (donor, target) for one migration, or None when the cluster is
+    /// balanced (or no donor has a parked session to give away). Pure —
+    /// unit-tested directly; the rebalance thread feeds it the hub's load
+    /// report.
+    pub fn pick(&self, loads: &[WorkerLoad]) -> Option<(usize, usize)> {
+        let mut donor: Option<usize> = None;
+        let mut target: Option<usize> = None;
+        for (i, l) in loads.iter().enumerate() {
+            if !l.alive {
+                continue;
+            }
+            if l.parked > 0
+                && donor.is_none_or(|d: usize| l.depth() > loads[d].depth())
+            {
+                donor = Some(i);
+            }
+            if target.is_none_or(|t: usize| l.depth() < loads[t].depth()) {
+                target = Some(i);
+            }
+        }
+        let (d, t) = (donor?, target?);
+        if d == t || loads[d].depth() < loads[t].depth() + self.min_gap.max(1) {
+            return None;
+        }
+        Some((d, t))
     }
 }
 
@@ -108,9 +168,14 @@ pub struct ServerHandle {
     /// prefix-reuse trie shared by all workers (None when disabled via
     /// `WorkerConfig::prefix_cache = false`).
     pub prefix_cache: Option<Arc<PrefixCache>>,
+    /// cross-worker rebalance rendezvous (None when `ServerConfig::
+    /// rebalance` is off or the server runs a single worker).
+    pub rebalance: Option<Arc<RebalanceHub>>,
     cancels: Arc<CancelSet>,
     worker_joins: Vec<std::thread::JoinHandle<()>>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
+    rebalancer: Option<std::thread::JoinHandle<()>>,
+    rebalance_stop: Arc<AtomicBool>,
 }
 
 impl ServerHandle {
@@ -129,6 +194,10 @@ impl ServerHandle {
         // skip prefill on worker 1
         let prefix_cache =
             cfg.worker.prefix_cache.then(|| Arc::new(PrefixCache::with_defaults()));
+        // migrations need a donor and a distinct adopter: a single-worker
+        // server has neither, so the hub (and its idle-poll cost) is skipped
+        let rebalance = (cfg.rebalance && cfg.workers > 1)
+            .then(|| Arc::new(RebalanceHub::new(cfg.workers)));
         let (tx, rx): (Sender<Reply>, Receiver<Reply>) = channel();
 
         let mut worker_joins = Vec::new();
@@ -141,15 +210,61 @@ impl ServerHandle {
             let cancels_c = cancels.clone();
             let metrics_c = metrics.clone();
             let prefix_c = prefix_cache.clone();
+            let hub_c = rebalance.clone();
             worker_joins.push(std::thread::spawn(move || {
                 match Worker::start(wid, wcfg, caches_c, cancels_c, Some(metrics_c),
-                                    prefix_c) {
+                                    prefix_c, hub_c.clone()) {
                     Ok(w) => w.run(sched_c, tx_c),
-                    Err(e) => eprintln!("[ERROR] worker {wid} failed to start: {e}"),
+                    Err(e) => {
+                        // a worker that never ran must not stay a rebalance
+                        // target, and anything already migrated to it must
+                        // still end in a final record — not a silent hang
+                        if let Some(hub) = &hub_c {
+                            for m in hub.mark_exited(wid) {
+                                let (tail, resp) = m.into_failure(
+                                    "adopting worker failed to start");
+                                if let Some(c) = tail {
+                                    let _ = tx_c.send(Reply::Chunk(c));
+                                }
+                                let _ = tx_c.send(Reply::Done(resp));
+                            }
+                        }
+                        eprintln!("[ERROR] worker {wid} failed to start: {e}");
+                    }
                 }
             }));
         }
         drop(tx);
+
+        // rebalancer: periodically turn the hub's load report into one
+        // donation directive (deepest parked donor -> shallowest target)
+        let rebalance_stop = Arc::new(AtomicBool::new(false));
+        let rebalancer = rebalance.as_ref().map(|hub| {
+            let hub = hub.clone();
+            let stop = rebalance_stop.clone();
+            let metrics_c = metrics.clone();
+            let policy = RebalancePolicy::default();
+            let interval = Duration::from_millis(cfg.rebalance_interval_ms.max(1));
+            std::thread::spawn(move || {
+                let nap = interval.min(Duration::from_millis(25));
+                let mut slept = Duration::ZERO;
+                while !stop.load(Ordering::Relaxed) {
+                    // sleep in short naps so shutdown joins promptly even
+                    // with a long scan interval
+                    std::thread::sleep(nap);
+                    slept += nap;
+                    if slept < interval {
+                        continue;
+                    }
+                    slept = Duration::ZERO;
+                    if let Some((from, to)) = policy.pick(&hub.loads()) {
+                        if hub.direct(from, to) {
+                            metrics_c.lock().unwrap().inc("rebalance_directives", 1);
+                        }
+                    }
+                }
+            })
+        });
 
         // dispatcher: route worker replies to the submitting channel.
         // Chunks are forwarded without consuming the pending entry; the
@@ -223,9 +338,12 @@ impl ServerHandle {
             metrics,
             ngram_caches,
             prefix_cache,
+            rebalance,
             cancels,
             worker_joins,
             dispatcher: Some(dispatcher),
+            rebalancer,
+            rebalance_stop,
         })
     }
 
@@ -243,8 +361,8 @@ impl ServerHandle {
                 m.set("prefix_bytes", st.bytes as u64);
                 m.set("prefix_bytes_reused", st.bytes_reused);
             }
-            // workers write per-worker parked gauges so they never clobber
-            // each other; the endpoint reports the server-wide total
+            // workers write per-worker parked/live gauges so they never
+            // clobber each other; the endpoint reports server-wide totals
             let total: u64 = m
                 .counters
                 .iter()
@@ -252,6 +370,15 @@ impl ServerHandle {
                 .map(|(_, v)| *v)
                 .sum();
             m.set("suspended_sessions", total);
+            let live: u64 = m
+                .counters
+                .iter()
+                .filter(|(k, _)| k.starts_with("live_sessions_w"))
+                .map(|(_, v)| *v)
+                .sum();
+            m.set("live_sessions", live);
+            // queue-depth report: requests admitted by no worker yet
+            m.set("queue_depth", self.sched.depth() as u64);
         }
         let mut s = self.metrics.lock().unwrap().report();
         if let Some(reg) = &self.ngram_caches {
@@ -309,10 +436,34 @@ impl ServerHandle {
     }
 
     /// Close the queue and join all threads (drains in-flight work first).
+    /// The rebalancer stops before the queue closes, so no new migration
+    /// directives are issued while workers drain; whatever migrations are
+    /// still queued after every worker joined get a final error record —
+    /// a lost hand-off must never leave a client waiting forever.
     pub fn shutdown(mut self) {
+        self.rebalance_stop.store(true, Ordering::Relaxed);
+        if let Some(j) = self.rebalancer.take() {
+            let _ = j.join();
+        }
         self.sched.close();
         for j in self.worker_joins.drain(..) {
             let _ = j.join();
+        }
+        if let Some(hub) = &self.rebalance {
+            for m in hub.drain() {
+                self.cancels.clear(m.id);
+                let ch = self.pending.lock().unwrap().remove(&m.id);
+                if let Some(ch) = ch {
+                    // same contract as fail_parked: flush the held-back
+                    // stream tail, then the Failed record
+                    let (tail, resp) =
+                        m.into_failure("worker shut down during session migration");
+                    if let Some(c) = tail {
+                        let _ = ch.send(Reply::Chunk(c));
+                    }
+                    let _ = ch.send(Reply::Done(resp));
+                }
+            }
         }
         if let Some(d) = self.dispatcher.take() {
             let _ = d.join();
@@ -429,6 +580,59 @@ pub fn client_request(addr: &str, req_json: &str) -> Result<String> {
     let mut line = String::new();
     reader.read_line(&mut line)?;
     Ok(line.trim_end().to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(live: usize, parked: usize, alive: bool) -> WorkerLoad {
+        WorkerLoad { live, parked, alive }
+    }
+
+    #[test]
+    fn policy_moves_from_deepest_parked_to_shallowest() {
+        let p = RebalancePolicy::default();
+        // worker 1 is deepest AND has parked sessions; worker 2 is idle
+        let loads =
+            [load(2, 0, true), load(3, 3, true), load(0, 0, true), load(1, 1, true)];
+        assert_eq!(p.pick(&loads), Some((1, 2)));
+    }
+
+    #[test]
+    fn policy_is_quiet_when_balanced_or_without_donors() {
+        let p = RebalancePolicy::default();
+        // depth gap below min_gap: no move (a move of one session would
+        // just swap which worker is deeper)
+        assert_eq!(p.pick(&[load(2, 1, true), load(2, 0, true)]), None);
+        // gap exactly min_gap: the move equalizes, so it happens
+        assert_eq!(p.pick(&[load(3, 1, true), load(2, 0, true)]), Some((0, 1)));
+        // deep workers with nothing parked cannot donate
+        assert_eq!(p.pick(&[load(5, 0, true), load(0, 0, true)]), None);
+        // single worker: donor == target
+        assert_eq!(p.pick(&[load(5, 3, true)]), None);
+        assert_eq!(p.pick(&[]), None);
+    }
+
+    #[test]
+    fn policy_skips_exited_workers() {
+        let p = RebalancePolicy::default();
+        // the shallowest worker exited: next-shallowest live one is chosen
+        let loads = [load(4, 2, true), load(0, 0, false), load(1, 0, true)];
+        assert_eq!(p.pick(&loads), Some((0, 2)));
+        // the only deep worker exited: nothing to do
+        let loads = [load(4, 2, false), load(1, 0, true), load(1, 0, true)];
+        assert_eq!(p.pick(&loads), None);
+    }
+
+    #[test]
+    fn policy_min_gap_floor_prevents_oscillation() {
+        // even an explicit min_gap of 0 behaves as 1: equal depths never
+        // trigger a move
+        let p = RebalancePolicy { min_gap: 0 };
+        assert_eq!(p.pick(&[load(2, 2, true), load(2, 0, true)]), None);
+        assert_eq!(p.pick(&[load(3, 2, true), load(2, 0, true)]), Some((0, 1)));
+    }
 }
 
 /// Streaming client: sends one request, invokes `on_chunk` for every chunk

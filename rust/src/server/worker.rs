@@ -22,6 +22,7 @@
 //! streams (`rust/tests/batched_equivalence.rs`).
 
 use std::collections::{HashMap, VecDeque};
+use std::rc::Rc;
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -36,13 +37,18 @@ use crate::engine::spec_decode::SpecDecode;
 use crate::engine::{step_group, BatchStep, Decoder, DecodeSession, FinishReason,
                     StepOutcome};
 use crate::info;
-use crate::kv::{KvHandle, KvManager, PrefixCache};
+use crate::kv::{KvHandle, KvManager, PrefixCache, SessionSnapshot};
 use crate::metrics::Registry;
 use crate::ngram::{NgramCacheRegistry, PoolHandle};
 use crate::runtime::{cpu_client, Manifest, ModelRuntime};
 use crate::server::request::{Reply, Request, Response, StreamChunk};
-use crate::server::scheduler::{CancelSet, Popped, Scheduler};
+use crate::server::scheduler::{CancelSet, MigratedSession, Popped, PopOutcome,
+                               RebalanceHub, Scheduler};
 use crate::tokenizer::{ByteTokenizer, Utf8StreamDecoder};
+
+/// How long an idle worker waits in [`Scheduler::pop_timeout`] before
+/// re-checking its rebalance-hub inbox for adopted sessions.
+const ADOPT_POLL: Duration = Duration::from_millis(25);
 
 #[derive(Debug, Clone)]
 pub struct WorkerConfig {
@@ -114,6 +120,33 @@ struct ParkedSession {
     handle: KvHandle,
 }
 
+impl ParkedSession {
+    /// Repackage for a cross-worker hand-off: the revived snapshot replaces
+    /// the local [`KvHandle`], everything else travels as-is.
+    fn into_migrated(self, to: usize, snap: SessionSnapshot) -> MigratedSession {
+        MigratedSession {
+            to,
+            id: self.id,
+            stream: self.stream,
+            queued_ms: self.queued_ms,
+            seq: self.seq,
+            dec: self.dec,
+            deadline: self.deadline,
+            snap,
+        }
+    }
+
+    /// The inverse: a migration adopted (or bounced back) into the local
+    /// parked set, its snapshot parked in `kv`. The exhaustive destructure
+    /// keeps this the single place a migration's fields map back.
+    fn from_migrated(m: MigratedSession, kv: &mut KvManager) -> ParkedSession {
+        let MigratedSession { to: _, id, stream, queued_ms, seq, dec, deadline, snap } =
+            m;
+        let handle = kv.park(snap);
+        ParkedSession { id, stream, queued_ms, seq, dec, deadline, handle }
+    }
+}
+
 pub struct Worker {
     pub id: usize,
     cfg: WorkerConfig,
@@ -127,6 +160,9 @@ pub struct Worker {
     /// server metrics (batched_rounds counter + batch_size histogram);
     /// None for workers driven outside a [`crate::server::ServerHandle`].
     metrics: Option<Arc<Mutex<Registry>>>,
+    /// cross-worker rebalance rendezvous: load reports out, donation
+    /// directives and adopted sessions in. None = rebalancing disabled.
+    hub: Option<Arc<RebalanceHub>>,
 }
 
 impl Worker {
@@ -134,7 +170,8 @@ impl Worker {
                  ngram_caches: Option<Arc<NgramCacheRegistry>>,
                  cancels: Arc<CancelSet>,
                  metrics: Option<Arc<Mutex<Registry>>>,
-                 prefix: Option<Arc<PrefixCache>>) -> Result<Worker> {
+                 prefix: Option<Arc<PrefixCache>>,
+                 hub: Option<Arc<RebalanceHub>>) -> Result<Worker> {
         let manifest = Manifest::load(&cfg.artifacts_dir)?;
         let client = cpu_client()?;
         let rt = ModelRuntime::load(&client, &manifest, &cfg.model)?;
@@ -153,7 +190,37 @@ impl Worker {
             ngram_caches,
             cancels,
             metrics,
+            hub,
         })
+    }
+
+    /// The shared draft runtime for `name`, loading (and caching) it on
+    /// first use — fresh spec-decode engines and spec-decode snapshot
+    /// resumes draw from the same per-worker pool.
+    fn draft_runtime(rt: &ModelRuntime, manifest: &Manifest,
+                     drafts: &mut HashMap<String, Rc<ModelRuntime>>, name: &str)
+                     -> Result<Rc<ModelRuntime>> {
+        if let Some(d) = drafts.get(name) {
+            return Ok(d.clone());
+        }
+        let d = Rc::new(ModelRuntime::load(&rt.client, manifest, name)?);
+        drafts.insert(name.to_string(), d.clone());
+        Ok(d)
+    }
+
+    /// Resume a parked/adopted snapshot, providing a draft runtime when the
+    /// engine needs one (spec-decode).
+    fn resume_snap<'rt>(rt: &'rt ModelRuntime, manifest: &Manifest,
+                        drafts: &mut HashMap<String, Rc<ModelRuntime>>,
+                        snap: SessionSnapshot)
+                        -> Result<Box<dyn DecodeSession + 'rt>> {
+        match snap.draft_model().map(str::to_string) {
+            Some(name) => {
+                let draft = Self::draft_runtime(rt, manifest, drafts, &name)?;
+                snap.resume_with(rt, Some(draft))
+            }
+            None => snap.resume(rt),
+        }
     }
 
     fn engine_key(req: &Request) -> String {
@@ -164,7 +231,8 @@ impl Worker {
     }
 
     fn make_engine(cfg: &WorkerConfig, manifest: &Manifest, rt: &ModelRuntime,
-                   req: &Request) -> Result<Box<dyn Decoder>> {
+                   drafts: &mut HashMap<String, Rc<ModelRuntime>>, req: &Request)
+                   -> Result<Box<dyn Decoder>> {
         let (w, n, g) = req.wng.unwrap_or(cfg.wng);
         Ok(match &req.method[..] {
             "lookahead" => Box::new(Lookahead::with_wng(w, n, g)),
@@ -172,8 +240,9 @@ impl Worker {
             "jacobi" => Box::new(Jacobi::new(8)),
             "prompt_lookup" => Box::new(PromptLookup::new(8, 1)),
             "spec_decode" => {
-                let draft = ModelRuntime::load(&rt.client, manifest, &cfg.draft_model)?;
-                Box::new(SpecDecode::new(draft, 4))
+                let draft =
+                    Self::draft_runtime(rt, manifest, drafts, &cfg.draft_model)?;
+                Box::new(SpecDecode::with_shared(draft, 4))
             }
             other => return Err(anyhow!("unknown decoding method '{other}'")),
         })
@@ -224,13 +293,14 @@ impl Worker {
     /// engine can back several interleaved sessions.
     fn open<'rt>(cfg: &WorkerConfig, manifest: &Manifest, rt: &'rt ModelRuntime,
                  engines: &mut HashMap<String, Box<dyn Decoder>>,
+                 drafts: &mut HashMap<String, Rc<ModelRuntime>>,
                  caches: &Option<Arc<NgramCacheRegistry>>, tok: &ByteTokenizer,
                  popped: Popped) -> Result<LiveSession<'rt>, (u64, String)> {
         let req = popped.req;
         let rid = req.id;
         let key = Self::engine_key(&req);
         if !engines.contains_key(&key) {
-            let engine = Self::make_engine(cfg, manifest, rt, &req)
+            let engine = Self::make_engine(cfg, manifest, rt, drafts, &req)
                 .map_err(|e| (rid, e.to_string()))?;
             engines.insert(key.clone(), engine);
         }
@@ -446,7 +516,9 @@ impl Worker {
 
     /// Revive the longest-parked session back onto the device. Returns
     /// false only when the reply channel is gone (server shut down).
-    fn revive_one<'rt>(rt: &'rt ModelRuntime, live: &mut Vec<LiveSession<'rt>>,
+    fn revive_one<'rt>(rt: &'rt ModelRuntime, manifest: &Manifest,
+                       drafts: &mut HashMap<String, Rc<ModelRuntime>>,
+                       live: &mut Vec<LiveSession<'rt>>,
                        parked: &mut VecDeque<ParkedSession>, kv: &mut KvManager,
                        cancels: &CancelSet, replies: &Sender<Reply>,
                        metrics: &Option<Arc<Mutex<Registry>>>) -> bool {
@@ -454,7 +526,7 @@ impl Worker {
         let resumed = kv
             .revive(p.handle)
             .ok_or_else(|| anyhow!("parked session {} lost its snapshot", p.id))
-            .and_then(|snap| snap.resume(rt));
+            .and_then(|snap| Self::resume_snap(rt, manifest, drafts, snap));
         match resumed {
             Ok(sess) => {
                 if let Some(m) = metrics {
@@ -506,7 +578,16 @@ impl Worker {
             };
             let Some(p) = parked.remove(i) else { break };
             cancels.clear(p.id);
-            let Some(snap) = kv.revive(p.handle) else { continue };
+            let Some(snap) = kv.revive(p.handle) else {
+                // the snapshot is gone (regression: this used to `continue`
+                // straight past the entry, leaving the client waiting on a
+                // stream that would never end) — the contract is that every
+                // request gets a final record, so fail it explicitly
+                if !Self::fail_parked(p, cancels, replies) {
+                    return false;
+                }
+                continue;
+            };
             let mut stats = snap.stats.clone();
             snap.pool.fill_stats(&mut stats);
             stats.wall = snap.wall_offset;
@@ -529,6 +610,66 @@ impl Worker {
             }
         }
         true
+    }
+
+    /// Final (Failed) record for a parked session whose snapshot is lost:
+    /// flush the held-back stream-decoder tail, then emit the error record
+    /// — the client must never hang on a dropped entry. Returns false when
+    /// the reply channel is gone.
+    fn fail_parked(p: ParkedSession, cancels: &CancelSet,
+                   replies: &Sender<Reply>) -> bool {
+        cancels.clear(p.id);
+        let ParkedSession { id, stream, seq, mut dec, .. } = p;
+        if stream {
+            let tail = dec.finish();
+            if !tail.is_empty() {
+                let _ = replies.send(Reply::Chunk(StreamChunk {
+                    id,
+                    seq: seq + 1,
+                    delta: tail,
+                }));
+            }
+        }
+        let resp = Response::err(id, format!("parked session {id} lost its snapshot"));
+        replies.send(Reply::Done(resp)).is_ok()
+    }
+
+    /// Donate the coldest (longest-parked) session to worker `to` through
+    /// the rebalance hub. If the target exited between the directive and
+    /// the hand-off, the session is re-parked locally — a migration never
+    /// strands a request. Returns false when the reply channel is gone.
+    fn donate(to: usize, parked: &mut VecDeque<ParkedSession>, kv: &mut KvManager,
+              hub: &RebalanceHub, cancels: &CancelSet, replies: &Sender<Reply>,
+              metrics: &Option<Arc<Mutex<Registry>>>) -> bool {
+        let Some(p) = parked.pop_front() else { return true };
+        let Some(snap) = kv.revive(p.handle) else {
+            // same contract as sweep_parked: a lost snapshot still yields a
+            // final record
+            return Self::fail_parked(p, cancels, replies);
+        };
+        match hub.transfer(p.into_migrated(to, snap)) {
+            Ok(()) => {
+                if let Some(m) = metrics {
+                    m.lock().unwrap().inc("rebalanced_sessions", 1);
+                }
+            }
+            Err(m) => {
+                // target gone: re-park at the front (it stays the coldest)
+                parked.push_front(ParkedSession::from_migrated(m, kv));
+            }
+        }
+        true
+    }
+
+    /// Adopt a session migrated here: park the snapshot in the local
+    /// [`KvManager`]; the normal revive loop restores it to the device when
+    /// a slot frees (or the parked sweeps retire it).
+    fn adopt(m: MigratedSession, parked: &mut VecDeque<ParkedSession>,
+             kv: &mut KvManager, metrics: &Option<Arc<Mutex<Registry>>>) {
+        if let Some(reg) = metrics {
+            reg.lock().unwrap().inc("rebalance_adopted", 1);
+        }
+        parked.push_back(ParkedSession::from_migrated(m, kv));
     }
 
     /// Deliver the final record for a finished/cancelled/failed session.
@@ -566,34 +707,70 @@ impl Worker {
     /// revived FIFO into freed slots, and — while the budget stays
     /// saturated — rotated one per round so every parked session keeps
     /// making progress (time-slicing through the suspend/resume path).
+    ///
+    /// With a rebalance hub, every round additionally adopts sessions
+    /// migrated here, publishes this worker's load, and honors donation
+    /// directives by handing its coldest parked snapshot to the assigned
+    /// worker; idle workers poll the scheduler with a timeout so adoption
+    /// still happens while the request queue is empty.
     pub fn run(self, sched: Arc<Scheduler>, replies: Sender<Reply>) {
         info!("worker",
               "worker {} ready (model={}, time_slice={}, max_live={}, batch={}, \
-               kv_budget={})",
+               kv_budget={}, rebalance={})",
               self.id, self.cfg.model, self.cfg.time_slice, self.cfg.max_live,
-              self.cfg.batch_decode, self.cfg.kv_budget);
-        let Worker { id, cfg, manifest, rt, tok, ngram_caches, cancels, metrics } =
+              self.cfg.batch_decode, self.cfg.kv_budget, self.hub.is_some());
+        let Worker { id, cfg, manifest, rt, tok, ngram_caches, cancels, metrics, hub } =
             self;
         let max_live = cfg.max_live.max(1);
         let slice = cfg.time_slice.max(1);
         let budget = if cfg.kv_budget == 0 { usize::MAX } else { cfg.kv_budget };
         let mut engines: HashMap<String, Box<dyn Decoder>> = HashMap::new();
+        let mut drafts: HashMap<String, Rc<ModelRuntime>> = HashMap::new();
         let mut live: Vec<LiveSession<'_>> = Vec::new();
         let mut parked: VecDeque<ParkedSession> = VecDeque::new();
         let mut kv = KvManager::new();
         'serve: loop {
+            // -- adoption: sessions other workers migrated here join the
+            //    parked set (counted against max_live by admission) --------
+            if let Some(hub) = &hub {
+                for m in hub.take_transfers(id) {
+                    Self::adopt(m, &mut parked, &mut kv, &metrics);
+                }
+            }
             // -- admission: top up the live + parked set ---------------------
             while live.len() + parked.len() < max_live {
                 let idle = live.is_empty() && parked.is_empty();
-                let popped = if idle { sched.pop() } else { sched.try_pop() };
+                let popped = match (idle, &hub) {
+                    (false, _) => sched.try_pop(),
+                    (true, None) => sched.pop(),
+                    // idle + hub: a bounded wait, so migrations addressed
+                    // here are adopted even while no request is queued
+                    (true, Some(hub)) => match sched.pop_timeout(ADOPT_POLL) {
+                        PopOutcome::Got(p) => Some(p),
+                        PopOutcome::Empty => None,
+                        PopOutcome::Closed => {
+                            // atomically stop being a migration target, then
+                            // serve whatever was already addressed here —
+                            // an accepted hand-off is never dropped
+                            let pending = hub.mark_exited(id);
+                            if pending.is_empty() {
+                                break 'serve;
+                            }
+                            for m in pending {
+                                Self::adopt(m, &mut parked, &mut kv, &metrics);
+                            }
+                            break;
+                        }
+                    },
+                };
                 let Some(popped) = popped else {
-                    if idle {
+                    if idle && hub.is_none() {
                         break 'serve; // scheduler closed and drained
                     }
                     break; // queue momentarily empty; keep stepping
                 };
-                match Self::open(&cfg, &manifest, &rt, &mut engines, &ngram_caches,
-                                 &tok, popped) {
+                match Self::open(&cfg, &manifest, &rt, &mut engines, &mut drafts,
+                                 &ngram_caches, &tok, popped) {
                     Ok(ls) => {
                         live.push(ls);
                         // enforce the device budget as each session opens
@@ -648,8 +825,9 @@ impl Worker {
             }
             // -- revive parked sessions into freed device slots --------------
             while live.len() < budget && !parked.is_empty() {
-                if !Self::revive_one(&rt, &mut live, &mut parked, &mut kv, &cancels,
-                                     &replies, &metrics) {
+                if !Self::revive_one(&rt, &manifest, &mut drafts, &mut live,
+                                     &mut parked, &mut kv, &cancels, &replies,
+                                     &metrics) {
                     break 'serve;
                 }
             }
@@ -657,20 +835,241 @@ impl Worker {
             //    the coldest live one out so the parked set keeps stepping ---
             if !parked.is_empty()
                 && Self::park_one(&mut live, &mut parked, &mut kv, &metrics)
-                && !Self::revive_one(&rt, &mut live, &mut parked, &mut kv, &cancels,
-                                     &replies, &metrics)
+                && !Self::revive_one(&rt, &manifest, &mut drafts, &mut live,
+                                     &mut parked, &mut kv, &cancels, &replies,
+                                     &metrics)
             {
                 break 'serve;
             }
+            // -- rebalance: publish this round's load; honor a donation
+            //    directive by shipping the coldest parked snapshot ----------
+            if let Some(hub) = &hub {
+                hub.report_load(id, live.len(), parked.len());
+                if let Some(to) = hub.take_directive(id) {
+                    if !parked.is_empty()
+                        && !Self::donate(to, &mut parked, &mut kv, hub, &cancels,
+                                         &replies, &metrics)
+                    {
+                        break 'serve;
+                    }
+                }
+            }
             if let Some(m) = &metrics {
-                // per-worker gauge key — concurrent workers must not clobber
+                // per-worker gauge keys — concurrent workers must not clobber
                 // each other; the server report sums these into the
-                // `suspended_sessions` total
-                m.lock()
-                    .unwrap()
-                    .set(&format!("suspended_sessions_w{id}"), parked.len() as u64);
+                // `suspended_sessions` / `live_sessions` totals
+                let mut m = m.lock().unwrap();
+                m.set(&format!("suspended_sessions_w{id}"), parked.len() as u64);
+                m.set(&format!("live_sessions_w{id}"), live.len() as u64);
             }
         }
+        // -- shutdown path ---------------------------------------------------
+        if let Some(hub) = &hub {
+            // refuse any further migrations; a hand-off that raced the exit
+            // still gets a final record (best-effort — the shutdown sweep in
+            // `ServerHandle::shutdown` is the backstop)
+            for m in hub.mark_exited(id) {
+                cancels.clear(m.id);
+                let (tail, resp) =
+                    m.into_failure("worker shut down during session migration");
+                if let Some(c) = tail {
+                    let _ = replies.send(Reply::Chunk(c));
+                }
+                let _ = replies.send(Reply::Done(resp));
+            }
+        }
+        if let Some(m) = &metrics {
+            // zero this worker's gauges: they are set every round, and a
+            // worker that exits while the server keeps running would
+            // otherwise inflate the summed report forever
+            let mut m = m.lock().unwrap();
+            m.set(&format!("suspended_sessions_w{id}"), 0);
+            m.set(&format!("live_sessions_w{id}"), 0);
+        }
         info!("worker", "worker {} shutting down", id);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::GenParams;
+    use crate::kv::EngineState;
+    use crate::metrics::DecodeStats;
+    use crate::runtime::HostKv;
+    use std::sync::mpsc::channel;
+
+    fn snapshot(id: u64) -> SessionSnapshot {
+        SessionSnapshot {
+            model: "tiny".into(),
+            engine: EngineState::Autoregressive { cur: id as u32, rng: [1, 2, 3, 4] },
+            kv: HostKv { len: 1, elem: "i32".into(), data: vec![0; 8] },
+            draft_kv: None,
+            params: GenParams::default(),
+            out: vec![1, 2],
+            stats: DecodeStats::default(),
+            wall_offset: Duration::ZERO,
+            pool: PoolHandle::none(),
+        }
+    }
+
+    /// A ParkedSession whose KvHandle no longer resolves (the lost-snapshot
+    /// scenario): park a snapshot, revive it out from under the handle.
+    fn lost_entry(kv: &mut KvManager, id: u64, stream: bool,
+                  dec: Utf8StreamDecoder, seq: u64) -> ParkedSession {
+        let handle = kv.park(snapshot(id));
+        assert!(kv.revive(handle).is_some());
+        ParkedSession {
+            id,
+            stream,
+            queued_ms: 0.0,
+            seq,
+            dec,
+            deadline: None,
+            handle,
+        }
+    }
+
+    #[test]
+    fn lost_parked_snapshot_still_emits_a_final_record() {
+        // regression: sweep_parked used to `continue` on a lost snapshot,
+        // dropping the entry with no record — the client waited forever
+        let mut kv = KvManager::new();
+        let mut dec = Utf8StreamDecoder::new();
+        // held-back partial UTF-8 sequence (first 2 bytes of '€'): the
+        // sweep must flush the decoder tail before the final record
+        assert_eq!(dec.push(&[0xE2, 0x82]), "");
+        let mut parked = VecDeque::new();
+        parked.push_back(lost_entry(&mut kv, 42, true, dec, 3));
+        let cancels = CancelSet::new();
+        cancels.request(42);
+        let (tx, rx) = channel();
+        let tok = ByteTokenizer::new();
+
+        assert!(Worker::sweep_parked(&mut parked, &mut kv, &tok, &cancels, &tx));
+        assert!(parked.is_empty(), "the lost entry must be dropped");
+        match rx.recv().unwrap() {
+            Reply::Chunk(c) => {
+                assert_eq!((c.id, c.seq), (42, 4));
+                assert!(!c.delta.is_empty(), "held-back bytes must flush");
+            }
+            Reply::Done(r) => panic!("tail chunk must precede the record: {r:?}"),
+        }
+        match rx.recv().unwrap() {
+            Reply::Done(r) => {
+                assert_eq!(r.id, 42);
+                assert!(r.error.is_some(), "a lost snapshot is a Failed record");
+            }
+            Reply::Chunk(c) => panic!("expected the final record, got chunk {c:?}"),
+        }
+        assert!(rx.try_recv().is_err(), "exactly one final record");
+        assert!(!cancels.contains(42), "the cancel mark must be swept");
+    }
+
+    #[test]
+    fn lost_snapshot_on_non_streaming_session_fails_without_chunks() {
+        let mut kv = KvManager::new();
+        let mut parked = VecDeque::new();
+        parked.push_back(lost_entry(&mut kv, 7, false, Utf8StreamDecoder::new(), 0));
+        let cancels = CancelSet::new();
+        cancels.request(7);
+        let (tx, rx) = channel();
+        let tok = ByteTokenizer::new();
+        assert!(Worker::sweep_parked(&mut parked, &mut kv, &tok, &cancels, &tx));
+        match rx.recv().unwrap() {
+            Reply::Done(r) => assert!(r.error.is_some()),
+            Reply::Chunk(c) => panic!("non-streaming sweep must not chunk: {c:?}"),
+        }
+    }
+
+    #[test]
+    fn sweep_leaves_healthy_parked_sessions_alone() {
+        // a live (uncancelled, undeadlined) parked entry must survive the
+        // sweep even while a lost one next to it is failed
+        let mut kv = KvManager::new();
+        let healthy_handle = kv.park(snapshot(1));
+        let mut parked = VecDeque::new();
+        parked.push_back(ParkedSession {
+            id: 1,
+            stream: false,
+            queued_ms: 0.0,
+            seq: 0,
+            dec: Utf8StreamDecoder::new(),
+            deadline: None,
+            handle: healthy_handle,
+        });
+        parked.push_back(lost_entry(&mut kv, 2, false, Utf8StreamDecoder::new(), 0));
+        let cancels = CancelSet::new();
+        cancels.request(2);
+        let (tx, rx) = channel();
+        let tok = ByteTokenizer::new();
+        assert!(Worker::sweep_parked(&mut parked, &mut kv, &tok, &cancels, &tx));
+        assert_eq!(parked.len(), 1);
+        assert_eq!(parked[0].id, 1);
+        assert_eq!(rx.recv().unwrap().id(), 2);
+    }
+
+    #[test]
+    fn donate_reparks_locally_when_the_target_exited() {
+        let hub = RebalanceHub::new(2);
+        hub.mark_exited(1);
+        let mut kv = KvManager::new();
+        let handle = kv.park(snapshot(9));
+        let mut parked = VecDeque::new();
+        parked.push_back(ParkedSession {
+            id: 9,
+            stream: false,
+            queued_ms: 0.0,
+            seq: 0,
+            dec: Utf8StreamDecoder::new(),
+            deadline: None,
+            handle,
+        });
+        let cancels = CancelSet::new();
+        let (tx, rx) = channel();
+        assert!(Worker::donate(1, &mut parked, &mut kv, &hub, &cancels, &tx, &None));
+        assert_eq!(hub.moves(), 0, "no transfer must be recorded");
+        assert_eq!(parked.len(), 1, "the session must be re-parked locally");
+        assert_eq!(kv.parked_count(), 1);
+        // the re-parked session is intact: its snapshot still revives
+        let snap = kv.revive(parked[0].handle).unwrap();
+        assert_eq!(snap.out, vec![1, 2]);
+        assert!(rx.try_recv().is_err(), "no record for a live session");
+    }
+
+    #[test]
+    fn donate_and_adopt_hand_a_session_across_the_hub() {
+        let hub = RebalanceHub::new(2);
+        let mut kv_a = KvManager::new();
+        let handle = kv_a.park(snapshot(5));
+        let mut parked_a = VecDeque::new();
+        parked_a.push_back(ParkedSession {
+            id: 5,
+            stream: true,
+            queued_ms: 1.5,
+            seq: 2,
+            dec: Utf8StreamDecoder::new(),
+            deadline: None,
+            handle,
+        });
+        let cancels = CancelSet::new();
+        let (tx, _rx) = channel();
+        assert!(Worker::donate(1, &mut parked_a, &mut kv_a, &hub, &cancels, &tx,
+                               &None));
+        assert!(parked_a.is_empty());
+        assert_eq!(kv_a.parked_count(), 0, "the donor no longer owns the snapshot");
+        assert_eq!(hub.moves(), 1);
+
+        // the adopter picks it up with streaming state intact
+        let mut kv_b = KvManager::new();
+        let mut parked_b = VecDeque::new();
+        for m in hub.take_transfers(1) {
+            Worker::adopt(m, &mut parked_b, &mut kv_b, &None);
+        }
+        assert_eq!(parked_b.len(), 1);
+        let p = &parked_b[0];
+        assert_eq!((p.id, p.stream, p.seq), (5, true, 2));
+        let snap = kv_b.revive(p.handle).unwrap();
+        assert_eq!(snap.out, vec![1, 2], "the snapshot migrated byte-intact");
     }
 }

@@ -269,6 +269,8 @@ fn server_cfg(artifacts: String, batch: bool, max_live: usize, time_slice: usize
         share_ngrams: false,
         ngram_ttl_ms: None,
         batch_decode: batch,
+        rebalance: false,
+        rebalance_interval_ms: 50,
         worker: WorkerConfig {
             artifacts_dir: artifacts,
             model: "tiny".into(),

@@ -1,31 +1,41 @@
 //! KV-manager suite (simulated artifacts — runs without PJRT).
 //!
-//! Pins the three tentpole claims of the `kv` subsystem:
+//! Pins the tentpole claims of the `kv` subsystem:
 //!   1. **Snapshot/restore**: a session suspended mid-generation and
 //!      resumed — in-process, through the versioned on-disk snapshot, and
 //!      on a *different* runtime instance (worker migration) — produces
 //!      byte-identical tokens, deltas, and stats to an uninterrupted run,
-//!      for the autoregressive and lookahead engines (prop-tested over
-//!      random prompts/budgets/suspend points).
+//!      for ALL FIVE engines (prop-tested over random prompts/budgets/
+//!      suspend points; spec-decode additionally round-trips its draft
+//!      cache through the snapshot's `draft_kv` section).
 //!   2. **Prefix reuse**: requests sharing a long prompt prefix fork a
 //!      cached snapshot (`prefix_hits >= 1`), skip the full prefill, and
 //!      still decode byte-identically to a cold runtime.
 //!   3. **Suspend/resume serving**: a worker with `kv_budget` smaller than
 //!      the offered load completes every request with no cross-talk, and
 //!      the `kv_snapshots`/`kv_restores`/`suspended_sessions` metrics flow
-//!      through the dispatcher metrics endpoint.
+//!      through the dispatcher metrics endpoint — plus a rotation-fairness
+//!      property test under randomized open/cancel schedules.
+//!   4. **Cross-worker rebalancing**: a parked snapshot donated through the
+//!      `RebalanceHub` is adopted and finished byte-identically by another
+//!      worker, and the client always receives its final record.
 
+use std::collections::HashMap;
+use std::rc::Rc;
 use std::sync::Arc;
 
 use lookahead::engine::autoregressive::AutoRegressive;
 use lookahead::engine::jacobi::Jacobi;
 use lookahead::engine::lookahead::Lookahead;
-use lookahead::engine::{Decoder, FinishReason, GenParams, StepOutcome};
+use lookahead::engine::prompt_lookup::PromptLookup;
+use lookahead::engine::spec_decode::SpecDecode;
+use lookahead::engine::{DecodeSession, Decoder, FinishReason, GenParams, StepOutcome};
 use lookahead::kv::{KvManager, PrefixCache, SessionSnapshot};
 use lookahead::ngram::PoolHandle;
-use lookahead::runtime::sim::ensure_sim_artifacts;
+use lookahead::runtime::sim::{ensure_sim_artifacts, ensure_slow_sim_artifacts};
 use lookahead::runtime::{cpu_client, Manifest, ModelRuntime};
-use lookahead::server::{Policy, Request, ServerConfig, ServerHandle, WorkerConfig};
+use lookahead::server::{Policy, Reply, Request, Response, ResponseStream,
+                        ServerConfig, ServerHandle, WorkerConfig};
 use lookahead::tokenizer::{ByteTokenizer, BOS_ID};
 use lookahead::util::prop::forall;
 use lookahead::util::rng::Rng;
@@ -63,6 +73,22 @@ fn reference(engine: &dyn Decoder, rt: &ModelRuntime, prompt: &[u32], p: &GenPar
     (out, deltas, reason)
 }
 
+/// Resume a snapshot on `rt`, loading a draft runtime when the engine
+/// needs one (the worker's `resume_snap` equivalent for tests).
+fn resume_any<'rt>(snap: SessionSnapshot, rt: &'rt ModelRuntime)
+                   -> Box<dyn DecodeSession + 'rt> {
+    match snap.draft_model().map(str::to_string) {
+        Some(name) => {
+            let dir = ensure_sim_artifacts().unwrap();
+            let manifest = Manifest::load(&dir).unwrap();
+            let draft =
+                Rc::new(ModelRuntime::load(&rt.client, &manifest, &name).unwrap());
+            snap.resume_with(rt, Some(draft)).unwrap()
+        }
+        None => snap.resume(rt).unwrap(),
+    }
+}
+
 /// Same request, suspended after `k` steps, optionally round-tripped
 /// through the on-disk format, resumed on `resume_rt`.
 fn with_suspend(engine: &dyn Decoder, rt: &ModelRuntime, resume_rt: &ModelRuntime,
@@ -98,7 +124,7 @@ fn with_suspend(engine: &dyn Decoder, rt: &ModelRuntime, resume_rt: &ModelRuntim
     } else {
         snap
     };
-    let mut sess = snap.resume(resume_rt).unwrap();
+    let mut sess = resume_any(snap, resume_rt);
     let (rest, reason) = drain(&mut sess);
     deltas.extend(rest);
     let (out, _) = sess.into_output();
@@ -121,10 +147,19 @@ fn assert_identical(tag: &str,
     assert_eq!(sa.prompt_tokens, sb.prompt_tokens, "{tag}: prompt_tokens");
 }
 
+/// All five engines — every one is suspendable on cache_io-equipped
+/// artifacts since the universal-suspend change.
 fn engines() -> Vec<(&'static str, Box<dyn Decoder>)> {
+    let dir = ensure_sim_artifacts().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let client = cpu_client().unwrap();
+    let draft = ModelRuntime::load(&client, &manifest, "draft").unwrap();
     vec![
         ("autoregressive", Box::new(AutoRegressive::new())),
         ("lookahead", Box::new(Lookahead::with_wng(5, 3, 5))),
+        ("jacobi", Box::new(Jacobi::new(8))),
+        ("prompt_lookup", Box::new(PromptLookup::new(8, 1))),
+        ("spec_decode", Box::new(SpecDecode::new(draft, 4))),
     ]
 }
 
@@ -149,16 +184,44 @@ fn suspend_resume_is_byte_identical() {
 }
 
 #[test]
-fn unsupported_engines_report_not_suspendable() {
+fn every_engine_is_suspendable_on_cache_io_artifacts() {
     let rt = sim_rt();
     let tok = ByteTokenizer::new();
     let prompt = tok.encode_with_bos("Q: what is 1 + 1?\n");
-    let engine = Jacobi::new(8);
-    let mut sess = engine.begin(&rt, &prompt, &params(8), PoolHandle::none()).unwrap();
-    assert!(!sess.suspendable());
-    assert!(sess.suspend().is_err());
-    // session stays usable after the rejected suspend
-    assert!(sess.step().is_ok());
+    for (name, engine) in engines() {
+        let pool = PoolHandle::for_spec(engine.pool_spec());
+        let sess = engine.begin(&rt, &prompt, &params(8), pool).unwrap();
+        assert!(sess.suspendable(), "{name} must be suspendable under --kv-budget");
+    }
+}
+
+#[test]
+fn spec_decode_resume_demands_its_draft_runtime() {
+    let rt = sim_rt();
+    let tok = ByteTokenizer::new();
+    let prompt = tok.encode_with_bos("def g(a):\n    return a");
+    let (_, engine) = engines().pop().unwrap();
+    let mut sess = engine.begin(&rt, &prompt, &params(16), PoolHandle::none()).unwrap();
+    sess.step().unwrap();
+    let snap = sess.suspend().unwrap();
+    assert_eq!(snap.draft_model(), Some("draft"));
+    assert!(snap.draft_kv.is_some(), "spec suspend must capture the draft cache");
+    // resume() without a draft runtime must error, not panic or corrupt
+    let bytes = snap.to_bytes();
+    assert!(SessionSnapshot::from_bytes(&bytes).unwrap().resume(&rt).is_err());
+    // a draft runtime for the wrong model is rejected
+    let dir = ensure_sim_artifacts().unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let wrong = Rc::new(ModelRuntime::load(&rt.client, &manifest, "tiny").unwrap());
+    let snap = SessionSnapshot::from_bytes(&bytes).unwrap();
+    assert!(snap.resume_with(&rt, Some(wrong)).is_err());
+    // the right one resumes and finishes like the uninterrupted run
+    let (_, engine) = engines().pop().unwrap();
+    let want = reference(engine.as_ref(), &rt, &prompt, &params(16));
+    let mut sess = resume_any(SessionSnapshot::from_bytes(&bytes).unwrap(), &rt);
+    let (_, _) = drain(&mut sess);
+    let (out, _) = sess.into_output();
+    assert_eq!(out.tokens, want.0.tokens);
 }
 
 #[test]
@@ -308,15 +371,18 @@ fn short_prompts_bypass_the_prefix_cache() {
 // serving: budgeted suspend/resume + metrics endpoint
 // ---------------------------------------------------------------------------
 
-fn serve_cfg(dir: &str, max_live: usize, kv_budget: usize, prefix: bool)
+fn serve_cfg(dir: &str, workers: usize, max_live: usize, kv_budget: usize,
+             prefix: bool, rebalance: bool, rebalance_interval_ms: u64)
              -> ServerConfig {
     ServerConfig {
-        workers: 1,
+        workers,
         policy: Policy::Fifo,
         queue_depth: 64,
         share_ngrams: false,
         ngram_ttl_ms: None,
         batch_decode: true,
+        rebalance,
+        rebalance_interval_ms,
         worker: WorkerConfig {
             artifacts_dir: dir.into(),
             model: "tiny".into(),
@@ -330,18 +396,49 @@ fn serve_cfg(dir: &str, max_live: usize, kv_budget: usize, prefix: bool)
     }
 }
 
+/// The serving-side engine equivalents (must mirror `Worker::make_engine`).
+fn engine_for(method: &str, rt: &ModelRuntime) -> Box<dyn Decoder> {
+    match method {
+        "lookahead" => Box::new(Lookahead::with_wng(5, 3, 5)),
+        "jacobi" => Box::new(Jacobi::new(8)),
+        "prompt_lookup" => Box::new(PromptLookup::new(8, 1)),
+        "spec_decode" => {
+            let dir = ensure_sim_artifacts().unwrap();
+            let manifest = Manifest::load(&dir).unwrap();
+            let draft = ModelRuntime::load(&rt.client, &manifest, "draft").unwrap();
+            Box::new(SpecDecode::new(draft, 4))
+        }
+        _ => Box::new(AutoRegressive::new()),
+    }
+}
+
+/// Drain a reply stream: (concatenated chunk deltas, final record).
+fn collect(rx: ResponseStream) -> (String, Response) {
+    let mut cat = String::new();
+    loop {
+        match rx.recv().unwrap() {
+            Reply::Chunk(c) => cat.push_str(&c.delta),
+            Reply::Done(r) => return (cat, r),
+        }
+    }
+}
+
 #[test]
 fn kv_budget_serves_overload_with_no_cross_talk() {
     let dir = ensure_sim_artifacts().unwrap();
     let dir_s = dir.to_string_lossy().into_owned();
-    // budget of 2 device caches, 4 concurrent sessions offered
-    let h = ServerHandle::start(serve_cfg(&dir_s, 4, 2, false)).unwrap();
+    // budget of 2 device caches, 6 concurrent sessions offered — one per
+    // engine plus repeats, so every engine exercises the park/revive path
+    let h = ServerHandle::start(serve_cfg(&dir_s, 1, 6, 2, false, false, 50)).unwrap();
 
     let prompts = [
         ("def f_a(x):\n    return x", "autoregressive"),
         ("def f_b(x, y):\n    return y", "autoregressive"),
         ("Q: what is 12 + 34?\n", "lookahead"),
         ("Once upon a time there was", "lookahead"),
+        ("for i in range(10): print(i)", "jacobi"),
+        ("abc abc abc abc abc", "prompt_lookup"),
+        ("def spec_tgt(n):\n    return n", "spec_decode"),
     ];
     let rxs: Vec<_> = prompts
         .iter()
@@ -362,10 +459,7 @@ fn kv_budget_serves_overload_with_no_cross_talk() {
     let tok = ByteTokenizer::new();
     for ((prompt, method), resp) in prompts.iter().zip(&resps) {
         assert!(resp.error.is_none(), "{method} '{prompt}': {:?}", resp.error);
-        let engine: Box<dyn Decoder> = match *method {
-            "lookahead" => Box::new(Lookahead::with_wng(5, 3, 5)),
-            _ => Box::new(AutoRegressive::new()),
-        };
+        let engine = engine_for(method, &rt);
         let ids = tok.encode_with_bos(prompt);
         let (want, _, _) = reference(engine.as_ref(), &rt, &ids, &params(40));
         assert_eq!(resp.text, want.text, "{method} '{prompt}' diverged under budget");
@@ -384,6 +478,93 @@ fn kv_budget_serves_overload_with_no_cross_talk() {
     assert!(report.contains("kv_snapshots"), "metrics endpoint must report kv:\n{report}");
     assert!(report.contains("suspended_sessions"),
             "metrics endpoint must carry the suspended gauge:\n{report}");
+    assert!(report.contains("live_sessions"),
+            "metrics endpoint must carry the queue-depth report:\n{report}");
+
+    // worker shutdown must zero its gauges (they are summed by the report:
+    // a stale per-worker value would inflate it forever)
+    let metrics = h.metrics.clone();
+    h.shutdown();
+    let m = metrics.lock().unwrap();
+    assert_eq!(m.counter("suspended_sessions_w0"), 0,
+               "suspended gauge must be zeroed on worker exit");
+    assert_eq!(m.counter("live_sessions_w0"), 0,
+               "live gauge must be zeroed on worker exit");
+}
+
+#[test]
+fn prop_rotation_fairness_under_budget_saturation() {
+    // Sustained kv-budget saturation with randomized open/cancel schedules
+    // across all five engines: every uncancelled session must finish with
+    // output byte-identical to a solo run (i.e. every parked session keeps
+    // making progress — a park/revive livelock would hang this test), and
+    // every cancelled session must still get a well-formed final record.
+    let dir = ensure_sim_artifacts().unwrap();
+    let dir_s = dir.to_string_lossy().into_owned();
+    let h = ServerHandle::start(serve_cfg(&dir_s, 1, 8, 2, false, false, 50)).unwrap();
+    let rt = sim_rt();
+    let tok = ByteTokenizer::new();
+    let methods =
+        ["autoregressive", "lookahead", "jacobi", "prompt_lookup", "spec_decode"];
+    let prompts = [
+        "def rotate_a(x):\n    return x + 1",
+        "Q: how many rounds until fairness?\n",
+        "abc abc abc abc abc abc",
+        "Once upon a budget there was a queue",
+    ];
+    let mut solo: HashMap<(usize, usize), lookahead::engine::GenOutput> =
+        HashMap::new();
+    let mut rng = Rng::new(0xFA13);
+    for round in 0..5u32 {
+        let n = rng.range(4, 9); // oversubscribe the budget of 2
+        let mut subs = Vec::new();
+        for _ in 0..n {
+            let (mi, pi) = (rng.below(methods.len()), rng.below(prompts.len()));
+            let stream = rng.below(2) == 1;
+            let cancel = rng.below(4) == 0;
+            let rx = h
+                .submit(Request {
+                    prompt: prompts[pi].into(),
+                    max_tokens: 24,
+                    method: methods[mi].into(),
+                    stream,
+                    ..Default::default()
+                })
+                .unwrap();
+            subs.push((mi, pi, stream, cancel, rx));
+        }
+        for (_, _, _, cancel, rx) in &subs {
+            if *cancel {
+                h.cancel(rx.id); // races admission/steps on purpose
+            }
+        }
+        for (mi, pi, stream, cancelled, rx) in subs {
+            let (cat, r) = collect(rx);
+            assert!(r.error.is_none(),
+                    "round {round} {}: {:?}", methods[mi], r.error);
+            assert!(!r.finish.is_empty(),
+                    "round {round} {}: record must carry a finish reason",
+                    methods[mi]);
+            if stream {
+                assert_eq!(cat, r.text,
+                           "round {round} {}: chunks must concatenate to the \
+                            final text", methods[mi]);
+            }
+            if !cancelled {
+                let want = solo.entry((mi, pi)).or_insert_with(|| {
+                    let engine = engine_for(methods[mi], &rt);
+                    let ids = tok.encode_with_bos(prompts[pi]);
+                    reference(engine.as_ref(), &rt, &ids, &params(24)).0
+                });
+                assert_eq!(r.text, want.text,
+                           "round {round}: {} x '{}' diverged under rotation",
+                           methods[mi], prompts[pi]);
+                assert_eq!(r.tokens, want.stats.generated_tokens);
+            }
+        }
+    }
+    let snaps = h.metrics.lock().unwrap().counter("kv_snapshots");
+    assert!(snaps >= 1, "the schedule must actually saturate the budget");
     h.shutdown();
 }
 
@@ -391,7 +572,7 @@ fn kv_budget_serves_overload_with_no_cross_talk() {
 fn serving_prefix_hits_flow_through_metrics() {
     let dir = ensure_sim_artifacts().unwrap();
     let dir_s = dir.to_string_lossy().into_owned();
-    let h = ServerHandle::start(serve_cfg(&dir_s, 2, 0, true)).unwrap();
+    let h = ServerHandle::start(serve_cfg(&dir_s, 1, 2, 0, true, false, 50)).unwrap();
 
     // >= 32 shared prompt tokens (BOS + 39 bytes), distinct tails
     let sys = "System: you are a terse coding assistant";
@@ -415,5 +596,130 @@ fn serving_prefix_hits_flow_through_metrics() {
     let report = h.report();
     assert!(report.contains("prefix_hits"), "metrics endpoint must report:\n{report}");
     assert!(report.contains("prefix_cache:"), "report must carry the trie line:\n{report}");
+    h.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// cross-worker rebalancing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn rebalance_migrates_parked_sessions_across_workers() {
+    // Two workers, kv_budget 1, a sustained burst across all five engines
+    // on slow sim artifacts (identical token streams, ~5ms per decode
+    // launch — sessions live long enough to be parked and shipped). The
+    // policy thread is parked on an hour-long interval so the test drives
+    // donation deterministically through the hub, exactly as the policy
+    // would.
+    let dir = ensure_slow_sim_artifacts().unwrap();
+    let dir_s = dir.to_string_lossy().into_owned();
+    let h =
+        ServerHandle::start(serve_cfg(&dir_s, 2, 6, 1, false, true, 3_600_000))
+            .unwrap();
+    let hub = h.rebalance.as_ref().expect("two rebalancing workers").clone();
+
+    let methods =
+        ["autoregressive", "lookahead", "jacobi", "prompt_lookup", "spec_decode"];
+    let load: Vec<(String, &str, bool)> = (0..10)
+        .map(|i| {
+            (format!("def burst_{i}(x):\n    return x + {i}"), methods[i % 5],
+             i % 3 == 0)
+        })
+        .collect();
+    let rxs: Vec<_> = load
+        .iter()
+        .map(|(prompt, method, stream)| {
+            h.submit(Request {
+                prompt: prompt.clone(),
+                max_tokens: 48,
+                method: (*method).into(),
+                stream: *stream,
+                ..Default::default()
+            })
+            .unwrap()
+        })
+        .collect();
+
+    // steer: whenever a worker holds parked sessions, direct a donation to
+    // the other one, until at least one migration lands
+    for _ in 0..1000 {
+        if hub.moves() >= 1 {
+            break;
+        }
+        let loads = hub.loads();
+        if let Some(donor) = (0..loads.len())
+            .filter(|&w| loads[w].parked > 0)
+            .max_by_key(|&w| loads[w].depth())
+        {
+            hub.direct(donor, 1 - donor);
+        }
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+    assert!(hub.moves() >= 1,
+            "a parked session must migrate under sustained imbalance: {:?}",
+            hub.loads());
+
+    // every request still completes byte-identically to a solo run (the
+    // fast and slow sim variants produce identical token streams)
+    let rt = sim_rt();
+    let tok = ByteTokenizer::new();
+    for ((prompt, method, stream), rx) in load.iter().zip(rxs) {
+        let (cat, r) = collect(rx);
+        assert!(r.error.is_none(), "{method} '{prompt}': {:?}", r.error);
+        let engine = engine_for(method, &rt);
+        let ids = tok.encode_with_bos(prompt);
+        let (want, _, _) = reference(engine.as_ref(), &rt, &ids, &params(48));
+        assert_eq!(r.text, want.text, "{method} '{prompt}' diverged after migration");
+        if *stream {
+            assert_eq!(cat, r.text,
+                       "{method} '{prompt}': a migrated stream must still \
+                        concatenate to the final text");
+        }
+    }
+    let m = h.metrics.lock().unwrap();
+    assert!(m.counter("rebalanced_sessions") >= 1,
+            "the donor must count its hand-offs");
+    assert!(m.counter("rebalance_adopted") >= 1,
+            "the adopter must count arrivals");
+    drop(m);
+    h.shutdown();
+}
+
+#[test]
+fn rebalance_policy_thread_keeps_serving_correctly() {
+    // End-to-end smoke over the autonomous policy thread: fast artifacts,
+    // a 2ms scan interval, and an oversubscribed two-worker server. The
+    // migrations themselves are timing-dependent — what this pins is that
+    // whatever the rebalancer does, every response stays byte-identical.
+    let dir = ensure_sim_artifacts().unwrap();
+    let dir_s = dir.to_string_lossy().into_owned();
+    let h = ServerHandle::start(serve_cfg(&dir_s, 2, 4, 1, false, true, 2)).unwrap();
+    let methods =
+        ["autoregressive", "lookahead", "jacobi", "prompt_lookup", "spec_decode"];
+    let load: Vec<(String, &str)> = (0..8)
+        .map(|i| (format!("Q: smoke number {i}?\n"), methods[i % 5]))
+        .collect();
+    let rxs: Vec<_> = load
+        .iter()
+        .map(|(prompt, method)| {
+            h.submit(Request {
+                prompt: prompt.clone(),
+                max_tokens: 32,
+                method: (*method).into(),
+                ..Default::default()
+            })
+            .unwrap()
+        })
+        .collect();
+    let rt = sim_rt();
+    let tok = ByteTokenizer::new();
+    for ((prompt, method), rx) in load.iter().zip(rxs) {
+        let r = rx.wait().unwrap();
+        assert!(r.error.is_none(), "{method} '{prompt}': {:?}", r.error);
+        let engine = engine_for(method, &rt);
+        let ids = tok.encode_with_bos(prompt);
+        let (want, _, _) = reference(engine.as_ref(), &rt, &ids, &params(32));
+        assert_eq!(r.text, want.text, "{method} '{prompt}' diverged under rebalance");
+    }
     h.shutdown();
 }

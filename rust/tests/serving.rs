@@ -1,6 +1,8 @@
 //! Integration tests over the serving front (in-process + TCP) and the
-//! lookahead-parallelism simulation, against real artifacts. Every test
-//! skips when `artifacts/` is absent (CI runs without PJRT).
+//! lookahead-parallelism simulation, against real artifacts. Tests using
+//! real artifacts skip when `artifacts/` is absent (CI runs without PJRT);
+//! the rebalanced-serving test targets the simulated artifact set and
+//! always runs.
 
 use lookahead::layout::Wng;
 use lookahead::runtime::{cpu_client, Manifest, ModelRuntime};
@@ -21,6 +23,8 @@ fn cfg() -> ServerConfig {
         share_ngrams: true,
         ngram_ttl_ms: None,
         batch_decode: true,
+        rebalance: false,
+        rebalance_interval_ms: 50,
         worker: WorkerConfig {
             artifacts_dir: "artifacts".into(),
             model: "tiny".into(),
@@ -117,6 +121,52 @@ fn tcp_roundtrip_json_lines() {
     assert!(j.get("error").is_none(), "{resp}");
     assert!(j.get("tokens").unwrap().as_usize().unwrap() > 0);
     server.join().unwrap();
+}
+
+#[test]
+fn rebalanced_two_worker_server_reports_and_serves() {
+    // Runs on simulated artifacts (no PJRT needed): a two-worker server
+    // with rebalancing on serves a small burst, and the metrics endpoint
+    // carries the queue-depth report the rebalancer reads.
+    let dir = lookahead::runtime::sim::ensure_sim_artifacts().unwrap();
+    let mut c = cfg();
+    c.workers = 2;
+    c.rebalance = true;
+    c.rebalance_interval_ms = 5;
+    c.worker.artifacts_dir = dir.to_string_lossy().into_owned();
+    c.worker.kv_budget = 1;
+    let h = ServerHandle::start(c).unwrap();
+    assert!(h.rebalance.is_some(), "two workers + rebalance:true must build a hub");
+    let rxs: Vec<_> = (0..4)
+        .map(|i| {
+            h.submit(Request {
+                prompt: format!("def r{i}(x):\n    return x"),
+                max_tokens: 16,
+                method: "autoregressive".into(),
+                ..Default::default()
+            })
+            .unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        let r = rx.wait().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert!(r.tokens > 0);
+    }
+    let report = h.report();
+    assert!(report.contains("queue_depth"),
+            "report must carry the queue-depth gauge:\n{report}");
+    assert!(report.contains("live_sessions"),
+            "report must carry the summed live gauge:\n{report}");
+    let metrics = h.metrics.clone();
+    h.shutdown();
+    let m = metrics.lock().unwrap();
+    for w in 0..2 {
+        assert_eq!(m.counter(&format!("suspended_sessions_w{w}")), 0,
+                   "worker {w} must zero its suspended gauge on exit");
+        assert_eq!(m.counter(&format!("live_sessions_w{w}")), 0,
+                   "worker {w} must zero its live gauge on exit");
+    }
 }
 
 #[test]

@@ -136,6 +136,8 @@ fn server_cfg(share: bool) -> ServerConfig {
         share_ngrams: share,
         ngram_ttl_ms: None,
         batch_decode: true,
+        rebalance: false,
+        rebalance_interval_ms: 50,
         worker: WorkerConfig {
             artifacts_dir: "artifacts".into(),
             model: "tiny".into(),

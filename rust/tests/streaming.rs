@@ -154,6 +154,8 @@ fn cfg(max_live: usize, time_slice: usize) -> ServerConfig {
         share_ngrams: true,
         ngram_ttl_ms: None,
         batch_decode: true,
+        rebalance: false,
+        rebalance_interval_ms: 50,
         worker: WorkerConfig {
             artifacts_dir: "artifacts".into(),
             model: "tiny".into(),
