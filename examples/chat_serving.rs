@@ -5,30 +5,22 @@
 //!   cargo run --release --example chat_serving
 
 use lookahead::metrics::Histogram;
-use lookahead::server::{Policy, Reply, Request, ServerConfig, ServerHandle,
-                        WorkerConfig};
+use lookahead::server::{Policy, Reply, Request, ServerConfig, ServerHandle};
 use lookahead::workload::Workloads;
 
 fn main() -> anyhow::Result<()> {
     let workloads = Workloads::load("artifacts")?;
     let prompts = workloads.take("chat", 12)?;
 
-    let h = ServerHandle::start(ServerConfig {
-        workers: 1,
-        policy: Policy::ShortestFirst,
-        queue_depth: 64,
-        share_ngrams: true, // multi-turn chat re-serves templates: warm pools
-        ngram_ttl_ms: Some(600_000), // decay templates idle for 10 minutes
-        batch_decode: true,
-        rebalance: false,
-        rebalance_interval_ms: 50,
-        worker: WorkerConfig {
-            artifacts_dir: "artifacts".into(),
-            model: "tiny".into(),
-            wng: (15, 5, 15),
-            ..WorkerConfig::default()
-        },
-    })?;
+    let h = ServerHandle::start(
+        ServerConfig::builder()
+            .policy(Policy::ShortestFirst)
+            .queue_depth(64)
+            .share_ngrams(true) // multi-turn chat re-serves templates: warm pools
+            .ngram_ttl_ms(Some(600_000)) // decay templates idle for 10 minutes
+            .wng((15, 5, 15))
+            .build(),
+    )?;
 
     // Burst-submit the whole conversation set (SJF scheduler reorders).
     let t0 = std::time::Instant::now();
@@ -36,13 +28,7 @@ fn main() -> anyhow::Result<()> {
         .iter()
         .enumerate()
         .map(|(i, p)| {
-            h.submit(Request {
-                prompt: p.clone(),
-                max_tokens: 48,
-                seed: i as u64,
-                ..Default::default()
-            })
-            .unwrap()
+            h.submit(Request::new(p.clone()).max_tokens(48).seed(i as u64)).unwrap()
         })
         .collect();
 
@@ -76,12 +62,7 @@ fn main() -> anyhow::Result<()> {
 
     // one streaming turn: chunks print as each lookahead step commits
     println!("\nstreaming turn:");
-    let rs = h.submit(Request {
-        prompt: prompts[0].clone(),
-        max_tokens: 48,
-        stream: true,
-        ..Default::default()
-    })?;
+    let rs = h.submit(Request::new(prompts[0].clone()).max_tokens(48).stream(true))?;
     loop {
         match rs.recv()? {
             Reply::Chunk(c) => print!("{}", c.delta),

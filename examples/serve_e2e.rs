@@ -10,7 +10,7 @@
 
 use lookahead::bench::Table;
 use lookahead::metrics::Histogram;
-use lookahead::server::{Policy, Request, ServerConfig, ServerHandle, WorkerConfig};
+use lookahead::server::{Request, ServerConfig, ServerHandle};
 use lookahead::util::cli::Args;
 use lookahead::util::json::Json;
 use lookahead::workload::{paper_dataset, Workloads, SUITE_NAMES};
@@ -18,32 +18,14 @@ use lookahead::workload::{paper_dataset, Workloads, SUITE_NAMES};
 fn run_method(method: &str, wng: (usize, usize, usize), n_req: usize,
               max_tokens: usize, workloads: &Workloads)
               -> anyhow::Result<(f64, Histogram, Histogram, usize)> {
-    let h = ServerHandle::start(ServerConfig {
-        workers: 1,
-        policy: Policy::Fifo,
-        queue_depth: 1024,
-        share_ngrams: true,
-        ngram_ttl_ms: None,
-        batch_decode: true,
-        rebalance: false,
-        rebalance_interval_ms: 50,
-        worker: WorkerConfig {
-            artifacts_dir: "artifacts".into(),
-            model: "tiny".into(),
-            wng,
-            ..WorkerConfig::default()
-        },
-    })?;
+    let h = ServerHandle::start(
+        ServerConfig::builder().queue_depth(1024).wng(wng).build(),
+    )?;
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::new();
     for suite in SUITE_NAMES {
         for p in workloads.take(suite, n_req)? {
-            rxs.push(h.submit(Request {
-                prompt: p,
-                max_tokens,
-                method: method.into(),
-                ..Default::default()
-            })?);
+            rxs.push(h.submit(Request::new(p).max_tokens(max_tokens).method(method))?);
         }
     }
     let mut lat = Histogram::new();

@@ -10,11 +10,11 @@
 //!
 //!   cargo bench --bench ablation_design [-- --quick]
 
-use lookahead::bench::driver::run_suite;
+use lookahead::bench::driver::{run_suite_with, SuiteOptions};
 use lookahead::bench::{bench_args, save_result, Table};
 use lookahead::engine::lookahead::{Lookahead, LookaheadConfig};
 use lookahead::runtime::load_model;
-use lookahead::server::{Policy, Request, ServerConfig, ServerHandle, WorkerConfig};
+use lookahead::server::{Policy, Request, ServerConfig, ServerHandle};
 use lookahead::util::json::Json;
 use lookahead::workload::Workloads;
 
@@ -35,7 +35,8 @@ fn main() -> anyhow::Result<()> {
         let mut cfg = LookaheadConfig::new(15, 5, 15);
         cfg.pool_per_key = pk;
         cfg.pool_total = total;
-        let run = run_suite(&rt, &mut Lookahead::new(cfg), &prompts, max_tokens, 0.0)?;
+        let run = run_suite_with(&rt, &mut Lookahead::new(cfg), &prompts,
+                                 SuiteOptions::new(max_tokens))?.run;
         t.row(vec![
             pk.to_string(),
             total.to_string(),
@@ -57,10 +58,10 @@ fn main() -> anyhow::Result<()> {
         let prompts = workloads.take(suite, nprompts)?;
         let mut off = LookaheadConfig::new(15, 5, 15);
         off.prompt_as_ref = false;
-        let s_off = run_suite(&rt, &mut Lookahead::new(off), &prompts,
-                              max_tokens, 0.0)?.s();
-        let s_on = run_suite(&rt, &mut Lookahead::with_wng(15, 5, 15), &prompts,
-                             max_tokens, 0.0)?.s();
+        let s_off = run_suite_with(&rt, &mut Lookahead::new(off), &prompts,
+                                   SuiteOptions::new(max_tokens))?.run.s();
+        let s_on = run_suite_with(&rt, &mut Lookahead::with_wng(15, 5, 15), &prompts,
+                                  SuiteOptions::new(max_tokens))?.run.s();
         t.row(vec![
             suite.into(),
             format!("{s_off:.2}"),
@@ -74,29 +75,16 @@ fn main() -> anyhow::Result<()> {
     println!("\n(d) scheduler policy: mean queue wait, mixed prompt lengths:\n");
     let mut t = Table::new(&["policy", "mean queue ms", "p99 queue ms"]);
     for (name, policy) in [("fifo", Policy::Fifo), ("sjf", Policy::ShortestFirst)] {
-        let h = ServerHandle::start(ServerConfig {
-            workers: 1,
-            policy,
-            queue_depth: 256,
-            share_ngrams: false, // isolate scheduler effects from cache warmth
-            ngram_ttl_ms: None,
-            batch_decode: true,
-            rebalance: false,
-            rebalance_interval_ms: 50,
-            worker: WorkerConfig {
-                artifacts_dir: "artifacts".into(),
-                model: "tiny".into(),
-                wng: (5, 3, 5),
-                ..WorkerConfig::default()
-            },
-        })?;
+        let h = ServerHandle::start(
+            ServerConfig::builder()
+                .policy(policy)
+                .queue_depth(256)
+                .share_ngrams(false) // isolate scheduler effects from cache warmth
+                .build(),
+        )?;
         // warm the worker first (engine + prefill compilation must not
         // land on a measured request — it would dwarf queue-wait deltas)
-        let warm = h.submit(Request {
-            prompt: "def warm():\n".into(),
-            max_tokens: 2,
-            ..Default::default()
-        })?;
+        let warm = h.submit(Request::new("def warm():\n").max_tokens(2))?;
         warm.wait()?;
         // alternate long prompts (class-code, long generations) with short
         // ones (math, short generations) — the head-of-line blocking case.
@@ -108,12 +96,11 @@ fn main() -> anyhow::Result<()> {
         let mut rxs = Vec::new();
         for i in 0..(if quick { 4 } else { 8 }) {
             let long = i % 2 == 0;
-            rxs.push(h.submit(Request {
-                prompt: if long { long_ps[i / 2 % 4].clone() }
-                        else { short_ps[i / 2 % 4].clone() },
-                max_tokens: if long { max_tokens } else { 8 },
-                ..Default::default()
-            })?);
+            rxs.push(h.submit(
+                Request::new(if long { long_ps[i / 2 % 4].clone() }
+                             else { short_ps[i / 2 % 4].clone() })
+                    .max_tokens(if long { max_tokens } else { 8 }),
+            )?);
         }
         let mut q = lookahead::metrics::Histogram::new();
         for rx in rxs {

@@ -11,7 +11,7 @@
 //!   cargo bench --bench fig4_scaling [-- --quick]
 
 use lookahead::analytic;
-use lookahead::bench::driver::run_suite;
+use lookahead::bench::driver::{run_suite_with, SuiteOptions};
 use lookahead::bench::{bench_args, save_result, Table};
 use lookahead::engine::lookahead::{Lookahead, LookaheadConfig};
 use lookahead::runtime::load_model;
@@ -41,7 +41,8 @@ fn main() -> anyhow::Result<()> {
             let mut cfg = LookaheadConfig::new(w, n, w);
             cfg.force_generic = true; // uniform executable across the sweep
             let mut engine = Lookahead::new(cfg);
-            let run = run_suite(&rt, &mut engine, &prompts, max_tokens, 0.0)?;
+            let run = run_suite_with(&rt, &mut engine, &prompts,
+                                     SuiteOptions::new(max_tokens))?.run;
             table.row(vec![
                 n.to_string(),
                 w.to_string(),

@@ -13,7 +13,7 @@
 //!   cargo bench --bench fig5_throughput [-- --quick]
 
 use lookahead::analytic::A100;
-use lookahead::bench::driver::run_suite;
+use lookahead::bench::driver::{run_suite_with, SuiteOptions};
 use lookahead::bench::{bench_args, save_result, Table};
 use lookahead::engine::autoregressive::AutoRegressive;
 use lookahead::engine::lookahead::Lookahead;
@@ -48,10 +48,11 @@ fn main() -> anyhow::Result<()> {
         let paper_params = if *model == "tiny" { 7e9 } else { 13e9 };
         for suite in SUITE_NAMES {
             let prompts = workloads.take(suite, n_prompts)?;
-            let ar = run_suite(&rt, &mut AutoRegressive::new(), &prompts,
-                               max_tokens, 0.0)?;
+            let ar = run_suite_with(&rt, &mut AutoRegressive::new(), &prompts,
+                                    SuiteOptions::new(max_tokens))?.run;
             let mut la_engine = Lookahead::with_wng(wng.0, wng.1, wng.2);
-            let la = run_suite(&rt, &mut la_engine, &prompts, max_tokens, 0.0)?;
+            let la = run_suite_with(&rt, &mut la_engine, &prompts,
+                                    SuiteOptions::new(max_tokens))?.run;
             let proj = la.projected(&A100, paper_params, t_in);
             table.row(vec![
                 model.to_string(),

@@ -10,7 +10,7 @@
 //!   cargo bench --bench fig6_7_lp [-- --quick]
 
 use lookahead::analytic::{parallel_step_latency, step_latency, Parallelism, A100};
-use lookahead::bench::driver::run_suite;
+use lookahead::bench::driver::{run_suite_with, SuiteOptions};
 use lookahead::bench::{bench_args, save_result, Table};
 use lookahead::engine::lookahead::{Lookahead, LookaheadConfig};
 use lookahead::layout::Wng;
@@ -30,7 +30,8 @@ fn main() -> anyhow::Result<()> {
     // -- measured S for the config (LP does not change S, paper App. E) ----
     let prompts = workloads.take("class-code", if quick { 2 } else { 3 })?;
     let mut engine = Lookahead::with_wng(wng.w, wng.n, wng.g);
-    let full = run_suite(&rt, &mut engine, &prompts, if quick { 32 } else { 64 }, 0.0)?;
+    let full = run_suite_with(&rt, &mut engine, &prompts,
+                              SuiteOptions::new(if quick { 32 } else { 64 }))?.run;
     let s = full.s();
     println!("measured S = {s:.2} for {:?} on class-code (ClassEval analogue)\n", wng);
 
@@ -80,8 +81,8 @@ fn main() -> anyhow::Result<()> {
     for &w in fit_ws {
         let mut cfg = LookaheadConfig::new(w, wng.n, w);
         cfg.force_generic = true;
-        let run = run_suite(&rt, &mut Lookahead::new(cfg), &prompts,
-                            if quick { 32 } else { 48 }, 0.0)?;
+        let run = run_suite_with(&rt, &mut Lookahead::new(cfg), &prompts,
+                                 SuiteOptions::new(if quick { 32 } else { 48 }))?.run;
         pts.push((wng.n - 1, w, run.s()));
     }
     let (alpha, f) = lookahead::analytic::fit_alpha_f(&pts);
@@ -157,7 +158,8 @@ fn main() -> anyhow::Result<()> {
         let mut cfg = LookaheadConfig::new(wng.w, wng.n, wng.g);
         cfg.force_generic = force_generic;
         let mut e = Lookahead::new(cfg);
-        let run = run_suite(&rt, &mut e, &prompts, if quick { 32 } else { 64 }, 0.0)?;
+        let run = run_suite_with(&rt, &mut e, &prompts,
+                                 SuiteOptions::new(if quick { 32 } else { 64 }))?.run;
         t3.row(vec![label.into(), format!("{:.2}", run.s()),
                     format!("{:.1}", run.ms_per_step()), note.into()]);
     }

@@ -12,7 +12,7 @@
 //!   cargo bench --bench fig8_flops [-- --quick]
 
 use lookahead::analytic::{A100, RTX3090};
-use lookahead::bench::driver::run_suite;
+use lookahead::bench::driver::{run_suite_with, SuiteOptions};
 use lookahead::bench::{bench_args, save_result, Table};
 use lookahead::engine::lookahead::{Lookahead, LookaheadConfig};
 use lookahead::runtime::load_model;
@@ -42,7 +42,8 @@ fn main() -> anyhow::Result<()> {
         let mut cfg = LookaheadConfig::new(w, n, w);
         cfg.force_generic = true;
         let mut engine = Lookahead::new(cfg);
-        let run = run_suite(&rt, &mut engine, &prompts, max_tokens, 0.0)?;
+        let run = run_suite_with(&rt, &mut engine, &prompts,
+                                 SuiteOptions::new(max_tokens))?.run;
         let a100 = run.projected(&A100, 7e9, t_in);
         let r3090 = run.projected(&RTX3090, 7e9, t_in);
         table.row(vec![

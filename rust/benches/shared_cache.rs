@@ -13,7 +13,7 @@
 
 use std::sync::Arc;
 
-use lookahead::bench::driver::{run_suite_cached, SuiteRun};
+use lookahead::bench::driver::{run_suite_with, SuiteOptions, SuiteRun};
 use lookahead::bench::{bench_args, save_result, Table};
 use lookahead::engine::lookahead::Lookahead;
 use lookahead::engine::prompt_lookup::PromptLookup;
@@ -28,15 +28,15 @@ use lookahead::workload::Workloads;
 fn cold_vs_warm(rt: &ModelRuntime, engine: &mut dyn Decoder, stream: &[String],
                 max_tokens: usize)
                 -> anyhow::Result<(SuiteRun, SuiteRun, SharedCacheStats)> {
-    let (cold, cold_texts) = run_suite_cached(rt, engine, stream, max_tokens, 0.0, None)?;
+    let cold = run_suite_with(rt, engine, stream, SuiteOptions::new(max_tokens))?;
     let cache = Arc::new(SharedNgramCache::with_defaults(
         engine.pool_spec().expect("engine keeps no pool"),
     ));
-    let (warm, warm_texts) =
-        run_suite_cached(rt, engine, stream, max_tokens, 0.0, Some(&cache))?;
-    assert_eq!(cold_texts, warm_texts,
+    let warm = run_suite_with(rt, engine, stream,
+                              SuiteOptions::new(max_tokens).cache(&cache))?;
+    assert_eq!(cold.texts, warm.texts,
                "shared cache changed greedy output bytes — losslessness broken");
-    Ok((cold, warm, cache.stats()))
+    Ok((cold.run, warm.run, cache.stats()))
 }
 
 fn main() -> anyhow::Result<()> {

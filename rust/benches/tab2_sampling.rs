@@ -10,7 +10,7 @@
 //!   cargo bench --bench tab2_sampling [-- --quick]
 
 use lookahead::analytic::A100;
-use lookahead::bench::driver::run_suite_outputs;
+use lookahead::bench::driver::{run_suite_with, SuiteOptions};
 use lookahead::bench::{bench_args, save_result, Table};
 use lookahead::engine::autoregressive::AutoRegressive;
 use lookahead::engine::lookahead::Lookahead;
@@ -31,8 +31,8 @@ fn main() -> anyhow::Result<()> {
 
     // ROUGE reference: greedy AR outputs (the paper scores against dataset
     // references; the invariance argument is the same — see DESIGN.md §2).
-    let (_, reference) = run_suite_outputs(&rt, &mut AutoRegressive::new(),
-                                           &prompts, max_tokens, 0.0)?;
+    let reference = run_suite_with(&rt, &mut AutoRegressive::new(), &prompts,
+                                   SuiteOptions::new(max_tokens))?.texts;
 
     println!("Tab. 2: sampling with lookahead on the summarize suite \
               (XSum/CNN-DM analogue)\n");
@@ -42,13 +42,14 @@ fn main() -> anyhow::Result<()> {
     for temp in [1.0f64, 0.0] {
         let mut ar_tps = 0.0;
         for method in ["AR", "LA"] {
-            let (run, texts) = if method == "AR" {
-                run_suite_outputs(&rt, &mut AutoRegressive::new(), &prompts,
-                                  max_tokens, temp)?
+            let opts = SuiteOptions::new(max_tokens).temperature(temp);
+            let out = if method == "AR" {
+                run_suite_with(&rt, &mut AutoRegressive::new(), &prompts, opts)?
             } else {
                 let mut e = Lookahead::with_wng(wng.0, wng.1, wng.2);
-                run_suite_outputs(&rt, &mut e, &prompts, max_tokens, temp)?
+                run_suite_with(&rt, &mut e, &prompts, opts)?
             };
+            let (run, texts) = (out.run, out.texts);
             let pairs: Vec<(String, String)> = texts
                 .iter()
                 .cloned()

@@ -11,7 +11,7 @@
 //!   cargo bench --bench tab3_ablation [-- --quick]
 
 use lookahead::analytic::A100;
-use lookahead::bench::driver::run_suite;
+use lookahead::bench::driver::{run_suite_with, SuiteOptions};
 use lookahead::bench::{bench_args, save_result, Table};
 use lookahead::engine::autoregressive::AutoRegressive;
 use lookahead::engine::lookahead::{Lookahead, LookaheadConfig};
@@ -47,21 +47,22 @@ fn main() -> anyhow::Result<()> {
     let mut rows = Vec::new();
     let mut ar_ref = 0.0;
     for (tag, cfg, pref, label) in configs {
+        let opts = SuiteOptions::new(max_tokens);
         let (run, t_in) = match cfg {
             None if tag == "1" => {
-                (run_suite(&rt, &mut AutoRegressive::new(), &prompts, max_tokens,
-                           0.0)?, 1)
+                (run_suite_with(&rt, &mut AutoRegressive::new(), &prompts, opts)?
+                     .run, 1)
             }
             None => {
-                (run_suite(&rt, &mut PromptLookup::new(8, 1), &prompts, max_tokens,
-                           0.0)?, 8)
+                (run_suite_with(&rt, &mut PromptLookup::new(8, 1), &prompts, opts)?
+                     .run, 8)
             }
             Some((n, w, g)) => {
                 let mut c = LookaheadConfig::new(w, n, g);
                 c.prompt_as_ref = pref;
                 c.force_generic = true; // uniform executable across rows
                 let t = (w + g) * (n - 1);
-                (run_suite(&rt, &mut Lookahead::new(c), &prompts, max_tokens, 0.0)?, t)
+                (run_suite_with(&rt, &mut Lookahead::new(c), &prompts, opts)?.run, t)
             }
         };
         if tag == "1" {

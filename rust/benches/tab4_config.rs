@@ -12,7 +12,7 @@
 //!   cargo bench --bench tab4_config [-- --quick]
 
 use lookahead::analytic::A100;
-use lookahead::bench::driver::run_suite;
+use lookahead::bench::driver::{run_suite_with, SuiteOptions};
 use lookahead::bench::{bench_args, save_result, Table};
 use lookahead::engine::lookahead::{Lookahead, LookaheadConfig};
 use lookahead::runtime::{cpu_client, Manifest, ModelRuntime};
@@ -54,8 +54,8 @@ fn main() -> anyhow::Result<()> {
                 }
                 let mut cfg = LookaheadConfig::new(w, n, w);
                 cfg.force_generic = true;
-                let run = run_suite(&rt, &mut Lookahead::new(cfg), &prompts,
-                                    max_tokens, 0.0)?;
+                let run = run_suite_with(&rt, &mut Lookahead::new(cfg), &prompts,
+                                         SuiteOptions::new(max_tokens))?.run;
                 let proj = run.projected(&A100, paper_params, t_in);
                 rows.push((w, n, t_in, run.s(), proj));
                 if best.map_or(true, |(_, _, bp, _)| proj > bp) {

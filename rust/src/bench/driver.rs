@@ -75,27 +75,77 @@ impl SuiteRun {
     }
 }
 
+/// Options for [`run_suite_with`] — the single suite entry point that
+/// replaced the `run_suite` / `run_suite_outputs` / `run_suite_cached` trio.
+/// Defaults: greedy (temperature 0), cold per-request pools.
+#[derive(Debug, Clone, Default)]
+pub struct SuiteOptions<'a> {
+    pub max_tokens: usize,
+    pub temperature: f64,
+    /// When set, every request is served from this cross-request
+    /// [`SharedNgramCache`] — the serving scenario where request k+1 reuses
+    /// the n-grams requests 1..k harvested. `None` reproduces the paper's
+    /// cold per-request pools.
+    pub cache: Option<&'a Arc<SharedNgramCache>>,
+}
+
+impl<'a> SuiteOptions<'a> {
+    pub fn new(max_tokens: usize) -> Self {
+        SuiteOptions { max_tokens, ..Default::default() }
+    }
+
+    pub fn temperature(mut self, t: f64) -> Self {
+        self.temperature = t;
+        self
+    }
+
+    pub fn cache(mut self, c: &'a Arc<SharedNgramCache>) -> Self {
+        self.cache = Some(c);
+        self
+    }
+}
+
+/// Aggregate run plus the generated texts (Tab. 2 ROUGE needs them; callers
+/// that only want numbers take `.run`).
+#[derive(Debug, Clone, Default)]
+pub struct SuiteOutcome {
+    pub run: SuiteRun,
+    pub texts: Vec<String>,
+}
+
 /// Run `engine` over `prompts`; greedy unless `temperature > 0`.
+#[deprecated(note = "use run_suite_with")]
 pub fn run_suite(rt: &ModelRuntime, engine: &mut dyn Decoder, prompts: &[String],
                  max_tokens: usize, temperature: f64) -> Result<SuiteRun> {
-    run_suite_outputs(rt, engine, prompts, max_tokens, temperature).map(|(r, _)| r)
+    let opts = SuiteOptions::new(max_tokens).temperature(temperature);
+    run_suite_with(rt, engine, prompts, opts).map(|o| o.run)
 }
 
 /// Like `run_suite` but also returns the generated texts (Tab. 2 ROUGE).
+#[deprecated(note = "use run_suite_with")]
 pub fn run_suite_outputs(rt: &ModelRuntime, engine: &mut dyn Decoder,
                          prompts: &[String], max_tokens: usize, temperature: f64)
                          -> Result<(SuiteRun, Vec<String>)> {
-    run_suite_cached(rt, engine, prompts, max_tokens, temperature, None)
+    let opts = SuiteOptions::new(max_tokens).temperature(temperature);
+    run_suite_with(rt, engine, prompts, opts).map(|o| (o.run, o.texts))
 }
 
-/// Like `run_suite_outputs`, but when `cache` is given every request is
-/// served from that cross-request [`SharedNgramCache`] — the serving
-/// scenario where request k+1 reuses the n-grams requests 1..k harvested.
-/// `None` reproduces the paper's cold per-request pools.
+/// Like `run_suite_outputs` with an optional cross-request shared cache.
+#[deprecated(note = "use run_suite_with")]
 pub fn run_suite_cached(rt: &ModelRuntime, engine: &mut dyn Decoder,
                         prompts: &[String], max_tokens: usize, temperature: f64,
                         cache: Option<&Arc<SharedNgramCache>>)
                         -> Result<(SuiteRun, Vec<String>)> {
+    let mut opts = SuiteOptions::new(max_tokens).temperature(temperature);
+    opts.cache = cache;
+    run_suite_with(rt, engine, prompts, opts).map(|o| (o.run, o.texts))
+}
+
+/// Run `engine` over `prompts` under `opts`; the one suite entry point.
+pub fn run_suite_with(rt: &ModelRuntime, engine: &mut dyn Decoder,
+                      prompts: &[String], opts: SuiteOptions<'_>)
+                      -> Result<SuiteOutcome> {
+    let SuiteOptions { max_tokens, temperature, cache } = opts;
     let tok = ByteTokenizer::new();
     // warmup: pay one-time executable compilation outside the timed region
     // (always against a private pool so a shared cache stays cold until the
@@ -126,7 +176,7 @@ pub fn run_suite_cached(rt: &ModelRuntime, engine: &mut dyn Decoder,
         agg.absorb(&out.stats);
         texts.push(out.text);
     }
-    Ok((agg, texts))
+    Ok(SuiteOutcome { run: agg, texts })
 }
 
 #[cfg(test)]

@@ -1,0 +1,773 @@
+//! Open-loop serving load generator (the serving-bench harness substrate).
+//!
+//! Three layers, strictly separated so determinism is checkable:
+//!
+//! 1. **Schedule generation** ([`LoadSpec`] -> [`Schedule::generate`]) is a
+//!    pure function of the spec: seeded Poisson arrivals (exponential
+//!    inter-arrival times), workload-mix class picks, synthetic prompts
+//!    from [`MixClass::synth`], and cancel/deadline churn all come from one
+//!    [`Rng`] stream. The same seed replays the byte-identical schedule —
+//!    [`Schedule::dump`] / [`Schedule::fingerprint`] pin that contract.
+//! 2. **Driving** replays a schedule against a live server, open-loop:
+//!    arrivals fire at their planned times whether or not earlier requests
+//!    finished. [`drive_inprocess`] uses [`ServerHandle::submit`];
+//!    [`drive_tcp`] speaks the JSON-lines protocol with one connection per
+//!    request (plus one per planned cancel and one final report scrape, so
+//!    the total connection count is deterministic — see
+//!    [`Schedule::tcp_conns`]).
+//! 3. **Aggregation** ([`LoadRun`] -> [`bench_json`]) folds per-request
+//!    final records plus the server's scraped metrics report into the
+//!    `BENCH_*.json` schema (`lookahead-serve-bench/v1`) that CI validates
+//!    with [`validate_bench_json`].
+//!
+//! Latencies vary run to run (wall clock is real); the *schedule*, the
+//! request set, and schedule-derived counters never do.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::metrics::{hit_rate, Histogram};
+use crate::server::{Request, Response, ServerHandle};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+use crate::workload::MixClass;
+
+/// What load to offer: everything the schedule generator needs, nothing the
+/// driver measures. Chainable like the config builders:
+/// `LoadSpec::new(7).requests(64).rate_per_s(50.0)`.
+#[derive(Debug, Clone)]
+pub struct LoadSpec {
+    pub seed: u64,
+    pub requests: usize,
+    /// mean Poisson arrival rate (requests per second of offered load).
+    pub rate_per_s: f64,
+    /// workload mix: (class, weight) pairs, weights need not sum to 1.
+    pub mix: Vec<(MixClass, f64)>,
+    /// fraction of requests cancelled mid-flight (they run `stream: true`
+    /// so the TCP client learns the server id from the first chunk).
+    pub cancel_frac: f64,
+    /// fraction of requests carrying a serving deadline.
+    pub deadline_frac: f64,
+    pub deadline_ms: u64,
+    /// per-request token budget drawn uniformly from [min, max].
+    pub max_tokens_min: usize,
+    pub max_tokens_max: usize,
+    /// decoding methods cycled through by weight-free uniform choice.
+    pub methods: Vec<String>,
+}
+
+impl Default for LoadSpec {
+    fn default() -> Self {
+        LoadSpec {
+            seed: 0,
+            requests: 32,
+            rate_per_s: 50.0,
+            mix: MixClass::ALL.iter().map(|&c| (c, 1.0)).collect(),
+            cancel_frac: 0.0,
+            deadline_frac: 0.0,
+            deadline_ms: 40,
+            max_tokens_min: 8,
+            max_tokens_max: 24,
+            methods: vec!["lookahead".into()],
+        }
+    }
+}
+
+impl LoadSpec {
+    pub fn new(seed: u64) -> LoadSpec {
+        LoadSpec { seed, ..Default::default() }
+    }
+
+    pub fn requests(mut self, n: usize) -> Self {
+        self.requests = n;
+        self
+    }
+
+    pub fn rate_per_s(mut self, r: f64) -> Self {
+        self.rate_per_s = r;
+        self
+    }
+
+    pub fn mix(mut self, mix: Vec<(MixClass, f64)>) -> Self {
+        self.mix = mix;
+        self
+    }
+
+    pub fn cancel_frac(mut self, f: f64) -> Self {
+        self.cancel_frac = f;
+        self
+    }
+
+    pub fn deadline_frac(mut self, f: f64) -> Self {
+        self.deadline_frac = f;
+        self
+    }
+
+    pub fn deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline_ms = ms;
+        self
+    }
+
+    pub fn max_tokens(mut self, min: usize, max: usize) -> Self {
+        self.max_tokens_min = min;
+        self.max_tokens_max = max;
+        self
+    }
+
+    pub fn methods(mut self, m: Vec<String>) -> Self {
+        self.methods = m;
+        self
+    }
+
+    /// Parse a `--mix templated:2,tenant:1,prefix:1` CLI string.
+    pub fn parse_mix(s: &str) -> Result<Vec<(MixClass, f64)>> {
+        let mut mix = Vec::new();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (name, w) = match part.split_once(':') {
+                Some((n, w)) => {
+                    (n, w.parse::<f64>().map_err(|_| anyhow!("bad weight in '{part}'"))?)
+                }
+                None => (part, 1.0),
+            };
+            if w < 0.0 {
+                bail!("negative mix weight in '{part}'");
+            }
+            mix.push((MixClass::parse(name)?, w));
+        }
+        if mix.is_empty() {
+            bail!("empty mix spec '{s}'");
+        }
+        Ok(mix)
+    }
+
+    /// Spec as JSON for the BENCH file's `config` section.
+    pub fn to_json(&self) -> Json {
+        let mix = Json::Obj(
+            self.mix
+                .iter()
+                .map(|(c, w)| (c.name().to_string(), Json::num(*w)))
+                .collect(),
+        );
+        Json::obj(vec![
+            ("seed", Json::num(self.seed as f64)),
+            ("requests", Json::num(self.requests as f64)),
+            ("rate_per_s", Json::num(self.rate_per_s)),
+            ("mix", mix),
+            ("cancel_frac", Json::num(self.cancel_frac)),
+            ("deadline_frac", Json::num(self.deadline_frac)),
+            ("deadline_ms", Json::num(self.deadline_ms as f64)),
+            ("max_tokens", Json::arr(vec![
+                Json::num(self.max_tokens_min as f64),
+                Json::num(self.max_tokens_max as f64),
+            ])),
+            ("methods",
+             Json::arr(self.methods.iter().map(|m| Json::str(m.clone())).collect())),
+        ])
+    }
+}
+
+/// One planned arrival: when, what, and the churn attached to it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlannedRequest {
+    /// offset from the run start, ms.
+    pub at_ms: u64,
+    pub class: MixClass,
+    pub req: Request,
+    /// cancel this many ms after submission (the request runs streaming so
+    /// the TCP client can learn its server-side id first).
+    pub cancel_after_ms: Option<u64>,
+}
+
+/// The full deterministic arrival schedule for one run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schedule {
+    pub spec_seed: u64,
+    pub items: Vec<PlannedRequest>,
+}
+
+impl Schedule {
+    /// Pure: same spec -> identical schedule, byte for byte.
+    pub fn generate(spec: &LoadSpec) -> Schedule {
+        let mut rng = Rng::new(spec.seed);
+        let weights: Vec<f32> = spec.mix.iter().map(|(_, w)| *w as f32).collect();
+        let rate = spec.rate_per_s.max(1e-6);
+        let mut t_ms = 0.0f64;
+        let mut items = Vec::with_capacity(spec.requests);
+        for i in 0..spec.requests {
+            // Poisson process: exponential inter-arrival times
+            let u = rng.f64();
+            t_ms += -(1.0 - u).ln() / rate * 1e3;
+            let class = spec.mix[rng.weighted(&weights)].0;
+            let (prompt, tenant) = class.synth(&mut rng);
+            let max_tokens =
+                rng.range(spec.max_tokens_min, spec.max_tokens_max.max(spec.max_tokens_min) + 1);
+            let method = rng.choose(&spec.methods).clone();
+            let mut req =
+                Request::new(prompt).max_tokens(max_tokens).method(method).seed(i as u64);
+            if let Some(t) = tenant {
+                req = req.tenant(t);
+            }
+            let cancel_after_ms = rng.bool(spec.cancel_frac).then(|| {
+                req.stream = true;
+                rng.range(5, 30) as u64
+            });
+            if cancel_after_ms.is_none() && rng.bool(spec.deadline_frac) {
+                req = req.deadline_ms(spec.deadline_ms);
+            }
+            items.push(PlannedRequest {
+                at_ms: t_ms.round() as u64,
+                class,
+                req,
+                cancel_after_ms,
+            });
+        }
+        Schedule { spec_seed: spec.seed, items }
+    }
+
+    /// Canonical text form — one line per planned request, every field that
+    /// defines the run. Two schedules are "the same" iff their dumps are
+    /// byte-identical (the determinism test's criterion).
+    pub fn dump(&self) -> String {
+        let mut s = format!("seed={}\n", self.spec_seed);
+        for it in &self.items {
+            let cancel = match it.cancel_after_ms {
+                Some(ms) => format!("{ms}"),
+                None => "-".to_string(),
+            };
+            s.push_str(&format!(
+                "{} {} cancel={} {}\n",
+                it.at_ms,
+                it.class.name(),
+                cancel,
+                it.req.to_json_line()
+            ));
+        }
+        s
+    }
+
+    /// FNV-1a 64 over [`Schedule::dump`] — a compact schedule identity for
+    /// the BENCH file.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf29ce484222325;
+        for b in self.dump().as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+        h
+    }
+
+    /// Schedule-derived aggregate counters (deterministic, unlike
+    /// latencies): per-class request counts + planned churn totals.
+    pub fn counts(&self) -> BTreeMap<String, u64> {
+        let mut m = BTreeMap::new();
+        for it in &self.items {
+            *m.entry(format!("class_{}", it.class.name())).or_default() += 1;
+            if it.cancel_after_ms.is_some() {
+                *m.entry("cancels_planned".to_string()).or_default() += 1;
+            }
+            if it.req.deadline_ms.is_some() {
+                *m.entry("deadlines_planned".to_string()).or_default() += 1;
+            }
+        }
+        m.insert("total".to_string(), self.items.len() as u64);
+        m
+    }
+
+    /// Connections [`drive_tcp`] opens: one per request, one per planned
+    /// cancel (always opened, even if the id was never learned, so the
+    /// count stays deterministic), one for the final report scrape. Pass
+    /// this as `max_conns` to `serve_tcp` so the server exits cleanly.
+    pub fn tcp_conns(&self) -> usize {
+        let cancels =
+            self.items.iter().filter(|i| i.cancel_after_ms.is_some()).count();
+        self.items.len() + cancels + 1
+    }
+}
+
+/// Client-side record of one request's fate (from its final record).
+#[derive(Debug, Clone)]
+pub struct RequestOutcome {
+    pub class: MixClass,
+    pub ok: bool,
+    pub finish: String,
+    pub tokens: usize,
+    pub wall_ms: f64,
+    pub queue_ms: f64,
+    pub ttft_ms: f64,
+}
+
+impl RequestOutcome {
+    fn from_response(class: MixClass, r: &Response) -> RequestOutcome {
+        RequestOutcome {
+            class,
+            ok: r.error.is_none(),
+            finish: r.finish.clone(),
+            tokens: r.tokens,
+            wall_ms: r.wall_ms,
+            queue_ms: r.queue_ms,
+            ttft_ms: r.ttft_ms,
+        }
+    }
+
+    fn failed(class: MixClass) -> RequestOutcome {
+        RequestOutcome {
+            class,
+            ok: false,
+            finish: String::new(),
+            tokens: 0,
+            wall_ms: 0.0,
+            queue_ms: 0.0,
+            ttft_ms: 0.0,
+        }
+    }
+
+    /// Per-token decode latency (TPOT): time after the first token,
+    /// amortized over the remaining tokens. None for empty results.
+    fn per_token_ms(&self) -> Option<f64> {
+        if !self.ok || self.tokens == 0 {
+            return None;
+        }
+        Some((self.wall_ms - self.ttft_ms).max(0.0) / (self.tokens - 1).max(1) as f64)
+    }
+}
+
+/// One driven run: per-request outcomes, total wall time, and the server's
+/// scraped metrics report (the `{"report": true}` JSON).
+#[derive(Debug, Clone)]
+pub struct LoadRun {
+    pub outcomes: Vec<RequestOutcome>,
+    pub wall_s: f64,
+    pub report: Json,
+}
+
+fn sleep_until(t0: Instant, at_ms: u64) {
+    let target = Duration::from_millis(at_ms);
+    let elapsed = t0.elapsed();
+    if elapsed < target {
+        std::thread::sleep(target - elapsed);
+    }
+}
+
+/// Replay `sched` against an in-process server, open-loop: submissions fire
+/// at their planned offsets, planned cancels at submit-time + delta; final
+/// records are drained after the last arrival.
+pub fn drive_inprocess(handle: &ServerHandle, sched: &Schedule) -> LoadRun {
+    let t0 = Instant::now();
+    let mut streams = Vec::new();
+    let mut outcomes: Vec<Option<RequestOutcome>> = vec![None; sched.items.len()];
+    // (due_ms from t0, server id) — fired while waiting for later arrivals
+    let mut cancels: Vec<(u64, u64)> = Vec::new();
+    for (i, item) in sched.items.iter().enumerate() {
+        // fire cancels that come due before this arrival
+        cancels.sort_unstable();
+        while let Some(&(due, id)) = cancels.first() {
+            if due > item.at_ms {
+                break;
+            }
+            sleep_until(t0, due);
+            handle.cancel(id);
+            cancels.remove(0);
+        }
+        sleep_until(t0, item.at_ms);
+        match handle.submit(item.req.clone()) {
+            Ok(rs) => {
+                if let Some(delta) = item.cancel_after_ms {
+                    cancels.push((item.at_ms + delta, rs.id));
+                }
+                streams.push((i, rs));
+            }
+            Err(_) => outcomes[i] = Some(RequestOutcome::failed(item.class)),
+        }
+    }
+    cancels.sort_unstable();
+    for (due, id) in cancels {
+        sleep_until(t0, due);
+        handle.cancel(id);
+    }
+    for (i, rs) in streams {
+        let class = sched.items[i].class;
+        outcomes[i] = Some(match rs.wait() {
+            Ok(resp) => RequestOutcome::from_response(class, &resp),
+            Err(_) => RequestOutcome::failed(class),
+        });
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let report = handle.report_json();
+    LoadRun {
+        outcomes: outcomes.into_iter().map(Option::unwrap).collect(),
+        wall_s,
+        report,
+    }
+}
+
+/// Replay `sched` against a TCP server at `addr`: one thread + connection
+/// per request, one extra connection per planned cancel, and a final
+/// `{"report": true}` scrape. Open-loop like [`drive_inprocess`].
+pub fn drive_tcp(addr: &str, sched: &Schedule) -> Result<LoadRun> {
+    let t0 = Instant::now();
+    let mut joins = Vec::new();
+    for item in sched.items.iter().cloned() {
+        let addr = addr.to_string();
+        joins.push(std::thread::spawn(move || request_thread(&addr, t0, &item)));
+    }
+    let mut outcomes = Vec::with_capacity(joins.len());
+    for j in joins {
+        outcomes
+            .push(j.join().unwrap_or_else(|_| RequestOutcome::failed(MixClass::Templated)));
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let line = crate::server::client_request(addr, r#"{"report": true}"#)?;
+    let j = Json::parse(&line).map_err(|e| anyhow!("bad report line: {e}"))?;
+    let report = j
+        .get("report")
+        .cloned()
+        .ok_or_else(|| anyhow!("report scrape missing 'report' key: {line}"))?;
+    Ok(LoadRun { outcomes, wall_s, report })
+}
+
+/// One TCP request end-to-end: wait for the planned arrival, send, stream
+/// lines until the final record. A planned cancel spawns a companion that
+/// ALWAYS opens its control connection at the planned offset (id 0 when the
+/// request never streamed a chunk — the ack is then `ok:false`), keeping
+/// the total connection count schedule-deterministic.
+fn request_thread(addr: &str, t0: Instant, item: &PlannedRequest) -> RequestOutcome {
+    sleep_until(t0, item.at_ms);
+    let id_slot = Arc::new(AtomicU64::new(0));
+    let canceller = item.cancel_after_ms.map(|delta| {
+        let addr = addr.to_string();
+        let due = item.at_ms + delta;
+        let slot = id_slot.clone();
+        std::thread::spawn(move || {
+            sleep_until(t0, due);
+            let id = slot.load(Ordering::Relaxed);
+            let line = format!("{{\"cancel\": {id}}}");
+            let _ = crate::server::client_request(&addr, &line);
+        })
+    });
+    let outcome = (|| -> Result<RequestOutcome> {
+        let mut stream = TcpStream::connect(addr).context("connect")?;
+        stream.write_all(item.req.to_json_line().as_bytes())?;
+        stream.write_all(b"\n")?;
+        stream.flush()?;
+        let mut reader = BufReader::new(stream);
+        let mut line = String::new();
+        loop {
+            line.clear();
+            if reader.read_line(&mut line)? == 0 {
+                bail!("connection closed before the final record");
+            }
+            let t = line.trim_end();
+            if let Ok(resp) = Response::from_json_line(t) {
+                return Ok(RequestOutcome::from_response(item.class, &resp));
+            }
+            // chunk line: learn the server-side id for the canceller
+            if let Ok(j) = Json::parse(t) {
+                if let Some(id) = j.get("id").and_then(Json::as_usize) {
+                    id_slot.store(id as u64, Ordering::Relaxed);
+                }
+            }
+        }
+    })()
+    .unwrap_or_else(|_| RequestOutcome::failed(item.class));
+    if let Some(c) = canceller {
+        let _ = c.join();
+    }
+    outcome
+}
+
+fn hist_of(values: impl IntoIterator<Item = f64>) -> Histogram {
+    let mut h = Histogram::new();
+    for v in values {
+        h.record(v);
+    }
+    h
+}
+
+fn summary_json(h: &mut Histogram) -> Json {
+    let s = h.summarize();
+    Json::obj(vec![
+        ("count", Json::num(s.count as f64)),
+        ("mean", Json::num(s.mean)),
+        ("p50", Json::num(s.p50)),
+        ("p99", Json::num(s.p99)),
+    ])
+}
+
+fn report_counter(report: &Json, name: &str) -> u64 {
+    report.path(&format!("counters.{name}")).and_then(Json::as_usize).unwrap_or(0)
+        as u64
+}
+
+/// Fold a run into the `lookahead-serve-bench/v1` BENCH record. The caller
+/// (serve_bench) adds the `server` section and any `sweeps` before writing.
+pub fn bench_json(pr: u64, spec: &LoadSpec, sched: &Schedule, run: &LoadRun) -> Json {
+    let mut ttft = hist_of(run.outcomes.iter().filter(|o| o.ok).map(|o| o.ttft_ms));
+    let mut lat = hist_of(run.outcomes.iter().filter(|o| o.ok).map(|o| o.wall_ms));
+    let mut queue = hist_of(run.outcomes.iter().filter(|o| o.ok).map(|o| o.queue_ms));
+    let mut tpot = hist_of(run.outcomes.iter().filter_map(RequestOutcome::per_token_ms));
+
+    let sent = run.outcomes.len() as u64;
+    let ok = run.outcomes.iter().filter(|o| o.ok).count() as u64;
+    let errors = sent - ok;
+    let cancelled =
+        run.outcomes.iter().filter(|o| o.finish == "cancelled").count() as u64;
+    let deadline =
+        run.outcomes.iter().filter(|o| o.finish == "deadline").count() as u64;
+    let tokens_all: usize = run.outcomes.iter().map(|o| o.tokens).sum();
+    // goodput counts only work a client actually wanted to completion:
+    // eos/budget finishes. Cancelled/deadline partials are throughput, not
+    // goodput.
+    let tokens_good: usize = run
+        .outcomes
+        .iter()
+        .filter(|o| o.ok && (o.finish == "eos" || o.finish == "budget"))
+        .map(|o| o.tokens)
+        .sum();
+    let wall = run.wall_s.max(1e-9);
+
+    // scraped server-side views
+    let occupancy = run
+        .report
+        .path("histograms.batch_size")
+        .cloned()
+        .unwrap_or_else(|| Json::obj(vec![
+            ("count", Json::num(0.0)),
+            ("mean", Json::num(0.0)),
+            ("p50", Json::num(0.0)),
+            ("p99", Json::num(0.0)),
+        ]));
+    let ph = report_counter(&run.report, "prefix_hits");
+    let pm = report_counter(&run.report, "prefix_miss");
+    let prefix = Json::obj(vec![
+        ("hits", Json::num(ph as f64)),
+        ("misses", Json::num(pm as f64)),
+        ("hit_rate", Json::num(hit_rate(ph, pm))),
+    ]);
+    let warm = report_counter(&run.report, "ngram_warm_requests");
+    let cold = report_counter(&run.report, "ngram_cold_requests");
+    let pool_mean = run
+        .report
+        .path("histograms.pool_hit_rate.mean")
+        .and_then(Json::as_f64)
+        .unwrap_or(0.0);
+    let ngram = Json::obj(vec![
+        ("warm_requests", Json::num(warm as f64)),
+        ("cold_requests", Json::num(cold as f64)),
+        ("warm_frac", Json::num(hit_rate(warm, cold))),
+        ("mean_hit_rate", Json::num(pool_mean)),
+    ]);
+    let sched_counts = Json::Obj(
+        sched
+            .counts()
+            .into_iter()
+            .map(|(k, v)| (k, Json::num(v as f64)))
+            .collect(),
+    );
+
+    Json::obj(vec![
+        ("schema", Json::str("lookahead-serve-bench/v1")),
+        ("bench", Json::str("serve_bench")),
+        ("pr", Json::num(pr as f64)),
+        ("config", spec.to_json()),
+        ("schedule", Json::obj(vec![
+            ("fingerprint", Json::str(format!("{:016x}", sched.fingerprint()))),
+            ("counts", sched_counts),
+        ])),
+        ("requests", Json::obj(vec![
+            ("sent", Json::num(sent as f64)),
+            ("ok", Json::num(ok as f64)),
+            ("errors", Json::num(errors as f64)),
+            ("cancelled", Json::num(cancelled as f64)),
+            ("deadline", Json::num(deadline as f64)),
+        ])),
+        ("ttft_ms", summary_json(&mut ttft)),
+        ("latency_ms", summary_json(&mut lat)),
+        ("queue_ms", summary_json(&mut queue)),
+        ("per_token_ms", summary_json(&mut tpot)),
+        ("wall_s", Json::num(run.wall_s)),
+        ("throughput_tok_per_s", Json::num(tokens_all as f64 / wall)),
+        ("goodput_tok_per_s", Json::num(tokens_good as f64 / wall)),
+        ("batch_occupancy", occupancy),
+        ("batched_rounds",
+         Json::num(report_counter(&run.report, "batched_rounds") as f64)),
+        ("prefix_cache", prefix),
+        ("ngram", ngram),
+    ])
+}
+
+/// Required dotted paths every schema-valid BENCH record must carry — the
+/// CI smoke lane fails on the first missing one.
+pub const BENCH_REQUIRED_PATHS: [&str; 16] = [
+    "schema",
+    "pr",
+    "config.seed",
+    "config.requests",
+    "config.rate_per_s",
+    "schedule.fingerprint",
+    "requests.sent",
+    "requests.ok",
+    "ttft_ms.p50",
+    "ttft_ms.p99",
+    "per_token_ms.mean",
+    "goodput_tok_per_s",
+    "throughput_tok_per_s",
+    "batch_occupancy.mean",
+    "prefix_cache.hit_rate",
+    "ngram.mean_hit_rate",
+];
+
+/// Validate one BENCH_*.json text blob against the v1 schema.
+pub fn validate_bench_json(text: &str) -> Result<()> {
+    let j = Json::parse(text).map_err(|e| anyhow!("malformed json: {e}"))?;
+    let schema = j.get("schema").and_then(Json::as_str).unwrap_or("");
+    if schema != "lookahead-serve-bench/v1" {
+        bail!("bad schema '{schema}' (want lookahead-serve-bench/v1)");
+    }
+    for path in BENCH_REQUIRED_PATHS {
+        if j.path(path).is_none() {
+            bail!("missing required field '{path}'");
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> LoadSpec {
+        LoadSpec::new(7)
+            .requests(40)
+            .rate_per_s(200.0)
+            .cancel_frac(0.2)
+            .deadline_frac(0.2)
+    }
+
+    #[test]
+    fn schedule_is_seed_deterministic() {
+        let a = Schedule::generate(&spec());
+        let b = Schedule::generate(&spec());
+        assert_eq!(a.dump(), b.dump(), "same seed must replay byte-identically");
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.counts(), b.counts());
+        let c = Schedule::generate(&LoadSpec { seed: 8, ..spec() });
+        assert_ne!(a.dump(), c.dump(), "different seeds must differ");
+    }
+
+    #[test]
+    fn schedule_respects_spec() {
+        let s = Schedule::generate(&spec());
+        assert_eq!(s.items.len(), 40);
+        let mut prev = 0;
+        for it in &s.items {
+            assert!(it.at_ms >= prev, "arrivals must be time-ordered");
+            prev = it.at_ms;
+            assert!(it.req.max_tokens >= 8 && it.req.max_tokens <= 24);
+            if it.cancel_after_ms.is_some() {
+                assert!(it.req.stream, "cancel targets must stream to expose ids");
+                assert!(it.req.deadline_ms.is_none(),
+                        "churn kinds are mutually exclusive");
+            }
+            if it.class == MixClass::MultiTenant {
+                assert!(it.req.tenant.is_some());
+            }
+        }
+        let counts = s.counts();
+        assert_eq!(counts["total"], 40);
+        let planned = counts.get("cancels_planned").copied().unwrap_or(0);
+        assert_eq!(s.tcp_conns(), 40 + planned as usize + 1);
+    }
+
+    #[test]
+    fn churn_fractions_cover_extremes() {
+        let all_cancel = Schedule::generate(
+            &LoadSpec::new(1).requests(10).cancel_frac(1.0),
+        );
+        assert!(all_cancel.items.iter().all(|i| i.cancel_after_ms.is_some()));
+        assert_eq!(all_cancel.tcp_conns(), 10 + 10 + 1);
+        let all_deadline = Schedule::generate(
+            &LoadSpec::new(1).requests(10).deadline_frac(1.0).deadline_ms(25),
+        );
+        assert!(all_deadline
+            .items
+            .iter()
+            .all(|i| i.req.deadline_ms == Some(25) && i.cancel_after_ms.is_none()));
+        let quiet = Schedule::generate(&LoadSpec::new(1).requests(10));
+        assert!(quiet
+            .items
+            .iter()
+            .all(|i| i.cancel_after_ms.is_none() && i.req.deadline_ms.is_none()));
+    }
+
+    #[test]
+    fn mix_parses() {
+        let m = LoadSpec::parse_mix("templated:2,tenant:1,prefix:1").unwrap();
+        assert_eq!(m.len(), 3);
+        assert_eq!(m[0], (MixClass::Templated, 2.0));
+        assert_eq!(LoadSpec::parse_mix("prefix").unwrap(),
+                   vec![(MixClass::LongSharedPrefix, 1.0)]);
+        assert!(LoadSpec::parse_mix("bogus:1").is_err());
+        assert!(LoadSpec::parse_mix("").is_err());
+    }
+
+    #[test]
+    fn single_class_mix_only_emits_that_class() {
+        let sp = LoadSpec::new(3)
+            .requests(20)
+            .mix(vec![(MixClass::LongSharedPrefix, 1.0)]);
+        let s = Schedule::generate(&sp);
+        assert!(s.items.iter().all(|i| i.class == MixClass::LongSharedPrefix));
+        assert!(s
+            .items
+            .iter()
+            .all(|i| i.req.prompt.starts_with(crate::workload::SHARED_PREFIX)));
+    }
+
+    #[test]
+    fn bench_json_is_schema_valid() {
+        let sp = spec();
+        let sched = Schedule::generate(&sp);
+        // synthetic outcomes — bench_json must not require a live server
+        let outcomes: Vec<RequestOutcome> = sched
+            .items
+            .iter()
+            .map(|it| RequestOutcome {
+                class: it.class,
+                ok: true,
+                finish: "budget".into(),
+                tokens: it.req.max_tokens,
+                wall_ms: 20.0,
+                queue_ms: 1.0,
+                ttft_ms: 5.0,
+            })
+            .collect();
+        let run = LoadRun {
+            outcomes,
+            wall_s: 1.0,
+            report: Json::parse(r#"{"counters": {}, "histograms": {}}"#).unwrap(),
+        };
+        let j = bench_json(6, &sp, &sched, &run);
+        validate_bench_json(&j.dump()).unwrap();
+        assert!(j.path("goodput_tok_per_s").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(j.path("requests.ok").unwrap().as_usize(), Some(40));
+    }
+
+    #[test]
+    fn validator_rejects_bad_blobs() {
+        assert!(validate_bench_json("not json").is_err());
+        assert!(validate_bench_json(r#"{"schema": "other/v1"}"#).is_err());
+        let e = validate_bench_json(r#"{"schema": "lookahead-serve-bench/v1"}"#)
+            .unwrap_err();
+        assert!(e.to_string().contains("missing required field"));
+    }
+}

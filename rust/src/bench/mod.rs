@@ -3,6 +3,7 @@
 //! and JSON result dumps for EXPERIMENTS.md provenance.
 
 pub mod driver;
+pub mod load;
 
 use std::time::Instant;
 

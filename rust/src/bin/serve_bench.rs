@@ -1,0 +1,292 @@
+//! `serve_bench` — open-loop serving benchmark on sim artifacts.
+//!
+//! Drives the real TCP server (default) or the in-process handle with a
+//! seeded Poisson arrival schedule from `bench::load`, then writes the
+//! `lookahead-serve-bench/v1` BENCH record (p50/p99 TTFT, per-token
+//! latency, goodput, batch occupancy, prefix/n-gram hit rates) and
+//! self-validates it. `--validate FILE` checks an existing record instead
+//! (the CI smoke lane's second pass).
+//!
+//! Determinism contract: the same `--seed` replays the identical arrival
+//! schedule and request set (`schedule.fingerprint` in the output pins it);
+//! latencies are real wall clock and vary run to run.
+
+use std::net::TcpStream;
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use lookahead::bench::load::{self, bench_json, drive_inprocess, drive_tcp, LoadRun,
+                             LoadSpec, Schedule};
+use lookahead::runtime::sim::{ensure_sim_artifacts, ensure_slow_sim_artifacts};
+use lookahead::server::{serve_tcp, Policy, ServerConfig, ServerHandle};
+use lookahead::util::cli::{usage, Args, Opt};
+use lookahead::util::json::Json;
+
+fn main() -> Result<()> {
+    lookahead::util::log::set_from_env();
+    let args = Args::parse_env();
+    if args.bool_or("help", false) {
+        print_usage(&args);
+        return Ok(());
+    }
+    if let Some(f) = args.get("validate") {
+        let text =
+            std::fs::read_to_string(f).with_context(|| format!("reading {f}"))?;
+        load::validate_bench_json(&text).with_context(|| format!("{f}"))?;
+        println!("{f}: schema-valid ({})", schema_line(&text));
+        return Ok(());
+    }
+
+    let artifacts = resolve_artifacts(&args)?;
+    let spec = build_spec(&args)?;
+    let sched = Schedule::generate(&spec);
+    let cfg = build_server_config(&args, &artifacts, None);
+    let addr = args.str_or("addr", "127.0.0.1:7979");
+    let inprocess = args.bool_or("inprocess", false);
+
+    eprintln!(
+        "serve_bench: {} requests, rate {}/s, seed {}, fingerprint {:016x}, {}",
+        spec.requests,
+        spec.rate_per_s,
+        spec.seed,
+        sched.fingerprint(),
+        if inprocess { "in-process".to_string() } else { format!("tcp {addr}") },
+    );
+
+    let run = if inprocess {
+        run_one_inprocess(cfg.clone(), &sched)?
+    } else {
+        run_one_tcp(&addr, cfg.clone(), &sched)?
+    };
+    let mut record = bench_json(args.u64_or("pr", 6), &spec, &sched, &run);
+    attach_server_section(&mut record, &cfg);
+
+    // --sweep-time-slice 2,4,8: replay the same schedule against servers
+    // that differ only in time_slice — the comparative numbers future
+    // tuning PRs anchor to (BatchedRound group keys / chunking / time_slice
+    // are the known untuned knobs).
+    if let Some(list) = args.get("sweep-time-slice") {
+        let mut sweeps = Vec::new();
+        for (i, ts) in list.split(',').enumerate() {
+            let ts: usize = ts
+                .trim()
+                .parse()
+                .map_err(|_| anyhow!("bad --sweep-time-slice entry '{ts}'"))?;
+            let swept = build_server_config(&args, &artifacts, Some(ts));
+            let srun = if inprocess {
+                run_one_inprocess(swept, &sched)?
+            } else {
+                run_one_tcp(&bump_port(&addr, 1 + i as u16)?, swept, &sched)?
+            };
+            let sj = bench_json(args.u64_or("pr", 6), &spec, &sched, &srun);
+            sweeps.push(Json::obj(vec![
+                ("time_slice", Json::num(ts as f64)),
+                ("goodput_tok_per_s", num_at(&sj, "goodput_tok_per_s")),
+                ("ttft_ms_p50", num_at(&sj, "ttft_ms.p50")),
+                ("ttft_ms_p99", num_at(&sj, "ttft_ms.p99")),
+                ("per_token_ms_mean", num_at(&sj, "per_token_ms.mean")),
+                ("batch_occupancy_mean", num_at(&sj, "batch_occupancy.mean")),
+            ]));
+            eprintln!("sweep time_slice={ts}: done");
+        }
+        if let Json::Obj(m) = &mut record {
+            m.insert("sweeps".to_string(), Json::Arr(sweeps));
+        }
+    }
+
+    let out = args.str_or("out", format!("BENCH_{}.json", args.u64_or("pr", 6)).as_str());
+    let text = record.dump();
+    load::validate_bench_json(&text).context("self-validation of the new record")?;
+    std::fs::write(&out, &text).with_context(|| format!("writing {out}"))?;
+    println!("wrote {out}");
+    print_headline(&record);
+    Ok(())
+}
+
+fn print_usage(args: &Args) {
+    let opts = [
+        Opt { name: "artifacts", default: Some("sim-slow"),
+              help: "sim | sim-slow | artifact directory" },
+        Opt { name: "seed", default: Some("7"), help: "schedule seed" },
+        Opt { name: "requests", default: Some("32"), help: "offered requests" },
+        Opt { name: "rate", default: Some("50"), help: "Poisson arrivals per second" },
+        Opt { name: "mix", default: Some("templated:1,tenant:1,prefix:1"),
+              help: "workload mix class:weight list" },
+        Opt { name: "cancel-frac", default: Some("0"),
+              help: "fraction cancelled mid-flight" },
+        Opt { name: "deadline-frac", default: Some("0"),
+              help: "fraction carrying a serving deadline" },
+        Opt { name: "deadline-ms", default: Some("40"), help: "deadline budget" },
+        Opt { name: "max-tokens", default: Some("8,24"),
+              help: "per-request budget range lo,hi" },
+        Opt { name: "methods", default: Some("lookahead"),
+              help: "decoding methods, comma-separated" },
+        Opt { name: "workers", default: Some("2"), help: "serving workers" },
+        Opt { name: "policy", default: Some("fifo"), help: "fifo | sjf" },
+        Opt { name: "time-slice", default: Some("4"),
+              help: "decode steps per session per round" },
+        Opt { name: "max-live", default: Some("4"),
+              help: "interleaved sessions per worker" },
+        Opt { name: "kv-budget", default: Some("0"),
+              help: "device KV budget per worker (0 = unlimited)" },
+        Opt { name: "batch-decode", default: Some("true"),
+              help: "continuous batching on/off" },
+        Opt { name: "addr", default: Some("127.0.0.1:7979"),
+              help: "TCP bind address (sweeps use successive ports)" },
+        Opt { name: "inprocess", default: Some("false"),
+              help: "drive ServerHandle directly instead of TCP" },
+        Opt { name: "pr", default: Some("6"), help: "trajectory index for BENCH_<pr>" },
+        Opt { name: "out", default: Some("BENCH_<pr>.json"), help: "output path" },
+        Opt { name: "sweep-time-slice", default: None,
+              help: "extra comparative runs, e.g. 2,4,8" },
+        Opt { name: "validate", default: None,
+              help: "validate an existing BENCH_*.json and exit" },
+    ];
+    println!("{}", usage(args.program(),
+        "serve_bench — open-loop serving benchmark (seeded Poisson load).",
+        &opts));
+}
+
+fn resolve_artifacts(args: &Args) -> Result<String> {
+    Ok(match args.str_or("artifacts", "sim-slow").as_str() {
+        // slow-sim decodes take ~5ms per launch, so queueing/batching is
+        // actually visible in the latency numbers; fast sim is near-instant
+        "sim" => ensure_sim_artifacts()?.to_string_lossy().into_owned(),
+        "sim-slow" => ensure_slow_sim_artifacts()?.to_string_lossy().into_owned(),
+        dir => dir.to_string(),
+    })
+}
+
+fn build_spec(args: &Args) -> Result<LoadSpec> {
+    let (lo, hi) = parse_range(&args.str_or("max-tokens", "8,24"))?;
+    let methods: Vec<String> = args
+        .str_or("methods", "lookahead")
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if methods.is_empty() {
+        bail!("--methods must name at least one method");
+    }
+    Ok(LoadSpec::new(args.u64_or("seed", 7))
+        .requests(args.usize_or("requests", 32))
+        .rate_per_s(args.f64_or("rate", 50.0))
+        .mix(LoadSpec::parse_mix(
+            &args.str_or("mix", "templated:1,tenant:1,prefix:1"),
+        )?)
+        .cancel_frac(args.f64_or("cancel-frac", 0.0))
+        .deadline_frac(args.f64_or("deadline-frac", 0.0))
+        .deadline_ms(args.u64_or("deadline-ms", 40))
+        .max_tokens(lo, hi)
+        .methods(methods))
+}
+
+fn parse_range(s: &str) -> Result<(usize, usize)> {
+    let parts: Vec<usize> =
+        s.split(',').filter_map(|x| x.trim().parse().ok()).collect();
+    match parts.as_slice() {
+        [one] => Ok((*one, *one)),
+        [lo, hi] if lo <= hi => Ok((*lo, *hi)),
+        _ => bail!("bad range '{s}' (want lo,hi)"),
+    }
+}
+
+fn build_server_config(args: &Args, artifacts: &str,
+                       time_slice_override: Option<usize>) -> ServerConfig {
+    ServerConfig::builder()
+        .workers(args.usize_or("workers", 2))
+        .policy(Policy::parse(&args.str_or("policy", "fifo")))
+        .batch_decode(args.bool_or("batch-decode", true))
+        .artifacts_dir(artifacts)
+        .time_slice(time_slice_override
+            .unwrap_or_else(|| args.usize_or("time-slice", 4)))
+        .max_live(args.usize_or("max-live", 4))
+        .kv_budget(args.usize_or("kv-budget", 0))
+        .build()
+}
+
+fn run_one_inprocess(cfg: ServerConfig, sched: &Schedule) -> Result<LoadRun> {
+    let h = ServerHandle::start(cfg)?;
+    let run = drive_inprocess(&h, sched);
+    h.shutdown();
+    Ok(run)
+}
+
+/// One TCP run: serve in a thread for exactly the schedule's connection
+/// count (+1 for the bind probe), drive, join.
+fn run_one_tcp(addr: &str, cfg: ServerConfig, sched: &Schedule) -> Result<LoadRun> {
+    let conns = sched.tcp_conns() + 1; // +1: the wait_for_bind probe
+    let addr_owned = addr.to_string();
+    let server =
+        std::thread::spawn(move || serve_tcp(&addr_owned, cfg, Some(conns)));
+    wait_for_bind(addr)?;
+    let run = drive_tcp(addr, sched)?;
+    server
+        .join()
+        .map_err(|_| anyhow!("server thread panicked"))?
+        .context("serve_tcp")?;
+    Ok(run)
+}
+
+/// Poll until the listener accepts — exactly one successful probe
+/// connection (accounted for in `run_one_tcp`'s max_conns).
+fn wait_for_bind(addr: &str) -> Result<()> {
+    for _ in 0..250 {
+        if TcpStream::connect(addr).is_ok() {
+            return Ok(());
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    bail!("server at {addr} never came up");
+}
+
+fn bump_port(addr: &str, by: u16) -> Result<String> {
+    let (host, port) =
+        addr.rsplit_once(':').ok_or_else(|| anyhow!("bad addr '{addr}'"))?;
+    let port: u16 = port.parse().map_err(|_| anyhow!("bad port in '{addr}'"))?;
+    Ok(format!("{host}:{}", port + by))
+}
+
+fn attach_server_section(record: &mut Json, cfg: &ServerConfig) {
+    let server = Json::obj(vec![
+        ("workers", Json::num(cfg.workers as f64)),
+        ("policy", Json::str(format!("{:?}", cfg.policy))),
+        ("batch_decode",
+         Json::Bool(cfg.batch_decode && cfg.worker.batch_decode)),
+        ("time_slice", Json::num(cfg.worker.time_slice as f64)),
+        ("max_live", Json::num(cfg.worker.max_live as f64)),
+        ("kv_budget", Json::num(cfg.worker.kv_budget as f64)),
+        ("prefix_cache", Json::Bool(cfg.worker.prefix_cache)),
+        ("share_ngrams", Json::Bool(cfg.share_ngrams)),
+    ]);
+    if let Json::Obj(m) = record {
+        m.insert("server".to_string(), server);
+    }
+}
+
+fn num_at(j: &Json, path: &str) -> Json {
+    Json::num(j.path(path).and_then(Json::as_f64).unwrap_or(0.0))
+}
+
+fn schema_line(text: &str) -> String {
+    Json::parse(text)
+        .ok()
+        .and_then(|j| j.get("schema").and_then(|s| s.as_str().map(str::to_string)))
+        .unwrap_or_else(|| "?".to_string())
+}
+
+fn print_headline(j: &Json) {
+    let f = |p: &str| j.path(p).and_then(Json::as_f64).unwrap_or(0.0);
+    println!(
+        "ttft p50/p99 {:.1}/{:.1} ms | per-token {:.2} ms | goodput {:.0} tok/s \
+         | occupancy {:.2} | prefix hit {:.0}% | ngram warm {:.0}%",
+        f("ttft_ms.p50"),
+        f("ttft_ms.p99"),
+        f("per_token_ms.mean"),
+        f("goodput_tok_per_s"),
+        f("batch_occupancy.mean"),
+        100.0 * f("prefix_cache.hit_rate"),
+        100.0 * f("ngram.warm_frac"),
+    );
+}

@@ -17,7 +17,7 @@ use lookahead::engine::spec_decode::SpecDecode;
 use lookahead::engine::{Decoder, GenParams, SamplingParams};
 use lookahead::layout::Wng;
 use lookahead::runtime::{cpu_client, Manifest, ModelRuntime};
-use lookahead::server::{serve_tcp, Policy, ServerConfig, WorkerConfig};
+use lookahead::server::{serve_tcp, Policy, ServerConfig};
 use lookahead::tokenizer::ByteTokenizer;
 use lookahead::util::cli::{usage, Args, Opt};
 
@@ -77,6 +77,8 @@ fn print_usage(args: &Args) {
                      live+parked depth (serve)" },
         Opt { name: "stream", default: Some("false"),
               help: "stream chunk lines before the final record (client)" },
+        Opt { name: "report", default: Some("false"),
+              help: "scrape the server metrics report as JSON (client)" },
         Opt { name: "devices", default: Some("4"), help: "LP simulated devices" },
     ];
     println!("{}", usage(args.program(),
@@ -144,34 +146,37 @@ fn cmd_generate(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let share_ngrams = args.bool_or("share-ngrams", true);
-    let cfg = ServerConfig {
-        workers: args.usize_or("workers", 1),
-        policy: Policy::parse(&args.str_or("policy", "fifo")),
-        queue_depth: args.usize_or("queue-depth", 256),
-        share_ngrams,
-        ngram_ttl_ms: args.get("ngram-ttl-ms").and_then(|v| v.parse().ok()),
-        batch_decode: args.bool_or("batch-decode", true),
-        rebalance: args.bool_or("rebalance", false),
-        rebalance_interval_ms: args.u64_or("rebalance-interval-ms", 50),
-        worker: WorkerConfig {
-            artifacts_dir: args.str_or("artifacts", "artifacts"),
-            model: args.str_or("model", "tiny"),
-            wng: args.wng("wng", (5, 3, 5)),
-            draft_model: "draft".into(),
-            time_slice: args.usize_or("time-slice", 4),
-            max_live: args.usize_or("max-live", 4),
-            batch_decode: args.bool_or("batch-decode", true),
-            kv_budget: args.usize_or("kv-budget", 0),
-            prefix_cache: args.bool_or("prefix-cache", true),
-        },
-    };
+    let cfg = ServerConfig::builder()
+        .workers(args.usize_or("workers", 1))
+        .policy(Policy::parse(&args.str_or("policy", "fifo")))
+        .queue_depth(args.usize_or("queue-depth", 256))
+        .share_ngrams(args.bool_or("share-ngrams", true))
+        .ngram_ttl_ms(args.get("ngram-ttl-ms").and_then(|v| v.parse().ok()))
+        .batch_decode(args.bool_or("batch-decode", true))
+        .rebalance(args.bool_or("rebalance", false))
+        .rebalance_interval_ms(args.u64_or("rebalance-interval-ms", 50))
+        .artifacts_dir(args.str_or("artifacts", "artifacts"))
+        .model(args.str_or("model", "tiny"))
+        .wng(args.wng("wng", (5, 3, 5)))
+        .time_slice(args.usize_or("time-slice", 4))
+        .max_live(args.usize_or("max-live", 4))
+        .kv_budget(args.usize_or("kv-budget", 0))
+        .prefix_cache(args.bool_or("prefix-cache", true))
+        .build();
     let max_conns = args.get("max-conns").and_then(|v| v.parse().ok());
     serve_tcp(&args.str_or("addr", "127.0.0.1:7878"), cfg, max_conns)
 }
 
 fn cmd_client(args: &Args) -> Result<()> {
     use lookahead::util::json::Json;
+    let addr = args.str_or("addr", "127.0.0.1:7878");
+    // --report: scrape the one-line machine-readable metrics report
+    // instead of sending a generation request
+    if args.bool_or("report", false) {
+        let resp = lookahead::server::client_request(&addr, r#"{"report": true}"#)?;
+        println!("{resp}");
+        return Ok(());
+    }
     let stream = args.bool_or("stream", false);
     let req = Json::obj(vec![
         ("prompt", Json::str(args.str_or("prompt", "hello"))),
@@ -180,7 +185,6 @@ fn cmd_client(args: &Args) -> Result<()> {
         ("temperature", Json::num(args.f64_or("temperature", 0.0))),
         ("stream", Json::Bool(stream)),
     ]);
-    let addr = args.str_or("addr", "127.0.0.1:7878");
     let resp = if stream {
         lookahead::server::client_request_stream(&addr, &req.dump(),
                                                  |chunk| println!("{chunk}"))?

@@ -6,6 +6,37 @@ pub mod rouge;
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
+
+/// Typed percentile summary of one [`Histogram`] — what
+/// `ServerHandle::hist_summary` / `Registry::report_json` hand to the bench
+/// harness and operators so nobody needs raw-sample access. Empty
+/// histograms summarize to all-zero (count = 0).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistSummary {
+    pub count: usize,
+    pub mean: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p99: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl HistSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("mean", Json::num(self.mean)),
+            ("p50", Json::num(self.p50)),
+            ("p90", Json::num(self.p90)),
+            ("p99", Json::num(self.p99)),
+            ("min", Json::num(self.min)),
+            ("max", Json::num(self.max)),
+        ])
+    }
+}
+
 /// hits / (hits + misses), 0 when no observations — the one hit-rate
 /// convention shared by pools, caches, suites, and per-request stats.
 pub fn hit_rate(hits: u64, misses: u64) -> f64 {
@@ -86,18 +117,38 @@ impl Histogram {
         self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
     }
 
-    pub fn summary(&mut self) -> String {
+    /// Typed percentile snapshot; all-zero when empty.
+    pub fn summarize(&mut self) -> HistSummary {
         if self.samples.is_empty() {
+            return HistSummary {
+                count: 0,
+                mean: 0.0,
+                p50: 0.0,
+                p90: 0.0,
+                p99: 0.0,
+                min: 0.0,
+                max: 0.0,
+            };
+        }
+        HistSummary {
+            count: self.count(),
+            mean: self.mean(),
+            p50: self.p50(),
+            p90: self.p90(),
+            p99: self.p99(),
+            min: self.min(),
+            max: self.max(),
+        }
+    }
+
+    pub fn summary(&mut self) -> String {
+        let s = self.summarize();
+        if s.count == 0 {
             return "n=0".to_string();
         }
         format!(
             "n={} mean={:.2} p50={:.2} p90={:.2} p99={:.2} max={:.2}",
-            self.count(),
-            self.mean(),
-            self.p50(),
-            self.p90(),
-            self.p99(),
-            self.max()
+            s.count, s.mean, s.p50, s.p90, s.p99, s.max
         )
     }
 }
@@ -131,6 +182,11 @@ impl Registry {
         self.counters.get(name).copied().unwrap_or(0)
     }
 
+    /// Percentile summary of one named histogram (None when never observed).
+    pub fn summary(&mut self, name: &str) -> Option<HistSummary> {
+        self.histograms.get_mut(name).map(Histogram::summarize)
+    }
+
     pub fn report(&mut self) -> String {
         let mut s = String::new();
         for (k, v) in &self.counters {
@@ -142,6 +198,26 @@ impl Registry {
             s.push_str(&format!("hist    {k}: {line}\n"));
         }
         s
+    }
+
+    /// Machine-readable twin of [`Registry::report`]:
+    /// `{"counters": {..}, "histograms": {name: {count,mean,p50,p90,p99,min,max}}}`.
+    /// This is what the `{"report": true}` TCP control line returns and what
+    /// the serving bench harness scrapes.
+    pub fn report_json(&mut self) -> Json {
+        let counters = Json::Obj(
+            self.counters
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::num(*v as f64)))
+                .collect(),
+        );
+        let hists = Json::Obj(
+            self.histograms
+                .iter_mut()
+                .map(|(k, h)| (k.clone(), h.summarize().to_json()))
+                .collect(),
+        );
+        Json::obj(vec![("counters", counters), ("histograms", hists)])
     }
 }
 
@@ -275,6 +351,46 @@ mod tests {
         r.observe("latency_ms", 4.0);
         assert_eq!(r.counter("requests"), 3);
         assert!(r.report().contains("requests = 3"));
+    }
+
+    #[test]
+    fn summarize_matches_accessors() {
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        let s = h.summarize();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.p50, 50.0);
+        assert_eq!(s.p99, 99.0);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        // empty histogram -> all-zero, no NaN/inf leaks
+        let s0 = Histogram::new().summarize();
+        assert_eq!(s0.count, 0);
+        assert_eq!(s0.min, 0.0);
+        assert_eq!(s0.max, 0.0);
+    }
+
+    #[test]
+    fn registry_summary_and_json() {
+        let mut r = Registry::new();
+        r.inc("requests", 3);
+        r.observe("latency_ms", 4.0);
+        r.observe("latency_ms", 8.0);
+        let s = r.summary("latency_ms").unwrap();
+        assert_eq!(s.count, 2);
+        assert!((s.mean - 6.0).abs() < 1e-12);
+        assert!(r.summary("nope").is_none());
+        let j = r.report_json();
+        assert_eq!(j.path("counters.requests").unwrap().as_usize(), Some(3));
+        assert_eq!(
+            j.path("histograms.latency_ms.count").unwrap().as_usize(),
+            Some(2)
+        );
+        // round-trips through the writer/parser
+        let back = Json::parse(&j.dump()).unwrap();
+        assert_eq!(back, j);
     }
 
     #[test]

@@ -1,0 +1,321 @@
+//! Serving configuration: [`ServerConfig`] + [`WorkerConfig`], their
+//! documented defaults, and the chainable builders.
+//!
+//! This is the ONLY module that writes struct literals of these types —
+//! every other construction site goes through [`ServerConfig::builder`],
+//! [`WorkerConfig::builder`], or `Default`. Adding a config field is then a
+//! one-module change (plus the CLI flag that feeds it) instead of a sweep
+//! over main/benches/every integration test.
+
+use crate::server::scheduler::Policy;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerConfig {
+    pub workers: usize,
+    pub policy: Policy,
+    pub queue_depth: usize,
+    /// server-level toggle for the cross-request shared n-gram cache. When
+    /// true, one `NgramCacheRegistry` spans all workers; individual
+    /// requests can still opt out via `share_ngrams: false`. When false,
+    /// no registry exists and every request decodes against a cold pool.
+    pub share_ngrams: bool,
+    /// TTL decay for shared n-gram caches: entries untouched for this many
+    /// ms are evicted on shard access (None = keep until LRU pressure).
+    pub ngram_ttl_ms: Option<u64>,
+    /// Continuous batching: fuse compatible live sessions into one batched
+    /// decode call per scheduling round. Workers batch only when BOTH this
+    /// and their `WorkerConfig::batch_decode` are true (both default on),
+    /// so an explicit `false` at either level wins. The sequential
+    /// per-session path commits byte-identical token streams.
+    pub batch_decode: bool,
+    /// Cross-worker session rebalancing: a server thread periodically
+    /// compares per-worker live+parked depth and moves the coldest parked
+    /// [`crate::kv::SessionSnapshot`] from the deepest worker to the
+    /// shallowest one (snapshots are runtime-portable, so the adopter
+    /// resumes byte-identically). Only meaningful with `workers > 1`; the
+    /// donor must have parked sessions, so pair it with
+    /// `WorkerConfig::kv_budget`.
+    pub rebalance: bool,
+    /// Rebalance scan interval in ms (ignored when `rebalance` is false).
+    pub rebalance_interval_ms: u64,
+    pub worker: WorkerConfig,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            workers: 1,
+            policy: Policy::Fifo,
+            queue_depth: 256,
+            share_ngrams: true,
+            ngram_ttl_ms: None,
+            batch_decode: true,
+            rebalance: false,
+            rebalance_interval_ms: 50,
+            worker: WorkerConfig::default(),
+        }
+    }
+}
+
+impl ServerConfig {
+    /// Chainable builder over the documented defaults:
+    /// `ServerConfig::builder().workers(2).rebalance(true).build()`.
+    pub fn builder() -> ServerConfigBuilder {
+        ServerConfigBuilder::default()
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerConfig {
+    pub artifacts_dir: String,
+    pub model: String,
+    /// default (W,N,G) when the request does not override it
+    pub wng: (usize, usize, usize),
+    pub draft_model: String,
+    /// decode steps each live session gets per scheduling round.
+    pub time_slice: usize,
+    /// max concurrently interleaved sessions per worker.
+    pub max_live: usize,
+    /// fuse compatible live sessions into one batched decode call per round
+    /// (falls back to per-session calls when the model has no batched
+    /// executable for a group).
+    pub batch_decode: bool,
+    /// device KV budget: max device-resident session caches. When live
+    /// sessions exceed it, the coldest suspendable session is parked
+    /// (snapshot to host + device free) and revived when a slot opens —
+    /// `max_live` then counts live + parked, a soft limit. 0 = unlimited
+    /// (every admitted session stays device-resident, the pre-kv behavior).
+    pub kv_budget: usize,
+    /// prefix-reuse trie: requests sharing a long committed prompt prefix
+    /// fork a stored KV snapshot instead of paying a full prefill
+    /// (byte-exact; needs a `cache_io` executable in the artifacts).
+    pub prefix_cache: bool,
+}
+
+impl Default for WorkerConfig {
+    fn default() -> Self {
+        WorkerConfig {
+            artifacts_dir: "artifacts".into(),
+            model: "tiny".into(),
+            wng: (5, 3, 5),
+            draft_model: "draft".into(),
+            time_slice: 4,
+            max_live: 4,
+            batch_decode: true,
+            kv_budget: 0,
+            prefix_cache: true,
+        }
+    }
+}
+
+impl WorkerConfig {
+    /// Chainable builder over the documented defaults.
+    pub fn builder() -> WorkerConfigBuilder {
+        WorkerConfigBuilder::default()
+    }
+}
+
+/// Chainable [`ServerConfig`] constructor. Worker-level knobs every caller
+/// flips (`artifacts_dir`, `model`, `time_slice`, ...) are exposed directly
+/// and mutate the embedded [`WorkerConfig`]; `worker(..)` replaces the whole
+/// embedded config, so order matters — later calls win.
+#[derive(Debug, Clone, Default)]
+pub struct ServerConfigBuilder {
+    cfg: ServerConfig,
+}
+
+impl ServerConfigBuilder {
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.workers = n;
+        self
+    }
+
+    pub fn policy(mut self, p: Policy) -> Self {
+        self.cfg.policy = p;
+        self
+    }
+
+    pub fn queue_depth(mut self, depth: usize) -> Self {
+        self.cfg.queue_depth = depth;
+        self
+    }
+
+    pub fn share_ngrams(mut self, on: bool) -> Self {
+        self.cfg.share_ngrams = on;
+        self
+    }
+
+    pub fn ngram_ttl_ms(mut self, ttl: Option<u64>) -> Self {
+        self.cfg.ngram_ttl_ms = ttl;
+        self
+    }
+
+    /// Sets the toggle at BOTH levels (server and worker): the effective
+    /// value is their AND, so one builder call expresses the caller's
+    /// intent either way.
+    pub fn batch_decode(mut self, on: bool) -> Self {
+        self.cfg.batch_decode = on;
+        self.cfg.worker.batch_decode = on;
+        self
+    }
+
+    pub fn rebalance(mut self, on: bool) -> Self {
+        self.cfg.rebalance = on;
+        self
+    }
+
+    pub fn rebalance_interval_ms(mut self, ms: u64) -> Self {
+        self.cfg.rebalance_interval_ms = ms;
+        self
+    }
+
+    /// Replace the embedded [`WorkerConfig`] wholesale (also resets any
+    /// worker-level knob set earlier on this builder).
+    pub fn worker(mut self, w: WorkerConfig) -> Self {
+        self.cfg.worker = w;
+        self
+    }
+
+    // -- worker-level passthroughs -----------------------------------------
+
+    pub fn artifacts_dir(mut self, dir: impl Into<String>) -> Self {
+        self.cfg.worker.artifacts_dir = dir.into();
+        self
+    }
+
+    pub fn model(mut self, model: impl Into<String>) -> Self {
+        self.cfg.worker.model = model.into();
+        self
+    }
+
+    pub fn wng(mut self, wng: (usize, usize, usize)) -> Self {
+        self.cfg.worker.wng = wng;
+        self
+    }
+
+    pub fn draft_model(mut self, model: impl Into<String>) -> Self {
+        self.cfg.worker.draft_model = model.into();
+        self
+    }
+
+    pub fn time_slice(mut self, steps: usize) -> Self {
+        self.cfg.worker.time_slice = steps;
+        self
+    }
+
+    pub fn max_live(mut self, n: usize) -> Self {
+        self.cfg.worker.max_live = n;
+        self
+    }
+
+    pub fn kv_budget(mut self, n: usize) -> Self {
+        self.cfg.worker.kv_budget = n;
+        self
+    }
+
+    pub fn prefix_cache(mut self, on: bool) -> Self {
+        self.cfg.worker.prefix_cache = on;
+        self
+    }
+
+    pub fn build(self) -> ServerConfig {
+        self.cfg
+    }
+}
+
+/// Chainable [`WorkerConfig`] constructor (for callers that hand-build
+/// workers without a server, e.g. the batched-equivalence harness).
+#[derive(Debug, Clone, Default)]
+pub struct WorkerConfigBuilder {
+    cfg: WorkerConfig,
+}
+
+impl WorkerConfigBuilder {
+    pub fn artifacts_dir(mut self, dir: impl Into<String>) -> Self {
+        self.cfg.artifacts_dir = dir.into();
+        self
+    }
+
+    pub fn model(mut self, model: impl Into<String>) -> Self {
+        self.cfg.model = model.into();
+        self
+    }
+
+    pub fn wng(mut self, wng: (usize, usize, usize)) -> Self {
+        self.cfg.wng = wng;
+        self
+    }
+
+    pub fn draft_model(mut self, model: impl Into<String>) -> Self {
+        self.cfg.draft_model = model.into();
+        self
+    }
+
+    pub fn time_slice(mut self, steps: usize) -> Self {
+        self.cfg.time_slice = steps;
+        self
+    }
+
+    pub fn max_live(mut self, n: usize) -> Self {
+        self.cfg.max_live = n;
+        self
+    }
+
+    pub fn batch_decode(mut self, on: bool) -> Self {
+        self.cfg.batch_decode = on;
+        self
+    }
+
+    pub fn kv_budget(mut self, n: usize) -> Self {
+        self.cfg.kv_budget = n;
+        self
+    }
+
+    pub fn prefix_cache(mut self, on: bool) -> Self {
+        self.cfg.prefix_cache = on;
+        self
+    }
+
+    pub fn build(self) -> WorkerConfig {
+        self.cfg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_defaults_equal_default() {
+        assert_eq!(ServerConfig::builder().build(), ServerConfig::default());
+        assert_eq!(WorkerConfig::builder().build(), WorkerConfig::default());
+    }
+
+    #[test]
+    fn builder_sets_only_what_it_is_told() {
+        let cfg = ServerConfig::builder().workers(2).rebalance(true).build();
+        assert_eq!(cfg.workers, 2);
+        assert!(cfg.rebalance);
+        let want =
+            ServerConfig { workers: 2, rebalance: true, ..ServerConfig::default() };
+        assert_eq!(cfg, want, "untouched fields must keep their defaults");
+    }
+
+    #[test]
+    fn batch_decode_sets_both_levels() {
+        let cfg = ServerConfig::builder().batch_decode(false).build();
+        assert!(!cfg.batch_decode);
+        assert!(!cfg.worker.batch_decode, "worker level must follow");
+    }
+
+    #[test]
+    fn worker_passthroughs_then_replacement() {
+        let cfg = ServerConfig::builder()
+            .time_slice(2)
+            .worker(WorkerConfig::builder().max_live(8).build())
+            .build();
+        // worker(..) replaces wholesale: the earlier passthrough is gone
+        assert_eq!(cfg.worker.time_slice, 4);
+        assert_eq!(cfg.worker.max_live, 8);
+    }
+}

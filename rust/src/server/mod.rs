@@ -2,14 +2,16 @@
 //! dynamic worker pool with time-sliced session interleaving, streaming +
 //! cancellation, TCP JSON-lines protocol, in-process API.
 
+pub mod config;
 pub mod request;
 pub mod scheduler;
 pub mod server;
 pub mod worker;
 
+pub use config::{ServerConfig, ServerConfigBuilder, WorkerConfig, WorkerConfigBuilder};
 pub use request::{Reply, Request, Response, StreamChunk};
 pub use scheduler::{CancelSet, MigratedSession, Policy, PopOutcome, RebalanceHub,
                     Scheduler, WorkerLoad};
 pub use server::{client_request, client_request_stream, serve_tcp, RebalancePolicy,
-                 ResponseStream, ServerConfig, ServerHandle};
-pub use worker::{Worker, WorkerConfig};
+                 ResponseStream, ServerHandle};
+pub use worker::Worker;

@@ -65,6 +65,69 @@ impl Default for Request {
 }
 
 impl Request {
+    /// A request for `prompt` with the documented defaults (greedy lookahead,
+    /// 64-token budget). Chain the field-named setters to override:
+    /// `Request::new("hi").max_tokens(8).method("jacobi")`. The id stays 0 —
+    /// the dispatcher (or TCP front) assigns the real one at submit time.
+    pub fn new(prompt: impl Into<String>) -> Request {
+        Request { prompt: prompt.into(), ..Default::default() }
+    }
+
+    pub fn max_tokens(mut self, n: usize) -> Self {
+        self.max_tokens = n;
+        self
+    }
+
+    pub fn temperature(mut self, t: f64) -> Self {
+        self.temperature = t;
+        self
+    }
+
+    pub fn top_k(mut self, k: usize) -> Self {
+        self.top_k = k;
+        self
+    }
+
+    pub fn top_p(mut self, p: f64) -> Self {
+        self.top_p = p;
+        self
+    }
+
+    pub fn method(mut self, m: impl Into<String>) -> Self {
+        self.method = m.into();
+        self
+    }
+
+    pub fn wng(mut self, wng: (usize, usize, usize)) -> Self {
+        self.wng = Some(wng);
+        self
+    }
+
+    pub fn share_ngrams(mut self, on: bool) -> Self {
+        self.share_ngrams = Some(on);
+        self
+    }
+
+    pub fn tenant(mut self, t: impl Into<String>) -> Self {
+        self.tenant = Some(t.into());
+        self
+    }
+
+    pub fn seed(mut self, s: u64) -> Self {
+        self.seed = s;
+        self
+    }
+
+    pub fn stream(mut self, on: bool) -> Self {
+        self.stream = on;
+        self
+    }
+
+    pub fn deadline_ms(mut self, ms: u64) -> Self {
+        self.deadline_ms = Some(ms);
+        self
+    }
+
     pub fn gen_params(&self) -> GenParams {
         GenParams {
             max_new_tokens: self.max_tokens,
@@ -147,6 +210,42 @@ impl Request {
             r.wng = Some((v[0], v[1], v[2]));
         }
         Ok(r)
+    }
+
+    /// Wire form of this request (one JSON line, no trailing newline). The
+    /// id is intentionally omitted — the TCP front assigns its own. Inverse
+    /// of [`Request::from_json_line`] for every wire-visible field.
+    pub fn to_json_line(&self) -> String {
+        let mut fields = vec![
+            ("prompt", Json::str(self.prompt.clone())),
+            ("max_tokens", Json::num(self.max_tokens as f64)),
+            ("temperature", Json::num(self.temperature)),
+            ("top_k", Json::num(self.top_k as f64)),
+            ("top_p", Json::num(self.top_p)),
+            ("method", Json::str(self.method.clone())),
+            ("seed", Json::num(self.seed as f64)),
+            ("stream", Json::Bool(self.stream)),
+        ];
+        if let Some((w, n, g)) = self.wng {
+            fields.push((
+                "wng",
+                Json::arr(vec![
+                    Json::num(w as f64),
+                    Json::num(n as f64),
+                    Json::num(g as f64),
+                ]),
+            ));
+        }
+        if let Some(v) = self.share_ngrams {
+            fields.push(("share_ngrams", Json::Bool(v)));
+        }
+        if let Some(t) = &self.tenant {
+            fields.push(("tenant", Json::str(t.clone())));
+        }
+        if let Some(ms) = self.deadline_ms {
+            fields.push(("deadline_ms", Json::num(ms as f64)));
+        }
+        Json::obj(fields).dump()
     }
 }
 
@@ -298,6 +397,36 @@ impl Response {
         }
         Json::obj(fields).dump()
     }
+
+    /// Parse a final record off the wire (a line with `"done": true`) —
+    /// the client-side inverse of [`Response::to_json_line`]. The load
+    /// harness uses this to turn raw protocol lines back into stats.
+    pub fn from_json_line(line: &str) -> Result<Response> {
+        let j = Json::parse(line).map_err(|e| anyhow!("bad response json: {e}"))?;
+        if j.get("done").and_then(Json::as_bool) != Some(true) {
+            bail!("not a final record (missing 'done': true): {line}");
+        }
+        let num = |k: &str| j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+        Ok(Response {
+            id: j.get("id").and_then(Json::as_usize).unwrap_or(0) as u64,
+            text: j.get("text").and_then(Json::as_str).unwrap_or("").to_string(),
+            tokens: j.get("tokens").and_then(Json::as_usize).unwrap_or(0),
+            steps: j.get("steps").and_then(Json::as_usize).unwrap_or(0),
+            compression: num("compression"),
+            wall_ms: num("wall_ms"),
+            queue_ms: num("queue_ms"),
+            ttft_ms: num("ttft_ms"),
+            finish: j.get("finish").and_then(Json::as_str).unwrap_or("").to_string(),
+            accept_hist: j
+                .get("accept_hist")
+                .and_then(Json::usize_vec)
+                .unwrap_or_default(),
+            pool_warm: j.get("pool_warm").and_then(Json::as_bool).unwrap_or(false),
+            pool_shared: j.get("pool_shared").and_then(Json::as_bool).unwrap_or(false),
+            pool_hit_rate: num("pool_hit_rate"),
+            error: j.get("error").and_then(Json::as_str).map(str::to_string),
+        })
+    }
 }
 
 #[cfg(test)]
@@ -392,6 +521,58 @@ mod tests {
         assert_eq!(j.get("pool_warm").unwrap().as_bool(), Some(true));
         assert_eq!(j.get("pool_shared").unwrap().as_bool(), Some(true));
         assert_eq!(j.get("pool_hit_rate").unwrap().as_f64(), Some(0.75));
+    }
+
+    #[test]
+    fn request_new_matches_defaults() {
+        let r = Request::new("hi");
+        assert_eq!(r, Request { prompt: "hi".into(), ..Default::default() });
+        let r = Request::new("x")
+            .max_tokens(8)
+            .temperature(0.5)
+            .method("jacobi")
+            .wng((5, 3, 5))
+            .tenant("acme")
+            .seed(7)
+            .stream(true)
+            .deadline_ms(250);
+        assert_eq!(r.max_tokens, 8);
+        assert!((r.temperature - 0.5).abs() < 1e-12);
+        assert_eq!(r.method, "jacobi");
+        assert_eq!(r.wng, Some((5, 3, 5)));
+        assert_eq!(r.tenant.as_deref(), Some("acme"));
+        assert_eq!(r.seed, 7);
+        assert!(r.stream);
+        assert_eq!(r.deadline_ms, Some(250));
+    }
+
+    #[test]
+    fn request_wire_roundtrip() {
+        let r = Request::new("abc")
+            .max_tokens(12)
+            .wng((4, 3, 4))
+            .share_ngrams(false)
+            .tenant("t1")
+            .deadline_ms(99);
+        let back = Request::from_json_line(0, &r.to_json_line()).unwrap();
+        assert_eq!(back, Request { id: 0, ..r });
+    }
+
+    #[test]
+    fn response_parse_roundtrip() {
+        let mut stats = DecodeStats::default();
+        stats.record_accept(3);
+        stats.wall = std::time::Duration::from_millis(20);
+        let r = Response::ok(5, "out".into(), &stats, 2.0).with_finish("eos");
+        let back = Response::from_json_line(&r.to_json_line()).unwrap();
+        assert_eq!(back.id, 5);
+        assert_eq!(back.text, "out");
+        assert_eq!(back.tokens, 3);
+        assert_eq!(back.finish, "eos");
+        assert!(back.error.is_none());
+        // chunks are not final records
+        let chunk = StreamChunk { id: 5, seq: 1, delta: "x".into() }.to_json_line();
+        assert!(Response::from_json_line(&chunk).is_err());
     }
 
     #[test]

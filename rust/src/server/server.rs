@@ -25,57 +25,11 @@ use crate::info;
 use crate::kv::PrefixCache;
 use crate::metrics::Registry;
 use crate::ngram::NgramCacheRegistry;
+use crate::server::config::ServerConfig;
 use crate::server::request::{Reply, Request, Response};
-use crate::server::scheduler::{CancelSet, Policy, RebalanceHub, Scheduler, WorkerLoad};
-use crate::server::worker::{Worker, WorkerConfig};
+use crate::server::scheduler::{CancelSet, RebalanceHub, Scheduler, WorkerLoad};
+use crate::server::worker::Worker;
 use crate::util::json::Json;
-
-pub struct ServerConfig {
-    pub workers: usize,
-    pub policy: Policy,
-    pub queue_depth: usize,
-    /// server-level toggle for the cross-request shared n-gram cache. When
-    /// true, one `NgramCacheRegistry` spans all workers; individual
-    /// requests can still opt out via `share_ngrams: false`. When false,
-    /// no registry exists and every request decodes against a cold pool.
-    pub share_ngrams: bool,
-    /// TTL decay for shared n-gram caches: entries untouched for this many
-    /// ms are evicted on shard access (None = keep until LRU pressure).
-    pub ngram_ttl_ms: Option<u64>,
-    /// Continuous batching: fuse compatible live sessions into one batched
-    /// decode call per scheduling round. Workers batch only when BOTH this
-    /// and their `WorkerConfig::batch_decode` are true (both default on),
-    /// so an explicit `false` at either level wins. The sequential
-    /// per-session path commits byte-identical token streams.
-    pub batch_decode: bool,
-    /// Cross-worker session rebalancing: a server thread periodically
-    /// compares per-worker live+parked depth and moves the coldest parked
-    /// [`crate::kv::SessionSnapshot`] from the deepest worker to the
-    /// shallowest one (snapshots are runtime-portable, so the adopter
-    /// resumes byte-identically). Only meaningful with `workers > 1`; the
-    /// donor must have parked sessions, so pair it with
-    /// `WorkerConfig::kv_budget`.
-    pub rebalance: bool,
-    /// Rebalance scan interval in ms (ignored when `rebalance` is false).
-    pub rebalance_interval_ms: u64,
-    pub worker: WorkerConfig,
-}
-
-impl Default for ServerConfig {
-    fn default() -> Self {
-        ServerConfig {
-            workers: 1,
-            policy: Policy::Fifo,
-            queue_depth: 256,
-            share_ngrams: true,
-            ngram_ttl_ms: None,
-            batch_decode: true,
-            rebalance: false,
-            rebalance_interval_ms: 50,
-            worker: WorkerConfig::default(),
-        }
-    }
-}
 
 /// Decision logic of the cross-worker rebalancer: equalize per-worker
 /// session depth (live + parked) by moving one parked snapshot per scan
@@ -347,39 +301,46 @@ impl ServerHandle {
         })
     }
 
+    /// Sync derived gauges into the registry so every report flavor (text
+    /// or JSON) carries them: prefix-cache stats, per-worker live/parked
+    /// totals, and the scheduler queue depth.
+    fn sync_gauges(&self) {
+        let mut m = self.metrics.lock().unwrap();
+        if let Some(pc) = &self.prefix_cache {
+            let st = pc.stats();
+            m.set("prefix_hits", st.hits);
+            m.set("prefix_miss", st.misses);
+            m.set("prefix_entries", st.entries as u64);
+            m.set("prefix_bytes", st.bytes as u64);
+            m.set("prefix_bytes_reused", st.bytes_reused);
+        }
+        // workers write per-worker parked/live gauges so they never
+        // clobber each other; the endpoint reports server-wide totals
+        let total: u64 = m
+            .counters
+            .iter()
+            .filter(|(k, _)| k.starts_with("suspended_sessions_w"))
+            .map(|(_, v)| *v)
+            .sum();
+        m.set("suspended_sessions", total);
+        let live: u64 = m
+            .counters
+            .iter()
+            .filter(|(k, _)| k.starts_with("live_sessions_w"))
+            .map(|(_, v)| *v)
+            .sum();
+        m.set("live_sessions", live);
+        // queue-depth report: requests admitted by no worker yet
+        m.set("queue_depth", self.sched.depth() as u64);
+    }
+
     /// Server metrics report including per-cache n-gram counters and the
     /// KV subsystem (prefix-reuse gauges are synced into the registry here,
-    /// so the dispatcher metrics endpoint always carries them).
+    /// so the dispatcher metrics endpoint always carries them). Histogram
+    /// lines carry p50/p90/p99 — `batch_size` and `ttft_ms` included, so
+    /// operators read latency/occupancy percentiles without raw samples.
     pub fn report(&self) -> String {
-        {
-            let mut m = self.metrics.lock().unwrap();
-            if let Some(pc) = &self.prefix_cache {
-                let st = pc.stats();
-                m.set("prefix_hits", st.hits);
-                m.set("prefix_miss", st.misses);
-                m.set("prefix_entries", st.entries as u64);
-                m.set("prefix_bytes", st.bytes as u64);
-                m.set("prefix_bytes_reused", st.bytes_reused);
-            }
-            // workers write per-worker parked/live gauges so they never
-            // clobber each other; the endpoint reports server-wide totals
-            let total: u64 = m
-                .counters
-                .iter()
-                .filter(|(k, _)| k.starts_with("suspended_sessions_w"))
-                .map(|(_, v)| *v)
-                .sum();
-            m.set("suspended_sessions", total);
-            let live: u64 = m
-                .counters
-                .iter()
-                .filter(|(k, _)| k.starts_with("live_sessions_w"))
-                .map(|(_, v)| *v)
-                .sum();
-            m.set("live_sessions", live);
-            // queue-depth report: requests admitted by no worker yet
-            m.set("queue_depth", self.sched.depth() as u64);
-        }
+        self.sync_gauges();
         let mut s = self.metrics.lock().unwrap().report();
         if let Some(reg) = &self.ngram_caches {
             s.push_str(&reg.report());
@@ -388,6 +349,22 @@ impl ServerHandle {
             s.push_str(&pc.report());
         }
         s
+    }
+
+    /// Machine-readable flavor of [`ServerHandle::report`]: counters plus
+    /// per-histogram [`crate::metrics::HistSummary`] objects (count, mean,
+    /// p50/p90/p99, max) under `"histograms"`. This is what the serving
+    /// benchmark harness (`bench::load`) scrapes — also served over TCP via
+    /// the `{"report": true}` control line.
+    pub fn report_json(&self) -> Json {
+        self.sync_gauges();
+        self.metrics.lock().unwrap().report_json()
+    }
+
+    /// Typed percentile summary of one serving histogram (e.g. `ttft_ms`,
+    /// `batch_size`, `latency_ms`); None when it has no samples yet.
+    pub fn hist_summary(&self, name: &str) -> Option<crate::metrics::HistSummary> {
+        self.metrics.lock().unwrap().summary(name)
     }
 
     /// Submit a request; returns the per-request reply stream (chunks for
@@ -526,6 +503,16 @@ fn handle_conn(stream: TcpStream, handle: &ServerHandle) -> Result<()> {
                     ("ok", Json::Bool(ok)),
                 ]);
                 out.write_all(ack.dump().as_bytes())?;
+                out.write_all(b"\n")?;
+                out.flush()?;
+                continue;
+            }
+            // control line: {"report": true} — one-line machine-readable
+            // metrics report (counters + histogram percentile summaries);
+            // the bench harness and operators scrape this.
+            if j.get("report").and_then(Json::as_bool) == Some(true) {
+                let rep = Json::obj(vec![("report", handle.report_json())]);
+                out.write_all(rep.dump().as_bytes())?;
                 out.write_all(b"\n")?;
                 out.flush()?;
                 continue;

@@ -38,6 +38,7 @@ use crate::engine::{step_group, BatchStep, Decoder, DecodeSession, FinishReason,
                     StepOutcome};
 use crate::info;
 use crate::kv::{KvHandle, KvManager, PrefixCache, SessionSnapshot};
+pub use crate::server::config::WorkerConfig;
 use crate::metrics::Registry;
 use crate::ngram::{NgramCacheRegistry, PoolHandle};
 use crate::runtime::{cpu_client, Manifest, ModelRuntime};
@@ -49,49 +50,6 @@ use crate::tokenizer::{ByteTokenizer, Utf8StreamDecoder};
 /// How long an idle worker waits in [`Scheduler::pop_timeout`] before
 /// re-checking its rebalance-hub inbox for adopted sessions.
 const ADOPT_POLL: Duration = Duration::from_millis(25);
-
-#[derive(Debug, Clone)]
-pub struct WorkerConfig {
-    pub artifacts_dir: String,
-    pub model: String,
-    /// default (W,N,G) when the request does not override it
-    pub wng: (usize, usize, usize),
-    pub draft_model: String,
-    /// decode steps each live session gets per scheduling round.
-    pub time_slice: usize,
-    /// max concurrently interleaved sessions per worker.
-    pub max_live: usize,
-    /// fuse compatible live sessions into one batched decode call per round
-    /// (falls back to per-session calls when the model has no batched
-    /// executable for a group).
-    pub batch_decode: bool,
-    /// device KV budget: max device-resident session caches. When live
-    /// sessions exceed it, the coldest suspendable session is parked
-    /// (snapshot to host + device free) and revived when a slot opens —
-    /// `max_live` then counts live + parked, a soft limit. 0 = unlimited
-    /// (every admitted session stays device-resident, the pre-kv behavior).
-    pub kv_budget: usize,
-    /// prefix-reuse trie: requests sharing a long committed prompt prefix
-    /// fork a stored KV snapshot instead of paying a full prefill
-    /// (byte-exact; needs a `cache_io` executable in the artifacts).
-    pub prefix_cache: bool,
-}
-
-impl Default for WorkerConfig {
-    fn default() -> Self {
-        WorkerConfig {
-            artifacts_dir: "artifacts".into(),
-            model: "tiny".into(),
-            wng: (5, 3, 5),
-            draft_model: "draft".into(),
-            time_slice: 4,
-            max_live: 4,
-            batch_decode: true,
-            kv_budget: 0,
-            prefix_cache: true,
-        }
-    }
-}
 
 /// One open request on a worker: the session plus its streaming state.
 struct LiveSession<'rt> {

@@ -6,9 +6,10 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::json::Json;
+use crate::util::rng::Rng;
 
 /// Suite name -> prompts. Names: chat, code, class-code, math, summarize.
 #[derive(Debug, Clone)]
@@ -64,6 +65,86 @@ impl Workloads {
     }
 }
 
+/// Serving-bench workload classes: synthetic prompt generators for the
+/// open-loop load harness. Unlike [`Workloads`] (which needs
+/// `artifacts/workloads.json` from `make artifacts`), these are generated in
+/// process from a seeded [`Rng`], so the sim-artifact bench lane needs no
+/// corpus files. Every prompt stays under ~60 chars — the sim runtime's
+/// prefill capacity is 64 byte-tokens including BOS, and longer prompts are
+/// rejected at prefill.
+///
+/// Each class stresses a different serving-side cache:
+/// - `Templated`: few templates, varied slots — warms the shared n-gram
+///   cache across requests (repeated phrasing speculates well).
+/// - `MultiTenant`: same, but requests rotate through tenants `t0..t3`, so
+///   per-tenant n-gram namespaces warm independently.
+/// - `LongSharedPrefix`: one fixed >=32-char prompt prefix with short varied
+///   tails — exercises the KV prefix-reuse trie (`min_prefix` is 32).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MixClass {
+    Templated,
+    MultiTenant,
+    LongSharedPrefix,
+}
+
+/// The fixed prefix every `LongSharedPrefix` prompt starts with (39 chars,
+/// above the prefix-cache `min_prefix` of 32).
+pub const SHARED_PREFIX: &str = "shared context block alpha beta gamma: ";
+
+impl MixClass {
+    pub const ALL: [MixClass; 3] =
+        [MixClass::Templated, MixClass::MultiTenant, MixClass::LongSharedPrefix];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MixClass::Templated => "templated",
+            MixClass::MultiTenant => "tenant",
+            MixClass::LongSharedPrefix => "prefix",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<MixClass> {
+        match s {
+            "templated" => Ok(MixClass::Templated),
+            "tenant" | "multi-tenant" => Ok(MixClass::MultiTenant),
+            "prefix" | "long-shared-prefix" => Ok(MixClass::LongSharedPrefix),
+            _ => bail!("unknown mix class '{s}' (templated|tenant|prefix)"),
+        }
+    }
+
+    /// One synthetic request body: `(prompt, tenant)`. Deterministic in the
+    /// rng stream; ASCII-only, <= 60 chars.
+    pub fn synth(&self, rng: &mut Rng) -> (String, Option<String>) {
+        const TOPICS: [&str; 4] = ["bread", "ledger", "garden", "rocket"];
+        const VERBS: [&str; 4] = ["explain", "compare", "list", "check"];
+        match self {
+            MixClass::Templated => {
+                let p = format!(
+                    "{} step {} of the {} plan",
+                    rng.choose(&VERBS),
+                    rng.below(90) + 10,
+                    rng.choose(&TOPICS)
+                );
+                (p, None)
+            }
+            MixClass::MultiTenant => {
+                let tenant = format!("t{}", rng.below(4));
+                let p = format!(
+                    "{} item {} for {}",
+                    rng.choose(&VERBS),
+                    rng.below(90) + 10,
+                    tenant
+                );
+                (p, Some(tenant))
+            }
+            MixClass::LongSharedPrefix => {
+                let p = format!("{}case {:02}", SHARED_PREFIX, rng.below(100));
+                (p, None)
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,5 +168,51 @@ mod tests {
     fn dataset_mapping() {
         assert_eq!(paper_dataset("chat"), "MT-Bench");
         assert_eq!(paper_dataset("code"), "HumanEval");
+    }
+
+    #[test]
+    fn mix_class_names_roundtrip() {
+        for c in MixClass::ALL {
+            assert_eq!(MixClass::parse(c.name()).unwrap(), c);
+        }
+        assert_eq!(MixClass::parse("multi-tenant").unwrap(), MixClass::MultiTenant);
+        assert!(MixClass::parse("nope").is_err());
+    }
+
+    #[test]
+    fn synth_prompts_fit_sim_prefill() {
+        // sim prefill capacity is 64 byte-tokens incl. BOS
+        let mut rng = Rng::new(42);
+        for c in MixClass::ALL {
+            for _ in 0..200 {
+                let (p, tenant) = c.synth(&mut rng);
+                assert!(p.len() <= 60, "{c:?} prompt too long: {p:?}");
+                assert!(p.is_ascii());
+                match c {
+                    MixClass::MultiTenant => assert!(tenant.is_some()),
+                    _ => assert!(tenant.is_none()),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn synth_is_deterministic() {
+        let run = |seed| {
+            let mut rng = Rng::new(seed);
+            (0..50)
+                .map(|i| MixClass::ALL[i % 3].synth(&mut rng))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(7), run(7));
+        assert_ne!(run(7), run(8));
+    }
+
+    #[test]
+    fn shared_prefix_meets_min_prefix() {
+        assert!(SHARED_PREFIX.len() >= 32, "prefix-cache min_prefix is 32");
+        let mut rng = Rng::new(1);
+        let (p, _) = MixClass::LongSharedPrefix.synth(&mut rng);
+        assert!(p.starts_with(SHARED_PREFIX));
     }
 }

@@ -30,8 +30,7 @@ use lookahead::engine::{step_group, Decoder, DecodeSession, GenParams, SamplingP
 use lookahead::ngram::PoolHandle;
 use lookahead::runtime::sim::{ensure_sim_artifacts, ensure_slow_sim_artifacts};
 use lookahead::runtime::{cpu_client, Manifest, ModelRuntime};
-use lookahead::server::{Policy, Reply, Request, Response, ServerConfig, ServerHandle,
-                        WorkerConfig};
+use lookahead::server::{Reply, Request, Response, ServerConfig, ServerHandle};
 use lookahead::tokenizer::ByteTokenizer;
 use lookahead::util::prop::forall;
 use lookahead::util::rng::Rng;
@@ -258,28 +257,18 @@ fn mixed_engine_group_fuses_per_key_and_stays_correct() {
 
 fn server_cfg(artifacts: String, batch: bool, max_live: usize, time_slice: usize)
               -> ServerConfig {
-    ServerConfig {
-        workers: 1,
-        policy: Policy::Fifo,
-        queue_depth: 64,
-        // private pools: each session's stream is then a pure function of
-        // its own request, so streams are invariant to batching AND to
-        // admission timing (shared pools keep bytes identical but may move
-        // step boundaries — see DESIGN.md §3c)
-        share_ngrams: false,
-        ngram_ttl_ms: None,
-        batch_decode: batch,
-        rebalance: false,
-        rebalance_interval_ms: 50,
-        worker: WorkerConfig {
-            artifacts_dir: artifacts,
-            model: "tiny".into(),
-            wng: (5, 3, 5),
-            time_slice,
-            max_live,
-            ..WorkerConfig::default()
-        },
-    }
+    // private pools: each session's stream is then a pure function of
+    // its own request, so streams are invariant to batching AND to
+    // admission timing (shared pools keep bytes identical but may move
+    // step boundaries — see DESIGN.md §3c)
+    ServerConfig::builder()
+        .queue_depth(64)
+        .share_ngrams(false)
+        .batch_decode(batch)
+        .artifacts_dir(artifacts)
+        .time_slice(time_slice)
+        .max_live(max_live)
+        .build()
 }
 
 /// Slow-decode sim artifacts (identical token streams, ~5ms per decode
@@ -293,12 +282,11 @@ fn requests() -> Vec<Request> {
     PROMPTS
         .iter()
         .enumerate()
-        .map(|(i, p)| Request {
-            prompt: (*p).into(),
-            max_tokens: 24 + 4 * i,
-            method: if i % 2 == 0 { "autoregressive" } else { "lookahead" }.into(),
-            stream: true,
-            ..Default::default()
+        .map(|(i, p)| {
+            Request::new(*p)
+                .max_tokens(24 + 4 * i)
+                .method(if i % 2 == 0 { "autoregressive" } else { "lookahead" })
+                .stream(true)
         })
         .collect()
 }
@@ -404,14 +392,16 @@ fn prop_random_interleave_never_crosses_sessions() {
             let streams: Vec<_> = script
                 .iter()
                 .map(|&(pi, max, _)| {
-                    h.submit(Request {
-                        prompt: PROMPTS[pi].into(),
-                        max_tokens: max,
-                        method: if pi % 2 == 0 { "autoregressive" } else { "lookahead" }
-                            .into(),
-                        stream: true,
-                        ..Default::default()
-                    })
+                    h.submit(
+                        Request::new(PROMPTS[pi])
+                            .max_tokens(max)
+                            .method(if pi % 2 == 0 {
+                                "autoregressive"
+                            } else {
+                                "lookahead"
+                            })
+                            .stream(true),
+                    )
                     .map_err(|e| e.to_string())
                 })
                 .collect::<Result<_, _>>()?;

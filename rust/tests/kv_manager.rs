@@ -34,8 +34,8 @@ use lookahead::kv::{KvManager, PrefixCache, SessionSnapshot};
 use lookahead::ngram::PoolHandle;
 use lookahead::runtime::sim::{ensure_sim_artifacts, ensure_slow_sim_artifacts};
 use lookahead::runtime::{cpu_client, Manifest, ModelRuntime};
-use lookahead::server::{Policy, Reply, Request, Response, ResponseStream,
-                        ServerConfig, ServerHandle, WorkerConfig};
+use lookahead::server::{Reply, Request, Response, ResponseStream, ServerConfig,
+                        ServerHandle};
 use lookahead::tokenizer::{ByteTokenizer, BOS_ID};
 use lookahead::util::prop::forall;
 use lookahead::util::rng::Rng;
@@ -374,26 +374,18 @@ fn short_prompts_bypass_the_prefix_cache() {
 fn serve_cfg(dir: &str, workers: usize, max_live: usize, kv_budget: usize,
              prefix: bool, rebalance: bool, rebalance_interval_ms: u64)
              -> ServerConfig {
-    ServerConfig {
-        workers,
-        policy: Policy::Fifo,
-        queue_depth: 64,
-        share_ngrams: false,
-        ngram_ttl_ms: None,
-        batch_decode: true,
-        rebalance,
-        rebalance_interval_ms,
-        worker: WorkerConfig {
-            artifacts_dir: dir.into(),
-            model: "tiny".into(),
-            wng: (5, 3, 5),
-            time_slice: 2,
-            max_live,
-            kv_budget,
-            prefix_cache: prefix,
-            ..WorkerConfig::default()
-        },
-    }
+    ServerConfig::builder()
+        .workers(workers)
+        .queue_depth(64)
+        .share_ngrams(false)
+        .rebalance(rebalance)
+        .rebalance_interval_ms(rebalance_interval_ms)
+        .artifacts_dir(dir)
+        .time_slice(2)
+        .max_live(max_live)
+        .kv_budget(kv_budget)
+        .prefix_cache(prefix)
+        .build()
 }
 
 /// The serving-side engine equivalents (must mirror `Worker::make_engine`).
@@ -443,13 +435,7 @@ fn kv_budget_serves_overload_with_no_cross_talk() {
     let rxs: Vec<_> = prompts
         .iter()
         .map(|(prompt, method)| {
-            h.submit(Request {
-                prompt: (*prompt).into(),
-                max_tokens: 40,
-                method: (*method).into(),
-                ..Default::default()
-            })
-            .unwrap()
+            h.submit(Request::new(*prompt).max_tokens(40).method(*method)).unwrap()
         })
         .collect();
     let resps: Vec<_> = rxs.into_iter().map(|rx| rx.wait().unwrap()).collect();
@@ -523,13 +509,10 @@ fn prop_rotation_fairness_under_budget_saturation() {
             let stream = rng.below(2) == 1;
             let cancel = rng.below(4) == 0;
             let rx = h
-                .submit(Request {
-                    prompt: prompts[pi].into(),
-                    max_tokens: 24,
-                    method: methods[mi].into(),
-                    stream,
-                    ..Default::default()
-                })
+                .submit(Request::new(prompts[pi])
+                    .max_tokens(24)
+                    .method(methods[mi])
+                    .stream(stream))
                 .unwrap();
             subs.push((mi, pi, stream, cancel, rx));
         }
@@ -576,11 +559,8 @@ fn serving_prefix_hits_flow_through_metrics() {
 
     // >= 32 shared prompt tokens (BOS + 39 bytes), distinct tails
     let sys = "System: you are a terse coding assistant";
-    let mk = |tail: &str| Request {
-        prompt: format!("{sys}{tail}"),
-        max_tokens: 12,
-        method: "autoregressive".into(),
-        ..Default::default()
+    let mk = |tail: &str| {
+        Request::new(format!("{sys}{tail}")).max_tokens(12).method("autoregressive")
     };
     // serialize the two requests so the first inserts before the second opens
     let r1 = h.submit(mk(" one")).unwrap().wait().unwrap();
@@ -629,13 +609,10 @@ fn rebalance_migrates_parked_sessions_across_workers() {
     let rxs: Vec<_> = load
         .iter()
         .map(|(prompt, method, stream)| {
-            h.submit(Request {
-                prompt: prompt.clone(),
-                max_tokens: 48,
-                method: (*method).into(),
-                stream: *stream,
-                ..Default::default()
-            })
+            h.submit(Request::new(prompt.clone())
+                .max_tokens(48)
+                .method(*method)
+                .stream(*stream))
             .unwrap()
         })
         .collect();
@@ -702,13 +679,8 @@ fn rebalance_policy_thread_keeps_serving_correctly() {
     let rxs: Vec<_> = load
         .iter()
         .map(|(prompt, method)| {
-            h.submit(Request {
-                prompt: prompt.clone(),
-                max_tokens: 32,
-                method: (*method).into(),
-                ..Default::default()
-            })
-            .unwrap()
+            h.submit(Request::new(prompt.clone()).max_tokens(32).method(*method))
+                .unwrap()
         })
         .collect();
     let rt = sim_rt();

@@ -1,0 +1,190 @@
+//! Serving load-generator integration suite (simulated artifacts — runs
+//! without PJRT).
+//!
+//! Pins the ISSUE-6 contracts end-to-end:
+//!   1. Seeded determinism: the same `LoadSpec` replays a byte-identical
+//!      schedule, and two driven runs agree on every schedule-derived
+//!      aggregate in the BENCH record (latencies may differ; the request
+//!      set and its counters never do).
+//!   2. Builder equivalence: `ServerConfig::default()` is pinned field by
+//!      field to the documented defaults, and the builders reproduce it.
+//!   3. `Request::new` is exactly `Default` plus the prompt.
+//!   4. A driven run — in-process and over TCP — folds into a
+//!      schema-valid `lookahead-serve-bench/v1` record, with the server's
+//!      `{"report": true}` scrape carried along.
+//!   5. The deprecated `run_suite` wrappers and `run_suite_with` agree.
+
+use lookahead::bench::load::{bench_json, drive_inprocess, drive_tcp,
+                             validate_bench_json, LoadSpec, Schedule};
+use lookahead::runtime::sim::ensure_sim_artifacts;
+use lookahead::server::{serve_tcp, Policy, Request, ServerConfig, ServerHandle,
+                        WorkerConfig};
+use lookahead::util::json::Json;
+
+fn sim_dir() -> String {
+    ensure_sim_artifacts().unwrap().to_string_lossy().into_owned()
+}
+
+fn sim_server_cfg() -> ServerConfig {
+    ServerConfig::builder()
+        .queue_depth(64)
+        .artifacts_dir(sim_dir())
+        .time_slice(2)
+        .build()
+}
+
+/// A small, fast spec: ~200 req/s over 10 requests keeps the whole replay
+/// under ~100ms of planned arrivals on the instant sim artifacts.
+fn small_spec(seed: u64) -> LoadSpec {
+    LoadSpec::new(seed).requests(10).rate_per_s(200.0).max_tokens(4, 8)
+}
+
+#[test]
+fn schedule_replay_is_byte_identical() {
+    let a = Schedule::generate(&small_spec(7));
+    let b = Schedule::generate(&small_spec(7));
+    assert_eq!(a.dump(), b.dump(), "same seed must replay byte-identically");
+    assert_eq!(a.fingerprint(), b.fingerprint());
+    assert_eq!(a.counts(), b.counts());
+    assert_eq!(a, b);
+    let c = Schedule::generate(&small_spec(8));
+    assert_ne!(a.dump(), c.dump(), "different seeds must diverge");
+}
+
+#[test]
+fn server_config_default_is_pinned() {
+    // the documented defaults — a deliberate compatibility surface: changing
+    // any of these is a behavior change for every builder call site
+    let d = ServerConfig::default();
+    assert_eq!(d.workers, 1);
+    assert_eq!(d.policy, Policy::Fifo);
+    assert_eq!(d.queue_depth, 256);
+    assert!(d.share_ngrams);
+    assert_eq!(d.ngram_ttl_ms, None);
+    assert!(d.batch_decode);
+    assert!(!d.rebalance);
+    assert_eq!(d.rebalance_interval_ms, 50);
+    let w = &d.worker;
+    assert_eq!(w.artifacts_dir, "artifacts");
+    assert_eq!(w.model, "tiny");
+    assert_eq!(w.wng, (5, 3, 5));
+    assert_eq!(w.draft_model, "draft");
+    assert_eq!(w.time_slice, 4);
+    assert_eq!(w.max_live, 4);
+    assert!(w.batch_decode);
+    assert_eq!(w.kv_budget, 0);
+    assert!(w.prefix_cache);
+
+    // builders over untouched defaults reproduce Default exactly
+    assert_eq!(ServerConfig::builder().build(), d);
+    assert_eq!(WorkerConfig::builder().build(), d.worker);
+    // a builder chain touches only the fields it was told to
+    let mut built = ServerConfig::builder().workers(2).queue_depth(64).build();
+    assert_eq!((built.workers, built.queue_depth), (2, 64));
+    built.workers = d.workers;
+    built.queue_depth = d.queue_depth;
+    assert_eq!(built, d, "builder must leave every other field at its default");
+}
+
+#[test]
+fn request_new_is_default_plus_prompt() {
+    let r = Request::new("hello");
+    let want = Request { prompt: "hello".into(), ..Default::default() };
+    assert_eq!(r, want);
+    // chained setters touch only their field
+    let r = Request::new("hello").max_tokens(9).method("autoregressive");
+    assert_eq!(r.max_tokens, 9);
+    assert_eq!(r.method, "autoregressive");
+    assert_eq!(r.prompt, "hello");
+    assert_eq!(r.tenant, None);
+}
+
+#[test]
+fn inprocess_load_run_emits_schema_valid_bench() {
+    let spec = small_spec(7);
+    let sched = Schedule::generate(&spec);
+
+    let h = ServerHandle::start(sim_server_cfg()).unwrap();
+    let run1 = drive_inprocess(&h, &sched);
+    h.shutdown();
+    let h = ServerHandle::start(sim_server_cfg()).unwrap();
+    let run2 = drive_inprocess(&h, &sched);
+    h.shutdown();
+
+    let j1 = bench_json(6, &spec, &sched, &run1);
+    let j2 = bench_json(6, &spec, &sched, &run2);
+    validate_bench_json(&j1.dump()).unwrap();
+    validate_bench_json(&j2.dump()).unwrap();
+
+    // schedule-derived aggregates are identical across runs; latencies vary
+    assert_eq!(j1.path("schedule").unwrap().dump(),
+               j2.path("schedule").unwrap().dump(),
+               "schedule section must be run-invariant");
+    assert_eq!(j1.path("config").unwrap().dump(), j2.path("config").unwrap().dump());
+    assert_eq!(j1.path("requests.sent").unwrap().as_usize(), Some(10));
+    assert_eq!(j2.path("requests.sent").unwrap().as_usize(), Some(10));
+
+    // no churn in this spec: every request completes
+    assert_eq!(j1.path("requests.ok").unwrap().as_usize(), Some(10),
+               "all requests must succeed: {}", j1.dump());
+    assert!(j1.path("throughput_tok_per_s").unwrap().as_f64().unwrap() > 0.0);
+    assert!(j1.path("goodput_tok_per_s").unwrap().as_f64().unwrap() > 0.0);
+    // the scraped report flowed through into the server-side sections
+    assert!(run1.report.path("counters.responses_ok").is_some(),
+            "report scrape must carry counters: {}", run1.report.dump());
+    assert!(run1.report.path("histograms.ttft_ms.p50").is_some(),
+            "report histograms must be summarized: {}", run1.report.dump());
+}
+
+#[test]
+fn tcp_load_run_scrapes_report_and_validates() {
+    let spec = small_spec(11).cancel_frac(0.25);
+    let sched = Schedule::generate(&spec);
+    let addr = "127.0.0.1:17921";
+    let conns = sched.tcp_conns();
+    let cfg = sim_server_cfg();
+    let server = std::thread::spawn(move || serve_tcp(addr, cfg, Some(conns)));
+    // wait for bind (same idiom as rust/tests/serving.rs)
+    std::thread::sleep(std::time::Duration::from_millis(300));
+
+    let run = drive_tcp(addr, &sched).unwrap();
+    server.join().unwrap().unwrap();
+
+    assert_eq!(run.outcomes.len(), sched.items.len());
+    // instant sim decodes: cancels land after natural completion, so every
+    // request still yields a well-formed ok record
+    assert!(run.outcomes.iter().all(|o| o.ok),
+            "every TCP request must get a final record");
+    let j = bench_json(6, &spec, &sched, &run);
+    validate_bench_json(&j.dump()).unwrap();
+    // the report scrape is the real server's: responses_ok covers the run
+    assert_eq!(run.report.path("counters.responses_ok").and_then(Json::as_usize),
+               Some(sched.items.len()),
+               "scraped report must count this run: {}", run.report.dump());
+}
+
+#[test]
+fn deprecated_suite_wrappers_match_run_suite_with() {
+    use lookahead::bench::driver::{run_suite_with, SuiteOptions};
+    use lookahead::engine::lookahead::Lookahead;
+    use lookahead::runtime::{cpu_client, Manifest, ModelRuntime};
+
+    let manifest = Manifest::load(sim_dir()).unwrap();
+    let client = cpu_client().unwrap();
+    let rt = ModelRuntime::load(&client, &manifest, "tiny").unwrap();
+    let prompts: Vec<String> = (0..3)
+        .map(|i| format!("def wrap_{i}(x):\n    return x"))
+        .collect();
+
+    let new = run_suite_with(&rt, &mut Lookahead::with_wng(5, 3, 5), &prompts,
+                             SuiteOptions::new(16))
+        .unwrap();
+    #[allow(deprecated)]
+    let (old, old_texts) = lookahead::bench::driver::run_suite_outputs(
+        &rt, &mut Lookahead::with_wng(5, 3, 5), &prompts, 16, 0.0)
+        .unwrap();
+    assert_eq!(new.texts, old_texts, "wrapper must be a pure delegation");
+    assert_eq!(new.run.tokens, old.tokens);
+    assert_eq!(new.run.steps, old.steps);
+    assert_eq!(new.run.prompts, old.prompts);
+}

@@ -6,8 +6,8 @@
 
 use lookahead::layout::Wng;
 use lookahead::runtime::{cpu_client, Manifest, ModelRuntime};
-use lookahead::server::{client_request, serve_tcp, Policy, Request, ServerConfig,
-                        ServerHandle, WorkerConfig};
+use lookahead::server::{client_request, serve_tcp, Request, ServerConfig,
+                        ServerHandle};
 use lookahead::util::json::Json;
 
 /// Skip (returning true) when the AOT artifacts are not built.
@@ -16,22 +16,7 @@ fn no_artifacts() -> bool {
 }
 
 fn cfg() -> ServerConfig {
-    ServerConfig {
-        workers: 1,
-        policy: Policy::Fifo,
-        queue_depth: 64,
-        share_ngrams: true,
-        ngram_ttl_ms: None,
-        batch_decode: true,
-        rebalance: false,
-        rebalance_interval_ms: 50,
-        worker: WorkerConfig {
-            artifacts_dir: "artifacts".into(),
-            model: "tiny".into(),
-            wng: (5, 3, 5),
-            ..WorkerConfig::default()
-        },
-    }
+    ServerConfig::builder().queue_depth(64).build()
 }
 
 #[test]
@@ -41,11 +26,7 @@ fn inprocess_serving_roundtrip() {
     }
     let h = ServerHandle::start(cfg()).unwrap();
     let rx = h
-        .submit(Request {
-            prompt: "def add_ab(a, b):\n    result = a".into(),
-            max_tokens: 24,
-            ..Default::default()
-        })
+        .submit(Request::new("def add_ab(a, b):\n    result = a").max_tokens(24))
         .unwrap();
     let resp = rx.wait().unwrap();
     assert!(resp.error.is_none(), "{:?}", resp.error);
@@ -68,12 +49,11 @@ fn serving_multiple_requests_and_methods() {
         .iter()
         .enumerate()
     {
-        rxs.push(h.submit(Request {
-            prompt: format!("Q: what is {} + {}?\n", 10 + i, 20 + i),
-            max_tokens: 16,
-            method: method.to_string(),
-            ..Default::default()
-        }).unwrap());
+        rxs.push(h.submit(
+            Request::new(format!("Q: what is {} + {}?\n", 10 + i, 20 + i))
+                .max_tokens(16)
+                .method(*method),
+        ).unwrap());
     }
     // same prompt+greedy across exact methods must give identical text
     let texts: Vec<String> = rxs.into_iter().map(|rx| {
@@ -91,11 +71,7 @@ fn unknown_method_reports_error() {
         return;
     }
     let h = ServerHandle::start(cfg()).unwrap();
-    let rx = h.submit(Request {
-        prompt: "x".into(),
-        method: "warp_drive".into(),
-        ..Default::default()
-    }).unwrap();
+    let rx = h.submit(Request::new("x").method("warp_drive")).unwrap();
     let resp = rx.wait().unwrap();
     assert!(resp.error.is_some());
     h.shutdown();
@@ -129,22 +105,23 @@ fn rebalanced_two_worker_server_reports_and_serves() {
     // with rebalancing on serves a small burst, and the metrics endpoint
     // carries the queue-depth report the rebalancer reads.
     let dir = lookahead::runtime::sim::ensure_sim_artifacts().unwrap();
-    let mut c = cfg();
-    c.workers = 2;
-    c.rebalance = true;
-    c.rebalance_interval_ms = 5;
-    c.worker.artifacts_dir = dir.to_string_lossy().into_owned();
-    c.worker.kv_budget = 1;
+    let c = ServerConfig::builder()
+        .workers(2)
+        .queue_depth(64)
+        .rebalance(true)
+        .rebalance_interval_ms(5)
+        .artifacts_dir(dir.to_string_lossy().into_owned())
+        .kv_budget(1)
+        .build();
     let h = ServerHandle::start(c).unwrap();
     assert!(h.rebalance.is_some(), "two workers + rebalance:true must build a hub");
     let rxs: Vec<_> = (0..4)
         .map(|i| {
-            h.submit(Request {
-                prompt: format!("def r{i}(x):\n    return x"),
-                max_tokens: 16,
-                method: "autoregressive".into(),
-                ..Default::default()
-            })
+            h.submit(
+                Request::new(format!("def r{i}(x):\n    return x"))
+                    .max_tokens(16)
+                    .method("autoregressive"),
+            )
             .unwrap()
         })
         .collect();

@@ -11,7 +11,7 @@ use lookahead::engine::lookahead::Lookahead;
 use lookahead::engine::{Decoder, GenParams};
 use lookahead::ngram::{NgramCacheRegistry, PoolHandle, PoolSpec, SharedNgramCache};
 use lookahead::runtime::load_model;
-use lookahead::server::{Policy, Request, ServerConfig, ServerHandle, WorkerConfig};
+use lookahead::server::{Request, ServerConfig, ServerHandle};
 use lookahead::tokenizer::ByteTokenizer;
 
 /// Skip (returning true) when the AOT artifacts are not built.
@@ -129,26 +129,11 @@ fn warm_cache_raises_accept_length_on_repeated_prompt() {
 }
 
 fn server_cfg(share: bool) -> ServerConfig {
-    ServerConfig {
-        workers: 1,
-        policy: Policy::Fifo,
-        queue_depth: 64,
-        share_ngrams: share,
-        ngram_ttl_ms: None,
-        batch_decode: true,
-        rebalance: false,
-        rebalance_interval_ms: 50,
-        worker: WorkerConfig {
-            artifacts_dir: "artifacts".into(),
-            model: "tiny".into(),
-            wng: (5, 3, 5),
-            ..WorkerConfig::default()
-        },
-    }
+    ServerConfig::builder().queue_depth(64).share_ngrams(share).build()
 }
 
 fn req(prompt: &str) -> Request {
-    Request { prompt: prompt.into(), max_tokens: 24, ..Default::default() }
+    Request::new(prompt).max_tokens(24)
 }
 
 #[test]

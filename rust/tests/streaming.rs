@@ -21,8 +21,7 @@ use lookahead::engine::spec_decode::SpecDecode;
 use lookahead::engine::{Decoder, FinishReason, GenParams, StepOutcome};
 use lookahead::ngram::PoolHandle;
 use lookahead::runtime::{cpu_client, Manifest, ModelRuntime};
-use lookahead::server::{Policy, Reply, Request, ServerConfig, ServerHandle,
-                        WorkerConfig};
+use lookahead::server::{Reply, Request, ServerConfig, ServerHandle};
 use lookahead::tokenizer::{ByteTokenizer, Utf8StreamDecoder};
 
 /// Skip (returning true) when the AOT artifacts are not built.
@@ -147,28 +146,15 @@ fn session_cancel_yields_partial_output() {
 // ---------------------------------------------------------------------------
 
 fn cfg(max_live: usize, time_slice: usize) -> ServerConfig {
-    ServerConfig {
-        workers: 1,
-        policy: Policy::Fifo,
-        queue_depth: 64,
-        share_ngrams: true,
-        ngram_ttl_ms: None,
-        batch_decode: true,
-        rebalance: false,
-        rebalance_interval_ms: 50,
-        worker: WorkerConfig {
-            artifacts_dir: "artifacts".into(),
-            model: "tiny".into(),
-            wng: (5, 3, 5),
-            time_slice,
-            max_live,
-            ..WorkerConfig::default()
-        },
-    }
+    ServerConfig::builder()
+        .queue_depth(64)
+        .time_slice(time_slice)
+        .max_live(max_live)
+        .build()
 }
 
 fn req(prompt: &str, max_tokens: usize) -> Request {
-    Request { prompt: prompt.into(), max_tokens, ..Default::default() }
+    Request::new(prompt).max_tokens(max_tokens)
 }
 
 #[test]
