@@ -67,7 +67,7 @@ fn main() -> anyhow::Result<()> {
         if base_tps == 0.0 {
             base_tps = tps;
         }
-        // DESIGN.md §6: project the measured S onto a memory-bandwidth-bound
+        // DESIGN.md §7: project the measured S onto a memory-bandwidth-bound
         // A100 at the paper's 7B scale (this CPU is compute-bound, so raw
         // CPU wall-clock understates the paper's regime).
         let t_in = (wng.0 + wng.2) * (wng.1 - 1);

@@ -4,7 +4,7 @@
 //! S is device-independent (the blue/orange S curves overlap in the paper);
 //! the *speedup* depends on how much free compute the device has. We measure
 //! S on a W-sweep (N = 5, G = W) and project the speedup on both devices
-//! with the DESIGN.md §6 latency model.
+//! with the DESIGN.md §7 latency model.
 //!
 //! Expected shape: identical S on both devices; A100 speedup keeps rising
 //! with W while RTX3090 flattens/declines earlier (FLOPs cap bites).

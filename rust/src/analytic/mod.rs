@@ -1,6 +1,6 @@
 //! Analytic models from the paper's §4 plus the device-projection model used
 //! to translate CPU-measured step compression into GPU-class speedups
-//! (DESIGN.md §6):
+//! (DESIGN.md §7):
 //!
 //! - Eq. 4: E[#tokens] for single-sequence speculative decoding,
 //! - Eq. 5: E[#tokens] for b parallel speculations,
@@ -61,7 +61,7 @@ pub fn fit_alpha_f(points: &[(usize, usize, f64)]) -> (f64, f64) {
 }
 
 // ---------------------------------------------------------------------------
-// Device latency model (DESIGN.md §6)
+// Device latency model (DESIGN.md §7)
 // ---------------------------------------------------------------------------
 
 /// A decoding device, memory-bandwidth-bound at batch 1.

@@ -1,6 +1,6 @@
 //! Shared bench driver: run an engine over a prompt suite and aggregate the
 //! paper's measurables (S, tok/s, per-step latency), plus the A100/3090
-//! projections from DESIGN.md §6.
+//! projections from DESIGN.md §7.
 
 use std::sync::Arc;
 
@@ -75,8 +75,7 @@ impl SuiteRun {
     }
 }
 
-/// Options for [`run_suite_with`] — the single suite entry point that
-/// replaced the `run_suite` / `run_suite_outputs` / `run_suite_cached` trio.
+/// Options for [`run_suite_with`] — the single suite entry point.
 /// Defaults: greedy (temperature 0), cold per-request pools.
 #[derive(Debug, Clone, Default)]
 pub struct SuiteOptions<'a> {
@@ -111,34 +110,6 @@ impl<'a> SuiteOptions<'a> {
 pub struct SuiteOutcome {
     pub run: SuiteRun,
     pub texts: Vec<String>,
-}
-
-/// Run `engine` over `prompts`; greedy unless `temperature > 0`.
-#[deprecated(note = "use run_suite_with")]
-pub fn run_suite(rt: &ModelRuntime, engine: &mut dyn Decoder, prompts: &[String],
-                 max_tokens: usize, temperature: f64) -> Result<SuiteRun> {
-    let opts = SuiteOptions::new(max_tokens).temperature(temperature);
-    run_suite_with(rt, engine, prompts, opts).map(|o| o.run)
-}
-
-/// Like `run_suite` but also returns the generated texts (Tab. 2 ROUGE).
-#[deprecated(note = "use run_suite_with")]
-pub fn run_suite_outputs(rt: &ModelRuntime, engine: &mut dyn Decoder,
-                         prompts: &[String], max_tokens: usize, temperature: f64)
-                         -> Result<(SuiteRun, Vec<String>)> {
-    let opts = SuiteOptions::new(max_tokens).temperature(temperature);
-    run_suite_with(rt, engine, prompts, opts).map(|o| (o.run, o.texts))
-}
-
-/// Like `run_suite_outputs` with an optional cross-request shared cache.
-#[deprecated(note = "use run_suite_with")]
-pub fn run_suite_cached(rt: &ModelRuntime, engine: &mut dyn Decoder,
-                        prompts: &[String], max_tokens: usize, temperature: f64,
-                        cache: Option<&Arc<SharedNgramCache>>)
-                        -> Result<(SuiteRun, Vec<String>)> {
-    let mut opts = SuiteOptions::new(max_tokens).temperature(temperature);
-    opts.cache = cache;
-    run_suite_with(rt, engine, prompts, opts).map(|o| (o.run, o.texts))
 }
 
 /// Run `engine` over `prompts` under `opts`; the one suite entry point.

@@ -566,6 +566,17 @@ pub fn bench_json(pr: u64, spec: &LoadSpec, sched: &Schedule, run: &LoadRun) -> 
         ("warm_frac", Json::num(hit_rate(warm, cold))),
         ("mean_hit_rate", Json::num(pool_mean)),
     ]);
+    // engine-selection controller activity (all zero under --controller
+    // static — the counters only move when adaptive sessions switch)
+    let controller = Json::obj(vec![
+        ("decisions",
+         Json::num(report_counter(&run.report, "ctl_decisions") as f64)),
+        ("switches",
+         Json::num(report_counter(&run.report, "ctl_switches") as f64)),
+        ("rejected", Json::num(report_counter(&run.report, "ctl_rejected") as f64)),
+        ("failed",
+         Json::num(report_counter(&run.report, "ctl_switch_failed") as f64)),
+    ]);
     let sched_counts = Json::Obj(
         sched
             .counts()
@@ -602,6 +613,7 @@ pub fn bench_json(pr: u64, spec: &LoadSpec, sched: &Schedule, run: &LoadRun) -> 
          Json::num(report_counter(&run.report, "batched_rounds") as f64)),
         ("prefix_cache", prefix),
         ("ngram", ngram),
+        ("controller", controller),
     ])
 }
 
@@ -760,6 +772,9 @@ mod tests {
         validate_bench_json(&j.dump()).unwrap();
         assert!(j.path("goodput_tok_per_s").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(j.path("requests.ok").unwrap().as_usize(), Some(40));
+        // controller section present, all-zero without ctl_* counters
+        assert_eq!(j.path("controller.decisions").unwrap().as_usize(), Some(0));
+        assert_eq!(j.path("controller.switches").unwrap().as_usize(), Some(0));
     }
 
     #[test]

@@ -101,6 +101,46 @@ fn main() -> Result<()> {
     std::fs::write(&out, &text).with_context(|| format!("writing {out}"))?;
     println!("wrote {out}");
     print_headline(&record);
+
+    // --baseline FILE: compare against a prior record and gate on tail
+    // latency — the regression tripwire CI runs between stacked PRs.
+    if let Some(f) = args.get("baseline") {
+        let base = std::fs::read_to_string(f).with_context(|| format!("reading {f}"))?;
+        let base = Json::parse(&base).map_err(|e| anyhow!("bad baseline json: {e}"))?;
+        compare_to_baseline(&record, &base, f)?;
+    }
+    Ok(())
+}
+
+/// Print a delta summary vs a prior BENCH record and fail (nonzero exit)
+/// when p99 TTFT regressed by more than 20%. Throughput numbers are wall
+/// clock and machine-dependent, so everything except the tail-latency gate
+/// is informational.
+fn compare_to_baseline(new: &Json, base: &Json, base_path: &str) -> Result<()> {
+    const ROWS: [(&str, &str); 6] = [
+        ("ttft p50 ms", "ttft_ms.p50"),
+        ("ttft p99 ms", "ttft_ms.p99"),
+        ("per-token mean ms", "per_token_ms.mean"),
+        ("goodput tok/s", "goodput_tok_per_s"),
+        ("batch occupancy", "batch_occupancy.mean"),
+        ("throughput tok/s", "throughput_tok_per_s"),
+    ];
+    let at = |j: &Json, p: &str| j.path(p).and_then(Json::as_f64).unwrap_or(0.0);
+    println!("baseline {base_path}:");
+    for (label, path) in ROWS {
+        let (b, n) = (at(base, path), at(new, path));
+        let pct = if b.abs() > 1e-9 { 100.0 * (n - b) / b } else { 0.0 };
+        println!("  {label:<18} {b:>9.2} -> {n:>9.2}  ({pct:+.1}%)");
+    }
+    let (b99, n99) = (at(base, "ttft_ms.p99"), at(new, "ttft_ms.p99"));
+    if b99 > 0.0 && n99 > b99 * 1.20 {
+        bail!(
+            "p99 TTFT regression: {n99:.2} ms vs baseline {b99:.2} ms \
+             (>{:.2} ms budget, +20%)",
+            b99 * 1.20
+        );
+    }
+    println!("baseline gate: p99 TTFT within +20% budget");
     Ok(())
 }
 
@@ -132,6 +172,11 @@ fn print_usage(args: &Args) {
               help: "device KV budget per worker (0 = unlimited)" },
         Opt { name: "batch-decode", default: Some("true"),
               help: "continuous batching on/off" },
+        Opt { name: "controller", default: Some("static"),
+              help: "static | adaptive engine-selection controller" },
+        Opt { name: "baseline", default: None,
+              help: "prior BENCH_*.json to diff against; exits nonzero \
+                     when p99 TTFT regresses by more than 20%" },
         Opt { name: "addr", default: Some("127.0.0.1:7979"),
               help: "TCP bind address (sweeps use successive ports)" },
         Opt { name: "inprocess", default: Some("false"),
@@ -203,6 +248,7 @@ fn build_server_config(args: &Args, artifacts: &str,
             .unwrap_or_else(|| args.usize_or("time-slice", 4)))
         .max_live(args.usize_or("max-live", 4))
         .kv_budget(args.usize_or("kv-budget", 0))
+        .controller(args.str_or("controller", "static"))
         .build()
 }
 
@@ -259,6 +305,7 @@ fn attach_server_section(record: &mut Json, cfg: &ServerConfig) {
         ("kv_budget", Json::num(cfg.worker.kv_budget as f64)),
         ("prefix_cache", Json::Bool(cfg.worker.prefix_cache)),
         ("share_ngrams", Json::Bool(cfg.share_ngrams)),
+        ("controller", Json::str(cfg.worker.controller.clone())),
     ]);
     if let Json::Obj(m) = record {
         m.insert("server".to_string(), server);

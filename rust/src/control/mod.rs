@@ -1,0 +1,574 @@
+//! Adaptive speculation control (L3): pick and re-tune the decoding engine
+//! *live*, per session.
+//!
+//! The paper fixes the engine and its (W,N,G) statically per request, but
+//! the right FLOPs-for-steps trade point depends on the workload and drifts
+//! within a single generation. This module closes the loop the serving
+//! layer already measures: a [`Controller`] observes per-step accept
+//! lengths at every commit boundary (plus warm/cold signals from the shared
+//! n-gram registry) and issues [`EngineSwitch`] decisions; the worker
+//! applies them through [`switch_session`], which rides the existing
+//! suspend/resume machinery — suspend to a [`SessionSnapshot`], swap the
+//! engine state, resume — so the committed prefix stays byte-identical and
+//! a switch works mid-stream, across parks, and across rebalance hand-offs.
+//!
+//! Switching is restricted to **greedy** sessions: all five engines are
+//! byte-exact w.r.t. autoregressive greedy decoding, so the controller can
+//! never change output bytes, only the step count that produces them.
+//! (Sampled sessions consume per-engine RNG streams; a switch would change
+//! the sampled continuation, so the worker never offers them for control.)
+//!
+//! Policy (see DESIGN.md §6): per-session EWMA of the accept length with a
+//! hysteresis band [`low`, `high`] plus warmup/cooldown round counts.
+//! Below `low` a speculative engine is not earning its extra FLOPs — step
+//! down its ladder and eventually fall back to autoregressive. Above
+//! `high`, step up (wider lookahead level, wider spec gamma). A warm
+//! tenant n-gram cache promotes autoregressive sessions to prompt_lookup,
+//! the cheapest draft-free speculator over shared history.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::engine::DecodeSession;
+use crate::kv::{EngineState, SessionSnapshot};
+use crate::runtime::ModelRuntime;
+use crate::util::rng::Rng;
+
+/// A concrete engine configuration a session can run under — the
+/// controller's unit of choice. Levels mirror `Worker::make_engine`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EngineLevel {
+    Autoregressive,
+    Lookahead { w: usize, n: usize, g: usize },
+    Jacobi { k: usize },
+    PromptLookup { k: usize, match_len: usize },
+    SpecDecode { gamma: usize },
+}
+
+impl EngineLevel {
+    /// The request-method family this level belongs to (stable wire tag,
+    /// also the `accept_len_{method}` histogram suffix).
+    pub fn method(&self) -> &'static str {
+        match self {
+            EngineLevel::Autoregressive => "autoregressive",
+            EngineLevel::Lookahead { .. } => "lookahead",
+            EngineLevel::Jacobi { .. } => "jacobi",
+            EngineLevel::PromptLookup { .. } => "prompt_lookup",
+            EngineLevel::SpecDecode { .. } => "spec_decode",
+        }
+    }
+
+    /// Human/log tag pinning the full level, e.g. `lookahead:w5n3g5`.
+    pub fn tag(&self) -> String {
+        match self {
+            EngineLevel::Autoregressive => "autoregressive".into(),
+            EngineLevel::Lookahead { w, n, g } => format!("lookahead:w{w}n{n}g{g}"),
+            EngineLevel::Jacobi { k } => format!("jacobi:k{k}"),
+            EngineLevel::PromptLookup { k, match_len } => {
+                format!("prompt_lookup:k{k}m{match_len}")
+            }
+            EngineLevel::SpecDecode { gamma } => format!("spec_decode:g{gamma}"),
+        }
+    }
+}
+
+/// Per-session controller bookkeeping that lives OUTSIDE the session and
+/// its snapshot: the encoded prompt ids (history-backed switch targets
+/// rebuild `prompt + committed output` from them), the tenant (scopes the
+/// warm-cache signal), and the session's effective controller mode. The
+/// serving layer threads this through parks and cross-worker migrations so
+/// a switch can land wherever the session is currently being driven.
+#[derive(Debug, Clone)]
+pub struct CtlCarry {
+    pub prompt_ids: Vec<u32>,
+    pub tenant: Option<String>,
+    /// effective mode (server default + per-request override), already
+    /// gated on greedy sampling — only greedy sessions may switch.
+    pub adaptive: bool,
+}
+
+/// The [`EngineLevel`] a suspended session's snapshot encodes — how a
+/// revived or adopted session re-enters controller tracking without its
+/// original request in hand.
+pub fn level_from_state(engine: &EngineState) -> EngineLevel {
+    match engine {
+        EngineState::Autoregressive { .. } => EngineLevel::Autoregressive,
+        EngineState::Lookahead { w, n, g, .. } => {
+            EngineLevel::Lookahead { w: *w, n: *n, g: *g }
+        }
+        EngineState::Jacobi { k, .. } => EngineLevel::Jacobi { k: *k },
+        EngineState::PromptLookup { k, match_len, .. } => {
+            EngineLevel::PromptLookup { k: *k, match_len: *match_len }
+        }
+        EngineState::SpecDecode { gamma, .. } => {
+            EngineLevel::SpecDecode { gamma: *gamma }
+        }
+    }
+}
+
+/// One commit-boundary observation for a session: the stats deltas since
+/// the controller last saw it, plus shared-registry signals.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RoundObs {
+    /// decode steps the session took this round.
+    pub steps: u64,
+    /// tokens it committed this round.
+    pub tokens: u64,
+    /// the tenant's shared n-gram cache holds harvested entries (warm) —
+    /// the promote-prompt_lookup signal.
+    pub ngram_warm: bool,
+}
+
+/// A controller decision at a commit boundary.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum EngineSwitch {
+    Stay,
+    Switch(EngineLevel),
+}
+
+/// Live engine-selection policy. One controller instance serves every
+/// session on its worker; per-session state is keyed by session id and
+/// must be dropped via [`Controller::retire`] when the session ends.
+///
+/// `decide` is only ever called for greedy, suspendable sessions (the
+/// worker filters), so any `Switch` it returns is safe to apply.
+pub trait Controller {
+    fn name(&self) -> &'static str;
+
+    /// Observe one commit boundary and decide whether to switch engines.
+    fn decide(&mut self, sid: u64, current: &EngineLevel, obs: &RoundObs)
+              -> EngineSwitch;
+
+    /// Forget a session (finished, failed, parked away for good).
+    fn retire(&mut self, sid: u64);
+}
+
+/// The `--controller static` policy: never switches. The zero-overhead
+/// baseline every adaptive run is compared against.
+#[derive(Debug, Default)]
+pub struct StaticController;
+
+impl Controller for StaticController {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn decide(&mut self, _sid: u64, _current: &EngineLevel, _obs: &RoundObs)
+              -> EngineSwitch {
+        EngineSwitch::Stay
+    }
+
+    fn retire(&mut self, _sid: u64) {}
+}
+
+/// Tuning knobs of [`AdaptiveController`]. Defaults are sized for the sim
+/// artifacts' executable inventory; the worker filters the ladders down to
+/// what the loaded model actually provides before constructing one.
+#[derive(Debug, Clone)]
+pub struct AdaptiveConfig {
+    /// EWMA smoothing factor for the per-session accept length (weight of
+    /// the newest round).
+    pub alpha: f64,
+    /// hysteresis floor: a speculative engine whose EWMA accept length sits
+    /// below this is demoted one ladder step (eventually to autoregressive).
+    pub low: f64,
+    /// hysteresis ceiling: above this, promote one ladder step.
+    pub high: f64,
+    /// rounds observed under the current engine before the first decision.
+    pub warmup_rounds: u32,
+    /// rounds to hold after a switch before deciding again.
+    pub cooldown_rounds: u32,
+    /// lookahead (W,N,G) ladder, narrow to wide.
+    pub lookahead_levels: Vec<(usize, usize, usize)>,
+    /// jacobi chain-length ladder, narrow to wide.
+    pub jacobi_ks: Vec<usize>,
+    /// spec-decode gamma ladder, narrow to wide.
+    pub spec_gammas: Vec<usize>,
+    /// prompt_lookup level used when promoting off a warm n-gram cache.
+    pub prompt_lookup: (usize, usize),
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            alpha: 0.4,
+            low: 1.10,
+            high: 1.60,
+            warmup_rounds: 2,
+            cooldown_rounds: 2,
+            lookahead_levels: vec![(3, 2, 3), (5, 3, 5), (8, 4, 8)],
+            jacobi_ks: vec![5, 8],
+            spec_gammas: vec![4, 7],
+            prompt_lookup: (8, 1),
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+struct SessState {
+    /// EWMA of tokens-per-step; `None` until the first observed round
+    /// under the current engine (reset on every switch).
+    ewma: Option<f64>,
+    rounds: u32,
+    cooldown: u32,
+}
+
+/// The `--controller adaptive` policy: EWMA accept lengths + hysteresis
+/// band over the registered engine ladders.
+pub struct AdaptiveController {
+    pub cfg: AdaptiveConfig,
+    sessions: HashMap<u64, SessState>,
+}
+
+impl AdaptiveController {
+    pub fn new(cfg: AdaptiveConfig) -> Self {
+        AdaptiveController { cfg, sessions: HashMap::new() }
+    }
+
+    /// Demote/promote one step along a ladder of comparable levels.
+    /// Returns `None` when already at the requested end.
+    fn ladder_step<T: PartialEq + Copy>(ladder: &[T], at: T, up: bool) -> Option<T> {
+        let i = ladder.iter().position(|&l| l == at)?;
+        if up {
+            ladder.get(i + 1).copied()
+        } else {
+            i.checked_sub(1).map(|j| ladder[j])
+        }
+    }
+
+    fn pick(&self, current: &EngineLevel, ewma: f64, warm: bool) -> EngineSwitch {
+        let (low, high) = (self.cfg.low, self.cfg.high);
+        let collapse = ewma < low;
+        let surge = ewma > high;
+        let next = match current {
+            EngineLevel::Autoregressive => {
+                // AR's accept length is 1.0 by construction: the only
+                // upgrade signal is a warm shared n-gram cache, which makes
+                // prompt_lookup speculation nearly free
+                if warm {
+                    let (k, m) = self.cfg.prompt_lookup;
+                    Some(EngineLevel::PromptLookup { k, match_len: m })
+                } else {
+                    None
+                }
+            }
+            EngineLevel::PromptLookup { .. } if collapse => {
+                Some(EngineLevel::Autoregressive)
+            }
+            EngineLevel::Lookahead { w, n, g } if collapse || surge => {
+                match Self::ladder_step(&self.cfg.lookahead_levels, (*w, *n, *g),
+                                        surge) {
+                    Some((w, n, g)) => Some(EngineLevel::Lookahead { w, n, g }),
+                    None if collapse => Some(EngineLevel::Autoregressive),
+                    None => None,
+                }
+            }
+            EngineLevel::Jacobi { k } if collapse || surge => {
+                match Self::ladder_step(&self.cfg.jacobi_ks, *k, surge) {
+                    Some(k) => Some(EngineLevel::Jacobi { k }),
+                    None if collapse => Some(EngineLevel::Autoregressive),
+                    None => None,
+                }
+            }
+            EngineLevel::SpecDecode { gamma } if collapse || surge => {
+                match Self::ladder_step(&self.cfg.spec_gammas, *gamma, surge) {
+                    Some(gamma) => Some(EngineLevel::SpecDecode { gamma }),
+                    None if collapse => Some(EngineLevel::Autoregressive),
+                    None => None,
+                }
+            }
+            _ => None,
+        };
+        match next {
+            Some(level) if level != *current => EngineSwitch::Switch(level),
+            _ => EngineSwitch::Stay,
+        }
+    }
+}
+
+impl Controller for AdaptiveController {
+    fn name(&self) -> &'static str {
+        "adaptive"
+    }
+
+    fn decide(&mut self, sid: u64, current: &EngineLevel, obs: &RoundObs)
+              -> EngineSwitch {
+        let st = self.sessions.entry(sid).or_default();
+        if obs.steps > 0 {
+            let rate = obs.tokens as f64 / obs.steps as f64;
+            let a = self.cfg.alpha;
+            st.ewma = Some(match st.ewma {
+                Some(e) => a * rate + (1.0 - a) * e,
+                None => rate,
+            });
+            st.rounds += 1;
+        }
+        if st.cooldown > 0 {
+            st.cooldown -= 1;
+            return EngineSwitch::Stay;
+        }
+        if st.rounds < self.cfg.warmup_rounds {
+            return EngineSwitch::Stay;
+        }
+        let ewma = match st.ewma {
+            Some(e) => e,
+            None => return EngineSwitch::Stay,
+        };
+        let decision = self.pick(current, ewma, obs.ngram_warm);
+        if let EngineSwitch::Switch(_) = decision {
+            // new engine, new accept profile: re-warm before judging it
+            let st = self.sessions.entry(sid).or_default();
+            st.ewma = None;
+            st.rounds = 0;
+            st.cooldown = self.cfg.cooldown_rounds;
+        }
+        decision
+    }
+
+    fn retire(&mut self, sid: u64) {
+        self.sessions.remove(&sid);
+    }
+}
+
+/// Synthesize the engine state a fresh `begin` under `target` would start
+/// with, over an already-advanced KV cache. `cur` is the last committed
+/// token; `history` (prompt ids + committed output) is required for
+/// history-backed targets (prompt_lookup).
+fn synth_state(target: &EngineLevel, seed: u64, cur: u32,
+               history: Option<&[u32]>) -> Result<EngineState> {
+    Ok(match target {
+        EngineLevel::Autoregressive => {
+            // matches AutoRegressive::begin's rng derivation
+            EngineState::Autoregressive { cur, rng: Rng::new(seed).state() }
+        }
+        EngineLevel::Lookahead { w, n, g } => {
+            // matches Lookahead::begin: fresh rng, random window init
+            // (Algorithm 2 line 4), LookaheadConfig::new attn defaults
+            let mut rng = Rng::new(seed ^ 0x1007AE4D);
+            let rows: Vec<Vec<u32>> = (0..n - 1)
+                .map(|_| (0..*w).map(|_| rng.below(256) as u32).collect())
+                .collect();
+            EngineState::Lookahead {
+                w: *w,
+                n: *n,
+                g: *g,
+                attn: "jnp".into(),
+                force_generic: false,
+                rows,
+                cur,
+                rng: rng.state(),
+            }
+        }
+        EngineLevel::Jacobi { k } => {
+            // matches Jacobi::begin: fresh rng, random guess init
+            let mut rng = Rng::new(seed ^ 0x1AC0B1);
+            let guesses: Vec<u32> =
+                (0..k - 1).map(|_| rng.below(256) as u32).collect();
+            EngineState::Jacobi { k: *k, guesses, cur, rng: rng.state() }
+        }
+        EngineLevel::PromptLookup { k, match_len } => {
+            let history = history
+                .ok_or_else(|| anyhow!("prompt_lookup switch needs the session's \
+                                        token history"))?;
+            EngineState::PromptLookup {
+                k: *k,
+                match_len: *match_len,
+                history: history.to_vec(),
+            }
+        }
+        EngineLevel::SpecDecode { .. } => {
+            bail!("spec_decode state is synthesized inside switch_session \
+                   (it needs the draft cache)")
+        }
+    })
+}
+
+fn state_cur(engine: &EngineState) -> u32 {
+    match engine {
+        EngineState::Autoregressive { cur, .. }
+        | EngineState::Lookahead { cur, .. }
+        | EngineState::Jacobi { cur, .. }
+        | EngineState::SpecDecode { cur, .. } => *cur,
+        // a live session's history is never empty (it starts as the prompt)
+        EngineState::PromptLookup { history, .. } => {
+            history.last().copied().unwrap_or(0)
+        }
+    }
+}
+
+/// Switch a live session to `target` at a commit boundary: suspend it into
+/// a [`SessionSnapshot`], replace the engine state with what a fresh
+/// `begin` under `target` would hold, and resume over the same KV cache.
+/// The committed prefix (`snapshot.out`) rides through untouched, so under
+/// greedy sampling the final output is byte-identical to never switching.
+///
+/// `prompt_ids` is the session's encoded prompt (required for
+/// history-backed targets: prompt_lookup, and spec_decode promotion from a
+/// draft-less engine). `draft` must serve spec_decode targets.
+///
+/// On error before the suspend the session is untouched; a resume failure
+/// after the suspend poisons it (the caller retires it as failed) — the
+/// worker pre-validates executable availability to keep that path cold.
+pub fn switch_session<'rt>(sess: &mut Box<dyn DecodeSession + 'rt>,
+                           rt: &'rt ModelRuntime, target: &EngineLevel,
+                           prompt_ids: Option<&[u32]>,
+                           draft: Option<Rc<ModelRuntime>>) -> Result<()> {
+    if !sess.suspendable() {
+        bail!("session is not suspendable; cannot switch engines");
+    }
+    let mut snap = sess.suspend()?;
+    let cur = state_cur(&snap.engine);
+    let history: Option<Vec<u32>> = prompt_ids.map(|p| {
+        let mut h = Vec::with_capacity(p.len() + snap.out.len());
+        h.extend_from_slice(p);
+        h.extend_from_slice(&snap.out);
+        h
+    });
+    let mut draft_for_resume = None;
+    match target {
+        EngineLevel::SpecDecode { gamma } => {
+            let d = draft.ok_or_else(|| {
+                anyhow!("spec_decode switch needs a draft runtime")
+            })?;
+            if snap.draft_kv.is_none() {
+                // promotion from a draft-less engine: rebuild the draft
+                // cache by prefilling the full token history (its length
+                // equals the target cache's committed rows)
+                let h = history.as_deref().ok_or_else(|| {
+                    anyhow!("spec_decode promotion needs the session's \
+                             token history")
+                })?;
+                if h.len() > d.prefill_len {
+                    bail!("history ({} tokens) exceeds draft prefill capacity \
+                           {}", h.len(), d.prefill_len);
+                }
+                let dcache = d.prefill_reuse(h)?;
+                snap.draft_kv = Some(d.cache_to_host(&dcache)?);
+            }
+            snap.engine = EngineState::SpecDecode {
+                gamma: *gamma,
+                cur,
+                draft: d.mm.name.clone(),
+            };
+            draft_for_resume = Some(d);
+        }
+        _ => {
+            snap.engine =
+                synth_state(target, snap.params.seed, cur, history.as_deref())?;
+            snap.draft_kv = None;
+        }
+    }
+    *sess = snap.resume_with(rt, draft_for_resume)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obs(steps: u64, tokens: u64) -> RoundObs {
+        RoundObs { steps, tokens, ngram_warm: false }
+    }
+
+    fn warm(steps: u64, tokens: u64) -> RoundObs {
+        RoundObs { steps, tokens, ngram_warm: true }
+    }
+
+    fn adaptive() -> AdaptiveController {
+        AdaptiveController::new(AdaptiveConfig::default())
+    }
+
+    #[test]
+    fn static_controller_never_switches() {
+        let mut c = StaticController;
+        let la = EngineLevel::Lookahead { w: 5, n: 3, g: 5 };
+        for _ in 0..10 {
+            assert_eq!(c.decide(1, &la, &obs(4, 1)), EngineSwitch::Stay);
+        }
+    }
+
+    #[test]
+    fn collapse_steps_down_ladder_then_autoregressive() {
+        let mut c = adaptive();
+        let mid = EngineLevel::Lookahead { w: 5, n: 3, g: 5 };
+        // warmup rounds: no decision yet
+        assert_eq!(c.decide(1, &mid, &obs(4, 4)), EngineSwitch::Stay);
+        // accept length stuck at 1.0 < low: demote one level
+        let d = c.decide(1, &mid, &obs(4, 4));
+        assert_eq!(d,
+                   EngineSwitch::Switch(EngineLevel::Lookahead { w: 3, n: 2, g: 3 }));
+        // cooldown holds at the new level, then demote to the floor
+        let narrow = EngineLevel::Lookahead { w: 3, n: 2, g: 3 };
+        for _ in 0..2 {
+            assert_eq!(c.decide(1, &narrow, &obs(4, 4)), EngineSwitch::Stay);
+        }
+        assert_eq!(c.decide(1, &narrow, &obs(4, 4)),
+                   EngineSwitch::Switch(EngineLevel::Autoregressive));
+    }
+
+    #[test]
+    fn surge_widens_and_band_holds_steady() {
+        let mut c = adaptive();
+        let mid = EngineLevel::Lookahead { w: 5, n: 3, g: 5 };
+        assert_eq!(c.decide(1, &mid, &obs(2, 6)), EngineSwitch::Stay);
+        assert_eq!(c.decide(1, &mid, &obs(2, 6)),
+                   EngineSwitch::Switch(EngineLevel::Lookahead { w: 8, n: 4, g: 8 }));
+        // inside the band nothing moves (hysteresis: no oscillation)
+        let mut c = adaptive();
+        for _ in 0..10 {
+            assert_eq!(c.decide(2, &mid, &obs(4, 5)), EngineSwitch::Stay,
+                       "EWMA 1.25 is inside [1.10, 1.60] and must hold");
+        }
+    }
+
+    #[test]
+    fn warm_cache_promotes_autoregressive_to_prompt_lookup() {
+        let mut c = adaptive();
+        let ar = EngineLevel::Autoregressive;
+        assert_eq!(c.decide(1, &ar, &warm(4, 4)), EngineSwitch::Stay);
+        assert_eq!(
+            c.decide(1, &ar, &warm(4, 4)),
+            EngineSwitch::Switch(EngineLevel::PromptLookup { k: 8, match_len: 1 })
+        );
+        // a cold cache never promotes
+        let mut c = adaptive();
+        for _ in 0..6 {
+            assert_eq!(c.decide(1, &ar, &obs(4, 4)), EngineSwitch::Stay);
+        }
+    }
+
+    #[test]
+    fn spec_gamma_ladder_and_collapse() {
+        let mut c = adaptive();
+        let g4 = EngineLevel::SpecDecode { gamma: 4 };
+        assert_eq!(c.decide(1, &g4, &obs(2, 8)), EngineSwitch::Stay);
+        assert_eq!(c.decide(1, &g4, &obs(2, 8)),
+                   EngineSwitch::Switch(EngineLevel::SpecDecode { gamma: 7 }));
+        // collapse at the bottom of the gamma ladder falls back to AR
+        let mut c = adaptive();
+        let _ = c.decide(2, &g4, &obs(8, 8));
+        assert_eq!(c.decide(2, &g4, &obs(8, 8)),
+                   EngineSwitch::Switch(EngineLevel::Autoregressive));
+    }
+
+    #[test]
+    fn retire_drops_state() {
+        let mut c = adaptive();
+        let mid = EngineLevel::Lookahead { w: 5, n: 3, g: 5 };
+        let _ = c.decide(1, &mid, &obs(4, 4));
+        assert!(!c.sessions.is_empty());
+        c.retire(1);
+        assert!(c.sessions.is_empty());
+    }
+
+    #[test]
+    fn level_tags_are_stable() {
+        assert_eq!(EngineLevel::Lookahead { w: 5, n: 3, g: 5 }.tag(),
+                   "lookahead:w5n3g5");
+        assert_eq!(EngineLevel::SpecDecode { gamma: 4 }.method(), "spec_decode");
+        assert_eq!(EngineLevel::PromptLookup { k: 8, match_len: 1 }.tag(),
+                   "prompt_lookup:k8m1");
+    }
+}

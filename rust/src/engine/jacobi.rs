@@ -5,13 +5,14 @@
 
 use anyhow::{anyhow, Result};
 
-use crate::engine::session::{EngineStep, EngineSuspend, RawStep, Session, SessionCore};
+use crate::engine::session::{EngineStep, EngineSuspend, RawStep, Session, SessionCore,
+                             StepPlan};
 use crate::engine::{capacity_left, vocab_live, Decoder, DecodeSession, FinishReason,
                     GenParams};
 use crate::kv::EngineState;
 use crate::metrics::Timer;
 use crate::ngram::PoolHandle;
-use crate::runtime::{Cache, ModelRuntime};
+use crate::runtime::{Cache, ModelRuntime, StepOut};
 use crate::util::rng::Rng;
 
 pub struct Jacobi {
@@ -40,17 +41,32 @@ struct JacobiState<'rt> {
 }
 
 impl EngineStep for JacobiState<'_> {
-    fn raw_step(&mut self, _core: &mut SessionCore) -> Result<RawStep> {
-        let k = self.k;
+    // raw_step ≡ plan → decode → finish: the per-session and fused-batch
+    // paths execute the identical operation sequence (BatchStep contract).
+    fn raw_step(&mut self, core: &mut SessionCore) -> Result<RawStep> {
+        match self.plan_step(core)? {
+            StepPlan::Stop(r) => Ok(RawStep::Stop(r)),
+            StepPlan::Run => {
+                let step = self.rt.decode(&self.exe, self.cache.as_ref().unwrap(),
+                                          &self.tokens)?;
+                self.finish_step(core, step)
+            }
+        }
+    }
+
+    fn plan_step(&mut self, _core: &mut SessionCore) -> Result<StepPlan> {
         let cache_len = self.cache.as_ref().unwrap().len;
-        if !capacity_left(self.rt, cache_len, k) {
-            return Ok(RawStep::Stop(FinishReason::CacheFull));
+        if !capacity_left(self.rt, cache_len, self.k) {
+            return Ok(StepPlan::Stop(FinishReason::CacheFull));
         }
         self.tokens[0] = self.cur;
         self.tokens[1..].copy_from_slice(&self.guesses);
-        let step = self.rt.decode(&self.exe, self.cache.as_ref().unwrap(),
-                                  &self.tokens)?;
+        Ok(StepPlan::Run)
+    }
 
+    fn finish_step(&mut self, _core: &mut SessionCore, step: StepOut)
+                   -> Result<RawStep> {
+        let k = self.k;
         // Jacobi update: output i is the new value for position i+1.
         let new_vals: Vec<u32> =
             (0..k).map(|i| step.logits.argmax(i, self.vocab)).collect();
@@ -93,6 +109,27 @@ impl EngineStep for JacobiState<'_> {
 
     fn pool_mut(&mut self) -> &mut PoolHandle {
         &mut self.pool
+    }
+
+    fn batchable(&self) -> bool {
+        true
+    }
+
+    fn window(&self) -> &[u32] {
+        &self.tokens
+    }
+
+    fn batch_exe(&self) -> &str {
+        &self.exe
+    }
+
+    fn group_key(&self) -> String {
+        // linear-chain executable, no mask: the exe name pins the shape
+        format!("jacobi:{}", self.exe)
+    }
+
+    fn batch_cache(&self) -> Option<&Cache> {
+        self.cache.as_ref()
     }
 
     fn suspendable(&self) -> bool {

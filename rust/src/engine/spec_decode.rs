@@ -8,13 +8,14 @@ use std::rc::Rc;
 
 use anyhow::{anyhow, bail, Result};
 
-use crate::engine::session::{EngineStep, EngineSuspend, RawStep, Session, SessionCore};
+use crate::engine::session::{EngineStep, EngineSuspend, RawStep, Session, SessionCore,
+                             StepPlan};
 use crate::engine::{capacity_left, vocab_live, Decoder, DecodeSession, FinishReason,
                     GenParams};
 use crate::kv::EngineState;
 use crate::metrics::Timer;
 use crate::ngram::PoolHandle;
-use crate::runtime::{Cache, ModelRuntime};
+use crate::runtime::{Cache, ModelRuntime, StepOut};
 
 pub struct SpecDecode {
     /// Shared with every open session (sessions must not borrow the engine,
@@ -49,15 +50,36 @@ struct SpecState<'rt> {
     dcache: Option<Cache>,
     vocab: usize,
     dvocab: usize,
+    /// last plan's draft proposals, consumed by `finish_step` (the draft
+    /// loop is side-effectful, so it runs exactly once, in the plan half).
+    draft_toks: Vec<u32>,
     pool: PoolHandle,
 }
 
 impl EngineStep for SpecState<'_> {
-    fn raw_step(&mut self, _core: &mut SessionCore) -> Result<RawStep> {
+    // raw_step ≡ plan → decode → finish: the per-session and fused-batch
+    // paths execute the identical operation sequence (BatchStep contract).
+    // Only the TARGET verify call fuses across sessions; each session's
+    // draft proposals stay per-session inside its plan.
+    fn raw_step(&mut self, core: &mut SessionCore) -> Result<RawStep> {
+        match self.plan_step(core)? {
+            StepPlan::Stop(r) => Ok(RawStep::Stop(r)),
+            StepPlan::Run => {
+                let step = self.rt.decode(&self.verify_exe,
+                                          self.cache.as_ref().unwrap(),
+                                          &self.tokens)?;
+                self.finish_step(core, step)
+            }
+        }
+    }
+
+    fn plan_step(&mut self, _core: &mut SessionCore) -> Result<StepPlan> {
         let k = self.gamma + 1;
         let cache_len = self.cache.as_ref().unwrap().len;
+        // capacity check BEFORE the draft loop: a Stop plan must leave the
+        // draft cache untouched (plan may run again next round)
         if !capacity_left(self.rt, cache_len, k) {
-            return Ok(RawStep::Stop(FinishReason::CacheFull));
+            return Ok(StepPlan::Stop(FinishReason::CacheFull));
         }
 
         // -- draft proposes gamma tokens autoregressively ----------------
@@ -73,12 +95,17 @@ impl EngineStep for SpecState<'_> {
             dcur = t;
         }
 
-        // -- target verifies [cur, d1..d_gamma] in parallel ---------------
+        // -- assemble the verify window [cur, d1..d_gamma] ----------------
         self.tokens[0] = self.cur;
         self.tokens[1..].copy_from_slice(&draft_toks);
-        let step = self.rt.decode(&self.verify_exe, self.cache.as_ref().unwrap(),
-                                  &self.tokens)?;
+        self.draft_toks = draft_toks;
+        Ok(StepPlan::Run)
+    }
 
+    fn finish_step(&mut self, _core: &mut SessionCore, step: StepOut)
+                   -> Result<RawStep> {
+        let k = self.gamma + 1;
+        let draft_toks = std::mem::take(&mut self.draft_toks);
         let mut accepted: Vec<u32> = Vec::new();
         for i in 0..k {
             let target = step.logits.argmax(i, self.vocab);
@@ -112,6 +139,28 @@ impl EngineStep for SpecState<'_> {
 
     fn pool_mut(&mut self) -> &mut PoolHandle {
         &mut self.pool
+    }
+
+    fn batchable(&self) -> bool {
+        true
+    }
+
+    fn window(&self) -> &[u32] {
+        &self.tokens
+    }
+
+    fn batch_exe(&self) -> &str {
+        &self.verify_exe
+    }
+
+    fn group_key(&self) -> String {
+        // the fused call is the target verify (linear chain, no mask); the
+        // draft name rides along so mixed-draft groups never share a key
+        format!("spec_decode:{}:{}", self.verify_exe, self.draft.mm.name)
+    }
+
+    fn batch_cache(&self) -> Option<&Cache> {
+        self.cache.as_ref()
     }
 
     fn suspendable(&self) -> bool {
@@ -191,6 +240,7 @@ impl Decoder for SpecDecode {
             dcache: Some(dcache),
             vocab,
             dvocab,
+            draft_toks: Vec::new(),
             pool,
         }))
     }
@@ -225,6 +275,7 @@ pub(crate) fn resume_session<'rt>(rt: &'rt ModelRuntime, draft: Rc<ModelRuntime>
         dcache: Some(dcache),
         vocab: vocab_live(rt),
         dvocab,
+        draft_toks: Vec::new(),
         pool,
     }))
 }

@@ -18,6 +18,7 @@
 //! See DESIGN.md for the system inventory and EXPERIMENTS.md for results.
 
 pub mod analytic;
+pub mod control;
 pub mod engine;
 pub mod kv;
 pub mod layout;

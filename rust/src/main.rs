@@ -75,6 +75,10 @@ fn print_usage(args: &Args) {
         Opt { name: "rebalance-interval-ms", default: Some("50"),
               help: "how often the rebalancer compares per-worker \
                      live+parked depth (serve)" },
+        Opt { name: "controller", default: Some("static"),
+              help: "static | adaptive — adaptive re-tunes each greedy \
+                     session's engine live from observed accept lengths \
+                     (serve; requests can override per-request)" },
         Opt { name: "stream", default: Some("false"),
               help: "stream chunk lines before the final record (client)" },
         Opt { name: "report", default: Some("false"),
@@ -162,6 +166,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .max_live(args.usize_or("max-live", 4))
         .kv_budget(args.usize_or("kv-budget", 0))
         .prefix_cache(args.bool_or("prefix-cache", true))
+        .controller(args.str_or("controller", "static"))
         .build();
     let max_conns = args.get("max-conns").and_then(|v| v.parse().ok());
     serve_tcp(&args.str_or("addr", "127.0.0.1:7878"), cfg, max_conns)

@@ -90,6 +90,12 @@ pub struct WorkerConfig {
     /// fork a stored KV snapshot instead of paying a full prefill
     /// (byte-exact; needs a `cache_io` executable in the artifacts).
     pub prefix_cache: bool,
+    /// engine-selection controller: `"static"` keeps each request on its
+    /// requested engine; `"adaptive"` lets the per-worker
+    /// [`crate::control::AdaptiveController`] re-tune greedy sessions live
+    /// (switches ride suspend/resume, committed output stays byte-exact).
+    /// Requests can override either way via `Request::controller`.
+    pub controller: String,
 }
 
 impl Default for WorkerConfig {
@@ -104,6 +110,7 @@ impl Default for WorkerConfig {
             batch_decode: true,
             kv_budget: 0,
             prefix_cache: true,
+            controller: "static".into(),
         }
     }
 }
@@ -218,6 +225,11 @@ impl ServerConfigBuilder {
         self
     }
 
+    pub fn controller(mut self, mode: impl Into<String>) -> Self {
+        self.cfg.worker.controller = mode.into();
+        self
+    }
+
     pub fn build(self) -> ServerConfig {
         self.cfg
     }
@@ -273,6 +285,11 @@ impl WorkerConfigBuilder {
 
     pub fn prefix_cache(mut self, on: bool) -> Self {
         self.cfg.prefix_cache = on;
+        self
+    }
+
+    pub fn controller(mut self, mode: impl Into<String>) -> Self {
+        self.cfg.controller = mode.into();
         self
     }
 

@@ -35,6 +35,11 @@ pub struct Request {
     /// default shared namespace (single-tenant behavior).
     pub tenant: Option<String>,
     pub seed: u64,
+    /// per-request override of the server's engine-selection controller:
+    /// `"static"` pins the requested engine, `"adaptive"` opts into live
+    /// re-tuning (greedy requests only — sampled sessions never switch).
+    /// None = use the server default.
+    pub controller: Option<String>,
     /// stream per-step token deltas as JSON-lines chunks before the final
     /// stats record.
     pub stream: bool,
@@ -58,6 +63,7 @@ impl Default for Request {
             share_ngrams: None,
             tenant: None,
             seed: 0,
+            controller: None,
             stream: false,
             deadline_ms: None,
         }
@@ -115,6 +121,11 @@ impl Request {
 
     pub fn seed(mut self, s: u64) -> Self {
         self.seed = s;
+        self
+    }
+
+    pub fn controller(mut self, mode: impl Into<String>) -> Self {
+        self.controller = Some(mode.into());
         self
     }
 
@@ -188,6 +199,12 @@ impl Request {
             }
             r.tenant = Some(v.to_string());
         }
+        if let Some(v) = j.get("controller").and_then(Json::as_str) {
+            if v != "static" && v != "adaptive" {
+                bail!("'controller' must be \"static\" or \"adaptive\", got '{v}'");
+            }
+            r.controller = Some(v.to_string());
+        }
         if let Some(v) = j.get("stream").and_then(Json::as_bool) {
             r.stream = v;
         }
@@ -241,6 +258,9 @@ impl Request {
         }
         if let Some(t) = &self.tenant {
             fields.push(("tenant", Json::str(t.clone())));
+        }
+        if let Some(c) = &self.controller {
+            fields.push(("controller", Json::str(c.clone())));
         }
         if let Some(ms) = self.deadline_ms {
             fields.push(("deadline_ms", Json::num(ms as f64)));
@@ -506,6 +526,18 @@ mod tests {
     }
 
     #[test]
+    fn parses_controller_override() {
+        let r = Request::from_json_line(1, r#"{"prompt":"x","controller":"adaptive"}"#)
+            .unwrap();
+        assert_eq!(r.controller.as_deref(), Some("adaptive"));
+        let r = Request::from_json_line(1, r#"{"prompt":"x"}"#).unwrap();
+        assert_eq!(r.controller, None, "no override means the server default");
+        let e = Request::from_json_line(1, r#"{"prompt":"x","controller":"magic"}"#);
+        assert!(e.is_err(), "unknown controller mode must be rejected");
+        assert!(e.unwrap_err().to_string().contains("controller"));
+    }
+
+    #[test]
     fn response_carries_pool_stats() {
         let stats = DecodeStats {
             pool_hits: 3,
@@ -553,6 +585,7 @@ mod tests {
             .wng((4, 3, 4))
             .share_ngrams(false)
             .tenant("t1")
+            .controller("adaptive")
             .deadline_ms(99);
         let back = Request::from_json_line(0, &r.to_json_line()).unwrap();
         assert_eq!(back, Request { id: 0, ..r });

@@ -16,6 +16,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::control::CtlCarry;
 use crate::kv::SessionSnapshot;
 use crate::server::request::{Request, Response, StreamChunk};
 use crate::tokenizer::Utf8StreamDecoder;
@@ -259,6 +260,9 @@ pub struct MigratedSession {
     pub dec: Utf8StreamDecoder,
     pub deadline: Option<Instant>,
     pub snap: SessionSnapshot,
+    /// controller bookkeeping travelling with the session (None = the
+    /// session is not controller-tracked).
+    pub ctl: Option<CtlCarry>,
 }
 
 impl MigratedSession {
@@ -552,6 +556,7 @@ mod tests {
                 wall_offset: Duration::ZERO,
                 pool: crate::ngram::PoolHandle::none(),
             },
+            ctl: None,
         }
     }
 

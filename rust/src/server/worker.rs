@@ -29,6 +29,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::control::{level_from_state, switch_session, AdaptiveConfig,
+                     AdaptiveController, Controller, CtlCarry, EngineLevel,
+                     EngineSwitch, RoundObs};
 use crate::engine::autoregressive::AutoRegressive;
 use crate::engine::jacobi::Jacobi;
 use crate::engine::lookahead::Lookahead;
@@ -38,6 +41,7 @@ use crate::engine::{step_group, BatchStep, Decoder, DecodeSession, FinishReason,
                     StepOutcome};
 use crate::info;
 use crate::kv::{KvHandle, KvManager, PrefixCache, SessionSnapshot};
+use crate::layout::Wng;
 pub use crate::server::config::WorkerConfig;
 use crate::metrics::Registry;
 use crate::ngram::{NgramCacheRegistry, PoolHandle};
@@ -64,6 +68,21 @@ struct LiveSession<'rt> {
     /// scheduling rounds since this session was admitted or last revived
     /// ("hottest" has the lowest count; the park victim has the highest).
     rounds: u64,
+    /// controller tracking (None = unknown engine method: never observed,
+    /// never switched).
+    ctl: Option<SessCtl>,
+}
+
+/// Controller bookkeeping on a live session: the engine level it currently
+/// runs under, the [`CtlCarry`] that survives parks/migrations, and the
+/// stats baseline of the last observed round.
+struct SessCtl {
+    level: EngineLevel,
+    carry: CtlCarry,
+    /// session stats totals at the last controller observation; the deltas
+    /// are the per-round accept-length sample.
+    seen_steps: usize,
+    seen_tokens: usize,
 }
 
 /// A suspended request: its streaming state stays with the worker, the
@@ -76,6 +95,9 @@ struct ParkedSession {
     dec: Utf8StreamDecoder,
     deadline: Option<Instant>,
     handle: KvHandle,
+    /// controller bookkeeping carried across the park (the engine level
+    /// itself is re-derived from the snapshot on revive).
+    ctl: Option<CtlCarry>,
 }
 
 impl ParkedSession {
@@ -91,6 +113,7 @@ impl ParkedSession {
             dec: self.dec,
             deadline: self.deadline,
             snap,
+            ctl: self.ctl,
         }
     }
 
@@ -98,10 +121,11 @@ impl ParkedSession {
     /// parked set, its snapshot parked in `kv`. The exhaustive destructure
     /// keeps this the single place a migration's fields map back.
     fn from_migrated(m: MigratedSession, kv: &mut KvManager) -> ParkedSession {
-        let MigratedSession { to: _, id, stream, queued_ms, seq, dec, deadline, snap } =
-            m;
+        let MigratedSession {
+            to: _, id, stream, queued_ms, seq, dec, deadline, snap, ctl,
+        } = m;
         let handle = kv.park(snap);
-        ParkedSession { id, stream, queued_ms, seq, dec, deadline, handle }
+        ParkedSession { id, stream, queued_ms, seq, dec, deadline, handle, ctl }
     }
 }
 
@@ -271,6 +295,21 @@ impl Worker {
         let sess = engine
             .begin(rt, &ids, &req.gen_params(), pool)
             .map_err(|e| (rid, e.to_string()))?;
+        // controller tracking: only greedy sessions may ever switch (all
+        // five engines are byte-exact under greedy; sampled engines consume
+        // per-engine RNG streams a switch would disturb)
+        let ctl = Self::level_for(cfg, &req).map(|level| SessCtl {
+            level,
+            carry: CtlCarry {
+                prompt_ids: ids,
+                tenant: req.tenant.clone(),
+                adaptive: req.controller.as_deref().unwrap_or(&cfg.controller)
+                    == "adaptive"
+                    && req.temperature <= 0.0,
+            },
+            seen_steps: 0,
+            seen_tokens: 0,
+        });
         Ok(LiveSession {
             id: rid,
             stream: req.stream,
@@ -281,6 +320,21 @@ impl Worker {
             sess,
             error: None,
             rounds: 0,
+            ctl,
+        })
+    }
+
+    /// The [`EngineLevel`] a request's session starts under — must mirror
+    /// `make_engine`'s construction choices exactly.
+    fn level_for(cfg: &WorkerConfig, req: &Request) -> Option<EngineLevel> {
+        let (w, n, g) = req.wng.unwrap_or(cfg.wng);
+        Some(match &req.method[..] {
+            "lookahead" => EngineLevel::Lookahead { w, n, g },
+            "autoregressive" | "greedy" | "ar" => EngineLevel::Autoregressive,
+            "jacobi" => EngineLevel::Jacobi { k: 8 },
+            "prompt_lookup" => EngineLevel::PromptLookup { k: 8, match_len: 1 },
+            "spec_decode" => EngineLevel::SpecDecode { gamma: 4 },
+            _ => return None,
         })
     }
 
@@ -428,6 +482,175 @@ impl Worker {
         }
     }
 
+    /// The default adaptive ladders filtered to the levels this model's
+    /// executable inventory can actually serve, so the controller never
+    /// proposes a switch the runtime would reject.
+    fn adaptive_config_for(rt: &ModelRuntime) -> AdaptiveConfig {
+        let mut cfg = AdaptiveConfig::default();
+        cfg.lookahead_levels.retain(|&(w, n, g)| {
+            Self::target_available(rt, &EngineLevel::Lookahead { w, n, g })
+        });
+        cfg.jacobi_ks
+            .retain(|&k| Self::target_available(rt, &EngineLevel::Jacobi { k }));
+        cfg.spec_gammas.retain(|&gamma| {
+            Self::target_available(rt, &EngineLevel::SpecDecode { gamma })
+        });
+        cfg
+    }
+
+    /// Can the loaded model serve `target`? Mirrors each engine's
+    /// begin/resume validation, so a doomed switch is rejected *before*
+    /// the session is suspended.
+    fn target_available(rt: &ModelRuntime, target: &EngineLevel) -> bool {
+        match target {
+            EngineLevel::Autoregressive => true,
+            EngineLevel::Lookahead { w, n, g } => {
+                *w >= 1 && *n >= 2 && *g >= 1
+                    && (rt.mm.find_decode_la(*w, *n, *g, "jnp").is_some()
+                        || rt.mm.find_decode_gen(Wng::new(*w, *n, *g).t_in()).is_some())
+            }
+            EngineLevel::Jacobi { k } => *k >= 2 && rt.mm.decode_lin_exe(*k).is_ok(),
+            EngineLevel::PromptLookup { k, match_len } => {
+                *k >= 2 && *match_len >= 1 && rt.mm.decode_lin_exe(*k).is_ok()
+            }
+            EngineLevel::SpecDecode { gamma } => {
+                *gamma >= 1 && rt.mm.decode_lin_exe(gamma + 1).is_ok()
+            }
+        }
+    }
+
+    /// Warm-cache signal: the shared prompt_lookup n-gram cache a promoted
+    /// session would draw from (tenant-scoped) already holds harvested
+    /// entries.
+    fn ngram_warm(cfg: &WorkerConfig, caches: &Option<Arc<NgramCacheRegistry>>,
+                  tenant: Option<&str>) -> bool {
+        // entries before the shared pool counts as warm (a couple of
+        // one-off inserts should not flip every AR session to lookup)
+        const WARM_ENTRIES: usize = 8;
+        let Some(reg) = caches else { return false };
+        let Some(spec) = PromptLookup::new(8, 1).pool_spec() else { return false };
+        let stats = reg.get_or_create_scoped(tenant, &cfg.model, spec).stats();
+        stats.entries >= WARM_ENTRIES
+    }
+
+    fn bump(metrics: &Option<Arc<Mutex<Registry>>>, key: &str) {
+        if let Some(m) = metrics {
+            m.lock().unwrap().inc(key, 1);
+        }
+    }
+
+    /// Controller hook, once per scheduling round — a commit boundary for
+    /// every live session: record each tracked session's accept-length
+    /// delta in the per-engine histogram, and for adaptive sessions feed
+    /// the observation to the controller and apply any engine switch over
+    /// the suspend/resume path.
+    #[allow(clippy::too_many_arguments)]
+    fn control_round<'rt>(cfg: &WorkerConfig, manifest: &Manifest,
+                          rt: &'rt ModelRuntime,
+                          drafts: &mut HashMap<String, Rc<ModelRuntime>>,
+                          caches: &Option<Arc<NgramCacheRegistry>>,
+                          controller: &mut dyn Controller,
+                          live: &mut [LiveSession<'rt>],
+                          metrics: &Option<Arc<Mutex<Registry>>>) {
+        for ls in live.iter_mut() {
+            let target = {
+                let Some(ctl) = ls.ctl.as_mut() else { continue };
+                let stats = ls.sess.stats();
+                let steps = stats.decode_steps - ctl.seen_steps;
+                let tokens = stats.generated_tokens - ctl.seen_tokens;
+                ctl.seen_steps = stats.decode_steps;
+                ctl.seen_tokens = stats.generated_tokens;
+                if steps == 0 {
+                    continue; // no committed work this round: nothing to observe
+                }
+                if let Some(m) = metrics {
+                    m.lock().unwrap().observe(
+                        &format!("accept_len_{}", ctl.level.method()),
+                        tokens as f64 / steps as f64,
+                    );
+                }
+                // switching requires a healthy, unfinished, suspendable
+                // session whose effective mode is adaptive
+                if !ctl.carry.adaptive || ls.error.is_some()
+                    || ls.sess.finished().is_some()
+                    || !ls.sess.suspendable()
+                {
+                    continue;
+                }
+                let obs = RoundObs {
+                    steps: steps as u64,
+                    tokens: tokens as u64,
+                    ngram_warm: Self::ngram_warm(cfg, caches,
+                                                 ctl.carry.tenant.as_deref()),
+                };
+                Self::bump(metrics, "ctl_decisions");
+                match controller.decide(ls.id, &ctl.level, &obs) {
+                    EngineSwitch::Stay => continue,
+                    EngineSwitch::Switch(target) => target,
+                }
+            };
+            Self::apply_switch(cfg, manifest, rt, drafts, ls, target, metrics);
+        }
+    }
+
+    /// Apply a controller decision: pre-validate the target so the
+    /// post-suspend failure path stays cold, then switch the session over
+    /// suspend/resume (committed prefix byte-identical across the switch).
+    fn apply_switch<'rt>(cfg: &WorkerConfig, manifest: &Manifest,
+                         rt: &'rt ModelRuntime,
+                         drafts: &mut HashMap<String, Rc<ModelRuntime>>,
+                         ls: &mut LiveSession<'rt>, target: EngineLevel,
+                         metrics: &Option<Arc<Mutex<Registry>>>) {
+        let Some(ctl) = ls.ctl.as_mut() else { return };
+        if !Self::target_available(rt, &target) {
+            Self::bump(metrics, "ctl_rejected");
+            return;
+        }
+        let draft = match target {
+            EngineLevel::SpecDecode { .. } => {
+                match Self::draft_runtime(rt, manifest, drafts, &cfg.draft_model) {
+                    Ok(d) => {
+                        // a promotion from a draft-less engine must rebuild
+                        // the draft cache by prefilling the full history —
+                        // reject histories the draft prefill cannot hold
+                        let hist =
+                            ctl.carry.prompt_ids.len() + ls.sess.tokens().len();
+                        if !matches!(ctl.level, EngineLevel::SpecDecode { .. })
+                            && hist > d.prefill_len
+                        {
+                            Self::bump(metrics, "ctl_rejected");
+                            return;
+                        }
+                        Some(d)
+                    }
+                    Err(_) => {
+                        Self::bump(metrics, "ctl_rejected");
+                        return;
+                    }
+                }
+            }
+            _ => None,
+        };
+        match switch_session(&mut ls.sess, rt, &target,
+                             Some(&ctl.carry.prompt_ids), draft) {
+            Ok(()) => {
+                if let Some(m) = metrics {
+                    let mut m = m.lock().unwrap();
+                    m.inc("ctl_switches", 1);
+                    m.inc(&format!("ctl_switch_to_{}", target.method()), 1);
+                }
+                ctl.level = target;
+            }
+            Err(e) => {
+                // a failure after the suspend consumed the old session —
+                // the request fails and the retirement sweep delivers the
+                // record (pre-validation above keeps this path cold)
+                ls.error = Some(format!("engine switch failed: {e}"));
+                Self::bump(metrics, "ctl_switch_failed");
+            }
+        }
+    }
+
     /// Park the coldest suspendable live session: snapshot to the
     /// [`KvManager`], free its device cache. Returns false when no session
     /// can be parked (none suspendable — the budget stays soft-violated).
@@ -461,6 +684,7 @@ impl Worker {
                     dec: ls.dec,
                     deadline: ls.deadline,
                     handle,
+                    ctl: ls.ctl.map(|c| c.carry),
                 });
                 true
             }
@@ -484,12 +708,27 @@ impl Worker {
         let resumed = kv
             .revive(p.handle)
             .ok_or_else(|| anyhow!("parked session {} lost its snapshot", p.id))
-            .and_then(|snap| Self::resume_snap(rt, manifest, drafts, snap));
+            .and_then(|snap| {
+                // controller re-entry state, read off the snapshot before
+                // the resume consumes it: the engine level the session
+                // wakes under, and the stats baseline (pre-park rounds were
+                // already observed on the worker that parked it)
+                let level = level_from_state(&snap.engine);
+                let seen = (snap.stats.decode_steps, snap.stats.generated_tokens);
+                Self::resume_snap(rt, manifest, drafts, snap)
+                    .map(|sess| (sess, level, seen))
+            });
         match resumed {
-            Ok(sess) => {
+            Ok((sess, level, (seen_steps, seen_tokens))) => {
                 if let Some(m) = metrics {
                     m.lock().unwrap().inc("kv_restores", 1);
                 }
+                let ctl = p.ctl.map(|carry| SessCtl {
+                    level,
+                    carry,
+                    seen_steps,
+                    seen_tokens,
+                });
                 live.push(LiveSession {
                     id: p.id,
                     stream: p.stream,
@@ -500,6 +739,7 @@ impl Worker {
                     sess,
                     error: None,
                     rounds: 0,
+                    ctl,
                 });
                 true
             }
@@ -520,7 +760,8 @@ impl Worker {
     /// stats. Returns false when the reply channel is gone.
     fn sweep_parked(parked: &mut VecDeque<ParkedSession>, kv: &mut KvManager,
                     tok: &ByteTokenizer, cancels: &CancelSet,
-                    replies: &Sender<Reply>) -> bool {
+                    controller: &mut dyn Controller, replies: &Sender<Reply>)
+                    -> bool {
         let mut i = 0;
         while i < parked.len() {
             let reason = if cancels.contains(parked[i].id) {
@@ -536,6 +777,7 @@ impl Worker {
             };
             let Some(p) = parked.remove(i) else { break };
             cancels.clear(p.id);
+            controller.retire(p.id);
             let Some(snap) = kv.revive(p.handle) else {
                 // the snapshot is gone (regression: this used to `continue`
                 // straight past the entry, leaving the client waiting on a
@@ -597,16 +839,22 @@ impl Worker {
     /// the hand-off, the session is re-parked locally — a migration never
     /// strands a request. Returns false when the reply channel is gone.
     fn donate(to: usize, parked: &mut VecDeque<ParkedSession>, kv: &mut KvManager,
-              hub: &RebalanceHub, cancels: &CancelSet, replies: &Sender<Reply>,
+              hub: &RebalanceHub, cancels: &CancelSet,
+              controller: &mut dyn Controller, replies: &Sender<Reply>,
               metrics: &Option<Arc<Mutex<Registry>>>) -> bool {
         let Some(p) = parked.pop_front() else { return true };
         let Some(snap) = kv.revive(p.handle) else {
             // same contract as sweep_parked: a lost snapshot still yields a
             // final record
+            controller.retire(p.id);
             return Self::fail_parked(p, cancels, replies);
         };
+        let id = p.id;
         match hub.transfer(p.into_migrated(to, snap)) {
             Ok(()) => {
+                // the controller's per-session state stays behind (the
+                // adopter's controller re-warms from fresh observations)
+                controller.retire(id);
                 if let Some(m) = metrics {
                     m.lock().unwrap().inc("rebalanced_sessions", 1);
                 }
@@ -687,6 +935,12 @@ impl Worker {
         let mut live: Vec<LiveSession<'_>> = Vec::new();
         let mut parked: VecDeque<ParkedSession> = VecDeque::new();
         let mut kv = KvManager::new();
+        // the worker always carries an adaptive controller; it is consulted
+        // only for sessions whose effective mode (server default or
+        // per-request override) is adaptive, so a static server with no
+        // overrides never pays for it
+        let mut controller: Box<dyn Controller> =
+            Box::new(AdaptiveController::new(Self::adaptive_config_for(&rt)));
         'serve: loop {
             // -- adoption: sessions other workers migrated here join the
             //    parked set (counted against max_live by admission) --------
@@ -762,12 +1016,17 @@ impl Worker {
             for ls in live.iter_mut() {
                 ls.rounds += 1;
             }
+            // -- controller: observe this round's accept lengths, apply any
+            //    engine switches at this commit boundary --------------------
+            Self::control_round(&cfg, &manifest, &rt, &mut drafts, &ngram_caches,
+                                controller.as_mut(), &mut live, &metrics);
             // -- retirement sweep: deliver final records for every session
             //    the round finished, cancelled, or failed -------------------
             let mut i = 0;
             while i < live.len() {
                 if live[i].sess.finished().is_some() || live[i].error.is_some() {
                     let ls = live.swap_remove(i);
+                    controller.retire(ls.id);
                     if !Self::retire(ls, &cancels, &replies) {
                         break 'serve; // server gone
                     }
@@ -778,7 +1037,8 @@ impl Worker {
             // -- parked stop signals: cancelled / deadline-expired parked
             //    sessions retire from their host snapshot, skipping both
             //    the rotation wait and the device restore ------------------
-            if !Self::sweep_parked(&mut parked, &mut kv, &tok, &cancels, &replies) {
+            if !Self::sweep_parked(&mut parked, &mut kv, &tok, &cancels,
+                                   controller.as_mut(), &replies) {
                 break 'serve;
             }
             // -- revive parked sessions into freed device slots --------------
@@ -806,7 +1066,7 @@ impl Worker {
                 if let Some(to) = hub.take_directive(id) {
                     if !parked.is_empty()
                         && !Self::donate(to, &mut parked, &mut kv, hub, &cancels,
-                                         &replies, &metrics)
+                                         controller.as_mut(), &replies, &metrics)
                     {
                         break 'serve;
                     }
@@ -851,6 +1111,7 @@ impl Worker {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::control::StaticController;
     use crate::engine::GenParams;
     use crate::kv::EngineState;
     use crate::metrics::DecodeStats;
@@ -885,6 +1146,7 @@ mod tests {
             dec,
             deadline: None,
             handle,
+            ctl: None,
         }
     }
 
@@ -904,7 +1166,8 @@ mod tests {
         let (tx, rx) = channel();
         let tok = ByteTokenizer::new();
 
-        assert!(Worker::sweep_parked(&mut parked, &mut kv, &tok, &cancels, &tx));
+        assert!(Worker::sweep_parked(&mut parked, &mut kv, &tok, &cancels,
+                                     &mut StaticController, &tx));
         assert!(parked.is_empty(), "the lost entry must be dropped");
         match rx.recv().unwrap() {
             Reply::Chunk(c) => {
@@ -933,7 +1196,8 @@ mod tests {
         cancels.request(7);
         let (tx, rx) = channel();
         let tok = ByteTokenizer::new();
-        assert!(Worker::sweep_parked(&mut parked, &mut kv, &tok, &cancels, &tx));
+        assert!(Worker::sweep_parked(&mut parked, &mut kv, &tok, &cancels,
+                                     &mut StaticController, &tx));
         match rx.recv().unwrap() {
             Reply::Done(r) => assert!(r.error.is_some()),
             Reply::Chunk(c) => panic!("non-streaming sweep must not chunk: {c:?}"),
@@ -955,13 +1219,15 @@ mod tests {
             dec: Utf8StreamDecoder::new(),
             deadline: None,
             handle: healthy_handle,
+            ctl: None,
         });
         parked.push_back(lost_entry(&mut kv, 2, false, Utf8StreamDecoder::new(), 0));
         let cancels = CancelSet::new();
         cancels.request(2);
         let (tx, rx) = channel();
         let tok = ByteTokenizer::new();
-        assert!(Worker::sweep_parked(&mut parked, &mut kv, &tok, &cancels, &tx));
+        assert!(Worker::sweep_parked(&mut parked, &mut kv, &tok, &cancels,
+                                     &mut StaticController, &tx));
         assert_eq!(parked.len(), 1);
         assert_eq!(parked[0].id, 1);
         assert_eq!(rx.recv().unwrap().id(), 2);
@@ -982,10 +1248,12 @@ mod tests {
             dec: Utf8StreamDecoder::new(),
             deadline: None,
             handle,
+            ctl: None,
         });
         let cancels = CancelSet::new();
         let (tx, rx) = channel();
-        assert!(Worker::donate(1, &mut parked, &mut kv, &hub, &cancels, &tx, &None));
+        assert!(Worker::donate(1, &mut parked, &mut kv, &hub, &cancels,
+                               &mut StaticController, &tx, &None));
         assert_eq!(hub.moves(), 0, "no transfer must be recorded");
         assert_eq!(parked.len(), 1, "the session must be re-parked locally");
         assert_eq!(kv.parked_count(), 1);
@@ -1009,11 +1277,12 @@ mod tests {
             dec: Utf8StreamDecoder::new(),
             deadline: None,
             handle,
+            ctl: None,
         });
         let cancels = CancelSet::new();
         let (tx, _rx) = channel();
-        assert!(Worker::donate(1, &mut parked_a, &mut kv_a, &hub, &cancels, &tx,
-                               &None));
+        assert!(Worker::donate(1, &mut parked_a, &mut kv_a, &hub, &cancels,
+                               &mut StaticController, &tx, &None));
         assert!(parked_a.is_empty());
         assert_eq!(kv_a.parked_count(), 0, "the donor no longer owns the snapshot");
         assert_eq!(hub.moves(), 1);

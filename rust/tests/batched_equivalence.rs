@@ -15,16 +15,22 @@
 //!      per-step delta sequences (private pools).
 //!   2. Works under sampling (per-session RNG state is batch-invariant).
 //!   3. Mixed-engine groups fuse per group key and stay correct.
-//!   4. A `ServerHandle` with `batch_decode` on serves the same streams
+//!   4. Jacobi and spec_decode groups (the `BatchStep` plan/finish split)
+//!      stay byte-identical through `step_group` — on sim artifacts they
+//!      never fuse (no batched lin-k executables), so this pins the
+//!      grouped-fallback path.
+//!   5. A `ServerHandle` with `batch_decode` on serves the same streams
 //!      (chunk deltas + final records) as one with it off, and reports
 //!      `batched_rounds` / `batch_size` metrics.
-//!   5. Property: random open/cancel interleavings never leak tokens
+//!   6. Property: random open/cancel interleavings never leak tokens
 //!      across sessions and always end in well-formed final records.
 
 use std::collections::HashMap;
 
 use lookahead::engine::autoregressive::AutoRegressive;
+use lookahead::engine::jacobi::Jacobi;
 use lookahead::engine::lookahead::Lookahead;
+use lookahead::engine::spec_decode::SpecDecode;
 use lookahead::engine::{step_group, Decoder, DecodeSession, GenParams, SamplingParams,
                         StepOutcome};
 use lookahead::ngram::PoolHandle;
@@ -193,6 +199,52 @@ fn batched_matches_sequential_at_batch_1_2_5() {
             // the suite must exercise real decoding, not 5 EOS-first stubs
             // (one prompt intentionally EOSes immediately — the empty-stream
             // edge case — but not all of them)
+            assert!(seq.iter().map(|l| l.tokens.len()).sum::<usize>() > 0,
+                    "{}: batch {batch}: every run was empty", engine.name());
+        }
+    }
+}
+
+#[test]
+fn jacobi_and_spec_groups_match_sequential_without_fusing() {
+    let rt = setup();
+    let manifest = Manifest::load(sim_dir()).unwrap();
+    let params = GenParams { max_new_tokens: 24, ..Default::default() };
+    let engines: Vec<Box<dyn Decoder>> = vec![
+        Box::new(Jacobi::new(8)),
+        Box::new(SpecDecode::new(
+            ModelRuntime::load(&rt.client, &manifest, "draft").unwrap(),
+            4,
+        )),
+    ];
+    for engine in &engines {
+        for batch in [2usize, 3] {
+            let prompts = prompt_ids(batch);
+            let seq: Vec<RunLog> = prompts
+                .iter()
+                .map(|p| run_sequential(engine.as_ref(), &rt, p, &params))
+                .collect();
+            let (bat, fused) = run_batched(engine.as_ref(), &rt, &prompts, &params);
+            // sim artifacts carry batched executables only for the AR and
+            // generic-lookahead shapes, so these groups plan together and
+            // then take the per-session fallback — zero fused launches
+            assert!(fused.is_empty(),
+                    "{}: sim must not fuse lin-k groups, got {fused:?}",
+                    engine.name());
+            for (i, (s, b)) in seq.iter().zip(&bat).enumerate() {
+                assert_eq!(s.tokens, b.tokens,
+                           "{}: batch {batch} session {i}: tokens diverged",
+                           engine.name());
+                assert_eq!(s.deltas, b.deltas,
+                           "{}: batch {batch} session {i}: step deltas diverged",
+                           engine.name());
+                assert_eq!(s.generated, b.generated,
+                           "{}: batch {batch} session {i}: generated_tokens diverged",
+                           engine.name());
+                assert_eq!(s.steps, b.steps,
+                           "{}: batch {batch} session {i}: decode_steps diverged",
+                           engine.name());
+            }
             assert!(seq.iter().map(|l| l.tokens.len()).sum::<usize>() > 0,
                     "{}: batch {batch}: every run was empty", engine.name());
         }

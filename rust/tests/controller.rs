@@ -1,0 +1,189 @@
+//! Adaptive-controller exactness suite (simulated artifacts — runs without
+//! PJRT).
+//!
+//! The controller's safety contract: under greedy sampling, switching a
+//! live session between engines at commit boundaries NEVER changes the
+//! committed bytes — every engine is byte-exact w.r.t. autoregressive
+//! greedy decoding, so the controller can only change how many steps the
+//! output costs, not the output itself.
+//!
+//! Claims pinned here:
+//!   1. Every ordered (start engine, target engine) pair over all five
+//!      engines, switched mid-stream via `control::switch_session`, ends
+//!      byte-identical to a pure autoregressive greedy run — including
+//!      spec_decode promotion from draft-less engines (the draft cache is
+//!      rebuilt from token history) and demotion away from it.
+//!   2. Property: random multi-switch chains at random commit boundaries
+//!      stay byte-exact.
+
+use std::rc::Rc;
+
+use lookahead::control::{switch_session, EngineLevel};
+use lookahead::engine::autoregressive::AutoRegressive;
+use lookahead::engine::jacobi::Jacobi;
+use lookahead::engine::lookahead::Lookahead;
+use lookahead::engine::prompt_lookup::PromptLookup;
+use lookahead::engine::spec_decode::SpecDecode;
+use lookahead::engine::{Decoder, GenParams, StepOutcome};
+use lookahead::ngram::PoolHandle;
+use lookahead::runtime::sim::ensure_sim_artifacts;
+use lookahead::runtime::{cpu_client, Manifest, ModelRuntime};
+use lookahead::tokenizer::ByteTokenizer;
+use lookahead::util::prop::forall;
+use lookahead::util::rng::Rng;
+
+fn sim_dir() -> String {
+    ensure_sim_artifacts().unwrap().to_string_lossy().into_owned()
+}
+
+// prompts that decode to non-trivial outputs on the sim LM (no instant EOS)
+const PROMPTS: [&str; 2] =
+    ["def add_ab(a, b):\n    result = a", "the quick brown fox jumps over"];
+
+/// The five controller levels this suite swaps between — each has its
+/// executable on the sim artifacts (decode_gen_20, decode_lin_{5,8}).
+fn levels() -> Vec<EngineLevel> {
+    vec![
+        EngineLevel::Autoregressive,
+        EngineLevel::Lookahead { w: 5, n: 3, g: 5 },
+        EngineLevel::Jacobi { k: 8 },
+        EngineLevel::PromptLookup { k: 8, match_len: 1 },
+        EngineLevel::SpecDecode { gamma: 4 },
+    ]
+}
+
+fn engine_for(level: &EngineLevel, rt: &ModelRuntime, manifest: &Manifest)
+              -> Box<dyn Decoder> {
+    match level {
+        EngineLevel::Autoregressive => Box::new(AutoRegressive::new()),
+        EngineLevel::Lookahead { w, n, g } => {
+            Box::new(Lookahead::with_wng(*w, *n, *g))
+        }
+        EngineLevel::Jacobi { k } => Box::new(Jacobi::new(*k)),
+        EngineLevel::PromptLookup { k, match_len } => {
+            Box::new(PromptLookup::new(*k, *match_len))
+        }
+        EngineLevel::SpecDecode { gamma } => Box::new(SpecDecode::new(
+            ModelRuntime::load(&rt.client, manifest, "draft").unwrap(),
+            *gamma,
+        )),
+    }
+}
+
+/// Drive a session opened under `engine` to completion, applying each
+/// `(after_commits, target)` switch at its commit boundary. Returns the
+/// committed token stream.
+fn run_switched(rt: &ModelRuntime, draft: &Rc<ModelRuntime>, engine: &dyn Decoder,
+                ids: &[u32], params: &GenParams,
+                switches: &[(usize, EngineLevel)]) -> Vec<u32> {
+    let pool = PoolHandle::for_spec(engine.pool_spec());
+    let mut sess = engine.begin(rt, ids, params, pool).unwrap();
+    let mut commits = 0usize;
+    let mut pending = switches.to_vec();
+    loop {
+        match sess.step().unwrap() {
+            StepOutcome::Committed { .. } => {
+                commits += 1;
+                while let Some((at, target)) = pending.first().cloned() {
+                    if commits < at {
+                        break;
+                    }
+                    let d = matches!(target, EngineLevel::SpecDecode { .. })
+                        .then(|| draft.clone());
+                    switch_session(&mut sess, rt, &target, Some(ids), d)
+                        .unwrap_or_else(|e| {
+                            panic!("switch to {} failed: {e}", target.tag())
+                        });
+                    pending.remove(0);
+                }
+            }
+            StepOutcome::Finished { .. } => break,
+        }
+    }
+    let (out, _) = sess.into_output();
+    out.tokens
+}
+
+#[test]
+fn every_engine_pair_switch_is_byte_exact() {
+    let manifest = Manifest::load(sim_dir()).unwrap();
+    let client = cpu_client().unwrap();
+    let rt = ModelRuntime::load(&client, &manifest, "tiny").unwrap();
+    let draft = Rc::new(ModelRuntime::load(&client, &manifest, "draft").unwrap());
+    let tok = ByteTokenizer::new();
+    let params = GenParams { max_new_tokens: 32, ..Default::default() };
+    let levels = levels();
+    for prompt in PROMPTS {
+        let ids = tok.encode_with_bos(prompt);
+        let want = AutoRegressive::new().generate(&rt, &ids, &params).unwrap();
+        assert!(!want.tokens.is_empty(), "reference run must generate tokens");
+        for start in &levels {
+            let engine = engine_for(start, &rt, &manifest);
+            for target in &levels {
+                let got = run_switched(&rt, &draft, engine.as_ref(), &ids,
+                                       &params, &[(2, target.clone())]);
+                assert_eq!(got, want.tokens,
+                           "switch {} -> {} changed committed bytes",
+                           start.tag(), target.tag());
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_random_switch_chains_stay_byte_exact() {
+    let manifest = Manifest::load(sim_dir()).unwrap();
+    let client = cpu_client().unwrap();
+    let rt = ModelRuntime::load(&client, &manifest, "tiny").unwrap();
+    let draft = Rc::new(ModelRuntime::load(&client, &manifest, "draft").unwrap());
+    let tok = ByteTokenizer::new();
+    let params = GenParams { max_new_tokens: 40, ..Default::default() };
+    let levels = levels();
+    let refs: Vec<Vec<u32>> = PROMPTS
+        .iter()
+        .map(|p| {
+            let ids = tok.encode_with_bos(p);
+            AutoRegressive::new().generate(&rt, &ids, &params).unwrap().tokens
+        })
+        .collect();
+
+    forall(
+        12,
+        0xC011_7801,
+        |r: &mut Rng| -> (usize, usize, Vec<(usize, usize)>) {
+            // (prompt, start level, [(commit boundary, target level)...])
+            // with strictly increasing switch points
+            let n = r.range(1, 4);
+            let mut at = 0usize;
+            let switches = (0..n)
+                .map(|_| {
+                    at += r.range(1, 4);
+                    (at, r.below(5))
+                })
+                .collect();
+            (r.below(PROMPTS.len()), r.below(5), switches)
+        },
+        |(pi, si, script)| {
+            let ids = tok.encode_with_bos(PROMPTS[*pi]);
+            let engine = engine_for(&levels[*si], &rt, &manifest);
+            let switches: Vec<(usize, EngineLevel)> = script
+                .iter()
+                .map(|&(at, ti)| (at, levels[ti].clone()))
+                .collect();
+            let got =
+                run_switched(&rt, &draft, engine.as_ref(), &ids, &params, &switches);
+            if got != refs[*pi] {
+                let tags: Vec<String> = switches
+                    .iter()
+                    .map(|(at, l)| format!("@{at}->{}", l.tag()))
+                    .collect();
+                return Err(format!(
+                    "chain {} from {} diverged from greedy reference",
+                    tags.join(" "),
+                    levels[*si].tag()
+                ));
+            }
+            Ok(())
+        },
+    );
+}

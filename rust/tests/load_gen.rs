@@ -12,7 +12,6 @@
 //!   4. A driven run — in-process and over TCP — folds into a
 //!      schema-valid `lookahead-serve-bench/v1` record, with the server's
 //!      `{"report": true}` scrape carried along.
-//!   5. The deprecated `run_suite` wrappers and `run_suite_with` agree.
 
 use lookahead::bench::load::{bench_json, drive_inprocess, drive_tcp,
                              validate_bench_json, LoadSpec, Schedule};
@@ -74,6 +73,7 @@ fn server_config_default_is_pinned() {
     assert!(w.batch_decode);
     assert_eq!(w.kv_budget, 0);
     assert!(w.prefix_cache);
+    assert_eq!(w.controller, "static");
 
     // builders over untouched defaults reproduce Default exactly
     assert_eq!(ServerConfig::builder().build(), d);
@@ -161,30 +161,4 @@ fn tcp_load_run_scrapes_report_and_validates() {
     assert_eq!(run.report.path("counters.responses_ok").and_then(Json::as_usize),
                Some(sched.items.len()),
                "scraped report must count this run: {}", run.report.dump());
-}
-
-#[test]
-fn deprecated_suite_wrappers_match_run_suite_with() {
-    use lookahead::bench::driver::{run_suite_with, SuiteOptions};
-    use lookahead::engine::lookahead::Lookahead;
-    use lookahead::runtime::{cpu_client, Manifest, ModelRuntime};
-
-    let manifest = Manifest::load(sim_dir()).unwrap();
-    let client = cpu_client().unwrap();
-    let rt = ModelRuntime::load(&client, &manifest, "tiny").unwrap();
-    let prompts: Vec<String> = (0..3)
-        .map(|i| format!("def wrap_{i}(x):\n    return x"))
-        .collect();
-
-    let new = run_suite_with(&rt, &mut Lookahead::with_wng(5, 3, 5), &prompts,
-                             SuiteOptions::new(16))
-        .unwrap();
-    #[allow(deprecated)]
-    let (old, old_texts) = lookahead::bench::driver::run_suite_outputs(
-        &rt, &mut Lookahead::with_wng(5, 3, 5), &prompts, 16, 0.0)
-        .unwrap();
-    assert_eq!(new.texts, old_texts, "wrapper must be a pure delegation");
-    assert_eq!(new.run.tokens, old.tokens);
-    assert_eq!(new.run.steps, old.steps);
-    assert_eq!(new.run.prompts, old.prompts);
 }
