@@ -577,6 +577,20 @@ pub fn bench_json(pr: u64, spec: &LoadSpec, sched: &Schedule, run: &LoadRun) -> 
         ("failed",
          Json::num(report_counter(&run.report, "ctl_switch_failed") as f64)),
     ]);
+    // wire hand-off activity (all zero on single-node runs): donated
+    // transfers split into adopted/bounced, resume attempts, and duplicate
+    // deliveries the adopter suppressed
+    let net = Json::obj(vec![
+        ("transfers", Json::num(report_counter(&run.report, "net_transfers") as f64)),
+        ("adopted", Json::num(report_counter(&run.report, "net_adopted") as f64)),
+        ("bounced", Json::num(report_counter(&run.report, "net_bounced") as f64)),
+        ("resumes", Json::num(report_counter(&run.report, "net_resumes") as f64)),
+        ("dup_dropped",
+         Json::num(report_counter(&run.report, "net_dup_dropped") as f64)),
+        ("bytes",
+         run.report.path("histograms.net_transfer_bytes").cloned()
+             .unwrap_or(Json::Null)),
+    ]);
     let sched_counts = Json::Obj(
         sched
             .counts()
@@ -614,12 +628,36 @@ pub fn bench_json(pr: u64, spec: &LoadSpec, sched: &Schedule, run: &LoadRun) -> 
         ("prefix_cache", prefix),
         ("ngram", ngram),
         ("controller", controller),
+        ("net", net),
     ])
+}
+
+/// Baselines below this are noise, not a reference point: a p99 of
+/// microseconds would turn any real measurement into a "regression" of
+/// thousands of percent (and the old percent math divided by ~0).
+pub const BASELINE_P99_FLOOR_MS: f64 = 1.0;
+
+/// The serve_bench `--baseline` tail-latency gate: Some(reason) when
+/// `new_p99` regressed past both the +20% relative budget AND the absolute
+/// [`BASELINE_P99_FLOOR_MS`] — sub-floor baselines never gate, and a jitter
+/// of less than the floor never fails the build.
+pub fn p99_ttft_regression(new_p99: f64, base_p99: f64) -> Option<String> {
+    if base_p99 < BASELINE_P99_FLOOR_MS {
+        return None;
+    }
+    if new_p99 > base_p99 * 1.20 && new_p99 - base_p99 > BASELINE_P99_FLOOR_MS {
+        return Some(format!(
+            "p99 TTFT regression: {new_p99:.2} ms vs baseline {base_p99:.2} ms \
+             (>{:.2} ms budget, +20%)",
+            base_p99 * 1.20
+        ));
+    }
+    None
 }
 
 /// Required dotted paths every schema-valid BENCH record must carry — the
 /// CI smoke lane fails on the first missing one.
-pub const BENCH_REQUIRED_PATHS: [&str; 16] = [
+pub const BENCH_REQUIRED_PATHS: [&str; 17] = [
     "schema",
     "pr",
     "config.seed",
@@ -636,6 +674,7 @@ pub const BENCH_REQUIRED_PATHS: [&str; 16] = [
     "batch_occupancy.mean",
     "prefix_cache.hit_rate",
     "ngram.mean_hit_rate",
+    "net.transfers",
 ];
 
 /// Validate one BENCH_*.json text blob against the v1 schema.
@@ -775,6 +814,44 @@ mod tests {
         // controller section present, all-zero without ctl_* counters
         assert_eq!(j.path("controller.decisions").unwrap().as_usize(), Some(0));
         assert_eq!(j.path("controller.switches").unwrap().as_usize(), Some(0));
+    }
+
+    #[test]
+    fn p99_gate_ignores_noise_baselines_and_noise_regressions() {
+        // a microsecond baseline is noise: 0.0001 -> 5.0 ms must NOT gate
+        // (the old percent math called this a +4999900% regression)
+        assert_eq!(p99_ttft_regression(5.0, 0.0001), None);
+        assert_eq!(p99_ttft_regression(1000.0, 0.0), None);
+        // real regression past both budgets gates with a readable reason
+        let msg = p99_ttft_regression(13.0, 10.0).expect("+30% must gate");
+        assert!(msg.contains("13.00") && msg.contains("10.00"), "{msg}");
+        // +15% is inside the relative budget
+        assert_eq!(p99_ttft_regression(11.5, 10.0), None);
+        // past +20% relatively but under the absolute floor: still noise
+        assert_eq!(p99_ttft_regression(1.9, 1.5), None);
+    }
+
+    #[test]
+    fn bench_json_net_section_reflects_report_counters() {
+        let sp = LoadSpec::new(9).requests(1);
+        let sched = Schedule::generate(&sp);
+        let outcomes = vec![RequestOutcome::failed(MixClass::Templated)];
+        let report = Json::parse(
+            r#"{"counters": {"net_transfers": 4, "net_adopted": 3,
+                "net_bounced": 1, "net_resumes": 2},
+                "histograms": {"net_transfer_bytes": {"count": 3,
+                "mean": 2048.0, "p50": 2048.0, "p99": 2048.0}}}"#,
+        )
+        .unwrap();
+        let run = LoadRun { outcomes, wall_s: 1.0, report };
+        let j = bench_json(8, &sp, &sched, &run);
+        validate_bench_json(&j.dump()).unwrap();
+        assert_eq!(j.path("net.transfers").unwrap().as_usize(), Some(4));
+        assert_eq!(j.path("net.adopted").unwrap().as_usize(), Some(3));
+        assert_eq!(j.path("net.bounced").unwrap().as_usize(), Some(1));
+        assert_eq!(j.path("net.resumes").unwrap().as_usize(), Some(2));
+        assert_eq!(j.path("net.dup_dropped").unwrap().as_usize(), Some(0));
+        assert_eq!(j.path("net.bytes.count").unwrap().as_usize(), Some(3));
     }
 
     #[test]

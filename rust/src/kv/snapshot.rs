@@ -47,6 +47,41 @@ pub const SNAPSHOT_VERSION: u32 = 2;
 /// Oldest header version [`SessionSnapshot::from_bytes`] still reads.
 pub const SNAPSHOT_MIN_VERSION: u32 = 1;
 
+/// FNV-1a 64 over a byte slice — the checksum for wire-transferred snapshot
+/// chunks and the whole-payload transfer id (duplicate suppression). Chosen
+/// to match the repo's other stable fingerprints (schedule fingerprint in
+/// `bench/load.rs`): dependency-free, deterministic across platforms.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// One checksummed range of a wire-transferred snapshot payload.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WireFrame {
+    /// byte offset into the payload slice handed to [`wire_chunks`]
+    pub off: usize,
+    pub len: usize,
+    /// FNV-1a 64 of the `len` bytes at `off`
+    pub sum: u64,
+}
+
+/// Split a snapshot payload into checksummed frames of at most `chunk`
+/// bytes. An empty payload yields no frames (the transfer's `end` frame
+/// still carries the whole-payload checksum).
+pub fn wire_chunks(payload: &[u8], chunk: usize) -> Vec<WireFrame> {
+    let chunk = chunk.max(1);
+    payload
+        .chunks(chunk)
+        .enumerate()
+        .map(|(i, c)| WireFrame { off: i * chunk, len: c.len(), sum: fnv64(c) })
+        .collect()
+}
+
 /// Engine-specific resumable state. Every engine is snapshotable: the
 /// deterministic inter-step state is the current token plus the engine's
 /// own speculation source — RNG-fed trajectory rows (lookahead/Jacobi),
@@ -606,6 +641,34 @@ mod tests {
             wall_offset: Duration::from_micros(2500),
             pool,
         }
+    }
+
+    #[test]
+    fn fnv64_matches_reference_vectors() {
+        assert_eq!(fnv64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv64(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn wire_chunks_cover_payload_and_checksums_verify() {
+        let payload: Vec<u8> = (0..1000u32).map(|i| (i % 251) as u8).collect();
+        let frames = wire_chunks(&payload, 256);
+        assert_eq!(frames.len(), 4);
+        let mut off = 0;
+        for f in &frames {
+            assert_eq!(f.off, off);
+            assert_eq!(f.sum, fnv64(&payload[f.off..f.off + f.len]));
+            off += f.len;
+        }
+        assert_eq!(off, payload.len(), "frames must tile the payload exactly");
+        // a resumed transfer re-chunks the tail; checksums stay verifiable
+        let resume = wire_chunks(&payload[300..], 256);
+        assert_eq!(resume[0].off, 0);
+        assert_eq!(resume[0].sum, fnv64(&payload[300..556]));
+        // degenerate inputs
+        assert!(wire_chunks(&[], 256).is_empty());
+        assert_eq!(wire_chunks(&payload, 0).len(), payload.len());
     }
 
     #[test]

@@ -24,6 +24,7 @@ pub mod kv;
 pub mod layout;
 pub mod lp;
 pub mod metrics;
+pub mod net;
 pub mod ngram;
 pub mod runtime;
 pub mod server;

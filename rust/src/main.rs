@@ -39,7 +39,8 @@ fn main() -> Result<()> {
 
 fn print_usage(args: &Args) {
     let opts = [
-        Opt { name: "artifacts", default: Some("artifacts"), help: "artifact directory" },
+        Opt { name: "artifacts", default: Some("artifacts"),
+              help: "sim | sim-slow | artifact directory (serve resolves the sims)" },
         Opt { name: "model", default: Some("tiny"), help: "model name (tiny/small)" },
         Opt { name: "method", default: Some("lookahead"),
               help: "lookahead|autoregressive|jacobi|spec_decode|prompt_lookup" },
@@ -79,6 +80,18 @@ fn print_usage(args: &Args) {
               help: "static | adaptive — adaptive re-tunes each greedy \
                      session's engine live from observed accept lengths \
                      (serve; requests can override per-request)" },
+        Opt { name: "peers", default: None,
+              help: "comma-separated peer listener addresses this server \
+                     may donate parked sessions to over the wire (serve)" },
+        Opt { name: "peer-addr", default: None,
+              help: "bind a peer listener here: other servers can hand \
+                     sessions off to this one (serve)" },
+        Opt { name: "heartbeat-ms", default: Some("100"),
+              help: "peer liveness/load probe interval (serve; with --peers)" },
+        Opt { name: "prefill-only", default: Some("false"),
+              help: "prefill tier: commit prompt KV locally, then ship \
+                     every session to a decode peer instead of stepping \
+                     it (serve; needs --peers)" },
         Opt { name: "stream", default: Some("false"),
               help: "stream chunk lines before the final record (client)" },
         Opt { name: "report", default: Some("false"),
@@ -150,6 +163,17 @@ fn cmd_generate(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    // `sim` / `sim-slow` resolve to the generated simulated artifact sets
+    // (mirrors serve_bench), so multi-process topologies run without PJRT.
+    let artifacts = match args.str_or("artifacts", "artifacts").as_str() {
+        "sim" => lookahead::runtime::sim::ensure_sim_artifacts()?
+            .to_string_lossy()
+            .into_owned(),
+        "sim-slow" => lookahead::runtime::sim::ensure_slow_sim_artifacts()?
+            .to_string_lossy()
+            .into_owned(),
+        dir => dir.to_string(),
+    };
     let cfg = ServerConfig::builder()
         .workers(args.usize_or("workers", 1))
         .policy(Policy::parse(&args.str_or("policy", "fifo")))
@@ -159,7 +183,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .batch_decode(args.bool_or("batch-decode", true))
         .rebalance(args.bool_or("rebalance", false))
         .rebalance_interval_ms(args.u64_or("rebalance-interval-ms", 50))
-        .artifacts_dir(args.str_or("artifacts", "artifacts"))
+        .artifacts_dir(artifacts)
         .model(args.str_or("model", "tiny"))
         .wng(args.wng("wng", (5, 3, 5)))
         .time_slice(args.usize_or("time-slice", 4))
@@ -167,6 +191,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .kv_budget(args.usize_or("kv-budget", 0))
         .prefix_cache(args.bool_or("prefix-cache", true))
         .controller(args.str_or("controller", "static"))
+        .peers(args.get("peers").map(|p| {
+            p.split(',').map(str::trim).filter(|s| !s.is_empty())
+                .map(String::from).collect()
+        }).unwrap_or_default())
+        .peer_addr(args.get("peer-addr").map(String::from))
+        .heartbeat_ms(args.u64_or("heartbeat-ms", 100))
+        .prefill_only(args.bool_or("prefill-only", false))
         .build();
     let max_conns = args.get("max-conns").and_then(|v| v.parse().ok());
     serve_tcp(&args.str_or("addr", "127.0.0.1:7878"), cfg, max_conns)

@@ -1,0 +1,942 @@
+//! Network-transparent session hand-off: the wire protocol that promotes the
+//! in-process [`crate::server::scheduler::RebalanceHub`] transfer to a
+//! cross-process TCP stream (DESIGN.md §4c).
+//!
+//! A transfer ships one `LAKV1` snapshot payload from a donor process to an
+//! adopter process as checksummed chunks, with resumable range reads after a
+//! dropped connection and duplicate suppression keyed by the whole-payload
+//! FNV-1a hash. All control frames are single-line JSON; raw chunk bytes
+//! follow their `chunk` frame on the same stream.
+//!
+//! Donor -> adopter handshake on a fresh connection:
+//!
+//! ```text
+//! > {"kind":"offer","xfer":"<16-hex fnv64>","bytes":N,"meta":{...}}
+//! < {"kind":"go","offset":K}        resume from K verified bytes
+//! < {"kind":"dup"}                  payload already adopted -> skip to tunnel
+//! < {"kind":"reject","why":"..."}   adopter refuses (bounce)
+//! > {"kind":"chunk","off":o,"len":l,"sum":"<16-hex>"} + l raw bytes   (per chunk)
+//! > {"kind":"end","sum":"<16-hex whole-payload fnv64>"}
+//! < {"kind":"adopted"}              commit point: checksum verified AND injected
+//! ```
+//!
+//! After `adopted` the same connection becomes the reply tunnel: the adopter
+//! writes the session's `StreamChunk` lines followed by the final `Response`
+//! line (`done: true`). A donor whose tunnel drops re-attaches with
+//! `{"kind":"attach","xfer":"...","have":H}` and the adopter replays buffered
+//! lines from index `H` (`{"kind":"ok"}`) or reports the session unknown
+//! (`{"kind":"gone"}`).
+//!
+//! Liveness + load exchange is a one-shot connection:
+//! `{"kind":"ping"}` -> `{"kind":"pong","load":{"live":n,"parked":n,"prefill_only":b}}`.
+//!
+//! The commit point is the `adopted` ack, sent only after the whole-payload
+//! checksum verifies and local injection succeeds. Before it, any failure is
+//! retried with a resume offset and finally bounced (the donor re-parks the
+//! session); after it, the transfer never bounces — tunnel failures are
+//! resumed via `attach`, and exhausted attach retries surface as an error
+//! `Response` so the client never hangs.
+
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Receiver;
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use crate::kv::snapshot::{fnv64, wire_chunks};
+use crate::metrics::Registry;
+use crate::server::request::Reply;
+use crate::util::json::Json;
+
+/// Default chunk size for snapshot payload streaming.
+pub const NET_CHUNK: usize = 4096;
+
+/// Socket read timeout: every blocking read wakes at this cadence so threads
+/// can observe their stop flag.
+const READ_TICK: Duration = Duration::from_millis(250);
+
+/// How long one handshake/frame wait may block before the peer is declared
+/// dead (many `READ_TICK`s).
+const FRAME_DEADLINE: Duration = Duration::from_secs(5);
+
+fn hex(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+fn parse_hex(s: &str) -> Option<u64> {
+    u64::from_str_radix(s, 16).ok()
+}
+
+fn timeoutish(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
+fn other(msg: impl Into<String>) -> io::Error {
+    io::Error::other(msg.into())
+}
+
+/// Connect with a bounded timeout (first resolved address wins).
+pub fn connect(addr: &str, timeout: Duration) -> io::Result<TcpStream> {
+    let sa = addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| other(format!("unresolvable peer address {addr}")))?;
+    TcpStream::connect_timeout(&sa, timeout)
+}
+
+fn write_json(stream: &mut TcpStream, j: &Json) -> io::Result<()> {
+    stream.write_all(j.dump().as_bytes())?;
+    stream.write_all(b"\n")
+}
+
+/// Incremental line reader over a [`TcpStream`] with a short read timeout.
+///
+/// `std`'s `BufReader::read_line` loses partially-read bytes when the socket
+/// times out mid-line; this reader keeps them buffered so a timeout is a
+/// clean `Ok(None)` tick the caller can use to poll a stop flag.
+pub struct NetLines {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl NetLines {
+    pub fn new(stream: TcpStream) -> io::Result<Self> {
+        stream.set_read_timeout(Some(READ_TICK))?;
+        Ok(NetLines { stream, buf: Vec::new() })
+    }
+
+    pub fn get_mut(&mut self) -> &mut TcpStream {
+        &mut self.stream
+    }
+
+    /// Next full line (trailing `\n` stripped). `Ok(None)` is a timeout tick,
+    /// not end-of-stream; a closed peer is `UnexpectedEof`.
+    pub fn next(&mut self) -> io::Result<Option<String>> {
+        loop {
+            if let Some(pos) = self.buf.iter().position(|&b| b == b'\n') {
+                let line: Vec<u8> = self.buf.drain(..=pos).collect();
+                let s = String::from_utf8(line[..pos].to_vec())
+                    .map_err(|_| other("non-utf8 control line"))?;
+                return Ok(Some(s));
+            }
+            let mut tmp = [0u8; 4096];
+            match self.stream.read(&mut tmp) {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "peer closed connection",
+                    ))
+                }
+                Ok(n) => self.buf.extend_from_slice(&tmp[..n]),
+                Err(e) if timeoutish(&e) => return Ok(None),
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Block up to `total` for one full line.
+    pub fn next_deadline(&mut self, total: Duration) -> io::Result<String> {
+        let t0 = Instant::now();
+        loop {
+            if let Some(l) = self.next()? {
+                return Ok(l);
+            }
+            if t0.elapsed() >= total {
+                return Err(io::Error::new(
+                    io::ErrorKind::TimedOut,
+                    "deadline waiting for control line",
+                ));
+            }
+        }
+    }
+
+    /// Exactly `n` raw payload bytes (a chunk body), never over-reading into
+    /// the next control frame.
+    pub fn read_exact_bytes(&mut self, n: usize, total: Duration) -> io::Result<Vec<u8>> {
+        let t0 = Instant::now();
+        let mut out = Vec::with_capacity(n);
+        let take = n.min(self.buf.len());
+        out.extend(self.buf.drain(..take));
+        while out.len() < n {
+            let want = (n - out.len()).min(4096);
+            let mut tmp = [0u8; 4096];
+            match self.stream.read(&mut tmp[..want]) {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::UnexpectedEof,
+                        "peer closed mid-chunk",
+                    ))
+                }
+                Ok(k) => out.extend_from_slice(&tmp[..k]),
+                Err(e) if timeoutish(&e) => {
+                    if t0.elapsed() >= total {
+                        return Err(io::Error::new(
+                            io::ErrorKind::TimedOut,
+                            "deadline waiting for chunk bytes",
+                        ));
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// What a listener process does with a fully-verified snapshot payload.
+///
+/// The server side implements this by resuming the session on a local worker
+/// (`NetGateway`); wire-level tests implement it with mocks. On success the
+/// returned receiver yields the resumed session's replies — the listener
+/// pumps them into the donor-facing tunnel.
+pub trait Adopt: Send + Sync + 'static {
+    fn adopt(&self, meta: &Json, payload: Vec<u8>) -> Result<Receiver<Reply>, String>;
+    /// Load snapshot advertised in heartbeat `pong`s:
+    /// `{"live":n,"parked":n,"prefill_only":b}`.
+    fn load_json(&self) -> Json;
+}
+
+/// Donor-side transfer knobs.
+#[derive(Clone)]
+pub struct TransferOpts {
+    /// Connection attempts per transfer before bouncing.
+    pub attempts: usize,
+    /// Backoff between attempts.
+    pub backoff: Duration,
+    /// Payload chunk size.
+    pub chunk: usize,
+    /// Fault injection: planned cut offsets (absolute bytes into the
+    /// payload), consumed one per attempt. A cut inside the payload drops
+    /// the socket mid-chunk at that offset; a cut `>= payload.len()` sends
+    /// everything and drops the socket before reading the `adopted` ack,
+    /// which deterministically forces the duplicate-delivery path on retry.
+    pub cuts: Arc<Mutex<Vec<usize>>>,
+}
+
+impl Default for TransferOpts {
+    fn default() -> Self {
+        TransferOpts {
+            attempts: 3,
+            backoff: Duration::from_millis(50),
+            chunk: NET_CHUNK,
+            cuts: Arc::new(Mutex::new(Vec::new())),
+        }
+    }
+}
+
+/// Terminal state of one donor-side transfer.
+pub enum SendOutcome {
+    /// Adopter committed; the stream is now the reply tunnel.
+    Adopted(NetLines),
+    /// Rejected or retries exhausted before the commit point — the caller
+    /// re-parks the session on the donor.
+    Bounced(String),
+}
+
+pub struct SendReport {
+    pub outcome: SendOutcome,
+    /// Retry attempts that reached a fresh handshake (resumed transfers).
+    pub resumes: u64,
+}
+
+enum SendErr {
+    /// Adopter answered `reject` — terminal, no retry.
+    Reject(String),
+    /// Transport-level failure — retryable with a resume offset.
+    Io(String),
+}
+
+/// Stream one snapshot payload to `addr`, retrying with resume offsets until
+/// adopted, rejected, or attempts are exhausted. Never panics the caller's
+/// session away: every non-`Adopted` path is a bounce.
+pub fn send_session(
+    addr: &str,
+    meta: &Json,
+    payload: &[u8],
+    opts: &TransferOpts,
+) -> SendReport {
+    let xfer = fnv64(payload);
+    let mut resumes = 0u64;
+    let mut last = String::from("no attempts configured");
+    for attempt in 0..opts.attempts.max(1) {
+        if attempt > 0 {
+            thread::sleep(opts.backoff);
+        }
+        let cut = {
+            let mut cuts = opts.cuts.lock().unwrap();
+            if cuts.is_empty() { None } else { Some(cuts.remove(0)) }
+        };
+        let sent = send_once(
+            addr, meta, payload, xfer, opts.chunk, cut, attempt, &mut resumes,
+        );
+        match sent {
+            Ok(lines) => {
+                return SendReport { outcome: SendOutcome::Adopted(lines), resumes }
+            }
+            Err(SendErr::Reject(why)) => {
+                return SendReport { outcome: SendOutcome::Bounced(why), resumes }
+            }
+            Err(SendErr::Io(e)) => last = e,
+        }
+    }
+    SendReport {
+        outcome: SendOutcome::Bounced(format!("transfer attempts exhausted: {last}")),
+        resumes,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn send_once(
+    addr: &str,
+    meta: &Json,
+    payload: &[u8],
+    xfer: u64,
+    chunk: usize,
+    cut: Option<usize>,
+    attempt: usize,
+    resumes: &mut u64,
+) -> Result<NetLines, SendErr> {
+    let io_err = |e: io::Error| SendErr::Io(e.to_string());
+    let stream = connect(addr, READ_TICK).map_err(io_err)?;
+    let mut lines = NetLines::new(stream).map_err(io_err)?;
+    let offer = Json::obj(vec![
+        ("kind", Json::str("offer")),
+        ("xfer", Json::str(hex(xfer))),
+        ("bytes", Json::num(payload.len() as f64)),
+        ("meta", meta.clone()),
+    ]);
+    write_json(lines.get_mut(), &offer).map_err(io_err)?;
+    let resp = lines.next_deadline(FRAME_DEADLINE).map_err(io_err)?;
+    let j = Json::parse(&resp).map_err(|e| SendErr::Io(format!("bad go frame: {e}")))?;
+    let offset = match j.get("kind").and_then(Json::as_str) {
+        Some("go") => {
+            if attempt > 0 {
+                *resumes += 1;
+            }
+            j.get("offset").and_then(Json::as_usize).unwrap_or(0)
+        }
+        Some("dup") => {
+            // Payload already adopted on a previous attempt whose ack was
+            // lost. The tunnel never starts before the ack, so the donor has
+            // seen zero reply lines — the adopter replays from index 0.
+            if attempt > 0 {
+                *resumes += 1;
+            }
+            return Ok(lines);
+        }
+        Some("reject") => {
+            let why = j
+                .get("why")
+                .and_then(Json::as_str)
+                .unwrap_or("peer rejected offer")
+                .to_string();
+            return Err(SendErr::Reject(why));
+        }
+        _ => return Err(SendErr::Io(format!("unexpected handshake frame: {resp}"))),
+    };
+    if offset > payload.len() {
+        return Err(SendErr::Io(format!(
+            "peer requested resume offset {offset} past payload end {}",
+            payload.len()
+        )));
+    }
+    for frame in wire_chunks(&payload[offset..], chunk) {
+        let off = frame.off + offset;
+        let head = Json::obj(vec![
+            ("kind", Json::str("chunk")),
+            ("off", Json::num(off as f64)),
+            ("len", Json::num(frame.len as f64)),
+            ("sum", Json::str(hex(frame.sum))),
+        ]);
+        write_json(lines.get_mut(), &head).map_err(io_err)?;
+        if let Some(c) = cut {
+            if c < off + frame.len {
+                // Injected fault: ship only the bytes before the cut point,
+                // then drop the socket mid-chunk.
+                let partial = c.saturating_sub(off).min(frame.len);
+                let _ = lines.get_mut().write_all(&payload[off..off + partial]);
+                return Err(SendErr::Io(format!("injected cut at offset {c}")));
+            }
+        }
+        lines
+            .get_mut()
+            .write_all(&payload[off..off + frame.len])
+            .map_err(io_err)?;
+    }
+    let end = Json::obj(vec![
+        ("kind", Json::str("end")),
+        ("sum", Json::str(hex(xfer))),
+    ]);
+    write_json(lines.get_mut(), &end).map_err(io_err)?;
+    if cut.is_some_and(|c| c >= payload.len()) {
+        // Injected fault: full payload delivered but the ack never read —
+        // the retry must be detected as a duplicate by the adopter.
+        return Err(SendErr::Io("injected cut before adopted ack".into()));
+    }
+    let resp = lines.next_deadline(FRAME_DEADLINE).map_err(io_err)?;
+    let j =
+        Json::parse(&resp).map_err(|e| SendErr::Io(format!("bad ack frame: {e}")))?;
+    match j.get("kind").and_then(Json::as_str) {
+        Some("adopted") => Ok(lines),
+        Some("reject") => Err(SendErr::Reject(
+            j.get("why")
+                .and_then(Json::as_str)
+                .unwrap_or("peer rejected payload")
+                .to_string(),
+        )),
+        _ => Err(SendErr::Io(format!("unexpected ack frame: {resp}"))),
+    }
+}
+
+/// Growable line buffer shared between the reply pump and tunnel writers.
+///
+/// The pump appends the adopted session's reply lines (stored with their
+/// trailing newline); tunnel writers stream them to the donor from any start
+/// index, so a re-`attach` after a dropped tunnel replays without loss.
+pub struct RelayBuf {
+    st: Mutex<(Vec<String>, bool)>,
+    cv: Condvar,
+}
+
+pub enum RelayNext {
+    Line(String),
+    Done,
+    Timeout,
+}
+
+impl Default for RelayBuf {
+    fn default() -> Self {
+        RelayBuf { st: Mutex::new((Vec::new(), false)), cv: Condvar::new() }
+    }
+}
+
+impl RelayBuf {
+    pub fn push(&self, line: String) {
+        self.st.lock().unwrap().0.push(line);
+        self.cv.notify_all();
+    }
+
+    pub fn finish(&self) {
+        self.st.lock().unwrap().1 = true;
+        self.cv.notify_all();
+    }
+
+    /// Line at `idx`, `Done` once finished AND drained, or `Timeout` (a tick
+    /// for the caller's stop flag).
+    pub fn next(&self, idx: usize, timeout: Duration) -> RelayNext {
+        let mut st = self.st.lock().unwrap();
+        loop {
+            if idx < st.0.len() {
+                return RelayNext::Line(st.0[idx].clone());
+            }
+            if st.1 {
+                return RelayNext::Done;
+            }
+            let (guard, waited) = self.cv.wait_timeout(st, timeout).unwrap();
+            st = guard;
+            if waited.timed_out() && idx >= st.0.len() && !st.1 {
+                return RelayNext::Timeout;
+            }
+        }
+    }
+}
+
+/// Adopter-side per-payload transfer state, keyed by the whole-payload hash.
+/// Entries persist for the process lifetime: `Adopted` doubles as the
+/// duplicate-suppression record and the attach-replay source.
+enum XferState {
+    /// Verified prefix buffered across dropped connections; its length is
+    /// the resume offset offered to the donor.
+    Partial(Vec<u8>),
+    /// A connection is mid-receive; concurrent duplicate offers bounce.
+    InFlight,
+    Adopted(Arc<RelayBuf>),
+}
+
+type TransferTable = Arc<Mutex<HashMap<u64, XferState>>>;
+
+/// Accept loop for a peer listener: binds immediately (so callers surface
+/// bind errors synchronously), then serves offer/attach/ping connections
+/// until `stop`, joining every connection thread on the way out.
+pub fn spawn_listener(
+    addr: &str,
+    gateway: Arc<dyn Adopt>,
+    metrics: Arc<Mutex<Registry>>,
+    stop: Arc<AtomicBool>,
+) -> io::Result<JoinHandle<()>> {
+    let listener = TcpListener::bind(addr)?;
+    listener.set_nonblocking(true)?;
+    Ok(thread::spawn(move || {
+        let table: TransferTable = Arc::new(Mutex::new(HashMap::new()));
+        let mut conns: Vec<JoinHandle<()>> = Vec::new();
+        while !stop.load(Ordering::Relaxed) {
+            match listener.accept() {
+                Ok((stream, _)) => {
+                    let (g, m, t, s) =
+                        (gateway.clone(), metrics.clone(), table.clone(), stop.clone());
+                    conns.push(thread::spawn(move || {
+                        let _ = handle_peer_conn(stream, g, m, t, s);
+                    }));
+                }
+                Err(_) => thread::sleep(Duration::from_millis(25)),
+            }
+        }
+        for c in conns {
+            let _ = c.join();
+        }
+    }))
+}
+
+fn handle_peer_conn(
+    stream: TcpStream,
+    gateway: Arc<dyn Adopt>,
+    metrics: Arc<Mutex<Registry>>,
+    table: TransferTable,
+    stop: Arc<AtomicBool>,
+) -> io::Result<()> {
+    let mut lines = NetLines::new(stream)?;
+    let first = lines.next_deadline(FRAME_DEADLINE)?;
+    let j = Json::parse(&first).map_err(|e| other(format!("bad frame: {e}")))?;
+    match j.get("kind").and_then(Json::as_str) {
+        Some("ping") => {
+            let pong = Json::obj(vec![
+                ("kind", Json::str("pong")),
+                ("load", gateway.load_json()),
+            ]);
+            write_json(lines.get_mut(), &pong)
+        }
+        Some("offer") => handle_offer(&j, lines, gateway, metrics, table, stop),
+        Some("attach") => handle_attach(&j, lines, table, stop),
+        _ => {
+            let reject = Json::obj(vec![
+                ("kind", Json::str("reject")),
+                ("why", Json::str(format!("unknown frame: {first}"))),
+            ]);
+            write_json(lines.get_mut(), &reject)
+        }
+    }
+}
+
+fn handle_offer(
+    offer: &Json,
+    mut lines: NetLines,
+    gateway: Arc<dyn Adopt>,
+    metrics: Arc<Mutex<Registry>>,
+    table: TransferTable,
+    stop: Arc<AtomicBool>,
+) -> io::Result<()> {
+    let reject = |lines: &mut NetLines, why: &str| {
+        let r = Json::obj(vec![
+            ("kind", Json::str("reject")),
+            ("why", Json::str(why)),
+        ]);
+        write_json(lines.get_mut(), &r)
+    };
+    let xfer = offer
+        .get("xfer")
+        .and_then(Json::as_str)
+        .and_then(parse_hex)
+        .ok_or_else(|| other("offer without xfer hash"))?;
+    let bytes = offer
+        .get("bytes")
+        .and_then(Json::as_usize)
+        .ok_or_else(|| other("offer without byte count"))?;
+    let meta = offer.get("meta").cloned().unwrap_or(Json::Null);
+    // Claim the transfer slot: resume a partial, detect a duplicate, or
+    // bounce a concurrent offer for the same payload.
+    let mut buf = {
+        let mut tbl = table.lock().unwrap();
+        match tbl.remove(&xfer) {
+            Some(XferState::Adopted(relay)) => {
+                tbl.insert(xfer, XferState::Adopted(relay.clone()));
+                drop(tbl);
+                metrics.lock().unwrap().inc("net_dup_dropped", 1);
+                let dup = Json::obj(vec![("kind", Json::str("dup"))]);
+                write_json(lines.get_mut(), &dup)?;
+                return tunnel(lines, &relay, 0, &stop);
+            }
+            Some(XferState::InFlight) => {
+                tbl.insert(xfer, XferState::InFlight);
+                drop(tbl);
+                return reject(&mut lines, "transfer already in flight");
+            }
+            Some(XferState::Partial(buf)) => {
+                tbl.insert(xfer, XferState::InFlight);
+                buf
+            }
+            None => {
+                tbl.insert(xfer, XferState::InFlight);
+                Vec::new()
+            }
+        }
+    };
+    // On every early exit below the verified prefix goes back in the table
+    // so the donor's next attempt resumes instead of restarting.
+    let park_partial = |table: &TransferTable, buf: Vec<u8>| {
+        table.lock().unwrap().insert(xfer, XferState::Partial(buf));
+    };
+    let go = Json::obj(vec![
+        ("kind", Json::str("go")),
+        ("offset", Json::num(buf.len() as f64)),
+    ]);
+    if let Err(e) = write_json(lines.get_mut(), &go) {
+        park_partial(&table, buf);
+        return Err(e);
+    }
+    // Receive chunks until the end frame verifies the whole payload.
+    loop {
+        let line = match lines.next_deadline(FRAME_DEADLINE) {
+            Ok(l) => l,
+            Err(e) => {
+                park_partial(&table, buf);
+                return Err(e);
+            }
+        };
+        let frame = match Json::parse(&line) {
+            Ok(f) => f,
+            Err(e) => {
+                park_partial(&table, buf);
+                return Err(other(format!("bad chunk frame: {e}")));
+            }
+        };
+        match frame.get("kind").and_then(Json::as_str) {
+            Some("chunk") => {
+                let off =
+                    frame.get("off").and_then(Json::as_usize).unwrap_or(usize::MAX);
+                let len = frame.get("len").and_then(Json::as_usize).unwrap_or(0);
+                let sum = frame.get("sum").and_then(Json::as_str).and_then(parse_hex);
+                if off != buf.len() || buf.len() + len > bytes {
+                    park_partial(&table, buf);
+                    return reject(&mut lines, "chunk offset out of sequence");
+                }
+                let body = match lines.read_exact_bytes(len, FRAME_DEADLINE) {
+                    Ok(b) => b,
+                    Err(e) => {
+                        // Mid-chunk cut: the unverified chunk is discarded;
+                        // only fully-checksummed bytes count toward resume.
+                        park_partial(&table, buf);
+                        return Err(e);
+                    }
+                };
+                if sum != Some(fnv64(&body)) {
+                    park_partial(&table, buf);
+                    return reject(&mut lines, "chunk checksum mismatch");
+                }
+                buf.extend_from_slice(&body);
+            }
+            Some("end") => {
+                let sum = frame.get("sum").and_then(Json::as_str).and_then(parse_hex);
+                if buf.len() != bytes || sum != Some(fnv64(&buf)) || sum != Some(xfer) {
+                    park_partial(&table, buf);
+                    return reject(&mut lines, "payload checksum mismatch");
+                }
+                break;
+            }
+            _ => {
+                park_partial(&table, buf);
+                return reject(&mut lines, "unexpected frame during transfer");
+            }
+        }
+    }
+    let donor_id = meta.get("id").and_then(Json::as_i64).unwrap_or(0) as u64;
+    let rx = match gateway.adopt(&meta, buf) {
+        Ok(rx) => rx,
+        Err(why) => {
+            // Injection failed on a verified payload: retrying the same bytes
+            // cannot help, so drop the slot and bounce the donor.
+            table.lock().unwrap().remove(&xfer);
+            return reject(&mut lines, &why);
+        }
+    };
+    let relay = Arc::new(RelayBuf::default());
+    table.lock().unwrap().insert(xfer, XferState::Adopted(relay.clone()));
+    let pump = spawn_pump(rx, relay.clone(), donor_id);
+    let adopted = Json::obj(vec![("kind", Json::str("adopted"))]);
+    let ack = write_json(lines.get_mut(), &adopted);
+    let tun = ack.and_then(|()| tunnel(lines, &relay, 0, &stop));
+    let _ = pump.join();
+    tun
+}
+
+fn handle_attach(
+    attach: &Json,
+    mut lines: NetLines,
+    table: TransferTable,
+    stop: Arc<AtomicBool>,
+) -> io::Result<()> {
+    let xfer = attach.get("xfer").and_then(Json::as_str).and_then(parse_hex);
+    let have = attach.get("have").and_then(Json::as_usize).unwrap_or(0);
+    let relay = xfer.and_then(|x| {
+        match table.lock().unwrap().get(&x) {
+            Some(XferState::Adopted(relay)) => Some(relay.clone()),
+            _ => None,
+        }
+    });
+    match relay {
+        Some(relay) => {
+            let ok = Json::obj(vec![("kind", Json::str("ok"))]);
+            write_json(lines.get_mut(), &ok)?;
+            tunnel(lines, &relay, have, &stop)
+        }
+        None => {
+            let gone = Json::obj(vec![("kind", Json::str("gone"))]);
+            write_json(lines.get_mut(), &gone)
+        }
+    }
+}
+
+/// Feed an adopted session's replies into its relay buffer, rewriting ids
+/// back to the donor-side request id the client knows.
+fn spawn_pump(
+    rx: Receiver<Reply>,
+    relay: Arc<RelayBuf>,
+    donor_id: u64,
+) -> JoinHandle<()> {
+    thread::spawn(move || {
+        while let Ok(reply) = rx.recv() {
+            match reply {
+                Reply::Chunk(mut c) => {
+                    c.id = donor_id;
+                    relay.push(format!("{}\n", c.to_json_line()));
+                }
+                Reply::Done(mut r) => {
+                    r.id = donor_id;
+                    relay.push(format!("{}\n", r.to_json_line()));
+                    relay.finish();
+                    return;
+                }
+            }
+        }
+        // Sender dropped without a final record (adopter shutting down);
+        // close the relay so tunnels drain and exit.
+        relay.finish();
+    })
+}
+
+/// Stream relay lines to the donor from `idx` until done, the socket drops
+/// (the donor will re-attach), or the process stops.
+fn tunnel(
+    mut lines: NetLines,
+    relay: &RelayBuf,
+    mut idx: usize,
+    stop: &AtomicBool,
+) -> io::Result<()> {
+    loop {
+        match relay.next(idx, READ_TICK) {
+            RelayNext::Line(l) => {
+                lines.get_mut().write_all(l.as_bytes())?;
+                idx += 1;
+            }
+            RelayNext::Done => return Ok(()),
+            RelayNext::Timeout => {
+                if stop.load(Ordering::Relaxed) {
+                    return Ok(());
+                }
+            }
+        }
+    }
+}
+
+/// One peer as seen from this process: address plus the last heartbeat's
+/// liveness and load snapshot.
+#[derive(Debug, Clone)]
+pub struct PeerInfo {
+    pub addr: String,
+    pub alive: bool,
+    pub prefill_only: bool,
+    pub live: usize,
+    pub parked: usize,
+}
+
+/// Heartbeat-maintained peer table; readers (the rebalance policy thread,
+/// prefill-only workers) see a consistent snapshot.
+#[derive(Default)]
+pub struct Peers {
+    st: Mutex<Vec<PeerInfo>>,
+}
+
+impl Peers {
+    pub fn new(addrs: &[String]) -> Self {
+        Peers {
+            st: Mutex::new(
+                addrs
+                    .iter()
+                    .map(|a| PeerInfo {
+                        addr: a.clone(),
+                        alive: false,
+                        prefill_only: false,
+                        live: 0,
+                        parked: 0,
+                    })
+                    .collect(),
+            ),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.st.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn snapshot(&self) -> Vec<PeerInfo> {
+        self.st.lock().unwrap().clone()
+    }
+
+    pub fn addr(&self, i: usize) -> Option<String> {
+        self.st.lock().unwrap().get(i).map(|p| p.addr.clone())
+    }
+
+    pub fn update(
+        &self,
+        i: usize,
+        alive: bool,
+        prefill_only: bool,
+        live: usize,
+        parked: usize,
+    ) {
+        if let Some(p) = self.st.lock().unwrap().get_mut(i) {
+            p.alive = alive;
+            p.prefill_only = prefill_only;
+            p.live = live;
+            p.parked = parked;
+        }
+    }
+}
+
+/// Donor-side reply-tunnel re-attachment after a dropped stream: the
+/// adopter replays its buffered reply lines from index `have`. Errors when
+/// the peer is unreachable or no longer knows the transfer (`gone`).
+pub fn attach(addr: &str, xfer: u64, have: usize) -> io::Result<NetLines> {
+    let stream = connect(addr, READ_TICK)?;
+    let mut lines = NetLines::new(stream)?;
+    let frame = Json::obj(vec![
+        ("kind", Json::str("attach")),
+        ("xfer", Json::str(hex(xfer))),
+        ("have", Json::num(have as f64)),
+    ]);
+    write_json(lines.get_mut(), &frame)?;
+    let resp = lines.next_deadline(FRAME_DEADLINE)?;
+    let j = Json::parse(&resp).map_err(|e| other(format!("bad attach reply: {e}")))?;
+    match j.get("kind").and_then(Json::as_str) {
+        Some("ok") => Ok(lines),
+        Some("gone") => Err(other("adopter no longer knows the transfer")),
+        _ => Err(other(format!("unexpected attach reply: {resp}"))),
+    }
+}
+
+/// One-shot liveness + load probe: `ping` -> parsed `pong`.
+pub fn ping(addr: &str) -> io::Result<Json> {
+    let stream = connect(addr, READ_TICK)?;
+    let mut lines = NetLines::new(stream)?;
+    write_json(lines.get_mut(), &Json::obj(vec![("kind", Json::str("ping"))]))?;
+    let resp = lines.next_deadline(Duration::from_millis(1500))?;
+    let j = Json::parse(&resp).map_err(|e| other(format!("bad pong: {e}")))?;
+    if j.get("kind").and_then(Json::as_str) != Some("pong") {
+        return Err(other(format!("unexpected ping reply: {resp}")));
+    }
+    Ok(j)
+}
+
+/// Poll every peer at `interval`, refreshing the table and the
+/// `net_heartbeats` / `net_peers_alive` metrics, until `stop`.
+pub fn spawn_heartbeat(
+    peers: Arc<Peers>,
+    metrics: Arc<Mutex<Registry>>,
+    interval: Duration,
+    stop: Arc<AtomicBool>,
+) -> JoinHandle<()> {
+    thread::spawn(move || {
+        while !stop.load(Ordering::Relaxed) {
+            let n = peers.len();
+            let mut alive = 0u64;
+            for i in 0..n {
+                let addr = match peers.addr(i) {
+                    Some(a) => a,
+                    None => continue,
+                };
+                match ping(&addr) {
+                    Ok(pong) => {
+                        let load = |k: &str| {
+                            pong.path(&format!("load.{k}"))
+                                .and_then(Json::as_usize)
+                                .unwrap_or(0)
+                        };
+                        let pf = pong
+                            .path("load.prefill_only")
+                            .and_then(Json::as_bool)
+                            .unwrap_or(false);
+                        peers.update(i, true, pf, load("live"), load("parked"));
+                        alive += 1;
+                    }
+                    Err(_) => peers.update(i, false, false, 0, 0),
+                }
+                metrics.lock().unwrap().inc("net_heartbeats", 1);
+            }
+            {
+                let mut m = metrics.lock().unwrap();
+                m.set("net_peers_alive", alive);
+            }
+            let t0 = Instant::now();
+            while t0.elapsed() < interval && !stop.load(Ordering::Relaxed) {
+                thread::sleep(Duration::from_millis(10));
+            }
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relay_buf_replays_from_any_index_and_drains_before_done() {
+        let relay = RelayBuf::default();
+        relay.push("a\n".into());
+        relay.push("b\n".into());
+        relay.finish();
+        // from index 0: both lines, then Done
+        assert!(matches!(relay.next(0, Duration::from_millis(5)),
+            RelayNext::Line(l) if l == "a\n"));
+        assert!(matches!(relay.next(1, Duration::from_millis(5)),
+            RelayNext::Line(l) if l == "b\n"));
+        assert!(matches!(relay.next(2, Duration::from_millis(5)), RelayNext::Done));
+        // attach-style replay from index 1 skips what the donor already has
+        assert!(matches!(relay.next(1, Duration::from_millis(5)),
+            RelayNext::Line(l) if l == "b\n"));
+    }
+
+    #[test]
+    fn relay_buf_times_out_while_open() {
+        let relay = RelayBuf::default();
+        assert!(matches!(
+            relay.next(0, Duration::from_millis(5)),
+            RelayNext::Timeout
+        ));
+    }
+
+    #[test]
+    fn peer_table_updates_are_visible_in_snapshots() {
+        let peers = Peers::new(&["127.0.0.1:1".into(), "127.0.0.1:2".into()]);
+        assert_eq!(peers.len(), 2);
+        assert!(!peers.snapshot()[0].alive);
+        peers.update(0, true, true, 3, 1);
+        let snap = peers.snapshot();
+        assert!(snap[0].alive && snap[0].prefill_only);
+        assert_eq!((snap[0].live, snap[0].parked), (3, 1));
+        assert_eq!(peers.addr(1).as_deref(), Some("127.0.0.1:2"));
+        assert!(peers.addr(2).is_none());
+    }
+
+    #[test]
+    fn hex_round_trips() {
+        for v in [0u64, 1, 0xdead_beef, u64::MAX] {
+            assert_eq!(parse_hex(&hex(v)), Some(v));
+        }
+    }
+}

@@ -38,6 +38,18 @@ pub struct ServerConfig {
     pub rebalance: bool,
     /// Rebalance scan interval in ms (ignored when `rebalance` is false).
     pub rebalance_interval_ms: u64,
+    /// Remote peer listener addresses (`host:port`): with `rebalance`, the
+    /// policy thread may ship parked sessions to these processes over the
+    /// wire protocol (DESIGN.md §4c); prefill-only workers ship every
+    /// committed session to the first alive decode peer. Empty = no
+    /// networking.
+    pub peers: Vec<String>,
+    /// Address this process's own peer listener binds (`host:port`). None
+    /// disables inbound transfers/heartbeats — required when `peers` is
+    /// set on the OTHER side pointing here.
+    pub peer_addr: Option<String>,
+    /// Peer heartbeat/load-poll interval in ms (ignored without `peers`).
+    pub heartbeat_ms: u64,
     pub worker: WorkerConfig,
 }
 
@@ -52,6 +64,9 @@ impl Default for ServerConfig {
             batch_decode: true,
             rebalance: false,
             rebalance_interval_ms: 50,
+            peers: Vec::new(),
+            peer_addr: None,
+            heartbeat_ms: 100,
             worker: WorkerConfig::default(),
         }
     }
@@ -96,6 +111,12 @@ pub struct WorkerConfig {
     /// (switches ride suspend/resume, committed output stays byte-exact).
     /// Requests can override either way via `Request::controller`.
     pub controller: String,
+    /// Disaggregated serving, prefill half: this worker commits prompt KV
+    /// (prefill + prefix-trie insert) but ships sessions to a remote decode
+    /// peer instead of stepping them. Requires `ServerConfig::peers`; with
+    /// no alive decode peer the worker decodes locally (degraded but
+    /// correct).
+    pub prefill_only: bool,
 }
 
 impl Default for WorkerConfig {
@@ -111,6 +132,7 @@ impl Default for WorkerConfig {
             kv_budget: 0,
             prefix_cache: true,
             controller: "static".into(),
+            prefill_only: false,
         }
     }
 }
@@ -176,6 +198,21 @@ impl ServerConfigBuilder {
         self
     }
 
+    pub fn peers(mut self, peers: Vec<String>) -> Self {
+        self.cfg.peers = peers;
+        self
+    }
+
+    pub fn peer_addr(mut self, addr: Option<String>) -> Self {
+        self.cfg.peer_addr = addr;
+        self
+    }
+
+    pub fn heartbeat_ms(mut self, ms: u64) -> Self {
+        self.cfg.heartbeat_ms = ms;
+        self
+    }
+
     /// Replace the embedded [`WorkerConfig`] wholesale (also resets any
     /// worker-level knob set earlier on this builder).
     pub fn worker(mut self, w: WorkerConfig) -> Self {
@@ -227,6 +264,11 @@ impl ServerConfigBuilder {
 
     pub fn controller(mut self, mode: impl Into<String>) -> Self {
         self.cfg.worker.controller = mode.into();
+        self
+    }
+
+    pub fn prefill_only(mut self, on: bool) -> Self {
+        self.cfg.worker.prefill_only = on;
         self
     }
 
@@ -290,6 +332,11 @@ impl WorkerConfigBuilder {
 
     pub fn controller(mut self, mode: impl Into<String>) -> Self {
         self.cfg.controller = mode.into();
+        self
+    }
+
+    pub fn prefill_only(mut self, on: bool) -> Self {
+        self.cfg.prefill_only = on;
         self
     }
 

@@ -10,8 +10,8 @@ pub mod worker;
 
 pub use config::{ServerConfig, ServerConfigBuilder, WorkerConfig, WorkerConfigBuilder};
 pub use request::{Reply, Request, Response, StreamChunk};
-pub use scheduler::{CancelSet, MigratedSession, Policy, PopOutcome, RebalanceHub,
-                    Scheduler, WorkerLoad};
+pub use scheduler::{CancelSet, Directive, MigratedSession, Policy, PopOutcome,
+                    RebalanceHub, RemoteDonation, Scheduler, WorkerLoad};
 pub use server::{client_request, client_request_stream, serve_tcp, RebalancePolicy,
                  ResponseStream, ServerHandle};
 pub use worker::Worker;

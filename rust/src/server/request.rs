@@ -288,6 +288,27 @@ impl StreamChunk {
         ])
         .dump()
     }
+
+    /// Inverse of [`StreamChunk::to_json_line`]: a non-final record
+    /// (`done: false`). The donor's reply-tunnel relay uses this to tell
+    /// chunks from the final [`Response`] line.
+    pub fn from_json_line(line: &str) -> Result<StreamChunk> {
+        let j = Json::parse(line).map_err(|e| anyhow!("bad chunk json: {e}"))?;
+        if j.get("done").and_then(Json::as_bool) != Some(false) {
+            bail!("not a stream chunk (missing 'done': false): {line}");
+        }
+        let id = j
+            .get("id")
+            .and_then(Json::as_i64)
+            .ok_or_else(|| anyhow!("chunk without id: {line}"))? as u64;
+        let seq = j.get("seq").and_then(Json::as_i64).unwrap_or(0) as u64;
+        let delta = j
+            .get("delta")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("chunk without delta: {line}"))?
+            .to_string();
+        Ok(StreamChunk { id, seq, delta })
+    }
 }
 
 /// A message from the serving pipeline to a submitter: either an

@@ -13,13 +13,16 @@
 
 use std::collections::{HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::control::CtlCarry;
 use crate::kv::SessionSnapshot;
+use crate::net::Peers;
 use crate::server::request::{Request, Response, StreamChunk};
 use crate::tokenizer::Utf8StreamDecoder;
+use crate::util::json::Json;
 
 /// Cancellation rendezvous between the server front and the workers: the
 /// front marks ids, workers check the mark between steps — so a cancelled
@@ -47,6 +50,17 @@ impl CancelSet {
     /// Drop the mark (request retired or record delivered).
     pub fn clear(&self, id: u64) {
         self.ids.lock().unwrap().remove(&id);
+    }
+
+    /// Outstanding marks. Diagnostics only: the dispatcher clears every id
+    /// on retirement, so a churn run should end back at 0 — a growing set
+    /// means a leak (a recycled id would be spuriously cancelled).
+    pub fn len(&self) -> usize {
+        self.ids.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 
@@ -284,13 +298,125 @@ impl MigratedSession {
         };
         (tail, Response::err(self.id, format!("{why} (session {})", self.id)))
     }
+
+    /// Wire-transfer header for this migration: everything the adopter
+    /// needs besides the `LAKV1` snapshot payload itself (which travels as
+    /// checksummed chunks). The inverse is [`MigratedSession::from_wire`].
+    pub fn wire_meta(&self) -> Json {
+        let mut fields = vec![
+            ("id", Json::num(self.id as f64)),
+            ("stream", Json::Bool(self.stream)),
+            ("queued_ms", Json::num(self.queued_ms)),
+            ("seq", Json::num(self.seq as f64)),
+        ];
+        let pending = self.dec.pending();
+        if !pending.is_empty() {
+            let hx: String = pending.iter().map(|b| format!("{b:02x}")).collect();
+            fields.push(("dec", Json::str(hx)));
+        }
+        if let Some(d) = self.deadline {
+            // Instants don't cross processes: ship the remaining budget and
+            // let the adopter re-anchor it on arrival.
+            let remaining = d.saturating_duration_since(Instant::now());
+            fields.push(("deadline_ms", Json::num(remaining.as_secs_f64() * 1e3)));
+        }
+        if let Some(ctl) = &self.ctl {
+            let ids = ctl.prompt_ids.iter().map(|&t| Json::num(t as f64)).collect();
+            let mut c = vec![
+                ("prompt_ids", Json::arr(ids)),
+                ("adaptive", Json::Bool(ctl.adaptive)),
+            ];
+            if let Some(t) = &ctl.tenant {
+                c.push(("tenant", Json::str(t.clone())));
+            }
+            fields.push(("ctl", Json::obj(c)));
+        }
+        Json::obj(fields)
+    }
+
+    /// Rebuild a migration from a wire-transfer header plus the decoded
+    /// snapshot. `to` is the adopting process's chosen local worker and `id`
+    /// its fresh request id — the donor keeps the client-facing id (carried
+    /// in the meta) and rewrites reply ids on the way back.
+    pub fn from_wire(
+        meta: &Json,
+        snap: SessionSnapshot,
+        to: usize,
+        id: u64,
+    ) -> MigratedSession {
+        let dec = match meta.get("dec").and_then(Json::as_str) {
+            Some(hx) => Utf8StreamDecoder::from_pending(
+                (0..hx.len() / 2)
+                    .filter_map(|i| u8::from_str_radix(&hx[2 * i..2 * i + 2], 16).ok())
+                    .collect(),
+            ),
+            None => Utf8StreamDecoder::new(),
+        };
+        let deadline = meta
+            .get("deadline_ms")
+            .and_then(Json::as_f64)
+            .map(|ms| Instant::now() + Duration::from_secs_f64((ms / 1e3).max(0.0)));
+        let ctl = meta.get("ctl").map(|c| CtlCarry {
+            prompt_ids: c
+                .get("prompt_ids")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .filter_map(Json::as_usize)
+                        .map(|v| v as u32)
+                        .collect()
+                })
+                .unwrap_or_default(),
+            tenant: c.get("tenant").and_then(Json::as_str).map(str::to_string),
+            adaptive: c.get("adaptive").and_then(Json::as_bool).unwrap_or(false),
+        });
+        MigratedSession {
+            to,
+            id,
+            stream: meta.get("stream").and_then(Json::as_bool).unwrap_or(true),
+            queued_ms: meta.get("queued_ms").and_then(Json::as_f64).unwrap_or(0.0),
+            seq: meta.get("seq").and_then(Json::as_i64).unwrap_or(0) as u64,
+            dec,
+            deadline,
+            snap,
+            ctl,
+        }
+    }
+}
+
+/// A donation target for one worker: another worker in this process, or a
+/// peer process reachable over the wire (an index into the server's
+/// heartbeat-maintained peer table).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Directive {
+    Local(usize),
+    Remote(usize),
+}
+
+/// A donation addressed to a remote peer, consumed by the server's network
+/// transport thread (which streams the snapshot via `net::send_session`).
+pub struct RemoteDonation {
+    /// index into the server's peer table.
+    pub peer: usize,
+    /// the outbound migration. `m.to` is the DONOR's own worker id, so a
+    /// bounce routes home through the ordinary [`RebalanceHub::transfer`]
+    /// path and the donor re-parks it like any local bounce.
+    pub m: MigratedSession,
+}
+
+/// The hub's attachment to the network transport (present only when the
+/// server was started with `--peers`).
+struct RemoteLink {
+    tx: Sender<RemoteDonation>,
+    peers: Arc<Peers>,
 }
 
 struct HubState {
     loads: Vec<WorkerLoad>,
-    /// pending donation directive per worker: `directives[w] = Some(t)`
-    /// asks worker `w` to move its coldest parked session to worker `t`.
-    directives: Vec<Option<usize>>,
+    /// pending donation directive per worker: `directives[w] = Some(d)`
+    /// asks worker `w` to move its coldest parked session to the local
+    /// worker or remote peer named by `d`.
+    directives: Vec<Option<Directive>>,
     /// in-flight migrations, queued per adopting worker.
     queues: Vec<VecDeque<MigratedSession>>,
 }
@@ -305,6 +431,8 @@ struct HubState {
 pub struct RebalanceHub {
     st: Mutex<HubState>,
     moves: AtomicU64,
+    /// network transport attachment (None = single-process serving).
+    remote: Mutex<Option<RemoteLink>>,
 }
 
 impl RebalanceHub {
@@ -316,6 +444,7 @@ impl RebalanceHub {
                 queues: (0..workers).map(|_| VecDeque::new()).collect(),
             }),
             moves: AtomicU64::new(0),
+            remote: Mutex::new(None),
         }
     }
 
@@ -351,13 +480,41 @@ impl RebalanceHub {
         {
             return false;
         }
-        st.directives[from] = Some(to);
+        st.directives[from] = Some(Directive::Local(to));
+        true
+    }
+
+    /// Ask worker `from` to ship its coldest parked session to remote peer
+    /// `peer`. Same single-slot rule as [`RebalanceHub::direct`]; the
+    /// target's aliveness lives in the heartbeat's peer table (peers are
+    /// not workers, so `loads` does not cover them) and is checked by the
+    /// policy thread when it picks the peer.
+    pub fn direct_remote(&self, from: usize, peer: usize) -> bool {
+        let mut st = self.st.lock().unwrap();
+        if from >= st.loads.len()
+            || !st.loads[from].alive
+            || st.directives[from].is_some()
+        {
+            return false;
+        }
+        st.directives[from] = Some(Directive::Remote(peer));
         true
     }
 
     /// Consume the pending donation directive for worker `w`, if any.
-    pub fn take_directive(&self, w: usize) -> Option<usize> {
-        self.st.lock().unwrap().directives.get_mut(w)?.take()
+    /// Directives whose LOCAL target exited between `direct` and now are
+    /// dropped: the donation could only bounce, but the donor would still
+    /// burn a round reviving and re-parking the session (and the directive
+    /// would read as progress in the metrics).
+    pub fn take_directive(&self, w: usize) -> Option<Directive> {
+        let mut st = self.st.lock().unwrap();
+        let d = st.directives.get_mut(w)?.take()?;
+        if let Directive::Local(t) = d {
+            if !st.loads.get(t).is_some_and(|l| l.alive) {
+                return None;
+            }
+        }
+        Some(d)
     }
 
     /// Hand a parked session to its adopting worker. Fails (returning the
@@ -420,6 +577,43 @@ impl RebalanceHub {
     /// Total accepted transfers so far.
     pub fn moves(&self) -> u64 {
         self.moves.load(Ordering::Relaxed)
+    }
+
+    /// Attach the network transport: remote donations flow through `tx` to
+    /// the server's transport thread, and `peers` is the
+    /// heartbeat-maintained table used to pick decode targets.
+    pub fn set_remote(&self, tx: Sender<RemoteDonation>, peers: Arc<Peers>) {
+        *self.remote.lock().unwrap() = Some(RemoteLink { tx, peers });
+    }
+
+    /// Drop the transport link (shutdown): the transport thread's receiver
+    /// disconnects once in-flight donations drain, and subsequent
+    /// [`RebalanceHub::donate_remote`] calls bounce immediately.
+    pub fn clear_remote(&self) {
+        *self.remote.lock().unwrap() = None;
+    }
+
+    /// Ship a migration to remote peer `peer`; returns the migration when
+    /// no transport is attached (or it already shut down) so the donor
+    /// re-parks it locally.
+    pub fn donate_remote(
+        &self,
+        peer: usize,
+        m: MigratedSession,
+    ) -> Result<(), MigratedSession> {
+        let link = self.remote.lock().unwrap();
+        match link.as_ref() {
+            Some(l) => l.tx.send(RemoteDonation { peer, m }).map_err(|e| e.0.m),
+            None => Err(m),
+        }
+    }
+
+    /// First alive non-prefill peer, if a transport is attached — where a
+    /// prefill-only worker ships its freshly-committed sessions. None means
+    /// "decode locally" (degraded but correct).
+    pub fn remote_decode_peer(&self) -> Option<usize> {
+        let peers = self.remote.lock().unwrap().as_ref()?.peers.clone();
+        peers.snapshot().iter().position(|p| p.alive && !p.prefill_only)
     }
 }
 
@@ -575,7 +769,7 @@ mod tests {
         assert!(!hub.direct(0, 1), "second directive must wait for the first");
         assert!(!hub.direct(0, 0), "self-donation is meaningless");
         assert!(!hub.direct(5, 1), "unknown donor");
-        assert_eq!(hub.take_directive(0), Some(1));
+        assert_eq!(hub.take_directive(0), Some(Directive::Local(1)));
         assert_eq!(hub.take_directive(0), None);
 
         // transfer: queued for the adopter, counted
@@ -613,5 +807,90 @@ mod tests {
         ids.sort_unstable();
         assert_eq!(ids, vec![1, 2, 3]);
         assert!(hub.drain().is_empty());
+    }
+
+    #[test]
+    fn directive_to_exited_target_is_dropped_at_take_time() {
+        let hub = RebalanceHub::new(2);
+        assert!(hub.direct(0, 1));
+        // the target exits between the policy's direct() and the donor's
+        // take_directive(): the stale directive must evaporate instead of
+        // sending a donation that can only bounce
+        hub.mark_exited(1);
+        assert_eq!(hub.take_directive(0), None);
+        // the slot is freed; remote directives are exempt from the local
+        // aliveness check (peer liveness lives in the heartbeat table)
+        assert!(hub.direct_remote(0, 3));
+        assert_eq!(hub.take_directive(0), Some(Directive::Remote(3)));
+    }
+
+    #[test]
+    fn remote_donation_without_transport_bounces() {
+        let hub = RebalanceHub::new(1);
+        assert!(hub.remote_decode_peer().is_none());
+        let back = hub.donate_remote(0, mig(0, 9)).unwrap_err();
+        assert_eq!(back.id, 9);
+        // attach a transport: donations flow to the receiver, and the
+        // decode-peer pick skips dead and prefill-only peers
+        let (tx, rx) = std::sync::mpsc::channel();
+        let peers = Arc::new(Peers::new(&[
+            "127.0.0.1:1".into(),
+            "127.0.0.1:2".into(),
+        ]));
+        peers.update(0, true, true, 0, 0); // alive but prefill-only
+        peers.update(1, true, false, 0, 0);
+        hub.set_remote(tx, peers);
+        assert_eq!(hub.remote_decode_peer(), Some(1));
+        assert!(hub.donate_remote(1, mig(0, 10)).is_ok());
+        let got = rx.recv().unwrap();
+        assert_eq!((got.peer, got.m.id), (1, 10));
+        // cleared link: the receiver disconnects, donations bounce again
+        hub.clear_remote();
+        assert!(rx.recv().is_err(), "transport receiver must disconnect");
+        assert!(hub.donate_remote(1, mig(0, 11)).is_err());
+        assert!(hub.remote_decode_peer().is_none());
+    }
+
+    #[test]
+    fn wire_meta_round_trips_streaming_state() {
+        let mut m = mig(1, 42);
+        m.stream = true;
+        m.seq = 3;
+        m.queued_ms = 1.5;
+        m.dec = Utf8StreamDecoder::from_pending(vec![0xe2, 0x82]);
+        m.deadline = Some(Instant::now() + Duration::from_secs(30));
+        m.ctl = Some(CtlCarry {
+            prompt_ids: vec![5, 6, 7],
+            tenant: Some("acme".into()),
+            adaptive: true,
+        });
+        let meta = m.wire_meta();
+        // the donor-side client id travels in the meta (reply rewriting)
+        assert_eq!(meta.get("id").and_then(Json::as_usize), Some(42));
+        // headers survive the JSON writer/parser round trip
+        let meta = Json::parse(&meta.dump()).unwrap();
+        let back = MigratedSession::from_wire(&meta, mig(0, 0).snap, 2, 99);
+        assert_eq!(back.to, 2, "adopter picks its own local worker");
+        assert_eq!(back.id, 99, "adopter assigns a fresh local id");
+        assert!(back.stream);
+        assert_eq!(back.seq, 3);
+        assert!((back.queued_ms - 1.5).abs() < 1e-9);
+        assert_eq!(back.dec.pending(), &[0xe2, 0x82]);
+        let remaining = back
+            .deadline
+            .expect("deadline must survive the wire")
+            .saturating_duration_since(Instant::now());
+        assert!(remaining <= Duration::from_secs(30));
+        assert!(remaining > Duration::from_secs(25), "budget must re-anchor");
+        let ctl = back.ctl.expect("controller carry must survive");
+        assert_eq!(ctl.prompt_ids, vec![5, 6, 7]);
+        assert_eq!(ctl.tenant.as_deref(), Some("acme"));
+        assert!(ctl.adaptive);
+        // a minimal meta (non-streaming, no ctl) also rebuilds cleanly
+        let lean = mig(0, 8).wire_meta();
+        let back = MigratedSession::from_wire(&lean, mig(0, 0).snap, 0, 1);
+        assert!(!back.stream);
+        assert!(back.dec.pending().is_empty());
+        assert!(back.deadline.is_none() && back.ctl.is_none());
     }
 }

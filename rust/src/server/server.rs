@@ -22,12 +22,15 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use crate::info;
-use crate::kv::PrefixCache;
+use crate::kv::snapshot::fnv64;
+use crate::kv::{PrefixCache, SessionSnapshot};
 use crate::metrics::Registry;
+use crate::net::{self, Peers, SendOutcome, TransferOpts};
 use crate::ngram::NgramCacheRegistry;
 use crate::server::config::ServerConfig;
-use crate::server::request::{Reply, Request, Response};
-use crate::server::scheduler::{CancelSet, RebalanceHub, Scheduler, WorkerLoad};
+use crate::server::request::{Reply, Request, Response, StreamChunk};
+use crate::server::scheduler::{CancelSet, MigratedSession, RebalanceHub,
+                               RemoteDonation, Scheduler, WorkerLoad};
 use crate::server::worker::Worker;
 use crate::util::json::Json;
 
@@ -115,7 +118,9 @@ impl ResponseStream {
 pub struct ServerHandle {
     sched: Arc<Scheduler>,
     pending: Arc<Mutex<HashMap<u64, Sender<Reply>>>>,
-    next_id: AtomicU64,
+    /// shared with the peer gateway: locally-submitted and wire-adopted
+    /// requests draw fresh ids from the same counter.
+    next_id: Arc<AtomicU64>,
     pub metrics: Arc<Mutex<Registry>>,
     /// cross-request n-gram caches (None when sharing is disabled).
     pub ngram_caches: Option<Arc<NgramCacheRegistry>>,
@@ -123,13 +128,25 @@ pub struct ServerHandle {
     /// `WorkerConfig::prefix_cache = false`).
     pub prefix_cache: Option<Arc<PrefixCache>>,
     /// cross-worker rebalance rendezvous (None when `ServerConfig::
-    /// rebalance` is off or the server runs a single worker).
+    /// rebalance` is off or the server runs a single worker without
+    /// networking).
     pub rebalance: Option<Arc<RebalanceHub>>,
+    /// heartbeat-maintained remote peer table (None without
+    /// `ServerConfig::peers`).
+    pub peers: Option<Arc<Peers>>,
     cancels: Arc<CancelSet>,
     worker_joins: Vec<std::thread::JoinHandle<()>>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     rebalancer: Option<std::thread::JoinHandle<()>>,
     rebalance_stop: Arc<AtomicBool>,
+    net_stop: Arc<AtomicBool>,
+    net_joins: Vec<std::thread::JoinHandle<()>>,
+    /// reply-relay threads, one per adopted-away session (spawned by the
+    /// transport thread, joined at shutdown).
+    relay_joins: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    /// fault injection: planned cut offsets consumed by outbound snapshot
+    /// transfers ([`ServerHandle::inject_net_cuts`]).
+    net_cuts: Arc<Mutex<Vec<usize>>>,
 }
 
 impl ServerHandle {
@@ -150,8 +167,37 @@ impl ServerHandle {
             cfg.worker.prefix_cache.then(|| Arc::new(PrefixCache::with_defaults()));
         // migrations need a donor and a distinct adopter: a single-worker
         // server has neither, so the hub (and its idle-poll cost) is skipped
-        let rebalance = (cfg.rebalance && cfg.workers > 1)
-            .then(|| Arc::new(RebalanceHub::new(cfg.workers)));
+        // — unless networking is on, where the adopter (or donor) lives in
+        // another process and the hub is the local rendezvous for both
+        // inbound adoptions and outbound donations
+        let net_on = cfg.peer_addr.is_some() || !cfg.peers.is_empty();
+        let rebalance = ((cfg.rebalance && cfg.workers > 1) || net_on)
+            .then(|| Arc::new(RebalanceHub::new(cfg.workers.max(1))));
+        let next_id = Arc::new(AtomicU64::new(1));
+
+        // peer listener binds BEFORE workers spawn so a bad --peer-addr
+        // fails fast instead of leaking worker threads
+        let net_stop = Arc::new(AtomicBool::new(false));
+        let net_cuts: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+        let relay_joins: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let mut net_joins = Vec::new();
+        if let (Some(addr), Some(hub)) = (&cfg.peer_addr, &rebalance) {
+            let gateway: Arc<dyn net::Adopt> = Arc::new(NetGateway {
+                hub: hub.clone(),
+                pending: pending.clone(),
+                next_id: next_id.clone(),
+                ngram_caches: ngram_caches.clone(),
+                metrics: metrics.clone(),
+                prefill_only: cfg.worker.prefill_only,
+            });
+            let listener =
+                net::spawn_listener(addr, gateway, metrics.clone(), net_stop.clone())
+                    .with_context(|| format!("binding peer listener {addr}"))?;
+            net_joins.push(listener);
+            info!("server", "peer listener on {addr}");
+        }
+
         let (tx, rx): (Sender<Reply>, Receiver<Reply>) = channel();
 
         let mut worker_joins = Vec::new();
@@ -188,15 +234,46 @@ impl ServerHandle {
                 }
             }));
         }
+
+        // outbound networking: heartbeat keeps the peer table's liveness
+        // and load fresh; the transport thread streams donated snapshots
+        // to peers and relays the adopter's replies back to the waiting
+        // client (DESIGN.md §4c)
+        let peers = (!cfg.peers.is_empty()).then(|| Arc::new(Peers::new(&cfg.peers)));
+        if let (Some(peers_t), Some(hub)) = (&peers, &rebalance) {
+            net_joins.push(net::spawn_heartbeat(
+                peers_t.clone(),
+                metrics.clone(),
+                Duration::from_millis(cfg.heartbeat_ms.max(1)),
+                net_stop.clone(),
+            ));
+            let (dtx, drx) = channel::<RemoteDonation>();
+            hub.set_remote(dtx, peers_t.clone());
+            net_joins.push(spawn_transport(NetTransport {
+                rx: drx,
+                hub: hub.clone(),
+                peers: peers_t.clone(),
+                metrics: metrics.clone(),
+                relay_joins: relay_joins.clone(),
+                cuts: net_cuts.clone(),
+                stop: net_stop.clone(),
+                replies: tx.clone(),
+            }));
+        }
         drop(tx);
 
         // rebalancer: periodically turn the hub's load report into one
-        // donation directive (deepest parked donor -> shallowest target)
+        // donation directive (deepest parked donor -> shallowest target).
+        // Remote peers join the scan as pseudo-workers appended after the
+        // local ones, so the same policy picks local or remote targets.
         let rebalance_stop = Arc::new(AtomicBool::new(false));
-        let rebalancer = rebalance.as_ref().map(|hub| {
+        let want_rebalancer =
+            cfg.rebalance && (cfg.workers > 1 || !cfg.peers.is_empty());
+        let rebalancer = rebalance.as_ref().filter(|_| want_rebalancer).map(|hub| {
             let hub = hub.clone();
             let stop = rebalance_stop.clone();
             let metrics_c = metrics.clone();
+            let peers_c = peers.clone();
             let policy = RebalancePolicy::default();
             let interval = Duration::from_millis(cfg.rebalance_interval_ms.max(1));
             std::thread::spawn(move || {
@@ -211,8 +288,30 @@ impl ServerHandle {
                         continue;
                     }
                     slept = Duration::ZERO;
-                    if let Some((from, to)) = policy.pick(&hub.loads()) {
-                        if hub.direct(from, to) {
+                    let mut loads = hub.loads();
+                    let n_local = loads.len();
+                    if let Some(peers) = &peers_c {
+                        for p in peers.snapshot() {
+                            // prefill-only peers never adopt decode work
+                            loads.push(WorkerLoad {
+                                live: p.live,
+                                parked: p.parked,
+                                alive: p.alive && !p.prefill_only,
+                            });
+                        }
+                    }
+                    if let Some((from, to)) = policy.pick(&loads) {
+                        if from >= n_local {
+                            // remote donors manage their own parked pool;
+                            // this process cannot direct them
+                            continue;
+                        }
+                        let ok = if to < n_local {
+                            hub.direct(from, to)
+                        } else {
+                            hub.direct_remote(from, to - n_local)
+                        };
+                        if ok {
                             metrics_c.lock().unwrap().inc("rebalance_directives", 1);
                         }
                     }
@@ -288,17 +387,30 @@ impl ServerHandle {
         Ok(ServerHandle {
             sched,
             pending,
-            next_id: AtomicU64::new(1),
+            next_id,
             metrics,
             ngram_caches,
             prefix_cache,
             rebalance,
+            peers,
             cancels,
             worker_joins,
             dispatcher: Some(dispatcher),
             rebalancer,
             rebalance_stop,
+            net_stop,
+            net_joins,
+            relay_joins,
+            net_cuts,
         })
+    }
+
+    /// Fault injection for the wire tests: each planned offset cuts one
+    /// outbound snapshot-transfer connection after that many payload bytes
+    /// (one cut consumed per attempt — see [`TransferOpts`]). A no-op
+    /// without `ServerConfig::peers`.
+    pub fn inject_net_cuts(&self, cuts: Vec<usize>) {
+        self.net_cuts.lock().unwrap().extend(cuts);
     }
 
     /// Sync derived gauges into the registry so every report flavor (text
@@ -332,6 +444,9 @@ impl ServerHandle {
         m.set("live_sessions", live);
         // queue-depth report: requests admitted by no worker yet
         m.set("queue_depth", self.sched.depth() as u64);
+        // cancel marks still outstanding — returns to 0 at quiescence
+        // (every retirement path sweeps its mark)
+        m.set("cancel_marks", self.cancels.len() as u64);
     }
 
     /// Server metrics report including per-cache n-gram counters and the
@@ -426,6 +541,21 @@ impl ServerHandle {
         for j in self.worker_joins.drain(..) {
             let _ = j.join();
         }
+        // network wind-down: clearing the remote link drops the transport's
+        // only Sender so it drains queued donations and exits; the stop flag
+        // winds down the listener, heartbeat, and any reply relays still
+        // waiting on an adopter (those synthesize a final error record, so
+        // no client hangs)
+        if let Some(hub) = &self.rebalance {
+            hub.clear_remote();
+        }
+        self.net_stop.store(true, Ordering::Relaxed);
+        for j in self.net_joins.drain(..) {
+            let _ = j.join();
+        }
+        for j in self.relay_joins.lock().unwrap().drain(..) {
+            let _ = j.join();
+        }
         if let Some(hub) = &self.rebalance {
             for m in hub.drain() {
                 self.cancels.clear(m.id);
@@ -446,6 +576,191 @@ impl ServerHandle {
             let _ = d.join();
         }
     }
+}
+
+/// Inbound half of the wire hand-off: decodes a received snapshot payload,
+/// assigns it a fresh local id, and injects it into the shallowest alive
+/// worker through the ordinary [`RebalanceHub::transfer`] path — so a
+/// wire-adopted session is indistinguishable from a locally-migrated one
+/// from the worker's point of view.
+struct NetGateway {
+    hub: Arc<RebalanceHub>,
+    pending: Arc<Mutex<HashMap<u64, Sender<Reply>>>>,
+    next_id: Arc<AtomicU64>,
+    ngram_caches: Option<Arc<NgramCacheRegistry>>,
+    metrics: Arc<Mutex<Registry>>,
+    prefill_only: bool,
+}
+
+impl net::Adopt for NetGateway {
+    fn adopt(&self, meta: &Json, payload: Vec<u8>) -> Result<Receiver<Reply>, String> {
+        let caches = self.ngram_caches.as_deref();
+        let snap = SessionSnapshot::from_bytes_with(&payload, caches)
+            .map_err(|e| format!("snapshot decode failed: {e}"))?;
+        let loads = self.hub.loads();
+        let to = loads
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.alive)
+            .min_by_key(|(_, l)| l.depth())
+            .map(|(i, _)| i)
+            .ok_or_else(|| "no alive worker to adopt the session".to_string())?;
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let m = MigratedSession::from_wire(meta, snap, to, id);
+        let (tx, rx) = channel();
+        self.pending.lock().unwrap().insert(id, tx);
+        if self.hub.transfer(m).is_err() {
+            self.pending.lock().unwrap().remove(&id);
+            return Err("adopting worker exited during hand-off".to_string());
+        }
+        let mut reg = self.metrics.lock().unwrap();
+        reg.inc("net_adopted", 1);
+        reg.observe("net_transfer_bytes", payload.len() as f64);
+        Ok(rx)
+    }
+
+    fn load_json(&self) -> Json {
+        let loads = self.hub.loads();
+        let live: usize = loads.iter().map(|l| l.live).sum();
+        let parked: usize = loads.iter().map(|l| l.parked).sum();
+        Json::obj(vec![
+            ("live", Json::num(live as f64)),
+            ("parked", Json::num(parked as f64)),
+            ("prefill_only", Json::Bool(self.prefill_only)),
+        ])
+    }
+}
+
+/// Everything the outbound transport thread owns.
+struct NetTransport {
+    rx: Receiver<RemoteDonation>,
+    hub: Arc<RebalanceHub>,
+    peers: Arc<Peers>,
+    metrics: Arc<Mutex<Registry>>,
+    relay_joins: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    cuts: Arc<Mutex<Vec<usize>>>,
+    stop: Arc<AtomicBool>,
+    replies: Sender<Reply>,
+}
+
+/// Outbound half of the wire hand-off: drains [`RemoteDonation`]s, streams
+/// each snapshot to its peer with [`net::send_session`] (resumable +
+/// checksummed), and settles the outcome — adopted sessions get a reply
+/// relay thread, bounced ones re-park on the donor worker. Exits when the
+/// hub's remote link is cleared (the only Sender drops).
+fn spawn_transport(t: NetTransport) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
+        while let Ok(RemoteDonation { peer, m }) = t.rx.recv() {
+            t.metrics.lock().unwrap().inc("net_transfers", 1);
+            let Some(addr) = t.peers.addr(peer) else {
+                t.metrics.lock().unwrap().inc("net_bounced", 1);
+                bounce_home(&t.hub, m, "unknown peer index", &t.replies, &t.metrics);
+                continue;
+            };
+            let meta = m.wire_meta();
+            let payload = m.snap.to_bytes();
+            let opts = TransferOpts { cuts: t.cuts.clone(), ..Default::default() };
+            let report = net::send_session(&addr, &meta, &payload, &opts);
+            if report.resumes > 0 {
+                t.metrics.lock().unwrap().inc("net_resumes", report.resumes);
+            }
+            match report.outcome {
+                SendOutcome::Adopted(lines) => {
+                    {
+                        let mut mm = t.metrics.lock().unwrap();
+                        mm.inc("net_adopted", 1);
+                        mm.observe("net_transfer_bytes", payload.len() as f64);
+                    }
+                    // the session now lives on the peer — drop our copy and
+                    // relay the adopter's replies to the waiting client
+                    let donor_id = m.id;
+                    let xfer = fnv64(&payload);
+                    let replies_c = t.replies.clone();
+                    let metrics_c = t.metrics.clone();
+                    let stop_c = t.stop.clone();
+                    t.relay_joins.lock().unwrap().push(std::thread::spawn(move || {
+                        relay_replies(lines, &addr, xfer, donor_id, replies_c,
+                                      metrics_c, stop_c);
+                    }));
+                }
+                SendOutcome::Bounced(why) => {
+                    t.metrics.lock().unwrap().inc("net_bounced", 1);
+                    bounce_home(&t.hub, m, &why, &t.replies, &t.metrics);
+                }
+            }
+        }
+    })
+}
+
+/// A donation that could not be delivered re-parks on the donor worker
+/// (`m.to` still names it), preserving either-adopted-or-bounced. If even
+/// the donor is gone, the client gets a final error record — never a hang.
+fn bounce_home(hub: &RebalanceHub, m: MigratedSession, why: &str,
+               replies: &Sender<Reply>, metrics: &Arc<Mutex<Registry>>) {
+    if let Err(m) = hub.transfer(m) {
+        metrics.lock().unwrap().inc("net_transfer_fail", 1);
+        let (tail, resp) = m.into_failure(&format!("remote hand-off failed: {why}"));
+        if let Some(c) = tail {
+            let _ = replies.send(Reply::Chunk(c));
+        }
+        let _ = replies.send(Reply::Done(resp));
+    }
+}
+
+/// Reconnect attempts after a dropped reply tunnel before giving up and
+/// synthesizing a final error record.
+const ATTACH_ATTEMPTS: usize = 5;
+
+/// Donor-side reply relay for one adopted-away session: forwards the
+/// adopter's chunk lines and final record into the donor's own dispatcher
+/// (ids were rewritten to `donor_id` by the adopter). A dropped tunnel
+/// re-attaches with the count of lines already forwarded, so the adopter
+/// replays only what was lost — exhausted retries or shutdown synthesize an
+/// error record so the client never hangs.
+fn relay_replies(mut lines: net::NetLines, addr: &str, xfer: u64, donor_id: u64,
+                 replies: Sender<Reply>, metrics: Arc<Mutex<Registry>>,
+                 stop: Arc<AtomicBool>) {
+    let mut have: usize = 0;
+    'relay: loop {
+        loop {
+            let line = match lines.next() {
+                Ok(Some(l)) => l,
+                Ok(None) => {
+                    if stop.load(Ordering::Relaxed) {
+                        fail_relay(donor_id, &replies, "server shut down mid-relay");
+                        return;
+                    }
+                    continue;
+                }
+                Err(_) => break, // tunnel dropped: re-attach below
+            };
+            if let Ok(resp) = Response::from_json_line(&line) {
+                let _ = replies.send(Reply::Done(resp));
+                return;
+            }
+            if let Ok(c) = StreamChunk::from_json_line(&line) {
+                have += 1;
+                let _ = replies.send(Reply::Chunk(c));
+            }
+        }
+        for _ in 0..ATTACH_ATTEMPTS {
+            if stop.load(Ordering::Relaxed) {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(50));
+            if let Ok(nl) = net::attach(addr, xfer, have) {
+                lines = nl;
+                metrics.lock().unwrap().inc("net_attach_resumes", 1);
+                continue 'relay;
+            }
+        }
+        fail_relay(donor_id, &replies, "lost contact with adopting peer");
+        return;
+    }
+}
+
+fn fail_relay(donor_id: u64, replies: &Sender<Reply>, why: &str) {
+    let _ = replies.send(Reply::Done(Response::err(donor_id, why.to_string())));
 }
 
 /// TCP front: JSON-lines protocol, one connection per client.

@@ -47,8 +47,8 @@ use crate::metrics::Registry;
 use crate::ngram::{NgramCacheRegistry, PoolHandle};
 use crate::runtime::{cpu_client, Manifest, ModelRuntime};
 use crate::server::request::{Reply, Request, Response, StreamChunk};
-use crate::server::scheduler::{CancelSet, MigratedSession, Popped, PopOutcome,
-                               RebalanceHub, Scheduler};
+use crate::server::scheduler::{CancelSet, Directive, MigratedSession, Popped,
+                               PopOutcome, RebalanceHub, Scheduler};
 use crate::tokenizer::{ByteTokenizer, Utf8StreamDecoder};
 
 /// How long an idle worker waits in [`Scheduler::pop_timeout`] before
@@ -867,6 +867,45 @@ impl Worker {
         true
     }
 
+    /// Ship the coldest parked session to remote peer `peer` through the
+    /// hub's network transport. The migration's `to` is this worker's OWN
+    /// id, so a wire-level bounce re-queues it here through the ordinary
+    /// transfer path and the next round re-parks it like a local bounce.
+    /// Returns None when the reply channel is gone (server shut down),
+    /// Some(false) when the transport refused — the session is re-parked
+    /// and the caller stops shipping this round — and Some(true) on
+    /// hand-off.
+    #[allow(clippy::too_many_arguments)]
+    fn donate_remote_one(self_id: usize, peer: usize,
+                         parked: &mut VecDeque<ParkedSession>, kv: &mut KvManager,
+                         hub: &RebalanceHub, cancels: &CancelSet,
+                         controller: &mut dyn Controller, replies: &Sender<Reply>,
+                         metrics: &Option<Arc<Mutex<Registry>>>) -> Option<bool> {
+        let Some(p) = parked.pop_front() else { return Some(false) };
+        let Some(snap) = kv.revive(p.handle) else {
+            controller.retire(p.id);
+            if !Self::fail_parked(p, cancels, replies) {
+                return None;
+            }
+            return Some(true);
+        };
+        let id = p.id;
+        match hub.donate_remote(peer, p.into_migrated(self_id, snap)) {
+            Ok(()) => {
+                controller.retire(id);
+                if let Some(m) = metrics {
+                    m.lock().unwrap().inc("rebalanced_sessions", 1);
+                }
+                Some(true)
+            }
+            Err(m) => {
+                // transport gone (shutdown): re-park at the front
+                parked.push_front(ParkedSession::from_migrated(m, kv));
+                Some(false)
+            }
+        }
+    }
+
     /// Adopt a session migrated here: park the snapshot in the local
     /// [`KvManager`]; the normal revive loop restores it to the device when
     /// a slot frees (or the parked sweeps retire it).
@@ -1003,6 +1042,30 @@ impl Worker {
                     }
                 }
             }
+            // -- prefill-only: opening a session ran the prefill (and fed
+            //    the prefix trie), which is this worker's whole job — park
+            //    everything and ship it to a remote decode peer instead of
+            //    stepping it. Gated on an alive decode peer so a partitioned
+            //    prefill worker degrades to local decode below instead of
+            //    livelocking in park/ship-fail/revive. ----------------------
+            if cfg.prefill_only {
+                if let Some(hub) = &hub {
+                    while hub.remote_decode_peer().is_some()
+                        && Self::park_one(&mut live, &mut parked, &mut kv, &metrics)
+                    {}
+                    while !parked.is_empty() {
+                        let Some(peer) = hub.remote_decode_peer() else { break };
+                        match Self::donate_remote_one(id, peer, &mut parked, &mut kv,
+                                                      hub, &cancels,
+                                                      controller.as_mut(), &replies,
+                                                      &metrics) {
+                            None => break 'serve,
+                            Some(true) => {}
+                            Some(false) => break,
+                        }
+                    }
+                }
+            }
             // -- one scheduling round ----------------------------------------
             if cfg.batch_decode && live.len() > 1 {
                 Self::batched_round(&rt, &mut live, slice, &tok, &cancels, &replies,
@@ -1063,13 +1126,27 @@ impl Worker {
             //    directive by shipping the coldest parked snapshot ----------
             if let Some(hub) = &hub {
                 hub.report_load(id, live.len(), parked.len());
-                if let Some(to) = hub.take_directive(id) {
-                    if !parked.is_empty()
-                        && !Self::donate(to, &mut parked, &mut kv, hub, &cancels,
-                                         controller.as_mut(), &replies, &metrics)
-                    {
-                        break 'serve;
+                match hub.take_directive(id) {
+                    Some(Directive::Local(to)) => {
+                        if !parked.is_empty()
+                            && !Self::donate(to, &mut parked, &mut kv, hub, &cancels,
+                                             controller.as_mut(), &replies, &metrics)
+                        {
+                            break 'serve;
+                        }
                     }
+                    Some(Directive::Remote(peer)) => {
+                        if !parked.is_empty()
+                            && Self::donate_remote_one(id, peer, &mut parked,
+                                                       &mut kv, hub, &cancels,
+                                                       controller.as_mut(),
+                                                       &replies, &metrics)
+                                .is_none()
+                        {
+                            break 'serve;
+                        }
+                    }
+                    None => {}
                 }
             }
             if let Some(m) = &metrics {

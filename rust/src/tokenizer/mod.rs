@@ -116,6 +116,19 @@ impl Utf8StreamDecoder {
         self.pending.clear();
         out
     }
+
+    /// The held-back incomplete trailing sequence (at most 3 bytes) — what
+    /// a cross-process migration must carry so the adopter's decoder
+    /// continues mid-character without emitting U+FFFD.
+    pub fn pending(&self) -> &[u8] {
+        &self.pending
+    }
+
+    /// Rebuild a decoder around a held-back tail captured by
+    /// [`Utf8StreamDecoder::pending`] on the other side of a migration.
+    pub fn from_pending(pending: Vec<u8>) -> Self {
+        Utf8StreamDecoder { pending }
+    }
 }
 
 #[cfg(test)]

@@ -63,6 +63,9 @@ fn server_config_default_is_pinned() {
     assert!(d.batch_decode);
     assert!(!d.rebalance);
     assert_eq!(d.rebalance_interval_ms, 50);
+    assert!(d.peers.is_empty());
+    assert_eq!(d.peer_addr, None);
+    assert_eq!(d.heartbeat_ms, 100);
     let w = &d.worker;
     assert_eq!(w.artifacts_dir, "artifacts");
     assert_eq!(w.model, "tiny");
@@ -74,6 +77,7 @@ fn server_config_default_is_pinned() {
     assert_eq!(w.kv_budget, 0);
     assert!(w.prefix_cache);
     assert_eq!(w.controller, "static");
+    assert!(!w.prefill_only);
 
     // builders over untouched defaults reproduce Default exactly
     assert_eq!(ServerConfig::builder().build(), d);
@@ -161,4 +165,10 @@ fn tcp_load_run_scrapes_report_and_validates() {
     assert_eq!(run.report.path("counters.responses_ok").and_then(Json::as_usize),
                Some(sched.items.len()),
                "scraped report must count this run: {}", run.report.dump());
+    // every cancel mark was swept on retirement — the CancelSet must not
+    // leak ids across a run with 25% planned cancels
+    assert_eq!(run.report.path("counters.cancel_marks").and_then(Json::as_usize),
+               Some(0),
+               "cancel marks must return to zero at quiescence: {}",
+               run.report.dump());
 }

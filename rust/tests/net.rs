@@ -1,0 +1,315 @@
+//! Wire-protocol hand-off suite (simulated artifacts — runs without PJRT).
+//!
+//! Two layers of coverage for the network-transparent session transfer:
+//!
+//!   1. Mock-gateway fault matrix: `net::send_session` against a
+//!      `net::spawn_listener` whose `Adopt` impl records payloads, driven
+//!      through seeded mid-stream cuts (`TransferOpts::cuts`). Pins the
+//!      resume math (only checksummed chunks count), the adopted-or-bounced
+//!      contract, duplicate suppression after a lost ack, and the reply
+//!      tunnel's donor-id rewrite.
+//!   2. Two-process loopback topologies: a prefill-only front shipping every
+//!      admitted session to a decode peer, clean and under injected cuts,
+//!      with migrated output byte-identical to a solo server.
+
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use lookahead::metrics::Registry;
+use lookahead::net::{self, SendOutcome, TransferOpts};
+use lookahead::server::{Reply, Request, Response, ServerConfig, ServerHandle,
+                        StreamChunk};
+use lookahead::util::json::Json;
+
+/// Records every adopted payload and answers each adoption with one chunk
+/// and a final record (ids 0 — the listener pump must rewrite them to the
+/// donor id carried in the offer meta).
+#[derive(Default)]
+struct MockGate {
+    payloads: Mutex<Vec<Vec<u8>>>,
+    adopts: AtomicUsize,
+}
+
+impl net::Adopt for MockGate {
+    fn adopt(&self, _meta: &Json, payload: Vec<u8>) -> Result<Receiver<Reply>, String> {
+        self.payloads.lock().unwrap().push(payload);
+        self.adopts.fetch_add(1, Ordering::SeqCst);
+        let (tx, rx) = channel();
+        tx.send(Reply::Chunk(StreamChunk { id: 0, seq: 1, delta: "ok".into() }))
+            .unwrap();
+        tx.send(Reply::Done(Response::err(0, "mock-served".into()))).unwrap();
+        Ok(rx)
+    }
+
+    fn load_json(&self) -> Json {
+        Json::obj(vec![
+            ("live", Json::num(0.0)),
+            ("parked", Json::num(0.0)),
+            ("prefill_only", Json::Bool(false)),
+        ])
+    }
+}
+
+type Listener = (Arc<MockGate>, Arc<Mutex<Registry>>, Arc<AtomicBool>,
+                 std::thread::JoinHandle<()>);
+
+fn mock_listener(addr: &str) -> Listener {
+    let gate = Arc::new(MockGate::default());
+    let metrics = Arc::new(Mutex::new(Registry::new()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let join = net::spawn_listener(addr, gate.clone(), metrics.clone(), stop.clone())
+        .unwrap();
+    (gate, metrics, stop, join)
+}
+
+fn patterned_payload(n: usize) -> Vec<u8> {
+    (0..n).map(|i| (i % 251) as u8).collect()
+}
+
+fn opts_with_cuts(attempts: usize, chunk: usize, cuts: Vec<usize>) -> TransferOpts {
+    TransferOpts {
+        attempts,
+        chunk,
+        backoff: Duration::from_millis(5),
+        cuts: Arc::new(Mutex::new(cuts)),
+    }
+}
+
+/// Drain the reply tunnel after adoption: one chunk then the final record,
+/// both rewritten to the donor-side id.
+fn read_tunnel(mut lines: net::NetLines, donor_id: u64) -> Response {
+    let first = lines.next_deadline(Duration::from_secs(5)).unwrap();
+    let c = StreamChunk::from_json_line(&first).unwrap();
+    assert_eq!(c.id, donor_id, "tunnel chunk must carry the donor id");
+    assert_eq!(c.delta, "ok");
+    let last = lines.next_deadline(Duration::from_secs(5)).unwrap();
+    let r = Response::from_json_line(&last).unwrap();
+    assert_eq!(r.id, donor_id, "final record must carry the donor id");
+    r
+}
+
+#[test]
+fn seeded_cuts_resume_to_byte_identical_adoption() {
+    let addr = "127.0.0.1:18801";
+    let (gate, _metrics, stop, join) = mock_listener(addr);
+    let payload = patterned_payload(1000);
+    let meta = Json::obj(vec![
+        ("id", Json::num(7.0)),
+        ("stream", Json::Bool(true)),
+    ]);
+    // Three mid-stream cuts with a 64-byte chunk: each attempt loses the
+    // in-flight chunk but keeps every verified one, so the resume offsets
+    // climb (64, 256, 640) and the fourth attempt completes the payload.
+    let opts = opts_with_cuts(4, 64, vec![100, 300, 700]);
+    let report = net::send_session(addr, &meta, &payload, &opts);
+    let lines = match report.outcome {
+        SendOutcome::Adopted(lines) => lines,
+        SendOutcome::Bounced(why) => panic!("transfer bounced: {why}"),
+    };
+    assert_eq!(report.resumes, 3, "each retry must resume, not restart");
+    assert_eq!(gate.adopts.load(Ordering::SeqCst), 1);
+    let got = gate.payloads.lock().unwrap();
+    assert_eq!(got.len(), 1);
+    assert_eq!(got[0], payload, "resumed payload must be byte-identical");
+    drop(got);
+    let resp = read_tunnel(lines, 7);
+    assert!(resp.error.as_deref().unwrap_or("").contains("mock-served"));
+    stop.store(true, Ordering::SeqCst);
+    join.join().unwrap();
+}
+
+#[test]
+fn exhausted_attempts_bounce_without_adoption() {
+    let addr = "127.0.0.1:18803";
+    let (gate, _metrics, stop, join) = mock_listener(addr);
+    let payload = patterned_payload(500);
+    let meta = Json::obj(vec![("id", Json::num(3.0))]);
+    // Every attempt is cut inside the first chunk: no bytes ever verify,
+    // attempts exhaust, and the donor gets a bounce — never a hang.
+    let opts = opts_with_cuts(3, 64, vec![10, 10, 10]);
+    let report = net::send_session(addr, &meta, &payload, &opts);
+    match report.outcome {
+        SendOutcome::Bounced(why) => {
+            assert!(why.contains("exhausted"), "unexpected bounce reason: {why}")
+        }
+        SendOutcome::Adopted(_) => panic!("cut transfer must not be adopted"),
+    }
+    assert_eq!(report.resumes, 2, "retries 2 and 3 still reach a handshake");
+    assert_eq!(gate.adopts.load(Ordering::SeqCst), 0,
+               "no attempt completed; nothing may be adopted");
+    stop.store(true, Ordering::SeqCst);
+    join.join().unwrap();
+}
+
+#[test]
+fn lost_ack_retry_is_dropped_as_duplicate() {
+    let addr = "127.0.0.1:18805";
+    let (gate, metrics, stop, join) = mock_listener(addr);
+    let payload = patterned_payload(300);
+    let meta = Json::obj(vec![("id", Json::num(9.0))]);
+    // The cut lands past the payload end: the full payload is delivered and
+    // adopted, but the socket drops before the donor reads the ack. The
+    // retry must be answered `dup` — adopted exactly once, tunnel intact.
+    let opts = opts_with_cuts(3, 64, vec![payload.len() + 1]);
+    let report = net::send_session(addr, &meta, &payload, &opts);
+    let lines = match report.outcome {
+        SendOutcome::Adopted(lines) => lines,
+        SendOutcome::Bounced(why) => panic!("dup retry bounced: {why}"),
+    };
+    assert_eq!(report.resumes, 1);
+    assert_eq!(gate.adopts.load(Ordering::SeqCst), 1,
+               "duplicate delivery must not re-adopt");
+    assert_eq!(metrics.lock().unwrap().counter("net_dup_dropped"), 1);
+    let resp = read_tunnel(lines, 9);
+    assert!(resp.error.as_deref().unwrap_or("").contains("mock-served"));
+    stop.store(true, Ordering::SeqCst);
+    join.join().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Loopback topologies over real servers (simulated artifacts).
+// ---------------------------------------------------------------------------
+
+fn sim_dir() -> String {
+    lookahead::runtime::sim::ensure_sim_artifacts()
+        .unwrap()
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn wait_for_peer(front: &ServerHandle) {
+    let peers = front.peers.clone().expect("peer table");
+    for _ in 0..400 {
+        if peers.snapshot().iter().any(|p| p.alive) {
+            return;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    panic!("peer never reported alive");
+}
+
+fn run_prompts(h: &ServerHandle, prompts: &[String]) -> Vec<String> {
+    let rxs: Vec<_> = prompts
+        .iter()
+        .map(|p| {
+            h.submit(Request::new(p.clone()).max_tokens(16).method("autoregressive"))
+                .unwrap()
+        })
+        .collect();
+    rxs.into_iter()
+        .map(|rx| {
+            let r = rx.wait().unwrap();
+            assert!(r.error.is_none(), "{:?}", r.error);
+            r.text
+        })
+        .collect()
+}
+
+fn solo_texts(dir: &str, prompts: &[String]) -> Vec<String> {
+    let solo = ServerHandle::start(
+        ServerConfig::builder()
+            .queue_depth(64)
+            .artifacts_dir(dir.to_string())
+            .build(),
+    )
+    .unwrap();
+    let texts = run_prompts(&solo, prompts);
+    solo.shutdown();
+    texts
+}
+
+#[test]
+fn prefill_only_front_ships_every_session_to_decode_peer() {
+    let dir = sim_dir();
+    let back = ServerHandle::start(
+        ServerConfig::builder()
+            .queue_depth(64)
+            .artifacts_dir(dir.clone())
+            .peer_addr(Some("127.0.0.1:18821".into()))
+            .build(),
+    )
+    .unwrap();
+    let front = ServerHandle::start(
+        ServerConfig::builder()
+            .queue_depth(64)
+            .artifacts_dir(dir.clone())
+            .peers(vec!["127.0.0.1:18821".into()])
+            .heartbeat_ms(5)
+            .prefill_only(true)
+            .build(),
+    )
+    .unwrap();
+    wait_for_peer(&front);
+
+    let prompts: Vec<String> = (0..3)
+        .map(|i| format!("def net{i}(x):\n    return x + {i}"))
+        .collect();
+    let texts = run_prompts(&front, &prompts);
+
+    let (transfers, adopted, bounced, beats) = {
+        let m = front.metrics.lock().unwrap();
+        (m.counter("net_transfers"), m.counter("net_adopted"),
+         m.counter("net_bounced"), m.counter("net_heartbeats"))
+    };
+    assert_eq!(transfers, 3, "a prefill-only front must ship every session");
+    assert_eq!(adopted, 3);
+    assert_eq!(bounced, 0);
+    assert!(beats >= 1, "heartbeat thread never ran");
+    assert_eq!(back.metrics.lock().unwrap().counter("net_adopted"), 3,
+               "adopter must count each inbound adoption");
+    front.shutdown();
+    back.shutdown();
+
+    assert_eq!(texts, solo_texts(&dir, &prompts),
+               "migrated decode must match the solo run byte for byte");
+}
+
+#[test]
+fn injected_cuts_settle_adopted_or_bounced_with_correct_output() {
+    let dir = sim_dir();
+    let back = ServerHandle::start(
+        ServerConfig::builder()
+            .queue_depth(64)
+            .artifacts_dir(dir.clone())
+            .peer_addr(Some("127.0.0.1:18831".into()))
+            .build(),
+    )
+    .unwrap();
+    let front = ServerHandle::start(
+        ServerConfig::builder()
+            .queue_depth(64)
+            .artifacts_dir(dir.clone())
+            .peers(vec!["127.0.0.1:18831".into()])
+            .heartbeat_ms(5)
+            .prefill_only(true)
+            .build(),
+    )
+    .unwrap();
+    wait_for_peer(&front);
+    // Three seeded mid-stream disconnects, consumed one per attempt by the
+    // serial transport. Whatever mix of resume / duplicate / bounce-and-
+    // redonate they force, every session must settle and decode correctly.
+    front.inject_net_cuts(vec![64, 128, 256]);
+
+    let prompts: Vec<String> = (0..3)
+        .map(|i| format!("def cut{i}(x):\n    return x * {i}"))
+        .collect();
+    let texts = run_prompts(&front, &prompts);
+
+    let (transfers, adopted, bounced, resumes) = {
+        let m = front.metrics.lock().unwrap();
+        (m.counter("net_transfers"), m.counter("net_adopted"),
+         m.counter("net_bounced"), m.counter("net_resumes"))
+    };
+    assert!(transfers >= 3, "every session must go over the wire");
+    assert_eq!(adopted + bounced, transfers,
+               "every transfer must settle as adopted or bounced");
+    assert!(resumes >= 1, "seeded cuts must exercise the resume path");
+    front.shutdown();
+    back.shutdown();
+
+    assert_eq!(texts, solo_texts(&dir, &prompts),
+               "faulted hand-off must not corrupt decode output");
+}

@@ -147,6 +147,93 @@ fn rebalanced_two_worker_server_reports_and_serves() {
 }
 
 #[test]
+fn rebalancer_ships_parked_sessions_to_a_loopback_peer() {
+    // Two servers connected only over TCP loopback: the front (donor) runs
+    // one KV-starved worker with rebalancing on; the back (adopter) exposes
+    // a peer listener. The rebalance policy must pick the remote
+    // pseudo-worker, the snapshot must stream across, and the migrated
+    // sessions must produce exactly the text a solo server produces.
+    let dir = lookahead::runtime::sim::ensure_slow_sim_artifacts()
+        .unwrap()
+        .to_string_lossy()
+        .into_owned();
+    let back = ServerHandle::start(
+        ServerConfig::builder()
+            .queue_depth(64)
+            .artifacts_dir(dir.clone())
+            .peer_addr(Some("127.0.0.1:18841".into()))
+            .build(),
+    )
+    .unwrap();
+    let front = ServerHandle::start(
+        ServerConfig::builder()
+            .queue_depth(64)
+            .artifacts_dir(dir.clone())
+            .rebalance(true)
+            .rebalance_interval_ms(5)
+            .kv_budget(1)
+            .peers(vec!["127.0.0.1:18841".into()])
+            .heartbeat_ms(5)
+            .build(),
+    )
+    .unwrap();
+    // the heartbeat must observe the peer alive before load arrives
+    let peers = front.peers.clone().expect("peer table");
+    for _ in 0..400 {
+        if peers.snapshot().iter().any(|p| p.alive) {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+    assert!(peers.snapshot().iter().any(|p| p.alive), "peer never came up");
+
+    let prompts: Vec<String> =
+        (0..4).map(|i| format!("def r{i}(x):\n    return x")).collect();
+    let rxs: Vec<_> = prompts
+        .iter()
+        .map(|p| {
+            front
+                .submit(Request::new(p.clone()).max_tokens(16).method("autoregressive"))
+                .unwrap()
+        })
+        .collect();
+    let texts: Vec<String> = rxs
+        .into_iter()
+        .map(|rx| {
+            let r = rx.wait().unwrap();
+            assert!(r.error.is_none(), "{:?}", r.error);
+            r.text
+        })
+        .collect();
+
+    let (transfers, adopted, bounced) = {
+        let m = front.metrics.lock().unwrap();
+        (m.counter("net_transfers"), m.counter("net_adopted"),
+         m.counter("net_bounced"))
+    };
+    assert!(transfers >= 1, "rebalancer never shipped a session over the wire");
+    assert_eq!(adopted + bounced, transfers,
+               "every transfer must settle as adopted or bounced");
+    front.shutdown();
+    back.shutdown();
+
+    // solo reference: the same prompts, one ordinary server, no networking
+    let solo = ServerHandle::start(
+        ServerConfig::builder().queue_depth(64).artifacts_dir(dir).build(),
+    )
+    .unwrap();
+    for (p, migrated) in prompts.iter().zip(&texts) {
+        let r = solo
+            .submit(Request::new(p.clone()).max_tokens(16).method("autoregressive"))
+            .unwrap()
+            .wait()
+            .unwrap();
+        assert_eq!(&r.text, migrated, "migrated text must match the solo run");
+    }
+    solo.shutdown();
+}
+
+#[test]
 fn lp_simulation_scales_down_shard_time() {
     if no_artifacts() {
         return;
