@@ -37,6 +37,13 @@ fn main() -> Result<()> {
         println!("{f}: schema-valid ({})", schema_line(&text));
         return Ok(());
     }
+    if let Some(f) = args.get("validate-trace") {
+        let text =
+            std::fs::read_to_string(f).with_context(|| format!("reading {f}"))?;
+        lookahead::trace::validate_trace_json(&text).with_context(|| format!("{f}"))?;
+        println!("{f}: valid Chrome trace-event JSON");
+        return Ok(());
+    }
 
     let artifacts = resolve_artifacts(&args)?;
     let spec = build_spec(&args)?;
@@ -54,18 +61,33 @@ fn main() -> Result<()> {
         if inprocess { "in-process".to_string() } else { format!("tcp {addr}") },
     );
 
-    let run = if inprocess {
+    let (run, trace_json) = if inprocess {
         run_one_inprocess(cfg.clone(), &sched)?
     } else if args.bool_or("external", false) {
         // drive a server someone else started (multi-node CI lane: the
         // topology under test spans processes this harness cannot spawn)
         wait_for_bind(&addr)?;
-        drive_tcp(&addr, &sched)?
+        let run = drive_tcp(&addr, &sched)?;
+        let tj = cfg.trace.then(|| scrape_trace(&addr)).transpose()?;
+        (run, tj)
     } else {
         run_one_tcp(&addr, cfg.clone(), &sched)?
     };
     let mut record = bench_json(args.u64_or("pr", 6), &spec, &sched, &run);
     attach_server_section(&mut record, &cfg);
+    if let Some(tj) = &trace_json {
+        if !matches!(tj, Json::Null) {
+            // per-phase span summary rides the BENCH record (additive
+            // section — the required schema paths are untouched)
+            if let Json::Obj(m) = &mut record {
+                m.insert("trace".to_string(), lookahead::trace::trace_section(tj));
+            }
+        }
+        if let Some(f) = args.get("trace-out") {
+            std::fs::write(f, tj.dump()).with_context(|| format!("writing {f}"))?;
+            eprintln!("trace dump written to {f}");
+        }
+    }
 
     // --sweep-time-slice 2,4,8: replay the same schedule against servers
     // that differ only in time_slice — the comparative numbers future
@@ -80,9 +102,9 @@ fn main() -> Result<()> {
                 .map_err(|_| anyhow!("bad --sweep-time-slice entry '{ts}'"))?;
             let swept = build_server_config(&args, &artifacts, Some(ts));
             let srun = if inprocess {
-                run_one_inprocess(swept, &sched)?
+                run_one_inprocess(swept, &sched)?.0
             } else {
-                run_one_tcp(&bump_port(&addr, 1 + i as u16)?, swept, &sched)?
+                run_one_tcp(&bump_port(&addr, 1 + i as u16)?, swept, &sched)?.0
             };
             let sj = bench_json(args.u64_or("pr", 6), &spec, &sched, &srun);
             sweeps.push(Json::obj(vec![
@@ -199,6 +221,17 @@ fn print_usage(args: &Args) {
               help: "extra comparative runs, e.g. 2,4,8" },
         Opt { name: "validate", default: None,
               help: "validate an existing BENCH_*.json and exit" },
+        Opt { name: "trace", default: Some("false"),
+              help: "record span-level timelines; a per-phase summary \
+                     rides the BENCH record under \"trace\"" },
+        Opt { name: "trace-sample", default: Some("1"),
+              help: "trace every Nth admitted session (1 = all)" },
+        Opt { name: "trace-buf", default: Some("65536"),
+              help: "bounded span-ring capacity per lane" },
+        Opt { name: "trace-out", default: None,
+              help: "write the scraped Chrome trace-event JSON here" },
+        Opt { name: "validate-trace", default: None,
+              help: "validate an existing Chrome trace dump and exit" },
     ];
     println!("{}", usage(args.program(),
         "serve_bench — open-loop serving benchmark (seeded Poisson load).",
@@ -261,30 +294,49 @@ fn build_server_config(args: &Args, artifacts: &str,
         .max_live(args.usize_or("max-live", 4))
         .kv_budget(args.usize_or("kv-budget", 0))
         .controller(args.str_or("controller", "static"))
+        .trace(args.bool_or("trace", false))
+        .trace_sample(args.u64_or("trace-sample", 1))
+        .trace_buf(args.usize_or("trace-buf", lookahead::trace::DEFAULT_TRACE_BUF))
         .build()
 }
 
-fn run_one_inprocess(cfg: ServerConfig, sched: &Schedule) -> Result<LoadRun> {
+fn run_one_inprocess(cfg: ServerConfig, sched: &Schedule)
+                     -> Result<(LoadRun, Option<Json>)> {
+    let trace_on = cfg.trace;
     let h = ServerHandle::start(cfg)?;
     let run = drive_inprocess(&h, sched);
+    let tj = trace_on.then(|| h.trace_json());
     h.shutdown();
-    Ok(run)
+    Ok((run, tj))
 }
 
 /// One TCP run: serve in a thread for exactly the schedule's connection
-/// count (+1 for the bind probe), drive, join.
-fn run_one_tcp(addr: &str, cfg: ServerConfig, sched: &Schedule) -> Result<LoadRun> {
-    let conns = sched.tcp_conns() + 1; // +1: the wait_for_bind probe
+/// count (+1 for the bind probe, +1 for the trace scrape), drive, join.
+fn run_one_tcp(addr: &str, cfg: ServerConfig, sched: &Schedule)
+               -> Result<(LoadRun, Option<Json>)> {
+    let trace_on = cfg.trace;
+    let conns = sched.tcp_conns() + 1 + usize::from(trace_on);
     let addr_owned = addr.to_string();
     let server =
         std::thread::spawn(move || serve_tcp(&addr_owned, cfg, Some(conns)));
     wait_for_bind(addr)?;
     let run = drive_tcp(addr, sched)?;
+    // scrape the span buffer BEFORE the server exits — this connection is
+    // counted in `conns` above
+    let tj = if trace_on { Some(scrape_trace(addr)?) } else { None };
     server
         .join()
         .map_err(|_| anyhow!("server thread panicked"))?
         .context("serve_tcp")?;
-    Ok(run)
+    Ok((run, tj))
+}
+
+/// One `{"trace": true}` control round-trip: returns the bare Chrome
+/// trace-event object (or `Json::Null` when the server traces nothing).
+fn scrape_trace(addr: &str) -> Result<Json> {
+    let line = lookahead::server::client_request(addr, r#"{"trace": true}"#)?;
+    let j = Json::parse(&line).map_err(|e| anyhow!("bad trace reply: {e}"))?;
+    Ok(j.get("trace").cloned().unwrap_or(Json::Null))
 }
 
 /// Poll until the listener accepts — exactly one successful probe

@@ -29,6 +29,7 @@ pub mod ngram;
 pub mod runtime;
 pub mod server;
 pub mod tokenizer;
+pub mod trace;
 pub mod util;
 pub mod workload;
 pub mod bench;

@@ -92,10 +92,24 @@ fn print_usage(args: &Args) {
               help: "prefill tier: commit prompt KV locally, then ship \
                      every session to a decode peer instead of stepping \
                      it (serve; needs --peers)" },
+        Opt { name: "trace", default: Some("false"),
+              help: "serve: record span-level timelines (scrape with \
+                     client --trace); client: scrape the Chrome trace dump" },
+        Opt { name: "trace-sample", default: Some("1"),
+              help: "trace every Nth admitted session (serve; 1 = all)" },
+        Opt { name: "trace-buf", default: Some("65536"),
+              help: "bounded span-ring capacity per lane; overflow drops \
+                     the oldest spans and counts them (serve)" },
+        Opt { name: "trace-out", default: None,
+              help: "write the Chrome trace-event JSON here on clean \
+                     exit (serve; pairs with --trace)" },
         Opt { name: "stream", default: Some("false"),
               help: "stream chunk lines before the final record (client)" },
         Opt { name: "report", default: Some("false"),
               help: "scrape the server metrics report as JSON (client)" },
+        Opt { name: "metrics-prom", default: Some("false"),
+              help: "scrape the server metrics in Prometheus text \
+                     exposition format (client)" },
         Opt { name: "devices", default: Some("4"), help: "LP simulated devices" },
     ];
     println!("{}", usage(args.program(),
@@ -198,6 +212,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .peer_addr(args.get("peer-addr").map(String::from))
         .heartbeat_ms(args.u64_or("heartbeat-ms", 100))
         .prefill_only(args.bool_or("prefill-only", false))
+        .trace(args.bool_or("trace", false))
+        .trace_sample(args.u64_or("trace-sample", 1))
+        .trace_buf(args.usize_or("trace-buf", lookahead::trace::DEFAULT_TRACE_BUF))
+        .trace_out(args.get("trace-out").map(String::from))
         .build();
     let max_conns = args.get("max-conns").and_then(|v| v.parse().ok());
     serve_tcp(&args.str_or("addr", "127.0.0.1:7878"), cfg, max_conns)
@@ -211,6 +229,29 @@ fn cmd_client(args: &Args) -> Result<()> {
     if args.bool_or("report", false) {
         let resp = lookahead::server::client_request(&addr, r#"{"report": true}"#)?;
         println!("{resp}");
+        return Ok(());
+    }
+    // --trace: scrape the server's Chrome trace-event dump (prints the
+    // bare trace object, so the output loads straight into Perfetto)
+    if args.bool_or("trace", false) {
+        let resp = lookahead::server::client_request(&addr, r#"{"trace": true}"#)?;
+        let j = Json::parse(&resp)
+            .map_err(|e| anyhow::anyhow!("bad trace reply: {e}"))?;
+        let trace = j.get("trace").cloned().unwrap_or(Json::Null);
+        println!("{}", trace.dump());
+        return Ok(());
+    }
+    // --metrics-prom: scrape the Prometheus text exposition (the reply
+    // wraps it in one JSON line; print the decoded inner text)
+    if args.bool_or("metrics-prom", false) {
+        let resp = lookahead::server::client_request(&addr,
+                                                     r#"{"metrics": "prometheus"}"#)?;
+        let j = Json::parse(&resp)
+            .map_err(|e| anyhow::anyhow!("bad metrics reply: {e}"))?;
+        match j.get("metrics_prom").and_then(Json::as_str) {
+            Some(text) => print!("{text}"),
+            None => println!("{resp}"),
+        }
         return Ok(());
     }
     let stream = args.bool_or("stream", false);

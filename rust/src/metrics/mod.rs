@@ -7,6 +7,14 @@ use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
 use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Reservoir cap for [`Histogram`]: below this every sample is stored and
+/// quantiles are exact; past it, seeded reservoir downsampling (Algorithm R)
+/// keeps a uniform subsample so a long-running server's per-round
+/// histograms (`batch_size`, `ttft_ms`, ...) stop growing. Count, sum,
+/// mean, min, and max stay exact regardless.
+pub const HIST_RESERVOIR_CAP: usize = 65_536;
 
 /// Typed percentile summary of one [`Histogram`] — what
 /// `ServerHandle::hist_summary` / `Registry::report_json` hand to the bench
@@ -21,6 +29,9 @@ pub struct HistSummary {
     pub p99: f64,
     pub min: f64,
     pub max: f64,
+    /// the source histogram exceeded [`HIST_RESERVOIR_CAP`]: quantiles are
+    /// reservoir estimates (count/mean/min/max remain exact).
+    pub overflowed: bool,
 }
 
 impl HistSummary {
@@ -33,6 +44,7 @@ impl HistSummary {
             ("p99", Json::num(self.p99)),
             ("min", Json::num(self.min)),
             ("max", Json::num(self.max)),
+            ("overflowed", Json::Bool(self.overflowed)),
         ])
     }
 }
@@ -48,41 +60,90 @@ pub fn hit_rate(hits: u64, misses: u64) -> f64 {
     }
 }
 
-/// Streaming histogram over f64 samples (exact quantiles via sorted store —
-/// sample counts here are small enough that exactness beats sketching).
-#[derive(Debug, Clone, Default)]
+/// Streaming histogram over f64 samples. Exact quantiles via a sorted store
+/// up to [`HIST_RESERVOIR_CAP`]; past that, seeded reservoir downsampling
+/// bounds memory on long-running servers (the reservoir Rng is fixed-seed,
+/// so two histograms fed the same stream summarize identically).
+#[derive(Debug, Clone)]
 pub struct Histogram {
     samples: Vec<f64>,
     sorted: bool,
+    /// total samples ever recorded (exact, unlike the reservoir's length).
+    seen: u64,
+    /// exact running sum over every recorded sample.
+    total: f64,
+    lo: f64,
+    hi: f64,
+    rng: Rng,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
 }
 
 impl Histogram {
     pub fn new() -> Self {
-        Self::default()
+        Histogram {
+            samples: Vec::new(),
+            sorted: false,
+            seen: 0,
+            total: 0.0,
+            lo: f64::INFINITY,
+            hi: f64::NEG_INFINITY,
+            rng: Rng::new(0x4849_5354), // "HIST" — deterministic reservoir
+        }
     }
 
     pub fn record(&mut self, v: f64) {
-        self.samples.push(v);
-        self.sorted = false;
+        self.seen += 1;
+        self.total += v;
+        self.lo = self.lo.min(v);
+        self.hi = self.hi.max(v);
+        if self.samples.len() < HIST_RESERVOIR_CAP {
+            self.samples.push(v);
+            self.sorted = false;
+        } else {
+            // Algorithm R: keep each of the `seen` samples with equal
+            // probability by overwriting a uniform slot
+            let j = self.rng.below(self.seen as usize);
+            if j < HIST_RESERVOIR_CAP {
+                self.samples[j] = v;
+                self.sorted = false;
+            }
+        }
     }
 
     pub fn record_duration(&mut self, d: Duration) {
         self.record(d.as_secs_f64() * 1e3); // ms
     }
 
+    /// Total samples ever recorded (exact — NOT the reservoir's size).
     pub fn count(&self) -> usize {
+        self.seen as usize
+    }
+
+    /// Samples currently held (== count until the reservoir cap is hit).
+    pub fn samples_held(&self) -> usize {
         self.samples.len()
     }
 
+    /// The reservoir cap was exceeded: quantiles are now estimates over a
+    /// uniform subsample (count/sum/mean/min/max stay exact).
+    pub fn overflowed(&self) -> bool {
+        self.seen as usize > self.samples.len()
+    }
+
     pub fn sum(&self) -> f64 {
-        self.samples.iter().sum()
+        self.total
     }
 
     pub fn mean(&self) -> f64 {
-        if self.samples.is_empty() {
+        if self.seen == 0 {
             return 0.0;
         }
-        self.sum() / self.samples.len() as f64
+        self.total / self.seen as f64
     }
 
     pub fn quantile(&mut self, q: f64) -> f64 {
@@ -110,16 +171,16 @@ impl Histogram {
     }
 
     pub fn min(&self) -> f64 {
-        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+        self.lo
     }
 
     pub fn max(&self) -> f64 {
-        self.samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+        self.hi
     }
 
     /// Typed percentile snapshot; all-zero when empty.
     pub fn summarize(&mut self) -> HistSummary {
-        if self.samples.is_empty() {
+        if self.seen == 0 {
             return HistSummary {
                 count: 0,
                 mean: 0.0,
@@ -128,6 +189,7 @@ impl Histogram {
                 p99: 0.0,
                 min: 0.0,
                 max: 0.0,
+                overflowed: false,
             };
         }
         HistSummary {
@@ -138,6 +200,7 @@ impl Histogram {
             p99: self.p99(),
             min: self.min(),
             max: self.max(),
+            overflowed: self.overflowed(),
         }
     }
 
@@ -219,6 +282,54 @@ impl Registry {
         );
         Json::obj(vec![("counters", counters), ("histograms", hists)])
     }
+
+    /// Render the registry in Prometheus text exposition format (the
+    /// `{"metrics": "prometheus"}` control line / `client --metrics-prom`):
+    /// counters and gauges as scalar samples, histograms as summaries —
+    /// quantile-labeled samples plus `_sum`/`_count`. Names are prefixed
+    /// `lookahead_` and sanitized to the metric-name charset.
+    pub fn prometheus(&mut self) -> String {
+        let mut s = String::new();
+        for (k, v) in &self.counters {
+            let name = prom_name(k);
+            let kind = if prom_is_gauge(k) { "gauge" } else { "counter" };
+            s.push_str(&format!("# TYPE {name} {kind}\n{name} {v}\n"));
+        }
+        let names: Vec<String> = self.histograms.keys().cloned().collect();
+        for k in names {
+            let name = prom_name(&k);
+            let h = self.histograms.get_mut(&k).unwrap();
+            let (sum, count) = (h.sum(), h.count());
+            let sm = h.summarize();
+            s.push_str(&format!("# TYPE {name} summary\n"));
+            for (q, v) in [("0.5", sm.p50), ("0.9", sm.p90), ("0.99", sm.p99)] {
+                s.push_str(&format!("{name}{{quantile=\"{q}\"}} {v}\n"));
+            }
+            s.push_str(&format!("{name}_sum {sum}\n"));
+            s.push_str(&format!("{name}_count {count}\n"));
+        }
+        s
+    }
+}
+
+/// `lookahead_`-prefixed metric name with non-charset bytes mapped to `_`.
+fn prom_name(raw: &str) -> String {
+    let mut s = String::with_capacity(raw.len() + 10);
+    s.push_str("lookahead_");
+    for c in raw.chars() {
+        s.push(if c.is_ascii_alphanumeric() || c == '_' { c } else { '_' });
+    }
+    s
+}
+
+/// The registry's counter map doubles as the gauge store
+/// ([`Registry::set`]); these name prefixes are the gauge-semantics
+/// entries, typed accordingly in the exposition output.
+fn prom_is_gauge(name: &str) -> bool {
+    ["queue_depth", "cancel_marks", "live_sessions", "suspended_sessions",
+     "prefix_entries", "trace_"]
+        .iter()
+        .any(|g| name.starts_with(g))
 }
 
 /// Per-request decode statistics — the paper's core measurables.
@@ -391,6 +502,78 @@ mod tests {
         // round-trips through the writer/parser
         let back = Json::parse(&j.dump()).unwrap();
         assert_eq!(back, j);
+    }
+
+    #[test]
+    fn histogram_reservoir_caps_memory_and_stays_exact_below_cap() {
+        // below the cap: exact, not overflowed
+        let mut h = Histogram::new();
+        for i in 1..=100 {
+            h.record(i as f64);
+        }
+        assert!(!h.overflowed());
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.samples_held(), 100);
+        assert!(!h.summarize().overflowed);
+
+        // past the cap: memory bounded, exact aggregates, sane quantiles
+        let n = HIST_RESERVOIR_CAP + 5_000;
+        let mut h = Histogram::new();
+        for i in 0..n {
+            h.record(i as f64);
+        }
+        assert!(h.overflowed());
+        assert_eq!(h.count(), n);
+        assert_eq!(h.samples_held(), HIST_RESERVOIR_CAP,
+                   "reservoir must stop growing at the cap");
+        let s = h.summarize();
+        assert!(s.overflowed);
+        assert_eq!(s.count, n);
+        assert!((s.mean - (n - 1) as f64 / 2.0).abs() < 1e-3,
+                "mean must stay exact under downsampling: {}", s.mean);
+        assert_eq!(s.min, 0.0);
+        assert_eq!(s.max, (n - 1) as f64);
+        assert!(s.p50 > 0.0 && s.p99 < n as f64);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.p99,
+                "estimated quantiles must stay ordered");
+
+        // the seeded reservoir is deterministic: same stream, same summary
+        let mut h2 = Histogram::new();
+        for i in 0..n {
+            h2.record(i as f64);
+        }
+        assert_eq!(h.summarize(), h2.summarize());
+    }
+
+    #[test]
+    fn prometheus_rendering_is_pinned() {
+        let mut r = Registry::new();
+        r.inc("responses_ok", 3);
+        r.set("queue_depth", 2); // gauge semantics
+        r.observe("ttft_ms", 4.0);
+        r.observe("ttft_ms", 8.0);
+        r.histograms.entry("empty_ms".to_string()).or_default();
+        let want = "\
+# TYPE lookahead_queue_depth gauge
+lookahead_queue_depth 2
+# TYPE lookahead_responses_ok counter
+lookahead_responses_ok 3
+# TYPE lookahead_empty_ms summary
+lookahead_empty_ms{quantile=\"0.5\"} 0
+lookahead_empty_ms{quantile=\"0.9\"} 0
+lookahead_empty_ms{quantile=\"0.99\"} 0
+lookahead_empty_ms_sum 0
+lookahead_empty_ms_count 0
+# TYPE lookahead_ttft_ms summary
+lookahead_ttft_ms{quantile=\"0.5\"} 4
+lookahead_ttft_ms{quantile=\"0.9\"} 4
+lookahead_ttft_ms{quantile=\"0.99\"} 4
+lookahead_ttft_ms_sum 12
+lookahead_ttft_ms_count 2
+";
+        assert_eq!(r.prometheus(), want);
+        // rendering must be idempotent (summarize sorts in place)
+        assert_eq!(r.prometheus(), want);
     }
 
     #[test]

@@ -30,6 +30,13 @@
 //! Liveness + load exchange is a one-shot connection:
 //! `{"kind":"ping"}` -> `{"kind":"pong","load":{"live":n,"parked":n,"prefill_only":b}}`.
 //!
+//! Cancellation is a one-shot connection too: a client cancel on the donor
+//! for an already-adopted session is forwarded as
+//! `{"kind":"cancel","xfer":"..."}`; the adopter marks its local session
+//! cancelled (`{"kind":"ok"}`, it stops within one decode step and its
+//! cancelled final record flows back through the normal reply tunnel) or
+//! reports the transfer unknown (`{"kind":"gone"}`).
+//!
 //! The commit point is the `adopted` ack, sent only after the whole-payload
 //! checksum verifies and local injection succeeds. Before it, any failure is
 //! retried with a resume offset and finally bounced (the donor re-parks the
@@ -193,7 +200,17 @@ impl NetLines {
 /// returned receiver yields the resumed session's replies — the listener
 /// pumps them into the donor-facing tunnel.
 pub trait Adopt: Send + Sync + 'static {
-    fn adopt(&self, meta: &Json, payload: Vec<u8>) -> Result<Receiver<Reply>, String>;
+    /// Inject the payload; on success returns the ADOPTER-LOCAL request id
+    /// (the handle a forwarded `cancel{xfer}` resolves against) plus the
+    /// receiver yielding the resumed session's replies.
+    fn adopt(
+        &self,
+        meta: &Json,
+        payload: Vec<u8>,
+    ) -> Result<(u64, Receiver<Reply>), String>;
+    /// Mark an adopter-local request cancelled (forwarded donor cancel);
+    /// the session stops within one decode step like a local cancel.
+    fn cancel_local(&self, id: u64);
     /// Load snapshot advertised in heartbeat `pong`s:
     /// `{"live":n,"parked":n,"prefill_only":b}`.
     fn load_json(&self) -> Json;
@@ -453,7 +470,9 @@ enum XferState {
     Partial(Vec<u8>),
     /// A connection is mid-receive; concurrent duplicate offers bounce.
     InFlight,
-    Adopted(Arc<RelayBuf>),
+    /// Committed: the adopter-local request id (forwarded-cancel target)
+    /// plus the reply buffer tunnels replay from.
+    Adopted(u64, Arc<RelayBuf>),
 }
 
 type TransferTable = Arc<Mutex<HashMap<u64, XferState>>>;
@@ -510,6 +529,7 @@ fn handle_peer_conn(
         }
         Some("offer") => handle_offer(&j, lines, gateway, metrics, table, stop),
         Some("attach") => handle_attach(&j, lines, table, stop),
+        Some("cancel") => handle_cancel(&j, lines, gateway, metrics, table),
         _ => {
             let reject = Json::obj(vec![
                 ("kind", Json::str("reject")),
@@ -550,8 +570,8 @@ fn handle_offer(
     let mut buf = {
         let mut tbl = table.lock().unwrap();
         match tbl.remove(&xfer) {
-            Some(XferState::Adopted(relay)) => {
-                tbl.insert(xfer, XferState::Adopted(relay.clone()));
+            Some(XferState::Adopted(local, relay)) => {
+                tbl.insert(xfer, XferState::Adopted(local, relay.clone()));
                 drop(tbl);
                 metrics.lock().unwrap().inc("net_dup_dropped", 1);
                 let dup = Json::obj(vec![("kind", Json::str("dup"))]);
@@ -642,8 +662,8 @@ fn handle_offer(
         }
     }
     let donor_id = meta.get("id").and_then(Json::as_i64).unwrap_or(0) as u64;
-    let rx = match gateway.adopt(&meta, buf) {
-        Ok(rx) => rx,
+    let (local_id, rx) = match gateway.adopt(&meta, buf) {
+        Ok(got) => got,
         Err(why) => {
             // Injection failed on a verified payload: retrying the same bytes
             // cannot help, so drop the slot and bounce the donor.
@@ -652,7 +672,10 @@ fn handle_offer(
         }
     };
     let relay = Arc::new(RelayBuf::default());
-    table.lock().unwrap().insert(xfer, XferState::Adopted(relay.clone()));
+    table
+        .lock()
+        .unwrap()
+        .insert(xfer, XferState::Adopted(local_id, relay.clone()));
     let pump = spawn_pump(rx, relay.clone(), donor_id);
     let adopted = Json::obj(vec![("kind", Json::str("adopted"))]);
     let ack = write_json(lines.get_mut(), &adopted);
@@ -671,7 +694,7 @@ fn handle_attach(
     let have = attach.get("have").and_then(Json::as_usize).unwrap_or(0);
     let relay = xfer.and_then(|x| {
         match table.lock().unwrap().get(&x) {
-            Some(XferState::Adopted(relay)) => Some(relay.clone()),
+            Some(XferState::Adopted(_, relay)) => Some(relay.clone()),
             _ => None,
         }
     });
@@ -680,6 +703,38 @@ fn handle_attach(
             let ok = Json::obj(vec![("kind", Json::str("ok"))]);
             write_json(lines.get_mut(), &ok)?;
             tunnel(lines, &relay, have, &stop)
+        }
+        None => {
+            let gone = Json::obj(vec![("kind", Json::str("gone"))]);
+            write_json(lines.get_mut(), &gone)
+        }
+    }
+}
+
+/// Forwarded donor cancel: resolve the transfer to its adopter-local id and
+/// mark it cancelled. The cancelled final record does NOT flow back on this
+/// one-shot connection — it rides the ordinary reply tunnel so the donor's
+/// relay sees exactly one terminal line per session.
+fn handle_cancel(
+    cancel: &Json,
+    mut lines: NetLines,
+    gateway: Arc<dyn Adopt>,
+    metrics: Arc<Mutex<Registry>>,
+    table: TransferTable,
+) -> io::Result<()> {
+    let local = cancel
+        .get("xfer")
+        .and_then(Json::as_str)
+        .and_then(parse_hex)
+        .and_then(|x| match table.lock().unwrap().get(&x) {
+            Some(XferState::Adopted(local, _)) => Some(*local),
+            _ => None,
+        });
+    match local {
+        Some(id) => {
+            gateway.cancel_local(id);
+            metrics.lock().unwrap().inc("net_cancels", 1);
+            write_json(lines.get_mut(), &Json::obj(vec![("kind", Json::str("ok"))]))
         }
         None => {
             let gone = Json::obj(vec![("kind", Json::str("gone"))]);
@@ -827,6 +882,27 @@ pub fn attach(addr: &str, xfer: u64, have: usize) -> io::Result<NetLines> {
         Some("ok") => Ok(lines),
         Some("gone") => Err(other("adopter no longer knows the transfer")),
         _ => Err(other(format!("unexpected attach reply: {resp}"))),
+    }
+}
+
+/// Donor-side cancel forwarding: ask the adopter at `addr` to cancel the
+/// session it adopted under transfer `xfer`. Ok(true) = the adopter marked
+/// it (the cancelled record arrives via the reply tunnel); Ok(false) = the
+/// adopter no longer knows the transfer.
+pub fn cancel_session(addr: &str, xfer: u64) -> io::Result<bool> {
+    let stream = connect(addr, READ_TICK)?;
+    let mut lines = NetLines::new(stream)?;
+    let frame = Json::obj(vec![
+        ("kind", Json::str("cancel")),
+        ("xfer", Json::str(hex(xfer))),
+    ]);
+    write_json(lines.get_mut(), &frame)?;
+    let resp = lines.next_deadline(FRAME_DEADLINE)?;
+    let j = Json::parse(&resp).map_err(|e| other(format!("bad cancel reply: {e}")))?;
+    match j.get("kind").and_then(Json::as_str) {
+        Some("ok") => Ok(true),
+        Some("gone") => Ok(false),
+        _ => Err(other(format!("unexpected cancel reply: {resp}"))),
     }
 }
 

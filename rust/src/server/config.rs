@@ -50,6 +50,22 @@ pub struct ServerConfig {
     pub peer_addr: Option<String>,
     /// Peer heartbeat/load-poll interval in ms (ignored without `peers`).
     pub heartbeat_ms: u64,
+    /// Structured span tracing (DESIGN.md §8). When true the server owns a
+    /// [`crate::trace::Tracer`] shared by every worker, the net transport,
+    /// and the dispatcher; spans are exported via the `{"trace": true}`
+    /// control line, `trace_out`, and per-request timelines. When false
+    /// (default) no tracer exists and the decode path allocates nothing.
+    pub trace: bool,
+    /// Trace every Nth admitted request (1 = all). Sampled-out sessions
+    /// carry `trace_id = 0` and cost one branch per would-be span.
+    pub trace_sample: u64,
+    /// Per-shard span ring capacity. The ring is bounded: overflow drops
+    /// the OLDEST span and bumps the `trace_dropped` counter — tracing
+    /// never blocks or grows without bound.
+    pub trace_buf: usize,
+    /// Write the Chrome trace-event JSON here on clean server shutdown
+    /// (`--trace-out`). None = export only via the control line.
+    pub trace_out: Option<String>,
     pub worker: WorkerConfig,
 }
 
@@ -67,6 +83,10 @@ impl Default for ServerConfig {
             peers: Vec::new(),
             peer_addr: None,
             heartbeat_ms: 100,
+            trace: false,
+            trace_sample: 1,
+            trace_buf: crate::trace::DEFAULT_TRACE_BUF,
+            trace_out: None,
             worker: WorkerConfig::default(),
         }
     }
@@ -210,6 +230,26 @@ impl ServerConfigBuilder {
 
     pub fn heartbeat_ms(mut self, ms: u64) -> Self {
         self.cfg.heartbeat_ms = ms;
+        self
+    }
+
+    pub fn trace(mut self, on: bool) -> Self {
+        self.cfg.trace = on;
+        self
+    }
+
+    pub fn trace_sample(mut self, every: u64) -> Self {
+        self.cfg.trace_sample = every;
+        self
+    }
+
+    pub fn trace_buf(mut self, cap: usize) -> Self {
+        self.cfg.trace_buf = cap;
+        self
+    }
+
+    pub fn trace_out(mut self, path: Option<String>) -> Self {
+        self.cfg.trace_out = path;
         self
     }
 

@@ -47,6 +47,10 @@ pub struct Request {
     /// moment a worker opens the session. On expiry the request finishes
     /// with `"finish":"deadline"` and a partial result.
     pub deadline_ms: Option<u64>,
+    /// attach a compact per-request span timeline to the final record
+    /// (requires server-side `--trace`; forces the session to be traced
+    /// even when `--trace-sample` would skip it).
+    pub trace: bool,
 }
 
 impl Default for Request {
@@ -66,6 +70,7 @@ impl Default for Request {
             controller: None,
             stream: false,
             deadline_ms: None,
+            trace: false,
         }
     }
 }
@@ -136,6 +141,11 @@ impl Request {
 
     pub fn deadline_ms(mut self, ms: u64) -> Self {
         self.deadline_ms = Some(ms);
+        self
+    }
+
+    pub fn trace(mut self, on: bool) -> Self {
+        self.trace = on;
         self
     }
 
@@ -211,6 +221,9 @@ impl Request {
         if let Some(v) = j.get("deadline_ms").and_then(Json::as_usize) {
             r.deadline_ms = Some(v as u64);
         }
+        if let Some(v) = j.get("trace").and_then(Json::as_bool) {
+            r.trace = v;
+        }
         if let Some(arr) = j.get("wng").and_then(Json::as_arr) {
             let v: Vec<usize> = arr.iter().filter_map(Json::as_usize).collect();
             if v.len() != 3 {
@@ -264,6 +277,10 @@ impl Request {
         }
         if let Some(ms) = self.deadline_ms {
             fields.push(("deadline_ms", Json::num(ms as f64)));
+        }
+        // emitted only when set, so untraced requests stay byte-identical
+        if self.trace {
+            fields.push(("trace", Json::Bool(true)));
         }
         Json::obj(fields).dump()
     }
@@ -359,6 +376,10 @@ pub struct Response {
     /// per-request n-gram speculation hit rate.
     pub pool_hit_rate: f64,
     pub error: Option<String>,
+    /// compact span timeline (`[{name, cat, ts_us, dur_us}, ..]`), present
+    /// only when the request set `"trace": true` on a tracing server —
+    /// absent otherwise so default outputs stay byte-identical.
+    pub timeline: Option<Json>,
 }
 
 impl Response {
@@ -378,6 +399,7 @@ impl Response {
             pool_shared: stats.pool_shared,
             pool_hit_rate: stats.pool_hit_rate(),
             error: None,
+            timeline: None,
         }
     }
 
@@ -397,6 +419,7 @@ impl Response {
             pool_shared: false,
             pool_hit_rate: 0.0,
             error: Some(msg),
+            timeline: None,
         }
     }
 
@@ -436,6 +459,9 @@ impl Response {
         if let Some(e) = &self.error {
             fields.push(("error", Json::str(e.clone())));
         }
+        if let Some(tl) = &self.timeline {
+            fields.push(("timeline", tl.clone()));
+        }
         Json::obj(fields).dump()
     }
 
@@ -466,6 +492,7 @@ impl Response {
             pool_shared: j.get("pool_shared").and_then(Json::as_bool).unwrap_or(false),
             pool_hit_rate: num("pool_hit_rate"),
             error: j.get("error").and_then(Json::as_str).map(str::to_string),
+            timeline: j.get("timeline").cloned(),
         })
     }
 }
@@ -663,6 +690,31 @@ mod tests {
         assert_eq!(j.get("seq").unwrap().as_usize(), Some(2));
         assert_eq!(j.get("delta").unwrap().as_str(), Some("ab\n"));
         assert_eq!(j.get("done").unwrap().as_bool(), Some(false));
+    }
+
+    #[test]
+    fn trace_flag_and_timeline_are_emitted_only_when_set() {
+        // default request: no "trace" key on the wire (byte-stability)
+        let r = Request::new("x");
+        assert!(!r.trace);
+        assert!(!r.to_json_line().contains("trace"));
+        let r = Request::new("x").trace(true);
+        let back = Request::from_json_line(0, &r.to_json_line()).unwrap();
+        assert!(back.trace);
+        // default response: no "timeline" key
+        let resp = Response::ok(1, "t".into(), &DecodeStats::default(), 0.0);
+        assert!(resp.timeline.is_none());
+        assert!(!resp.to_json_line().contains("timeline"));
+        let mut resp = resp;
+        resp.timeline = Some(Json::arr(vec![Json::obj(vec![
+            ("name", Json::str("prefill")),
+            ("cat", Json::str("prefill")),
+            ("ts_us", Json::num(1.0)),
+            ("dur_us", Json::num(2.0)),
+        ])]));
+        let back = Response::from_json_line(&resp.to_json_line()).unwrap();
+        let tl = back.timeline.expect("timeline must survive the wire");
+        assert_eq!(tl.as_arr().map(<[Json]>::len), Some(1));
     }
 
     #[test]

@@ -277,6 +277,10 @@ pub struct MigratedSession {
     /// controller bookkeeping travelling with the session (None = the
     /// session is not controller-tracked).
     pub ctl: Option<CtlCarry>,
+    /// tracing identity minted at admission (0 = untraced). Travels with
+    /// the session across workers AND processes so a migrated session's
+    /// spans stitch into one timeline (DESIGN.md §8).
+    pub trace_id: u64,
 }
 
 impl MigratedSession {
@@ -331,6 +335,12 @@ impl MigratedSession {
             }
             fields.push(("ctl", Json::obj(c)));
         }
+        if self.trace_id != 0 {
+            // hex string, not a JSON number: trace ids pack the donor pid
+            // into the high 32 bits and would lose precision above 2^53 in
+            // an f64-backed number field.
+            fields.push(("trace_id", Json::str(crate::trace::hex_id(self.trace_id))));
+        }
         Json::obj(fields)
     }
 
@@ -380,6 +390,11 @@ impl MigratedSession {
             deadline,
             snap,
             ctl,
+            trace_id: meta
+                .get("trace_id")
+                .and_then(Json::as_str)
+                .and_then(crate::trace::parse_hex_id)
+                .unwrap_or(0),
         }
     }
 }
@@ -751,6 +766,7 @@ mod tests {
                 pool: crate::ngram::PoolHandle::none(),
             },
             ctl: None,
+            trace_id: 0,
         }
     }
 
@@ -864,6 +880,8 @@ mod tests {
             tenant: Some("acme".into()),
             adaptive: true,
         });
+        // a trace id above 2^53 must survive the f64-backed JSON layer
+        m.trace_id = (0xdead_beef_u64 << 32) | 7;
         let meta = m.wire_meta();
         // the donor-side client id travels in the meta (reply rewriting)
         assert_eq!(meta.get("id").and_then(Json::as_usize), Some(42));
@@ -886,11 +904,14 @@ mod tests {
         assert_eq!(ctl.prompt_ids, vec![5, 6, 7]);
         assert_eq!(ctl.tenant.as_deref(), Some("acme"));
         assert!(ctl.adaptive);
-        // a minimal meta (non-streaming, no ctl) also rebuilds cleanly
+        assert_eq!(back.trace_id, (0xdead_beef_u64 << 32) | 7);
+        // a minimal meta (non-streaming, no ctl, untraced) also rebuilds
         let lean = mig(0, 8).wire_meta();
+        assert!(lean.get("trace_id").is_none(), "untraced ships no id");
         let back = MigratedSession::from_wire(&lean, mig(0, 0).snap, 0, 1);
         assert!(!back.stream);
         assert!(back.dec.pending().is_empty());
         assert!(back.deadline.is_none() && back.ctl.is_none());
+        assert_eq!(back.trace_id, 0);
     }
 }

@@ -32,6 +32,7 @@ use crate::server::request::{Reply, Request, Response, StreamChunk};
 use crate::server::scheduler::{CancelSet, MigratedSession, RebalanceHub,
                                RemoteDonation, Scheduler, WorkerLoad};
 use crate::server::worker::Worker;
+use crate::trace::Tracer;
 use crate::util::json::Json;
 
 /// Decision logic of the cross-worker rebalancer: equalize per-worker
@@ -134,7 +135,15 @@ pub struct ServerHandle {
     /// heartbeat-maintained remote peer table (None without
     /// `ServerConfig::peers`).
     pub peers: Option<Arc<Peers>>,
+    /// span recorder shared by workers, the net layer, and the TCP front
+    /// (None unless `ServerConfig::trace` is on).
+    pub tracer: Option<Arc<Tracer>>,
     cancels: Arc<CancelSet>,
+    /// donor ids of sessions adopted away over the wire, mapped to the
+    /// owning peer: `cancel(id)` forwards the stop signal there so it still
+    /// lands within one decode step. Entries are removed when the relay
+    /// delivers the final record.
+    remote_cancels: Arc<Mutex<HashMap<u64, (String, u64)>>>,
     worker_joins: Vec<std::thread::JoinHandle<()>>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     rebalancer: Option<std::thread::JoinHandle<()>>,
@@ -174,6 +183,15 @@ impl ServerHandle {
         let rebalance = ((cfg.rebalance && cfg.workers > 1) || net_on)
             .then(|| Arc::new(RebalanceHub::new(cfg.workers.max(1))));
         let next_id = Arc::new(AtomicU64::new(1));
+        // one span recorder spans workers, the net layer, and the TCP
+        // front; when tracing is off every instrumentation site sees None
+        // and the hot path stays untouched
+        let tracer = cfg.trace.then(|| {
+            Arc::new(Tracer::new(cfg.workers.max(1), cfg.trace_sample.max(1),
+                                 cfg.trace_buf))
+        });
+        let remote_cancels: Arc<Mutex<HashMap<u64, (String, u64)>>> =
+            Arc::new(Mutex::new(HashMap::new()));
 
         // peer listener binds BEFORE workers spawn so a bad --peer-addr
         // fails fast instead of leaking worker threads
@@ -190,6 +208,8 @@ impl ServerHandle {
                 ngram_caches: ngram_caches.clone(),
                 metrics: metrics.clone(),
                 prefill_only: cfg.worker.prefill_only,
+                cancels: cancels.clone(),
+                tracer: tracer.clone(),
             });
             let listener =
                 net::spawn_listener(addr, gateway, metrics.clone(), net_stop.clone())
@@ -211,9 +231,10 @@ impl ServerHandle {
             let metrics_c = metrics.clone();
             let prefix_c = prefix_cache.clone();
             let hub_c = rebalance.clone();
+            let tracer_c = tracer.clone();
             worker_joins.push(std::thread::spawn(move || {
                 match Worker::start(wid, wcfg, caches_c, cancels_c, Some(metrics_c),
-                                    prefix_c, hub_c.clone()) {
+                                    prefix_c, hub_c.clone(), tracer_c) {
                     Ok(w) => w.run(sched_c, tx_c),
                     Err(e) => {
                         // a worker that never ran must not stay a rebalance
@@ -258,6 +279,8 @@ impl ServerHandle {
                 cuts: net_cuts.clone(),
                 stop: net_stop.clone(),
                 replies: tx.clone(),
+                tracer: tracer.clone(),
+                remote_cancels: remote_cancels.clone(),
             }));
         }
         drop(tx);
@@ -393,7 +416,9 @@ impl ServerHandle {
             prefix_cache,
             rebalance,
             peers,
+            tracer,
             cancels,
+            remote_cancels,
             worker_joins,
             dispatcher: Some(dispatcher),
             rebalancer,
@@ -447,6 +472,11 @@ impl ServerHandle {
         // cancel marks still outstanding — returns to 0 at quiescence
         // (every retirement path sweeps its mark)
         m.set("cancel_marks", self.cancels.len() as u64);
+        if let Some(t) = &self.tracer {
+            let (recorded, dropped) = t.stats();
+            m.set("trace_spans", recorded);
+            m.set("trace_dropped", dropped);
+        }
     }
 
     /// Server metrics report including per-cache n-gram counters and the
@@ -482,6 +512,25 @@ impl ServerHandle {
         self.metrics.lock().unwrap().summary(name)
     }
 
+    /// Chrome trace-event JSON of everything the tracer holds (load the
+    /// dump into Perfetto / `chrome://tracing`); `Json::Null` when tracing
+    /// is off — also served over TCP via the `{"trace": true}` control
+    /// line.
+    pub fn trace_json(&self) -> Json {
+        match &self.tracer {
+            Some(t) => t.chrome_json(),
+            None => Json::Null,
+        }
+    }
+
+    /// Prometheus text exposition of the serving registry (gauges synced
+    /// first) — also served over TCP via the `{"metrics": "prometheus"}`
+    /// control line.
+    pub fn prometheus(&self) -> String {
+        self.sync_gauges();
+        self.metrics.lock().unwrap().prometheus()
+    }
+
     /// Submit a request; returns the per-request reply stream (chunks for
     /// `stream: true` requests, then the final record).
     pub fn submit(&self, mut req: Request) -> Result<ResponseStream> {
@@ -510,6 +559,14 @@ impl ServerHandle {
                 let _ = ch.send(Reply::Done(Response::cancelled(id)));
             }
             return true;
+        }
+        // The session may have been adopted by a remote peer: forward the
+        // stop signal there (the adopter marks its own CancelSet, so the
+        // cancel still lands within one decode step); the relayed final
+        // record then sweeps the local bookkeeping like any other reply.
+        let remote = self.remote_cancels.lock().unwrap().get(&id).cloned();
+        if let Some((addr, xfer)) = remote {
+            let _ = net::cancel_session(&addr, xfer);
         }
         // Mark while holding the pending lock: the dispatcher removes the
         // pending entry (same lock) before clearing marks, so a mark set
@@ -590,10 +647,14 @@ struct NetGateway {
     ngram_caches: Option<Arc<NgramCacheRegistry>>,
     metrics: Arc<Mutex<Registry>>,
     prefill_only: bool,
+    cancels: Arc<CancelSet>,
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl net::Adopt for NetGateway {
-    fn adopt(&self, meta: &Json, payload: Vec<u8>) -> Result<Receiver<Reply>, String> {
+    fn adopt(&self, meta: &Json, payload: Vec<u8>)
+             -> Result<(u64, Receiver<Reply>), String> {
+        let t0 = self.tracer.as_ref().map(|t| t.now_us());
         let caches = self.ngram_caches.as_deref();
         let snap = SessionSnapshot::from_bytes_with(&payload, caches)
             .map_err(|e| format!("snapshot decode failed: {e}"))?;
@@ -607,16 +668,32 @@ impl net::Adopt for NetGateway {
             .ok_or_else(|| "no alive worker to adopt the session".to_string())?;
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let m = MigratedSession::from_wire(meta, snap, to, id);
+        let trace_id = m.trace_id;
         let (tx, rx) = channel();
         self.pending.lock().unwrap().insert(id, tx);
         if self.hub.transfer(m).is_err() {
             self.pending.lock().unwrap().remove(&id);
             return Err("adopting worker exited during hand-off".to_string());
         }
+        if let (Some(t), Some(t0)) = (&self.tracer, t0) {
+            // net-lane span; the donor's trace_id came over the wire, so a
+            // merged dump stitches both processes under one id
+            t.push(t.span(t.net_tid(), trace_id, "adopt", "net", t0)
+                .arg("bytes", payload.len().to_string()));
+        }
         let mut reg = self.metrics.lock().unwrap();
         reg.inc("net_adopted", 1);
         reg.observe("net_transfer_bytes", payload.len() as f64);
-        Ok(rx)
+        Ok((id, rx))
+    }
+
+    fn cancel_local(&self, id: u64) {
+        // mirror `ServerHandle::cancel`: mark only ids still pending (the
+        // dispatcher sweeps the mark on Done under the same lock)
+        let pending = self.pending.lock().unwrap();
+        if pending.contains_key(&id) {
+            self.cancels.request(id);
+        }
     }
 
     fn load_json(&self) -> Json {
@@ -641,6 +718,8 @@ struct NetTransport {
     cuts: Arc<Mutex<Vec<usize>>>,
     stop: Arc<AtomicBool>,
     replies: Sender<Reply>,
+    tracer: Option<Arc<Tracer>>,
+    remote_cancels: Arc<Mutex<HashMap<u64, (String, u64)>>>,
 }
 
 /// Outbound half of the wire hand-off: drains [`RemoteDonation`]s, streams
@@ -660,7 +739,17 @@ fn spawn_transport(t: NetTransport) -> std::thread::JoinHandle<()> {
             let meta = m.wire_meta();
             let payload = m.snap.to_bytes();
             let opts = TransferOpts { cuts: t.cuts.clone(), ..Default::default() };
+            let t0 = t.tracer.as_ref().map(|tr| tr.now_us());
             let report = net::send_session(&addr, &meta, &payload, &opts);
+            if let (Some(tr), Some(t0)) = (&t.tracer, t0) {
+                let outcome = match &report.outcome {
+                    SendOutcome::Adopted(_) => "adopted",
+                    SendOutcome::Bounced(_) => "bounced",
+                };
+                tr.push(tr.span(tr.net_tid(), m.trace_id, "transfer", "net", t0)
+                    .arg("bytes", payload.len().to_string())
+                    .arg("outcome", outcome));
+            }
             if report.resumes > 0 {
                 t.metrics.lock().unwrap().inc("net_resumes", report.resumes);
             }
@@ -674,13 +763,23 @@ fn spawn_transport(t: NetTransport) -> std::thread::JoinHandle<()> {
                     // the session now lives on the peer — drop our copy and
                     // relay the adopter's replies to the waiting client
                     let donor_id = m.id;
+                    let trace_id = m.trace_id;
                     let xfer = fnv64(&payload);
+                    // register for cancel forwarding BEFORE the relay runs:
+                    // a client cancel between now and the final record must
+                    // reach the adopter, not a worker that no longer holds
+                    // the session
+                    t.remote_cancels.lock().unwrap().insert(donor_id,
+                                                            (addr.clone(), xfer));
                     let replies_c = t.replies.clone();
                     let metrics_c = t.metrics.clone();
                     let stop_c = t.stop.clone();
+                    let tracer_c = t.tracer.clone();
+                    let rc_c = t.remote_cancels.clone();
                     t.relay_joins.lock().unwrap().push(std::thread::spawn(move || {
                         relay_replies(lines, &addr, xfer, donor_id, replies_c,
-                                      metrics_c, stop_c);
+                                      metrics_c, stop_c, tracer_c, trace_id);
+                        rc_c.lock().unwrap().remove(&donor_id);
                     }));
                 }
                 SendOutcome::Bounced(why) => {
@@ -717,9 +816,19 @@ const ATTACH_ATTEMPTS: usize = 5;
 /// re-attaches with the count of lines already forwarded, so the adopter
 /// replays only what was lost — exhausted retries or shutdown synthesize an
 /// error record so the client never hangs.
+#[allow(clippy::too_many_arguments)]
 fn relay_replies(mut lines: net::NetLines, addr: &str, xfer: u64, donor_id: u64,
                  replies: Sender<Reply>, metrics: Arc<Mutex<Registry>>,
-                 stop: Arc<AtomicBool>) {
+                 stop: Arc<AtomicBool>, tracer: Option<Arc<Tracer>>,
+                 trace_id: u64) {
+    let relay_t0 = tracer.as_ref().map(|t| t.now_us());
+    let end_span = |have: usize, outcome: &str| {
+        if let (Some(t), Some(t0)) = (&tracer, relay_t0) {
+            t.push(t.span(t.net_tid(), trace_id, "relay", "net", t0)
+                .arg("lines", have.to_string())
+                .arg("outcome", outcome));
+        }
+    };
     let mut have: usize = 0;
     'relay: loop {
         loop {
@@ -727,6 +836,7 @@ fn relay_replies(mut lines: net::NetLines, addr: &str, xfer: u64, donor_id: u64,
                 Ok(Some(l)) => l,
                 Ok(None) => {
                     if stop.load(Ordering::Relaxed) {
+                        end_span(have, "shutdown");
                         fail_relay(donor_id, &replies, "server shut down mid-relay");
                         return;
                     }
@@ -735,6 +845,7 @@ fn relay_replies(mut lines: net::NetLines, addr: &str, xfer: u64, donor_id: u64,
                 Err(_) => break, // tunnel dropped: re-attach below
             };
             if let Ok(resp) = Response::from_json_line(&line) {
+                end_span(have, "done");
                 let _ = replies.send(Reply::Done(resp));
                 return;
             }
@@ -748,12 +859,18 @@ fn relay_replies(mut lines: net::NetLines, addr: &str, xfer: u64, donor_id: u64,
                 break;
             }
             std::thread::sleep(Duration::from_millis(50));
+            let a0 = tracer.as_ref().map(|t| t.now_us());
             if let Ok(nl) = net::attach(addr, xfer, have) {
                 lines = nl;
+                if let (Some(t), Some(t0)) = (&tracer, a0) {
+                    t.push(t.span(t.net_tid(), trace_id, "attach", "net", t0)
+                        .arg("have", have.to_string()));
+                }
                 metrics.lock().unwrap().inc("net_attach_resumes", 1);
                 continue 'relay;
             }
         }
+        end_span(have, "lost");
         fail_relay(donor_id, &replies, "lost contact with adopting peer");
         return;
     }
@@ -766,6 +883,7 @@ fn fail_relay(donor_id: u64, replies: &Sender<Reply>, why: &str) {
 /// TCP front: JSON-lines protocol, one connection per client.
 /// Runs until `max_conns` connections have been served (None = forever).
 pub fn serve_tcp(addr: &str, cfg: ServerConfig, max_conns: Option<usize>) -> Result<()> {
+    let trace_out = cfg.trace_out.clone();
     let handle = Arc::new(ServerHandle::start(cfg)?);
     let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
     info!("server", "listening on {addr}");
@@ -791,6 +909,15 @@ pub fn serve_tcp(addr: &str, cfg: ServerConfig, max_conns: Option<usize>) -> Res
         let _ = j.join();
     }
     if let Ok(h) = Arc::try_unwrap(handle) {
+        // flush the Chrome trace dump on a clean exit (a SIGTERM'd server
+        // never reaches this — scrape `{"trace": true}` instead)
+        if let Some(path) = &trace_out {
+            if h.tracer.is_some() {
+                std::fs::write(path, h.trace_json().dump())
+                    .with_context(|| format!("writing trace dump {path}"))?;
+                info!("server", "trace dump written to {path}");
+            }
+        }
         h.shutdown();
     }
     Ok(())
@@ -827,6 +954,31 @@ fn handle_conn(stream: TcpStream, handle: &ServerHandle) -> Result<()> {
             // the bench harness and operators scrape this.
             if j.get("report").and_then(Json::as_bool) == Some(true) {
                 let rep = Json::obj(vec![("report", handle.report_json())]);
+                out.write_all(rep.dump().as_bytes())?;
+                out.write_all(b"\n")?;
+                out.flush()?;
+                continue;
+            }
+            // control line: {"trace": true} — one-line Chrome trace-event
+            // dump of everything the tracer holds (null when tracing is
+            // off); how a bench harness or operator scrapes the timeline
+            // without waiting for the server to exit. A request carrying
+            // the per-request "trace" flag also has "prompt" — not this.
+            if j.get("trace").and_then(Json::as_bool) == Some(true)
+                && j.get("prompt").is_none()
+            {
+                let rep = Json::obj(vec![("trace", handle.trace_json())]);
+                out.write_all(rep.dump().as_bytes())?;
+                out.write_all(b"\n")?;
+                out.flush()?;
+                continue;
+            }
+            // control line: {"metrics": "prometheus"} — text exposition of
+            // the serving registry, wrapped in one JSON line so it rides
+            // the same protocol as everything else.
+            if j.get("metrics").and_then(Json::as_str) == Some("prometheus") {
+                let rep =
+                    Json::obj(vec![("metrics_prom", Json::str(handle.prometheus()))]);
                 out.write_all(rep.dump().as_bytes())?;
                 out.write_all(b"\n")?;
                 out.flush()?;

@@ -50,6 +50,7 @@ use crate::server::request::{Reply, Request, Response, StreamChunk};
 use crate::server::scheduler::{CancelSet, Directive, MigratedSession, Popped,
                                PopOutcome, RebalanceHub, Scheduler};
 use crate::tokenizer::{ByteTokenizer, Utf8StreamDecoder};
+use crate::trace::{self, Tracer};
 
 /// How long an idle worker waits in [`Scheduler::pop_timeout`] before
 /// re-checking its rebalance-hub inbox for adopted sessions.
@@ -71,6 +72,12 @@ struct LiveSession<'rt> {
     /// controller tracking (None = unknown engine method: never observed,
     /// never switched).
     ctl: Option<SessCtl>,
+    /// tracing identity minted at admission (0 = untraced / sampled out);
+    /// guards every per-session span recording site.
+    trace_id: u64,
+    /// bounded per-request timeline copy (Some only when the request set
+    /// `"trace": true` on a tracing server); attached to the final record.
+    tl: Option<Vec<trace::Span>>,
 }
 
 /// Controller bookkeeping on a live session: the engine level it currently
@@ -98,12 +105,19 @@ struct ParkedSession {
     /// controller bookkeeping carried across the park (the engine level
     /// itself is re-derived from the snapshot on revive).
     ctl: Option<CtlCarry>,
+    /// tracing identity, carried across the park (0 = untraced).
+    trace_id: u64,
+    /// per-request timeline copy, carried across the park.
+    tl: Option<Vec<trace::Span>>,
 }
 
 impl ParkedSession {
     /// Repackage for a cross-worker hand-off: the revived snapshot replaces
     /// the local [`KvHandle`], everything else travels as-is.
     fn into_migrated(self, to: usize, snap: SessionSnapshot) -> MigratedSession {
+        // the trace_id migrates (spans on both sides stitch under it); the
+        // per-request timeline copy does not — it stays a best-effort local
+        // view, and the global tracer still holds every span
         MigratedSession {
             to,
             id: self.id,
@@ -114,6 +128,7 @@ impl ParkedSession {
             deadline: self.deadline,
             snap,
             ctl: self.ctl,
+            trace_id: self.trace_id,
         }
     }
 
@@ -122,10 +137,13 @@ impl ParkedSession {
     /// keeps this the single place a migration's fields map back.
     fn from_migrated(m: MigratedSession, kv: &mut KvManager) -> ParkedSession {
         let MigratedSession {
-            to: _, id, stream, queued_ms, seq, dec, deadline, snap, ctl,
+            to: _, id, stream, queued_ms, seq, dec, deadline, snap, ctl, trace_id,
         } = m;
         let handle = kv.park(snap);
-        ParkedSession { id, stream, queued_ms, seq, dec, deadline, handle, ctl }
+        ParkedSession {
+            id, stream, queued_ms, seq, dec, deadline, handle, ctl, trace_id,
+            tl: None,
+        }
     }
 }
 
@@ -145,6 +163,12 @@ pub struct Worker {
     /// cross-worker rebalance rendezvous: load reports out, donation
     /// directives and adopted sessions in. None = rebalancing disabled.
     hub: Option<Arc<RebalanceHub>>,
+    /// the prefix trie this worker's runtime consults (kept to tell a
+    /// prefix-fork prefill from a cold one in the prefill span).
+    prefix: Option<Arc<PrefixCache>>,
+    /// span recorder shared across the server (None = tracing disabled:
+    /// zero span allocation on the decode path).
+    tracer: Option<Arc<Tracer>>,
 }
 
 impl Worker {
@@ -153,16 +177,19 @@ impl Worker {
                  cancels: Arc<CancelSet>,
                  metrics: Option<Arc<Mutex<Registry>>>,
                  prefix: Option<Arc<PrefixCache>>,
-                 hub: Option<Arc<RebalanceHub>>) -> Result<Worker> {
+                 hub: Option<Arc<RebalanceHub>>,
+                 tracer: Option<Arc<Tracer>>) -> Result<Worker> {
         let manifest = Manifest::load(&cfg.artifacts_dir)?;
         let client = cpu_client()?;
         let rt = ModelRuntime::load(&client, &manifest, &cfg.model)?;
-        if cfg.prefix_cache {
+        let prefix = if cfg.prefix_cache {
             // server-shared trie when one was handed down, else private
-            rt.set_prefix_cache(Some(
-                prefix.unwrap_or_else(|| Arc::new(PrefixCache::with_defaults())),
-            ));
-        }
+            let pc = prefix.unwrap_or_else(|| Arc::new(PrefixCache::with_defaults()));
+            rt.set_prefix_cache(Some(pc.clone()));
+            Some(pc)
+        } else {
+            None
+        };
         Ok(Worker {
             id,
             cfg,
@@ -173,7 +200,21 @@ impl Worker {
             cancels,
             metrics,
             hub,
+            prefix,
+            tracer,
         })
+    }
+
+    /// Record a span into the global tracer and, when the session asked
+    /// for a per-request timeline, into its bounded local copy.
+    fn record(tracer: &Option<Arc<Tracer>>, tl: &mut Option<Vec<trace::Span>>,
+              span: trace::Span) {
+        if let Some(tl) = tl {
+            trace::timeline_push(tl, span.clone());
+        }
+        if let Some(t) = tracer {
+            t.push(span);
+        }
     }
 
     /// The shared draft runtime for `name`, loading (and caching) it on
@@ -273,13 +314,23 @@ impl Worker {
     /// Open a session for a popped request. Engines are cached per
     /// (method, wng) key; sessions never borrow the engine, so one cached
     /// engine can back several interleaved sessions.
+    #[allow(clippy::too_many_arguments)]
     fn open<'rt>(cfg: &WorkerConfig, manifest: &Manifest, rt: &'rt ModelRuntime,
                  engines: &mut HashMap<String, Box<dyn Decoder>>,
                  drafts: &mut HashMap<String, Rc<ModelRuntime>>,
                  caches: &Option<Arc<NgramCacheRegistry>>, tok: &ByteTokenizer,
+                 prefix: &Option<Arc<PrefixCache>>,
+                 tracer: &Option<Arc<Tracer>>, wid: usize,
                  popped: Popped) -> Result<LiveSession<'rt>, (u64, String)> {
         let req = popped.req;
         let rid = req.id;
+        // tracing identity: minted per admission, 0 when sampled out; a
+        // per-request "trace": true forces the mint past the sampler
+        let (trace_id, t_admit) = match tracer {
+            Some(t) => (t.mint(req.trace), t.now_us()),
+            None => (0, 0),
+        };
+        let mut tl = (trace_id != 0 && req.trace).then(Vec::new);
         let key = Self::engine_key(&req);
         if !engines.contains_key(&key) {
             let engine = Self::make_engine(cfg, manifest, rt, drafts, &req)
@@ -289,12 +340,38 @@ impl Worker {
         let engine = engines.get(&key).unwrap();
         let ids = Self::encode_prompt(tok, rt, &req.prompt);
         let pool = Self::bind_pool_for(cfg, caches, &req, engine.as_ref());
+        if let Some(t) = tracer {
+            if trace_id != 0 {
+                let span = t
+                    .span(wid, trace_id, "admit", "session", t_admit)
+                    .arg("queued_ms", format!("{:.2}", popped.queued_ms))
+                    .arg("method", req.method.clone());
+                Self::record(tracer, &mut tl, span);
+            }
+        }
         // prefix-trie namespace for the prefill inside begin(): tenants
         // must never fork (or time) each other's cached prefixes
         rt.set_prefix_namespace(req.tenant.as_deref());
+        let pf_hits = (trace_id != 0)
+            .then(|| prefix.as_ref().map_or(0, |p| p.stats().hits));
+        let t_prefill = tracer.as_ref().map_or(0, |t| t.now_us());
         let sess = engine
             .begin(rt, &ids, &req.gen_params(), pool)
             .map_err(|e| (rid, e.to_string()))?;
+        if let Some(t) = tracer {
+            if trace_id != 0 {
+                // a trie hit during begin() means this prefill forked a
+                // stored snapshot instead of running cold
+                let forked = pf_hits.is_some_and(|h0| {
+                    prefix.as_ref().map_or(0, |p| p.stats().hits) > h0
+                });
+                let span = t
+                    .span(wid, trace_id, "prefill", "prefill", t_prefill)
+                    .arg("mode", if forked { "fork" } else { "cold" })
+                    .arg("prompt_tokens", ids.len().to_string());
+                Self::record(tracer, &mut tl, span);
+            }
+        }
         // controller tracking: only greedy sessions may ever switch (all
         // five engines are byte-exact under greedy; sampled engines consume
         // per-engine RNG streams a switch would disturb)
@@ -321,6 +398,8 @@ impl Worker {
             error: None,
             rounds: 0,
             ctl,
+            trace_id,
+            tl,
         })
     }
 
@@ -409,16 +488,24 @@ impl Worker {
     /// checked between fused rounds, so a cancel or deadline inside a
     /// batched round still lands within one decode step. Retirement is the
     /// caller's job (sweep on `finished()`/`error`).
+    #[allow(clippy::too_many_arguments)]
     fn batched_round<'rt>(rt: &'rt ModelRuntime, live: &mut [LiveSession<'rt>],
                           slice: usize, tok: &ByteTokenizer, cancels: &CancelSet,
                           replies: &Sender<Reply>,
-                          metrics: &Option<Arc<Mutex<Registry>>>) {
+                          metrics: &Option<Arc<Mutex<Registry>>>,
+                          tracer: &Option<Arc<Tracer>>, wid: usize) {
         // contiguous runs of one group key; stable per-key arrival order.
         // group_key allocates, so keys are computed once for the sort
         // (cached) and once more for the run scan — 2N small allocations
         // per round, not O(N log N).
+        let t_plan = tracer.as_ref().map(|t| t.now_us());
         live.sort_by_cached_key(Self::group_key);
         let keys: Vec<Option<String>> = live.iter().map(Self::group_key).collect();
+        if let (Some(t), Some(t0)) = (tracer, t_plan) {
+            // worker-lane span (trace_id 0): batch planning is cross-session
+            t.push(t.span(wid, 0, "plan", "decode", t0)
+                .arg("sessions", live.len().to_string()));
+        }
         let mut at = 0;
         while at < live.len() {
             let mut end = at + 1;
@@ -430,8 +517,15 @@ impl Worker {
                     Self::drive(ls, slice, tok, cancels, replies);
                 }
             } else {
+                let t_launch = tracer.as_ref().map(|t| t.now_us());
                 Self::drive_group(rt, &mut live[at..end], slice, tok, cancels,
                                   replies, metrics);
+                if let (Some(t), Some(t0)) = (tracer, t_launch) {
+                    t.push(t.span(wid, 0, "launch", "decode", t0)
+                        .arg("group", keys[at].clone().unwrap_or_default())
+                        .arg("batch", (end - at).to_string())
+                        .arg("slice", slice.to_string()));
+                }
             }
             at = end;
         }
@@ -551,7 +645,8 @@ impl Worker {
                           caches: &Option<Arc<NgramCacheRegistry>>,
                           controller: &mut dyn Controller,
                           live: &mut [LiveSession<'rt>],
-                          metrics: &Option<Arc<Mutex<Registry>>>) {
+                          metrics: &Option<Arc<Mutex<Registry>>>,
+                          tracer: &Option<Arc<Tracer>>, wid: usize) {
         for ls in live.iter_mut() {
             let target = {
                 let Some(ctl) = ls.ctl.as_mut() else { continue };
@@ -584,23 +679,41 @@ impl Worker {
                                                  ctl.carry.tenant.as_deref()),
                 };
                 Self::bump(metrics, "ctl_decisions");
-                match controller.decide(ls.id, &ctl.level, &obs) {
+                let t_decide = tracer.as_ref().map(|t| t.now_us());
+                let decision = controller.decide(ls.id, &ctl.level, &obs);
+                if let (Some(t), Some(t0)) = (tracer, t_decide) {
+                    if ls.trace_id != 0 {
+                        let to = match &decision {
+                            EngineSwitch::Stay => "stay".to_string(),
+                            EngineSwitch::Switch(tg) => tg.method().to_string(),
+                        };
+                        let span = t
+                            .span(wid, ls.trace_id, "decide", "ctl", t0)
+                            .arg("from", ctl.level.method())
+                            .arg("to", to);
+                        Self::record(tracer, &mut ls.tl, span);
+                    }
+                }
+                match decision {
                     EngineSwitch::Stay => continue,
                     EngineSwitch::Switch(target) => target,
                 }
             };
-            Self::apply_switch(cfg, manifest, rt, drafts, ls, target, metrics);
+            Self::apply_switch(cfg, manifest, rt, drafts, ls, target, metrics,
+                               tracer, wid);
         }
     }
 
     /// Apply a controller decision: pre-validate the target so the
     /// post-suspend failure path stays cold, then switch the session over
     /// suspend/resume (committed prefix byte-identical across the switch).
+    #[allow(clippy::too_many_arguments)]
     fn apply_switch<'rt>(cfg: &WorkerConfig, manifest: &Manifest,
                          rt: &'rt ModelRuntime,
                          drafts: &mut HashMap<String, Rc<ModelRuntime>>,
                          ls: &mut LiveSession<'rt>, target: EngineLevel,
-                         metrics: &Option<Arc<Mutex<Registry>>>) {
+                         metrics: &Option<Arc<Mutex<Registry>>>,
+                         tracer: &Option<Arc<Tracer>>, wid: usize) {
         let Some(ctl) = ls.ctl.as_mut() else { return };
         if !Self::target_available(rt, &target) {
             Self::bump(metrics, "ctl_rejected");
@@ -631,6 +744,8 @@ impl Worker {
             }
             _ => None,
         };
+        let from = ctl.level.method();
+        let t_switch = tracer.as_ref().map(|t| t.now_us());
         match switch_session(&mut ls.sess, rt, &target,
                              Some(&ctl.carry.prompt_ids), draft) {
             Ok(()) => {
@@ -638,6 +753,15 @@ impl Worker {
                     let mut m = m.lock().unwrap();
                     m.inc("ctl_switches", 1);
                     m.inc(&format!("ctl_switch_to_{}", target.method()), 1);
+                }
+                if let (Some(t), Some(t0)) = (tracer, t_switch) {
+                    if ls.trace_id != 0 {
+                        let span = t
+                            .span(wid, ls.trace_id, "switch", "ctl", t0)
+                            .arg("from", from)
+                            .arg("to", target.method());
+                        Self::record(tracer, &mut ls.tl, span);
+                    }
                 }
                 ctl.level = target;
             }
@@ -658,7 +782,8 @@ impl Worker {
     /// caller's retirement sweep).
     fn park_one<'rt>(live: &mut Vec<LiveSession<'rt>>,
                      parked: &mut VecDeque<ParkedSession>, kv: &mut KvManager,
-                     metrics: &Option<Arc<Mutex<Registry>>>) -> bool {
+                     metrics: &Option<Arc<Mutex<Registry>>>,
+                     tracer: &Option<Arc<Tracer>>, wid: usize) -> bool {
         // coldest = most rounds since admission/revival (ties: first found)
         let mut best: Option<usize> = None;
         for (i, ls) in live.iter().enumerate() {
@@ -670,11 +795,21 @@ impl Worker {
         }
         let Some(i) = best else { return false };
         let mut ls = live.remove(i);
+        let t_park = tracer.as_ref().map(|t| t.now_us());
         match ls.sess.suspend() {
             Ok(snap) => {
                 let handle = kv.park(snap);
                 if let Some(m) = metrics {
                     m.lock().unwrap().inc("kv_snapshots", 1);
+                }
+                let mut tl = ls.tl;
+                if let (Some(t), Some(t0)) = (tracer, t_park) {
+                    if ls.trace_id != 0 {
+                        let span = t
+                            .span(wid, ls.trace_id, "park", "kv", t0)
+                            .arg("rounds", ls.rounds.to_string());
+                        Self::record(tracer, &mut tl, span);
+                    }
                 }
                 parked.push_back(ParkedSession {
                     id: ls.id,
@@ -685,6 +820,8 @@ impl Worker {
                     deadline: ls.deadline,
                     handle,
                     ctl: ls.ctl.map(|c| c.carry),
+                    trace_id: ls.trace_id,
+                    tl,
                 });
                 true
             }
@@ -703,8 +840,10 @@ impl Worker {
                        live: &mut Vec<LiveSession<'rt>>,
                        parked: &mut VecDeque<ParkedSession>, kv: &mut KvManager,
                        cancels: &CancelSet, replies: &Sender<Reply>,
-                       metrics: &Option<Arc<Mutex<Registry>>>) -> bool {
+                       metrics: &Option<Arc<Mutex<Registry>>>,
+                       tracer: &Option<Arc<Tracer>>, wid: usize) -> bool {
         let Some(p) = parked.pop_front() else { return true };
+        let t_revive = tracer.as_ref().map(|t| t.now_us());
         let resumed = kv
             .revive(p.handle)
             .ok_or_else(|| anyhow!("parked session {} lost its snapshot", p.id))
@@ -729,6 +868,13 @@ impl Worker {
                     seen_steps,
                     seen_tokens,
                 });
+                let mut tl = p.tl;
+                if let (Some(t), Some(t0)) = (tracer, t_revive) {
+                    if p.trace_id != 0 {
+                        let span = t.span(wid, p.trace_id, "revive", "kv", t0);
+                        Self::record(tracer, &mut tl, span);
+                    }
+                }
                 live.push(LiveSession {
                     id: p.id,
                     stream: p.stream,
@@ -740,6 +886,8 @@ impl Worker {
                     error: None,
                     rounds: 0,
                     ctl,
+                    trace_id: p.trace_id,
+                    tl,
                 });
                 true
             }
@@ -803,8 +951,11 @@ impl Worker {
                 }
             }
             let text = tok.decode(&snap.out);
-            let resp = Response::ok(p.id, text, &stats, p.queued_ms)
+            let mut resp = Response::ok(p.id, text, &stats, p.queued_ms)
                 .with_finish(reason.as_str());
+            if let Some(tl) = &p.tl {
+                resp.timeline = Some(trace::timeline_json(tl));
+            }
             if replies.send(Reply::Done(resp)).is_err() {
                 return false;
             }
@@ -921,9 +1072,14 @@ impl Worker {
     /// Returns false when the reply channel is gone (server shut down).
     fn retire(ls: LiveSession, cancels: &CancelSet, replies: &Sender<Reply>) -> bool {
         cancels.clear(ls.id);
-        let LiveSession { id, stream, queued_ms, mut dec, seq, sess, error, .. } = ls;
+        let LiveSession { id, stream, queued_ms, mut dec, seq, sess, error, tl, .. } =
+            ls;
         if let Some(msg) = error {
-            return replies.send(Reply::Done(Response::err(id, msg))).is_ok();
+            let mut resp = Response::err(id, msg);
+            if let Some(tl) = &tl {
+                resp.timeline = Some(trace::timeline_json(tl));
+            }
+            return replies.send(Reply::Done(resp)).is_ok();
         }
         let finish = sess.finished().map_or("", |r| r.as_str());
         let (out, _pool) = sess.into_output();
@@ -938,7 +1094,11 @@ impl Worker {
                 }));
             }
         }
-        let resp = Response::ok(id, out.text, &out.stats, queued_ms).with_finish(finish);
+        let mut resp =
+            Response::ok(id, out.text, &out.stats, queued_ms).with_finish(finish);
+        if let Some(tl) = &tl {
+            resp.timeline = Some(trace::timeline_json(tl));
+        }
         replies.send(Reply::Done(resp)).is_ok()
     }
 
@@ -964,8 +1124,8 @@ impl Worker {
                kv_budget={}, rebalance={})",
               self.id, self.cfg.model, self.cfg.time_slice, self.cfg.max_live,
               self.cfg.batch_decode, self.cfg.kv_budget, self.hub.is_some());
-        let Worker { id, cfg, manifest, rt, tok, ngram_caches, cancels, metrics, hub } =
-            self;
+        let Worker { id, cfg, manifest, rt, tok, ngram_caches, cancels, metrics, hub,
+                     prefix, tracer } = self;
         let max_live = cfg.max_live.max(1);
         let slice = cfg.time_slice.max(1);
         let budget = if cfg.kv_budget == 0 { usize::MAX } else { cfg.kv_budget };
@@ -1021,7 +1181,7 @@ impl Worker {
                     break; // queue momentarily empty; keep stepping
                 };
                 match Self::open(&cfg, &manifest, &rt, &mut engines, &mut drafts,
-                                 &ngram_caches, &tok, popped) {
+                                 &ngram_caches, &tok, &prefix, &tracer, id, popped) {
                     Ok(ls) => {
                         live.push(ls);
                         // enforce the device budget as each session opens
@@ -1029,7 +1189,7 @@ impl Worker {
                         // is capped at budget + 1 — not max_live
                         while live.len() > budget {
                             if !Self::park_one(&mut live, &mut parked, &mut kv,
-                                               &metrics) {
+                                               &metrics, &tracer, id) {
                                 break; // nothing suspendable: budget is soft
                             }
                         }
@@ -1051,7 +1211,8 @@ impl Worker {
             if cfg.prefill_only {
                 if let Some(hub) = &hub {
                     while hub.remote_decode_peer().is_some()
-                        && Self::park_one(&mut live, &mut parked, &mut kv, &metrics)
+                        && Self::park_one(&mut live, &mut parked, &mut kv, &metrics,
+                                          &tracer, id)
                     {}
                     while !parked.is_empty() {
                         let Some(peer) = hub.remote_decode_peer() else { break };
@@ -1067,9 +1228,22 @@ impl Worker {
                 }
             }
             // -- one scheduling round ----------------------------------------
+            // per-session step/token baselines so the round span can report
+            // this round's delta; HashMap::new() is allocation-free, so the
+            // untraced path stays allocation-free on the decode hot loop
+            let round_t0 = tracer.as_ref().map(|t| t.now_us());
+            let mut base: HashMap<u64, (usize, usize)> = HashMap::new();
+            if tracer.is_some() {
+                for ls in live.iter() {
+                    if ls.trace_id != 0 {
+                        let s = ls.sess.stats();
+                        base.insert(ls.id, (s.decode_steps, s.generated_tokens));
+                    }
+                }
+            }
             if cfg.batch_decode && live.len() > 1 {
                 Self::batched_round(&rt, &mut live, slice, &tok, &cancels, &replies,
-                                    &metrics);
+                                    &metrics, &tracer, id);
             } else {
                 // sequential: a slice per live session
                 for ls in live.iter_mut() {
@@ -1079,10 +1253,35 @@ impl Worker {
             for ls in live.iter_mut() {
                 ls.rounds += 1;
             }
+            if let (Some(t), Some(t0)) = (&tracer, round_t0) {
+                for ls in live.iter_mut() {
+                    if ls.trace_id == 0 {
+                        continue;
+                    }
+                    let s = ls.sess.stats();
+                    let (b_steps, b_tokens) = base
+                        .get(&ls.id)
+                        .copied()
+                        .unwrap_or((s.decode_steps, s.generated_tokens));
+                    let steps = s.decode_steps - b_steps;
+                    if steps == 0 {
+                        continue; // parked/fresh this round: nothing ran
+                    }
+                    let engine =
+                        ls.ctl.as_ref().map_or("unknown", |c| c.level.method());
+                    let span = t
+                        .span(id, ls.trace_id, "round", "decode", t0)
+                        .arg("engine", engine)
+                        .arg("steps", steps.to_string())
+                        .arg("tokens", (s.generated_tokens - b_tokens).to_string());
+                    Self::record(&tracer, &mut ls.tl, span);
+                }
+            }
             // -- controller: observe this round's accept lengths, apply any
             //    engine switches at this commit boundary --------------------
             Self::control_round(&cfg, &manifest, &rt, &mut drafts, &ngram_caches,
-                                controller.as_mut(), &mut live, &metrics);
+                                controller.as_mut(), &mut live, &metrics, &tracer,
+                                id);
             // -- retirement sweep: deliver final records for every session
             //    the round finished, cancelled, or failed -------------------
             let mut i = 0;
@@ -1108,17 +1307,18 @@ impl Worker {
             while live.len() < budget && !parked.is_empty() {
                 if !Self::revive_one(&rt, &manifest, &mut drafts, &mut live,
                                      &mut parked, &mut kv, &cancels, &replies,
-                                     &metrics) {
+                                     &metrics, &tracer, id) {
                     break 'serve;
                 }
             }
             // -- rotation: budget saturated with sessions still parked — swap
             //    the coldest live one out so the parked set keeps stepping ---
             if !parked.is_empty()
-                && Self::park_one(&mut live, &mut parked, &mut kv, &metrics)
+                && Self::park_one(&mut live, &mut parked, &mut kv, &metrics,
+                                  &tracer, id)
                 && !Self::revive_one(&rt, &manifest, &mut drafts, &mut live,
                                      &mut parked, &mut kv, &cancels, &replies,
-                                     &metrics)
+                                     &metrics, &tracer, id)
             {
                 break 'serve;
             }
@@ -1224,6 +1424,8 @@ mod tests {
             deadline: None,
             handle,
             ctl: None,
+            trace_id: 0,
+            tl: None,
         }
     }
 
@@ -1297,6 +1499,8 @@ mod tests {
             deadline: None,
             handle: healthy_handle,
             ctl: None,
+            trace_id: 0,
+            tl: None,
         });
         parked.push_back(lost_entry(&mut kv, 2, false, Utf8StreamDecoder::new(), 0));
         let cancels = CancelSet::new();
@@ -1326,6 +1530,8 @@ mod tests {
             deadline: None,
             handle,
             ctl: None,
+            trace_id: 0,
+            tl: None,
         });
         let cancels = CancelSet::new();
         let (tx, rx) = channel();
@@ -1355,6 +1561,8 @@ mod tests {
             deadline: None,
             handle,
             ctl: None,
+            trace_id: 0,
+            tl: None,
         });
         let cancels = CancelSet::new();
         let (tx, _rx) = channel();

@@ -1,0 +1,570 @@
+//! Span-level tracing substrate (L3 observability — DESIGN.md §8).
+//!
+//! A [`Tracer`] is a lock-sharded, bounded span recorder: every worker (plus
+//! one lane for the net transport and one for the server/dispatcher) owns a
+//! shard, so recording a span takes one uncontended mutex on the recording
+//! thread's own lane. Each shard is a fixed-capacity ring — when it fills,
+//! the **oldest** span is dropped and counted, never blocking and never
+//! growing. All timestamps are microsecond offsets from the tracer's epoch
+//! (one monotonic [`Instant`] captured at construction), so spans from
+//! different threads of one process order correctly without clock reads
+//! beyond `Instant::elapsed`.
+//!
+//! Identity: a `trace_id` is minted per admitted session ([`Tracer::mint`],
+//! subject to `--trace-sample N` — every Nth admission traces; a
+//! per-request `"trace": true` flag forces it). The id rides inside
+//! `ParkedSession`/`MigratedSession` and the PR 8 wire meta, so a session
+//! that parks, revives, rebalances, or crosses a process boundary keeps one
+//! id and its spans stitch into a single timeline ([`merge_chrome`]).
+//! `trace_id == 0` means "not traced": every recording site guards on it,
+//! so sampled-out sessions cost one branch on the decode path and tracing
+//! disabled (`Tracer` absent) costs nothing at all.
+//!
+//! Export: [`Tracer::chrome_json`] renders the Chrome trace-event format
+//! (`chrome://tracing` / Perfetto-loadable; `ph:"X"` complete events,
+//! pid=process, tid=worker lane, args carry the engine/session tags);
+//! [`validate_trace_json`] is the schema gate CI runs on the dumped file;
+//! [`trace_section`] folds a trace into the BENCH `"trace"` section.
+//!
+//! Span taxonomy (name / cat — the full table is DESIGN.md §8):
+//! `admit`/session, `prefill`/prefill (args: `mode` cold|fork), `plan` +
+//! `launch`/decode (batch grouping + fused step), `round`/decode (per
+//! session per scheduling round; args: engine, steps, tokens), `park` +
+//! `revive`/kv, `decide` + `switch`/ctl, `transfer` + `adopt` + `relay` +
+//! `attach`/net.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::metrics::Histogram;
+use crate::util::json::Json;
+
+/// Default per-shard ring capacity (`--trace-buf`).
+pub const DEFAULT_TRACE_BUF: usize = 65_536;
+
+/// Cap on a per-request timeline accumulator (the compact `"timeline"`
+/// section on the final record) — long generations keep the newest entries.
+pub const TIMELINE_CAP: usize = 256;
+
+/// `trace_id` wire form: fixed-width hex (u64 doesn't survive the f64-backed
+/// JSON number path above 2^53).
+pub fn hex_id(v: u64) -> String {
+    format!("{v:016x}")
+}
+
+/// Parse a [`hex_id`] string back; `None` on malformed input.
+pub fn parse_hex_id(s: &str) -> Option<u64> {
+    u64::from_str_radix(s, 16).ok()
+}
+
+/// One completed span: a named, categorized interval on a worker lane,
+/// tagged with the session's `trace_id` (0 = process-level span) and a
+/// small set of string args.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub name: String,
+    pub cat: String,
+    pub trace_id: u64,
+    /// lane: worker id, or the tracer's net/main lanes.
+    pub tid: usize,
+    /// microseconds since the tracer epoch.
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub args: Vec<(String, String)>,
+}
+
+impl Span {
+    /// Chainable tag: `tracer.span(..).arg("engine", tag)`.
+    pub fn arg(mut self, k: impl Into<String>, v: impl Into<String>) -> Span {
+        self.args.push((k.into(), v.into()));
+        self
+    }
+}
+
+#[derive(Default)]
+struct Shard {
+    ring: VecDeque<Span>,
+    recorded: u64,
+    dropped: u64,
+}
+
+/// The shared span recorder. One per server process, behind an
+/// `Option<Arc<Tracer>>` — `None` is "tracing disabled" and costs callers a
+/// single `if let` per site.
+pub struct Tracer {
+    epoch: Instant,
+    pid: u64,
+    sample: u64,
+    cap: usize,
+    workers: usize,
+    shards: Vec<Mutex<Shard>>,
+    admitted: AtomicU64,
+    next_trace: AtomicU64,
+}
+
+impl Tracer {
+    /// `workers` worker lanes plus two extra shards: [`Tracer::net_tid`] for
+    /// the transport/relay threads and [`Tracer::main_tid`] for the
+    /// server/dispatcher. `sample` = trace every Nth admission (0 and 1 both
+    /// mean "every"); `cap` = per-shard ring capacity.
+    pub fn new(workers: usize, sample: u64, cap: usize) -> Tracer {
+        Tracer {
+            epoch: Instant::now(),
+            pid: std::process::id() as u64,
+            sample: sample.max(1),
+            cap: cap.max(1),
+            workers,
+            shards: (0..workers + 2).map(|_| Mutex::new(Shard::default())).collect(),
+            admitted: AtomicU64::new(0),
+            next_trace: AtomicU64::new(0),
+        }
+    }
+
+    /// Lane for net transport/relay spans.
+    pub fn net_tid(&self) -> usize {
+        self.workers
+    }
+
+    /// Lane for server/dispatcher spans.
+    pub fn main_tid(&self) -> usize {
+        self.workers + 1
+    }
+
+    /// Microseconds since the tracer epoch (monotonic).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Mint a `trace_id` at admission. Every `sample`-th admission traces;
+    /// `force` (the per-request `"trace"` flag) always does. Returns 0 for
+    /// sampled-out sessions — the universal "not traced" guard value.
+    pub fn mint(&self, force: bool) -> u64 {
+        let k = self.admitted.fetch_add(1, Ordering::Relaxed);
+        if !force && k % self.sample != 0 {
+            return 0;
+        }
+        let n = self.next_trace.fetch_add(1, Ordering::Relaxed) + 1;
+        (self.pid << 32) | (n & 0xffff_ffff)
+    }
+
+    /// Build a completed span whose interval is `[start_us, now]`. The
+    /// caller captured `start_us` via [`Tracer::now_us`] before the work.
+    pub fn span(&self, tid: usize, trace_id: u64, name: &str, cat: &str,
+                start_us: u64) -> Span {
+        Span {
+            name: name.to_string(),
+            cat: cat.to_string(),
+            trace_id,
+            tid,
+            start_us,
+            dur_us: self.now_us().saturating_sub(start_us),
+            args: Vec::new(),
+        }
+    }
+
+    /// RAII variant: records the span when the guard drops.
+    pub fn guard(&self, tid: usize, trace_id: u64, name: &str,
+                 cat: &str) -> SpanGuard<'_> {
+        SpanGuard {
+            t: self,
+            span: Some(Span {
+                name: name.to_string(),
+                cat: cat.to_string(),
+                trace_id,
+                tid,
+                start_us: self.now_us(),
+                dur_us: 0,
+                args: Vec::new(),
+            }),
+        }
+    }
+
+    /// Record a completed span into its lane's ring. Full ring: drop the
+    /// oldest span and count it — recording never blocks on capacity.
+    pub fn push(&self, span: Span) {
+        let shard = &self.shards[span.tid % self.shards.len()];
+        let mut s = shard.lock().unwrap();
+        s.recorded += 1;
+        if s.ring.len() >= self.cap {
+            s.ring.pop_front();
+            s.dropped += 1;
+        }
+        s.ring.push_back(span);
+    }
+
+    /// (recorded, dropped) totals across all shards.
+    pub fn stats(&self) -> (u64, u64) {
+        let mut rec = 0;
+        let mut drop = 0;
+        for shard in &self.shards {
+            let s = shard.lock().unwrap();
+            rec += s.recorded;
+            drop += s.dropped;
+        }
+        (rec, drop)
+    }
+
+    /// Non-destructive copy of every retained span, time-ordered.
+    pub fn snapshot(&self) -> Vec<Span> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            out.extend(shard.lock().unwrap().ring.iter().cloned());
+        }
+        out.sort_by(|a, b| (a.start_us, a.tid).cmp(&(b.start_us, b.tid)));
+        out
+    }
+
+    /// Render the Chrome trace-event JSON (the `--trace-out` /
+    /// `{"trace": true}` payload): `traceEvents` of `ph:"X"` complete
+    /// events plus a `stats` block viewers ignore.
+    pub fn chrome_json(&self) -> Json {
+        let (recorded, dropped) = self.stats();
+        let events = self.snapshot().iter().map(|s| span_event(self.pid, s)).collect();
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::str("ms")),
+            ("stats", Json::obj(vec![
+                ("pid", Json::num(self.pid as f64)),
+                ("recorded", Json::num(recorded as f64)),
+                ("dropped", Json::num(dropped as f64)),
+            ])),
+        ])
+    }
+}
+
+fn span_event(pid: u64, s: &Span) -> Json {
+    let mut args: BTreeMap<String, Json> = s
+        .args
+        .iter()
+        .map(|(k, v)| (k.clone(), Json::str(v.clone())))
+        .collect();
+    if s.trace_id != 0 {
+        args.insert("trace_id".to_string(), Json::str(hex_id(s.trace_id)));
+    }
+    Json::obj(vec![
+        ("name", Json::str(s.name.clone())),
+        ("cat", Json::str(s.cat.clone())),
+        ("ph", Json::str("X")),
+        ("ts", Json::num(s.start_us as f64)),
+        ("dur", Json::num(s.dur_us as f64)),
+        ("pid", Json::num(pid as f64)),
+        ("tid", Json::num(s.tid as f64)),
+        ("args", Json::Obj(args)),
+    ])
+}
+
+/// RAII span: finalizes its duration and records when dropped (scope exit).
+pub struct SpanGuard<'a> {
+    t: &'a Tracer,
+    span: Option<Span>,
+}
+
+impl SpanGuard<'_> {
+    pub fn add_arg(&mut self, k: impl Into<String>, v: impl Into<String>) {
+        if let Some(s) = self.span.as_mut() {
+            s.args.push((k.into(), v.into()));
+        }
+    }
+}
+
+impl Drop for SpanGuard<'_> {
+    fn drop(&mut self) {
+        if let Some(mut s) = self.span.take() {
+            s.dur_us = self.t.now_us().saturating_sub(s.start_us);
+            self.t.push(s);
+        }
+    }
+}
+
+/// Schema gate for a Chrome trace-event JSON blob (CI's
+/// `serve_bench --validate-trace`): a `traceEvents` array of complete
+/// (`ph:"X"`) events, each carrying name/cat/ph strings and numeric
+/// ts/dur/pid/tid.
+pub fn validate_trace_json(text: &str) -> Result<()> {
+    let j = Json::parse(text).map_err(|e| anyhow!("malformed json: {e}"))?;
+    let events = j
+        .get("traceEvents")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("missing 'traceEvents' array"))?;
+    for (i, ev) in events.iter().enumerate() {
+        for key in ["name", "cat", "ph"] {
+            ev.get(key)
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow!("event {i}: missing string '{key}'"))?;
+        }
+        if ev.get("ph").and_then(Json::as_str) != Some("X") {
+            bail!("event {i}: only complete ('X') events are emitted");
+        }
+        for key in ["ts", "dur", "pid", "tid"] {
+            ev.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow!("event {i}: missing number '{key}'"))?;
+        }
+    }
+    Ok(())
+}
+
+/// Stitch per-process Chrome traces into one: concatenate `traceEvents`
+/// (each event keeps its own pid, so viewers show one track group per
+/// process) and sum the `stats` blocks. Events re-sort by timestamp; the
+/// processes' epochs differ, so cross-process ordering is approximate —
+/// within a process it is exact.
+pub fn merge_chrome(parts: &[Json]) -> Json {
+    let mut events: Vec<Json> = Vec::new();
+    let mut recorded = 0.0;
+    let mut dropped = 0.0;
+    for p in parts {
+        if let Some(evs) = p.get("traceEvents").and_then(Json::as_arr) {
+            events.extend(evs.iter().cloned());
+        }
+        recorded += p.path("stats.recorded").and_then(Json::as_f64).unwrap_or(0.0);
+        dropped += p.path("stats.dropped").and_then(Json::as_f64).unwrap_or(0.0);
+    }
+    events.sort_by(|a, b| {
+        let ta = a.get("ts").and_then(Json::as_f64).unwrap_or(0.0);
+        let tb = b.get("ts").and_then(Json::as_f64).unwrap_or(0.0);
+        ta.partial_cmp(&tb).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+        ("stats", Json::obj(vec![
+            ("recorded", Json::num(recorded)),
+            ("dropped", Json::num(dropped)),
+        ])),
+    ])
+}
+
+/// Fold a Chrome trace into the BENCH `"trace"` section: span totals plus
+/// per-phase (span cat) duration summaries in milliseconds.
+pub fn trace_section(chrome: &Json) -> Json {
+    let mut phases: BTreeMap<String, Histogram> = BTreeMap::new();
+    let events = chrome.get("traceEvents").and_then(Json::as_arr).unwrap_or(&[]);
+    for ev in events {
+        let cat = ev.get("cat").and_then(Json::as_str).unwrap_or("?");
+        let dur_ms =
+            ev.get("dur").and_then(Json::as_f64).unwrap_or(0.0) / 1000.0;
+        phases.entry(cat.to_string()).or_default().record(dur_ms);
+    }
+    let phase_json: BTreeMap<String, Json> = phases
+        .into_iter()
+        .map(|(k, mut h)| {
+            let s = h.summarize();
+            (k, Json::obj(vec![
+                ("count", Json::num(s.count as f64)),
+                ("mean_ms", Json::num(s.mean)),
+                ("p99_ms", Json::num(s.p99)),
+            ]))
+        })
+        .collect();
+    Json::obj(vec![
+        ("spans", Json::num(events.len() as f64)),
+        ("recorded",
+         Json::num(chrome.path("stats.recorded").and_then(Json::as_f64)
+             .unwrap_or(0.0))),
+        ("dropped",
+         Json::num(chrome.path("stats.dropped").and_then(Json::as_f64)
+             .unwrap_or(0.0))),
+        ("phases", Json::Obj(phase_json)),
+    ])
+}
+
+/// The compact per-request `"timeline"` on a final record: the session's
+/// accumulated spans as `[{name, cat, ts_us, dur_us}]`.
+pub fn timeline_json(spans: &[Span]) -> Json {
+    Json::Arr(
+        spans
+            .iter()
+            .map(|s| Json::obj(vec![
+                ("name", Json::str(s.name.clone())),
+                ("cat", Json::str(s.cat.clone())),
+                ("ts_us", Json::num(s.start_us as f64)),
+                ("dur_us", Json::num(s.dur_us as f64)),
+            ]))
+            .collect(),
+    )
+}
+
+/// Bounded push for a per-request timeline accumulator: keeps the newest
+/// [`TIMELINE_CAP`] entries.
+pub fn timeline_push(tl: &mut Vec<Span>, span: Span) {
+    if tl.len() >= TIMELINE_CAP {
+        tl.remove(0);
+    }
+    tl.push(span);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spanned(t: &Tracer, tid: usize, trace_id: u64, name: &str, ts: u64) -> Span {
+        Span {
+            name: name.to_string(),
+            cat: "test".to_string(),
+            trace_id,
+            tid,
+            start_us: ts,
+            dur_us: 5,
+            args: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn mint_samples_every_nth_and_force_overrides() {
+        let t = Tracer::new(1, 3, 16);
+        let ids: Vec<u64> = (0..6).map(|_| t.mint(false)).collect();
+        assert_ne!(ids[0], 0, "admission 0 must trace under sample 3");
+        assert_eq!(ids[1], 0);
+        assert_eq!(ids[2], 0);
+        assert_ne!(ids[3], 0);
+        assert_eq!(ids[4], 0);
+        assert_ne!(t.mint(true), 0, "the per-request flag must force a mint");
+        let a = t.mint(true);
+        let b = t.mint(true);
+        assert_ne!(a, b, "minted ids must be unique");
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let t = Tracer::new(1, 1, 4);
+        for i in 0..10u64 {
+            t.push(spanned(&t, 0, 1, &format!("s{i}"), i));
+        }
+        let (recorded, dropped) = t.stats();
+        assert_eq!(recorded, 10);
+        assert_eq!(dropped, 6);
+        let snap = t.snapshot();
+        assert_eq!(snap.len(), 4, "ring must hold exactly its capacity");
+        let names: Vec<&str> = snap.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["s6", "s7", "s8", "s9"],
+                   "overflow must drop the oldest spans");
+    }
+
+    #[test]
+    fn snapshot_orders_across_shards() {
+        let t = Tracer::new(2, 1, 16);
+        t.push(spanned(&t, 1, 1, "late", 100));
+        t.push(spanned(&t, 0, 1, "early", 10));
+        t.push(spanned(&t, t.net_tid(), 0, "mid", 50));
+        let names: Vec<&str> = t.snapshot().iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["early", "mid", "late"]);
+    }
+
+    #[test]
+    fn chrome_json_is_schema_valid_and_carries_tags() {
+        let t = Tracer::new(1, 1, 16);
+        let tid0 = t.now_us();
+        let sp = t.span(0, 7, "prefill", "prefill", tid0).arg("mode", "cold");
+        t.push(sp);
+        let j = t.chrome_json();
+        validate_trace_json(&j.dump()).unwrap();
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 1);
+        let ev = &evs[0];
+        assert_eq!(ev.get("name").unwrap().as_str(), Some("prefill"));
+        assert_eq!(ev.get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(ev.path("args.mode").unwrap().as_str(), Some("cold"));
+        assert_eq!(ev.path("args.trace_id").unwrap().as_str(),
+                   Some(hex_id(7).as_str()));
+        assert_eq!(j.path("stats.recorded").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn guard_records_on_drop() {
+        let t = Tracer::new(1, 1, 16);
+        {
+            let mut g = t.guard(0, 3, "round", "decode");
+            g.add_arg("steps", "4");
+        }
+        let snap = t.snapshot();
+        assert_eq!(snap.len(), 1);
+        assert_eq!(snap[0].name, "round");
+        assert_eq!(snap[0].trace_id, 3);
+        assert_eq!(snap[0].args, vec![("steps".to_string(), "4".to_string())]);
+    }
+
+    #[test]
+    fn validator_rejects_bad_blobs() {
+        assert!(validate_trace_json("not json").is_err());
+        assert!(validate_trace_json(r#"{"foo": 1}"#).is_err());
+        assert!(validate_trace_json(
+            r#"{"traceEvents": [{"name": "x", "cat": "c", "ph": "B",
+                "ts": 0, "dur": 1, "pid": 1, "tid": 0}]}"#
+        )
+        .is_err());
+        assert!(validate_trace_json(
+            r#"{"traceEvents": [{"name": "x", "cat": "c", "ph": "X",
+                "ts": 0, "pid": 1, "tid": 0}]}"#
+        )
+        .is_err());
+        validate_trace_json(r#"{"traceEvents": []}"#).unwrap();
+    }
+
+    #[test]
+    fn merge_stitches_and_sums_stats() {
+        let a = Tracer::new(1, 1, 16);
+        a.push(spanned(&a, 0, 9, "prefill", 20));
+        let b = Tracer::new(1, 1, 2);
+        for i in 0..4u64 {
+            b.push(spanned(&b, 0, 9, "round", 30 + i));
+        }
+        let merged = merge_chrome(&[a.chrome_json(), b.chrome_json()]);
+        validate_trace_json(&merged.dump()).unwrap();
+        let evs = merged.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 3, "1 span + 2 retained after overflow");
+        assert_eq!(merged.path("stats.recorded").unwrap().as_usize(), Some(5));
+        assert_eq!(merged.path("stats.dropped").unwrap().as_usize(), Some(2));
+        // stitched: the shared trace_id appears in events from both parts
+        let ids: Vec<&str> = evs
+            .iter()
+            .filter_map(|e| e.path("args.trace_id").and_then(Json::as_str))
+            .collect();
+        assert!(ids.iter().all(|&s| s == hex_id(9)), "{ids:?}");
+    }
+
+    #[test]
+    fn trace_section_summarizes_phases() {
+        let t = Tracer::new(1, 1, 16);
+        let mut p = spanned(&t, 0, 1, "prefill", 0);
+        p.cat = "prefill".into();
+        p.dur_us = 2000;
+        t.push(p);
+        let mut r = spanned(&t, 0, 1, "round", 10);
+        r.cat = "decode".into();
+        r.dur_us = 1000;
+        t.push(r);
+        let sec = trace_section(&t.chrome_json());
+        assert_eq!(sec.get("spans").unwrap().as_usize(), Some(2));
+        assert_eq!(sec.path("phases.prefill.count").unwrap().as_usize(), Some(1));
+        assert_eq!(sec.path("phases.prefill.mean_ms").unwrap().as_f64(), Some(2.0));
+        assert_eq!(sec.path("phases.decode.p99_ms").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn timeline_push_is_bounded() {
+        let t = Tracer::new(1, 1, 16);
+        let mut tl = Vec::new();
+        for i in 0..(TIMELINE_CAP as u64 + 10) {
+            timeline_push(&mut tl, spanned(&t, 0, 1, &format!("e{i}"), i));
+        }
+        assert_eq!(tl.len(), TIMELINE_CAP);
+        assert_eq!(tl[0].name, "e10", "bounded push keeps the newest entries");
+        let j = timeline_json(&tl);
+        assert_eq!(j.as_arr().unwrap().len(), TIMELINE_CAP);
+        assert_eq!(j.as_arr().unwrap()[0].get("name").unwrap().as_str(),
+                   Some("e10"));
+    }
+
+    #[test]
+    fn hex_id_round_trips() {
+        for v in [0u64, 1, u64::MAX, 0xdead_beef_0000_0001] {
+            assert_eq!(parse_hex_id(&hex_id(v)), Some(v));
+        }
+        assert_eq!(parse_hex_id("zz"), None);
+    }
+}

@@ -66,6 +66,10 @@ fn server_config_default_is_pinned() {
     assert!(d.peers.is_empty());
     assert_eq!(d.peer_addr, None);
     assert_eq!(d.heartbeat_ms, 100);
+    assert!(!d.trace);
+    assert_eq!(d.trace_sample, 1);
+    assert_eq!(d.trace_buf, 65_536);
+    assert_eq!(d.trace_out, None);
     let w = &d.worker;
     assert_eq!(w.artifacts_dir, "artifacts");
     assert_eq!(w.model, "tiny");

@@ -25,22 +25,29 @@ use lookahead::util::json::Json;
 
 /// Records every adopted payload and answers each adoption with one chunk
 /// and a final record (ids 0 — the listener pump must rewrite them to the
-/// donor id carried in the offer meta).
+/// donor id carried in the offer meta). Adopter-local ids are handed out
+/// from 40 so cancel routing is distinguishable from the donor ids.
 #[derive(Default)]
 struct MockGate {
     payloads: Mutex<Vec<Vec<u8>>>,
     adopts: AtomicUsize,
+    cancelled: Mutex<Vec<u64>>,
 }
 
 impl net::Adopt for MockGate {
-    fn adopt(&self, _meta: &Json, payload: Vec<u8>) -> Result<Receiver<Reply>, String> {
+    fn adopt(&self, _meta: &Json, payload: Vec<u8>)
+             -> Result<(u64, Receiver<Reply>), String> {
         self.payloads.lock().unwrap().push(payload);
-        self.adopts.fetch_add(1, Ordering::SeqCst);
+        let n = self.adopts.fetch_add(1, Ordering::SeqCst);
         let (tx, rx) = channel();
         tx.send(Reply::Chunk(StreamChunk { id: 0, seq: 1, delta: "ok".into() }))
             .unwrap();
         tx.send(Reply::Done(Response::err(0, "mock-served".into()))).unwrap();
-        Ok(rx)
+        Ok((40 + n as u64, rx))
+    }
+
+    fn cancel_local(&self, id: u64) {
+        self.cancelled.lock().unwrap().push(id);
     }
 
     fn load_json(&self) -> Json {
@@ -163,6 +170,32 @@ fn lost_ack_retry_is_dropped_as_duplicate() {
                "duplicate delivery must not re-adopt");
     assert_eq!(metrics.lock().unwrap().counter("net_dup_dropped"), 1);
     let resp = read_tunnel(lines, 9);
+    assert!(resp.error.as_deref().unwrap_or("").contains("mock-served"));
+    stop.store(true, Ordering::SeqCst);
+    join.join().unwrap();
+}
+
+#[test]
+fn cancel_frame_resolves_the_adopter_local_id_or_reports_gone() {
+    let addr = "127.0.0.1:18807";
+    let (gate, metrics, stop, join) = mock_listener(addr);
+    let payload = patterned_payload(200);
+    let meta = Json::obj(vec![("id", Json::num(11.0))]);
+    let report = net::send_session(addr, &meta, &payload, &opts_with_cuts(1, 64, vec![]));
+    let lines = match report.outcome {
+        SendOutcome::Adopted(lines) => lines,
+        SendOutcome::Bounced(why) => panic!("transfer bounced: {why}"),
+    };
+    // the cancel frame names the transfer; the listener must translate it
+    // to the ADOPTER-LOCAL id the gateway returned from adopt()
+    let xfer = lookahead::kv::snapshot::fnv64(&payload);
+    assert!(net::cancel_session(addr, xfer).unwrap());
+    assert_eq!(gate.cancelled.lock().unwrap().as_slice(), &[40]);
+    assert_eq!(metrics.lock().unwrap().counter("net_cancels"), 1);
+    // an unknown transfer answers `gone` instead of hanging or erroring
+    assert!(!net::cancel_session(addr, xfer ^ 0xdead).unwrap());
+    assert_eq!(gate.cancelled.lock().unwrap().len(), 1);
+    let resp = read_tunnel(lines, 11);
     assert!(resp.error.as_deref().unwrap_or("").contains("mock-served"));
     stop.store(true, Ordering::SeqCst);
     join.join().unwrap();
@@ -312,4 +345,74 @@ fn injected_cuts_settle_adopted_or_bounced_with_correct_output() {
 
     assert_eq!(texts, solo_texts(&dir, &prompts),
                "faulted hand-off must not corrupt decode output");
+}
+
+/// PR 8 leftover: a client cancel issued on the DONOR after its session was
+/// adopted by a peer must land on the adopter (via the `cancel` frame) —
+/// the session retires with `"finish":"cancelled"`, and the cancel
+/// bookkeeping returns to zero on both processes.
+#[test]
+fn donor_side_cancel_lands_on_the_adopting_peer() {
+    // slow sim (~ms per decode launch): the 64-token decode is still
+    // running on the adopter when the cancel goes over the wire
+    let dir = lookahead::runtime::sim::ensure_slow_sim_artifacts()
+        .unwrap()
+        .to_string_lossy()
+        .into_owned();
+    let back = ServerHandle::start(
+        ServerConfig::builder()
+            .queue_depth(64)
+            .artifacts_dir(dir.clone())
+            .peer_addr(Some("127.0.0.1:18841".into()))
+            .build(),
+    )
+    .unwrap();
+    let front = ServerHandle::start(
+        ServerConfig::builder()
+            .queue_depth(64)
+            .artifacts_dir(dir.clone())
+            .peers(vec!["127.0.0.1:18841".into()])
+            .heartbeat_ms(5)
+            .prefill_only(true)
+            .build(),
+    )
+    .unwrap();
+    wait_for_peer(&front);
+
+    let rx = front
+        .submit(
+            Request::new("def spin(x):\n    while x: x -= 1\n    return x")
+                .max_tokens(64)
+                .method("autoregressive")
+                .stream(true),
+        )
+        .unwrap();
+    // the first relayed chunk proves the adopter is decoding the session
+    let first = rx.recv().unwrap();
+    assert!(matches!(first, Reply::Chunk(_)), "expected a streamed chunk first");
+    assert!(front.cancel(rx.id), "cancel must report the request as known");
+    let resp = loop {
+        match rx.recv().unwrap() {
+            Reply::Done(r) => break r,
+            Reply::Chunk(_) => {}
+        }
+    };
+    assert!(resp.error.is_none(), "{:?}", resp.error);
+    assert_eq!(resp.finish, "cancelled",
+               "donor-side cancel must stop the adopted session");
+
+    // both processes must sweep their cancel bookkeeping: the adopter's
+    // dispatcher clears its mark before relaying the final record, the
+    // donor's when that record passes through its own dispatcher
+    let marks = |h: &ServerHandle| {
+        h.report_json()
+            .path("counters.cancel_marks")
+            .and_then(Json::as_f64)
+            .unwrap_or(-1.0)
+    };
+    assert_eq!(marks(&back), 0.0, "adopter-side cancel mark must be swept");
+    assert_eq!(marks(&front), 0.0, "donor-side cancel mark must be swept");
+
+    front.shutdown();
+    back.shutdown();
 }

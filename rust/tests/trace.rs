@@ -1,0 +1,396 @@
+//! Structured-tracing suite (simulated artifacts — runs without PJRT).
+//!
+//! End-to-end coverage for the span recorder wired through the serving
+//! stack: session lifecycles emit ordered spans under one `trace_id`
+//! (solo, parked/revived, controller-driven, and migrated across two
+//! server processes), sampling and the per-request `"trace"` flag gate
+//! minting, the Chrome export validates, and tracing disabled leaves the
+//! wire format byte-compatible (no new keys) at zero span cost.
+
+use std::time::Duration;
+
+use lookahead::server::{Request, Response, ServerConfig, ServerHandle};
+use lookahead::trace::{self, Span, Tracer};
+use lookahead::util::json::Json;
+
+fn sim_dir() -> String {
+    lookahead::runtime::sim::ensure_sim_artifacts()
+        .unwrap()
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn traced_server(dir: &str) -> ServerHandle {
+    ServerHandle::start(
+        ServerConfig::builder()
+            .queue_depth(64)
+            .workers(1)
+            .artifacts_dir(dir.to_string())
+            .trace(true)
+            .build(),
+    )
+    .unwrap()
+}
+
+fn run_traced(h: &ServerHandle, prompt: &str, max_tokens: usize) -> Response {
+    let rx = h
+        .submit(
+            Request::new(prompt)
+                .max_tokens(max_tokens)
+                .method("autoregressive")
+                .trace(true),
+        )
+        .unwrap();
+    let r = rx.wait().unwrap();
+    assert!(r.error.is_none(), "{:?}", r.error);
+    r
+}
+
+/// Spans of one session, in time order.
+fn session_spans(spans: &[Span], trace_id: u64) -> Vec<&Span> {
+    spans.iter().filter(|s| s.trace_id == trace_id).collect()
+}
+
+fn first_start(spans: &[&Span], name: &str) -> u64 {
+    spans
+        .iter()
+        .find(|s| s.name == name)
+        .unwrap_or_else(|| panic!("no '{name}' span in {spans:?}"))
+        .start_us
+}
+
+#[test]
+fn solo_lifecycle_emits_ordered_spans_under_one_trace_id() {
+    let dir = sim_dir();
+    let h = traced_server(&dir);
+    let r = run_traced(&h, "def solo(x):\n    return x", 16);
+
+    let spans = h.tracer.as_ref().unwrap().snapshot();
+    let ids: Vec<u64> = spans
+        .iter()
+        .filter(|s| s.trace_id != 0)
+        .map(|s| s.trace_id)
+        .collect();
+    assert!(!ids.is_empty(), "a traced session must emit spans");
+    let id = ids[0];
+    assert!(ids.iter().all(|&i| i == id), "one session, one trace_id: {ids:?}");
+
+    let sess = session_spans(&spans, id);
+    let (admit, prefill, round) = (
+        first_start(&sess, "admit"),
+        first_start(&sess, "prefill"),
+        first_start(&sess, "round"),
+    );
+    assert!(admit <= prefill, "admit must start before prefill");
+    assert!(prefill <= round, "prefill must start before the first round");
+    let pf = sess.iter().find(|s| s.name == "prefill").unwrap();
+    assert!(
+        pf.args.iter().any(|(k, v)| k == "mode" && (v == "cold" || v == "fork")),
+        "prefill must be tagged cold|fork: {:?}",
+        pf.args
+    );
+    let rd = sess.iter().find(|s| s.name == "round").unwrap();
+    assert!(rd.args.iter().any(|(k, _)| k == "engine"),
+            "round spans carry the engine tag: {:?}", rd.args);
+
+    // the per-request timeline rides the final record and mirrors the
+    // session's span names
+    let tl = r.timeline.as_ref().expect("traced request must carry a timeline");
+    let names: Vec<&str> = tl
+        .as_arr()
+        .unwrap()
+        .iter()
+        .filter_map(|e| e.get("name").and_then(Json::as_str))
+        .collect();
+    assert!(names.contains(&"admit"), "{names:?}");
+    assert!(names.contains(&"round"), "{names:?}");
+
+    // the live dump is schema-valid Chrome trace-event JSON
+    trace::validate_trace_json(&h.trace_json().dump()).unwrap();
+    h.shutdown();
+}
+
+#[test]
+fn sampling_gates_minting_and_the_request_flag_forces_it() {
+    let dir = sim_dir();
+    let h = ServerHandle::start(
+        ServerConfig::builder()
+            .queue_depth(64)
+            .workers(1)
+            .artifacts_dir(dir)
+            .trace(true)
+            .trace_sample(1000)
+            .build(),
+    )
+    .unwrap();
+    // sequential untraced requests: only admission 0 samples in
+    for i in 0..3 {
+        let rx = h
+            .submit(Request::new(format!("def s{i}(x):\n    return x"))
+                .max_tokens(8)
+                .method("autoregressive"))
+            .unwrap();
+        let r = rx.wait().unwrap();
+        assert!(r.error.is_none());
+        assert!(r.timeline.is_none(),
+                "sampled sessions get global spans, not per-request timelines");
+    }
+    let distinct = |spans: &[Span]| {
+        let mut ids: Vec<u64> =
+            spans.iter().filter(|s| s.trace_id != 0).map(|s| s.trace_id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        ids.len()
+    };
+    let spans = h.tracer.as_ref().unwrap().snapshot();
+    assert_eq!(distinct(&spans), 1,
+               "sample 1000 must trace only the first of 3 admissions");
+    // the per-request flag overrides the sampler
+    let r = run_traced(&h, "def forced(x):\n    return x", 8);
+    assert!(r.timeline.is_some());
+    let spans = h.tracer.as_ref().unwrap().snapshot();
+    assert_eq!(distinct(&spans), 2, "the forced request must mint a fresh id");
+    h.shutdown();
+}
+
+#[test]
+fn parked_and_revived_session_keeps_one_trace_id() {
+    // slow sim (~ms per decode launch): the three sessions genuinely
+    // coexist, so budget 1 must park and rotate them
+    let dir = lookahead::runtime::sim::ensure_slow_sim_artifacts()
+        .unwrap()
+        .to_string_lossy()
+        .into_owned();
+    // device budget 1 with 3 interleaved sessions: admission overflow
+    // parks, rotation revives — every session crosses the kv path
+    let h = ServerHandle::start(
+        ServerConfig::builder()
+            .queue_depth(64)
+            .workers(1)
+            .max_live(4)
+            .kv_budget(1)
+            .artifacts_dir(dir)
+            .trace(true)
+            .build(),
+    )
+    .unwrap();
+    let rxs: Vec<_> = (0..3)
+        .map(|i| {
+            h.submit(
+                Request::new(format!("def park{i}(x):\n    return x + {i}"))
+                    .max_tokens(24)
+                    .method("autoregressive")
+                    .trace(true),
+            )
+            .unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        let r = rx.wait().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+    let spans = h.tracer.as_ref().unwrap().snapshot();
+    let parked: Vec<u64> = spans
+        .iter()
+        .filter(|s| s.name == "park" && s.trace_id != 0)
+        .map(|s| s.trace_id)
+        .collect();
+    assert!(!parked.is_empty(), "budget 1 must park at least one session");
+    let id = parked[0];
+    let sess = session_spans(&spans, id);
+    for name in ["admit", "prefill", "park", "revive", "round"] {
+        assert!(sess.iter().any(|s| s.name == name),
+                "parked session must keep its '{name}' span under one id");
+    }
+    let park = first_start(&sess, "park");
+    let revive = sess
+        .iter()
+        .filter(|s| s.name == "revive")
+        .map(|s| s.start_us)
+        .max()
+        .unwrap();
+    assert!(park <= revive, "park must precede (a) revive");
+    h.shutdown();
+}
+
+#[test]
+fn adaptive_controller_emits_ctl_spans() {
+    let dir = sim_dir();
+    let h = ServerHandle::start(
+        ServerConfig::builder()
+            .queue_depth(64)
+            .workers(1)
+            .controller("adaptive")
+            .artifacts_dir(dir)
+            .trace(true)
+            .build(),
+    )
+    .unwrap();
+    // autoregressive commits 1 token/step, so a 64-token budget spans
+    // many scheduling rounds — the controller observes every one. Three
+    // prompts so one hitting a rare early sim EOS can't starve the test.
+    for i in 0..3 {
+        let _ = run_traced(&h, &format!("def ctl{i}(x):\n    return x * {i}"), 64);
+    }
+    let spans = h.tracer.as_ref().unwrap().snapshot();
+    let decides: Vec<&Span> = spans
+        .iter()
+        .filter(|s| s.cat == "ctl" && s.name == "decide" && s.trace_id != 0)
+        .collect();
+    assert!(!decides.is_empty(), "adaptive sessions must emit decide spans");
+    assert!(
+        decides[0].args.iter().any(|(k, _)| k == "from")
+            && decides[0].args.iter().any(|(k, _)| k == "to"),
+        "decide spans carry from/to engine tags: {:?}",
+        decides[0].args
+    );
+    // any applied switch is tagged with both engines under the same id
+    for sw in spans.iter().filter(|s| s.name == "switch") {
+        assert_eq!(sw.cat, "ctl");
+        assert_ne!(sw.trace_id, 0);
+        assert!(sw.args.iter().any(|(k, _)| k == "from"));
+        assert!(sw.args.iter().any(|(k, _)| k == "to"));
+    }
+    h.shutdown();
+}
+
+#[test]
+fn migrated_session_stitches_one_trace_id_across_servers() {
+    let dir = sim_dir();
+    let back = ServerHandle::start(
+        ServerConfig::builder()
+            .queue_depth(64)
+            .workers(1)
+            .artifacts_dir(dir.clone())
+            .peer_addr(Some("127.0.0.1:18851".into()))
+            .trace(true)
+            .build(),
+    )
+    .unwrap();
+    let front = ServerHandle::start(
+        ServerConfig::builder()
+            .queue_depth(64)
+            .workers(1)
+            .artifacts_dir(dir)
+            .peers(vec!["127.0.0.1:18851".into()])
+            .heartbeat_ms(5)
+            .prefill_only(true)
+            .trace(true)
+            .build(),
+    )
+    .unwrap();
+    // wait for the heartbeat to mark the decode peer alive
+    let peers = front.peers.clone().expect("peer table");
+    for _ in 0..400 {
+        if peers.snapshot().iter().any(|p| p.alive) {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    let _ = run_traced(&front, "def mig(x):\n    return x + 1", 16);
+
+    let merged = trace::merge_chrome(&[front.trace_json(), back.trace_json()]);
+    trace::validate_trace_json(&merged.dump()).unwrap();
+    let events = merged.get("traceEvents").unwrap().as_arr().unwrap().to_vec();
+    // the donor minted the id at admission; the same hex id must tag the
+    // donor-side prefill, the wire hop, and the adopter-side decode rounds
+    let prefill_id = events
+        .iter()
+        .find(|e| e.get("name").and_then(Json::as_str) == Some("prefill"))
+        .and_then(|e| e.path("args.trace_id"))
+        .and_then(Json::as_str)
+        .expect("donor prefill span with a trace_id")
+        .to_string();
+    let stitched: Vec<(String, String)> = events
+        .iter()
+        .filter(|e| {
+            e.path("args.trace_id").and_then(Json::as_str)
+                == Some(prefill_id.as_str())
+        })
+        .map(|e| {
+            (e.get("name").and_then(Json::as_str).unwrap_or("?").to_string(),
+             e.get("cat").and_then(Json::as_str).unwrap_or("?").to_string())
+        })
+        .collect();
+    let has = |name: &str| stitched.iter().any(|(n, _)| n == name);
+    assert!(has("prefill"), "stitched timeline missing prefill: {stitched:?}");
+    assert!(has("transfer"), "stitched timeline missing the wire hop: {stitched:?}");
+    assert!(has("adopt"), "stitched timeline missing adoption: {stitched:?}");
+    assert!(has("round"),
+            "stitched timeline missing adopter decode rounds: {stitched:?}");
+    assert!(stitched.iter().any(|(_, c)| c == "net"),
+            "stitched timeline must cross the net lane: {stitched:?}");
+    front.shutdown();
+    back.shutdown();
+}
+
+#[test]
+fn ring_overflow_drops_oldest_and_counts_via_public_api() {
+    let t = Tracer::new(1, 1, 8);
+    for i in 0..20u64 {
+        let t0 = t.now_us();
+        t.push(t.span(0, 1, &format!("s{i}"), "decode", t0));
+    }
+    let (recorded, dropped) = t.stats();
+    assert_eq!(recorded, 20);
+    assert_eq!(dropped, 12);
+    let snap = t.snapshot();
+    assert_eq!(snap.len(), 8, "ring must hold exactly its capacity");
+    assert!(snap.iter().all(|s| s.name != "s0"),
+            "overflow must evict the oldest span first");
+    assert_eq!(trace::trace_section(&t.chrome_json())
+                   .get("dropped")
+                   .and_then(Json::as_f64),
+               Some(12.0));
+}
+
+#[test]
+fn tracing_disabled_keeps_the_wire_format_and_yields_null_traces() {
+    let dir = sim_dir();
+    let plain = ServerHandle::start(
+        ServerConfig::builder()
+            .queue_depth(64)
+            .workers(1)
+            .artifacts_dir(dir.clone())
+            .build(),
+    )
+    .unwrap();
+    assert!(plain.tracer.is_none(), "tracing must default off");
+    assert!(matches!(plain.trace_json(), Json::Null));
+
+    // even a request ASKING for a trace gets no timeline when the server
+    // records no spans — and no new keys appear on the wire
+    let rx = plain
+        .submit(
+            Request::new("def off(x):\n    return x")
+                .max_tokens(16)
+                .method("autoregressive")
+                .trace(true),
+        )
+        .unwrap();
+    let r = rx.wait().unwrap();
+    assert!(r.error.is_none());
+    assert!(r.timeline.is_none());
+    let line = r.to_json_line();
+    assert!(!line.contains("timeline"), "untraced record grew a key: {line}");
+
+    // the text is identical to a traced server's answer for the same
+    // prompt (tracing must never perturb decode)
+    let traced = traced_server(&dir);
+    let rt = run_traced(&traced, "def off(x):\n    return x", 16);
+    assert_eq!(r.text, rt.text, "tracing changed decode output");
+    traced.shutdown();
+    plain.shutdown();
+}
+
+#[test]
+fn validator_gates_bad_dumps() {
+    assert!(trace::validate_trace_json("nope").is_err());
+    assert!(trace::validate_trace_json(r#"{"stats": {}}"#).is_err());
+    assert!(trace::validate_trace_json(
+        r#"{"traceEvents": [{"name": "x", "cat": "c", "ph": "X", "ts": 0}]}"#
+    )
+    .is_err());
+    trace::validate_trace_json(r#"{"traceEvents": []}"#).unwrap();
+}
