@@ -1,0 +1,223 @@
+//! Invariant lints: config/request struct-literal ban, wall-clock ban in
+//! deterministic modules, and the shrink-only unwrap/expect/panic budget
+//! for hot-path files (DESIGN.md §9).
+
+use super::lexer::{test_regions, Kind, Lexed};
+use super::{allowed, Finding};
+
+/// Types whose struct literals are confined to their defining module —
+/// everywhere else construction goes through `Default`/builders, so adding
+/// a field is never a silent semantic change at call sites.
+const BANNED_LITERALS: &[(&str, &str)] = &[
+    ("ServerConfig", "server/config.rs"),
+    ("WorkerConfig", "server/config.rs"),
+    ("Request", "server/request.rs"),
+];
+
+/// Tokens that may legally precede `Type {` without it being a literal:
+/// definitions, impl headers, return types, bounds.
+const NON_LITERAL_PREV: &[&str] =
+    &["struct", "enum", "trait", "impl", "for", "dyn", "as", "->", ":", "&", "<", ">"];
+
+/// Modules that must stay deterministic: replayable schedules, seeded
+/// RNG, engine math. `Instant::now` / `SystemTime` there means replay
+/// drift, so wall-clock reads need an explicit `wall-clock` allow.
+pub const WALL_CLOCK_SCOPE: &[&str] =
+    &["bench/load.rs", "util/rng.rs", "/workload/", "/engine/"];
+
+/// Hot-path files under the shrink-only unwrap budget.
+pub const HOT_PATH: &[&str] =
+    &["server/worker.rs", "server/scheduler.rs", "net/mod.rs"];
+
+pub fn in_wall_clock_scope(file: &str) -> bool {
+    WALL_CLOCK_SCOPE.iter().any(|s| file.ends_with(s) || file.contains(s))
+}
+
+pub fn is_hot_path(file: &str) -> bool {
+    HOT_PATH.iter().any(|s| file.ends_with(s))
+}
+
+/// Struct-literal ban: `Type {` outside the defining module, except in
+/// definition/type positions.
+pub fn check_struct_literals(file: &str, lexed: &Lexed) -> Vec<Finding> {
+    let toks = &lexed.toks;
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if toks[i].kind != Kind::Ident {
+            continue;
+        }
+        let Some((ty, home)) =
+            BANNED_LITERALS.iter().find(|(t, _)| toks[i].is_ident(t))
+        else {
+            continue;
+        };
+        if file.ends_with(home) {
+            continue;
+        }
+        if i + 1 >= toks.len() || !toks[i + 1].is("{") {
+            continue;
+        }
+        let prev_ok = i > 0
+            && (NON_LITERAL_PREV.iter().any(|p| toks[i - 1].is(p))
+                || toks[i - 1].is("::"));
+        if prev_ok || allowed(lexed, "struct-literal", toks[i].line) {
+            continue;
+        }
+        out.push(Finding::new(
+            "struct-literal",
+            file,
+            toks[i].line,
+            format!(
+                "`{ty} {{ .. }}` literal outside {home}: construct via \
+                 `{ty}::builder()`/`Default` so new fields keep defaults"
+            ),
+        ));
+    }
+    out
+}
+
+/// Wall-clock ban: `Instant::now` / `SystemTime` / `UNIX_EPOCH` inside the
+/// deterministic scope (the caller decides scope via
+/// [`in_wall_clock_scope`]).
+pub fn check_wall_clock(file: &str, lexed: &Lexed) -> Vec<Finding> {
+    let toks = &lexed.toks;
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        let hit = (toks[i].is_ident("Instant")
+            && i + 2 < toks.len()
+            && toks[i + 1].is("::")
+            && toks[i + 2].is_ident("now"))
+            || toks[i].is_ident("SystemTime")
+            || toks[i].is_ident("UNIX_EPOCH");
+        if !hit || allowed(lexed, "wall-clock", toks[i].line) {
+            continue;
+        }
+        out.push(Finding::new(
+            "wall-clock",
+            file,
+            toks[i].line,
+            format!(
+                "wall-clock read `{}` in a deterministic module: derive \
+                 time from the seeded schedule, or annotate why real time \
+                 is required",
+                toks[i].text
+            ),
+        ));
+    }
+    out
+}
+
+/// Every `.unwrap()` / `.expect(` / `panic!(` site outside `#[cfg(test)]`
+/// modules in a hot-path file. The caller compares the count against the
+/// shrink-only baseline.
+pub fn hot_unwrap_sites(file: &str, lexed: &Lexed) -> Vec<Finding> {
+    let toks = &lexed.toks;
+    let mask = test_regions(toks);
+    let mut out = Vec::new();
+    for i in 0..toks.len() {
+        if mask[i] {
+            continue;
+        }
+        let site = if toks[i].is(".")
+            && i + 2 < toks.len()
+            && (toks[i + 1].is_ident("unwrap") || toks[i + 1].is_ident("expect"))
+            && toks[i + 2].is("(")
+        {
+            Some((toks[i + 1].text.clone(), toks[i + 1].line))
+        } else if toks[i].is_ident("panic")
+            && i + 2 < toks.len()
+            && toks[i + 1].is("!")
+            && toks[i + 2].is("(")
+        {
+            Some(("panic!".to_string(), toks[i].line))
+        } else {
+            None
+        };
+        let Some((what, line)) = site else { continue };
+        if allowed(lexed, "hot-unwrap", line) {
+            continue;
+        }
+        out.push(Finding::new(
+            "hot-unwrap",
+            file,
+            line,
+            format!("`{what}` on the hot path: return an error or degrade"),
+        ));
+    }
+    out
+}
+
+/// Allow directives with a missing/empty mandatory reason.
+pub fn check_allow_reasons(file: &str, lexed: &Lexed) -> Vec<Finding> {
+    lexed
+        .allows
+        .iter()
+        .filter(|a| !a.has_reason)
+        .map(|a| {
+            Finding::new(
+                "lint-allow",
+                file,
+                a.line,
+                format!(
+                    "`lint: allow({})` without a reason: the escape hatch \
+                     grammar requires `reason=<why>`",
+                    a.lint
+                ),
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    #[test]
+    fn config_literal_flagged_outside_home() {
+        let l = lex("fn f() { let c = ServerConfig { workers: 1 }; }");
+        let f = check_struct_literals("rust/tests/x.rs", &l);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].lint, "struct-literal");
+        // same text inside the defining module is fine
+        assert!(check_struct_literals("rust/src/server/config.rs", &l).is_empty());
+    }
+
+    #[test]
+    fn type_positions_are_not_literals() {
+        let l = lex(
+            "impl Default for Request { fn default() -> Request { x() } }\n\
+             fn mk() -> ServerConfig { ServerConfig::builder().build() }",
+        );
+        assert!(check_struct_literals("rust/tests/x.rs", &l).is_empty());
+    }
+
+    #[test]
+    fn wall_clock_flagged_unless_allowed() {
+        let bad = lex("fn f() { let t = Instant::now(); }");
+        assert_eq!(check_wall_clock("rust/src/bench/load.rs", &bad).len(), 1);
+        let ok = lex(
+            "// lint: allow(wall-clock) reason=measures real latency\n\
+             fn f() { let t = Instant::now(); }",
+        );
+        assert!(check_wall_clock("rust/src/bench/load.rs", &ok).is_empty());
+    }
+
+    #[test]
+    fn unwraps_counted_outside_test_mods_only() {
+        let l = lex(
+            "fn f() { x.unwrap(); y.expect(\"boom\"); panic!(\"no\"); }\n\
+             #[cfg(test)] mod tests { fn t() { z.unwrap(); } }",
+        );
+        let f = hot_unwrap_sites("rust/src/server/worker.rs", &l);
+        assert_eq!(f.len(), 3, "{f:?}");
+    }
+
+    #[test]
+    fn bare_allow_needs_reason() {
+        let l = lex("// lint: allow(wall-clock)\nfn f() {}");
+        let f = check_allow_reasons("rust/src/bench/load.rs", &l);
+        assert_eq!(f.len(), 1);
+        assert_eq!(f[0].lint, "lint-allow");
+    }
+}

@@ -1,0 +1,118 @@
+//! Declared lock inventory for the lock-order checker.
+//!
+//! Every `RankedMutex` in the tree is declared here as (file, receiver
+//! ident) → (lock id, rank), mirroring the runtime registration in
+//! [`crate::util::sync`]: the id matches the `name` passed to
+//! `RankedMutex::new`, the rank matches its `rank::*` constant. The static
+//! checker resolves each `.lock()` site against this table; a site whose
+//! receiver is not listed is a `lock-inventory` finding, which is what
+//! keeps the table complete as the tree grows (DESIGN.md §9).
+
+use crate::util::sync::rank;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LockRef {
+    pub id: &'static str,
+    pub rank: u8,
+}
+
+/// (file suffix, receiver ident, lock). An empty file suffix applies in
+/// any file — used for the metrics registry, which crosses module
+/// boundaries behind `Arc<RankedMutex<Registry>>`.
+const INVENTORY: &[(&str, &str, LockRef)] = &[
+    // -- setup --------------------------------------------------------------
+    ("runtime/sim.rs", "ENSURE_LOCK", LockRef { id: "sim.ensure", rank: rank::SETUP }),
+    // -- rebalance hub ------------------------------------------------------
+    ("server/scheduler.rs", "st", LockRef { id: "hub.st", rank: rank::HUB }),
+    ("server/scheduler.rs", "remote", LockRef { id: "hub.remote", rank: rank::HUB }),
+    // -- scheduler / admission ----------------------------------------------
+    ("server/scheduler.rs", "state", LockRef { id: "sched.state", rank: rank::SCHED }),
+    // -- pending-reply tables -----------------------------------------------
+    ("server/server.rs", "pending", LockRef { id: "srv.pending", rank: rank::PENDING }),
+    ("server/server.rs", "pending_c",
+     LockRef { id: "srv.pending", rank: rank::PENDING }),
+    ("server/server.rs", "remote_cancels",
+     LockRef { id: "srv.remote_cancels", rank: rank::PENDING }),
+    ("server/server.rs", "rc_c",
+     LockRef { id: "srv.remote_cancels", rank: rank::PENDING }),
+    ("server/server.rs", "relay_joins",
+     LockRef { id: "srv.relay_joins", rank: rank::PENDING }),
+    // -- cancellation rendezvous --------------------------------------------
+    ("server/scheduler.rs", "ids", LockRef { id: "cancel.ids", rank: rank::CANCEL }),
+    // -- kv -----------------------------------------------------------------
+    ("kv/prefix.rs", "inner", LockRef { id: "kv.prefix", rank: rank::KV }),
+    // -- shared n-gram pools ------------------------------------------------
+    ("ngram/shared.rs", "caches",
+     LockRef { id: "ngram.registry", rank: rank::NGRAM_REGISTRY }),
+    ("ngram/shared.rs", "shards",
+     LockRef { id: "ngram.shard", rank: rank::NGRAM_SHARD }),
+    ("ngram/shared.rs", "shard_for",
+     LockRef { id: "ngram.shard", rank: rank::NGRAM_SHARD }),
+    ("ngram/shared.rs", "s", LockRef { id: "ngram.shard", rank: rank::NGRAM_SHARD }),
+    // -- leaves -------------------------------------------------------------
+    ("server/server.rs", "net_cuts", LockRef { id: "net.cuts", rank: rank::LEAF }),
+    ("server/worker.rs", "m", LockRef { id: "metrics.registry", rank: rank::LEAF }),
+    ("server/worker.rs", "reg", LockRef { id: "metrics.registry", rank: rank::LEAF }),
+    ("trace/mod.rs", "shard", LockRef { id: "trace.shard", rank: rank::LEAF }),
+    ("trace/mod.rs", "shards", LockRef { id: "trace.shard", rank: rank::LEAF }),
+    ("net/mod.rs", "cuts", LockRef { id: "net.cuts", rank: rank::LEAF }),
+    ("net/mod.rs", "st", LockRef { id: "net.relay_buf", rank: rank::LEAF }),
+    ("net/mod.rs", "roster", LockRef { id: "net.peers", rank: rank::LEAF }),
+    ("net/mod.rs", "table", LockRef { id: "net.xfer_table", rank: rank::LEAF }),
+    ("tests/net.rs", "payloads", LockRef { id: "test.payloads", rank: rank::LEAF }),
+    ("tests/net.rs", "cancelled", LockRef { id: "test.cancelled", rank: rank::LEAF }),
+    ("", "metrics", LockRef { id: "metrics.registry", rank: rank::LEAF }),
+    ("", "metrics_c", LockRef { id: "metrics.registry", rank: rank::LEAF }),
+];
+
+/// Resolve a `.lock()` receiver ident in `file` (a `/`-normalized path).
+/// File-specific entries win over the file-agnostic fallbacks.
+pub fn resolve(file: &str, ident: &str) -> Option<LockRef> {
+    let hit = INVENTORY
+        .iter()
+        .find(|(f, id, _)| !f.is_empty() && file.ends_with(f) && *id == ident);
+    match hit {
+        Some((_, _, l)) => Some(*l),
+        None => INVENTORY
+            .iter()
+            .find(|(f, id, _)| f.is_empty() && *id == ident)
+            .map(|(_, _, l)| *l),
+    }
+}
+
+/// Every declared lock id with its rank — the hierarchy table the design
+/// doc and the findings report print.
+pub fn all() -> Vec<LockRef> {
+    let mut out: Vec<LockRef> = Vec::new();
+    for (_, _, l) in INVENTORY {
+        if !out.iter().any(|o| o.id == l.id) {
+            out.push(*l);
+        }
+    }
+    out.sort_by_key(|l| (l.rank, l.id));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn file_specific_beats_global() {
+        let st = resolve("rust/src/net/mod.rs", "st").unwrap();
+        assert_eq!(st.id, "net.relay_buf");
+        let hub = resolve("rust/src/server/scheduler.rs", "st").unwrap();
+        assert_eq!(hub.id, "hub.st");
+        let m = resolve("rust/src/anywhere.rs", "metrics").unwrap();
+        assert_eq!(m.id, "metrics.registry");
+        assert!(resolve("rust/src/anywhere.rs", "mystery").is_none());
+    }
+
+    #[test]
+    fn hierarchy_is_strictly_ranked_at_the_top() {
+        let all = all();
+        assert!(all.len() >= 10, "inventory should cover the tree: {all:?}");
+        assert_eq!(all.first().unwrap().id, "sim.ensure");
+        assert!(all.iter().filter(|l| l.rank == rank::LEAF).count() >= 5);
+    }
+}

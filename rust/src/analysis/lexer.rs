@@ -1,0 +1,433 @@
+//! Hand-rolled Rust token scanner for `lookahead-lint`.
+//!
+//! Substrate for the repo-aware lints (DESIGN.md §9): the offline image has
+//! no `syn`/proc-macro stack, so — like `util/json.rs` — the analysis pass
+//! scans source text with a small purpose-built lexer. It produces a flat
+//! token stream with line numbers (enough for every lint in
+//! [`crate::analysis`]), plus the `// lint: allow(<id>) reason=...` escape
+//! hatches found in comments. It is NOT a full Rust lexer: it only needs to
+//! be right about idents, literals, comments, and bracket structure.
+
+/// Token class. `Str` carries the literal's content without quotes; `Life`
+/// is a lifetime (`'a`), kept distinct from char literals so `&'static str`
+/// never confuses the scanner.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Num,
+    Str,
+    Char,
+    Life,
+    Punct,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    pub line: u32,
+}
+
+impl Tok {
+    /// Punct/keyword match — never true for string or char literal content.
+    pub fn is(&self, text: &str) -> bool {
+        self.kind != Kind::Str && self.kind != Kind::Char && self.text == text
+    }
+
+    pub fn is_ident(&self, text: &str) -> bool {
+        self.kind == Kind::Ident && self.text == text
+    }
+}
+
+/// One `// lint: allow(<id>) reason=<text>` directive. `has_reason` is
+/// false when the `reason=` clause is missing or empty — the allow grammar
+/// makes the reason mandatory, and a bare allow is itself a finding.
+#[derive(Debug, Clone)]
+pub struct Allow {
+    pub line: u32,
+    pub lint: String,
+    pub has_reason: bool,
+}
+
+/// Multi-character operators, longest first (maximal munch).
+const PUNCTS: &[&str] = &[
+    "..=", "<<=", ">>=", "->", "=>", "::", "..", "&&", "||", "<<", ">>", "==",
+    "!=", "<=", ">=", "+=", "-=", "*=", "/=", "%=", "^=", "&=", "|=",
+];
+
+#[derive(Clone)]
+pub struct Lexed {
+    pub toks: Vec<Tok>,
+    pub allows: Vec<Allow>,
+}
+
+/// Scan `src` into tokens + allow directives. Unterminated constructs
+/// (string, block comment) end the scan at EOF rather than erroring: the
+/// linter runs over a tree the compiler also sees, so malformed input is
+/// the compiler's problem, not ours.
+pub fn lex(src: &str) -> Lexed {
+    let b = src.as_bytes();
+    let mut toks = Vec::new();
+    let mut allows = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1u32;
+    while i < b.len() {
+        let c = b[i];
+        if c == b'\n' {
+            line += 1;
+            i += 1;
+        } else if c.is_ascii_whitespace() {
+            i += 1;
+        } else if c == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+            let start = i;
+            while i < b.len() && b[i] != b'\n' {
+                i += 1;
+            }
+            if let Some(a) = parse_allow(&src[start..i], line) {
+                allows.push(a);
+            }
+        } else if c == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < b.len() && depth > 0 {
+                if b[i] == b'\n' {
+                    line += 1;
+                    i += 1;
+                } else if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+        } else if c == b'"' {
+            let (text, ni, nl) = scan_string(src, i + 1, line);
+            toks.push(Tok { kind: Kind::Str, text, line });
+            line = nl;
+            i = ni;
+        } else if (c == b'r' || c == b'b') && raw_string_start(b, i).is_some() {
+            let (hashes, body_start) = raw_string_start(b, i).unwrap();
+            let (text, ni, nl) = scan_raw_string(src, body_start, hashes, line);
+            toks.push(Tok { kind: Kind::Str, text, line });
+            line = nl;
+            i = ni;
+        } else if c == b'\'' {
+            let (tok, ni) = scan_quote(src, i, line);
+            toks.push(tok);
+            i = ni;
+        } else if c.is_ascii_alphabetic() || c == b'_' {
+            let start = i;
+            while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                i += 1;
+            }
+            toks.push(Tok { kind: Kind::Ident, text: src[start..i].to_string(), line });
+        } else if c.is_ascii_digit() {
+            let start = i;
+            while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                i += 1;
+            }
+            // one fractional part, but never eat a `..` range operator
+            if i + 1 < b.len() && b[i] == b'.' && b[i + 1].is_ascii_digit() {
+                i += 1;
+                while i < b.len() && (b[i].is_ascii_alphanumeric() || b[i] == b'_') {
+                    i += 1;
+                }
+            }
+            toks.push(Tok { kind: Kind::Num, text: src[start..i].to_string(), line });
+        } else {
+            let rest = &src[i..];
+            let p = PUNCTS.iter().find(|p| rest.starts_with(**p));
+            let text = match p {
+                Some(p) => p.to_string(),
+                None => (c as char).to_string(),
+            };
+            i += text.len();
+            toks.push(Tok { kind: Kind::Punct, text, line });
+        }
+    }
+    Lexed { toks, allows }
+}
+
+/// `r"`, `r#"`, `b"`… — returns (hash count, index of first body byte).
+fn raw_string_start(b: &[u8], i: usize) -> Option<(usize, usize)> {
+    let mut j = i + 1; // past the r/b marker
+    if b[i] == b'b' && j < b.len() && b[j] == b'r' {
+        j += 1;
+    } else if b[i] == b'b' && j < b.len() && b[j] == b'"' {
+        return Some((usize::MAX, j + 1)); // b"…": plain string body
+    } else if b[i] == b'b' {
+        return None;
+    }
+    let mut hashes = 0usize;
+    while j < b.len() && b[j] == b'#' {
+        hashes += 1;
+        j += 1;
+    }
+    if j < b.len() && b[j] == b'"' {
+        Some((hashes, j + 1))
+    } else {
+        None
+    }
+}
+
+/// Body of a `"…"` string starting after the opening quote; returns
+/// (content, index past closing quote, updated line).
+fn scan_string(src: &str, mut i: usize, mut line: u32) -> (String, usize, u32) {
+    let b = src.as_bytes();
+    let mut out = String::new();
+    while i < b.len() {
+        match b[i] {
+            b'"' => return (out, i + 1, line),
+            b'\\' if i + 1 < b.len() => {
+                out.push(b[i + 1] as char);
+                i += 2;
+            }
+            b'\n' => {
+                line += 1;
+                out.push('\n');
+                i += 1;
+            }
+            c => {
+                out.push(c as char);
+                i += 1;
+            }
+        }
+    }
+    (out, i, line)
+}
+
+/// Body of a raw string: ends at `"` followed by `hashes` `#`s. A
+/// `hashes` of `usize::MAX` marks a `b"…"` byte string (escape rules of a
+/// plain string).
+fn scan_raw_string(
+    src: &str,
+    mut i: usize,
+    hashes: usize,
+    mut line: u32,
+) -> (String, usize, u32) {
+    if hashes == usize::MAX {
+        return scan_string(src, i, line);
+    }
+    let b = src.as_bytes();
+    let mut out = String::new();
+    while i < b.len() {
+        if b[i] == b'"' {
+            let end = i + 1;
+            let have = b[end..].iter().take_while(|&&c| c == b'#').count();
+            if have >= hashes {
+                return (out, end + hashes, line);
+            }
+        }
+        if b[i] == b'\n' {
+            line += 1;
+        }
+        out.push(b[i] as char);
+        i += 1;
+    }
+    (out, i, line)
+}
+
+/// `'…'` char literal vs `'a` lifetime: any single character (ident or
+/// punctuation — `'.'`, `b'{'`) with a closing quote is a char literal; a
+/// quote followed by an ident run with no closing quote is a lifetime.
+fn scan_quote(src: &str, i: usize, line: u32) -> (Tok, usize) {
+    let b = src.as_bytes();
+    let mut j = i + 1;
+    if j >= b.len() {
+        return (Tok { kind: Kind::Life, text: String::new(), line }, j);
+    }
+    if b[j] == b'\\' {
+        // escaped char literal: consume escape + closing quote
+        j += 2;
+        while j < b.len() && b[j] != b'\'' {
+            j += 1;
+        }
+        let text = src[i + 1..j.min(src.len())].to_string();
+        return (Tok { kind: Kind::Char, text, line }, (j + 1).min(b.len()));
+    }
+    if j + 1 < b.len() && b[j + 1] == b'\'' && b[j] != b'\'' {
+        return (Tok { kind: Kind::Char, text: src[j..j + 1].to_string(), line }, j + 2);
+    }
+    let mut k = j;
+    while k < b.len() && (b[k].is_ascii_alphanumeric() || b[k] == b'_') {
+        k += 1;
+    }
+    (Tok { kind: Kind::Life, text: src[j..k].to_string(), line }, k)
+}
+
+/// Parse `// lint: allow(<id>) reason=<text>` out of a line comment.
+/// Directives live in plain `//` comments only — doc comments (`///`,
+/// `//!`) are documentation and may quote the grammar without enacting it.
+fn parse_allow(comment: &str, line: u32) -> Option<Allow> {
+    if comment.starts_with("///") || comment.starts_with("//!") {
+        return None;
+    }
+    let at = comment.find("lint: allow(")?;
+    let rest = &comment[at + "lint: allow(".len()..];
+    let close = rest.find(')')?;
+    let lint = rest[..close].trim().to_string();
+    let tail = &rest[close + 1..];
+    let has_reason = match tail.find("reason=") {
+        Some(r) => !tail[r + "reason=".len()..].trim().is_empty(),
+        None => false,
+    };
+    Some(Allow { line, lint, has_reason })
+}
+
+/// Index of the `}` matching the `{` at `open` (which must be a `{`).
+pub fn match_brace(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0usize;
+    for (off, t) in toks[open..].iter().enumerate() {
+        if t.kind == Kind::Punct {
+            if t.text == "{" {
+                depth += 1;
+            } else if t.text == "}" {
+                depth -= 1;
+                if depth == 0 {
+                    return open + off;
+                }
+            }
+        }
+    }
+    toks.len() - 1
+}
+
+/// Index of the `)`/`]` matching the opener at `open`.
+pub fn match_group(toks: &[Tok], open: usize) -> usize {
+    let (o, c) = match toks[open].text.as_str() {
+        "(" => ("(", ")"),
+        "[" => ("[", "]"),
+        _ => return open,
+    };
+    let mut depth = 0usize;
+    for (off, t) in toks[open..].iter().enumerate() {
+        if t.kind == Kind::Punct {
+            if t.text == o {
+                depth += 1;
+            } else if t.text == c {
+                depth -= 1;
+                if depth == 0 {
+                    return open + off;
+                }
+            }
+        }
+    }
+    toks.len() - 1
+}
+
+/// Per-token flags marking `#[cfg(test)] mod … { … }` regions, so lints
+/// scoped to shipping code can skip in-file test modules.
+pub fn test_regions(toks: &[Tok]) -> Vec<bool> {
+    let mut mask = vec![false; toks.len()];
+    let mut i = 0usize;
+    while i + 8 < toks.len() {
+        let cfg_test = toks[i].is("#")
+            && toks[i + 1].is("[")
+            && toks[i + 2].is_ident("cfg")
+            && toks[i + 3].is("(")
+            && toks[i + 4].is_ident("test")
+            && toks[i + 5].is(")")
+            && toks[i + 6].is("]");
+        if cfg_test {
+            // allow attributes between the cfg and the mod keyword
+            let mut j = i + 7;
+            while j < toks.len() && toks[j].is("#") {
+                if j + 1 < toks.len() && toks[j + 1].is("[") {
+                    j = match_group_sq(toks, j + 1) + 1;
+                } else {
+                    break;
+                }
+            }
+            if j + 1 < toks.len() && toks[j].is_ident("mod") {
+                let mut k = j + 1;
+                while k < toks.len() && !toks[k].is("{") && !toks[k].is(";") {
+                    k += 1;
+                }
+                if k < toks.len() && toks[k].is("{") {
+                    let end = match_brace(toks, k);
+                    for m in mask.iter_mut().take(end + 1).skip(i) {
+                        *m = true;
+                    }
+                    i = end + 1;
+                    continue;
+                }
+            }
+        }
+        i += 1;
+    }
+    mask
+}
+
+fn match_group_sq(toks: &[Tok], open: usize) -> usize {
+    let mut depth = 0usize;
+    for (off, t) in toks[open..].iter().enumerate() {
+        if t.is("[") {
+            depth += 1;
+        } else if t.is("]") {
+            depth -= 1;
+            if depth == 0 {
+                return open + off;
+            }
+        }
+    }
+    toks.len() - 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idents_strings_and_lifetimes() {
+        let l = lex("fn f<'a>(s: &'a str) { x.lock(); \"na\\\"me\" }");
+        let idents: Vec<&str> = l
+            .toks
+            .iter()
+            .filter(|t| t.kind == Kind::Ident)
+            .map(|t| t.text.as_str())
+            .collect();
+        assert_eq!(idents, ["fn", "f", "s", "str", "x", "lock"]);
+        assert!(l.toks.iter().any(|t| t.kind == Kind::Life && t.text == "a"));
+        assert!(l.toks.iter().any(|t| t.kind == Kind::Str && t.text == "na\"me"));
+    }
+
+    #[test]
+    fn char_literal_is_not_a_lifetime() {
+        let l = lex("let c = 'x'; let n = '\\n'; fn g<'de>() {}");
+        assert!(l.toks.iter().any(|t| t.kind == Kind::Char && t.text == "x"));
+        assert!(l.toks.iter().any(|t| t.kind == Kind::Life && t.text == "de"));
+    }
+
+    #[test]
+    fn comments_yield_allow_directives() {
+        let src = "// lint: allow(wall-clock) reason=measures real latency\n\
+                   let t = 1; // lint: allow(lock-order)\n";
+        let l = lex(src);
+        assert_eq!(l.allows.len(), 2);
+        assert_eq!(l.allows[0].lint, "wall-clock");
+        assert!(l.allows[0].has_reason);
+        assert_eq!(l.allows[1].line, 2);
+        assert!(!l.allows[1].has_reason);
+    }
+
+    #[test]
+    fn test_region_mask_covers_cfg_test_mod() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests { fn t() {} }\n";
+        let l = lex(src);
+        let mask = test_regions(&l.toks);
+        let live = l.toks.iter().position(|t| t.is_ident("live")).unwrap();
+        let t = l.toks.iter().rposition(|t| t.is_ident("t")).unwrap();
+        assert!(!mask[live]);
+        assert!(mask[t]);
+    }
+
+    #[test]
+    fn numbers_do_not_eat_range_dots() {
+        let l = lex("for i in 0..10 { a[i] = 1.5; }");
+        assert!(l.toks.iter().any(|t| t.kind == Kind::Punct && t.text == ".."));
+        assert!(l.toks.iter().any(|t| t.kind == Kind::Num && t.text == "1.5"));
+    }
+}

@@ -1,0 +1,575 @@
+//! Lock-order checker: static acquired-while-held analysis over the token
+//! stream, resolved against the declared inventory.
+//!
+//! Per function body the scanner tracks live guards — a let-bound guard
+//! lives to the end of its block, a temporary to the end of its statement,
+//! `drop(g)` kills early — and records (1) a direct edge `A → B` whenever
+//! lock B is acquired while A is held, and (2) every call made while a
+//! lock is held. Call effects are closed inter-procedurally: a function's
+//! acquire set is its direct acquisitions plus those of everything it
+//! calls (fixpoint, callees matched by name across the tree). An edge is a
+//! violation unless the held rank is strictly below the acquired rank —
+//! strict ascent makes the acquired-while-held graph acyclic by
+//! construction, so rank checking subsumes cycle detection.
+//!
+//! Known soundness trades (DESIGN.md §9): closure bodies are analyzed as
+//! separate functions with an empty held-set (spawned/deferred work runs
+//! on its own thread); calls chained directly onto a fresh guard
+//! (`x.lock().len()`) target the protected data, not a lock, and are not
+//! resolved; ubiquitous container-method names (`len`, `insert`, …) are
+//! never resolved by name — a lock-bearing method must not hide behind
+//! one.
+
+use super::inventory::{self, LockRef};
+use super::lexer::{match_brace, Kind, Lexed, Tok};
+use super::{allowed, Finding};
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Method names too common to resolve by bare name — matching them against
+/// same-named crate functions would wire container calls to unrelated lock
+/// summaries.
+const CALL_SKIP: &[&str] = &[
+    "new", "default", "len", "is_empty", "get", "get_mut", "insert", "remove",
+    "push", "pop", "push_back", "pop_front", "clear", "contains", "contains_key",
+    "extend",
+    "drain", "iter", "iter_mut", "into_iter", "keys", "values", "entry",
+    "or_insert_with", "or_default", "clone", "cloned", "copied", "collect",
+    "map", "and_then", "filter", "find", "any", "all", "position", "take",
+    "replace", "unwrap", "unwrap_or", "unwrap_or_else", "unwrap_or_default",
+    "expect", "ok_or", "ok_or_else", "send", "recv", "recv_timeout",
+    "try_recv", "join", "spawn", "min_by_key", "max_by_key", "sum", "count",
+    "write", "read", "flush", "fmt", "to_string", "into", "from", "as_ref",
+    "as_mut", "as_str", "parse", "retain", "for_each", "enumerate",
+];
+
+const KEYWORDS: &[&str] = &[
+    "if", "while", "for", "match", "return", "loop", "else", "move", "fn",
+    "let", "in", "as", "ref", "mut", "impl", "pub", "use", "where", "unsafe",
+    "dyn", "box", "struct", "enum", "trait", "type", "const", "static",
+    "crate", "super", "break", "continue",
+];
+
+#[derive(Debug)]
+struct Edge {
+    from: LockRef,
+    to: LockRef,
+    file: String,
+    line: u32,
+}
+
+#[derive(Debug)]
+struct CallSite {
+    held: LockRef,
+    callee: String,
+    file: String,
+    line: u32,
+}
+
+#[derive(Default)]
+struct Collected {
+    edges: Vec<Edge>,
+    calls_held: Vec<CallSite>,
+    /// fn name → (direct acquires, all callee names) merged across bodies.
+    summaries: BTreeMap<String, (BTreeSet<&'static str>, BTreeSet<String>)>,
+    findings: Vec<Finding>,
+}
+
+/// Run the checker over every lexed file. `files` carries `/`-normalized
+/// paths; the inventory matches on path suffix.
+pub fn check(files: &[(String, Lexed)]) -> Vec<Finding> {
+    let mut c = Collected::default();
+    for (path, lexed) in files {
+        for (name, start, end) in function_bodies(&lexed.toks) {
+            scan_body(path, lexed, &name, start, end, &mut c);
+        }
+    }
+    // close acquire sets over the call graph (rank count bounds the chain)
+    let rank_of: BTreeMap<&str, u8> =
+        inventory::all().iter().map(|l| (l.id, l.rank)).collect();
+    let mut acq: BTreeMap<String, BTreeSet<&'static str>> = c
+        .summaries
+        .iter()
+        .map(|(k, (d, _))| (k.clone(), d.clone()))
+        .collect();
+    for _ in 0..16 {
+        let mut changed = false;
+        for (name, (_, calls)) in &c.summaries {
+            let mut add: BTreeSet<&'static str> = BTreeSet::new();
+            for callee in calls {
+                if let Some(s) = acq.get(callee) {
+                    add.extend(s.iter().copied());
+                }
+            }
+            let cur = acq.entry(name.clone()).or_default();
+            let before = cur.len();
+            cur.extend(add);
+            changed |= cur.len() != before;
+        }
+        if !changed {
+            break;
+        }
+    }
+    let mut findings = std::mem::take(&mut c.findings);
+    for e in &c.edges {
+        if e.from.rank >= e.to.rank {
+            findings.push(Finding::new(
+                "lock-order",
+                &e.file,
+                e.line,
+                format!(
+                    "acquires `{}` (rank {}) while holding `{}` (rank {}): \
+                     lock order must strictly ascend",
+                    e.to.id, e.to.rank, e.from.id, e.from.rank
+                ),
+            ));
+        }
+    }
+    for s in &c.calls_held {
+        let Some(ids) = acq.get(&s.callee) else { continue };
+        for id in ids {
+            let r = rank_of.get(id).copied().unwrap_or(0);
+            if r <= s.held.rank {
+                findings.push(Finding::new(
+                    "lock-order",
+                    &s.file,
+                    s.line,
+                    format!(
+                        "call to `{}` may acquire `{}` (rank {}) while \
+                         holding `{}` (rank {})",
+                        s.callee, id, r, s.held.id, s.held.rank
+                    ),
+                ));
+            }
+        }
+    }
+    findings
+}
+
+/// Every `fn` body in the file as (name, open-brace idx, close-brace idx).
+/// Trait-method declarations (`fn f(…);`) have no body and are skipped.
+fn function_bodies(toks: &[Tok]) -> Vec<(String, usize, usize)> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i + 1 < toks.len() {
+        if toks[i].is_ident("fn") && toks[i + 1].kind == Kind::Ident {
+            let name = toks[i + 1].text.clone();
+            let mut j = i + 2;
+            while j < toks.len() && !toks[j].is("{") && !toks[j].is(";") {
+                j += 1;
+            }
+            if j < toks.len() && toks[j].is("{") {
+                let end = match_brace(toks, j);
+                out.push((name, j, end));
+            }
+            i = j + 1;
+        } else {
+            i += 1;
+        }
+    }
+    out
+}
+
+#[derive(Debug)]
+struct Guard {
+    lock: LockRef,
+    var: Option<String>,
+    depth: i32,
+    temp: bool,
+}
+
+/// Scan one body (tokens `start+1 .. end` for a brace body). Closures are
+/// queued and scanned as separate anonymous bodies with an empty held-set.
+fn scan_body(
+    file: &str,
+    lexed: &Lexed,
+    fname: &str,
+    open: usize,
+    close: usize,
+    c: &mut Collected,
+) {
+    let toks = &lexed.toks;
+    let mut queue: Vec<(usize, usize)> = vec![(open + 1, close)];
+    let mut direct: BTreeSet<&'static str> = BTreeSet::new();
+    let mut calls: BTreeSet<String> = BTreeSet::new();
+    while let Some((lo, hi)) = queue.pop() {
+        let mut guards: Vec<Guard> = Vec::new();
+        let mut depth = 0i32;
+        let mut pdepth = 0i32;
+        let mut stmt_let: Option<String> = None;
+        let mut i = lo;
+        while i < hi {
+            let t = &toks[i];
+            // nested fn items get their own entry from function_bodies —
+            // skip their tokens here so locks are not double-attributed
+            if t.is_ident("fn") && i + 1 < hi && toks[i + 1].kind == Kind::Ident {
+                let mut j = i + 2;
+                while j < hi && !toks[j].is("{") && !toks[j].is(";") {
+                    j += 1;
+                }
+                i = if j < hi && toks[j].is("{") {
+                    match_brace(toks, j) + 1
+                } else {
+                    j + 1
+                };
+                continue;
+            }
+            // closure: body runs later / on another thread — separate scan
+            if (t.is("|") || t.is("||")) && i > 0 && closure_prev(&toks[i - 1]) {
+                let params_end = if t.is("||") {
+                    i
+                } else {
+                    let mut j = i + 1;
+                    while j < hi && !toks[j].is("|") {
+                        j += 1;
+                    }
+                    j
+                };
+                let body = params_end + 1;
+                if body < hi && toks[body].is("{") {
+                    let bend = match_brace(toks, body);
+                    queue.push((body + 1, bend));
+                    i = bend + 1;
+                } else {
+                    // expression body: runs to `,` or the enclosing `)`
+                    let mut j = body;
+                    let mut p = 0i32;
+                    while j < hi {
+                        let tj = &toks[j];
+                        if tj.is("(") || tj.is("[") || tj.is("{") {
+                            p += 1;
+                        } else if tj.is(")") || tj.is("]") || tj.is("}") {
+                            if p == 0 {
+                                break;
+                            }
+                            p -= 1;
+                        } else if (tj.is(",") || tj.is(";")) && p == 0 {
+                            break;
+                        }
+                        j += 1;
+                    }
+                    queue.push((body, j));
+                    i = j;
+                }
+                continue;
+            }
+            // `.lock()` acquisition — must run before the generic punct
+            // bookkeeping below, which would otherwise swallow the `.`
+            if t.is(".")
+                && i + 3 < hi
+                && toks[i + 1].is_ident("lock")
+                && toks[i + 2].is("(")
+                && toks[i + 3].is(")")
+            {
+                let line = toks[i + 1].line;
+                match receiver(toks, i).and_then(|r| inventory::resolve(file, &r)) {
+                    Some(lock) => {
+                        for g in &guards {
+                            if !allowed(lexed, "lock-order", line) {
+                                c.edges.push(Edge {
+                                    from: g.lock,
+                                    to: lock,
+                                    file: file.to_string(),
+                                    line,
+                                });
+                            }
+                        }
+                        direct.insert(lock.id);
+                        let bound = stmt_let.is_some()
+                            && i + 4 < hi
+                            && toks[i + 4].is(";");
+                        guards.push(Guard {
+                            lock,
+                            var: if bound { stmt_let.clone() } else { None },
+                            depth,
+                            temp: !bound,
+                        });
+                    }
+                    None => {
+                        if !allowed(lexed, "lock-inventory", line) {
+                            c.findings.push(Finding::new(
+                                "lock-inventory",
+                                file,
+                                line,
+                                format!(
+                                    "`.lock()` receiver `{}` is not in the \
+                                     declared lock inventory",
+                                    receiver(toks, i).unwrap_or_default()
+                                ),
+                            ));
+                        }
+                    }
+                }
+                i += 4;
+                continue;
+            }
+            // method call `.name(` — skipped when chained off a fresh guard
+            if t.is(".")
+                && i + 2 < hi
+                && toks[i + 1].kind == Kind::Ident
+                && toks[i + 2].is("(")
+            {
+                let name = toks[i + 1].text.clone();
+                if !chain_root_is_lock(toks, i) && !CALL_SKIP.contains(&name.as_str())
+                {
+                    record_call(&name, &guards, file, toks[i + 1].line, lexed, c,
+                                &mut calls);
+                }
+                i += 2; // land on `(` so pdepth stays balanced
+                continue;
+            }
+            if t.kind == Kind::Punct {
+                match t.text.as_str() {
+                    "{" => {
+                        depth += 1;
+                        guards.retain(|g| !g.temp);
+                        stmt_let = None;
+                    }
+                    "}" => {
+                        depth -= 1;
+                        guards.retain(|g| !g.temp && g.depth <= depth);
+                        stmt_let = None;
+                    }
+                    "(" | "[" => pdepth += 1,
+                    ")" | "]" => pdepth -= 1,
+                    ";" if pdepth == 0 => {
+                        guards.retain(|g| !g.temp);
+                        stmt_let = None;
+                    }
+                    "," if pdepth == 0 => guards.retain(|g| !g.temp),
+                    _ => {}
+                }
+                i += 1;
+                continue;
+            }
+            if t.is_ident("let") {
+                let mut j = i + 1;
+                if j < hi && toks[j].is_ident("mut") {
+                    j += 1;
+                }
+                stmt_let = if j + 1 < hi
+                    && toks[j].kind == Kind::Ident
+                    && toks[j + 1].is("=")
+                {
+                    Some(toks[j].text.clone())
+                } else {
+                    None
+                };
+                i += 1;
+                continue;
+            }
+            if t.is_ident("drop")
+                && i + 3 < hi
+                && toks[i + 1].is("(")
+                && toks[i + 2].kind == Kind::Ident
+                && toks[i + 3].is(")")
+            {
+                let name = &toks[i + 2].text;
+                guards.retain(|g| g.var.as_deref() != Some(name));
+                i += 4;
+                continue;
+            }
+            // free / path call `name(`
+            if t.kind == Kind::Ident
+                && i + 1 < hi
+                && toks[i + 1].is("(")
+                && (i == 0 || !toks[i - 1].is("."))
+                && !KEYWORDS.contains(&t.text.as_str())
+                && !CALL_SKIP.contains(&t.text.as_str())
+            {
+                let name = t.text.clone();
+                record_call(&name, &guards, file, t.line, lexed, c, &mut calls);
+                i += 1;
+                continue;
+            }
+            i += 1;
+        }
+    }
+    let entry = c.summaries.entry(fname.to_string()).or_default();
+    entry.0.extend(direct);
+    entry.1.extend(calls);
+}
+
+fn record_call(
+    name: &str,
+    guards: &[Guard],
+    file: &str,
+    line: u32,
+    lexed: &Lexed,
+    c: &mut Collected,
+    calls: &mut BTreeSet<String>,
+) {
+    calls.insert(name.to_string());
+    for g in guards {
+        if !allowed(lexed, "lock-order", line) {
+            c.calls_held.push(CallSite {
+                held: g.lock,
+                callee: name.to_string(),
+                file: file.to_string(),
+                line,
+            });
+        }
+    }
+}
+
+fn closure_prev(t: &Tok) -> bool {
+    t.is("(") || t.is(",") || t.is("=") || t.is("=>") || t.is("{")
+        || t.is_ident("move") || t.is_ident("return") || t.is_ident("else")
+}
+
+/// Receiver ident of `<recv>.lock()`: the token before the dot, looking
+/// through one index `[…]` or call `(…)` group (`shards[i].lock()`,
+/// `shard_for(k).lock()`).
+fn receiver(toks: &[Tok], dot: usize) -> Option<String> {
+    if dot == 0 {
+        return None;
+    }
+    let p = dot - 1;
+    match toks[p].kind {
+        Kind::Ident => Some(toks[p].text.clone()),
+        Kind::Punct if toks[p].is("]") || toks[p].is(")") => {
+            let open = rev_match(toks, p)?;
+            if open == 0 {
+                return None;
+            }
+            match toks[open - 1].kind {
+                Kind::Ident => Some(toks[open - 1].text.clone()),
+                _ => None,
+            }
+        }
+        _ => None,
+    }
+}
+
+/// Does the postfix chain containing the call at `dot` start at a
+/// `.lock()` call? (`x.lock().ring.iter()` → yes for both `.ring`-chained
+/// calls; `out.extend(…)` → no.)
+fn chain_root_is_lock(toks: &[Tok], mut k: usize) -> bool {
+    loop {
+        if k == 0 {
+            return false;
+        }
+        let mut p = k - 1;
+        while p > 0 && toks[p].is("?") {
+            p -= 1;
+        }
+        if toks[p].is(")") || toks[p].is("]") {
+            let Some(open) = rev_match(toks, p) else { return false };
+            if open == 0 {
+                return false;
+            }
+            let q = open - 1;
+            if toks[q].kind == Kind::Ident {
+                if toks[q].is_ident("lock") {
+                    return true;
+                }
+                if q >= 1 && toks[q - 1].is(".") {
+                    k = q - 1;
+                    continue;
+                }
+            }
+            return false;
+        }
+        if toks[p].kind == Kind::Ident || toks[p].kind == Kind::Num {
+            if p >= 1 && toks[p - 1].is(".") {
+                k = p - 1;
+                continue;
+            }
+            return false;
+        }
+        return false;
+    }
+}
+
+/// Index of the `(`/`[` matching the closer at `close`, scanning backward.
+fn rev_match(toks: &[Tok], close: usize) -> Option<usize> {
+    let (o, c) = match toks[close].text.as_str() {
+        ")" => ("(", ")"),
+        "]" => ("[", "]"),
+        _ => return None,
+    };
+    let mut depth = 0i32;
+    for j in (0..=close).rev() {
+        if toks[j].kind != Kind::Punct {
+            continue;
+        }
+        if toks[j].text == c {
+            depth += 1;
+        } else if toks[j].text == o {
+            depth -= 1;
+            if depth == 0 {
+                return Some(j);
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn run(src: &str, path: &str) -> Vec<Finding> {
+        check(&[(path.to_string(), lex(src))])
+    }
+
+    #[test]
+    fn ascending_nesting_is_clean() {
+        // sched.state (20) then cancel.ids (40): strict ascent, no finding
+        let src = "fn f(&self) { let st = self.state.lock(); \
+                   self.ids.lock().insert(1); }";
+        let f = run(src, "rust/src/server/scheduler.rs");
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn descending_direct_edge_is_flagged() {
+        let src = "fn f(&self) { let m = metrics.lock(); \
+                   let s = self.state.lock(); }";
+        let f = run(src, "rust/src/server/scheduler.rs");
+        assert!(f.iter().any(|f| f.lint == "lock-order"), "{f:?}");
+    }
+
+    #[test]
+    fn interprocedural_edge_through_named_call() {
+        let src = "fn locks_low(&self) { self.state.lock().touch(); }\n\
+                   fn caller(&self) { let m = metrics.lock(); \
+                   self.sched.locks_low(); }";
+        let f = run(src, "rust/src/server/scheduler.rs");
+        assert!(
+            f.iter().any(|f| f.lint == "lock-order" && f.msg.contains("locks_low")),
+            "{f:?}"
+        );
+    }
+
+    #[test]
+    fn guard_chained_calls_are_not_resolved() {
+        // `.lock().request()` targets the protected data, not CancelSet
+        let src = "fn request(&self) { self.ids.lock().insert(1); }\n\
+                   fn f(&self) { self.ids.lock().request(); }";
+        let f = run(src, "rust/src/server/scheduler.rs");
+        assert!(f.iter().all(|f| f.lint != "lock-order"), "{f:?}");
+    }
+
+    #[test]
+    fn drop_releases_before_next_acquire() {
+        let src = "fn f(&self) { let m = metrics.lock(); drop(m); \
+                   let s = self.state.lock(); }";
+        let f = run(src, "rust/src/server/scheduler.rs");
+        assert!(f.iter().all(|f| f.lint != "lock-order"), "{f:?}");
+    }
+
+    #[test]
+    fn closure_bodies_scan_with_empty_held_set() {
+        let src = "fn f(&self) { let m = metrics.lock(); \
+                   spawn(move || { let s = self.state.lock(); s.touch(); }); }";
+        let f = run(src, "rust/src/server/scheduler.rs");
+        assert!(f.iter().all(|f| f.lint != "lock-order"), "{f:?}");
+    }
+
+    #[test]
+    fn unknown_receiver_is_an_inventory_finding() {
+        let f = run("fn f() { mystery.lock(); }", "rust/src/server/server.rs");
+        assert!(f.iter().any(|f| f.lint == "lock-inventory"), "{f:?}");
+    }
+}

@@ -1,0 +1,235 @@
+//! Metrics-name cross-check: every metric the tests or the bench harness
+//! read must have a registration site, and every registered counter in the
+//! `ctl_*` / `net_*` / `kv_*` / `trace_*` families must be read somewhere
+//! — orphaned names are how dashboards silently go dark (DESIGN.md §9).
+//!
+//! Registrations are the string literals reaching `.inc(` / `.set(` /
+//! `.observe(` / `bump(` calls in shipping code; references are the
+//! literals reaching `.counter(` / `.summary(` / `report_counter(` calls
+//! plus `"counters.<name>"` / `"histograms.<name>"` path strings in the
+//! test suite and the bench harness. A literal containing `{` (a
+//! `format!` template) registers its prefix as a dynamic family: families
+//! satisfy references by prefix and are exempt from the reverse check.
+
+use super::lexer::{match_group, test_regions, Kind, Lexed};
+use super::{allowed, Finding};
+use std::collections::BTreeMap;
+
+const REG_CALLS: &[&str] = &["inc", "set", "observe", "bump"];
+const REF_CALLS: &[&str] = &["counter", "summary", "report_counter"];
+const FAMILIES: &[&str] = &["ctl_", "net_", "kv_", "trace_"];
+
+#[derive(Debug, Default, Clone)]
+pub struct Names {
+    /// exact name → first (file, line)
+    pub exact: BTreeMap<String, (String, u32)>,
+    /// family prefix (from a `{`-bearing template) → first (file, line)
+    pub family: BTreeMap<String, (String, u32)>,
+}
+
+impl Names {
+    fn add(&mut self, lit: &str, file: &str, line: u32) {
+        if lit.is_empty() {
+            return;
+        }
+        match lit.find('{') {
+            Some(0) => {}
+            Some(b) => {
+                self.family
+                    .entry(lit[..b].to_string())
+                    .or_insert_with(|| (file.to_string(), line));
+            }
+            None => {
+                self.exact
+                    .entry(lit.to_string())
+                    .or_insert_with(|| (file.to_string(), line));
+            }
+        }
+    }
+
+    fn covers(&self, name: &str) -> bool {
+        self.exact.contains_key(name)
+            || self.family.keys().any(|f| name.starts_with(f.as_str()))
+    }
+
+    fn covers_family(&self, prefix: &str) -> bool {
+        let fam = |f: &String| f.starts_with(prefix) || prefix.starts_with(f.as_str());
+        self.family.keys().any(fam) || self.exact.keys().any(|n| n.starts_with(prefix))
+    }
+}
+
+/// Collect literals reaching `calls` in one file; `skip_tests` drops
+/// `#[cfg(test)] mod` regions (registrations must live in shipping code,
+/// while reference scanning runs over test files wholesale).
+fn collect(file: &str, lexed: &Lexed, calls: &[&str], skip_tests: bool) -> Names {
+    let toks = &lexed.toks;
+    let mask = test_regions(toks);
+    let mut out = Names::default();
+    for i in 0..toks.len() {
+        if skip_tests && mask[i] {
+            continue;
+        }
+        if toks[i].kind != Kind::Ident
+            || !calls.contains(&toks[i].text.as_str())
+            || i + 1 >= toks.len()
+            || !toks[i + 1].is("(")
+        {
+            continue;
+        }
+        let end = match_group(toks, i + 1);
+        for t in &toks[i + 1..end] {
+            if t.kind == Kind::Str {
+                out.add(&t.text, file, t.line);
+            }
+        }
+    }
+    out
+}
+
+/// `"counters.<name>"` / `"histograms.<name>[.stat]"` path literals.
+fn collect_paths(file: &str, lexed: &Lexed, out: &mut Names) {
+    for t in &lexed.toks {
+        if t.kind != Kind::Str {
+            continue;
+        }
+        for prefix in ["counters.", "histograms."] {
+            if let Some(rest) = t.text.strip_prefix(prefix) {
+                let name = rest.split('.').next().unwrap_or(rest);
+                out.add(name, file, t.line);
+            }
+        }
+    }
+}
+
+/// Cross-check over the whole corpus. `src` is shipping code (registration
+/// side); `refs` is the test suite + bench harness (reference side — the
+/// bench harness belongs to BOTH sides, since `bench_json` reads the
+/// scrape it also documents).
+pub fn check(src: &[(String, Lexed)], refs: &[(String, Lexed)]) -> Vec<Finding> {
+    let mut registered = Names::default();
+    for (path, lexed) in src {
+        let n = collect(path, lexed, REG_CALLS, true);
+        for (k, v) in n.exact {
+            registered.exact.entry(k).or_insert(v);
+        }
+        for (k, v) in n.family {
+            registered.family.entry(k).or_insert(v);
+        }
+    }
+    let mut referenced = Names::default();
+    for (path, lexed) in refs {
+        let n = collect(path, lexed, REF_CALLS, false);
+        for (k, v) in n.exact {
+            referenced.exact.entry(k).or_insert(v);
+        }
+        for (k, v) in n.family {
+            referenced.family.entry(k).or_insert(v);
+        }
+        collect_paths(path, lexed, &mut referenced);
+    }
+    let mut findings = Vec::new();
+    // forward: everything the tests/bench read must be published somewhere
+    for (name, (file, line)) in &referenced.exact {
+        if !registered.covers(name) {
+            findings.push(Finding::new(
+                "metrics-name",
+                file,
+                *line,
+                format!("metric `{name}` is asserted here but never registered"),
+            ));
+        }
+    }
+    for (prefix, (file, line)) in &referenced.family {
+        if !registered.covers_family(prefix) {
+            findings.push(Finding::new(
+                "metrics-name",
+                file,
+                *line,
+                format!("metric family `{prefix}*` is asserted here but never \
+                         registered"),
+            ));
+        }
+    }
+    // reverse: registered ctl_/net_/kv_/trace_ counters must be read
+    for (name, (file, line)) in &registered.exact {
+        if !FAMILIES.iter().any(|f| name.starts_with(f)) {
+            continue;
+        }
+        if !referenced.covers(name) {
+            let lexed = src.iter().find(|(p, _)| p == file).map(|(_, l)| l);
+            if lexed.is_some_and(|l| allowed(l, "metrics-name", *line)) {
+                continue;
+            }
+            findings.push(Finding::new(
+                "metrics-name",
+                file,
+                *line,
+                format!(
+                    "metric `{name}` is registered here but no test or bench \
+                     section reads it"
+                ),
+            ));
+        }
+    }
+    findings
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::lexer::lex;
+    use super::*;
+
+    fn corpus(src: &str, test: &str) -> Vec<Finding> {
+        check(
+            &[("rust/src/x.rs".to_string(), lex(src))],
+            &[("rust/tests/t.rs".to_string(), lex(test))],
+        )
+    }
+
+    #[test]
+    fn matched_names_are_clean() {
+        let f = corpus(
+            "fn f(m: &mut R) { m.inc(\"net_hops\", 1); }",
+            "fn t() { assert!(m.counter(\"net_hops\") > 0); }",
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn orphaned_registration_and_dangling_reference() {
+        let f = corpus(
+            "fn f(m: &mut R) { m.inc(\"net_orphan\", 1); }",
+            "fn t() { assert!(m.counter(\"net_ghost\") > 0); }",
+        );
+        assert_eq!(f.len(), 2, "{f:?}");
+        assert!(f.iter().any(|f| f.msg.contains("net_ghost")));
+        assert!(f.iter().any(|f| f.msg.contains("net_orphan")));
+    }
+
+    #[test]
+    fn format_families_cover_by_prefix_and_skip_reverse() {
+        let f = corpus(
+            "fn f(m: &mut R) { m.inc(&format!(\"ctl_switch_to_{}\", x), 1); }",
+            "fn t() { assert!(m.counter(\"ctl_switch_to_lookahead\") > 0); }",
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn counters_path_strings_count_as_references() {
+        let f = corpus(
+            "fn f(m: &mut R) { m.set(\"kv_bytes\", 1); }",
+            "fn t() { r.path(\"counters.kv_bytes\"); }",
+        );
+        assert!(f.is_empty(), "{f:?}");
+    }
+
+    #[test]
+    fn registrations_inside_test_mods_do_not_count() {
+        let f = corpus(
+            "#[cfg(test)] mod tests { fn f(m: &mut R) { m.inc(\"net_t\", 1); } }",
+            "fn t() { m.counter(\"net_t\"); }",
+        );
+        assert_eq!(f.len(), 1, "{f:?}");
+    }
+}

@@ -1,0 +1,290 @@
+//! `lookahead-lint`: repo-aware static analysis (DESIGN.md §9).
+//!
+//! Four lint families run over the lexed tree (see [`lexer`]):
+//!
+//! * `lock-order` / `lock-inventory` — every `.lock()` site resolves
+//!   against the declared inventory ([`inventory`]), and the
+//!   acquired-while-held graph must strictly ascend in rank
+//!   ([`lock_order`]). The runtime twin is the `debug_assertions` rank
+//!   tracker in [`crate::util::sync`] — same hierarchy, enforced live.
+//! * `struct-literal` — config/request structs are built via
+//!   builders/`Default` outside their defining module ([`invariants`]).
+//! * `wall-clock` — deterministic modules derive time from seeded
+//!   schedules, never the host clock ([`invariants`]).
+//! * `hot-unwrap` — shrink-only unwrap/expect/panic budget on hot-path
+//!   files, pinned by `rust/lint_baseline.json` ([`invariants`]).
+//! * `metrics-name` — test-asserted metric names and registered
+//!   `ctl_*`/`net_*`/`kv_*`/`trace_*` counters cross-check
+//!   ([`metrics_check`]).
+//!
+//! Escape hatch: `// lint: allow(<id>) reason=<why>` on the finding's
+//! line or the line above; the reason is mandatory (`lint-allow` fires on
+//! a bare allow). The `lookahead-lint` binary walks the tree, prints
+//! findings, and exits non-zero — the CI `lint` lane enforces it.
+
+pub mod inventory;
+pub mod invariants;
+pub mod lexer;
+pub mod lock_order;
+pub mod metrics_check;
+
+use crate::util::json::Json;
+use lexer::Lexed;
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Lint ids a `lint: allow(...)` directive may name.
+pub const KNOWN_LINTS: &[&str] = &[
+    "lock-order",
+    "lock-inventory",
+    "struct-literal",
+    "wall-clock",
+    "hot-unwrap",
+    "metrics-name",
+    "lint-allow",
+];
+
+#[derive(Debug, Clone)]
+pub struct Finding {
+    pub lint: &'static str,
+    pub file: String,
+    pub line: u32,
+    pub msg: String,
+}
+
+impl Finding {
+    pub fn new(lint: &'static str, file: &str, line: u32, msg: String) -> Finding {
+        Finding { lint, file: file.to_string(), line, msg }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("lint", Json::str(self.lint)),
+            ("file", Json::str(self.file.as_str())),
+            ("line", Json::num(self.line as f64)),
+            ("msg", Json::str(self.msg.as_str())),
+        ])
+    }
+}
+
+impl std::fmt::Display for Finding {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.lint, self.msg)
+    }
+}
+
+/// One source file, path `/`-normalized (suffix-matched by every scope
+/// rule, so absolute or repo-relative both work).
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+}
+
+/// Is a finding on `line` waived by an allow directive for `lint` on the
+/// same line or the line above?
+pub(crate) fn allowed(lexed: &Lexed, lint: &str, line: u32) -> bool {
+    lexed.allows.iter().any(|a| a.lint == lint && (a.line == line || a.line + 1 == line))
+}
+
+/// Read every `.rs` file under `root`, skipping vendored code, build
+/// output, and the deliberately-bad lint fixtures.
+pub fn load_tree(root: &Path) -> std::io::Result<Vec<SourceFile>> {
+    let mut out = Vec::new();
+    walk(root, &mut out)?;
+    out.sort_by(|a, b| a.path.cmp(&b.path));
+    Ok(out)
+}
+
+fn walk(dir: &Path, out: &mut Vec<SourceFile>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let entry = entry?;
+        let path = entry.path();
+        let name = entry.file_name().to_string_lossy().into_owned();
+        if path.is_dir() {
+            if name == "vendor" || name == "target" || name == "lint_fixtures"
+                || name.starts_with('.')
+            {
+                continue;
+            }
+            walk(&path, out)?;
+        } else if name.ends_with(".rs") {
+            out.push(SourceFile {
+                path: path.to_string_lossy().replace('\\', "/"),
+                text: std::fs::read_to_string(&path)?,
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Hot-path unwrap/expect/panic site counts per file (shrink-only budget:
+/// the binary compares these against `rust/lint_baseline.json` and also
+/// reports files now under budget so the baseline can be tightened).
+pub fn hot_unwrap_counts(files: &[SourceFile]) -> BTreeMap<String, usize> {
+    let mut out = BTreeMap::new();
+    for f in files {
+        if !invariants::is_hot_path(&f.path) {
+            continue;
+        }
+        let lexed = lexer::lex(&f.text);
+        out.insert(f.path.clone(), invariants::hot_unwrap_sites(&f.path, &lexed).len());
+    }
+    out
+}
+
+/// Budget for `path` from a baseline keyed by repo-relative paths —
+/// matched by suffix in either direction so absolute corpus paths work.
+pub fn baseline_budget(baseline: &BTreeMap<String, usize>, path: &str) -> usize {
+    baseline
+        .iter()
+        .find(|(k, _)| path.ends_with(k.as_str()) || k.ends_with(path))
+        .map(|(_, v)| *v)
+        .unwrap_or(0)
+}
+
+/// Run every lint over the corpus. `baseline` caps hot-path unwrap counts
+/// per file (shrink-only: counts above budget are findings, below budget
+/// is the binary's cue to tighten the committed baseline).
+pub fn run(files: &[SourceFile], baseline: &BTreeMap<String, usize>) -> Vec<Finding> {
+    let lexed: Vec<(String, Lexed)> =
+        files.iter().map(|f| (f.path.clone(), lexer::lex(&f.text))).collect();
+    let mut findings = Vec::new();
+
+    // lock discipline: everything except the tracker itself (its tests
+    // violate order on purpose, under catch_unwind)
+    let lock_corpus: Vec<(String, Lexed)> = lexed
+        .iter()
+        .filter(|(p, _)| !p.ends_with("util/sync.rs"))
+        .cloned()
+        .collect();
+    findings.extend(lock_order::check(&lock_corpus));
+
+    for (path, l) in &lexed {
+        findings.extend(invariants::check_struct_literals(path, l));
+        if invariants::in_wall_clock_scope(path) {
+            findings.extend(invariants::check_wall_clock(path, l));
+        }
+        findings.extend(invariants::check_allow_reasons(path, l));
+        for a in &l.allows {
+            if !KNOWN_LINTS.contains(&a.lint.as_str()) {
+                findings.push(Finding::new(
+                    "lint-allow",
+                    path,
+                    a.line,
+                    format!("`lint: allow({})` names an unknown lint", a.lint),
+                ));
+            }
+        }
+        if invariants::is_hot_path(path) {
+            let sites = invariants::hot_unwrap_sites(path, l);
+            let budget = baseline_budget(baseline, path);
+            if sites.len() > budget {
+                let msg = format!(
+                    "{} unwrap/expect/panic sites exceed the shrink-only \
+                     baseline of {budget}",
+                    sites.len()
+                );
+                for mut s in sites {
+                    s.msg = format!("{} ({msg})", s.msg);
+                    findings.push(s);
+                }
+            }
+        }
+    }
+
+    let src: Vec<(String, Lexed)> =
+        lexed.iter().filter(|(p, _)| p.contains("/src/")).cloned().collect();
+    let refs: Vec<(String, Lexed)> = lexed
+        .iter()
+        .filter(|(p, _)| p.contains("/tests/") || p.ends_with("bench/load.rs"))
+        .cloned()
+        .collect();
+    findings.extend(metrics_check::check(&src, &refs));
+
+    findings.sort_by(|a, b| (&a.file, a.line, a.lint).cmp(&(&b.file, b.line, b.lint)));
+    findings
+}
+
+/// Parse `rust/lint_baseline.json` (`{"<path>": <count>, …}`).
+pub fn parse_baseline(text: &str) -> Result<BTreeMap<String, usize>, String> {
+    let j = Json::parse(text).map_err(|e| e.to_string())?;
+    let obj = j.as_obj().ok_or("baseline must be a JSON object")?;
+    let mut out = BTreeMap::new();
+    for (k, v) in obj {
+        let n = v.as_usize().ok_or_else(|| format!("count for {k} must be a number"))?;
+        out.insert(k.clone(), n);
+    }
+    Ok(out)
+}
+
+/// Findings artifact for the CI lane.
+pub fn findings_json(findings: &[Finding]) -> Json {
+    let mut by_lint: BTreeMap<&str, usize> = BTreeMap::new();
+    for f in findings {
+        *by_lint.entry(f.lint).or_insert(0) += 1;
+    }
+    Json::obj(vec![
+        ("schema", Json::str("lookahead-lint/v1")),
+        ("total", Json::num(findings.len() as f64)),
+        (
+            "by_lint",
+            Json::Obj(
+                by_lint
+                    .into_iter()
+                    .map(|(k, v)| (k.to_string(), Json::num(v as f64)))
+                    .collect(),
+            ),
+        ),
+        ("findings", Json::arr(findings.iter().map(Finding::to_json).collect())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn file(path: &str, text: &str) -> SourceFile {
+        SourceFile { path: path.to_string(), text: text.to_string() }
+    }
+
+    #[test]
+    fn run_composes_all_lints() {
+        let files = vec![
+            file(
+                "rust/src/server/scheduler.rs",
+                "fn f(&self) { let m = metrics.lock(); self.state.lock().touch(); }",
+            ),
+            file("rust/src/bench/load.rs", "fn f() { let t = Instant::now(); }"),
+            file("rust/tests/t.rs", "fn t() { let c = Request { prompt: p }; }"),
+        ];
+        let f = run(&files, &BTreeMap::new());
+        let lints: Vec<&str> = f.iter().map(|f| f.lint).collect();
+        assert!(lints.contains(&"lock-order"), "{f:?}");
+        assert!(lints.contains(&"wall-clock"), "{f:?}");
+        assert!(lints.contains(&"struct-literal"), "{f:?}");
+    }
+
+    #[test]
+    fn baseline_budget_suffix_matches() {
+        let mut b = BTreeMap::new();
+        b.insert("rust/src/server/worker.rs".to_string(), 3);
+        assert_eq!(baseline_budget(&b, "/abs/repo/rust/src/server/worker.rs"), 3);
+        assert_eq!(baseline_budget(&b, "rust/src/net/mod.rs"), 0);
+    }
+
+    #[test]
+    fn findings_json_schema() {
+        let f = vec![Finding::new("wall-clock", "a.rs", 3, "msg".into())];
+        let j = findings_json(&f);
+        assert_eq!(j.path("schema").unwrap().as_str(), Some("lookahead-lint/v1"));
+        assert_eq!(j.path("total").unwrap().as_usize(), Some(1));
+        assert_eq!(j.path("by_lint.wall-clock").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn baseline_parses_and_rejects_junk() {
+        let b = parse_baseline("{\"rust/src/net/mod.rs\": 2}").unwrap();
+        assert_eq!(b.get("rust/src/net/mod.rs"), Some(&2));
+        assert!(parse_baseline("[1]").is_err());
+    }
+}

@@ -354,7 +354,7 @@ fn sleep_until(t0: Instant, at_ms: u64) {
     let target = Duration::from_millis(at_ms);
     let elapsed = t0.elapsed();
     if elapsed < target {
-        std::thread::sleep(target - elapsed);
+        crate::util::sync::nap(target - elapsed);
     }
 }
 
@@ -362,6 +362,7 @@ fn sleep_until(t0: Instant, at_ms: u64) {
 /// at their planned offsets, planned cancels at submit-time + delta; final
 /// records are drained after the last arrival.
 pub fn drive_inprocess(handle: &ServerHandle, sched: &Schedule) -> LoadRun {
+    // lint: allow(wall-clock) reason=open-loop runner measures real latency
     let t0 = Instant::now();
     let mut streams = Vec::new();
     let mut outcomes: Vec<Option<RequestOutcome>> = vec![None; sched.items.len()];
@@ -414,6 +415,7 @@ pub fn drive_inprocess(handle: &ServerHandle, sched: &Schedule) -> LoadRun {
 /// per request, one extra connection per planned cancel, and a final
 /// `{"report": true}` scrape. Open-loop like [`drive_inprocess`].
 pub fn drive_tcp(addr: &str, sched: &Schedule) -> Result<LoadRun> {
+    // lint: allow(wall-clock) reason=open-loop runner measures real latency
     let t0 = Instant::now();
     let mut joins = Vec::new();
     for item in sched.items.iter().cloned() {
@@ -587,6 +589,12 @@ pub fn bench_json(pr: u64, spec: &LoadSpec, sched: &Schedule, run: &LoadRun) -> 
         ("resumes", Json::num(report_counter(&run.report, "net_resumes") as f64)),
         ("dup_dropped",
          Json::num(report_counter(&run.report, "net_dup_dropped") as f64)),
+        ("transfer_fail",
+         Json::num(report_counter(&run.report, "net_transfer_fail") as f64)),
+        ("attach_resumes",
+         Json::num(report_counter(&run.report, "net_attach_resumes") as f64)),
+        ("peers_alive",
+         Json::num(report_counter(&run.report, "net_peers_alive") as f64)),
         ("bytes",
          run.report.path("histograms.net_transfer_bytes").cloned()
              .unwrap_or(Json::Null)),

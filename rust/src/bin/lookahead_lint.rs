@@ -1,0 +1,103 @@
+//! `lookahead-lint` — repo-aware static analysis CLI (DESIGN.md §9).
+//!
+//! Walks the tree (default `rust/`), runs the lock-order checker and the
+//! invariant lints from [`lookahead::analysis`], prints findings as
+//! `file:line: [lint] message`, and exits non-zero when anything fires —
+//! the CI `lint` lane runs exactly this. `--json <path>` writes the
+//! findings artifact; `--baseline <path>` points at the shrink-only
+//! hot-unwrap budget (default `rust/lint_baseline.json`).
+
+use lookahead::analysis::{
+    self, baseline_budget, findings_json, hot_unwrap_counts, parse_baseline,
+};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root = "rust".to_string();
+    let mut json_out: Option<String> = None;
+    let mut baseline_path: Option<String> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" | "--json" | "--baseline" => {
+                let Some(v) = args.next() else {
+                    eprintln!("lookahead-lint: {a} needs a value");
+                    return ExitCode::FAILURE;
+                };
+                match a.as_str() {
+                    "--root" => root = v,
+                    "--json" => json_out = Some(v),
+                    _ => baseline_path = Some(v),
+                }
+            }
+            "--help" | "-h" => {
+                println!(
+                    "usage: lookahead-lint [--root DIR] [--json OUT] \
+                     [--baseline FILE]"
+                );
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("lookahead-lint: unknown argument `{other}`");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    let explicit_baseline = baseline_path.is_some();
+    let bpath =
+        baseline_path.unwrap_or_else(|| format!("{root}/lint_baseline.json"));
+    let baseline: BTreeMap<String, usize> = match std::fs::read_to_string(&bpath) {
+        Ok(text) => match parse_baseline(&text) {
+            Ok(b) => b,
+            Err(e) => {
+                eprintln!("lookahead-lint: bad baseline {bpath}: {e}");
+                return ExitCode::FAILURE;
+            }
+        },
+        Err(e) if explicit_baseline => {
+            eprintln!("lookahead-lint: cannot read baseline {bpath}: {e}");
+            return ExitCode::FAILURE;
+        }
+        Err(_) => BTreeMap::new(),
+    };
+    let files = match analysis::load_tree(Path::new(&root)) {
+        Ok(f) => f,
+        Err(e) => {
+            eprintln!("lookahead-lint: cannot walk {root}: {e}");
+            return ExitCode::FAILURE;
+        }
+    };
+    let findings = analysis::run(&files, &baseline);
+    for f in &findings {
+        println!("{f}");
+    }
+    // shrink-only baseline hygiene: flag budgets the tree no longer needs
+    for (path, count) in hot_unwrap_counts(&files) {
+        let budget = baseline_budget(&baseline, &path);
+        if count < budget {
+            println!(
+                "note: {path} has {count} hot-path unwrap sites, baseline \
+                 allows {budget} — tighten {bpath}"
+            );
+        }
+    }
+    if let Some(out) = json_out {
+        let doc = findings_json(&findings).dump();
+        if let Err(e) = std::fs::write(&out, doc) {
+            eprintln!("lookahead-lint: cannot write {out}: {e}");
+            return ExitCode::FAILURE;
+        }
+    }
+    println!(
+        "lookahead-lint: {} finding(s) over {} file(s)",
+        findings.len(),
+        files.len()
+    );
+    if findings.is_empty() {
+        ExitCode::SUCCESS
+    } else {
+        ExitCode::FAILURE
+    }
+}

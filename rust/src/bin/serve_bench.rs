@@ -346,7 +346,7 @@ fn wait_for_bind(addr: &str) -> Result<()> {
         if TcpStream::connect(addr).is_ok() {
             return Ok(());
         }
-        std::thread::sleep(Duration::from_millis(20));
+        lookahead::util::sync::nap(Duration::from_millis(20));
     }
     bail!("server at {addr} never came up");
 }

@@ -873,7 +873,7 @@ mod tests {
             Scripted::new(vec![vec![1], vec![2]]),
         );
         assert_eq!(sess.stats().ttft, std::time::Duration::ZERO);
-        std::thread::sleep(std::time::Duration::from_millis(2));
+        crate::util::sync::nap(std::time::Duration::from_millis(2));
         sess.step().unwrap();
         let ttft = sess.stats().ttft;
         assert!(ttft > std::time::Duration::ZERO);

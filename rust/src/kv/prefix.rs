@@ -26,9 +26,10 @@
 //! worker's own runtime.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::runtime::HostKv;
+use crate::util::sync::{rank, RankedMutex};
 
 /// Default minimum shared-prefix length (tokens) for storing/forking.
 pub const DEFAULT_MIN_PREFIX: usize = 32;
@@ -113,7 +114,10 @@ struct Trie {
 pub struct PrefixCache {
     min_prefix: usize,
     max_entries: usize,
-    inner: Mutex<Trie>,
+    /// [`rank::KV`]: workers probe the trie from their serve loop with at
+    /// most the hub/scheduler tier outstanding; nothing below NGRAM/LEAF is
+    /// ever acquired while the trie is held.
+    inner: RankedMutex<Trie>,
 }
 
 impl PrefixCache {
@@ -121,7 +125,7 @@ impl PrefixCache {
         PrefixCache {
             min_prefix: min_prefix.max(1),
             max_entries: max_entries.max(1),
-            inner: Mutex::new(Trie {
+            inner: RankedMutex::new(rank::KV, "kv.prefix", Trie {
                 roots: HashMap::new(),
                 clock: 0,
                 entries: 0,
@@ -156,7 +160,7 @@ impl PrefixCache {
     /// its prefill.
     pub fn lookup(&self, ns: &str, tokens: &[u32], allow_partial: bool)
                   -> Option<(usize, Arc<HostKv>)> {
-        let mut t = self.inner.lock().unwrap();
+        let mut t = self.inner.lock();
         let Some(root) = t.roots.get(ns) else {
             t.misses += 1;
             return None;
@@ -216,7 +220,7 @@ impl PrefixCache {
         if tokens.len() < self.min_prefix {
             return;
         }
-        let mut t = self.inner.lock().unwrap();
+        let mut t = self.inner.lock();
         t.clock += 1;
         let stamp = t.clock;
         let bytes = kv.bytes();
@@ -279,7 +283,7 @@ impl PrefixCache {
     }
 
     pub fn stats(&self) -> PrefixStats {
-        let t = self.inner.lock().unwrap();
+        let t = self.inner.lock();
         PrefixStats {
             hits: t.hits,
             misses: t.misses,

@@ -49,7 +49,7 @@ use std::io::{self, Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Receiver;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar};
 use std::thread::{self, JoinHandle};
 use std::time::{Duration, Instant};
 
@@ -57,6 +57,7 @@ use crate::kv::snapshot::{fnv64, wire_chunks};
 use crate::metrics::Registry;
 use crate::server::request::Reply;
 use crate::util::json::Json;
+use crate::util::sync::{nap, rank, RankedMutex};
 
 /// Default chunk size for snapshot payload streaming.
 pub const NET_CHUNK: usize = 4096;
@@ -230,7 +231,7 @@ pub struct TransferOpts {
     /// the socket mid-chunk at that offset; a cut `>= payload.len()` sends
     /// everything and drops the socket before reading the `adopted` ack,
     /// which deterministically forces the duplicate-delivery path on retry.
-    pub cuts: Arc<Mutex<Vec<usize>>>,
+    pub cuts: Arc<RankedMutex<Vec<usize>>>,
 }
 
 impl Default for TransferOpts {
@@ -239,7 +240,7 @@ impl Default for TransferOpts {
             attempts: 3,
             backoff: Duration::from_millis(50),
             chunk: NET_CHUNK,
-            cuts: Arc::new(Mutex::new(Vec::new())),
+            cuts: Arc::new(RankedMutex::new(rank::LEAF, "net.cuts", Vec::new())),
         }
     }
 }
@@ -280,10 +281,10 @@ pub fn send_session(
     let mut last = String::from("no attempts configured");
     for attempt in 0..opts.attempts.max(1) {
         if attempt > 0 {
-            thread::sleep(opts.backoff);
+            nap(opts.backoff);
         }
         let cut = {
-            let mut cuts = opts.cuts.lock().unwrap();
+            let mut cuts = opts.cuts.lock();
             if cuts.is_empty() { None } else { Some(cuts.remove(0)) }
         };
         let sent = send_once(
@@ -414,7 +415,9 @@ fn send_once(
 /// trailing newline); tunnel writers stream them to the donor from any start
 /// index, so a re-`attach` after a dropped tunnel replays without loss.
 pub struct RelayBuf {
-    st: Mutex<(Vec<String>, bool)>,
+    /// [`rank::LEAF`]: the pump appends and tunnel writers drain with no
+    /// other lock held — net locks are all leaf-only.
+    st: RankedMutex<(Vec<String>, bool)>,
     cv: Condvar,
 }
 
@@ -426,25 +429,28 @@ pub enum RelayNext {
 
 impl Default for RelayBuf {
     fn default() -> Self {
-        RelayBuf { st: Mutex::new((Vec::new(), false)), cv: Condvar::new() }
+        RelayBuf {
+            st: RankedMutex::new(rank::LEAF, "net.relay_buf", (Vec::new(), false)),
+            cv: Condvar::new(),
+        }
     }
 }
 
 impl RelayBuf {
     pub fn push(&self, line: String) {
-        self.st.lock().unwrap().0.push(line);
+        self.st.lock().0.push(line);
         self.cv.notify_all();
     }
 
     pub fn finish(&self) {
-        self.st.lock().unwrap().1 = true;
+        self.st.lock().1 = true;
         self.cv.notify_all();
     }
 
     /// Line at `idx`, `Done` once finished AND drained, or `Timeout` (a tick
     /// for the caller's stop flag).
     pub fn next(&self, idx: usize, timeout: Duration) -> RelayNext {
-        let mut st = self.st.lock().unwrap();
+        let mut st = self.st.lock();
         loop {
             if idx < st.0.len() {
                 return RelayNext::Line(st.0[idx].clone());
@@ -452,7 +458,7 @@ impl RelayBuf {
             if st.1 {
                 return RelayNext::Done;
             }
-            let (guard, waited) = self.cv.wait_timeout(st, timeout).unwrap();
+            let (guard, waited) = st.wait_timeout_on(&self.cv, timeout);
             st = guard;
             if waited.timed_out() && idx >= st.0.len() && !st.1 {
                 return RelayNext::Timeout;
@@ -475,7 +481,7 @@ enum XferState {
     Adopted(u64, Arc<RelayBuf>),
 }
 
-type TransferTable = Arc<Mutex<HashMap<u64, XferState>>>;
+type TransferTable = Arc<RankedMutex<HashMap<u64, XferState>>>;
 
 /// Accept loop for a peer listener: binds immediately (so callers surface
 /// bind errors synchronously), then serves offer/attach/ping connections
@@ -483,13 +489,14 @@ type TransferTable = Arc<Mutex<HashMap<u64, XferState>>>;
 pub fn spawn_listener(
     addr: &str,
     gateway: Arc<dyn Adopt>,
-    metrics: Arc<Mutex<Registry>>,
+    metrics: Arc<RankedMutex<Registry>>,
     stop: Arc<AtomicBool>,
 ) -> io::Result<JoinHandle<()>> {
     let listener = TcpListener::bind(addr)?;
     listener.set_nonblocking(true)?;
     Ok(thread::spawn(move || {
-        let table: TransferTable = Arc::new(Mutex::new(HashMap::new()));
+        let table: TransferTable =
+            Arc::new(RankedMutex::new(rank::LEAF, "net.xfer_table", HashMap::new()));
         let mut conns: Vec<JoinHandle<()>> = Vec::new();
         while !stop.load(Ordering::Relaxed) {
             match listener.accept() {
@@ -500,7 +507,7 @@ pub fn spawn_listener(
                         let _ = handle_peer_conn(stream, g, m, t, s);
                     }));
                 }
-                Err(_) => thread::sleep(Duration::from_millis(25)),
+                Err(_) => nap(Duration::from_millis(25)),
             }
         }
         for c in conns {
@@ -512,7 +519,7 @@ pub fn spawn_listener(
 fn handle_peer_conn(
     stream: TcpStream,
     gateway: Arc<dyn Adopt>,
-    metrics: Arc<Mutex<Registry>>,
+    metrics: Arc<RankedMutex<Registry>>,
     table: TransferTable,
     stop: Arc<AtomicBool>,
 ) -> io::Result<()> {
@@ -544,7 +551,7 @@ fn handle_offer(
     offer: &Json,
     mut lines: NetLines,
     gateway: Arc<dyn Adopt>,
-    metrics: Arc<Mutex<Registry>>,
+    metrics: Arc<RankedMutex<Registry>>,
     table: TransferTable,
     stop: Arc<AtomicBool>,
 ) -> io::Result<()> {
@@ -568,12 +575,12 @@ fn handle_offer(
     // Claim the transfer slot: resume a partial, detect a duplicate, or
     // bounce a concurrent offer for the same payload.
     let mut buf = {
-        let mut tbl = table.lock().unwrap();
+        let mut tbl = table.lock();
         match tbl.remove(&xfer) {
             Some(XferState::Adopted(local, relay)) => {
                 tbl.insert(xfer, XferState::Adopted(local, relay.clone()));
                 drop(tbl);
-                metrics.lock().unwrap().inc("net_dup_dropped", 1);
+                metrics.lock().inc("net_dup_dropped", 1);
                 let dup = Json::obj(vec![("kind", Json::str("dup"))]);
                 write_json(lines.get_mut(), &dup)?;
                 return tunnel(lines, &relay, 0, &stop);
@@ -596,7 +603,7 @@ fn handle_offer(
     // On every early exit below the verified prefix goes back in the table
     // so the donor's next attempt resumes instead of restarting.
     let park_partial = |table: &TransferTable, buf: Vec<u8>| {
-        table.lock().unwrap().insert(xfer, XferState::Partial(buf));
+        table.lock().insert(xfer, XferState::Partial(buf));
     };
     let go = Json::obj(vec![
         ("kind", Json::str("go")),
@@ -667,15 +674,12 @@ fn handle_offer(
         Err(why) => {
             // Injection failed on a verified payload: retrying the same bytes
             // cannot help, so drop the slot and bounce the donor.
-            table.lock().unwrap().remove(&xfer);
+            table.lock().remove(&xfer);
             return reject(&mut lines, &why);
         }
     };
     let relay = Arc::new(RelayBuf::default());
-    table
-        .lock()
-        .unwrap()
-        .insert(xfer, XferState::Adopted(local_id, relay.clone()));
+    table.lock().insert(xfer, XferState::Adopted(local_id, relay.clone()));
     let pump = spawn_pump(rx, relay.clone(), donor_id);
     let adopted = Json::obj(vec![("kind", Json::str("adopted"))]);
     let ack = write_json(lines.get_mut(), &adopted);
@@ -693,7 +697,7 @@ fn handle_attach(
     let xfer = attach.get("xfer").and_then(Json::as_str).and_then(parse_hex);
     let have = attach.get("have").and_then(Json::as_usize).unwrap_or(0);
     let relay = xfer.and_then(|x| {
-        match table.lock().unwrap().get(&x) {
+        match table.lock().get(&x) {
             Some(XferState::Adopted(_, relay)) => Some(relay.clone()),
             _ => None,
         }
@@ -719,21 +723,21 @@ fn handle_cancel(
     cancel: &Json,
     mut lines: NetLines,
     gateway: Arc<dyn Adopt>,
-    metrics: Arc<Mutex<Registry>>,
+    metrics: Arc<RankedMutex<Registry>>,
     table: TransferTable,
 ) -> io::Result<()> {
     let local = cancel
         .get("xfer")
         .and_then(Json::as_str)
         .and_then(parse_hex)
-        .and_then(|x| match table.lock().unwrap().get(&x) {
+        .and_then(|x| match table.lock().get(&x) {
             Some(XferState::Adopted(local, _)) => Some(*local),
             _ => None,
         });
     match local {
         Some(id) => {
             gateway.cancel_local(id);
-            metrics.lock().unwrap().inc("net_cancels", 1);
+            metrics.lock().inc("net_cancels", 1);
             write_json(lines.get_mut(), &Json::obj(vec![("kind", Json::str("ok"))]))
         }
         None => {
@@ -808,15 +812,23 @@ pub struct PeerInfo {
 
 /// Heartbeat-maintained peer table; readers (the rebalance policy thread,
 /// prefill-only workers) see a consistent snapshot.
-#[derive(Default)]
 pub struct Peers {
-    st: Mutex<Vec<PeerInfo>>,
+    /// [`rank::LEAF`]: heartbeat writes and policy reads hold nothing else.
+    roster: RankedMutex<Vec<PeerInfo>>,
+}
+
+impl Default for Peers {
+    fn default() -> Self {
+        Peers { roster: RankedMutex::new(rank::LEAF, "net.peers", Vec::new()) }
+    }
 }
 
 impl Peers {
     pub fn new(addrs: &[String]) -> Self {
         Peers {
-            st: Mutex::new(
+            roster: RankedMutex::new(
+                rank::LEAF,
+                "net.peers",
                 addrs
                     .iter()
                     .map(|a| PeerInfo {
@@ -832,7 +844,7 @@ impl Peers {
     }
 
     pub fn len(&self) -> usize {
-        self.st.lock().unwrap().len()
+        self.roster.lock().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -840,11 +852,11 @@ impl Peers {
     }
 
     pub fn snapshot(&self) -> Vec<PeerInfo> {
-        self.st.lock().unwrap().clone()
+        self.roster.lock().clone()
     }
 
     pub fn addr(&self, i: usize) -> Option<String> {
-        self.st.lock().unwrap().get(i).map(|p| p.addr.clone())
+        self.roster.lock().get(i).map(|p| p.addr.clone())
     }
 
     pub fn update(
@@ -855,7 +867,7 @@ impl Peers {
         live: usize,
         parked: usize,
     ) {
-        if let Some(p) = self.st.lock().unwrap().get_mut(i) {
+        if let Some(p) = self.roster.lock().get_mut(i) {
             p.alive = alive;
             p.prefill_only = prefill_only;
             p.live = live;
@@ -923,7 +935,7 @@ pub fn ping(addr: &str) -> io::Result<Json> {
 /// `net_heartbeats` / `net_peers_alive` metrics, until `stop`.
 pub fn spawn_heartbeat(
     peers: Arc<Peers>,
-    metrics: Arc<Mutex<Registry>>,
+    metrics: Arc<RankedMutex<Registry>>,
     interval: Duration,
     stop: Arc<AtomicBool>,
 ) -> JoinHandle<()> {
@@ -952,15 +964,15 @@ pub fn spawn_heartbeat(
                     }
                     Err(_) => peers.update(i, false, false, 0, 0),
                 }
-                metrics.lock().unwrap().inc("net_heartbeats", 1);
+                metrics.lock().inc("net_heartbeats", 1);
             }
             {
-                let mut m = metrics.lock().unwrap();
+                let mut m = metrics.lock();
                 m.set("net_peers_alive", alive);
             }
             let t0 = Instant::now();
             while t0.elapsed() < interval && !stop.load(Ordering::Relaxed) {
-                thread::sleep(Duration::from_millis(10));
+                nap(Duration::from_millis(10));
             }
         }
     })

@@ -396,7 +396,7 @@ mod tests {
         let mut p = NgramPool::new(3, 8, 100).with_max_age(Duration::from_millis(15));
         p.insert(&[1, 2, 3]);
         assert_eq!(p.lookup(1, 4), vec![vec![2, 3]], "fresh entry must survive");
-        std::thread::sleep(Duration::from_millis(30));
+        crate::util::sync::nap(Duration::from_millis(30));
         assert!(p.lookup(1, 4).is_empty(), "stale entry must decay");
         assert_eq!(p.evictions, 1);
         assert!(p.is_empty());
@@ -412,9 +412,9 @@ mod tests {
     fn ttl_refresh_on_reinsert_keeps_entry_alive() {
         let mut p = NgramPool::new(2, 8, 100).with_max_age(Duration::from_millis(40));
         p.insert(&[7, 8]);
-        std::thread::sleep(Duration::from_millis(25));
+        crate::util::sync::nap(Duration::from_millis(25));
         p.insert(&[7, 8]); // refresh restamps
-        std::thread::sleep(Duration::from_millis(25));
+        crate::util::sync::nap(Duration::from_millis(25));
         assert_eq!(p.lookup(7, 4), vec![vec![8]], "refreshed entry must survive");
     }
 

@@ -27,11 +27,12 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::metrics::DecodeStats;
 use crate::ngram::{NgramPool, NgramSource};
+use crate::util::sync::{rank, RankedMutex};
 
 /// Shape of an engine's n-gram pool: n-gram length + LRU capacities.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -89,7 +90,10 @@ impl SharedCacheStats {
 /// serving one model.
 pub struct SharedNgramCache {
     spec: PoolSpec,
-    shards: Vec<Mutex<NgramPool>>,
+    /// [`rank::NGRAM_SHARD`]: shards are locked one at a time; the registry
+    /// ([`rank::NGRAM_REGISTRY`]) legitimately holds its map while warming a
+    /// fresh cache's shards, hence shard > registry.
+    shards: Vec<RankedMutex<NgramPool>>,
     hits: AtomicU64,
     misses: AtomicU64,
     inserts: AtomicU64,
@@ -102,7 +106,13 @@ impl SharedNgramCache {
         SharedNgramCache {
             spec,
             shards: (0..shards)
-                .map(|_| Mutex::new(NgramPool::new(spec.n, spec.per_key_cap, per_shard_cap)))
+                .map(|_| {
+                    RankedMutex::new(
+                        rank::NGRAM_SHARD,
+                        "ngram.shard",
+                        NgramPool::new(spec.n, spec.per_key_cap, per_shard_cap),
+                    )
+                })
                 .collect(),
             hits: AtomicU64::new(0),
             misses: AtomicU64::new(0),
@@ -120,7 +130,7 @@ impl SharedNgramCache {
     /// caches use this so yesterday's templates stop occupying LRU slots.
     pub fn set_max_age(&self, max_age: Option<Duration>) {
         for s in &self.shards {
-            s.lock().unwrap().set_max_age(max_age);
+            s.lock().set_max_age(max_age);
         }
     }
 
@@ -137,7 +147,7 @@ impl SharedNgramCache {
     }
 
     /// Fibonacci-hash the key so dense byte-token keys spread over shards.
-    fn shard_for(&self, key: u32) -> &Mutex<NgramPool> {
+    fn shard_for(&self, key: u32) -> &RankedMutex<NgramPool> {
         let h = (key as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 32;
         &self.shards[(h as usize) % self.shards.len()]
     }
@@ -149,12 +159,12 @@ impl SharedNgramCache {
             return;
         }
         self.inserts.fetch_add(1, Ordering::Relaxed);
-        self.shard_for(ngram[0]).lock().unwrap().insert(ngram);
+        self.shard_for(ngram[0]).lock().insert(ngram);
     }
 
     /// Up to `max` suffixes for `key`, most recent first.
     pub fn lookup(&self, key: u32, max: usize) -> Vec<Vec<u32>> {
-        let got = self.shard_for(key).lock().unwrap().lookup(key, max);
+        let got = self.shard_for(key).lock().lookup(key, max);
         if got.is_empty() {
             self.misses.fetch_add(1, Ordering::Relaxed);
         } else {
@@ -177,7 +187,7 @@ impl SharedNgramCache {
     /// Total stored suffixes (sums shard lengths; a point-in-time value
     /// under concurrent mutation).
     pub fn len(&self) -> usize {
-        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+        self.shards.iter().map(|s| s.lock().len()).sum()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -188,7 +198,7 @@ impl SharedNgramCache {
         let mut entries = 0usize;
         let mut evictions = 0u64;
         for s in &self.shards {
-            let p = s.lock().unwrap();
+            let p = s.lock();
             entries += p.len();
             evictions += p.evictions as u64;
         }
@@ -236,16 +246,16 @@ pub struct NgramCacheRegistry {
     shards: usize,
     /// TTL applied to every cache this registry creates (None = no decay).
     max_age: Option<Duration>,
-    caches: Mutex<HashMap<String, Arc<SharedNgramCache>>>,
+    /// [`rank::NGRAM_REGISTRY`]: held across first-use cache construction,
+    /// which locks the new cache's shards (see `get_or_create_scoped`).
+    caches: RankedMutex<HashMap<String, Arc<SharedNgramCache>>>,
 }
 
 impl NgramCacheRegistry {
     pub fn new() -> NgramCacheRegistry {
-        NgramCacheRegistry {
-            shards: DEFAULT_SHARDS,
-            max_age: None,
-            caches: Mutex::new(HashMap::new()),
-        }
+        let caches =
+            RankedMutex::new(rank::NGRAM_REGISTRY, "ngram.registry", HashMap::new());
+        NgramCacheRegistry { shards: DEFAULT_SHARDS, max_age: None, caches }
     }
 
     pub fn with_shards(shards: usize) -> NgramCacheRegistry {
@@ -276,7 +286,7 @@ impl NgramCacheRegistry {
     /// cache per tenant.
     pub fn get_or_create_scoped(&self, tenant: Option<&str>, model: &str,
                                 spec: PoolSpec) -> Arc<SharedNgramCache> {
-        let mut m = self.caches.lock().unwrap();
+        let mut m = self.caches.lock();
         m.entry(Self::key(tenant, model, &spec))
             .or_insert_with(|| {
                 let c = SharedNgramCache::new(spec, self.shards);
@@ -288,7 +298,7 @@ impl NgramCacheRegistry {
 
     /// Snapshot of every cache's counters, sorted by key.
     pub fn stats(&self) -> Vec<(String, SharedCacheStats)> {
-        let m = self.caches.lock().unwrap();
+        let m = self.caches.lock();
         let mut out: Vec<(String, SharedCacheStats)> =
             m.iter().map(|(k, c)| (k.clone(), c.stats())).collect();
         out.sort_by(|a, b| a.0.cmp(&b.0));
@@ -593,7 +603,7 @@ mod tests {
         c.set_max_age(Some(Duration::from_millis(15)));
         c.insert(&[1, 2, 3]);
         assert_eq!(c.lookup(1, 4), vec![vec![2, 3]], "fresh entry must survive");
-        std::thread::sleep(Duration::from_millis(30));
+        crate::util::sync::nap(Duration::from_millis(30));
         assert!(c.lookup(1, 4).is_empty(), "stale template must decay");
         let st = c.stats();
         assert_eq!(st.evictions, 1);
@@ -606,12 +616,12 @@ mod tests {
             .with_max_age(Some(Duration::from_millis(10)));
         let c = reg.get_or_create("tiny", spec());
         c.insert(&[1, 2, 3]);
-        std::thread::sleep(Duration::from_millis(25));
+        crate::util::sync::nap(Duration::from_millis(25));
         assert!(c.lookup(1, 4).is_empty(), "registry-created cache must decay");
 
         let no_ttl = NgramCacheRegistry::with_shards(2).get_or_create("tiny", spec());
         no_ttl.insert(&[1, 2, 3]);
-        std::thread::sleep(Duration::from_millis(25));
+        crate::util::sync::nap(Duration::from_millis(25));
         assert_eq!(no_ttl.lookup(1, 4), vec![vec![2, 3]], "no TTL -> no decay");
     }
 

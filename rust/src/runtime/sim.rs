@@ -154,13 +154,16 @@ pub fn write_sim_artifacts_with(dir: impl AsRef<Path>, delay_ms: u64) -> Result<
 /// (re)write of manifest.json. Directories are pid-keyed, so in-process
 /// exclusion is sufficient; manifest.json is also written last, after
 /// every file it references.
-static ENSURE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+/// [`rank::SETUP`]: held across artifact writing, which may touch any other
+/// subsystem lock transitively — so it sits below every serving rank.
+static ENSURE_LOCK: crate::util::sync::RankedMutex<()> =
+    crate::util::sync::RankedMutex::new(crate::util::sync::rank::SETUP, "sim.ensure", ());
 
 /// Write (once per process) and return the shared sim artifact directory.
 /// Integration tests use this to exercise the full runtime/engine/serving
 /// stack without PJRT or `make artifacts`.
 pub fn ensure_sim_artifacts() -> Result<PathBuf> {
-    let _g = ENSURE_LOCK.lock().unwrap();
+    let _g = ENSURE_LOCK.lock();
     let dir = std::env::temp_dir()
         .join(format!("la-sim-artifacts-v{SIM_FORMAT}-{}", std::process::id()));
     if !dir.join("manifest.json").exists() {
@@ -172,7 +175,7 @@ pub fn ensure_sim_artifacts() -> Result<PathBuf> {
 /// Slow-decode sibling of [`ensure_sim_artifacts`] (identical token
 /// streams, ~`5ms` per decode launch) for timing-sensitive serving tests.
 pub fn ensure_slow_sim_artifacts() -> Result<PathBuf> {
-    let _g = ENSURE_LOCK.lock().unwrap();
+    let _g = ENSURE_LOCK.lock();
     let dir = std::env::temp_dir()
         .join(format!("la-sim-artifacts-v{SIM_FORMAT}-slow-{}", std::process::id()));
     if !dir.join("manifest.json").exists() {

@@ -14,7 +14,7 @@
 use std::collections::{HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar};
 use std::time::{Duration, Instant};
 
 use crate::control::CtlCarry;
@@ -23,13 +23,22 @@ use crate::net::Peers;
 use crate::server::request::{Request, Response, StreamChunk};
 use crate::tokenizer::Utf8StreamDecoder;
 use crate::util::json::Json;
+use crate::util::sync::{rank, RankedMutex};
 
 /// Cancellation rendezvous between the server front and the workers: the
 /// front marks ids, workers check the mark between steps — so a cancelled
 /// in-flight request stops within one decode step.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct CancelSet {
-    ids: Mutex<HashSet<u64>>,
+    /// [`rank::CANCEL`]: marked while the server front holds the pending
+    /// map (see `ServerHandle::cancel`), so it must rank above PENDING.
+    ids: RankedMutex<HashSet<u64>>,
+}
+
+impl Default for CancelSet {
+    fn default() -> Self {
+        CancelSet { ids: RankedMutex::new(rank::CANCEL, "cancel.ids", HashSet::new()) }
+    }
 }
 
 impl CancelSet {
@@ -39,24 +48,24 @@ impl CancelSet {
 
     /// Mark `id` for cancellation.
     pub fn request(&self, id: u64) {
-        self.ids.lock().unwrap().insert(id);
+        self.ids.lock().insert(id);
     }
 
     /// Is `id` marked? (Checked by workers between steps.)
     pub fn contains(&self, id: u64) -> bool {
-        self.ids.lock().unwrap().contains(&id)
+        self.ids.lock().contains(&id)
     }
 
     /// Drop the mark (request retired or record delivered).
     pub fn clear(&self, id: u64) {
-        self.ids.lock().unwrap().remove(&id);
+        self.ids.lock().remove(&id);
     }
 
     /// Outstanding marks. Diagnostics only: the dispatcher clears every id
     /// on retirement, so a churn run should end back at 0 — a growing set
     /// means a leak (a recycled id would be spuriously cancelled).
     pub fn len(&self) -> usize {
-        self.ids.lock().unwrap().len()
+        self.ids.lock().len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -91,7 +100,9 @@ struct State {
 }
 
 pub struct Scheduler {
-    state: Mutex<State>,
+    /// [`rank::SCHED`]: popped entries are handed to workers with no other
+    /// lock held; only HUB may be outstanding above it (rebalance donate).
+    state: RankedMutex<State>,
     cv: Condvar,
     policy: Policy,
     /// back-pressure: reject when the queue is deeper than this.
@@ -106,7 +117,7 @@ pub struct Popped {
 impl Scheduler {
     pub fn new(policy: Policy, max_depth: usize) -> Self {
         Scheduler {
-            state: Mutex::new(State::default()),
+            state: RankedMutex::new(rank::SCHED, "sched.state", State::default()),
             cv: Condvar::new(),
             policy,
             max_depth: max_depth.max(1),
@@ -115,7 +126,7 @@ impl Scheduler {
 
     /// Enqueue; Err(req) when the queue is full (back-pressure signal).
     pub fn push(&self, req: Request) -> Result<(), Request> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         if st.queue.len() >= self.max_depth {
             return Err(req);
         }
@@ -126,7 +137,7 @@ impl Scheduler {
 
     /// Blocking pop; None once closed and drained.
     pub fn pop(&self) -> Option<Popped> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         loop {
             if let Some(idx) = self.select(&st.queue) {
                 let e = st.queue.remove(idx).unwrap();
@@ -138,7 +149,7 @@ impl Scheduler {
             if st.closed {
                 return None;
             }
-            st = self.cv.wait(st).unwrap();
+            st = st.wait_on(&self.cv);
         }
     }
 
@@ -150,7 +161,7 @@ impl Scheduler {
     /// migrated to them.
     pub fn pop_timeout(&self, timeout: Duration) -> PopOutcome {
         let deadline = Instant::now() + timeout;
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         loop {
             if let Some(idx) = self.select(&st.queue) {
                 let e = st.queue.remove(idx).unwrap();
@@ -166,7 +177,7 @@ impl Scheduler {
             if now >= deadline {
                 return PopOutcome::Empty;
             }
-            let (g, _) = self.cv.wait_timeout(st, deadline - now).unwrap();
+            let (g, _) = st.wait_timeout_on(&self.cv, deadline - now);
             st = g;
         }
     }
@@ -175,7 +186,7 @@ impl Scheduler {
     /// Workers with live sessions use this between scheduling rounds so a
     /// long-running request never blocks admission of new ones.
     pub fn try_pop(&self) -> Option<Popped> {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         let idx = self.select(&st.queue)?;
         let e = st.queue.remove(idx).unwrap();
         Some(Popped {
@@ -187,7 +198,7 @@ impl Scheduler {
     /// Remove a still-queued request; false when `id` is not in the queue
     /// (it already reached a worker, finished, or never existed).
     pub fn cancel(&self, id: u64) -> bool {
-        let mut st = self.state.lock().unwrap();
+        let mut st = self.state.lock();
         match st.queue.iter().position(|e| e.req.id == id) {
             Some(pos) => {
                 st.queue.remove(pos);
@@ -216,12 +227,12 @@ impl Scheduler {
     }
 
     pub fn close(&self) {
-        self.state.lock().unwrap().closed = true;
+        self.state.lock().closed = true;
         self.cv.notify_all();
     }
 
     pub fn depth(&self) -> usize {
-        self.state.lock().unwrap().queue.len()
+        self.state.lock().queue.len()
     }
 }
 
@@ -444,33 +455,41 @@ struct HubState {
 /// transfers while draining the already-queued ones — a migration is never
 /// silently stranded on a dead worker.
 pub struct RebalanceHub {
-    st: Mutex<HubState>,
+    /// [`rank::HUB`]: outermost lock in the stack — rebalance decisions
+    /// fan out into scheduler/kv work, never the other way around.
+    st: RankedMutex<HubState>,
     moves: AtomicU64,
-    /// network transport attachment (None = single-process serving).
-    remote: Mutex<Option<RemoteLink>>,
+    /// network transport attachment (None = single-process serving). Same
+    /// HUB rank as `st`: the two are never held together (equal ranks are
+    /// mutually leaf-only under the tracker's strict ordering).
+    remote: RankedMutex<Option<RemoteLink>>,
 }
 
 impl RebalanceHub {
     pub fn new(workers: usize) -> RebalanceHub {
         RebalanceHub {
-            st: Mutex::new(HubState {
-                loads: vec![WorkerLoad { live: 0, parked: 0, alive: true }; workers],
-                directives: vec![None; workers],
-                queues: (0..workers).map(|_| VecDeque::new()).collect(),
-            }),
+            st: RankedMutex::new(
+                rank::HUB,
+                "hub.st",
+                HubState {
+                    loads: vec![WorkerLoad { live: 0, parked: 0, alive: true }; workers],
+                    directives: vec![None; workers],
+                    queues: (0..workers).map(|_| VecDeque::new()).collect(),
+                },
+            ),
             moves: AtomicU64::new(0),
-            remote: Mutex::new(None),
+            remote: RankedMutex::new(rank::HUB, "hub.remote", None),
         }
     }
 
     pub fn workers(&self) -> usize {
-        self.st.lock().unwrap().loads.len()
+        self.st.lock().loads.len()
     }
 
     /// Publish worker `w`'s depth for this round (the queue-depth report
     /// the rebalance policy reads).
     pub fn report_load(&self, w: usize, live: usize, parked: usize) {
-        let mut st = self.st.lock().unwrap();
+        let mut st = self.st.lock();
         if let Some(l) = st.loads.get_mut(w) {
             l.live = live;
             l.parked = parked;
@@ -479,14 +498,14 @@ impl RebalanceHub {
 
     /// Point-in-time copy of every worker's load.
     pub fn loads(&self) -> Vec<WorkerLoad> {
-        self.st.lock().unwrap().loads.clone()
+        self.st.lock().loads.clone()
     }
 
     /// Ask worker `from` to move its coldest parked session to worker `to`.
     /// Returns false (no directive recorded) when either end is unknown or
     /// exited, `from == to`, or a directive for `from` is already pending.
     pub fn direct(&self, from: usize, to: usize) -> bool {
-        let mut st = self.st.lock().unwrap();
+        let mut st = self.st.lock();
         let n = st.loads.len();
         if from >= n || to >= n || from == to {
             return false;
@@ -505,7 +524,7 @@ impl RebalanceHub {
     /// not workers, so `loads` does not cover them) and is checked by the
     /// policy thread when it picks the peer.
     pub fn direct_remote(&self, from: usize, peer: usize) -> bool {
-        let mut st = self.st.lock().unwrap();
+        let mut st = self.st.lock();
         if from >= st.loads.len()
             || !st.loads[from].alive
             || st.directives[from].is_some()
@@ -522,7 +541,7 @@ impl RebalanceHub {
     /// burn a round reviving and re-parking the session (and the directive
     /// would read as progress in the metrics).
     pub fn take_directive(&self, w: usize) -> Option<Directive> {
-        let mut st = self.st.lock().unwrap();
+        let mut st = self.st.lock();
         let d = st.directives.get_mut(w)?.take()?;
         if let Directive::Local(t) = d {
             if !st.loads.get(t).is_some_and(|l| l.alive) {
@@ -538,7 +557,7 @@ impl RebalanceHub {
     /// [`RebalanceHub::mark_exited`], so acceptance means the adopter will
     /// observe it before exiting.
     pub fn transfer(&self, m: MigratedSession) -> Result<(), MigratedSession> {
-        let mut st = self.st.lock().unwrap();
+        let mut st = self.st.lock();
         if m.to >= st.loads.len() || !st.loads[m.to].alive {
             return Err(m);
         }
@@ -551,7 +570,7 @@ impl RebalanceHub {
     /// Migrations addressed to worker `w` (drained; adoption order = send
     /// order).
     pub fn take_transfers(&self, w: usize) -> Vec<MigratedSession> {
-        let mut st = self.st.lock().unwrap();
+        let mut st = self.st.lock();
         match st.queues.get_mut(w) {
             Some(q) => q.drain(..).collect(),
             None => Vec::new(),
@@ -562,7 +581,7 @@ impl RebalanceHub {
     /// return any still queued for it (the exiting worker either serves
     /// them or fails them — never drops them silently).
     pub fn mark_exited(&self, w: usize) -> Vec<MigratedSession> {
-        let mut st = self.st.lock().unwrap();
+        let mut st = self.st.lock();
         if let Some(l) = st.loads.get_mut(w) {
             l.alive = false;
             l.live = 0;
@@ -581,7 +600,7 @@ impl RebalanceHub {
     /// workers joined, anything left here gets a final error record so no
     /// client hangs).
     pub fn drain(&self) -> Vec<MigratedSession> {
-        let mut st = self.st.lock().unwrap();
+        let mut st = self.st.lock();
         let mut out = Vec::new();
         for q in st.queues.iter_mut() {
             out.extend(q.drain(..));
@@ -598,14 +617,14 @@ impl RebalanceHub {
     /// the server's transport thread, and `peers` is the
     /// heartbeat-maintained table used to pick decode targets.
     pub fn set_remote(&self, tx: Sender<RemoteDonation>, peers: Arc<Peers>) {
-        *self.remote.lock().unwrap() = Some(RemoteLink { tx, peers });
+        *self.remote.lock() = Some(RemoteLink { tx, peers });
     }
 
     /// Drop the transport link (shutdown): the transport thread's receiver
     /// disconnects once in-flight donations drain, and subsequent
     /// [`RebalanceHub::donate_remote`] calls bounce immediately.
     pub fn clear_remote(&self) {
-        *self.remote.lock().unwrap() = None;
+        *self.remote.lock() = None;
     }
 
     /// Ship a migration to remote peer `peer`; returns the migration when
@@ -616,7 +635,7 @@ impl RebalanceHub {
         peer: usize,
         m: MigratedSession,
     ) -> Result<(), MigratedSession> {
-        let link = self.remote.lock().unwrap();
+        let link = self.remote.lock();
         match link.as_ref() {
             Some(l) => l.tx.send(RemoteDonation { peer, m }).map_err(|e| e.0.m),
             None => Err(m),
@@ -627,7 +646,7 @@ impl RebalanceHub {
     /// prefill-only worker ships its freshly-committed sessions. None means
     /// "decode locally" (degraded but correct).
     pub fn remote_decode_peer(&self) -> Option<usize> {
-        let peers = self.remote.lock().unwrap().as_ref()?.peers.clone();
+        let peers = self.remote.lock().as_ref()?.peers.clone();
         peers.snapshot().iter().position(|p| p.alive && !p.prefill_only)
     }
 }
@@ -638,7 +657,9 @@ mod tests {
     use std::sync::Arc;
 
     fn req(id: u64, prompt: &str) -> Request {
-        Request { id, prompt: prompt.into(), ..Default::default() }
+        let mut r = Request::new(prompt);
+        r.id = id;
+        r
     }
 
     #[test]
@@ -675,7 +696,7 @@ mod tests {
         let s = Arc::new(Scheduler::new(Policy::Fifo, 4));
         let s2 = s.clone();
         let h = std::thread::spawn(move || s2.pop().is_none());
-        std::thread::sleep(std::time::Duration::from_millis(20));
+        crate::util::sync::nap(std::time::Duration::from_millis(20));
         s.close();
         assert!(h.join().unwrap());
     }

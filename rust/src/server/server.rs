@@ -16,7 +16,7 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
@@ -34,6 +34,7 @@ use crate::server::scheduler::{CancelSet, MigratedSession, RebalanceHub,
 use crate::server::worker::Worker;
 use crate::trace::Tracer;
 use crate::util::json::Json;
+use crate::util::sync::{rank, RankedMutex};
 
 /// Decision logic of the cross-worker rebalancer: equalize per-worker
 /// session depth (live + parked) by moving one parked snapshot per scan
@@ -118,11 +119,13 @@ impl ResponseStream {
 /// down.
 pub struct ServerHandle {
     sched: Arc<Scheduler>,
-    pending: Arc<Mutex<HashMap<u64, Sender<Reply>>>>,
+    /// [`rank::PENDING`]: held while marking the cancel set (see
+    /// `ServerHandle::cancel`) so a submit/cancel race can't strand a mark.
+    pending: Arc<RankedMutex<HashMap<u64, Sender<Reply>>>>,
     /// shared with the peer gateway: locally-submitted and wire-adopted
     /// requests draw fresh ids from the same counter.
     next_id: Arc<AtomicU64>,
-    pub metrics: Arc<Mutex<Registry>>,
+    pub metrics: Arc<RankedMutex<Registry>>,
     /// cross-request n-gram caches (None when sharing is disabled).
     pub ngram_caches: Option<Arc<NgramCacheRegistry>>,
     /// prefix-reuse trie shared by all workers (None when disabled via
@@ -143,7 +146,7 @@ pub struct ServerHandle {
     /// owning peer: `cancel(id)` forwards the stop signal there so it still
     /// lands within one decode step. Entries are removed when the relay
     /// delivers the final record.
-    remote_cancels: Arc<Mutex<HashMap<u64, (String, u64)>>>,
+    remote_cancels: Arc<RankedMutex<HashMap<u64, (String, u64)>>>,
     worker_joins: Vec<std::thread::JoinHandle<()>>,
     dispatcher: Option<std::thread::JoinHandle<()>>,
     rebalancer: Option<std::thread::JoinHandle<()>>,
@@ -152,18 +155,19 @@ pub struct ServerHandle {
     net_joins: Vec<std::thread::JoinHandle<()>>,
     /// reply-relay threads, one per adopted-away session (spawned by the
     /// transport thread, joined at shutdown).
-    relay_joins: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+    relay_joins: Arc<RankedMutex<Vec<std::thread::JoinHandle<()>>>>,
     /// fault injection: planned cut offsets consumed by outbound snapshot
     /// transfers ([`ServerHandle::inject_net_cuts`]).
-    net_cuts: Arc<Mutex<Vec<usize>>>,
+    net_cuts: Arc<RankedMutex<Vec<usize>>>,
 }
 
 impl ServerHandle {
     pub fn start(cfg: ServerConfig) -> Result<ServerHandle> {
         let sched = Arc::new(Scheduler::new(cfg.policy, cfg.queue_depth));
-        let pending: Arc<Mutex<HashMap<u64, Sender<Reply>>>> =
-            Arc::new(Mutex::new(HashMap::new()));
-        let metrics = Arc::new(Mutex::new(Registry::new()));
+        let pending: Arc<RankedMutex<HashMap<u64, Sender<Reply>>>> =
+            Arc::new(RankedMutex::new(rank::PENDING, "srv.pending", HashMap::new()));
+        let metrics =
+            Arc::new(RankedMutex::new(rank::LEAF, "metrics.registry", Registry::new()));
         let cancels = Arc::new(CancelSet::new());
         let ngram_caches = cfg.share_ngrams.then(|| {
             let ttl = cfg.ngram_ttl_ms.map(std::time::Duration::from_millis);
@@ -190,15 +194,17 @@ impl ServerHandle {
             Arc::new(Tracer::new(cfg.workers.max(1), cfg.trace_sample.max(1),
                                  cfg.trace_buf))
         });
-        let remote_cancels: Arc<Mutex<HashMap<u64, (String, u64)>>> =
-            Arc::new(Mutex::new(HashMap::new()));
+        let remote_cancels: Arc<RankedMutex<HashMap<u64, (String, u64)>>> = Arc::new(
+            RankedMutex::new(rank::PENDING, "srv.remote_cancels", HashMap::new()),
+        );
 
         // peer listener binds BEFORE workers spawn so a bad --peer-addr
         // fails fast instead of leaking worker threads
         let net_stop = Arc::new(AtomicBool::new(false));
-        let net_cuts: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
-        let relay_joins: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>> =
-            Arc::new(Mutex::new(Vec::new()));
+        let net_cuts: Arc<RankedMutex<Vec<usize>>> =
+            Arc::new(RankedMutex::new(rank::LEAF, "net.cuts", Vec::new()));
+        let relay_joins: Arc<RankedMutex<Vec<std::thread::JoinHandle<()>>>> =
+            Arc::new(RankedMutex::new(rank::PENDING, "srv.relay_joins", Vec::new()));
         let mut net_joins = Vec::new();
         if let (Some(addr), Some(hub)) = (&cfg.peer_addr, &rebalance) {
             let gateway: Arc<dyn net::Adopt> = Arc::new(NetGateway {
@@ -300,13 +306,13 @@ impl ServerHandle {
             let policy = RebalancePolicy::default();
             let interval = Duration::from_millis(cfg.rebalance_interval_ms.max(1));
             std::thread::spawn(move || {
-                let nap = interval.min(Duration::from_millis(25));
+                let tick = interval.min(Duration::from_millis(25));
                 let mut slept = Duration::ZERO;
                 while !stop.load(Ordering::Relaxed) {
                     // sleep in short naps so shutdown joins promptly even
                     // with a long scan interval
-                    std::thread::sleep(nap);
-                    slept += nap;
+                    crate::util::sync::nap(tick);
+                    slept += tick;
                     if slept < interval {
                         continue;
                     }
@@ -335,7 +341,7 @@ impl ServerHandle {
                             hub.direct_remote(from, to - n_local)
                         };
                         if ok {
-                            metrics_c.lock().unwrap().inc("rebalance_directives", 1);
+                            metrics_c.lock().inc("rebalance_directives", 1);
                         }
                     }
                 }
@@ -352,14 +358,14 @@ impl ServerHandle {
             while let Ok(reply) = rx.recv() {
                 match reply {
                     Reply::Chunk(c) => {
-                        let ch = pending_c.lock().unwrap().get(&c.id).cloned();
+                        let ch = pending_c.lock().get(&c.id).cloned();
                         if let Some(ch) = ch {
                             let _ = ch.send(Reply::Chunk(c));
                         }
                     }
                     Reply::Done(resp) => {
                         {
-                            let mut m = metrics_c.lock().unwrap();
+                            let mut m = metrics_c.lock();
                             if resp.error.is_none() {
                                 m.inc("responses_ok", 1);
                                 m.inc("tokens_out", resp.tokens as u64);
@@ -392,7 +398,7 @@ impl ServerHandle {
                                 m.inc("responses_err", 1);
                             }
                         }
-                        let ch = pending_c.lock().unwrap().remove(&resp.id);
+                        let ch = pending_c.lock().remove(&resp.id);
                         // clear AFTER removing the pending entry: cancel()
                         // only marks ids it observed in `pending` (under the
                         // same lock), so this ordering guarantees any mark
@@ -435,16 +441,23 @@ impl ServerHandle {
     /// (one cut consumed per attempt — see [`TransferOpts`]). A no-op
     /// without `ServerConfig::peers`.
     pub fn inject_net_cuts(&self, cuts: Vec<usize>) {
-        self.net_cuts.lock().unwrap().extend(cuts);
+        self.net_cuts.lock().extend(cuts);
     }
 
     /// Sync derived gauges into the registry so every report flavor (text
     /// or JSON) carries them: prefix-cache stats, per-worker live/parked
     /// totals, and the scheduler queue depth.
     fn sync_gauges(&self) {
-        let mut m = self.metrics.lock().unwrap();
-        if let Some(pc) = &self.prefix_cache {
-            let st = pc.stats();
+        // read every source gauge BEFORE taking the registry lock: the
+        // sources acquire lower-ranked locks (sched.state, cancel.ids,
+        // kv.prefix), and the lock hierarchy forbids taking those while
+        // the leaf-ranked registry is held (DESIGN.md §9)
+        let prefix = self.prefix_cache.as_ref().map(|pc| pc.stats());
+        let depth = self.sched.depth() as u64;
+        let marks = self.cancels.len() as u64;
+        let trace = self.tracer.as_ref().map(|t| t.stats());
+        let mut m = self.metrics.lock();
+        if let Some(st) = prefix {
             m.set("prefix_hits", st.hits);
             m.set("prefix_miss", st.misses);
             m.set("prefix_entries", st.entries as u64);
@@ -468,12 +481,11 @@ impl ServerHandle {
             .sum();
         m.set("live_sessions", live);
         // queue-depth report: requests admitted by no worker yet
-        m.set("queue_depth", self.sched.depth() as u64);
+        m.set("queue_depth", depth);
         // cancel marks still outstanding — returns to 0 at quiescence
         // (every retirement path sweeps its mark)
-        m.set("cancel_marks", self.cancels.len() as u64);
-        if let Some(t) = &self.tracer {
-            let (recorded, dropped) = t.stats();
+        m.set("cancel_marks", marks);
+        if let Some((recorded, dropped)) = trace {
             m.set("trace_spans", recorded);
             m.set("trace_dropped", dropped);
         }
@@ -486,7 +498,7 @@ impl ServerHandle {
     /// operators read latency/occupancy percentiles without raw samples.
     pub fn report(&self) -> String {
         self.sync_gauges();
-        let mut s = self.metrics.lock().unwrap().report();
+        let mut s = self.metrics.lock().report();
         if let Some(reg) = &self.ngram_caches {
             s.push_str(&reg.report());
         }
@@ -503,13 +515,13 @@ impl ServerHandle {
     /// the `{"report": true}` control line.
     pub fn report_json(&self) -> Json {
         self.sync_gauges();
-        self.metrics.lock().unwrap().report_json()
+        self.metrics.lock().report_json()
     }
 
     /// Typed percentile summary of one serving histogram (e.g. `ttft_ms`,
     /// `batch_size`, `latency_ms`); None when it has no samples yet.
     pub fn hist_summary(&self, name: &str) -> Option<crate::metrics::HistSummary> {
-        self.metrics.lock().unwrap().summary(name)
+        self.metrics.lock().summary(name)
     }
 
     /// Chrome trace-event JSON of everything the tracer holds (load the
@@ -528,7 +540,7 @@ impl ServerHandle {
     /// control line.
     pub fn prometheus(&self) -> String {
         self.sync_gauges();
-        self.metrics.lock().unwrap().prometheus()
+        self.metrics.lock().prometheus()
     }
 
     /// Submit a request; returns the per-request reply stream (chunks for
@@ -537,11 +549,11 @@ impl ServerHandle {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         req.id = id;
         let (tx, rx) = channel();
-        self.pending.lock().unwrap().insert(id, tx);
-        self.metrics.lock().unwrap().inc("requests", 1);
+        self.pending.lock().insert(id, tx);
+        self.metrics.lock().inc("requests", 1);
         if let Err(rejected) = self.sched.push(req) {
-            self.pending.lock().unwrap().remove(&id);
-            self.metrics.lock().unwrap().inc("rejected", 1);
+            self.pending.lock().remove(&id);
+            self.metrics.lock().inc("rejected", 1);
             bail!("queue full, request {} rejected", rejected.id);
         }
         Ok(ResponseStream { id, rx })
@@ -554,8 +566,8 @@ impl ServerHandle {
     /// false when the id is unknown or already finished.
     pub fn cancel(&self, id: u64) -> bool {
         if self.sched.cancel(id) {
-            self.metrics.lock().unwrap().inc("finish_cancelled", 1);
-            if let Some(ch) = self.pending.lock().unwrap().remove(&id) {
+            self.metrics.lock().inc("finish_cancelled", 1);
+            if let Some(ch) = self.pending.lock().remove(&id) {
                 let _ = ch.send(Reply::Done(Response::cancelled(id)));
             }
             return true;
@@ -564,7 +576,7 @@ impl ServerHandle {
         // stop signal there (the adopter marks its own CancelSet, so the
         // cancel still lands within one decode step); the relayed final
         // record then sweeps the local bookkeeping like any other reply.
-        let remote = self.remote_cancels.lock().unwrap().get(&id).cloned();
+        let remote = self.remote_cancels.lock().get(&id).cloned();
         if let Some((addr, xfer)) = remote {
             let _ = net::cancel_session(&addr, xfer);
         }
@@ -572,7 +584,7 @@ impl ServerHandle {
         // pending entry (same lock) before clearing marks, so a mark set
         // here for a still-pending request is either observed by the worker
         // or swept by the dispatcher's clear — never left behind.
-        let pending = self.pending.lock().unwrap();
+        let pending = self.pending.lock();
         if pending.contains_key(&id) {
             self.cancels.request(id);
             return true;
@@ -610,13 +622,13 @@ impl ServerHandle {
         for j in self.net_joins.drain(..) {
             let _ = j.join();
         }
-        for j in self.relay_joins.lock().unwrap().drain(..) {
+        for j in self.relay_joins.lock().drain(..) {
             let _ = j.join();
         }
         if let Some(hub) = &self.rebalance {
             for m in hub.drain() {
                 self.cancels.clear(m.id);
-                let ch = self.pending.lock().unwrap().remove(&m.id);
+                let ch = self.pending.lock().remove(&m.id);
                 if let Some(ch) = ch {
                     // same contract as fail_parked: flush the held-back
                     // stream tail, then the Failed record
@@ -642,10 +654,10 @@ impl ServerHandle {
 /// from the worker's point of view.
 struct NetGateway {
     hub: Arc<RebalanceHub>,
-    pending: Arc<Mutex<HashMap<u64, Sender<Reply>>>>,
+    pending: Arc<RankedMutex<HashMap<u64, Sender<Reply>>>>,
     next_id: Arc<AtomicU64>,
     ngram_caches: Option<Arc<NgramCacheRegistry>>,
-    metrics: Arc<Mutex<Registry>>,
+    metrics: Arc<RankedMutex<Registry>>,
     prefill_only: bool,
     cancels: Arc<CancelSet>,
     tracer: Option<Arc<Tracer>>,
@@ -670,9 +682,9 @@ impl net::Adopt for NetGateway {
         let m = MigratedSession::from_wire(meta, snap, to, id);
         let trace_id = m.trace_id;
         let (tx, rx) = channel();
-        self.pending.lock().unwrap().insert(id, tx);
+        self.pending.lock().insert(id, tx);
         if self.hub.transfer(m).is_err() {
-            self.pending.lock().unwrap().remove(&id);
+            self.pending.lock().remove(&id);
             return Err("adopting worker exited during hand-off".to_string());
         }
         if let (Some(t), Some(t0)) = (&self.tracer, t0) {
@@ -681,7 +693,7 @@ impl net::Adopt for NetGateway {
             t.push(t.span(t.net_tid(), trace_id, "adopt", "net", t0)
                 .arg("bytes", payload.len().to_string()));
         }
-        let mut reg = self.metrics.lock().unwrap();
+        let mut reg = self.metrics.lock();
         reg.inc("net_adopted", 1);
         reg.observe("net_transfer_bytes", payload.len() as f64);
         Ok((id, rx))
@@ -690,7 +702,7 @@ impl net::Adopt for NetGateway {
     fn cancel_local(&self, id: u64) {
         // mirror `ServerHandle::cancel`: mark only ids still pending (the
         // dispatcher sweeps the mark on Done under the same lock)
-        let pending = self.pending.lock().unwrap();
+        let pending = self.pending.lock();
         if pending.contains_key(&id) {
             self.cancels.request(id);
         }
@@ -713,13 +725,13 @@ struct NetTransport {
     rx: Receiver<RemoteDonation>,
     hub: Arc<RebalanceHub>,
     peers: Arc<Peers>,
-    metrics: Arc<Mutex<Registry>>,
-    relay_joins: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
-    cuts: Arc<Mutex<Vec<usize>>>,
+    metrics: Arc<RankedMutex<Registry>>,
+    relay_joins: Arc<RankedMutex<Vec<std::thread::JoinHandle<()>>>>,
+    cuts: Arc<RankedMutex<Vec<usize>>>,
     stop: Arc<AtomicBool>,
     replies: Sender<Reply>,
     tracer: Option<Arc<Tracer>>,
-    remote_cancels: Arc<Mutex<HashMap<u64, (String, u64)>>>,
+    remote_cancels: Arc<RankedMutex<HashMap<u64, (String, u64)>>>,
 }
 
 /// Outbound half of the wire hand-off: drains [`RemoteDonation`]s, streams
@@ -730,9 +742,9 @@ struct NetTransport {
 fn spawn_transport(t: NetTransport) -> std::thread::JoinHandle<()> {
     std::thread::spawn(move || {
         while let Ok(RemoteDonation { peer, m }) = t.rx.recv() {
-            t.metrics.lock().unwrap().inc("net_transfers", 1);
+            t.metrics.lock().inc("net_transfers", 1);
             let Some(addr) = t.peers.addr(peer) else {
-                t.metrics.lock().unwrap().inc("net_bounced", 1);
+                t.metrics.lock().inc("net_bounced", 1);
                 bounce_home(&t.hub, m, "unknown peer index", &t.replies, &t.metrics);
                 continue;
             };
@@ -751,12 +763,12 @@ fn spawn_transport(t: NetTransport) -> std::thread::JoinHandle<()> {
                     .arg("outcome", outcome));
             }
             if report.resumes > 0 {
-                t.metrics.lock().unwrap().inc("net_resumes", report.resumes);
+                t.metrics.lock().inc("net_resumes", report.resumes);
             }
             match report.outcome {
                 SendOutcome::Adopted(lines) => {
                     {
-                        let mut mm = t.metrics.lock().unwrap();
+                        let mut mm = t.metrics.lock();
                         mm.inc("net_adopted", 1);
                         mm.observe("net_transfer_bytes", payload.len() as f64);
                     }
@@ -769,21 +781,21 @@ fn spawn_transport(t: NetTransport) -> std::thread::JoinHandle<()> {
                     // a client cancel between now and the final record must
                     // reach the adopter, not a worker that no longer holds
                     // the session
-                    t.remote_cancels.lock().unwrap().insert(donor_id,
+                    t.remote_cancels.lock().insert(donor_id,
                                                             (addr.clone(), xfer));
                     let replies_c = t.replies.clone();
                     let metrics_c = t.metrics.clone();
                     let stop_c = t.stop.clone();
                     let tracer_c = t.tracer.clone();
                     let rc_c = t.remote_cancels.clone();
-                    t.relay_joins.lock().unwrap().push(std::thread::spawn(move || {
+                    t.relay_joins.lock().push(std::thread::spawn(move || {
                         relay_replies(lines, &addr, xfer, donor_id, replies_c,
                                       metrics_c, stop_c, tracer_c, trace_id);
-                        rc_c.lock().unwrap().remove(&donor_id);
+                        rc_c.lock().remove(&donor_id);
                     }));
                 }
                 SendOutcome::Bounced(why) => {
-                    t.metrics.lock().unwrap().inc("net_bounced", 1);
+                    t.metrics.lock().inc("net_bounced", 1);
                     bounce_home(&t.hub, m, &why, &t.replies, &t.metrics);
                 }
             }
@@ -795,9 +807,9 @@ fn spawn_transport(t: NetTransport) -> std::thread::JoinHandle<()> {
 /// (`m.to` still names it), preserving either-adopted-or-bounced. If even
 /// the donor is gone, the client gets a final error record — never a hang.
 fn bounce_home(hub: &RebalanceHub, m: MigratedSession, why: &str,
-               replies: &Sender<Reply>, metrics: &Arc<Mutex<Registry>>) {
+               replies: &Sender<Reply>, metrics: &Arc<RankedMutex<Registry>>) {
     if let Err(m) = hub.transfer(m) {
-        metrics.lock().unwrap().inc("net_transfer_fail", 1);
+        metrics.lock().inc("net_transfer_fail", 1);
         let (tail, resp) = m.into_failure(&format!("remote hand-off failed: {why}"));
         if let Some(c) = tail {
             let _ = replies.send(Reply::Chunk(c));
@@ -818,7 +830,7 @@ const ATTACH_ATTEMPTS: usize = 5;
 /// error record so the client never hangs.
 #[allow(clippy::too_many_arguments)]
 fn relay_replies(mut lines: net::NetLines, addr: &str, xfer: u64, donor_id: u64,
-                 replies: Sender<Reply>, metrics: Arc<Mutex<Registry>>,
+                 replies: Sender<Reply>, metrics: Arc<RankedMutex<Registry>>,
                  stop: Arc<AtomicBool>, tracer: Option<Arc<Tracer>>,
                  trace_id: u64) {
     let relay_t0 = tracer.as_ref().map(|t| t.now_us());
@@ -858,7 +870,7 @@ fn relay_replies(mut lines: net::NetLines, addr: &str, xfer: u64, donor_id: u64,
             if stop.load(Ordering::Relaxed) {
                 break;
             }
-            std::thread::sleep(Duration::from_millis(50));
+            crate::util::sync::nap(Duration::from_millis(50));
             let a0 = tracer.as_ref().map(|t| t.now_us());
             if let Ok(nl) = net::attach(addr, xfer, have) {
                 lines = nl;
@@ -866,7 +878,7 @@ fn relay_replies(mut lines: net::NetLines, addr: &str, xfer: u64, donor_id: u64,
                     t.push(t.span(t.net_tid(), trace_id, "attach", "net", t0)
                         .arg("have", have.to_string()));
                 }
-                metrics.lock().unwrap().inc("net_attach_resumes", 1);
+                metrics.lock().inc("net_attach_resumes", 1);
                 continue 'relay;
             }
         }

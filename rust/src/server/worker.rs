@@ -24,7 +24,7 @@
 use std::collections::{HashMap, VecDeque};
 use std::rc::Rc;
 use std::sync::mpsc::Sender;
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
@@ -51,6 +51,7 @@ use crate::server::scheduler::{CancelSet, Directive, MigratedSession, Popped,
                                PopOutcome, RebalanceHub, Scheduler};
 use crate::tokenizer::{ByteTokenizer, Utf8StreamDecoder};
 use crate::trace::{self, Tracer};
+use crate::util::sync::RankedMutex;
 
 /// How long an idle worker waits in [`Scheduler::pop_timeout`] before
 /// re-checking its rebalance-hub inbox for adopted sessions.
@@ -159,7 +160,7 @@ pub struct Worker {
     cancels: Arc<CancelSet>,
     /// server metrics (batched_rounds counter + batch_size histogram);
     /// None for workers driven outside a [`crate::server::ServerHandle`].
-    metrics: Option<Arc<Mutex<Registry>>>,
+    metrics: Option<Arc<RankedMutex<Registry>>>,
     /// cross-worker rebalance rendezvous: load reports out, donation
     /// directives and adopted sessions in. None = rebalancing disabled.
     hub: Option<Arc<RebalanceHub>>,
@@ -175,7 +176,7 @@ impl Worker {
     pub fn start(id: usize, cfg: WorkerConfig,
                  ngram_caches: Option<Arc<NgramCacheRegistry>>,
                  cancels: Arc<CancelSet>,
-                 metrics: Option<Arc<Mutex<Registry>>>,
+                 metrics: Option<Arc<RankedMutex<Registry>>>,
                  prefix: Option<Arc<PrefixCache>>,
                  hub: Option<Arc<RebalanceHub>>,
                  tracer: Option<Arc<Tracer>>) -> Result<Worker> {
@@ -492,7 +493,7 @@ impl Worker {
     fn batched_round<'rt>(rt: &'rt ModelRuntime, live: &mut [LiveSession<'rt>],
                           slice: usize, tok: &ByteTokenizer, cancels: &CancelSet,
                           replies: &Sender<Reply>,
-                          metrics: &Option<Arc<Mutex<Registry>>>,
+                          metrics: &Option<Arc<RankedMutex<Registry>>>,
                           tracer: &Option<Arc<Tracer>>, wid: usize) {
         // contiguous runs of one group key; stable per-key arrival order.
         // group_key allocates, so keys are computed once for the sort
@@ -535,7 +536,7 @@ impl Worker {
     fn drive_group<'rt>(rt: &'rt ModelRuntime, group: &mut [LiveSession<'rt>],
                         slice: usize, tok: &ByteTokenizer, cancels: &CancelSet,
                         replies: &Sender<Reply>,
-                        metrics: &Option<Arc<Mutex<Registry>>>) {
+                        metrics: &Option<Arc<RankedMutex<Registry>>>) {
         for _ in 0..slice {
             // stop checks between fused rounds (cancel/deadline land
             // within one decode step, batched or not)
@@ -557,7 +558,7 @@ impl Worker {
             let out = step_group(rt, &mut refs);
             drop(refs);
             if let Some(m) = metrics {
-                let mut m = m.lock().unwrap();
+                let mut m = m.lock();
                 for sz in &out.fused {
                     m.inc("batched_rounds", 1);
                     m.observe("batch_size", *sz as f64);
@@ -627,9 +628,9 @@ impl Worker {
         stats.entries >= WARM_ENTRIES
     }
 
-    fn bump(metrics: &Option<Arc<Mutex<Registry>>>, key: &str) {
+    fn bump(metrics: &Option<Arc<RankedMutex<Registry>>>, key: &str) {
         if let Some(m) = metrics {
-            m.lock().unwrap().inc(key, 1);
+            m.lock().inc(key, 1);
         }
     }
 
@@ -645,7 +646,7 @@ impl Worker {
                           caches: &Option<Arc<NgramCacheRegistry>>,
                           controller: &mut dyn Controller,
                           live: &mut [LiveSession<'rt>],
-                          metrics: &Option<Arc<Mutex<Registry>>>,
+                          metrics: &Option<Arc<RankedMutex<Registry>>>,
                           tracer: &Option<Arc<Tracer>>, wid: usize) {
         for ls in live.iter_mut() {
             let target = {
@@ -659,7 +660,7 @@ impl Worker {
                     continue; // no committed work this round: nothing to observe
                 }
                 if let Some(m) = metrics {
-                    m.lock().unwrap().observe(
+                    m.lock().observe(
                         &format!("accept_len_{}", ctl.level.method()),
                         tokens as f64 / steps as f64,
                     );
@@ -712,7 +713,7 @@ impl Worker {
                          rt: &'rt ModelRuntime,
                          drafts: &mut HashMap<String, Rc<ModelRuntime>>,
                          ls: &mut LiveSession<'rt>, target: EngineLevel,
-                         metrics: &Option<Arc<Mutex<Registry>>>,
+                         metrics: &Option<Arc<RankedMutex<Registry>>>,
                          tracer: &Option<Arc<Tracer>>, wid: usize) {
         let Some(ctl) = ls.ctl.as_mut() else { return };
         if !Self::target_available(rt, &target) {
@@ -750,7 +751,7 @@ impl Worker {
                              Some(&ctl.carry.prompt_ids), draft) {
             Ok(()) => {
                 if let Some(m) = metrics {
-                    let mut m = m.lock().unwrap();
+                    let mut m = m.lock();
                     m.inc("ctl_switches", 1);
                     m.inc(&format!("ctl_switch_to_{}", target.method()), 1);
                 }
@@ -782,7 +783,7 @@ impl Worker {
     /// caller's retirement sweep).
     fn park_one<'rt>(live: &mut Vec<LiveSession<'rt>>,
                      parked: &mut VecDeque<ParkedSession>, kv: &mut KvManager,
-                     metrics: &Option<Arc<Mutex<Registry>>>,
+                     metrics: &Option<Arc<RankedMutex<Registry>>>,
                      tracer: &Option<Arc<Tracer>>, wid: usize) -> bool {
         // coldest = most rounds since admission/revival (ties: first found)
         let mut best: Option<usize> = None;
@@ -800,7 +801,7 @@ impl Worker {
             Ok(snap) => {
                 let handle = kv.park(snap);
                 if let Some(m) = metrics {
-                    m.lock().unwrap().inc("kv_snapshots", 1);
+                    m.lock().inc("kv_snapshots", 1);
                 }
                 let mut tl = ls.tl;
                 if let (Some(t), Some(t0)) = (tracer, t_park) {
@@ -840,7 +841,7 @@ impl Worker {
                        live: &mut Vec<LiveSession<'rt>>,
                        parked: &mut VecDeque<ParkedSession>, kv: &mut KvManager,
                        cancels: &CancelSet, replies: &Sender<Reply>,
-                       metrics: &Option<Arc<Mutex<Registry>>>,
+                       metrics: &Option<Arc<RankedMutex<Registry>>>,
                        tracer: &Option<Arc<Tracer>>, wid: usize) -> bool {
         let Some(p) = parked.pop_front() else { return true };
         let t_revive = tracer.as_ref().map(|t| t.now_us());
@@ -860,7 +861,7 @@ impl Worker {
         match resumed {
             Ok((sess, level, (seen_steps, seen_tokens))) => {
                 if let Some(m) = metrics {
-                    m.lock().unwrap().inc("kv_restores", 1);
+                    m.lock().inc("kv_restores", 1);
                 }
                 let ctl = p.ctl.map(|carry| SessCtl {
                     level,
@@ -992,7 +993,7 @@ impl Worker {
     fn donate(to: usize, parked: &mut VecDeque<ParkedSession>, kv: &mut KvManager,
               hub: &RebalanceHub, cancels: &CancelSet,
               controller: &mut dyn Controller, replies: &Sender<Reply>,
-              metrics: &Option<Arc<Mutex<Registry>>>) -> bool {
+              metrics: &Option<Arc<RankedMutex<Registry>>>) -> bool {
         let Some(p) = parked.pop_front() else { return true };
         let Some(snap) = kv.revive(p.handle) else {
             // same contract as sweep_parked: a lost snapshot still yields a
@@ -1007,7 +1008,7 @@ impl Worker {
                 // adopter's controller re-warms from fresh observations)
                 controller.retire(id);
                 if let Some(m) = metrics {
-                    m.lock().unwrap().inc("rebalanced_sessions", 1);
+                    m.lock().inc("rebalanced_sessions", 1);
                 }
             }
             Err(m) => {
@@ -1031,7 +1032,7 @@ impl Worker {
                          parked: &mut VecDeque<ParkedSession>, kv: &mut KvManager,
                          hub: &RebalanceHub, cancels: &CancelSet,
                          controller: &mut dyn Controller, replies: &Sender<Reply>,
-                         metrics: &Option<Arc<Mutex<Registry>>>) -> Option<bool> {
+                         metrics: &Option<Arc<RankedMutex<Registry>>>) -> Option<bool> {
         let Some(p) = parked.pop_front() else { return Some(false) };
         let Some(snap) = kv.revive(p.handle) else {
             controller.retire(p.id);
@@ -1045,7 +1046,7 @@ impl Worker {
             Ok(()) => {
                 controller.retire(id);
                 if let Some(m) = metrics {
-                    m.lock().unwrap().inc("rebalanced_sessions", 1);
+                    m.lock().inc("rebalanced_sessions", 1);
                 }
                 Some(true)
             }
@@ -1061,9 +1062,9 @@ impl Worker {
     /// [`KvManager`]; the normal revive loop restores it to the device when
     /// a slot frees (or the parked sweeps retire it).
     fn adopt(m: MigratedSession, parked: &mut VecDeque<ParkedSession>,
-             kv: &mut KvManager, metrics: &Option<Arc<Mutex<Registry>>>) {
+             kv: &mut KvManager, metrics: &Option<Arc<RankedMutex<Registry>>>) {
         if let Some(reg) = metrics {
-            reg.lock().unwrap().inc("rebalance_adopted", 1);
+            reg.lock().inc("rebalance_adopted", 1);
         }
         parked.push_back(ParkedSession::from_migrated(m, kv));
     }
@@ -1353,7 +1354,7 @@ impl Worker {
                 // per-worker gauge keys — concurrent workers must not clobber
                 // each other; the server report sums these into the
                 // `suspended_sessions` / `live_sessions` totals
-                let mut m = m.lock().unwrap();
+                let mut m = m.lock();
                 m.set(&format!("suspended_sessions_w{id}"), parked.len() as u64);
                 m.set(&format!("live_sessions_w{id}"), live.len() as u64);
             }
@@ -1377,7 +1378,7 @@ impl Worker {
             // zero this worker's gauges: they are set every round, and a
             // worker that exits while the server keeps running would
             // otherwise inflate the summed report forever
-            let mut m = m.lock().unwrap();
+            let mut m = m.lock();
             m.set(&format!("suspended_sessions_w{id}"), 0);
             m.set(&format!("live_sessions_w{id}"), 0);
         }

@@ -35,13 +35,13 @@
 
 use std::collections::{BTreeMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
 use std::time::Instant;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::metrics::Histogram;
 use crate::util::json::Json;
+use crate::util::sync::{rank, RankedMutex};
 
 /// Default per-shard ring capacity (`--trace-buf`).
 pub const DEFAULT_TRACE_BUF: usize = 65_536;
@@ -101,7 +101,9 @@ pub struct Tracer {
     sample: u64,
     cap: usize,
     workers: usize,
-    shards: Vec<Mutex<Shard>>,
+    /// [`rank::LEAF`]: trace shards are locked one at a time, with no other
+    /// lock acquired underneath — same leaf tier as the metrics registry.
+    shards: Vec<RankedMutex<Shard>>,
     admitted: AtomicU64,
     next_trace: AtomicU64,
 }
@@ -118,7 +120,9 @@ impl Tracer {
             sample: sample.max(1),
             cap: cap.max(1),
             workers,
-            shards: (0..workers + 2).map(|_| Mutex::new(Shard::default())).collect(),
+            shards: (0..workers + 2)
+                .map(|_| RankedMutex::new(rank::LEAF, "trace.shard", Shard::default()))
+                .collect(),
             admitted: AtomicU64::new(0),
             next_trace: AtomicU64::new(0),
         }
@@ -187,7 +191,7 @@ impl Tracer {
     /// oldest span and count it — recording never blocks on capacity.
     pub fn push(&self, span: Span) {
         let shard = &self.shards[span.tid % self.shards.len()];
-        let mut s = shard.lock().unwrap();
+        let mut s = shard.lock();
         s.recorded += 1;
         if s.ring.len() >= self.cap {
             s.ring.pop_front();
@@ -201,7 +205,7 @@ impl Tracer {
         let mut rec = 0;
         let mut drop = 0;
         for shard in &self.shards {
-            let s = shard.lock().unwrap();
+            let s = shard.lock();
             rec += s.recorded;
             drop += s.dropped;
         }
@@ -212,7 +216,7 @@ impl Tracer {
     pub fn snapshot(&self) -> Vec<Span> {
         let mut out = Vec::new();
         for shard in &self.shards {
-            out.extend(shard.lock().unwrap().ring.iter().cloned());
+            out.extend(shard.lock().ring.iter().cloned());
         }
         out.sort_by(|a, b| (a.start_us, a.tid).cmp(&(b.start_us, b.tid)));
         out

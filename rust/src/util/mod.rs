@@ -1,9 +1,10 @@
 //! Substrate utilities built in-repo (the offline image has only the `xla`
 //! crate closure — see DESIGN.md §4): JSON, CLI parsing, PRNG, property
-//! testing, logging.
+//! testing, logging, ranked locks.
 
 pub mod cli;
 pub mod json;
 pub mod log;
 pub mod prop;
 pub mod rng;
+pub mod sync;

@@ -1,0 +1,337 @@
+//! Ranked locks: the runtime half of the lock-order story (DESIGN.md §9).
+//!
+//! Every long-lived mutex in the serving stack is a [`RankedMutex`] carrying
+//! a numeric rank from the declared hierarchy below. Debug builds maintain a
+//! thread-local stack of held ranks and panic the moment any thread acquires
+//! a lock whose rank is not strictly greater than everything it already
+//! holds — so the whole integration suite (serving, net, kv, controller,
+//! trace) continuously validates the same hierarchy the static checker
+//! (`rust/src/analysis/`, `lookahead-lint`) proves over the source. Release
+//! builds compile the tracker away: a `RankedMutex` is then exactly a
+//! `std::sync::Mutex` plus two static words.
+//!
+//! Strict ordering (`>`), not `>=`: two locks of the same rank may never be
+//! held together. That makes sharded families (trace shards, n-gram shards)
+//! safe under one rank — shards are only ever locked one at a time — and it
+//! encodes "leaf-only" for the [`rank::LEAF`] tier: while any leaf lock
+//! (metrics registry, trace shard, net transfer state) is held, nothing else
+//! may be acquired, including another leaf.
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+use std::time::Duration;
+
+/// The declared lock hierarchy. Acquisition order must strictly increase;
+/// see DESIGN.md §9 for the per-edge rationale. Gaps are deliberate so a
+/// future tier can slot in without renumbering.
+pub mod rank {
+    /// Process-wide test/bootstrap setup (sim artifact writer). Acquired
+    /// before anything else; nothing is ever locked beneath it anyway.
+    pub const SETUP: u8 = 1;
+    /// Rebalance hub state (`RebalanceHub::{st,remote}`): the cross-worker
+    /// coordinator, acquired before any worker-local structure.
+    pub const HUB: u8 = 10;
+    /// Scheduler admission queue (`Scheduler::state`).
+    pub const SCHED: u8 = 20;
+    /// Server-side request routing: the pending reply map, the remote-cancel
+    /// forwarding table, and the relay join list.
+    pub const PENDING: u8 = 30;
+    /// Cancellation mark set. Ranked under PENDING because `cancel()` marks
+    /// ids *while holding* the pending map — that ordering is what keeps a
+    /// mark from outliving its request (see `ServerHandle::cancel`).
+    pub const CANCEL: u8 = 40;
+    /// KV prefix-reuse trie.
+    pub const KV: u8 = 50;
+    /// Shared n-gram cache registry. Held while a freshly created cache's
+    /// shards are configured (`get_or_create_scoped`), hence below SHARD.
+    pub const NGRAM_REGISTRY: u8 = 60;
+    /// One n-gram pool shard. Shards are locked one at a time.
+    pub const NGRAM_SHARD: u8 = 70;
+    /// Leaf tier: metrics registry, trace shards, and every net-transport
+    /// lock (transfer table, relay buffers, peer table, fault-injection
+    /// cuts). Nothing may be acquired while a leaf is held.
+    pub const LEAF: u8 = 80;
+}
+
+/// Bitmask of every rank any thread has ever acquired in this process
+/// (debug builds only; bit = rank value, ranks stay < 64 by construction).
+/// `exercised_ranks()` lets the test suite assert hierarchy coverage.
+static EXERCISED: AtomicU64 = AtomicU64::new(0);
+
+/// Distinct ranks acquired so far in this process (ascending). Always empty
+/// in release builds — the tracker only runs under `debug_assertions`.
+pub fn exercised_ranks() -> Vec<u8> {
+    let bits = EXERCISED.load(Ordering::Relaxed);
+    (0..64).filter(|b| bits & (1u64 << b) != 0).collect()
+}
+
+#[cfg(debug_assertions)]
+mod tracker {
+    use super::EXERCISED;
+    use std::cell::RefCell;
+    use std::sync::atomic::Ordering;
+
+    struct Held {
+        rank: u8,
+        name: &'static str,
+        token: u64,
+    }
+
+    thread_local! {
+        static STACK: RefCell<Vec<Held>> = RefCell::new(Vec::new());
+        static NEXT_TOKEN: RefCell<u64> = RefCell::new(0);
+    }
+
+    /// Rank check + push. Runs BEFORE blocking on the lock so a would-be
+    /// deadlock still reports the ordering violation instead of hanging.
+    pub fn acquire(rank: u8, name: &'static str) -> u64 {
+        EXERCISED.fetch_or(1u64 << (rank % 64), Ordering::Relaxed);
+        STACK.with(|s| {
+            let mut s = s.borrow_mut();
+            if let Some(top) = s.iter().max_by_key(|h| h.rank) {
+                if rank <= top.rank {
+                    panic!(
+                        "lock-rank violation: acquiring '{name}' (rank {rank}) \
+                         while holding '{held}' (rank {held_rank}); the declared \
+                         order is strictly increasing — see DESIGN.md §9",
+                        held = top.name,
+                        held_rank = top.rank,
+                    );
+                }
+            }
+            let token = NEXT_TOKEN.with(|t| {
+                let mut t = t.borrow_mut();
+                *t += 1;
+                *t
+            });
+            s.push(Held { rank, name, token });
+            token
+        })
+    }
+
+    /// Pop by token, not by position: guards may drop out of LIFO order
+    /// (e.g. `let a = ...lock(); let b = ...lock(); drop(a);`).
+    pub fn release(token: u64) {
+        STACK.with(|s| {
+            let mut s = s.borrow_mut();
+            if let Some(i) = s.iter().rposition(|h| h.token == token) {
+                s.remove(i);
+            }
+        });
+    }
+}
+
+/// A `std::sync::Mutex` that carries its declared rank and name. `lock()`
+/// returns the guard directly — poisoning (a panic while holding) is
+/// re-raised here with the lock's name, which matches the `.lock().unwrap()`
+/// behavior this type replaced.
+pub struct RankedMutex<T> {
+    rank: u8,
+    name: &'static str,
+    inner: Mutex<T>,
+}
+
+impl<T> RankedMutex<T> {
+    /// `const`, so statics work: `static L: RankedMutex<()> = ...`.
+    pub const fn new(rank: u8, name: &'static str, value: T) -> Self {
+        RankedMutex { rank, name, inner: Mutex::new(value) }
+    }
+
+    pub fn lock(&self) -> RankedGuard<'_, T> {
+        #[cfg(debug_assertions)]
+        let token = tracker::acquire(self.rank, self.name);
+        let guard = match self.inner.lock() {
+            Ok(g) => g,
+            Err(_) => panic!("lock '{}' poisoned by a panicking holder", self.name),
+        };
+        RankedGuard {
+            lock: self,
+            inner: Some(guard),
+            #[cfg(debug_assertions)]
+            token,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        self.name
+    }
+
+    pub fn rank(&self) -> u8 {
+        self.rank
+    }
+}
+
+impl<T: fmt::Debug> fmt::Debug for RankedMutex<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut d = f.debug_struct("RankedMutex");
+        d.field("name", &self.name).field("rank", &self.rank);
+        match self.inner.try_lock() {
+            Ok(g) => d.field("data", &&*g).finish(),
+            Err(_) => d.field("data", &"<locked>").finish(),
+        }
+    }
+}
+
+/// Guard for a [`RankedMutex`]. The `Option` is only `None` transiently
+/// inside the condvar re-lock helpers and after `Drop` takes the guard out.
+pub struct RankedGuard<'a, T> {
+    lock: &'a RankedMutex<T>,
+    inner: Option<MutexGuard<'a, T>>,
+    #[cfg(debug_assertions)]
+    token: u64,
+}
+
+impl<'a, T> RankedGuard<'a, T> {
+    /// `Condvar::wait` through the ranked guard. The rank entry stays on the
+    /// thread's stack while blocked — a waiting thread acquires nothing, and
+    /// on wake it holds exactly what it held before.
+    pub fn wait_on(mut self, cv: &Condvar) -> RankedGuard<'a, T> {
+        let g = self.inner.take().expect("guard already consumed");
+        let g = match cv.wait(g) {
+            Ok(g) => g,
+            Err(_) => {
+                panic!("lock '{}' poisoned during condvar wait", self.lock.name)
+            }
+        };
+        self.inner = Some(g);
+        self
+    }
+
+    /// `Condvar::wait_timeout` through the ranked guard.
+    pub fn wait_timeout_on(
+        mut self,
+        cv: &Condvar,
+        timeout: Duration,
+    ) -> (RankedGuard<'a, T>, WaitTimeoutResult) {
+        let g = self.inner.take().expect("guard already consumed");
+        let (g, res) = match cv.wait_timeout(g, timeout) {
+            Ok(ok) => ok,
+            Err(_) => {
+                panic!("lock '{}' poisoned during condvar wait", self.lock.name)
+            }
+        };
+        self.inner = Some(g);
+        (self, res)
+    }
+}
+
+impl<T> std::ops::Deref for RankedGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.inner.as_deref().expect("guard already consumed")
+    }
+}
+
+impl<T> std::ops::DerefMut for RankedGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_deref_mut().expect("guard already consumed")
+    }
+}
+
+impl<T> Drop for RankedGuard<'_, T> {
+    fn drop(&mut self) {
+        // release the std guard first, then retire the rank entry
+        self.inner.take();
+        #[cfg(debug_assertions)]
+        tracker::release(self.token);
+    }
+}
+
+/// The one blessed `thread::sleep` wrapper. `clippy.toml` disallows calling
+/// `std::thread::sleep` anywhere else — naps, heartbeat pacing, retry
+/// backoff, and test settling all route through here so sleep sites stay
+/// enumerable (and a future async/testable-clock refactor has one seam).
+#[allow(clippy::disallowed_methods)]
+pub fn nap(d: Duration) {
+    std::thread::sleep(d);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn guard_gives_access_and_releases() {
+        let m = RankedMutex::new(rank::SCHED, "test.m", 1u32);
+        {
+            let mut g = m.lock();
+            *g += 1;
+        }
+        assert_eq!(*m.lock(), 2);
+    }
+
+    #[test]
+    fn ascending_ranks_nest_fine() {
+        let a = RankedMutex::new(rank::HUB, "test.a", ());
+        let b = RankedMutex::new(rank::KV, "test.b", ());
+        let c = RankedMutex::new(rank::LEAF, "test.c", ());
+        let _ga = a.lock();
+        let _gb = b.lock();
+        let _gc = c.lock();
+    }
+
+    #[test]
+    fn out_of_lifo_drop_order_is_tracked() {
+        let a = RankedMutex::new(rank::HUB, "test.a", ());
+        let b = RankedMutex::new(rank::KV, "test.b", ());
+        let ga = a.lock();
+        let gb = b.lock();
+        drop(ga);
+        drop(gb);
+        // after both drop, the stack is clean: LEAF then HUB again works
+        let _gc = a.lock();
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn descending_acquisition_panics() {
+        let hi = Arc::new(RankedMutex::new(rank::LEAF, "test.leaf", ()));
+        let lo = Arc::new(RankedMutex::new(rank::HUB, "test.hub", ()));
+        let err = std::thread::spawn(move || {
+            let _g = hi.lock();
+            let _bad = lo.lock(); // rank 10 while holding rank 80
+        })
+        .join()
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("lock-rank violation"), "got: {msg}");
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn equal_rank_acquisition_panics() {
+        let a = Arc::new(RankedMutex::new(rank::LEAF, "test.leaf_a", ()));
+        let b = Arc::new(RankedMutex::new(rank::LEAF, "test.leaf_b", ()));
+        let err = std::thread::spawn(move || {
+            let _g = a.lock();
+            let _bad = b.lock(); // leaf-only: no second leaf while one held
+        })
+        .join()
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("lock-rank violation"), "got: {msg}");
+    }
+
+    #[test]
+    fn condvar_wait_timeout_rewraps_guard() {
+        let m = RankedMutex::new(rank::SCHED, "test.cv", 0u32);
+        let cv = Condvar::new();
+        let g = m.lock();
+        let (mut g, res) = g.wait_timeout_on(&cv, Duration::from_millis(1));
+        assert!(res.timed_out());
+        *g += 1;
+        drop(g);
+        assert_eq!(*m.lock(), 1);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    fn exercised_ranks_accumulate() {
+        let m = RankedMutex::new(rank::NGRAM_SHARD, "test.shard", ());
+        drop(m.lock());
+        assert!(exercised_ranks().contains(&rank::NGRAM_SHARD));
+    }
+}

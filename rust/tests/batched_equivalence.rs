@@ -386,7 +386,7 @@ fn server_batched_serving_matches_sequential_serving() {
 
     // the batched server must actually have fused rounds, and say so
     {
-        let mut m = h_bat.metrics.lock().unwrap();
+        let mut m = h_bat.metrics.lock();
         assert!(m.counter("batched_rounds") > 0,
                 "batch_decode server never fused a round");
         let sizes = m.histograms.get_mut("batch_size").expect("batch_size histogram");

@@ -455,7 +455,7 @@ fn kv_budget_serves_overload_with_no_cross_talk() {
     // the suspend/resume path demonstrably ran, and the metrics flow
     // through the dispatcher metrics endpoint
     let (snaps, restores) = {
-        let m = h.metrics.lock().unwrap();
+        let m = h.metrics.lock();
         (m.counter("kv_snapshots"), m.counter("kv_restores"))
     };
     assert!(snaps >= 1, "over-budget load must park sessions (snapshots={snaps})");
@@ -471,7 +471,7 @@ fn kv_budget_serves_overload_with_no_cross_talk() {
     // a stale per-worker value would inflate it forever)
     let metrics = h.metrics.clone();
     h.shutdown();
-    let m = metrics.lock().unwrap();
+    let m = metrics.lock();
     assert_eq!(m.counter("suspended_sessions_w0"), 0,
                "suspended gauge must be zeroed on worker exit");
     assert_eq!(m.counter("live_sessions_w0"), 0,
@@ -546,7 +546,7 @@ fn prop_rotation_fairness_under_budget_saturation() {
             }
         }
     }
-    let snaps = h.metrics.lock().unwrap().counter("kv_snapshots");
+    let snaps = h.metrics.lock().counter("kv_snapshots");
     assert!(snaps >= 1, "the schedule must actually saturate the budget");
     h.shutdown();
 }
@@ -630,7 +630,7 @@ fn rebalance_migrates_parked_sessions_across_workers() {
         {
             hub.direct(donor, 1 - donor);
         }
-        std::thread::sleep(std::time::Duration::from_millis(2));
+        lookahead::util::sync::nap(std::time::Duration::from_millis(2));
     }
     assert!(hub.moves() >= 1,
             "a parked session must migrate under sustained imbalance: {:?}",
@@ -653,7 +653,7 @@ fn rebalance_migrates_parked_sessions_across_workers() {
                         concatenate to the final text");
         }
     }
-    let m = h.metrics.lock().unwrap();
+    let m = h.metrics.lock();
     assert!(m.counter("rebalanced_sessions") >= 1,
             "the donor must count its hand-offs");
     assert!(m.counter("rebalance_adopted") >= 1,

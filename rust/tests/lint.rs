@@ -1,0 +1,196 @@
+//! `lookahead-lint` suite (DESIGN.md §9): the deliberately-bad fixture
+//! corpus must be detected with the expected lint id at the expected span,
+//! the shipped tree must be lint-clean under the committed baseline, and —
+//! the runtime cross-check — a live simulated server must exercise the
+//! declared lock-rank hierarchy end to end.
+//!
+//! Fixtures live in `rust/tests/lint_fixtures/` and are NOT compiled (the
+//! tree walk skips the directory; no Cargo target points at them). Each
+//! test lexes a fixture and runs the relevant checker with a crafted path,
+//! since path suffixes decide lint scope (inventory file, hot path,
+//! deterministic modules).
+
+use lookahead::analysis::{self, invariants, lexer, lock_order, metrics_check};
+use lookahead::server::{Request, ServerConfig, ServerHandle};
+use std::path::Path;
+
+fn fixture(name: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/lint_fixtures")
+        .join(name);
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("read {}: {e}", p.display()))
+}
+
+fn lock_findings(name: &str, as_path: &str) -> Vec<analysis::Finding> {
+    lock_order::check(&[(as_path.to_string(), lexer::lex(&fixture(name)))])
+}
+
+#[test]
+fn abba_half_is_flagged_at_the_descending_acquisition() {
+    let f = lock_findings("bad_abba.rs", "rust/src/server/scheduler.rs");
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].lint, "lock-order");
+    assert_eq!(f[0].line, 14);
+    assert!(f[0].msg.contains("sched.state") && f[0].msg.contains("cancel.ids"),
+            "{}", f[0].msg);
+}
+
+#[test]
+fn hierarchy_violation_is_caught_interprocedurally_at_the_call_site() {
+    let f = lock_findings("bad_hierarchy.rs", "rust/src/server/scheduler.rs");
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].lint, "lock-order");
+    assert_eq!(f[0].line, 12);
+    assert!(f[0].msg.contains("touch_sched"), "{}", f[0].msg);
+}
+
+#[test]
+fn undeclared_lock_receiver_is_an_inventory_finding() {
+    let f = lock_findings("bad_unknown_lock.rs", "rust/src/server/server.rs");
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].lint, "lock-inventory");
+    assert_eq!(f[0].line, 5);
+    assert!(f[0].msg.contains("mystery"), "{}", f[0].msg);
+}
+
+#[test]
+fn config_struct_literal_outside_home_module_is_flagged() {
+    let path = "rust/tests/lint_fixtures/bad_config_literal.rs";
+    let l = lexer::lex(&fixture("bad_config_literal.rs"));
+    let f = invariants::check_struct_literals(path, &l);
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].lint, "struct-literal");
+    assert_eq!(f[0].line, 6);
+    assert!(f[0].msg.contains("ServerConfig"), "{}", f[0].msg);
+}
+
+#[test]
+fn wall_clock_read_in_deterministic_scope_is_flagged() {
+    let path = "rust/src/engine/bad_wallclock.rs";
+    assert!(invariants::in_wall_clock_scope(path));
+    let l = lexer::lex(&fixture("bad_wallclock.rs"));
+    let f = invariants::check_wall_clock(path, &l);
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].lint, "wall-clock");
+    assert_eq!(f[0].line, 5);
+}
+
+#[test]
+fn hot_path_unwrap_expect_panic_sites_are_all_counted() {
+    let path = "rust/src/server/worker.rs";
+    assert!(invariants::is_hot_path(path));
+    let l = lexer::lex(&fixture("bad_unwrap_hot.rs"));
+    let f = invariants::hot_unwrap_sites(path, &l);
+    let lines: Vec<u32> = f.iter().map(|f| f.line).collect();
+    assert_eq!(lines, [6, 7, 9], "{f:?}");
+    assert!(f.iter().all(|f| f.lint == "hot-unwrap"));
+}
+
+#[test]
+fn orphaned_family_metric_fails_the_reverse_cross_check() {
+    let src = vec![(
+        "rust/src/net/fixture.rs".to_string(),
+        lexer::lex(&fixture("bad_metric_orphan.rs")),
+    )];
+    let refs: Vec<(String, lexer::Lexed)> = Vec::new();
+    let f = metrics_check::check(&src, &refs);
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].lint, "metrics-name");
+    assert_eq!(f[0].line, 5);
+    assert!(f[0].msg.contains("net_fixture_orphan"), "{}", f[0].msg);
+}
+
+#[test]
+fn bare_allow_suppresses_its_target_but_is_itself_a_finding() {
+    let l = lexer::lex(&fixture("bad_allow_noreason.rs"));
+    let f = invariants::check_allow_reasons("rust/src/engine/x.rs", &l);
+    assert_eq!(f.len(), 1, "{f:?}");
+    assert_eq!(f[0].lint, "lint-allow");
+    assert_eq!(f[0].line, 6);
+    // the (bare) allow still waives the wall-clock finding itself
+    assert!(invariants::check_wall_clock("rust/src/engine/x.rs", &l).is_empty());
+}
+
+#[test]
+fn good_fixture_is_clean_under_every_lint() {
+    let text = fixture("good_locks.rs");
+    let l = lexer::lex(&text);
+    assert!(lock_findings("good_locks.rs", "rust/src/server/scheduler.rs").is_empty());
+    assert!(invariants::check_wall_clock("rust/src/engine/x.rs", &l).is_empty());
+    assert!(invariants::check_allow_reasons("x.rs", &l).is_empty());
+    assert!(invariants::check_struct_literals("x.rs", &l).is_empty());
+}
+
+#[test]
+fn shipped_tree_is_lint_clean_under_the_committed_baseline() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust");
+    let files = analysis::load_tree(&root).expect("walk rust/");
+    assert!(files.len() > 40, "tree walk must see the crate, got {}", files.len());
+    let bpath = root.join("lint_baseline.json");
+    let baseline = analysis::parse_baseline(
+        &std::fs::read_to_string(&bpath).expect("read baseline"),
+    )
+    .expect("parse baseline");
+    let findings = analysis::run(&files, &baseline);
+    let report: Vec<String> = findings.iter().map(|f| f.to_string()).collect();
+    assert!(findings.is_empty(), "shipped tree must be lint-clean:\n{}",
+            report.join("\n"));
+}
+
+#[test]
+fn baseline_is_tight_against_the_current_tree() {
+    // shrink-only policy: the committed budgets must equal the live counts,
+    // so a fixed unwrap forces the baseline down with it
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust");
+    let files = analysis::load_tree(&root).expect("walk rust/");
+    let baseline = analysis::parse_baseline(
+        &std::fs::read_to_string(root.join("lint_baseline.json")).unwrap(),
+    )
+    .unwrap();
+    for (path, count) in analysis::hot_unwrap_counts(&files) {
+        let budget = analysis::baseline_budget(&baseline, &path);
+        assert_eq!(count, budget,
+                   "{path}: budget {budget} != live count {count} — tighten \
+                    rust/lint_baseline.json");
+    }
+}
+
+#[test]
+fn live_server_exercises_the_declared_rank_hierarchy() {
+    // runtime twin of the static checker: a served burst on simulated
+    // artifacts must pass the debug rank tracker and touch >= 5 distinct
+    // ranks (setup, hub, sched, pending, cancel, kv, leaf ...)
+    let dir = lookahead::runtime::sim::ensure_sim_artifacts().unwrap();
+    let c = ServerConfig::builder()
+        .workers(2)
+        .queue_depth(64)
+        .rebalance(true)
+        .rebalance_interval_ms(5)
+        .artifacts_dir(dir.to_string_lossy().into_owned())
+        .kv_budget(1)
+        .build();
+    let h = ServerHandle::start(c).unwrap();
+    let rxs: Vec<_> = (0..3)
+        .map(|i| {
+            h.submit(
+                Request::new(format!("def f{i}(x):\n    return x"))
+                    .max_tokens(12)
+                    .method("autoregressive"),
+            )
+            .unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        let r = rx.wait().unwrap();
+        assert!(r.error.is_none(), "{:?}", r.error);
+    }
+    let report = h.report();
+    assert!(report.contains("queue_depth"), "{report}");
+    h.shutdown();
+    let ranks = lookahead::util::sync::exercised_ranks();
+    if cfg!(debug_assertions) {
+        assert!(ranks.len() >= 5,
+                "a served burst must exercise >= 5 distinct lock ranks, \
+                 got {ranks:?}");
+    }
+}

@@ -1,0 +1,17 @@
+// Fixture: ABBA deadlock half — thread_a ascends sched.state(20) →
+// cancel.ids(40), thread_b closes the cycle by acquiring in the opposite
+// order. Checked as if it lived in server/scheduler.rs.
+// Expect: lock-order at line 14 (the descending acquisition).
+
+fn thread_a(&self) {
+    let st = self.state.lock();
+    self.ids.lock().insert(1);
+    st.touch();
+}
+
+fn thread_b(&self) {
+    let ids = self.ids.lock();
+    let st = self.state.lock();
+    st.touch();
+    ids.remove(&1);
+}

@@ -1,0 +1,9 @@
+// Fixture: an allow directive without the mandatory reason clause. The
+// bare allow still suppresses its target lint, but is itself a finding.
+// Expect: lint-allow at line 6 (and no wall-clock finding).
+
+fn warm() {
+    // lint: allow(wall-clock)
+    let t0 = Instant::now();
+    run_warmup(t0);
+}

@@ -1,0 +1,7 @@
+// Fixture: ServerConfig built as a struct literal outside its defining
+// module — adding a config field would silently change this call site.
+// Expect: struct-literal at line 6.
+
+fn make() -> ServerConfig {
+    ServerConfig { workers: 2, queue_capacity: 8 }
+}

@@ -1,0 +1,14 @@
+// Fixture: inter-procedural hierarchy violation — report() holds the
+// leaf-rank metrics registry (80) and calls a method whose body acquires
+// sched.state (20). Checked as if it lived in server/scheduler.rs.
+// Expect: lock-order at line 12 (the call site, not the callee).
+
+fn touch_sched(&self) {
+    self.state.lock().bump();
+}
+
+fn report(&self) {
+    let m = metrics.lock();
+    self.sched.touch_sched();
+    m.observe("latency_ms", 1);
+}

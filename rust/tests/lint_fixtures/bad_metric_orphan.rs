@@ -1,0 +1,6 @@
+// Fixture: a net_-family counter registered in shipping code that no test
+// or bench section ever reads. Expect: metrics-name at line 5.
+
+fn publish(m: &mut Registry) {
+    m.inc("net_fixture_orphan", 1);
+}

@@ -1,0 +1,7 @@
+// Fixture: a `.lock()` receiver that is not in the declared inventory.
+// Expect: lock-inventory at line 5.
+
+fn stray(&self) {
+    let g = self.mystery.lock();
+    g.poke();
+}

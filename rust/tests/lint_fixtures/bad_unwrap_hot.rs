@@ -1,0 +1,12 @@
+// Fixture: unwrap/expect/panic on the hot path (checked as if it lived in
+// server/worker.rs with a baseline budget of 0).
+// Expect: hot-unwrap at lines 6, 7, and 9.
+
+fn decode_step(q: &mut Queue) -> u32 {
+    let head = q.pop_front().unwrap();
+    let slot = head.slot.expect("slot assigned at admission");
+    if slot.age > 1000 {
+        panic!("slot leak");
+    }
+    head.token
+}

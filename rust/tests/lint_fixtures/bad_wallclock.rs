@@ -1,0 +1,7 @@
+// Fixture: host-clock read inside a deterministic module (checked as if
+// it lived under src/engine/). Expect: wall-clock at line 5.
+
+fn step_time() -> f64 {
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}

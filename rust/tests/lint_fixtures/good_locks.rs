@@ -1,0 +1,26 @@
+// Fixture: clean code — ascending lock order, early drop before taking a
+// leaf, closure scanned with its own empty held-set, and a wall-clock
+// read waived with a reasoned allow. Expect: no findings from any lint.
+
+fn orderly(&self) {
+    let st = self.state.lock();
+    self.ids.lock().insert(7);
+    drop(st);
+    let m = metrics.lock();
+    m.set("queue_depth", 1);
+}
+
+fn deferred(&self) {
+    let m = metrics.lock();
+    spawn(move || {
+        let st = self.state.lock();
+        st.touch();
+    });
+    m.inc("requests", 1);
+}
+
+fn timed(&self) -> f64 {
+    // lint: allow(wall-clock) reason=fixture demonstrates the escape hatch
+    let t0 = Instant::now();
+    t0.elapsed().as_secs_f64()
+}

@@ -97,7 +97,9 @@ fn server_config_default_is_pinned() {
 #[test]
 fn request_new_is_default_plus_prompt() {
     let r = Request::new("hello");
-    let want = Request { prompt: "hello".into(), ..Default::default() };
+    let mut want = Request::default();
+    assert_eq!(want.prompt, "", "default prompt must be empty");
+    want.prompt = "hello".into();
     assert_eq!(r, want);
     // chained setters touch only their field
     let r = Request::new("hello").max_tokens(9).method("autoregressive");
@@ -153,7 +155,7 @@ fn tcp_load_run_scrapes_report_and_validates() {
     let cfg = sim_server_cfg();
     let server = std::thread::spawn(move || serve_tcp(addr, cfg, Some(conns)));
     // wait for bind (same idiom as rust/tests/serving.rs)
-    std::thread::sleep(std::time::Duration::from_millis(300));
+    lookahead::util::sync::nap(std::time::Duration::from_millis(300));
 
     let run = drive_tcp(addr, &sched).unwrap();
     server.join().unwrap().unwrap();

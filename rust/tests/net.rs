@@ -14,11 +14,12 @@
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Duration;
 
 use lookahead::metrics::Registry;
 use lookahead::net::{self, SendOutcome, TransferOpts};
+use lookahead::util::sync::{rank, RankedMutex};
 use lookahead::server::{Reply, Request, Response, ServerConfig, ServerHandle,
                         StreamChunk};
 use lookahead::util::json::Json;
@@ -27,17 +28,26 @@ use lookahead::util::json::Json;
 /// and a final record (ids 0 — the listener pump must rewrite them to the
 /// donor id carried in the offer meta). Adopter-local ids are handed out
 /// from 40 so cancel routing is distinguishable from the donor ids.
-#[derive(Default)]
 struct MockGate {
-    payloads: Mutex<Vec<Vec<u8>>>,
+    payloads: RankedMutex<Vec<Vec<u8>>>,
     adopts: AtomicUsize,
-    cancelled: Mutex<Vec<u64>>,
+    cancelled: RankedMutex<Vec<u64>>,
+}
+
+impl Default for MockGate {
+    fn default() -> Self {
+        MockGate {
+            payloads: RankedMutex::new(rank::LEAF, "test.payloads", Vec::new()),
+            adopts: AtomicUsize::new(0),
+            cancelled: RankedMutex::new(rank::LEAF, "test.cancelled", Vec::new()),
+        }
+    }
 }
 
 impl net::Adopt for MockGate {
     fn adopt(&self, _meta: &Json, payload: Vec<u8>)
              -> Result<(u64, Receiver<Reply>), String> {
-        self.payloads.lock().unwrap().push(payload);
+        self.payloads.lock().push(payload);
         let n = self.adopts.fetch_add(1, Ordering::SeqCst);
         let (tx, rx) = channel();
         tx.send(Reply::Chunk(StreamChunk { id: 0, seq: 1, delta: "ok".into() }))
@@ -47,7 +57,7 @@ impl net::Adopt for MockGate {
     }
 
     fn cancel_local(&self, id: u64) {
-        self.cancelled.lock().unwrap().push(id);
+        self.cancelled.lock().push(id);
     }
 
     fn load_json(&self) -> Json {
@@ -59,12 +69,13 @@ impl net::Adopt for MockGate {
     }
 }
 
-type Listener = (Arc<MockGate>, Arc<Mutex<Registry>>, Arc<AtomicBool>,
+type Listener = (Arc<MockGate>, Arc<RankedMutex<Registry>>, Arc<AtomicBool>,
                  std::thread::JoinHandle<()>);
 
 fn mock_listener(addr: &str) -> Listener {
     let gate = Arc::new(MockGate::default());
-    let metrics = Arc::new(Mutex::new(Registry::new()));
+    let metrics =
+        Arc::new(RankedMutex::new(rank::LEAF, "metrics.registry", Registry::new()));
     let stop = Arc::new(AtomicBool::new(false));
     let join = net::spawn_listener(addr, gate.clone(), metrics.clone(), stop.clone())
         .unwrap();
@@ -80,7 +91,7 @@ fn opts_with_cuts(attempts: usize, chunk: usize, cuts: Vec<usize>) -> TransferOp
         attempts,
         chunk,
         backoff: Duration::from_millis(5),
-        cuts: Arc::new(Mutex::new(cuts)),
+        cuts: Arc::new(RankedMutex::new(rank::LEAF, "net.cuts", cuts)),
     }
 }
 
@@ -117,7 +128,7 @@ fn seeded_cuts_resume_to_byte_identical_adoption() {
     };
     assert_eq!(report.resumes, 3, "each retry must resume, not restart");
     assert_eq!(gate.adopts.load(Ordering::SeqCst), 1);
-    let got = gate.payloads.lock().unwrap();
+    let got = gate.payloads.lock();
     assert_eq!(got.len(), 1);
     assert_eq!(got[0], payload, "resumed payload must be byte-identical");
     drop(got);
@@ -168,7 +179,7 @@ fn lost_ack_retry_is_dropped_as_duplicate() {
     assert_eq!(report.resumes, 1);
     assert_eq!(gate.adopts.load(Ordering::SeqCst), 1,
                "duplicate delivery must not re-adopt");
-    assert_eq!(metrics.lock().unwrap().counter("net_dup_dropped"), 1);
+    assert_eq!(metrics.lock().counter("net_dup_dropped"), 1);
     let resp = read_tunnel(lines, 9);
     assert!(resp.error.as_deref().unwrap_or("").contains("mock-served"));
     stop.store(true, Ordering::SeqCst);
@@ -190,11 +201,11 @@ fn cancel_frame_resolves_the_adopter_local_id_or_reports_gone() {
     // to the ADOPTER-LOCAL id the gateway returned from adopt()
     let xfer = lookahead::kv::snapshot::fnv64(&payload);
     assert!(net::cancel_session(addr, xfer).unwrap());
-    assert_eq!(gate.cancelled.lock().unwrap().as_slice(), &[40]);
-    assert_eq!(metrics.lock().unwrap().counter("net_cancels"), 1);
+    assert_eq!(gate.cancelled.lock().as_slice(), &[40]);
+    assert_eq!(metrics.lock().counter("net_cancels"), 1);
     // an unknown transfer answers `gone` instead of hanging or erroring
     assert!(!net::cancel_session(addr, xfer ^ 0xdead).unwrap());
-    assert_eq!(gate.cancelled.lock().unwrap().len(), 1);
+    assert_eq!(gate.cancelled.lock().len(), 1);
     let resp = read_tunnel(lines, 11);
     assert!(resp.error.as_deref().unwrap_or("").contains("mock-served"));
     stop.store(true, Ordering::SeqCst);
@@ -218,7 +229,7 @@ fn wait_for_peer(front: &ServerHandle) {
         if peers.snapshot().iter().any(|p| p.alive) {
             return;
         }
-        std::thread::sleep(Duration::from_millis(5));
+        lookahead::util::sync::nap(Duration::from_millis(5));
     }
     panic!("peer never reported alive");
 }
@@ -282,7 +293,7 @@ fn prefill_only_front_ships_every_session_to_decode_peer() {
     let texts = run_prompts(&front, &prompts);
 
     let (transfers, adopted, bounced, beats) = {
-        let m = front.metrics.lock().unwrap();
+        let m = front.metrics.lock();
         (m.counter("net_transfers"), m.counter("net_adopted"),
          m.counter("net_bounced"), m.counter("net_heartbeats"))
     };
@@ -290,7 +301,7 @@ fn prefill_only_front_ships_every_session_to_decode_peer() {
     assert_eq!(adopted, 3);
     assert_eq!(bounced, 0);
     assert!(beats >= 1, "heartbeat thread never ran");
-    assert_eq!(back.metrics.lock().unwrap().counter("net_adopted"), 3,
+    assert_eq!(back.metrics.lock().counter("net_adopted"), 3,
                "adopter must count each inbound adoption");
     front.shutdown();
     back.shutdown();
@@ -332,7 +343,7 @@ fn injected_cuts_settle_adopted_or_bounced_with_correct_output() {
     let texts = run_prompts(&front, &prompts);
 
     let (transfers, adopted, bounced, resumes) = {
-        let m = front.metrics.lock().unwrap();
+        let m = front.metrics.lock();
         (m.counter("net_transfers"), m.counter("net_adopted"),
          m.counter("net_bounced"), m.counter("net_resumes"))
     };

@@ -33,7 +33,7 @@ fn inprocess_serving_roundtrip() {
     assert!(resp.tokens > 0);
     assert!(resp.compression >= 1.0);
     assert!(!resp.finish.is_empty(), "finish reason must be reported");
-    let m = h.metrics.lock().unwrap().counter("responses_ok");
+    let m = h.metrics.lock().counter("responses_ok");
     assert_eq!(m, 1);
     h.shutdown();
 }
@@ -87,7 +87,7 @@ fn tcp_roundtrip_json_lines() {
         serve_tcp(addr, cfg(), Some(1)).unwrap();
     });
     // wait for bind
-    std::thread::sleep(std::time::Duration::from_millis(300));
+    lookahead::util::sync::nap(std::time::Duration::from_millis(300));
     let resp = client_request(
         addr,
         r#"{"prompt": "user: how does the cache work?\n", "max_tokens": 16}"#,
@@ -137,7 +137,7 @@ fn rebalanced_two_worker_server_reports_and_serves() {
             "report must carry the summed live gauge:\n{report}");
     let metrics = h.metrics.clone();
     h.shutdown();
-    let m = metrics.lock().unwrap();
+    let m = metrics.lock();
     for w in 0..2 {
         assert_eq!(m.counter(&format!("suspended_sessions_w{w}")), 0,
                    "worker {w} must zero its suspended gauge on exit");
@@ -183,7 +183,7 @@ fn rebalancer_ships_parked_sessions_to_a_loopback_peer() {
         if peers.snapshot().iter().any(|p| p.alive) {
             break;
         }
-        std::thread::sleep(std::time::Duration::from_millis(5));
+        lookahead::util::sync::nap(std::time::Duration::from_millis(5));
     }
     assert!(peers.snapshot().iter().any(|p| p.alive), "peer never came up");
 
@@ -207,7 +207,7 @@ fn rebalancer_ships_parked_sessions_to_a_loopback_peer() {
         .collect();
 
     let (transfers, adopted, bounced) = {
-        let m = front.metrics.lock().unwrap();
+        let m = front.metrics.lock();
         (m.counter("net_transfers"), m.counter("net_adopted"),
          m.counter("net_bounced"))
     };

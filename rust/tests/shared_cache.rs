@@ -152,7 +152,7 @@ fn share_toggle_through_scheduler_and_worker() {
     assert!(!r1.pool_warm, "first request must be cold");
     assert!(r2.pool_warm, "second request must reuse the shared cache");
     assert_eq!(r1.text, r2.text, "sharing changed output");
-    let warm = h.metrics.lock().unwrap().counter("ngram_warm_requests");
+    let warm = h.metrics.lock().counter("ngram_warm_requests");
     assert_eq!(warm, 1);
     assert!(h.report().contains("ngram_cache _shared/tiny:lookahead:n3"));
 

@@ -107,6 +107,18 @@ fn solo_lifecycle_emits_ordered_spans_under_one_trace_id() {
 
     // the live dump is schema-valid Chrome trace-event JSON
     trace::validate_trace_json(&h.trace_json().dump()).unwrap();
+
+    // the report sync publishes the recorder's totals as gauges
+    let report = h.report_json();
+    let spans_gauge = report
+        .path("counters.trace_spans")
+        .and_then(Json::as_usize)
+        .expect("report must carry the trace_spans gauge");
+    assert!(spans_gauge > 0, "a traced run must report recorded spans");
+    assert!(
+        report.path("counters.trace_dropped").is_some(),
+        "report must carry the trace_dropped gauge"
+    );
     h.shutdown();
 }
 
@@ -285,7 +297,7 @@ fn migrated_session_stitches_one_trace_id_across_servers() {
         if peers.snapshot().iter().any(|p| p.alive) {
             break;
         }
-        std::thread::sleep(Duration::from_millis(5));
+        lookahead::util::sync::nap(Duration::from_millis(5));
     }
 
     let _ = run_traced(&front, "def mig(x):\n    return x + 1", 16);
